@@ -1,0 +1,45 @@
+//! Fig. 1: attained memory bandwidth vs. working-set size (load-only and
+//! copy), the likwid-bench substitute measured on the host. The paper's
+//! IVB/SKX curves are tabulated from their Table 1 asymptotes for
+//! comparison.
+
+use race::machine;
+use race::util::bench::bench;
+
+fn main() {
+    println!("== Fig. 1: bandwidth vs data-set size (host measurement) ==");
+    println!("{:>10} {:>12} {:>12}", "size", "load GB/s", "copy GB/s");
+    for mb in [1usize, 2, 4, 8, 16, 32, 64, 128, 256] {
+        let n = mb * (1 << 20) / 8;
+        let a = vec![1.0f64; n];
+        let mut b = vec![0.0f64; n];
+        let mut sink = 0.0;
+        let load = bench(&format!("load {mb}MB"), 0.2, || {
+            let mut s = 0.0;
+            for c in a.chunks(4096) {
+                s += c.iter().sum::<f64>();
+            }
+            sink += s;
+        });
+        let copy = bench(&format!("copy {mb}MB"), 0.2, || {
+            b.copy_from_slice(&a);
+        });
+        std::hint::black_box((&b, sink));
+        println!(
+            "{:>8}MB {:>12.2} {:>12.2}",
+            mb,
+            n as f64 * 8.0 / load.median / 1e9,
+            2.0 * n as f64 * 8.0 / copy.median / 1e9
+        );
+    }
+    println!("\npaper Table 1 asymptotes for the modeled sockets:");
+    for m in [machine::ivb(), machine::skx()] {
+        println!(
+            "  {:<4} load {:.0} GB/s  copy {:.0} GB/s  (eff. cache {} MB)",
+            m.name,
+            m.bw_load / 1e9,
+            m.bw_copy / 1e9,
+            m.effective_cache() / (1 << 20)
+        );
+    }
+}

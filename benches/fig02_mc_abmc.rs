@@ -1,0 +1,72 @@
+//! Fig. 2: SymmSpMV with MC and ABMC vs. SpMV on the Spin matrix —
+//! scaling over cores and measured data traffic per nonzero, on both
+//! machine models. Reproduces the paper's finding: MC ~3x the SpMV
+//! traffic, ABMC in between, both far below the roofline expectation.
+
+use race::cachesim;
+use race::color::{abmc_schedule, mc_schedule};
+use race::gen;
+use race::graph;
+use race::machine;
+use race::perfmodel;
+use race::sim;
+
+fn main() {
+    let small = std::env::var("RACE_BENCH_FULL").is_err();
+    let e = gen::corpus_entry("Spin-26").unwrap();
+    let a0 = (e.build)(small);
+    let paper_nr = e.paper_nrows;
+    let perm = graph::rcm(&a0);
+    let a = a0.permute_symmetric(&perm);
+    let nnz = a.nnz();
+    println!("Spin chain analogue: {} rows, {} nnz (RCM preordered)", a.nrows(), nnz);
+
+    for base in [machine::ivb(), machine::skx()] {
+        // scale caches to the analogue size (DESIGN.md §Substitutions)
+        let m = base.scaled_to(a.nrows(), paper_nr);
+        println!("\n== {} (caches scaled to analogue) ==", m.name);
+        // schedules + traffic (independent of thread count)
+        let mc = mc_schedule(&a, 2);
+        let a_mc = a.permute_symmetric(&mc.perm);
+        let up_mc = a_mc.upper_triangle();
+        let tr_mc = cachesim::measure_symmspmv_traffic(&up_mc, nnz, &m);
+
+        let abmc = abmc_schedule(&a, (a.nrows() / 64).max(16), 2);
+        let a_ab = a.permute_symmetric(&abmc.perm);
+        let up_ab = a_ab.upper_triangle();
+        let tr_ab = cachesim::measure_symmspmv_traffic(&up_ab, nnz, &m);
+
+        let tr_spmv = cachesim::measure_spmv_traffic(&a, &m);
+        let tr_symm_ideal = cachesim::measure_symmspmv_traffic(&a.upper_triangle(), nnz, &m);
+
+        println!("traffic per full-matrix nonzero (paper Fig. 2b/2d):");
+        println!("  SpMV          {:>7.2} B/nnz (alpha={:.3})", tr_spmv.bytes_per_nnz_full, tr_spmv.alpha);
+        println!("  SymmSpMV(nat) {:>7.2} B/nnz", tr_symm_ideal.bytes_per_nnz_full);
+        println!("  SymmSpMV MC   {:>7.2} B/nnz ({:.1}x SpMV)", tr_mc.bytes_per_nnz_full, tr_mc.bytes_per_nnz_full / tr_spmv.bytes_per_nnz_full);
+        println!("  SymmSpMV ABMC {:>7.2} B/nnz ({:.1}x SpMV)", tr_ab.bytes_per_nnz_full, tr_ab.bytes_per_nnz_full / tr_spmv.bytes_per_nnz_full);
+
+        let w = perfmodel::symmspmv_window(&m, tr_spmv.alpha, a.nnzr());
+        println!(
+            "roofline SymmSpMV window: {:.2}..{:.2} GF/s",
+            w.p_copy / 1e9,
+            w.p_load / 1e9
+        );
+        println!("scaling (GF/s, paper Fig. 2a/2c):");
+        println!("{:>7} {:>9} {:>9} {:>9}", "cores", "SpMV", "MC", "ABMC");
+        let mut t = 1;
+        while t <= m.cores {
+            let g_spmv = sim::simulate_spmv(&m, &a, t, tr_spmv.bytes_total).gflops;
+            let g_mc = sim::simulate_color(&m, &mc, &up_mc, t, tr_mc.bytes_total, nnz).gflops;
+            let g_ab = sim::simulate_color(&m, &abmc, &up_ab, t, tr_ab.bytes_total, nnz).gflops;
+            println!("{t:>7} {g_spmv:>9.2} {g_mc:>9.2} {g_ab:>9.2}");
+            t *= 2;
+        }
+        // full socket
+        let t = m.cores;
+        let g_spmv = sim::simulate_spmv(&m, &a, t, tr_spmv.bytes_total).gflops;
+        let g_mc = sim::simulate_color(&m, &mc, &up_mc, t, tr_mc.bytes_total, nnz).gflops;
+        let g_ab = sim::simulate_color(&m, &abmc, &up_ab, t, tr_ab.bytes_total, nnz).gflops;
+        println!("{t:>7} {g_spmv:>9.2} {g_mc:>9.2} {g_ab:>9.2}   <- full socket");
+        assert!(g_mc < g_spmv, "paper finding: MC SymmSpMV loses to SpMV");
+    }
+}

@@ -1,0 +1,52 @@
+//! Fig. 15: parallel efficiency η vs. the RACE input parameters ε₀/ε₁ on
+//! the inline_1 analogue, for several thread counts. Reproduces the
+//! paper's observation: up to intermediate parallelism the choice hardly
+//! matters; at high thread counts large ε values can hurt.
+
+use race::gen;
+use race::race::{RaceConfig, RaceEngine};
+
+fn main() {
+    let small = std::env::var("RACE_BENCH_FULL").is_err();
+    let e = gen::corpus_entry("inline_1").unwrap();
+    let a = (e.build)(small);
+    println!("inline_1 analogue: {} rows, {} nnz", a.nrows(), a.nnz());
+
+    // Fig. 15(a): eta vs threads for a few eps settings
+    println!("\n(a) eta vs N_t:");
+    print!("{:>6}", "N_t");
+    let eps_settings = [(0.5, 0.5), (0.6, 0.5), (0.8, 0.8), (0.9, 0.9)];
+    for (e0, e1) in eps_settings {
+        print!("  e0={e0},e1={e1}");
+    }
+    println!();
+    for t in [2usize, 5, 10, 20, 35, 50, 75, 100] {
+        print!("{t:>6}");
+        for (e0, e1) in eps_settings {
+            let cfg = RaceConfig { threads: t, eps: vec![e0, e1, 0.5], ..Default::default() };
+            let eta = RaceEngine::build(&a, &cfg).map(|e| e.efficiency()).unwrap_or(0.0);
+            print!("  {eta:>11.3}");
+        }
+        println!();
+    }
+
+    // Fig. 15(b-d): eps0 sweep at iso-eps1, three thread counts
+    for t in [10usize, 50, 100] {
+        println!("\n(b-d) N_t = {t}: eta over eps0 (rows) x eps1 (cols)");
+        print!("{:>6}", "e0\\e1");
+        for e1 in [0.5, 0.6, 0.7, 0.8, 0.9] {
+            print!(" {e1:>7}");
+        }
+        println!();
+        for e0 in [0.5, 0.6, 0.7, 0.8, 0.9] {
+            print!("{e0:>6}");
+            for e1 in [0.5, 0.6, 0.7, 0.8, 0.9] {
+                let cfg = RaceConfig { threads: t, eps: vec![e0, e1, 0.5], ..Default::default() };
+                let eta = RaceEngine::build(&a, &cfg).map(|e| e.efficiency()).unwrap_or(0.0);
+                print!(" {eta:>7.3}");
+            }
+            println!();
+        }
+    }
+    println!("\npaper default chosen from this study: eps0 = eps1 = 0.8, eps_(s>1) = 0.5");
+}

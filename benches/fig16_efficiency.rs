@@ -1,0 +1,43 @@
+//! Fig. 16: parallel efficiency η vs. thread count for ALL corpus
+//! matrices with the paper's default parameters (ε₀=ε₁=0.8, ε_{s>1}=0.5).
+//! The paper finds ≥80% efficiency for most matrices up to intermediate
+//! thread counts, Graphene best and crankseg_1 worst.
+
+use race::gen;
+use race::race::{RaceConfig, RaceEngine};
+
+fn main() {
+    let small = std::env::var("RACE_BENCH_FULL").is_err();
+    let threads = [1usize, 2, 5, 10, 20, 40, 80];
+    print!("{:<26}", "matrix");
+    for t in threads {
+        print!(" {t:>7}");
+    }
+    println!();
+    let mut best: (f64, &str) = (0.0, "");
+    let mut worst: (f64, &str) = (2.0, "");
+    for e in gen::corpus() {
+        let a0 = (e.build)(small);
+        let perm = race::graph::rcm(&a0);
+        let a = a0.permute_symmetric(&perm);
+        print!("{:<26}", e.name);
+        let mut eta20 = 1.0;
+        for t in threads {
+            let cfg = RaceConfig { threads: t, eps: vec![0.8, 0.8, 0.5], ..Default::default() };
+            let eta = RaceEngine::build(&a, &cfg).map(|e| e.efficiency()).unwrap_or(0.0);
+            if t == 20 {
+                eta20 = eta;
+            }
+            print!(" {eta:>7.3}");
+        }
+        println!();
+        if eta20 > best.0 {
+            best = (eta20, e.name);
+        }
+        if eta20 < worst.0 {
+            worst = (eta20, e.name);
+        }
+    }
+    println!("\nat 20 threads: best = {} (eta={:.3}), worst = {} (eta={:.3})", best.1, best.0, worst.1, worst.0);
+    println!("(paper: Graphene-4096 best, crankseg_1 worst)");
+}

@@ -1,0 +1,33 @@
+//! Fig. 17: N_t^eff and η vs. N_t for the four corner-case matrices
+//! (crankseg_1, inline_1, parabolic_fem, Graphene-4096) on up to 20
+//! threads (one Skylake SP socket), with the experiment-run settings.
+
+use race::gen;
+use race::race::{RaceConfig, RaceEngine};
+
+fn main() {
+    let small = std::env::var("RACE_BENCH_FULL").is_err();
+    for name in ["crankseg_1", "inline_1", "parabolic_fem", "Graphene-4096"] {
+        let e = gen::corpus_entry(name).unwrap();
+        let a0 = (e.build)(small);
+        let perm = race::graph::rcm(&a0);
+        let a = a0.permute_symmetric(&perm);
+        println!("\n== {} ({} rows, {} nnz) ==", name, a.nrows(), a.nnz());
+        println!("{:>6} {:>8} {:>8}", "N_t", "eta", "N_t_eff");
+        for t in 1..=20usize {
+            if t > 2 && t % 2 != 0 && t != 5 && t != 9 && t != 15 {
+                continue; // sample like the paper's plot density
+            }
+            let cfg = RaceConfig { threads: t, eps: vec![0.8, 0.8, 0.5], ..Default::default() };
+            match RaceEngine::build(&a, &cfg) {
+                Ok(eng) => println!(
+                    "{t:>6} {:>8.3} {:>8.2}",
+                    eng.efficiency(),
+                    eng.effective_threads()
+                ),
+                Err(err) => println!("{t:>6}  build failed: {err}"),
+            }
+        }
+    }
+    println!("\n(paper: crankseg saturates near N_t_eff ~ 6-10; graphene nearly ideal)");
+}

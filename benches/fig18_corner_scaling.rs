@@ -1,0 +1,52 @@
+//! Fig. 18: SymmSpMV-with-RACE scaling on one Skylake SP socket for the
+//! four corner-case matrices, against the SpMV baseline and the roofline
+//! windows (RLM-copy / RLM-load), plus the measured memory traffic per
+//! nonzero of the symmetric (upper) storage.
+
+use race::cachesim;
+use race::gen;
+use race::machine;
+use race::perfmodel;
+use race::race::{RaceConfig, RaceEngine};
+use race::sim;
+
+fn main() {
+    let small = std::env::var("RACE_BENCH_FULL").is_err();
+    for name in ["crankseg_1", "inline_1", "parabolic_fem", "Graphene-4096"] {
+        let e = gen::corpus_entry(name).unwrap();
+        let a0 = (e.build)(small);
+        let base = machine::skx();
+        let perm = race::graph::rcm(&a0);
+        let a = a0.permute_symmetric(&perm);
+        let m = base.scaled_to(a.nrows(), e.paper_nrows);
+        let nnz = a.nnz();
+        println!("\n== {} ({} rows, {} nnz) on {} (scaled caches) ==", name, a.nrows(), nnz, m.name);
+
+        let tr_spmv = cachesim::measure_spmv_traffic(&a, &m);
+        let w = perfmodel::symmspmv_window(&m, tr_spmv.alpha, a.nnzr());
+        println!(
+            "roofline: RLM-copy {:.2} GF/s, RLM-load {:.2} GF/s",
+            w.p_copy / 1e9,
+            w.p_load / 1e9
+        );
+        println!("{:>6} {:>10} {:>10} {:>12}", "cores", "RACE GF/s", "SpMV GF/s", "symm B/nnz");
+        for t in [1usize, 2, 4, 8, 12, 16, 20] {
+            let cfg = RaceConfig { threads: t, eps: vec![0.8, 0.8, 0.5], ..Default::default() };
+            let (g_race, bpn) = match RaceEngine::build(&a, &cfg) {
+                Ok(eng) => {
+                    let up = eng.permuted_matrix().upper_triangle();
+                    let tr = cachesim::measure_symmspmv_traffic(&up, nnz, &m);
+                    (
+                        sim::simulate_race(&m, &eng, &up, tr.bytes_total, nnz).gflops,
+                        tr.bytes_per_nnz_stored,
+                    )
+                }
+                Err(_) => (0.0, 0.0),
+            };
+            let g_spmv = sim::simulate_spmv(&m, &a, t, tr_spmv.bytes_total).gflops;
+            println!("{t:>6} {g_race:>10.2} {g_spmv:>10.2} {bpn:>12.2}");
+        }
+    }
+    println!("\n(paper: inline_1/Graphene saturate at roofline; crankseg limited by eta;");
+    println!(" parabolic_fem exceeds the model on SKX due to LLC residency)");
+}

@@ -1,0 +1,48 @@
+//! Fig. 21: REAL single-core wallclock of SymmSpMV (with RACE ordering)
+//! vs. SpMV across the corpus on the host — the one figure this testbed
+//! can measure natively (it is a single-core figure in the paper too).
+//! The paper's finding: for low-N_nzr matrices the short inner loop makes
+//! SymmSpMV lose its storage advantage on a single core.
+
+use race::gen;
+use race::kernels;
+use race::util::bench::bench;
+
+fn main() {
+    let small = std::env::var("RACE_BENCH_FULL").is_err();
+    println!(
+        "{:>3} {:<26} {:>8} {:>12} {:>12} {:>8}",
+        "idx", "matrix", "N_nzr", "SymmSpMV", "SpMV", "ratio"
+    );
+    for e in gen::corpus() {
+        let a0 = (e.build)(small);
+        let perm = race::graph::rcm(&a0);
+        let a = a0.permute_symmetric(&perm);
+        let upper = a.upper_triangle();
+        let n = a.nrows();
+        let x: Vec<f64> = (0..n).map(|i| (i as f64 * 0.3).sin()).collect();
+        let mut b = vec![0.0; n];
+        let flops = 2.0 * a.nnz() as f64;
+
+        let s_symm = bench(e.name, 0.15, || {
+            b.iter_mut().for_each(|v| *v = 0.0);
+            kernels::symmspmv_serial(&upper, &x, &mut b);
+        });
+        let s_spmv = bench(e.name, 0.15, || {
+            kernels::spmv(&a, &x, &mut b);
+        });
+        std::hint::black_box(&b);
+        let g_symm = s_symm.gflops(flops);
+        let g_spmv = s_spmv.gflops(flops);
+        println!(
+            "{:>3} {:<26} {:>8.2} {:>9.3}GF/s {:>9.3}GF/s {:>8.2}",
+            e.index,
+            e.name,
+            a.nnzr(),
+            g_symm,
+            g_spmv,
+            g_symm / g_spmv
+        );
+    }
+    println!("\n(paper: ratio < 1 for low-N_nzr matrices like delaunay/Hubbard-12)");
+}

@@ -1,0 +1,81 @@
+//! §Perf harness: hot-path iteration log for the serial SymmSpMV kernel
+//! (the unit of work every parallel executor schedules) and the cache
+//! simulator (the corpus-level bench bottleneck). Run with
+//! `cargo bench --bench perf_kernel`; results recorded in
+//! EXPERIMENTS.md §Perf.
+
+use race::cachesim;
+use race::gen;
+use race::kernels;
+use race::machine;
+use race::util::bench::{bench, report};
+
+fn main() {
+    let full = std::env::var("RACE_BENCH_FULL").is_ok();
+    // representative pair: high-N_nzr stencil + low-N_nzr quantum chain
+    let mats = vec![
+        ("stencil27", if full { gen::stencil3d_27pt(40, 40, 40) } else { gen::stencil3d_27pt(24, 24, 24) }),
+        ("spin", gen::spin_chain_xxz(if full { 17 } else { 14 }, gen::SpinKind::XXZ)),
+    ];
+    for (name, a0) in &mats {
+        let perm = race::graph::rcm(a0);
+        let a = a0.permute_symmetric(&perm);
+        let upper = a.upper_triangle();
+        let n = a.nrows();
+        let x: Vec<f64> = (0..n).map(|i| (i as f64 * 0.3).sin()).collect();
+        let mut b = vec![0.0; n];
+        let flops = 2.0 * a.nnz() as f64;
+        println!("== {} ({} rows, {} nnz, N_nzr {:.1}) ==", name, n, a.nnz(), a.nnzr());
+
+        let s = bench("checked (pre-perf baseline)", 0.4, || {
+            b.iter_mut().for_each(|v| *v = 0.0);
+            kernels::symmspmv_range_checked(&upper, &x, &mut b, 0, n);
+        });
+        report(&s, Some(flops));
+        let s = bench("symmspmv_range (hot path, unchecked)", 0.4, || {
+            b.iter_mut().for_each(|v| *v = 0.0);
+            kernels::symmspmv_range(&upper, &x, &mut b, 0, n);
+        });
+        report(&s, Some(flops));
+        let s = bench("unchecked (no bounds checks)", 0.4, || {
+            b.iter_mut().for_each(|v| *v = 0.0);
+            kernels::symmspmv_range_unchecked(&upper, &x, &mut b, 0, n);
+        });
+        report(&s, Some(flops));
+        let s = bench("unrolled x4", 0.4, || {
+            b.iter_mut().for_each(|v| *v = 0.0);
+            kernels::symmspmv_range_unrolled(&upper, &x, &mut b, 0, n);
+        });
+        report(&s, Some(flops));
+        let s = bench("scalar reference", 0.4, || {
+            b.iter_mut().for_each(|v| *v = 0.0);
+            kernels::symmspmv_range_scalar(&upper, &x, &mut b, 0, n);
+        });
+        report(&s, Some(flops));
+        std::hint::black_box(&b);
+
+        // roofline context for this matrix on the host
+        let host = machine::host(32);
+        let alpha = race::perfmodel::alpha_opt_symmspmv(a.nnzr());
+        let w = race::perfmodel::symmspmv_window(&host, alpha, a.nnzr());
+        println!(
+            "host 1-core roofline window (optimal alpha): {:.2}..{:.2} GF/s\n",
+            w.p_copy / 1e9,
+            w.p_load / 1e9
+        );
+    }
+
+    // cache simulator throughput (drives the corpus benches)
+    println!("== cache simulator throughput ==");
+    let a = &mats[0].1;
+    let upper = a.upper_triangle();
+    let m = machine::skx();
+    let s = bench("measure_symmspmv_traffic", 0.5, || {
+        std::hint::black_box(cachesim::measure_symmspmv_traffic(&upper, a.nnz(), &m));
+    });
+    report(&s, None);
+    println!(
+        "  = {:.1} M accesses/s",
+        2.0 * upper.nnz() as f64 / s.median / 1e6
+    );
+}

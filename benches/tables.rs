@@ -1,0 +1,78 @@
+//! Tables 1-3: machine specs, corpus properties, and the α / intensity
+//! table — the non-figure artifacts of the paper's evaluation.
+
+use race::cachesim;
+use race::gen;
+use race::machine;
+use race::perfmodel;
+use race::sparse::MatrixStats;
+
+fn main() {
+    let small = std::env::var("RACE_BENCH_FULL").is_err();
+
+    println!("== Table 1: machines ==");
+    println!(
+        "{:<6} {:>5} {:>10} {:>10} {:>9} {:>9} {:>10}",
+        "name", "cores", "bw_load", "bw_copy", "L2/core", "L3", "eff.cache"
+    );
+    for m in [machine::ivb(), machine::skx(), machine::host(32)] {
+        println!(
+            "{:<6} {:>5} {:>8.1}GB {:>8.1}GB {:>7}KB {:>7}MB {:>8}MB",
+            m.name,
+            m.cores,
+            m.bw_load / 1e9,
+            m.bw_copy / 1e9,
+            m.l2 / 1024,
+            m.l3 / (1 << 20),
+            m.effective_cache() / (1 << 20)
+        );
+    }
+
+    println!("\n== Table 2: corpus (structural analogues, laptop scale) ==");
+    println!(
+        "{:>3} {:<26} {:>9} {:>10} {:>7} {:>8} {:>8} {:>9}",
+        "idx", "matrix", "N_r", "N_nz", "N_nzr", "bw", "bw_rcm", "symm MB"
+    );
+    let mut cache = Vec::new();
+    for e in gen::corpus() {
+        let a = (e.build)(small);
+        let s = MatrixStats::compute(e.name, &a);
+        println!(
+            "{:>3} {:<26} {:>9} {:>10} {:>7.2} {:>8} {:>8} {:>9.1}",
+            e.index,
+            e.name,
+            s.nrows,
+            s.nnz,
+            s.nnzr,
+            s.bw,
+            s.bw_rcm,
+            s.sym_bytes as f64 / 1e6
+        );
+        cache.push((e.name, a, s));
+    }
+
+    println!("\n== Table 3: alpha and intensities (both machines) ==");
+    println!(
+        "{:>3} {:<26} {:>9} {:>9} {:>10} {:>10}",
+        "idx", "matrix", "a_opt", "I_SpMV", "a_meas skx", "a_meas ivb"
+    );
+    let entries = gen::corpus();
+    for (i, (name, a, s)) in cache.iter().enumerate() {
+        let perm = race::graph::rcm(a);
+        let arc = a.permute_symmetric(&perm);
+        let skx = machine::skx().scaled_to(a.nrows(), entries[i].paper_nrows);
+        let ivb = machine::ivb().scaled_to(a.nrows(), entries[i].paper_nrows);
+        let a_skx = cachesim::measure_spmv_traffic(&arc, &skx).alpha;
+        let a_ivb = cachesim::measure_spmv_traffic(&arc, &ivb).alpha;
+        let aopt = perfmodel::alpha_opt_spmv(s.nnzr);
+        println!(
+            "{:>3} {:<26} {:>9.4} {:>9.4} {:>10.4} {:>10.4}",
+            i + 1,
+            name,
+            aopt,
+            perfmodel::intensity_spmv(aopt, s.nnzr),
+            a_skx,
+            a_ivb
+        );
+    }
+}

@@ -1,0 +1,64 @@
+//! Coloring explorer: reproduce the paper's illustrations — the MC
+//! locality problem (Fig. 3), the level construction on the artificial
+//! stencil (Figs. 4-6), the load-balanced level groups (Figs. 7-8), and
+//! the RACE tree (Figs. 13-14) — as terminal output.
+//!
+//! Run: `cargo run --release --example coloring_explorer`
+
+use race::color::{greedy_coloring, mc_schedule, verify_coloring};
+use race::gen;
+use race::graph;
+use race::race::{format_tree, RaceConfig, RaceEngine};
+
+fn main() -> anyhow::Result<()> {
+    // ---- Fig. 3: MC destroys locality on a banded toy matrix ----
+    println!("== Fig. 3: multicoloring on a 1D chain (12 vertices) ==");
+    let chain = gen::stencil2d_5pt(12, 1);
+    let mc = greedy_coloring(&chain, 2, None);
+    assert!(verify_coloring(&chain, &mc, 2));
+    println!("distance-2 MC colors along the chain (note the striding):");
+    println!("  vertex: {:?}", (0..12).collect::<Vec<_>>());
+    println!("  color : {:?}", mc.color);
+    let sched = mc_schedule(&chain, 2);
+    println!("  execution order after color permutation (destroys locality):");
+    let mut order = vec![0u32; 12];
+    for (old, &new) in sched.perm.iter().enumerate() {
+        order[new as usize] = old as u32;
+    }
+    println!("  {:?}", order);
+
+    // ---- Figs. 4-6: levels of the artificial stencil ----
+    println!("\n== Figs. 4-6: BFS levels of the 8x8 artificial stencil ==");
+    let a8 = gen::race_paper_stencil(8, 8);
+    let (levels, nl) = graph::bfs_levels_all(&a8, 0);
+    println!("N_l = {nl} levels; level sizes:");
+    let mut sizes = vec![0usize; nl];
+    for &l in &levels {
+        sizes[l as usize] += 1;
+    }
+    println!("  {sizes:?}");
+
+    // ---- Figs. 7-8 + 13-14: RACE construction on the 16x16 stencil ----
+    println!("\n== Figs. 13-14: RACE tree for 16x16 stencil, 8 threads ==");
+    let a16 = gen::race_paper_stencil(16, 16);
+    let cfg = RaceConfig { threads: 8, dist: 2, eps: vec![0.6, 0.5], ..Default::default() };
+    let eng = RaceEngine::build(&a16, &cfg)?;
+    let mut out = String::new();
+    format_tree(&eng.tree, 0, 0, &mut out);
+    print!("{out}");
+    println!(
+        "eta = {:.3}, N_t_eff = {:.2} (paper's Fig. 14 example: 256/(44x8) = 0.73)",
+        eng.efficiency(),
+        eng.effective_threads()
+    );
+
+    // ---- distance-1 vs distance-2 parallelism ----
+    println!("\n== distance-k effect on the same matrix ==");
+    for k in [1usize, 2] {
+        let cfg = RaceConfig { threads: 8, dist: k, ..Default::default() };
+        let e = RaceEngine::build(&a16, &cfg)?;
+        println!("  distance-{k}: eta = {:.3}, {} tree nodes", e.efficiency(), e.node_count());
+    }
+    println!("coloring_explorer OK");
+    Ok(())
+}

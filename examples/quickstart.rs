@@ -1,0 +1,69 @@
+//! Quickstart: build a matrix, color it with RACE, run parallel SymmSpMV,
+//! verify against the reference, and inspect the performance model.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use race::cachesim;
+use race::gen;
+use race::graph;
+use race::kernels;
+use race::machine;
+use race::perfmodel;
+use race::race::{RaceConfig, RaceEngine};
+use race::sim;
+
+fn main() -> anyhow::Result<()> {
+    // 1. A matrix: 2D Poisson on a 128x128 grid (or pick any corpus entry
+    //    via race::gen::corpus_entry("Spin-26")).
+    let a0 = gen::stencil2d_5pt(128, 128);
+    println!("matrix: {} rows, {} nnz, bandwidth {}", a0.nrows(), a0.nnz(), a0.bandwidth());
+
+    // 2. RCM preprocessing (the paper applies it to every method, §6.1).
+    let perm = graph::rcm(&a0);
+    let a = a0.permute_symmetric(&perm);
+    println!("after RCM: bandwidth {}", a.bandwidth());
+
+    // 3. Build the RACE engine: distance-2 coloring for 8 threads.
+    let cfg = RaceConfig { threads: 8, dist: 2, ..Default::default() };
+    let eng = RaceEngine::build(&a, &cfg)?;
+    println!(
+        "RACE: {} levels, {} tree nodes, eta = {:.3} (N_t_eff = {:.2})",
+        eng.nlevels0,
+        eng.node_count(),
+        eng.efficiency(),
+        eng.effective_threads()
+    );
+
+    // 4. Run SymmSpMV on the upper triangle through the engine.
+    let ap = eng.permuted_matrix();
+    let upper = ap.upper_triangle();
+    let x: Vec<f64> = (0..a.nrows()).map(|i| (i as f64 * 0.01).sin()).collect();
+    let mut b = vec![0.0; a.nrows()];
+    kernels::symmspmv_race(&eng, &upper, &x, &mut b);
+
+    // 5. Verify against the full-matrix SpMV.
+    let want = ap.spmv_ref(&x);
+    let max_err = b
+        .iter()
+        .zip(&want)
+        .map(|(g, w)| (g - w).abs() / (1.0 + w.abs()))
+        .fold(0.0f64, f64::max);
+    println!("max rel err vs SpMV reference: {max_err:.2e}");
+    assert!(max_err < 1e-10);
+
+    // 6. What would this do on a Skylake SP socket? (execution simulator)
+    let m = machine::skx();
+    let tr = cachesim::measure_symmspmv_traffic(&upper, a.nnz(), &m);
+    let s = sim::simulate_race(&m, &eng, &upper, tr.bytes_total, a.nnz());
+    let w = perfmodel::symmspmv_window(&m, tr.alpha, a.nnzr());
+    println!(
+        "simulated on {}: {:.2} GF/s (roofline window {:.2}..{:.2} GF/s, traffic {:.1} B/nnz)",
+        m.name,
+        s.gflops,
+        w.p_copy / 1e9,
+        w.p_load / 1e9,
+        tr.bytes_per_nnz_full
+    );
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,76 @@
+//! XLA parity: run SymmSpMV through the AOT-compiled JAX/Pallas artifact
+//! (Layer 1+2, compiled by `make artifacts`) from the Rust runtime and
+//! check it against the native Rust executor — proving the three layers
+//! compose with no Python on the request path.
+//!
+//! Requires `make artifacts` first (artifacts/symmspmv.hlo.txt, compiled
+//! for the 64x64 5-point stencil: n=4096, wu=3, wl=2, block=64).
+//!
+//! Run: `cargo run --release --example xla_parity`
+
+use race::gen;
+use race::kernels;
+use race::runtime::{artifacts_dir, XlaRuntime};
+use race::sparse::SymmEllPack;
+
+fn main() -> anyhow::Result<()> {
+    let a = gen::stencil2d_5pt(64, 64);
+    let n = a.nrows();
+    println!("matrix: 64x64 5-pt stencil, {} rows, {} nnz", n, a.nnz());
+
+    // pack exactly like python/compile/kernels/symmspmv.py
+    let pack = SymmEllPack::from_csr(&a, 64);
+    println!("packed: n={} wu={} wl={}", pack.n, pack.wu, pack.wl);
+    anyhow::ensure!(
+        pack.n == 4096 && pack.wu == 3 && pack.wl == 2,
+        "packed shape does not match the AOT artifact (regenerate with \
+         python -m compile.aot --n {} --wu {} --wl {})",
+        pack.n,
+        pack.wu,
+        pack.wl
+    );
+
+    // load the artifact
+    let mut rt = XlaRuntime::cpu()?;
+    let path = artifacts_dir().join("symmspmv.hlo.txt");
+    anyhow::ensure!(path.exists(), "artifact {} missing — run `make artifacts`", path.display());
+    rt.load_artifact("symmspmv", &path)?;
+    println!("compiled artifact on {}", rt.platform());
+
+    // input vector
+    let x: Vec<f64> = (0..n).map(|i| (i as f64 * 0.37).sin()).collect();
+    let xp = pack.pad_x(&x);
+
+    // execute through XLA (argument order: index arrays, then f32 data —
+    // matches aot.py specs())
+    let nn = pack.n as i64;
+    let (wu, wl) = (pack.wu as i64, pack.wl as i64);
+    let t0 = std::time::Instant::now();
+    let out = rt
+        .execute_mixed(
+            "symmspmv",
+            &[(&pack.vals_u, &[nn, wu]), (&xp, &[nn])],
+            &[(&pack.cols_u, &[nn, wu]), (&pack.idx_l, &[nn, wl]), (&pack.cols_l, &[nn, wl])],
+        )?
+        .remove(0);
+    let dt_xla = t0.elapsed().as_secs_f64();
+
+    // native Rust reference
+    let upper = a.upper_triangle();
+    let mut want = vec![0.0f64; n];
+    let t1 = std::time::Instant::now();
+    kernels::symmspmv_serial(&upper, &x, &mut want);
+    let dt_native = t1.elapsed().as_secs_f64();
+
+    let mut max_err = 0f64;
+    for i in 0..n {
+        let e = (out[i] as f64 - want[i]).abs() / (1.0 + want[i].abs());
+        max_err = max_err.max(e);
+    }
+    println!("XLA artifact:   {:.3} ms", dt_xla * 1e3);
+    println!("native serial:  {:.3} ms", dt_native * 1e3);
+    println!("max rel err (f32 vs f64): {max_err:.2e}");
+    anyhow::ensure!(max_err < 1e-4, "XLA/native mismatch");
+    println!("xla_parity OK — all three layers compose");
+    Ok(())
+}

@@ -1,0 +1,108 @@
+"""AOT export: lower the L2/L1 computations to HLO text artifacts.
+
+HLO *text* (not ``.serialize()``) is the interchange format — jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Artifacts written (shape-specialized, f32):
+
+* ``symmspmv``    — b = A x.
+* ``cg_step``     — one CG iteration.
+* ``power_step``  — one power iteration.
+* ``model``       — alias of ``symmspmv`` (the default artifact name the
+  Makefile tracks).
+
+Default shapes target the quickstart matrix: the 64x64 5-point stencil
+(n = 4096, wu = 3, wl = 2, block = 64) — exactly what
+``examples/xla_parity.rs`` packs on the Rust side. Override with
+--n/--wu/--wl/--block for other matrices.
+
+Usage: python -m compile.aot --out ../artifacts/model.hlo.txt
+"""
+
+import argparse
+import pathlib
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def specs(n, wu, wl):
+    """ShapeDtypeStructs for the packed operands (argument order matches
+    XlaRuntime::execute_mixed: index arrays first, then f32 data)."""
+    i32 = lambda *s: jax.ShapeDtypeStruct(s, jnp.int32)
+    f32 = lambda *s: jax.ShapeDtypeStruct(s, jnp.float32)
+    return (
+        i32(n, wu),  # cols_u
+        i32(n, wl),  # idx_l
+        i32(n, wl),  # cols_l
+        f32(n, wu),  # vals_u
+        f32(n),      # x
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts/model.hlo.txt")
+    ap.add_argument("--n", type=int, default=4096)
+    ap.add_argument("--wu", type=int, default=3)
+    ap.add_argument("--wl", type=int, default=2)
+    ap.add_argument("--block", type=int, default=64)
+    args = ap.parse_args()
+
+    out_path = pathlib.Path(args.out)
+    art_dir = out_path.parent
+    art_dir.mkdir(parents=True, exist_ok=True)
+    n, wu, wl, block = args.n, args.wu, args.wl, args.block
+    cu, il, cl, vu, x = specs(n, wu, wl)
+    f32 = lambda *s: jax.ShapeDtypeStruct(s, jnp.float32)
+
+    def emit(name, fn, *spec):
+        lowered = jax.jit(fn).lower(*spec)
+        text = to_hlo_text(lowered)
+        path = art_dir / f"{name}.hlo.txt"
+        path.write_text(text)
+        print(f"wrote {path} ({len(text)} chars)")
+        return text
+
+    symm = lambda cols_u, idx_l, cols_l, vals_u, xv: model.symmspmv(
+        cols_u, idx_l, cols_l, vals_u, xv, block=block
+    )
+    text = emit("symmspmv", symm, cu, il, cl, vu, x)
+    # default artifact name tracked by the Makefile
+    out_path.write_text(text)
+    print(f"wrote {out_path} (alias of symmspmv)")
+
+    emit(
+        "cg_step",
+        lambda cols_u, idx_l, cols_l, vals_u, xv, r, p, rs: model.cg_step(
+            cols_u, idx_l, cols_l, vals_u, xv, r, p, rs, block=block
+        ),
+        cu, il, cl, vu, x, f32(n), f32(n), f32(),
+    )
+    emit(
+        "power_step",
+        lambda cols_u, idx_l, cols_l, vals_u, v: model.power_step(
+            cols_u, idx_l, cols_l, vals_u, v, block=block
+        ),
+        cu, il, cl, vu, x,
+    )
+    # record the shapes the artifacts were specialized for
+    (art_dir / "shapes.txt").write_text(f"n={n} wu={wu} wl={wl} block={block}\n")
+
+
+if __name__ == "__main__":
+    main()

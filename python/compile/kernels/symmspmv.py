@@ -1,0 +1,170 @@
+"""Layer-1 Pallas kernel: SymmSpMV over a mirrored padded-ELL layout.
+
+HARDWARE ADAPTATION (DESIGN.md §Hardware-Adaptation): the paper's CPU
+kernel (Algorithm 2) scatters `b[col] += A[idx] * x[row]`, and RACE's
+distance-2 coloring exists to make those scatters race-free across
+threads. A systolic/vector target (TPU) wants neither scatters nor
+colors, so the layout solves the problem instead:
+
+* the **upper triangle** (incl. diagonal) is packed row-major into a padded
+  ELL block (``vals_u``, ``cols_u``) — the value array is stored ONCE;
+* the **mirrored lower part** is described *by indices only*
+  (``idx_l`` pointing into the flattened ``vals_u``, plus ``cols_l``), so
+  the transpose contribution becomes a *gather*: symmetric storage still
+  halves the 8-byte value traffic, paying only a second 2x4-byte index
+  stream — the paper's bandwidth insight, re-expressed for a dataflow
+  machine;
+* rows are processed in blocks of ``C`` (BlockSpec grid), giving the
+  HBM→VMEM schedule the CPU code gets from per-thread level groups.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; numerics are validated through the interpret path and the
+AOT artifact lowers to plain HLO the Rust runtime executes.
+"""
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+
+@dataclass
+class SymmEllPack:
+    """Mirrored padded-ELL operands for one symmetric matrix.
+
+    Attributes:
+        n: padded row count (multiple of the row-block C).
+        n_orig: original matrix dimension (n_orig <= n).
+        vals_u: (n, wu) f32 — upper-triangle values, diagonal first,
+            zero-padded.
+        cols_u: (n, wu) i32 — column of each upper value (pad: own row).
+        idx_l:  (n, wl) i32 — flat index into vals_u.reshape(-1) for each
+            mirrored lower entry (pad: n*wu, a zero slot appended by the
+            kernel).
+        cols_l: (n, wl) i32 — column of each mirrored entry (pad: own row).
+    """
+
+    n: int
+    n_orig: int
+    vals_u: np.ndarray
+    cols_u: np.ndarray
+    idx_l: np.ndarray
+    cols_l: np.ndarray
+
+    @property
+    def wu(self):
+        return self.vals_u.shape[1]
+
+    @property
+    def wl(self):
+        return self.cols_l.shape[1]
+
+
+def pack_symmetric(a_dense, block=8):
+    """Pack a dense symmetric matrix into :class:`SymmEllPack`.
+
+    Mirrors the packing the Rust runtime performs from CSR; kept simple
+    (dense input) because it only runs at build/test time.
+    """
+    a = np.asarray(a_dense, dtype=np.float32)
+    n_orig = a.shape[0]
+    assert a.shape == (n_orig, n_orig)
+    n = ((n_orig + block - 1) // block) * block
+    rows_u = []  # (cols, vals) upper incl diag
+    for i in range(n_orig):
+        cols = [i] + [j for j in range(i + 1, n_orig) if a[i, j] != 0.0]
+        vals = [a[i, i]] + [a[i, j] for j in range(i + 1, n_orig) if a[i, j] != 0.0]
+        rows_u.append((cols, vals))
+    wu = max(len(c) for c, _ in rows_u)
+    # strict-lower mirror: entry (i, j) with j < i references upper (j, i)
+    rows_l = [[] for _ in range(n_orig)]  # list of (flat_idx, col)
+    for j in range(n_orig):
+        cols_j = rows_u[j][0]
+        for slot, cj in enumerate(cols_j):
+            if cj != j:  # strict upper entry (j, cj): mirror into row cj
+                rows_l[cj].append((j * wu + slot, j))
+    wl = max((len(r) for r in rows_l), default=1)
+    wl = max(wl, 1)
+
+    vals_u = np.zeros((n, wu), dtype=np.float32)
+    cols_u = np.tile(np.arange(n, dtype=np.int32)[:, None], (1, wu))
+    idx_l = np.full((n, wl), n * wu, dtype=np.int32)  # pad -> appended zero
+    cols_l = np.tile(np.arange(n, dtype=np.int32)[:, None], (1, wl))
+    for i, (cols, vals) in enumerate(rows_u):
+        vals_u[i, : len(vals)] = vals
+        cols_u[i, : len(cols)] = cols
+    for i, ents in enumerate(rows_l):
+        for k, (fi, cj) in enumerate(ents):
+            idx_l[i, k] = fi
+            cols_l[i, k] = cj
+    # re-point idx_l pads at the flat length *including* the zero slot
+    return SymmEllPack(n=n, n_orig=n_orig, vals_u=vals_u, cols_u=cols_u, idx_l=idx_l, cols_l=cols_l)
+
+
+def _symmspmv_kernel(cols_u_ref, idx_l_ref, cols_l_ref, vals_u_ref, flat_ref, x_ref, o_ref):
+    """Pallas kernel body for one row block.
+
+    Refs:
+        cols_u_ref: (C, wu) i32 block of upper columns.
+        idx_l_ref:  (C, wl) i32 block of mirrored flat indices.
+        cols_l_ref: (C, wl) i32 block of mirrored columns.
+        vals_u_ref: (C, wu) f32 block of upper values.
+        flat_ref:   (n*wu + 1,) f32 — full flattened vals_u + zero slot.
+        x_ref:      (n,) f32 — full input vector (VMEM-resident).
+        o_ref:      (C,) f32 — output block.
+    """
+    x = x_ref[...]
+    flat = flat_ref[...]
+    vals_u = vals_u_ref[...]
+    cols_u = cols_u_ref[...]
+    upper = jnp.sum(vals_u * x[cols_u], axis=1)
+    vals_l = flat[idx_l_ref[...]]
+    lower = jnp.sum(vals_l * x[cols_l_ref[...]], axis=1)
+    o_ref[...] = upper + lower
+
+
+@partial(jax.jit, static_argnames=("block",))
+def symmspmv_apply(cols_u, idx_l, cols_l, vals_u, x, block=8):
+    """b = A x from mirrored-ELL operands via the Pallas kernel.
+
+    Shapes: cols_u/vals_u (n, wu); idx_l/cols_l (n, wl); x (n,).
+    n must be a multiple of `block`.
+    """
+    n, wu = vals_u.shape
+    wl = cols_l.shape[1]
+    assert n % block == 0, f"n={n} not a multiple of block={block}"
+    flat = jnp.concatenate([vals_u.reshape(-1), jnp.zeros((1,), vals_u.dtype)])
+    grid = (n // block,)
+    return pl.pallas_call(
+        _symmspmv_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block, wu), lambda i: (i, 0)),
+            pl.BlockSpec((block, wl), lambda i: (i, 0)),
+            pl.BlockSpec((block, wl), lambda i: (i, 0)),
+            pl.BlockSpec((block, wu), lambda i: (i, 0)),
+            pl.BlockSpec((n * wu + 1,), lambda i: (0,)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), vals_u.dtype),
+        interpret=True,
+    )(cols_u, idx_l, cols_l, vals_u, flat, x)
+
+
+def symmspmv_packed(pack: SymmEllPack, x, block=8):
+    """Convenience wrapper: run the kernel from a :class:`SymmEllPack`."""
+    xp = np.zeros((pack.n,), dtype=np.float32)
+    xp[: pack.n_orig] = np.asarray(x, dtype=np.float32)
+    out = symmspmv_apply(
+        jnp.asarray(pack.cols_u),
+        jnp.asarray(pack.idx_l),
+        jnp.asarray(pack.cols_l),
+        jnp.asarray(pack.vals_u),
+        jnp.asarray(xp),
+        block=block,
+    )
+    return np.asarray(out)[: pack.n_orig]

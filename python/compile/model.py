@@ -1,0 +1,54 @@
+"""Layer-2 JAX model: the enclosing iterative-solver compute graph.
+
+The paper motivates SymmSpMV as the hot kernel *inside* iterative solvers
+(§1). This module expresses that enclosing computation in JAX, calling the
+Layer-1 Pallas kernel for every matvec, so the whole step lowers into ONE
+HLO module the Rust coordinator executes:
+
+* ``symmspmv`` — a single b = A x (artifact ``symmspmv``).
+* ``cg_step`` — one conjugate-gradient iteration (artifact ``cg_step``):
+  state (x, r, p, rs_old) → (x', r', p', rs_new).
+* ``power_step`` — one normalized power iteration (artifact
+  ``power_step``), the eigensolver shape quantum-physics users of these
+  matrices run (ScaMaC context).
+
+Everything is shape-specialized at AOT time; python never runs at serve
+time.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.symmspmv import symmspmv_apply
+
+
+def symmspmv(cols_u, idx_l, cols_l, vals_u, x, *, block=8):
+    """b = A x via the Pallas kernel (thin L2 alias, jit-compatible)."""
+    return symmspmv_apply(cols_u, idx_l, cols_l, vals_u, x, block=block)
+
+
+def cg_step(cols_u, idx_l, cols_l, vals_u, x, r, p, rs_old, *, block=8):
+    """One CG iteration with A applied through the Pallas SymmSpMV.
+
+    Returns (x', r', p', rs_new). The caller loops and tests convergence;
+    each call is one artifact execution on the Rust side.
+    """
+    ap = symmspmv(cols_u, idx_l, cols_l, vals_u, p, block=block)
+    p_ap = jnp.dot(p, ap)
+    alpha = rs_old / jnp.where(p_ap == 0.0, 1.0, p_ap)
+    x_new = x + alpha * p
+    r_new = r - alpha * ap
+    rs_new = jnp.dot(r_new, r_new)
+    beta = rs_new / jnp.where(rs_old == 0.0, 1.0, rs_old)
+    p_new = r_new + beta * p
+    return x_new, r_new, p_new, rs_new
+
+
+def power_step(cols_u, idx_l, cols_l, vals_u, v, *, block=8):
+    """One power-iteration step: v' = A v / ||A v||, plus the Rayleigh
+    quotient estimate. Returns (v', lam)."""
+    av = symmspmv(cols_u, idx_l, cols_l, vals_u, v, block=block)
+    lam = jnp.dot(v, av)
+    nrm = jnp.linalg.norm(av)
+    v_new = av / jnp.where(nrm == 0.0, 1.0, nrm)
+    return v_new, lam

@@ -1,0 +1,93 @@
+"""AOT export tests: artifacts lower, parse as HLO text, and carry the
+shape contract the Rust runtime expects."""
+
+import pathlib
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import aot, model
+from compile.kernels.ref import dense_symmspmv, random_symmetric_dense
+from compile.kernels.symmspmv import pack_symmetric
+
+
+def test_to_hlo_text_roundtrips_simple_fn():
+    lowered = jax.jit(lambda x: (x * 2.0,)).lower(jax.ShapeDtypeStruct((4,), jnp.float32))
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert "f32[4]" in text
+
+
+def test_symmspmv_lowering_contains_expected_shapes():
+    cu, il, cl, vu, x = aot.specs(64, 3, 2)
+    fn = lambda a, b, c, d, e: model.symmspmv(a, b, c, d, e, block=8)
+    text = aot.to_hlo_text(jax.jit(fn).lower(cu, il, cl, vu, x))
+    assert "HloModule" in text
+    assert "f32[64,3]" in text  # vals_u
+    assert "s32[64,2]" in text  # idx_l / cols_l
+
+
+def test_cg_step_lowering():
+    cu, il, cl, vu, x = aot.specs(32, 3, 2)
+    f32 = lambda *s: jax.ShapeDtypeStruct(s, jnp.float32)
+    fn = lambda a, b, c, d, xv, r, p, rs: model.cg_step(a, b, c, d, xv, r, p, rs, block=8)
+    text = aot.to_hlo_text(jax.jit(fn).lower(cu, il, cl, vu, x, f32(32), f32(32), f32()))
+    assert "HloModule" in text
+    # 4-tuple output
+    assert text.count("ROOT") >= 1
+
+
+def test_cli_writes_artifacts(tmp_path):
+    out = tmp_path / "model.hlo.txt"
+    subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out", str(out), "--n", "64", "--wu", "3",
+         "--wl", "2", "--block", "8"],
+        check=True,
+        cwd=str(pathlib.Path(__file__).resolve().parents[1]),
+    )
+    assert out.exists()
+    for name in ["symmspmv", "cg_step", "power_step"]:
+        p = tmp_path / f"{name}.hlo.txt"
+        assert p.exists(), name
+        assert "HloModule" in p.read_text()[:200]
+    assert (tmp_path / "shapes.txt").read_text().startswith("n=64")
+
+
+def test_default_artifact_shape_matches_quickstart_matrix():
+    # the 64x64 5-point stencil must pack to the aot.py default shapes —
+    # the contract examples/xla_parity.rs relies on
+    n = 64
+    a = np.zeros((n * n, n * n), dtype=np.float32)
+    for j in range(n):
+        for i in range(n):
+            r = j * n + i
+            a[r, r] = 1.0
+            for di, dj in [(1, 0), (0, 1)]:
+                ii, jj = i + di, j + dj
+                if ii < n and jj < n:
+                    c = jj * n + ii
+                    a[r, c] = a[c, r] = -1.0
+    pack = pack_symmetric(a, block=64)
+    assert pack.n == 4096 and pack.wu == 3 and pack.wl == 2
+
+
+def test_power_step_matches_dense():
+    a = random_symmetric_dense(16, 0.5, seed=3)
+    pack = pack_symmetric(a, block=8)
+    ops = (
+        jnp.asarray(pack.cols_u),
+        jnp.asarray(pack.idx_l),
+        jnp.asarray(pack.cols_l),
+        jnp.asarray(pack.vals_u),
+    )
+    v = np.zeros(pack.n, dtype=np.float32)
+    v[:16] = 1.0 / 4.0
+    v2, lam = model.power_step(*ops, jnp.asarray(v), block=8)
+    av = np.asarray(dense_symmspmv(a, np.asarray(v)[:16]))
+    want_lam = float(np.asarray(v)[:16] @ av)
+    assert abs(float(lam) - want_lam) < 1e-3 * max(1.0, abs(want_lam))
+    want_v2 = av / np.linalg.norm(av)
+    np.testing.assert_allclose(np.asarray(v2)[:16], want_v2, rtol=2e-3, atol=2e-3)

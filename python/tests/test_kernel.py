@@ -1,0 +1,121 @@
+"""Kernel-vs-oracle correctness: the CORE L1 signal.
+
+The Pallas SymmSpMV (interpret mode) must match the dense oracle and the
+pure-jnp ELL reference over hypothesis-generated symmetric matrices,
+shapes and block sizes.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import dense_symmspmv, ell_symmspmv_ref, random_symmetric_dense
+from compile.kernels.symmspmv import pack_symmetric, symmspmv_packed
+
+
+def _check(a_dense, x, block=8, tol=2e-4):
+    pack = pack_symmetric(a_dense, block=block)
+    got = symmspmv_packed(pack, x, block=block)
+    want = np.asarray(dense_symmspmv(a_dense, x))
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol * np.abs(want).max())
+
+
+def test_identity():
+    n = 16
+    a = np.eye(n, dtype=np.float32) * 3.0
+    x = np.arange(n, dtype=np.float32)
+    _check(a, x)
+
+
+def test_tridiagonal():
+    n = 32
+    a = np.zeros((n, n), dtype=np.float32)
+    for i in range(n):
+        a[i, i] = 2.0
+        if i + 1 < n:
+            a[i, i + 1] = a[i + 1, i] = -1.0
+    x = np.sin(np.arange(n, dtype=np.float32))
+    _check(a, x)
+
+
+def test_dense_symmetric():
+    a = random_symmetric_dense(24, 1.0, seed=7)
+    x = np.random.default_rng(3).standard_normal(24).astype(np.float32)
+    _check(a, x)
+
+
+def test_packing_against_jnp_reference():
+    a = random_symmetric_dense(20, 0.3, seed=11)
+    pack = pack_symmetric(a)
+    x = np.random.default_rng(5).standard_normal(20).astype(np.float32)
+    xp = np.zeros(pack.n, dtype=np.float32)
+    xp[:20] = x
+    ref = np.asarray(ell_symmspmv_ref(pack, xp))[:20]
+    want = np.asarray(dense_symmspmv(a, x))
+    np.testing.assert_allclose(ref, want, rtol=1e-4, atol=1e-4 * np.abs(want).max())
+
+
+def test_pad_rows_are_inert():
+    # n_orig not a multiple of block: padded rows must produce zeros and
+    # not perturb real rows.
+    a = random_symmetric_dense(13, 0.4, seed=2)
+    pack = pack_symmetric(a, block=8)
+    assert pack.n == 16
+    x = np.ones(13, dtype=np.float32)
+    got = symmspmv_packed(pack, x, block=8)
+    want = np.asarray(dense_symmspmv(a, x))
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4 * np.abs(want).max())
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(min_value=4, max_value=40),
+    density=st.floats(min_value=0.05, max_value=0.9),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    block=st.sampled_from([4, 8, 16]),
+)
+def test_hypothesis_sweep(n, density, seed, block):
+    a = random_symmetric_dense(n, density, seed)
+    rng = np.random.default_rng(seed + 1)
+    x = rng.standard_normal(n).astype(np.float32)
+    _check(a, x, block=block)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_hypothesis_diag_dominant_spd(seed):
+    # SPD-ish matrices (the CG case)
+    a = random_symmetric_dense(17, 0.5, seed)
+    x = np.linspace(-1, 1, 17).astype(np.float32)
+    _check(a, x)
+
+
+def test_value_array_stored_once():
+    # the symmetry payoff: vals_u holds each value once; the mirror is
+    # index-only
+    a = random_symmetric_dense(12, 0.6, seed=9)
+    pack = pack_symmetric(a)
+    nnz_upper = np.count_nonzero(np.triu(a))
+    assert pack.vals_u.size >= nnz_upper
+    # idx_l points into vals_u: every non-pad index < n*wu
+    real = pack.idx_l[pack.idx_l < pack.n * pack.wu]
+    strict_upper = np.count_nonzero(np.triu(a, 1))
+    assert real.size == strict_upper
+
+
+def test_rejects_bad_block():
+    a = random_symmetric_dense(8, 0.5, seed=1)
+    pack = pack_symmetric(a, block=8)
+    with pytest.raises(AssertionError):
+        # n=8 not a multiple of block=3
+        from compile.kernels.symmspmv import symmspmv_apply
+        import jax.numpy as jnp
+
+        symmspmv_apply(
+            jnp.asarray(pack.cols_u),
+            jnp.asarray(pack.idx_l),
+            jnp.asarray(pack.cols_l),
+            jnp.asarray(pack.vals_u),
+            jnp.zeros(pack.n, jnp.float32),
+            block=3,
+        )

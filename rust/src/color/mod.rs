@@ -1,0 +1,367 @@
+//! Baseline coloring schemes the paper compares against (§3.3, §6.2.4):
+//!
+//! * **MC** — greedy distance-k multicoloring of the vertices (COLPACK
+//!   substitute). For SymmSpMV, k = 2 makes same-color rows structurally
+//!   orthogonal (no shared column), so they can update `b[]` in parallel.
+//! * **ABMC** — algebraic block multicoloring (Iwashita et al. [21]):
+//!   partition the graph into locality-preserving blocks first, then
+//!   distance-k color the block quotient graph. Threads work on whole
+//!   blocks; blocks of one color run in parallel.
+//!
+//! Both produce a [`ColorSchedule`]: a row permutation making each color's
+//! rows contiguous plus a phase list consumed by the executors in
+//! [`crate::kernels`].
+
+use crate::partition;
+use crate::sparse::Csr;
+
+/// A per-vertex coloring.
+#[derive(Debug, Clone)]
+pub struct Coloring {
+    /// Color of each vertex.
+    pub color: Vec<u32>,
+    /// Number of colors used.
+    pub ncolors: usize,
+}
+
+/// An executable schedule derived from a coloring: permute the matrix by
+/// `perm`, then run the phases in order. All work units (row ranges in the
+/// permuted numbering) within a phase may run concurrently; a barrier
+/// separates phases.
+#[derive(Debug, Clone)]
+pub struct ColorSchedule {
+    /// Symmetric permutation (`old -> new`) to apply to the matrix.
+    pub perm: Vec<u32>,
+    /// `phases[p]` = list of `[start, end)` row ranges in permuted indexing.
+    pub phases: Vec<Vec<(u32, u32)>>,
+    /// If true, a work unit may be split further across threads (true for
+    /// MC — every row of a color is independent; false for ABMC — a block
+    /// must stay on one thread).
+    pub splittable: bool,
+}
+
+impl ColorSchedule {
+    /// Total number of global synchronizations implied (phases - 1 per sweep).
+    pub fn sync_points(&self) -> usize {
+        self.phases.len().saturating_sub(1)
+    }
+
+    /// Number of rows in every phase (for load-balance inspection).
+    pub fn phase_rows(&self) -> Vec<usize> {
+        self.phases
+            .iter()
+            .map(|units| units.iter().map(|&(s, e)| (e - s) as usize).sum())
+            .collect()
+    }
+}
+
+/// Greedy distance-k coloring of the vertices of `a` in the given order
+/// (natural order if `order` is `None`). k = 1 or 2 supported.
+pub fn greedy_coloring(a: &Csr, k: usize, order: Option<&[u32]>) -> Coloring {
+    assert!(k == 1 || k == 2, "only distance-1/2 supported");
+    let n = a.nrows();
+    let mut color = vec![u32::MAX; n];
+    // forbidden[c] == stamp marks color c as in use near the current vertex
+    let mut forbidden: Vec<u32> = Vec::new();
+    let mut stamp = 0u32;
+    let natural: Vec<u32>;
+    let order: &[u32] = match order {
+        Some(o) => o,
+        None => {
+            natural = (0..n as u32).collect();
+            &natural
+        }
+    };
+    let mut ncolors = 0usize;
+    for &v in order {
+        let v = v as usize;
+        stamp += 1;
+        let mark = |u: usize, forbidden: &mut Vec<u32>| {
+            let c = color[u];
+            if c != u32::MAX {
+                if c as usize >= forbidden.len() {
+                    forbidden.resize(c as usize + 1, 0);
+                }
+                forbidden[c as usize] = stamp;
+            }
+        };
+        let (nbrs, _) = a.row(v);
+        for &u in nbrs {
+            mark(u as usize, &mut forbidden);
+            if k == 2 {
+                let (nn, _) = a.row(u as usize);
+                for &w in nn {
+                    mark(w as usize, &mut forbidden);
+                }
+            }
+        }
+        let mut c = 0u32;
+        while (c as usize) < forbidden.len() && forbidden[c as usize] == stamp {
+            c += 1;
+        }
+        color[v] = c;
+        ncolors = ncolors.max(c as usize + 1);
+    }
+    Coloring { color, ncolors }
+}
+
+/// Verify that `coloring` is a valid distance-k coloring of `a`.
+/// For k = 2 this is exactly the SymmSpMV safety condition: every set of
+/// rows writing to the same `b[]` entry — i.e. `{c} ∪ N(c)` for each
+/// column c — uses pairwise distinct colors.
+pub fn verify_coloring(a: &Csr, coloring: &Coloring, k: usize) -> bool {
+    let n = a.nrows();
+    match k {
+        1 => {
+            for v in 0..n {
+                let (nbrs, _) = a.row(v);
+                for &u in nbrs {
+                    if u as usize != v && coloring.color[u as usize] == coloring.color[v] {
+                        return false;
+                    }
+                }
+            }
+            true
+        }
+        2 => {
+            let mut seen: Vec<u32> = vec![u32::MAX; coloring.ncolors];
+            for c in 0..n {
+                let (nbrs, _) = a.row(c);
+                // rows writing to b[c]: c itself and all neighbours
+                let stamp = c as u32;
+                let mut check = |v: usize| -> bool {
+                    let col = coloring.color[v] as usize;
+                    if seen[col] == stamp {
+                        return false;
+                    }
+                    seen[col] = stamp;
+                    true
+                };
+                if !check(c) {
+                    return false;
+                }
+                for &u in nbrs {
+                    if u as usize != c && !check(u as usize) {
+                        return false;
+                    }
+                }
+            }
+            true
+        }
+        _ => panic!("k must be 1 or 2"),
+    }
+}
+
+/// Build an executable MC schedule: distance-k color, permute rows so each
+/// color is contiguous (preserving relative order within a color, like the
+/// paper's Fig. 3), one phase per color.
+pub fn mc_schedule(a: &Csr, k: usize) -> ColorSchedule {
+    let coloring = greedy_coloring(a, k, None);
+    schedule_from_vertex_colors(a.nrows(), &coloring)
+}
+
+fn schedule_from_vertex_colors(n: usize, coloring: &Coloring) -> ColorSchedule {
+    // counting sort by color
+    let mut counts = vec![0u32; coloring.ncolors + 1];
+    for &c in &coloring.color {
+        counts[c as usize + 1] += 1;
+    }
+    for i in 0..coloring.ncolors {
+        counts[i + 1] += counts[i];
+    }
+    let starts = counts.clone();
+    let mut perm = vec![0u32; n];
+    let mut cursor = counts;
+    for (v, &c) in coloring.color.iter().enumerate() {
+        perm[v] = cursor[c as usize];
+        cursor[c as usize] += 1;
+    }
+    let phases = (0..coloring.ncolors)
+        .map(|c| vec![(starts[c], starts[c + 1])])
+        .collect();
+    ColorSchedule { perm, phases, splittable: true }
+}
+
+/// ABMC schedule: partition into `nblocks` locality-preserving blocks,
+/// distance-k color the quotient graph, permute rows by (color, block) and
+/// emit one phase per color whose work units are the blocks.
+pub fn abmc_schedule(a: &Csr, nblocks: usize, k: usize) -> ColorSchedule {
+    let n = a.nrows();
+    let nblocks = nblocks.clamp(1, n);
+    let part = partition::partition_bands(a, nblocks);
+    let quot = partition::quotient_graph(a, &part, nblocks);
+    // distance-k greedy coloring of the quotient graph
+    let block_color = color_quotient(&quot, k);
+    let ncolors = *block_color.iter().max().unwrap() as usize + 1;
+    // order blocks by (color, block id); rows by (block order, natural order)
+    let mut blocks_by_color: Vec<Vec<u32>> = vec![Vec::new(); ncolors];
+    for (b, &c) in block_color.iter().enumerate() {
+        blocks_by_color[c as usize].push(b as u32);
+    }
+    // block -> target position
+    let mut block_start = vec![0u32; nblocks];
+    let mut block_sizes = vec![0u32; nblocks];
+    for &p in &part {
+        block_sizes[p as usize] += 1;
+    }
+    let mut at = 0u32;
+    let mut phases: Vec<Vec<(u32, u32)>> = Vec::with_capacity(ncolors);
+    for blocks in &blocks_by_color {
+        let mut units = Vec::with_capacity(blocks.len());
+        for &b in blocks {
+            block_start[b as usize] = at;
+            units.push((at, at + block_sizes[b as usize]));
+            at += block_sizes[b as usize];
+        }
+        phases.push(units);
+    }
+    let mut cursor = block_start;
+    let mut perm = vec![0u32; n];
+    for (v, &p) in part.iter().enumerate() {
+        perm[v] = cursor[p as usize];
+        cursor[p as usize] += 1;
+    }
+    ColorSchedule { perm, phases, splittable: false }
+}
+
+/// Greedy distance-k coloring on an explicit adjacency list (quotient graph).
+fn color_quotient(adj: &[Vec<u32>], k: usize) -> Vec<u32> {
+    let nb = adj.len();
+    let mut color = vec![u32::MAX; nb];
+    let mut forbidden: Vec<u32> = Vec::new();
+    for v in 0..nb {
+        forbidden.clear();
+        forbidden.resize(forbidden.len().max(nb + 1), 0);
+        let mark = |u: usize, f: &mut Vec<u32>| {
+            if color[u] != u32::MAX {
+                f[color[u] as usize] = 1;
+            }
+        };
+        for &u in &adj[v] {
+            mark(u as usize, &mut forbidden);
+            if k >= 2 {
+                for &w in &adj[u as usize] {
+                    mark(w as usize, &mut forbidden);
+                }
+            }
+        }
+        let c = forbidden.iter().position(|&f| f == 0).unwrap() as u32;
+        color[v] = c;
+    }
+    color
+}
+
+/// Validate a [`ColorSchedule`] against the *permuted* matrix: within every
+/// phase, no two rows in different work units (or any two rows at all, if
+/// splittable) may share a column.
+pub fn verify_schedule(a_perm: &Csr, sched: &ColorSchedule) -> bool {
+    let n = a_perm.nrows();
+    // owner[c] = (phase, unit) stamp of last writer this phase
+    let mut unit_of = vec![u32::MAX; n];
+    for units in &sched.phases {
+        for c in unit_of.iter_mut() {
+            *c = u32::MAX;
+        }
+        // map rows to unit ids for this phase
+        for (uid, &(s, e)) in units.iter().enumerate() {
+            for r in s..e {
+                unit_of[r as usize] = uid as u32;
+            }
+        }
+        // every column written by rows of >=2 distinct units is a conflict;
+        // for splittable schedules every row is its own unit.
+        let mut writer: Vec<(u32, u32)> = vec![(u32::MAX, u32::MAX); n]; // (unit, row)
+        for (uid, &(s, e)) in units.iter().enumerate() {
+            for r in s..e {
+                let row_unit = if sched.splittable { r } else { uid as u32 };
+                let (cols, _) = a_perm.row(r as usize);
+                // SymmSpMV writes b[r] and b[c] for upper entries; checking
+                // all columns is conservative and matches distance-2 safety.
+                for &c in cols {
+                    let w = writer[c as usize];
+                    if w.0 != u32::MAX && w.0 != row_unit {
+                        return false;
+                    }
+                    writer[c as usize] = (row_unit, r);
+                }
+            }
+        }
+    }
+    // phases must cover every row exactly once
+    let mut covered = vec![false; n];
+    for units in &sched.phases {
+        for &(s, e) in units {
+            for r in s..e {
+                if covered[r as usize] {
+                    return false;
+                }
+                covered[r as usize] = true;
+            }
+        }
+    }
+    covered.iter().all(|&c| c)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen;
+
+    #[test]
+    fn greedy_d1_valid() {
+        let a = gen::stencil2d_5pt(12, 12);
+        let c = greedy_coloring(&a, 1, None);
+        assert!(verify_coloring(&a, &c, 1));
+        // 5-pt grid with diagonal self-loop: 2 colors + diag forbids own
+        assert!(c.ncolors <= 4, "ncolors={}", c.ncolors);
+    }
+
+    #[test]
+    fn greedy_d2_valid() {
+        for (name, a) in [
+            ("stencil", gen::stencil2d_5pt(10, 14)),
+            ("spin", gen::spin_chain_xxz(8, gen::SpinKind::XXZ)),
+            ("delaunay", gen::delaunay_like(12, 12, 3)),
+        ] {
+            let c = greedy_coloring(&a, 2, None);
+            assert!(verify_coloring(&a, &c, 2), "{name} invalid d2 coloring");
+            assert!(!verify_coloring(&a, &Coloring { color: vec![0; a.nrows()], ncolors: 1 }, 2));
+        }
+    }
+
+    #[test]
+    fn mc_schedule_valid() {
+        let a = gen::stencil2d_5pt(16, 16);
+        let s = mc_schedule(&a, 2);
+        assert!(crate::graph::is_permutation(&s.perm));
+        let ap = a.permute_symmetric(&s.perm);
+        assert!(verify_schedule(&ap, &s));
+        assert!(s.splittable);
+    }
+
+    #[test]
+    fn abmc_schedule_valid() {
+        for (name, a) in [
+            ("stencil", gen::stencil2d_5pt(20, 20)),
+            ("graphene", gen::graphene(12, 12)),
+        ] {
+            let s = abmc_schedule(&a, 16, 2);
+            assert!(crate::graph::is_permutation(&s.perm), "{name}");
+            let ap = a.permute_symmetric(&s.perm);
+            assert!(verify_schedule(&ap, &s), "{name} schedule invalid");
+            assert!(!s.splittable);
+        }
+    }
+
+    #[test]
+    fn abmc_fewer_syncs_than_mc() {
+        // blocking coarsens the conflict graph; ABMC usually needs no more
+        // phases than MC needs colors, and each phase has larger units.
+        let a = gen::spin_chain_xxz(10, gen::SpinKind::XXZ);
+        let mc = mc_schedule(&a, 2);
+        let abmc = abmc_schedule(&a, 32, 2);
+        assert!(abmc.phases.len() < 4 * mc.phases.len());
+        let rows: usize = abmc.phase_rows().iter().sum();
+        assert_eq!(rows, a.nrows());
+    }
+}

@@ -1,0 +1,444 @@
+//! Pipeline coordinator: the L3 driver tying everything together —
+//! generate/load a matrix, RCM-preprocess, build a schedule (RACE / MC /
+//! ABMC / baselines), execute the real threaded kernel, measure simulated
+//! traffic and multicore performance, and emit a JSON-able report.
+//!
+//! Also provides the threaded matvec service used by `race-cli serve`: the
+//! request loop keeps the compiled schedule + matrix resident and answers
+//! SymmSpMV requests with no Python anywhere near the path. (The offline
+//! environment has no tokio; the server uses std::net with a thread per
+//! connection — same architecture, simpler runtime.)
+
+use crate::cachesim::{self, TrafficReport};
+use crate::color::{abmc_schedule, mc_schedule};
+use crate::gen;
+use crate::graph;
+use crate::kernels;
+use crate::machine::Machine;
+use crate::perfmodel;
+use crate::race::{RaceConfig, RaceEngine};
+use crate::sim::{self, SimResult};
+use crate::sparse::{Csr, MatrixStats};
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+
+/// Parallelization method for SymmSpMV.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Method {
+    /// RACE recursive level coloring (the paper's contribution).
+    Race,
+    /// Plain multicoloring (COLPACK-style distance-2).
+    Mc,
+    /// Algebraic block multicoloring.
+    Abmc,
+    /// Serial Algorithm 2.
+    Serial,
+    /// Atomic-CAS baseline.
+    Locks,
+    /// Thread-private arrays baseline.
+    Private,
+    /// Reference full-matrix SpMV ("MKL-IE" equivalent — §6.2.2 shows
+    /// MKL-IE runs plain SpMV on the full matrix).
+    SpmvRef,
+}
+
+impl std::str::FromStr for Method {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "race" => Method::Race,
+            "mc" => Method::Mc,
+            "abmc" => Method::Abmc,
+            "serial" => Method::Serial,
+            "locks" => Method::Locks,
+            "private" => Method::Private,
+            "spmv" | "mkl" | "mkl-ie" => Method::SpmvRef,
+            other => bail!("unknown method {other:?}"),
+        })
+    }
+}
+
+/// Pipeline report for one (matrix, method, machine) combination.
+#[derive(Debug, Clone)]
+pub struct Report {
+    /// Matrix name.
+    pub matrix: String,
+    /// Method name.
+    pub method: String,
+    /// Machine the simulation targeted.
+    pub machine: String,
+    /// Matrix statistics (Table 2 row).
+    pub stats: MatrixStats,
+    /// Threads requested.
+    pub threads: usize,
+    /// RACE parallel efficiency η (1.0 for non-RACE methods).
+    pub eta: f64,
+    /// Traffic measurement (cache simulator).
+    pub traffic: TrafficReport,
+    /// Simulated multicore execution.
+    pub sim: SimResult,
+    /// Roofline window for this matrix on this machine (measured α), GF/s.
+    pub roofline_copy_gfs: f64,
+    /// Load-only-bandwidth roofline, GF/s.
+    pub roofline_load_gfs: f64,
+    /// Wallclock of one real (host) kernel invocation, seconds.
+    pub host_seconds: f64,
+    /// Host GF/s from the wallclock.
+    pub host_gflops: f64,
+    /// Max |b - b_ref| relative error of the real run.
+    pub max_rel_err: f64,
+}
+
+impl Report {
+    /// JSON rendering of the full report.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("matrix", Json::Str(self.matrix.clone())),
+            ("method", Json::Str(self.method.clone())),
+            ("machine", Json::Str(self.machine.clone())),
+            ("nrows", Json::Num(self.stats.nrows as f64)),
+            ("nnz", Json::Num(self.stats.nnz as f64)),
+            ("nnzr", Json::Num(self.stats.nnzr)),
+            ("bw", Json::Num(self.stats.bw as f64)),
+            ("bw_rcm", Json::Num(self.stats.bw_rcm as f64)),
+            ("threads", Json::Num(self.threads as f64)),
+            ("eta", Json::Num(self.eta)),
+            ("alpha", Json::Num(self.traffic.alpha)),
+            ("bytes_per_nnz", Json::Num(self.traffic.bytes_per_nnz_full)),
+            ("bytes_total", Json::Num(self.traffic.bytes_total as f64)),
+            ("sim_gflops", Json::Num(self.sim.gflops)),
+            ("sim_t_compute", Json::Num(self.sim.t_compute)),
+            ("sim_t_mem", Json::Num(self.sim.t_mem)),
+            ("sim_t_sync", Json::Num(self.sim.t_sync)),
+            ("roofline_copy_gfs", Json::Num(self.roofline_copy_gfs)),
+            ("roofline_load_gfs", Json::Num(self.roofline_load_gfs)),
+            ("host_seconds", Json::Num(self.host_seconds)),
+            ("host_gflops", Json::Num(self.host_gflops)),
+            ("max_rel_err", Json::Num(self.max_rel_err)),
+        ])
+    }
+}
+
+/// Resolve a matrix by corpus name, generator spec, or MatrixMarket path.
+pub fn resolve_matrix(spec: &str, small: bool) -> Result<(String, Csr)> {
+    if let Some(e) = gen::corpus_entry(spec) {
+        return Ok((e.name.to_string(), (e.build)(small)));
+    }
+    if spec.ends_with(".mtx") {
+        let a = crate::sparse::read_matrix_market(std::path::Path::new(spec))?;
+        if !a.is_symmetric() {
+            bail!("{spec}: matrix must be symmetric");
+        }
+        return Ok((spec.to_string(), a));
+    }
+    // generator spec: e.g. "stencil2d:64x64", "stencil3d:16x16x16",
+    // "spin:12", "graphene:32x32", "delaunay:48x48"
+    let (kind, args) = spec.split_once(':').unwrap_or((spec, ""));
+    let dims: Vec<usize> = args.split(['x', ',']).filter_map(|d| d.parse().ok()).collect();
+    let a = match kind {
+        "stencil2d" if dims.len() == 2 => gen::stencil2d_5pt(dims[0], dims[1]),
+        "stencil2d9" if dims.len() == 2 => gen::stencil2d_9pt(dims[0], dims[1]),
+        "paperstencil" if dims.len() == 2 => gen::race_paper_stencil(dims[0], dims[1]),
+        "stencil3d" if dims.len() == 3 => gen::stencil3d_7pt(dims[0], dims[1], dims[2]),
+        "stencil3d27" if dims.len() == 3 => gen::stencil3d_27pt(dims[0], dims[1], dims[2]),
+        "spin" if dims.len() == 1 => gen::spin_chain_xxz(dims[0], gen::SpinKind::XXZ),
+        "graphene" if dims.len() == 2 => gen::graphene(dims[0], dims[1]),
+        "delaunay" if dims.len() == 2 => gen::delaunay_like(dims[0], dims[1], 42),
+        "anderson" if dims.len() == 1 => gen::anderson3d(dims[0], 16.5, 42),
+        _ => bail!(
+            "cannot resolve matrix spec {spec:?} (not a corpus name, .mtx path, or generator spec)"
+        ),
+    };
+    Ok((spec.to_string(), a))
+}
+
+/// Run the full pipeline for one matrix/method/machine combination.
+pub fn run_pipeline(
+    matrix_spec: &str,
+    method: Method,
+    threads: usize,
+    machine: &Machine,
+    small: bool,
+) -> Result<Report> {
+    let (name, a0) = resolve_matrix(matrix_spec, small)?;
+    let stats = MatrixStats::compute(&name, &a0);
+    // RCM preprocessing (§6.1: all methods get RCM first)
+    let perm = graph::rcm(&a0);
+    let a = a0.permute_symmetric(&perm);
+    let nnz_full = a.nnz();
+    let x: Vec<f64> = (0..a.nrows()).map(|i| ((i % 100) as f64) * 0.01 - 0.5).collect();
+    let want = a.spmv_ref(&x);
+
+    let mut eta = 1.0;
+    let (traffic, sim_res, host_seconds, max_rel_err): (TrafficReport, SimResult, f64, f64);
+    match method {
+        Method::Race => {
+            let cfg = RaceConfig { threads, ..Default::default() };
+            let eng = RaceEngine::build(&a, &cfg).context("RACE build")?;
+            eta = eng.efficiency();
+            let ap = eng.permuted_matrix();
+            let upper = ap.upper_triangle();
+            let tr = cachesim::measure_symmspmv_traffic(&upper, nnz_full, machine);
+            let s = sim::simulate_race(machine, &eng, &upper, tr.bytes_total, nnz_full);
+            // real host execution + correctness
+            let xp = permute_vec(&x, &eng.perm);
+            let mut b = vec![0.0; a.nrows()];
+            let t0 = std::time::Instant::now();
+            kernels::symmspmv_race(&eng, &upper, &xp, &mut b);
+            let dt = t0.elapsed().as_secs_f64();
+            let err = rel_err_permuted(&want, &b, &eng.perm);
+            (traffic, sim_res, host_seconds, max_rel_err) = (tr, s, dt, err);
+        }
+        Method::Mc | Method::Abmc => {
+            let sched = if method == Method::Mc {
+                mc_schedule(&a, 2)
+            } else {
+                abmc_schedule(&a, (a.nrows() / 64).max(threads * 4), 2)
+            };
+            let ap = a.permute_symmetric(&sched.perm);
+            let upper = ap.upper_triangle();
+            let tr = cachesim::measure_symmspmv_traffic(&upper, nnz_full, machine);
+            let s = sim::simulate_color(machine, &sched, &upper, threads, tr.bytes_total, nnz_full);
+            let xp = permute_vec(&x, &sched.perm);
+            let mut b = vec![0.0; a.nrows()];
+            let t0 = std::time::Instant::now();
+            kernels::symmspmv_color(&sched, &upper, &xp, &mut b, threads);
+            let dt = t0.elapsed().as_secs_f64();
+            let err = rel_err_permuted(&want, &b, &sched.perm);
+            (traffic, sim_res, host_seconds, max_rel_err) = (tr, s, dt, err);
+        }
+        Method::Serial | Method::Locks | Method::Private => {
+            let upper = a.upper_triangle();
+            let tr = cachesim::measure_symmspmv_traffic(&upper, nnz_full, machine);
+            let mut b = vec![0.0; a.nrows()];
+            let t0 = std::time::Instant::now();
+            match method {
+                Method::Serial => kernels::symmspmv_serial(&upper, &x, &mut b),
+                Method::Locks => kernels::symmspmv_locks(&upper, &x, &mut b, threads),
+                _ => kernels::symmspmv_private(&upper, &x, &mut b, threads),
+            }
+            let dt = t0.elapsed().as_secs_f64();
+            let err = max_rel(&want, &b);
+            let s = sim::simulate_spmv(machine, &a, 1, tr.bytes_total);
+            (traffic, sim_res, host_seconds, max_rel_err) = (tr, s, dt, err);
+        }
+        Method::SpmvRef => {
+            let tr = cachesim::measure_spmv_traffic(&a, machine);
+            let s = sim::simulate_spmv(machine, &a, threads, tr.bytes_total);
+            let mut b = vec![0.0; a.nrows()];
+            let t0 = std::time::Instant::now();
+            kernels::spmv(&a, &x, &mut b);
+            let dt = t0.elapsed().as_secs_f64();
+            let err = max_rel(&want, &b);
+            (traffic, sim_res, host_seconds, max_rel_err) = (tr, s, dt, err);
+        }
+    }
+    let w = match method {
+        Method::SpmvRef => perfmodel::spmv_window(machine, traffic.alpha, stats.nnzr),
+        _ => perfmodel::symmspmv_window(machine, traffic.alpha, stats.nnzr),
+    };
+    let flops = 2.0 * nnz_full as f64;
+    Ok(Report {
+        matrix: name,
+        method: format!("{method:?}"),
+        machine: machine.name.clone(),
+        stats,
+        threads,
+        eta,
+        traffic,
+        sim: sim_res,
+        roofline_copy_gfs: w.p_copy / 1e9,
+        roofline_load_gfs: w.p_load / 1e9,
+        host_seconds,
+        host_gflops: flops / host_seconds / 1e9,
+        max_rel_err,
+    })
+}
+
+/// Permute a vector: `out[perm[i]] = v[i]`.
+pub fn permute_vec(v: &[f64], perm: &[u32]) -> Vec<f64> {
+    let mut out = vec![0.0; v.len()];
+    for (old, &new) in perm.iter().enumerate() {
+        out[new as usize] = v[old];
+    }
+    out
+}
+
+fn max_rel(want: &[f64], got: &[f64]) -> f64 {
+    want.iter()
+        .zip(got)
+        .map(|(w, g)| (w - g).abs() / (1.0 + w.abs()))
+        .fold(0.0, f64::max)
+}
+
+fn rel_err_permuted(want: &[f64], got_permuted: &[f64], perm: &[u32]) -> f64 {
+    let mut err = 0f64;
+    for (old, &new) in perm.iter().enumerate() {
+        let e = (want[old] - got_permuted[new as usize]).abs() / (1.0 + want[old].abs());
+        err = err.max(e);
+    }
+    err
+}
+
+/// Resident SymmSpMV service state: build once, answer many requests.
+pub struct MatvecService {
+    eng: RaceEngine,
+    upper: Csr,
+    total_perm: Vec<u32>,
+    /// Matrix name.
+    pub name: String,
+    /// Matrix dimension.
+    pub n: usize,
+}
+
+impl MatvecService {
+    /// Build the service for a matrix spec.
+    pub fn build(matrix_spec: &str, threads: usize, small: bool) -> Result<MatvecService> {
+        let (name, a0) = resolve_matrix(matrix_spec, small)?;
+        let perm = graph::rcm(&a0);
+        let a = a0.permute_symmetric(&perm);
+        let cfg = RaceConfig { threads, ..Default::default() };
+        let eng = RaceEngine::build(&a, &cfg)?;
+        let upper = eng.permuted_matrix().upper_triangle();
+        let total_perm = graph::compose_perm(&perm, &eng.perm);
+        let n = a.nrows();
+        Ok(MatvecService { eng, upper, total_perm, name, n })
+    }
+
+    /// One request: `b = A x` in original (pre-permutation) indexing.
+    pub fn matvec(&self, x: &[f64]) -> Result<(Vec<f64>, f64)> {
+        if x.len() != self.n {
+            bail!("expected {} entries, got {}", self.n, x.len());
+        }
+        let xp = permute_vec(x, &self.total_perm);
+        let mut bp = vec![0.0; self.n];
+        let t0 = std::time::Instant::now();
+        kernels::symmspmv_race(&self.eng, &self.upper, &xp, &mut bp);
+        let dt = t0.elapsed().as_secs_f64();
+        let mut b = vec![0.0; self.n];
+        for (old, &new) in self.total_perm.iter().enumerate() {
+            b[old] = bp[new as usize];
+        }
+        Ok((b, dt))
+    }
+
+    /// Handle one JSON request line.
+    pub fn handle(&self, line: &str) -> String {
+        let resp = (|| -> Result<String> {
+            let req = Json::parse(line).map_err(|e| anyhow::anyhow!(e))?;
+            let x = req
+                .get("x")
+                .and_then(|j| j.as_f64_arr())
+                .context("request must be {\"x\": [..]}")?;
+            let (b, dt) = self.matvec(&x)?;
+            Ok(Json::obj(vec![("b", Json::arr_f64(&b)), ("seconds", Json::Num(dt))]).to_string())
+        })();
+        resp.unwrap_or_else(|e| {
+            Json::obj(vec![("error", Json::Str(e.to_string()))]).to_string()
+        })
+    }
+}
+
+/// Threaded matvec service over TCP: newline-delimited JSON
+/// `{"x": [..]}` → `{"b": [..], "seconds": t}`.
+pub fn serve(matrix_spec: &str, threads: usize, addr: &str, small: bool) -> Result<()> {
+    use std::io::{BufRead, BufReader, Write};
+    let svc = std::sync::Arc::new(MatvecService::build(matrix_spec, threads, small)?);
+    let listener = std::net::TcpListener::bind(addr)?;
+    eprintln!("serving SymmSpMV for {} ({} rows) on {addr}", svc.name, svc.n);
+    for stream in listener.incoming() {
+        let stream = match stream {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("accept: {e}");
+                continue;
+            }
+        };
+        let svc = svc.clone();
+        std::thread::spawn(move || {
+            let peer = stream.peer_addr().map(|p| p.to_string()).unwrap_or_default();
+            let mut writer = match stream.try_clone() {
+                Ok(w) => w,
+                Err(_) => return,
+            };
+            let reader = BufReader::new(stream);
+            for line in reader.lines() {
+                let line = match line {
+                    Ok(l) => l,
+                    Err(_) => break,
+                };
+                if line.trim().is_empty() {
+                    continue;
+                }
+                let resp = svc.handle(&line);
+                if writer.write_all(resp.as_bytes()).is_err()
+                    || writer.write_all(b"\n").is_err()
+                {
+                    break;
+                }
+            }
+            eprintln!("connection {peer} closed");
+        });
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::machine;
+
+    #[test]
+    fn pipeline_race_on_small_corpus_entry() {
+        let m = machine::skx();
+        let r = run_pipeline("Spin-26", Method::Race, 4, &m, true).unwrap();
+        assert!(r.max_rel_err < 1e-9, "err={}", r.max_rel_err);
+        assert!(r.eta > 0.2 && r.eta <= 1.0);
+        assert!(r.sim.gflops > 0.1);
+        assert!(r.traffic.bytes_total > 0);
+        // JSON rendering parses back
+        let j = r.to_json().to_string();
+        assert!(crate::util::json::Json::parse(&j).is_ok());
+    }
+
+    #[test]
+    fn pipeline_all_methods_correct() {
+        let m = machine::ivb();
+        for method in [
+            Method::Race,
+            Method::Mc,
+            Method::Abmc,
+            Method::Serial,
+            Method::Locks,
+            Method::Private,
+            Method::SpmvRef,
+        ] {
+            let r = run_pipeline("stencil2d:24x24", method, 3, &m, true).unwrap();
+            assert!(r.max_rel_err < 1e-9, "{method:?}: err={}", r.max_rel_err);
+        }
+    }
+
+    #[test]
+    fn resolve_specs() {
+        assert!(resolve_matrix("Graphene-4096", true).is_ok());
+        assert!(resolve_matrix("stencil3d:8x8x8", true).is_ok());
+        assert!(resolve_matrix("spin:8", true).is_ok());
+        assert!(resolve_matrix("bogus:1", true).is_err());
+    }
+
+    #[test]
+    fn matvec_service_roundtrip() {
+        let svc = MatvecService::build("stencil2d:16x16", 2, true).unwrap();
+        let x = vec![1.0; svc.n];
+        let (b, _) = svc.matvec(&x).unwrap();
+        // A x where row sums are 1.0 (5-pt stencil construction)
+        for (i, v) in b.iter().enumerate() {
+            assert!((v - 1.0).abs() < 1e-9, "row {i}: {v}");
+        }
+        // JSON request path
+        let resp = svc.handle(&format!("{{\"x\": {:?}}}", vec![1.0; svc.n]));
+        assert!(resp.contains("\"b\""), "{resp}");
+        let err = svc.handle("{\"x\": [1,2]}");
+        assert!(err.contains("error"));
+    }
+}

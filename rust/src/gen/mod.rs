@@ -1,0 +1,29 @@
+//! Matrix generators.
+//!
+//! The paper benchmarks 31 matrices from the SuiteSparse collection and the
+//! ScaMaC quantum-physics generator (Table 2). Those files are not
+//! available in this environment, so this module generates structural
+//! analogues at laptop scale, covering the same families:
+//!
+//! * low-bandwidth PDE stencils (`pwtk`, `Fault_639`, `HPCG-192`, ...),
+//! * quantum many-body Hamiltonians with large bandwidth and low `N_nzr`
+//!   (`Hubbard-*`, `Spin-26`, `FreeFermionChain-*`, `Anderson-16.5`, ...),
+//! * lattice tight-binding (`Graphene-4096`),
+//! * irregular planar meshes with destroyed locality (`delaunay_n24`),
+//! * "corner case" matrices with very wide BFS levels (`crankseg_1`).
+//!
+//! See DESIGN.md §Substitutions for the full mapping.
+
+mod corpus;
+mod graphs;
+mod quantum;
+mod rng;
+mod stencil;
+
+pub use corpus::{corpus, corpus_entry, corpus_names, CorpusEntry};
+pub use graphs::{delaunay_like, dense_band, graphene, random_symmetric};
+pub use quantum::{anderson3d, free_boson_chain, hubbard_chain, spin_chain_xxz, SpinKind};
+pub use rng::XorShift64;
+pub use stencil::{
+    race_paper_stencil, stencil2d, stencil2d_5pt, stencil2d_9pt, stencil3d_27pt, stencil3d_7pt,
+};

@@ -1,0 +1,172 @@
+//! Regular-grid stencil matrices (the PDE family of the paper's corpus) and
+//! the artificial stencil used for the paper's illustrations (Fig. 4).
+
+use crate::sparse::{Coo, Csr};
+
+/// Generic 2D stencil on an `nx x ny` grid with Dirichlet boundaries.
+/// `offsets` lists `(di, dj, value)` neighbour contributions; the diagonal
+/// is set so each row sums to `diag_shift` (diagonally dominant for
+/// `diag_shift > 0`, which keeps CG in the examples convergent). The offset
+/// set must be symmetric (`(di,dj)` and `(-di,-dj)` both present) for the
+/// matrix to be symmetric; all named stencils below satisfy this.
+pub fn stencil2d(nx: usize, ny: usize, offsets: &[(i64, i64, f64)], diag_shift: f64) -> Csr {
+    let n = nx * ny;
+    let mut coo = Coo::new(n);
+    for j in 0..ny as i64 {
+        for i in 0..nx as i64 {
+            let row = (j * nx as i64 + i) as usize;
+            let mut offdiag_sum = 0.0;
+            for &(di, dj, v) in offsets {
+                let (ii, jj) = (i + di, j + dj);
+                if ii >= 0 && ii < nx as i64 && jj >= 0 && jj < ny as i64 {
+                    let col = (jj * nx as i64 + ii) as usize;
+                    coo.push(row, col, v);
+                    offdiag_sum += v;
+                }
+            }
+            coo.push(row, row, diag_shift - offdiag_sum);
+        }
+    }
+    coo.to_csr()
+}
+
+/// Classic 5-point Laplacian (2D Poisson), Dirichlet boundaries.
+pub fn stencil2d_5pt(nx: usize, ny: usize) -> Csr {
+    stencil2d(nx, ny, &[(-1, 0, -1.0), (1, 0, -1.0), (0, -1, -1.0), (0, 1, -1.0)], 1.0)
+}
+
+/// 9-point stencil (includes diagonals).
+pub fn stencil2d_9pt(nx: usize, ny: usize) -> Csr {
+    let mut off = Vec::new();
+    for dj in -1i64..=1 {
+        for di in -1i64..=1 {
+            if di != 0 || dj != 0 {
+                off.push((di, dj, -1.0));
+            }
+        }
+    }
+    stencil2d(nx, ny, &off, 1.0)
+}
+
+/// The paper's artificial illustration stencil (Fig. 4): an asymmetric-looking
+/// but structurally symmetric 2D pattern whose BFS levels are "bent"
+/// diagonals, giving the level structure shown in Fig. 5. The exact paper
+/// pattern is not fully specified; this pattern reproduces the *relevant*
+/// property (N_ell ≈ 2·nx − 2 levels on an nx × nx grid with non-trivial
+/// level widths).
+pub fn race_paper_stencil(nx: usize, ny: usize) -> Csr {
+    stencil2d(
+        nx,
+        ny,
+        &[
+            (-1, 0, -1.0),
+            (1, 0, -1.0),
+            (0, -1, -1.0),
+            (0, 1, -1.0),
+            (1, 1, -0.5),
+            (-1, -1, -0.5),
+        ],
+        2.0,
+    )
+}
+
+/// Generic 3D stencil on `nx x ny x nz` with Dirichlet boundaries.
+pub fn stencil3d(nx: usize, ny: usize, nz: usize, offsets: &[(i64, i64, i64, f64)]) -> Csr {
+    let n = nx * ny * nz;
+    let mut coo = Coo::new(n);
+    for k in 0..nz as i64 {
+        for j in 0..ny as i64 {
+            for i in 0..nx as i64 {
+                let row = ((k * ny as i64 + j) * nx as i64 + i) as usize;
+                let mut offdiag_sum = 0.0;
+                for &(di, dj, dk, v) in offsets {
+                    let (ii, jj, kk) = (i + di, j + dj, k + dk);
+                    if ii >= 0
+                        && ii < nx as i64
+                        && jj >= 0
+                        && jj < ny as i64
+                        && kk >= 0
+                        && kk < nz as i64
+                    {
+                        let col = ((kk * ny as i64 + jj) * nx as i64 + ii) as usize;
+                        coo.push(row, col, v);
+                        offdiag_sum += v;
+                    }
+                }
+                coo.push(row, row, 1.0 - offdiag_sum);
+            }
+        }
+    }
+    coo.to_csr()
+}
+
+/// 7-point 3D Laplacian.
+pub fn stencil3d_7pt(nx: usize, ny: usize, nz: usize) -> Csr {
+    stencil3d(
+        nx,
+        ny,
+        nz,
+        &[
+            (-1, 0, 0, -1.0),
+            (1, 0, 0, -1.0),
+            (0, -1, 0, -1.0),
+            (0, 1, 0, -1.0),
+            (0, 0, -1, -1.0),
+            (0, 0, 1, -1.0),
+        ],
+    )
+}
+
+/// 27-point 3D stencil — the HPCG matrix (paper index 25, `HPCG-192`).
+pub fn stencil3d_27pt(nx: usize, ny: usize, nz: usize) -> Csr {
+    let mut off = Vec::new();
+    for dk in -1i64..=1 {
+        for dj in -1i64..=1 {
+            for di in -1i64..=1 {
+                if di != 0 || dj != 0 || dk != 0 {
+                    off.push((di, dj, dk, -1.0));
+                }
+            }
+        }
+    }
+    stencil3d(nx, ny, nz, &off)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stencil5_structure() {
+        let a = stencil2d_5pt(8, 8);
+        assert_eq!(a.nrows(), 64);
+        assert!(a.is_symmetric());
+        assert_eq!(a.bandwidth(), 8);
+        // interior point has 5 entries
+        let (cols, _) = a.row(8 + 3); // row (i=3, j=1): interior in x, j=1 interior
+        assert_eq!(cols.len(), 5);
+    }
+
+    #[test]
+    fn stencil9_and_paper_symmetric() {
+        assert!(stencil2d_9pt(7, 5).is_symmetric());
+        assert!(race_paper_stencil(8, 8).is_symmetric());
+    }
+
+    #[test]
+    fn hpcg_interior_has_27() {
+        let a = stencil3d_27pt(5, 5, 5);
+        assert!(a.is_symmetric());
+        let center = (2 * 5 + 2) * 5 + 2;
+        assert_eq!(a.row(center).0.len(), 27);
+    }
+
+    #[test]
+    fn row_sums_are_diag_shift() {
+        let a = stencil2d_5pt(10, 10);
+        for r in 0..a.nrows() {
+            let s: f64 = a.row(r).1.iter().sum();
+            assert!((s - 1.0).abs() < 1e-12);
+        }
+    }
+}

@@ -1,0 +1,236 @@
+//! Graph algorithms on the undirected graph of a symmetric sparse matrix:
+//! BFS level construction (paper Algorithm 3), pseudo-peripheral root
+//! finding, and (reverse) Cuthill–McKee bandwidth reduction — the paper's
+//! "level construction" preprocessing (§4.1) and the SpMP-RCM substitute.
+
+use crate::sparse::Csr;
+
+/// BFS levels from `root`, visiting only vertices reachable from `root`.
+/// Returns `dist[v]` = BFS distance from root, or `u32::MAX` if unreached.
+pub fn bfs_distances(a: &Csr, root: usize) -> Vec<u32> {
+    let mut dist = vec![u32::MAX; a.nrows()];
+    let mut frontier = vec![root as u32];
+    dist[root] = 0;
+    let mut lvl = 0u32;
+    while !frontier.is_empty() {
+        lvl += 1;
+        let mut next = Vec::new();
+        for &u in &frontier {
+            let (cols, _) = a.row(u as usize);
+            for &c in cols {
+                let c = c as usize;
+                if dist[c] == u32::MAX {
+                    dist[c] = lvl;
+                    next.push(c as u32);
+                }
+            }
+        }
+        frontier = next;
+    }
+    dist
+}
+
+/// Level sets computed over the *whole* matrix, handling disconnected
+/// components ("islands", §4.4.1): each new island's first level starts
+/// two levels after the previous island's last level, so islands never
+/// share a level and both colors remain usable independently.
+///
+/// Returns `(levels, nlevels)` where `levels[v]` is the level index.
+pub fn bfs_levels_all(a: &Csr, first_root: usize) -> (Vec<u32>, usize) {
+    let n = a.nrows();
+    let mut level = vec![u32::MAX; n];
+    let mut base = 0u32;
+    let mut root = Some(first_root);
+    let mut max_level = 0u32;
+    let mut visited = 0usize;
+    while visited < n {
+        let r = match root.take() {
+            Some(r) if level[r] == u32::MAX => r,
+            _ => (0..n).find(|&v| level[v] == u32::MAX).unwrap(),
+        };
+        let dist = bfs_distances(a, r);
+        let mut comp_max = 0u32;
+        for (v, &d) in dist.iter().enumerate() {
+            if d != u32::MAX && level[v] == u32::MAX {
+                level[v] = base + d;
+                comp_max = comp_max.max(base + d);
+                visited += 1;
+            }
+        }
+        max_level = max_level.max(comp_max);
+        // islands: next component starts with a level increment of two
+        // (paper §4.4.1), keeping island levels color-independent.
+        base = comp_max + 2;
+    }
+    (level, max_level as usize + 1)
+}
+
+/// Find a pseudo-peripheral vertex: repeated BFS from the farthest vertex
+/// of the previous sweep until eccentricity stops growing (George–Liu).
+/// Operates on the component containing `start`.
+pub fn pseudo_peripheral(a: &Csr, start: usize) -> usize {
+    let mut root = start;
+    let mut ecc = 0u32;
+    loop {
+        let dist = bfs_distances(a, root);
+        let (far, &fd) = dist
+            .iter()
+            .enumerate()
+            .filter(|(_, &d)| d != u32::MAX)
+            .max_by_key(|(v, &d)| (d, usize::MAX - *v))
+            .unwrap();
+        if fd <= ecc {
+            return root;
+        }
+        ecc = fd;
+        root = far;
+    }
+}
+
+/// Cuthill–McKee ordering (per component, pseudo-peripheral roots),
+/// reversed. Returns `perm[old] = new` suitable for
+/// [`Csr::permute_symmetric`].
+pub fn rcm(a: &Csr) -> Vec<u32> {
+    let n = a.nrows();
+    let mut order: Vec<u32> = Vec::with_capacity(n); // order[k] = old index visited k-th
+    let mut seen = vec![false; n];
+    let deg = |v: usize| a.row_ptr[v + 1] - a.row_ptr[v];
+    for start in 0..n {
+        if seen[start] {
+            continue;
+        }
+        let root = pseudo_peripheral(a, start);
+        // classic CM BFS with degree-sorted neighbour insertion
+        let mut queue = std::collections::VecDeque::new();
+        queue.push_back(root as u32);
+        seen[root] = true;
+        while let Some(u) = queue.pop_front() {
+            order.push(u);
+            let (cols, _) = a.row(u as usize);
+            let mut nbrs: Vec<u32> =
+                cols.iter().copied().filter(|&c| !seen[c as usize]).collect();
+            for &c in &nbrs {
+                seen[c as usize] = true;
+            }
+            nbrs.sort_unstable_by_key(|&c| (deg(c as usize), c));
+            for c in nbrs {
+                queue.push_back(c);
+            }
+        }
+    }
+    // reverse, then invert into perm[old] = new
+    order.reverse();
+    let mut perm = vec![0u32; n];
+    for (new, &old) in order.iter().enumerate() {
+        perm[old as usize] = new as u32;
+    }
+    perm
+}
+
+/// Identity permutation.
+pub fn identity_perm(n: usize) -> Vec<u32> {
+    (0..n as u32).collect()
+}
+
+/// Compose permutations: apply `first`, then `second` (both `old -> new`).
+pub fn compose_perm(first: &[u32], second: &[u32]) -> Vec<u32> {
+    first.iter().map(|&m| second[m as usize]).collect()
+}
+
+/// Check that `perm` is a bijection on [0, n).
+pub fn is_permutation(perm: &[u32]) -> bool {
+    let mut seen = vec![false; perm.len()];
+    for &p in perm {
+        let p = p as usize;
+        if p >= perm.len() || seen[p] {
+            return false;
+        }
+        seen[p] = true;
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen;
+
+    #[test]
+    fn bfs_distances_on_path() {
+        // path graph 0-1-2-3 as tridiagonal matrix
+        let a = gen::stencil2d_5pt(4, 1);
+        let d = bfs_distances(&a, 0);
+        assert_eq!(d, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn bfs_levels_cover_everything() {
+        let a = gen::stencil2d_5pt(8, 8);
+        let (levels, nl) = bfs_levels_all(&a, 0);
+        assert!(levels.iter().all(|&l| l != u32::MAX));
+        assert_eq!(nl, 15); // anti-diagonals of an 8x8 5-pt grid
+        // level sizes sum to N
+        let mut counts = vec![0usize; nl];
+        for &l in &levels {
+            counts[l as usize] += 1;
+        }
+        assert_eq!(counts.iter().sum::<usize>(), 64);
+    }
+
+    #[test]
+    fn islands_get_level_gap() {
+        // two disconnected 2-paths: 0-1, 2-3
+        let mut coo = crate::sparse::Coo::new(4);
+        coo.push_sym(0, 1, 1.0);
+        coo.push_sym(2, 3, 1.0);
+        for i in 0..4 {
+            coo.push(i, i, 1.0);
+        }
+        let a = coo.to_csr();
+        let (levels, _) = bfs_levels_all(&a, 0);
+        // island 2 starts two levels after island 1's max (levels 0,1 -> 3,4)
+        assert_eq!(levels[0], 0);
+        assert_eq!(levels[1], 1);
+        assert_eq!(levels[2], 3);
+        assert_eq!(levels[3], 4);
+    }
+
+    #[test]
+    fn rcm_reduces_bandwidth() {
+        let a = gen::delaunay_like(20, 20, 7);
+        let bw0 = a.bandwidth();
+        let perm = rcm(&a);
+        assert!(is_permutation(&perm));
+        let b = a.permute_symmetric(&perm);
+        assert!(b.bandwidth() < bw0, "rcm: {} -> {}", bw0, b.bandwidth());
+        assert!(b.is_symmetric());
+    }
+
+    #[test]
+    fn rcm_handles_disconnected() {
+        let mut coo = crate::sparse::Coo::new(6);
+        coo.push_sym(0, 5, 1.0);
+        coo.push_sym(1, 3, 1.0);
+        for i in 0..6 {
+            coo.push(i, i, 1.0);
+        }
+        let a = coo.to_csr();
+        let perm = rcm(&a);
+        assert!(is_permutation(&perm));
+    }
+
+    #[test]
+    fn pseudo_peripheral_on_path_is_endpoint() {
+        let a = gen::stencil2d_5pt(10, 1);
+        let p = pseudo_peripheral(&a, 5);
+        assert!(p == 0 || p == 9, "got {p}");
+    }
+
+    #[test]
+    fn compose_and_identity() {
+        let id = identity_perm(5);
+        let p = vec![4u32, 3, 2, 1, 0];
+        assert_eq!(compose_perm(&id, &p), p);
+        assert_eq!(compose_perm(&p, &p), id);
+    }
+}

@@ -1,0 +1,292 @@
+//! Parallel SymmSpMV executors.
+//!
+//! All executors compute `b = A x` from upper-triangle storage. Safety of
+//! the unsynchronized concurrent writes in the RACE and coloring executors
+//! rests on the distance-2 independence of concurrently executed row
+//! ranges, which is established (and property-tested) by the scheduling
+//! layers; the lock-based and private-array executors need no such
+//! guarantee and serve as baselines.
+
+use super::symmspmv_range;
+use crate::color::ColorSchedule;
+use crate::race::RaceEngine;
+use crate::sparse::Csr;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Shared mutable pointer wrapper for scoped-thread executors. The
+/// scheduling layer guarantees disjoint (or race-free) writes.
+#[derive(Clone, Copy)]
+pub struct SendPtr(pub *mut f64);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+/// RACE executor: recursive fork-join over the engine's tree (Fig. 13/14
+/// execution order). Children of the same color run concurrently; a scope
+/// join is the (local or global) synchronization between colors. `b` must
+/// be zeroed by the caller.
+pub fn symmspmv_race(eng: &RaceEngine, upper: &Csr, x: &[f64], b: &mut [f64]) {
+    assert_eq!(upper.nrows(), x.len());
+    assert_eq!(upper.nrows(), b.len());
+    let bp = SendPtr(b.as_mut_ptr());
+    exec_node(eng, 0, upper, x, bp, b.len());
+}
+
+fn exec_node(eng: &RaceEngine, id: usize, upper: &Csr, x: &[f64], bp: SendPtr, n: usize) {
+    let node = &eng.tree[id];
+    if node.children.is_empty() {
+        // SAFETY: concurrently executed leaves are distance-k independent:
+        // their written index sets (own rows + upper partners) are disjoint.
+        let b = unsafe { std::slice::from_raw_parts_mut(bp.0, n) };
+        symmspmv_range(upper, x, b, node.start as usize, node.end as usize);
+        return;
+    }
+    for color in 0..2u8 {
+        let kids: Vec<u32> = node
+            .children
+            .iter()
+            .copied()
+            .filter(|&c| eng.tree[c as usize].color == color)
+            .collect();
+        if kids.is_empty() {
+            continue;
+        }
+        if kids.len() == 1 {
+            exec_node(eng, kids[0] as usize, upper, x, bp, n);
+        } else {
+            std::thread::scope(|s| {
+                for &kid in &kids[1..] {
+                    s.spawn(move || exec_node(eng, kid as usize, upper, x, bp, n));
+                }
+                exec_node(eng, kids[0] as usize, upper, x, bp, n);
+            }); // scope join == color synchronization
+        }
+    }
+}
+
+/// MC/ABMC executor: phases in order, work units of a phase concurrently.
+/// For splittable schedules (MC) each unit is additionally chunked into
+/// `threads` pieces. `b` must be zeroed by the caller.
+pub fn symmspmv_color(
+    sched: &ColorSchedule,
+    upper: &Csr,
+    x: &[f64],
+    b: &mut [f64],
+    threads: usize,
+) {
+    assert_eq!(upper.nrows(), x.len());
+    assert_eq!(upper.nrows(), b.len());
+    let n = b.len();
+    let bp = SendPtr(b.as_mut_ptr());
+    for units in &sched.phases {
+        // build the work list for this phase
+        let work: Vec<(u32, u32)> = if sched.splittable {
+            let mut w = Vec::new();
+            for &(s, e) in units {
+                let rows = (e - s) as usize;
+                let chunk = rows.div_ceil(threads.max(1)).max(1);
+                let mut at = s;
+                while at < e {
+                    let hi = (at + chunk as u32).min(e);
+                    w.push((at, hi));
+                    at = hi;
+                }
+            }
+            w
+        } else {
+            units.clone()
+        };
+        if work.len() == 1 {
+            let b = unsafe { std::slice::from_raw_parts_mut(bp.0, n) };
+            symmspmv_range(upper, x, b, work[0].0 as usize, work[0].1 as usize);
+            continue;
+        }
+        // round-robin work units over `threads` workers
+        std::thread::scope(|s| {
+            for t in 0..threads.min(work.len()) {
+                let work = &work;
+                s.spawn(move || {
+                    let bp = bp; // capture the whole SendPtr, not the raw field
+                    let b = unsafe { std::slice::from_raw_parts_mut(bp.0, n) };
+                    let mut i = t;
+                    while i < work.len() {
+                        let (lo, hi) = work[i];
+                        // SAFETY: units within a phase are distance-2
+                        // independent (schedule verified at build time).
+                        symmspmv_range(upper, x, b, lo as usize, hi as usize);
+                        i += threads;
+                    }
+                });
+            }
+        }); // phase barrier
+    }
+}
+
+/// Lock-free atomic-CAS baseline ("lock based methods" of §1): rows are
+/// block-distributed over threads; every update to `b` is a CAS loop on an
+/// atomic f64. Correct for any matrix, no coloring needed — but pays for
+/// every single update.
+pub fn symmspmv_locks(upper: &Csr, x: &[f64], b: &mut [f64], threads: usize) {
+    let n = upper.nrows();
+    assert_eq!(b.len(), n);
+    // reinterpret b as atomics (f64 bit-packed in u64)
+    let atomic: Vec<AtomicU64> = (0..n).map(|i| AtomicU64::new(b[i].to_bits())).collect();
+    let add = |slot: &AtomicU64, v: f64| {
+        let mut cur = slot.load(Ordering::Relaxed);
+        loop {
+            let new = (f64::from_bits(cur) + v).to_bits();
+            match slot.compare_exchange_weak(cur, new, Ordering::Relaxed, Ordering::Relaxed) {
+                Ok(_) => break,
+                Err(c) => cur = c,
+            }
+        }
+    };
+    let chunk = n.div_ceil(threads.max(1)).max(1);
+    std::thread::scope(|s| {
+        for t in 0..threads {
+            let atomic = &atomic;
+            s.spawn(move || {
+                let start = t * chunk;
+                let end = ((t + 1) * chunk).min(n);
+                for row in start..end {
+                    let lo = upper.row_ptr[row] as usize;
+                    let hi = upper.row_ptr[row + 1] as usize;
+                    let xr = x[row];
+                    let mut tmp = upper.val[lo] * xr;
+                    for idx in lo + 1..hi {
+                        let c = upper.col[idx] as usize;
+                        let v = upper.val[idx];
+                        tmp += v * x[c];
+                        add(&atomic[c], v * xr);
+                    }
+                    add(&atomic[row], tmp);
+                }
+            });
+        }
+    });
+    for (i, slot) in atomic.iter().enumerate() {
+        b[i] = f64::from_bits(slot.load(Ordering::Relaxed));
+    }
+}
+
+/// Thread-private target arrays baseline (§1): each thread scatters into
+/// its own copy of `b`, reduced at the end. Memory overhead grows with the
+/// thread count — the scalability problem the paper points out.
+pub fn symmspmv_private(upper: &Csr, x: &[f64], b: &mut [f64], threads: usize) {
+    let n = upper.nrows();
+    let chunk = n.div_ceil(threads.max(1)).max(1);
+    let mut privates: Vec<Vec<f64>> = Vec::with_capacity(threads);
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..threads)
+            .map(|t| {
+                s.spawn(move || {
+                    let mut mine = vec![0f64; n];
+                    let start = t * chunk;
+                    let end = ((t + 1) * chunk).min(n);
+                    if start < end {
+                        symmspmv_range(upper, x, &mut mine, start, end);
+                    }
+                    mine
+                })
+            })
+            .collect();
+        for h in handles {
+            privates.push(h.join().unwrap());
+        }
+    });
+    for p in &privates {
+        for i in 0..n {
+            b[i] += p[i];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::color::{abmc_schedule, mc_schedule};
+    use crate::gen;
+    use crate::kernels;
+    use crate::race::{RaceConfig, RaceEngine};
+    use crate::sparse::Csr;
+
+    fn reference(a: &Csr, x: &[f64]) -> Vec<f64> {
+        a.spmv_ref(x)
+    }
+
+    fn close(a: &[f64], b: &[f64]) {
+        for i in 0..a.len() {
+            assert!((a[i] - b[i]).abs() < 1e-9 * (1.0 + a[i].abs()), "idx {i}: {} vs {}", a[i], b[i]);
+        }
+    }
+
+    fn matrices() -> Vec<(&'static str, Csr)> {
+        vec![
+            ("stencil", gen::race_paper_stencil(16, 16)),
+            ("spin", gen::spin_chain_xxz(9, gen::SpinKind::XXZ)),
+            ("graphene", gen::graphene(9, 9)),
+            ("delaunay", gen::delaunay_like(13, 13, 8)),
+            ("band", gen::dense_band(300, 24, 250, 6)),
+        ]
+    }
+
+    #[test]
+    fn race_executor_matches_reference() {
+        for (name, a) in matrices() {
+            for threads in [1usize, 2, 5, 8] {
+                let cfg = RaceConfig { threads, dist: 2, ..Default::default() };
+                let eng = RaceEngine::build(&a, &cfg).unwrap();
+                let ap = eng.permuted_matrix();
+                let upper = ap.upper_triangle();
+                let x: Vec<f64> = (0..a.nrows()).map(|i| (i as f64 * 0.7).sin()).collect();
+                let want = reference(ap, &x);
+                let mut got = vec![0.0; a.nrows()];
+                kernels::symmspmv_race(&eng, &upper, &x, &mut got);
+                close(&want, &got);
+                let _ = name;
+            }
+        }
+    }
+
+    #[test]
+    fn mc_executor_matches_reference() {
+        for (_, a) in matrices() {
+            let s = mc_schedule(&a, 2);
+            let ap = a.permute_symmetric(&s.perm);
+            let upper = ap.upper_triangle();
+            let x: Vec<f64> = (0..a.nrows()).map(|i| (i % 13) as f64 - 6.0).collect();
+            let want = reference(&ap, &x);
+            let mut got = vec![0.0; a.nrows()];
+            kernels::symmspmv_color(&s, &upper, &x, &mut got, 4);
+            close(&want, &got);
+        }
+    }
+
+    #[test]
+    fn abmc_executor_matches_reference() {
+        for (_, a) in matrices() {
+            let s = abmc_schedule(&a, 24, 2);
+            let ap = a.permute_symmetric(&s.perm);
+            let upper = ap.upper_triangle();
+            let x: Vec<f64> = (0..a.nrows()).map(|i| ((i * 3) % 17) as f64).collect();
+            let want = reference(&ap, &x);
+            let mut got = vec![0.0; a.nrows()];
+            kernels::symmspmv_color(&s, &upper, &x, &mut got, 4);
+            close(&want, &got);
+        }
+    }
+
+    #[test]
+    fn locks_and_private_match_reference() {
+        let a = gen::spin_chain_xxz(8, gen::SpinKind::XXZ);
+        let upper = a.upper_triangle();
+        let x: Vec<f64> = (0..a.nrows()).map(|i| (i as f64).cos()).collect();
+        let want = reference(&a, &x);
+        for threads in [1usize, 3, 7] {
+            let mut got = vec![0.0; a.nrows()];
+            kernels::symmspmv_locks(&upper, &x, &mut got, threads);
+            close(&want, &got);
+            let mut got2 = vec![0.0; a.nrows()];
+            kernels::symmspmv_private(&upper, &x, &mut got2, threads);
+            close(&want, &got2);
+        }
+    }
+}

@@ -1,0 +1,63 @@
+//! # RACE — Recursive Algebraic Coloring Engine
+//!
+//! Reproduction of Alappat et al., *"A Recursive Algebraic Coloring Technique
+//! for Hardware-Efficient Symmetric Sparse Matrix-Vector Multiplication"*
+//! (ACM TOPC, DOI 10.1145/3399732).
+//!
+//! The library provides:
+//!
+//! * [`sparse`] — CSR sparse matrices, MatrixMarket I/O, symmetric permutation.
+//! * [`gen`] — matrix generators standing in for the paper's SuiteSparse /
+//!   ScaMaC corpus (stencils, quantum chains, graphene, Delaunay-like meshes).
+//! * [`graph`] — BFS level construction and RCM bandwidth reduction.
+//! * [`color`] — baseline multicoloring (MC) and algebraic block
+//!   multicoloring (ABMC) schemes the paper compares against.
+//! * [`partition`] — a locality-preserving graph partitioner (METIS
+//!   substitute) used by ABMC.
+//! * [`race`] — the paper's contribution: recursive level-group construction,
+//!   distance-k coloring, load balancing and the execution tree.
+//! * [`kernels`] — SpMV / SymmSpMV kernels and parallel executors driven by
+//!   RACE or coloring schedules, plus a CG solver.
+//! * [`cachesim`] — a multi-level LRU cache simulator (LIKWID substitute)
+//!   measuring α and bytes/nonzero traffic.
+//! * [`perfmodel`] — the roofline model of §3 (Eqs. 1–4).
+//! * [`machine`] — machine descriptions (Ivy Bridge EP, Skylake SP, host).
+//! * [`sim`] — a multicore execution simulator replaying real schedules
+//!   (substitute for the 10/20-core sockets; this host has one core).
+//! * [`runtime`] — PJRT/XLA artifact loading so AOT-compiled JAX/Pallas
+//!   kernels run from Rust with no Python on the request path.
+//! * [`coordinator`] — the pipeline driver used by the CLI, benches and
+//!   examples.
+//!
+//! ## Quickstart
+//!
+//! ```
+//! use race::gen;
+//! use race::race::{RaceEngine, RaceConfig};
+//! use race::kernels;
+//!
+//! // 2D 5-point Poisson matrix, 64x64 grid.
+//! let a = gen::stencil2d_5pt(64, 64);
+//! let engine = RaceEngine::build(&a, &RaceConfig { threads: 4, dist: 2, ..Default::default() }).unwrap();
+//! let upper = engine.permuted_matrix().upper_triangle();
+//! let x = vec![1.0; a.nrows()];
+//! let mut b = vec![0.0; a.nrows()];
+//! kernels::symmspmv_race(&engine, &upper, &x, &mut b);
+//! let b_ref = engine.permuted_matrix().spmv_ref(&x);
+//! for (u, v) in b.iter().zip(&b_ref) { assert!((u - v).abs() < 1e-9); }
+//! ```
+
+pub mod cachesim;
+pub mod color;
+pub mod coordinator;
+pub mod gen;
+pub mod graph;
+pub mod kernels;
+pub mod machine;
+pub mod partition;
+pub mod perfmodel;
+pub mod race;
+pub mod runtime;
+pub mod sim;
+pub mod sparse;
+pub mod util;

@@ -1,0 +1,257 @@
+//! `race-cli` — command-line driver for the RACE reproduction.
+//!
+//! Subcommands map to the paper's experiments (see DESIGN.md experiment
+//! index). Arg parsing is hand-rolled (offline environment has no clap).
+
+use anyhow::{bail, Result};
+use race::coordinator::{self, Method};
+use race::gen;
+use race::machine;
+use race::race::{format_tree, RaceConfig, RaceEngine};
+use race::sparse::MatrixStats;
+
+const USAGE: &str = "race-cli — RACE: recursive algebraic coloring engine (paper reproduction)
+
+USAGE:
+  race-cli machine [ivb|skx|host|all]
+      Print machine models (paper Table 1).
+  race-cli corpus [--table 2|3] [--small] [--machine skx] [--only NAME]
+      Corpus tables: Table 2 (matrix properties), Table 3 (alpha/intensity).
+  race-cli run --matrix SPEC [--method race|mc|abmc|serial|locks|private|spmv]
+               [--threads N] [--machine ivb|skx|host] [--small] [--json]
+      Full pipeline for one matrix (corpus name, generator spec like
+      stencil2d:64x64 / spin:12 / graphene:32x32, or a .mtx path).
+  race-cli explain [--stencil N] [--threads N] [--dist K] [--eps0 E]
+      Walk the paper's Fig. 4-14 construction on the artificial stencil.
+  race-cli serve --matrix SPEC [--threads N] [--addr HOST:PORT] [--small]
+      SymmSpMV-as-a-service over TCP (newline-delimited JSON).
+  race-cli xla [--name model]
+      Load + compile an AOT artifact from artifacts/.
+";
+
+/// Minimal flag parser: positionals + `--key value` + boolean `--key`.
+struct Args {
+    positional: Vec<String>,
+    flags: std::collections::HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Args {
+        let mut positional = Vec::new();
+        let mut flags = std::collections::HashMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    flags.insert(key.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    flags.insert(key.to_string(), "true".to_string());
+                    i += 1;
+                }
+            } else {
+                positional.push(a.clone());
+                i += 1;
+            }
+        }
+        Args { positional, flags }
+    }
+
+    fn get(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => Ok(v.parse()?),
+        }
+    }
+
+    fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => Ok(v.parse()?),
+        }
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    fn require(&self, key: &str) -> Result<String> {
+        self.flags.get(key).cloned().ok_or_else(|| anyhow::anyhow!("missing required --{key}"))
+    }
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() || argv[0] == "--help" || argv[0] == "-h" {
+        print!("{USAGE}");
+        return Ok(());
+    }
+    let cmd = argv[0].clone();
+    let args = Args::parse(&argv[1..]);
+    match cmd.as_str() {
+        "machine" => cmd_machine(&args),
+        "corpus" => cmd_corpus(&args),
+        "run" => cmd_run(&args),
+        "explain" => cmd_explain(&args),
+        "serve" => {
+            let matrix = args.require("matrix")?;
+            coordinator::serve(
+                &matrix,
+                args.get_usize("threads", 4)?,
+                &args.get("addr", "127.0.0.1:7777"),
+                args.has("small"),
+            )
+        }
+        "xla" => {
+            let name = args.get("name", "model");
+            let mut rt = race::runtime::XlaRuntime::cpu()?;
+            let path = race::runtime::artifacts_dir().join(format!("{name}.hlo.txt"));
+            rt.load_artifact(&name, &path)?;
+            println!("loaded + compiled {} on {}", path.display(), rt.platform());
+            Ok(())
+        }
+        other => {
+            eprint!("{USAGE}");
+            bail!("unknown subcommand {other:?}");
+        }
+    }
+}
+
+fn cmd_machine(args: &Args) -> Result<()> {
+    let which = args.positional.first().map(String::as_str).unwrap_or("all");
+    let list: Vec<machine::Machine> = match which {
+        "all" => vec![machine::ivb(), machine::skx(), machine::host(64)],
+        w => vec![machine::by_name(w).ok_or_else(|| anyhow::anyhow!("unknown machine {w}"))?],
+    };
+    println!(
+        "{:<6} {:>5} {:>10} {:>10} {:>9} {:>9} {:>10} {:>7}",
+        "name", "cores", "bwload", "bwcopy", "L2/core", "L3", "eff.cache", "victim"
+    );
+    for m in list {
+        println!(
+            "{:<6} {:>5} {:>8.1}GB {:>8.1}GB {:>7}KB {:>7}MB {:>8}MB {:>7}",
+            m.name,
+            m.cores,
+            m.bw_load / 1e9,
+            m.bw_copy / 1e9,
+            m.l2 / 1024,
+            m.l3 / (1 << 20),
+            m.effective_cache() / (1 << 20),
+            m.l3_victim
+        );
+    }
+    Ok(())
+}
+
+fn cmd_corpus(args: &Args) -> Result<()> {
+    let table = args.get_usize("table", 2)?;
+    let small = args.has("small");
+    let mach = args.get("machine", "skx");
+    let only = args.flags.get("only").cloned();
+    let m = machine::by_name(&mach).ok_or_else(|| anyhow::anyhow!("unknown machine {mach}"))?;
+    if table == 2 {
+        println!(
+            "{:>3} {:<26} {:>9} {:>10} {:>7} {:>8} {:>8}",
+            "idx", "matrix", "N_r", "N_nz", "N_nzr", "bw", "bw_rcm"
+        );
+    } else {
+        println!(
+            "{:>3} {:<26} {:>9} {:>9} {:>9} {:>9}",
+            "idx", "matrix", "a_opt", "I_opt", "a_meas", "bytes/nnz"
+        );
+    }
+    for e in gen::corpus() {
+        if let Some(f) = &only {
+            if !e.name.eq_ignore_ascii_case(f) {
+                continue;
+            }
+        }
+        let a = (e.build)(small);
+        let s = MatrixStats::compute(e.name, &a);
+        if table == 2 {
+            println!(
+                "{:>3} {:<26} {:>9} {:>10} {:>7.2} {:>8} {:>8}",
+                e.index, e.name, s.nrows, s.nnz, s.nnzr, s.bw, s.bw_rcm
+            );
+        } else {
+            let perm = race::graph::rcm(&a);
+            let arc = a.permute_symmetric(&perm);
+            let tr = race::cachesim::measure_spmv_traffic(&arc, &m);
+            let aopt = race::perfmodel::alpha_opt_spmv(s.nnzr);
+            println!(
+                "{:>3} {:<26} {:>9.4} {:>9.4} {:>9.4} {:>9.2}",
+                e.index,
+                e.name,
+                aopt,
+                race::perfmodel::intensity_spmv(aopt, s.nnzr),
+                tr.alpha,
+                tr.bytes_per_nnz_full
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let matrix = args.require("matrix")?;
+    let mach = args.get("machine", "skx");
+    let m = machine::by_name(&mach).ok_or_else(|| anyhow::anyhow!("unknown machine {mach}"))?;
+    let method: Method = args.get("method", "race").parse()?;
+    let threads = args.get_usize("threads", 4)?;
+    let r = coordinator::run_pipeline(&matrix, method, threads, &m, args.has("small"))?;
+    if args.has("json") {
+        println!("{}", r.to_json().to_string());
+    } else {
+        println!("{} / {:?} on {} with {} threads:", r.matrix, method, r.machine, r.threads);
+        println!(
+            "  N_r={} N_nz={} N_nzr={:.2} bw_rcm={}",
+            r.stats.nrows, r.stats.nnz, r.stats.nnzr, r.stats.bw_rcm
+        );
+        println!(
+            "  eta={:.3}  traffic={:.2} B/nnz (alpha={:.4})",
+            r.eta, r.traffic.bytes_per_nnz_full, r.traffic.alpha
+        );
+        println!(
+            "  simulated {:.2} GF/s  (roofline copy {:.2} / load {:.2} GF/s)",
+            r.sim.gflops, r.roofline_copy_gfs, r.roofline_load_gfs
+        );
+        println!(
+            "  host wallclock {:.3} ms = {:.3} GF/s (1 core)",
+            r.host_seconds * 1e3,
+            r.host_gflops
+        );
+        println!("  max rel err vs reference: {:.2e}", r.max_rel_err);
+    }
+    Ok(())
+}
+
+fn cmd_explain(args: &Args) -> Result<()> {
+    let stencil = args.get_usize("stencil", 16)?;
+    let threads = args.get_usize("threads", 8)?;
+    let dist = args.get_usize("dist", 2)?;
+    let eps0 = args.get_f64("eps0", 0.6)?;
+    let a = gen::race_paper_stencil(stencil, stencil);
+    println!(
+        "artificial stencil {s}x{s} (paper Fig. 4): N_r={}, N_nz={}",
+        a.nrows(),
+        a.nnz(),
+        s = stencil
+    );
+    let cfg = RaceConfig { threads, dist, eps: vec![eps0, 0.5], ..Default::default() };
+    let eng = RaceEngine::build(&a, &cfg)?;
+    println!("levels at stage 0 (N_l): {}", eng.nlevels0);
+    let mut out = String::new();
+    format_tree(&eng.tree, 0, 0, &mut out);
+    println!("{out}");
+    println!(
+        "eta = {:.3}  N_t_eff = {:.2}  (paper Fig. 14 example: eta = 256/(44*8) = 0.73)",
+        eng.efficiency(),
+        eng.effective_threads()
+    );
+    Ok(())
+}

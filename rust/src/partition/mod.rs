@@ -1,0 +1,149 @@
+//! Locality-preserving graph partitioner — the METIS substitute used by
+//! ABMC (§3.3). ABMC only needs contiguous, locality-preserving blocks of
+//! roughly equal size; we produce them by slicing the BFS/RCM order into
+//! contiguous bands with nnz balancing, followed by a boundary-refinement
+//! pass that greedily moves boundary vertices to reduce edge cut.
+
+use crate::graph;
+use crate::sparse::Csr;
+
+/// Partition the vertices of `a` into `nparts` blocks of contiguous RCM
+/// order, balancing nonzeros. Returns `part[v] = block id`.
+pub fn partition_bands(a: &Csr, nparts: usize) -> Vec<u32> {
+    assert!(nparts >= 1);
+    let n = a.nrows();
+    let perm = graph::rcm(a); // perm[old] = new
+    // order[new] = old
+    let mut order = vec![0u32; n];
+    for (old, &new) in perm.iter().enumerate() {
+        order[new as usize] = old as u32;
+    }
+    let total_nnz = a.nnz() as f64;
+    let target = total_nnz / nparts as f64;
+    let mut part = vec![0u32; n];
+    let mut acc = 0f64;
+    let mut block = 0u32;
+    for &old in &order {
+        if acc >= target * (block as f64 + 1.0) && (block as usize) < nparts - 1 {
+            block += 1;
+        }
+        part[old as usize] = block;
+        acc += (a.row_ptr[old as usize + 1] - a.row_ptr[old as usize]) as f64;
+    }
+    refine_boundaries(a, &mut part, nparts);
+    part
+}
+
+/// One pass of greedy boundary refinement: move a vertex to the
+/// neighbouring block holding the majority of its neighbours, if doing so
+/// does not unbalance blocks by more than 20%.
+fn refine_boundaries(a: &Csr, part: &mut [u32], nparts: usize) {
+    let n = a.nrows();
+    let mut sizes = vec![0usize; nparts];
+    for &p in part.iter() {
+        sizes[p as usize] += 1;
+    }
+    let max_size = (n as f64 / nparts as f64 * 1.2) as usize + 1;
+    let mut counts = vec![0u32; nparts];
+    for v in 0..n {
+        let my = part[v] as usize;
+        let (cols, _) = a.row(v);
+        let mut touched: Vec<usize> = Vec::new();
+        for &c in cols {
+            let p = part[c as usize] as usize;
+            if counts[p] == 0 {
+                touched.push(p);
+            }
+            counts[p] += 1;
+        }
+        let mut best = my;
+        let mut best_cnt = counts[my];
+        for &p in &touched {
+            if counts[p] > best_cnt && sizes[p] < max_size && sizes[my] > 1 {
+                best = p;
+                best_cnt = counts[p];
+            }
+        }
+        if best != my {
+            part[v] = best as u32;
+            sizes[my] -= 1;
+            sizes[best] += 1;
+        }
+        for &p in &touched {
+            counts[p] = 0;
+        }
+    }
+}
+
+/// Edge cut of a partition (number of edges crossing blocks).
+pub fn edge_cut(a: &Csr, part: &[u32]) -> usize {
+    let mut cut = 0usize;
+    for v in 0..a.nrows() {
+        let (cols, _) = a.row(v);
+        for &c in cols {
+            if (c as usize) > v && part[c as usize] != part[v] {
+                cut += 1;
+            }
+        }
+    }
+    cut
+}
+
+/// Quotient graph: block-level adjacency (`nparts x nparts`, CSR-ish bool),
+/// used by ABMC to color blocks.
+pub fn quotient_graph(a: &Csr, part: &[u32], nparts: usize) -> Vec<Vec<u32>> {
+    let mut adj: Vec<std::collections::BTreeSet<u32>> =
+        vec![std::collections::BTreeSet::new(); nparts];
+    for v in 0..a.nrows() {
+        let pv = part[v];
+        let (cols, _) = a.row(v);
+        for &c in cols {
+            let pc = part[c as usize];
+            if pc != pv {
+                adj[pv as usize].insert(pc);
+            }
+        }
+    }
+    adj.into_iter().map(|s| s.into_iter().collect()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen;
+
+    #[test]
+    fn partition_covers_all_blocks() {
+        let a = gen::stencil2d_5pt(20, 20);
+        let part = partition_bands(&a, 8);
+        let mut sizes = vec![0usize; 8];
+        for &p in &part {
+            sizes[p as usize] += 1;
+        }
+        assert!(sizes.iter().all(|&s| s > 0), "sizes={sizes:?}");
+        let (min, max) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+        assert!(*max < 3 * *min, "imbalanced: {sizes:?}");
+    }
+
+    #[test]
+    fn band_partition_has_low_cut() {
+        let a = gen::stencil2d_5pt(24, 24);
+        let band = partition_bands(&a, 6);
+        // random partition for comparison
+        let mut rng = gen::XorShift64::new(9);
+        let rand_part: Vec<u32> = (0..a.nrows()).map(|_| rng.next_below(6) as u32).collect();
+        assert!(edge_cut(&a, &band) < edge_cut(&a, &rand_part) / 3);
+    }
+
+    #[test]
+    fn quotient_graph_is_symmetric() {
+        let a = gen::stencil2d_5pt(16, 16);
+        let part = partition_bands(&a, 5);
+        let q = quotient_graph(&a, &part, 5);
+        for (b, nbrs) in q.iter().enumerate() {
+            for &nb in nbrs {
+                assert!(q[nb as usize].contains(&(b as u32)));
+            }
+        }
+    }
+}

@@ -1,0 +1,150 @@
+//! Roofline performance model for SpMV and SymmSpMV (paper §3, Eqs. 1–4).
+//!
+//! All intensities are flops per byte of main-memory traffic for one
+//! average nonzero of the matrix; performance bounds follow from
+//! `P = I × b_s` (Eq. 1) with the machine's load-only and copy bandwidths
+//! as optimistic/realistic limits.
+
+use crate::machine::Machine;
+
+/// Computational intensity of CRS SpMV (Eq. 2):
+/// `I = 2 / (8 + 4 + 8α + 20/N_nzr)` flops/byte.
+pub fn intensity_spmv(alpha: f64, nnzr: f64) -> f64 {
+    2.0 / (8.0 + 4.0 + 8.0 * alpha + 20.0 / nnzr)
+}
+
+/// Optimal α for SpMV: the RHS vector is streamed exactly once, `α = 1/N_nzr`.
+pub fn alpha_opt_spmv(nnzr: f64) -> f64 {
+    1.0 / nnzr
+}
+
+/// `N_nzr^symm` (Eq. 4): average nonzeros per row of the upper triangle.
+pub fn nnzr_symm(nnzr: f64) -> f64 {
+    (nnzr - 1.0) / 2.0 + 1.0
+}
+
+/// Computational intensity of SymmSpMV (Eq. 3):
+/// `I = 4 / (8 + 4 + 24α + 4/N_nzr^symm)` flops/byte.
+pub fn intensity_symmspmv(alpha: f64, nnzr: f64) -> f64 {
+    4.0 / (8.0 + 4.0 + 24.0 * alpha + 4.0 / nnzr_symm(nnzr))
+}
+
+/// Optimal α for SymmSpMV: both vectors streamed once, `α = 1/N_nzr^symm`.
+pub fn alpha_opt_symmspmv(nnzr: f64) -> f64 {
+    1.0 / nnzr_symm(nnzr)
+}
+
+/// Roofline bound `P = I × b_s` (Eq. 1), flops/s.
+pub fn roofline(intensity: f64, bandwidth: f64) -> f64 {
+    intensity * bandwidth
+}
+
+/// The two-sided roofline window for a kernel on a machine.
+#[derive(Debug, Clone)]
+pub struct RooflineWindow {
+    /// Lower bound: copy bandwidth.
+    pub p_copy: f64,
+    /// Upper bound: load-only bandwidth.
+    pub p_load: f64,
+}
+
+/// SymmSpMV roofline window (the paper's RLM-copy / RLM-load lines,
+/// Fig. 18/19/20).
+pub fn symmspmv_window(machine: &Machine, alpha: f64, nnzr: f64) -> RooflineWindow {
+    let i = intensity_symmspmv(alpha, nnzr);
+    RooflineWindow { p_copy: roofline(i, machine.bw_copy), p_load: roofline(i, machine.bw_load) }
+}
+
+/// SpMV roofline window.
+pub fn spmv_window(machine: &Machine, alpha: f64, nnzr: f64) -> RooflineWindow {
+    let i = intensity_spmv(alpha, nnzr);
+    RooflineWindow { p_copy: roofline(i, machine.bw_copy), p_load: roofline(i, machine.bw_load) }
+}
+
+/// Bytes of main-memory traffic per nonzero implied by an α value — the
+/// denominator of Eq. 2/3; comparable with the cache-simulator measurement
+/// (Fig. 2/19 y-axis).
+pub fn bytes_per_nnz_spmv(alpha: f64, nnzr: f64) -> f64 {
+    8.0 + 4.0 + 8.0 * alpha + 20.0 / nnzr
+}
+
+/// Same for SymmSpMV, per nonzero of the *upper triangle*.
+pub fn bytes_per_nnz_symmspmv(alpha: f64, nnzr: f64) -> f64 {
+    8.0 + 4.0 + 24.0 * alpha + 4.0 / nnzr_symm(nnzr)
+}
+
+/// Invert the traffic measurement into α: given measured bytes per nonzero
+/// of the SpMV (full matrix), solve Eq. 2's denominator for α — this is
+/// how the paper extracts α_SpMV from LIKWID data (§3.3).
+pub fn alpha_from_traffic_spmv(bytes_per_nnz: f64, nnzr: f64) -> f64 {
+    ((bytes_per_nnz - 12.0 - 20.0 / nnzr) / 8.0).max(0.0)
+}
+
+/// Same inversion for SymmSpMV traffic.
+pub fn alpha_from_traffic_symmspmv(bytes_per_nnz: f64, nnzr: f64) -> f64 {
+    ((bytes_per_nnz - 12.0 - 4.0 / nnzr_symm(nnzr)) / 24.0).max(0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::machine;
+
+    #[test]
+    fn spin26_paper_numbers() {
+        // §3.3: Spin-26 (N_nzr = 14), measured α_SpMV = 0.351 (IVB) and
+        // 0.367 (SKX) from 16.24/16.36 bytes per nonzero.
+        let nnzr = 14.0;
+        let a_ivb = alpha_from_traffic_spmv(16.24, nnzr);
+        assert!((a_ivb - 0.351).abs() < 5e-3, "alpha={a_ivb}");
+        let a_skx = alpha_from_traffic_spmv(16.36, nnzr);
+        assert!((a_skx - 0.367).abs() < 5e-3, "alpha={a_skx}");
+
+        // P_SymmSpMV on IVB = 7.63..8.96 GF/s (copy..load window)
+        let w = symmspmv_window(&machine::ivb(), a_ivb, nnzr);
+        assert!((w.p_copy / 1e9 - 7.63).abs() < 0.15, "copy={}", w.p_copy / 1e9);
+        assert!((w.p_load / 1e9 - 8.96).abs() < 0.15, "load={}", w.p_load / 1e9);
+
+        // on SKX = 19.49..21.55 GF/s
+        let w = symmspmv_window(&machine::skx(), a_skx, nnzr);
+        assert!((w.p_copy / 1e9 - 19.49).abs() < 0.4, "copy={}", w.p_copy / 1e9);
+        assert!((w.p_load / 1e9 - 21.55).abs() < 0.4, "load={}", w.p_load / 1e9);
+    }
+
+    #[test]
+    fn table3_intensity_values() {
+        // Table 3 spot checks: optimal α and I_SpMV
+        // crankseg_1: N_nzr = 201.01, α_opt = 0.0050, I = 0.1648
+        let nnzr = 201.01;
+        assert!((alpha_opt_spmv(nnzr) - 0.0050).abs() < 1e-4);
+        assert!((intensity_spmv(alpha_opt_spmv(nnzr), nnzr) - 0.1648).abs() < 1e-3);
+        // G3_circuit: N_nzr = 4.83, α_opt = 0.2070, I = 0.1124
+        let nnzr = 4.83;
+        assert!((alpha_opt_spmv(nnzr) - 0.2070).abs() < 1e-3);
+        assert!((intensity_spmv(alpha_opt_spmv(nnzr), nnzr) - 0.1124).abs() < 1e-3);
+    }
+
+    #[test]
+    fn symm_speedup_bounded_by_two() {
+        // Eq. 2 vs Eq. 3: in the small-α limit the speedup approaches 2
+        for nnzr in [10.0, 50.0, 200.0] {
+            let s = intensity_symmspmv(0.0, nnzr) / intensity_spmv(0.0, nnzr);
+            assert!(s > 1.5 && s <= 2.35, "nnzr={nnzr} s={s}");
+        }
+        // with large α the advantage shrinks markedly (paper §3.2: the 24α
+        // prefactor makes SymmSpMV lose its edge for irregular access)
+        let lo = intensity_symmspmv(0.4, 7.0) / intensity_spmv(0.4, 7.0);
+        let hi = intensity_symmspmv(0.01, 7.0) / intensity_spmv(0.01, 7.0);
+        assert!(lo < hi - 0.2, "advantage must shrink with alpha: {lo} vs {hi}");
+    }
+
+    #[test]
+    fn traffic_inversion_roundtrip() {
+        for (alpha, nnzr) in [(0.05, 30.0), (0.2, 7.0), (0.4, 14.0)] {
+            let b = bytes_per_nnz_spmv(alpha, nnzr);
+            assert!((alpha_from_traffic_spmv(b, nnzr) - alpha).abs() < 1e-12);
+            let b = bytes_per_nnz_symmspmv(alpha, nnzr);
+            assert!((alpha_from_traffic_symmspmv(b, nnzr) - alpha).abs() < 1e-12);
+        }
+    }
+}

@@ -1,0 +1,195 @@
+//! Level aggregation into pairs of level groups with thread assignment
+//! (§4.4.3 steps 1–3).
+//!
+//! Levels are weighted by their share of the optimal per-thread load; we
+//! scan levels left to right, accumulating at least `2k` of them, until the
+//! combined weight is ε-close to a natural number `b` — that run of levels
+//! becomes a red/blue pair of level groups executed by `b` threads.
+
+/// One red/blue pair of level groups.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Pair {
+    /// First level of the red group.
+    pub level_start: u32,
+    /// First level of the blue group (initial split; load balancing moves it).
+    pub level_mid: u32,
+    /// One-past-last level of the blue group.
+    pub level_end: u32,
+    /// Threads assigned to each group of the pair (`b`).
+    pub threads: u32,
+}
+
+/// ε of a combined weight `a` (§4.4.3 step 2): closeness to the nearest
+/// positive natural number.
+fn epsilon(a: f64) -> (f64, u32) {
+    let b = a.round().max(1.0);
+    (1.0 - (a - b).abs(), b as u32)
+}
+
+/// Aggregate `level_load` (rows or nnz per level) into pairs. `total_load`
+/// is the sum of `level_load`; `threads` the thread budget; `k` the
+/// dependency distance (each group keeps ≥ k levels ⇒ a pair spans ≥ 2k);
+/// `eps_s` the acceptance threshold.
+pub fn aggregate_pairs(
+    level_load: &[f64],
+    total_load: f64,
+    threads: usize,
+    k: usize,
+    eps_s: f64,
+) -> Vec<Pair> {
+    let nl = level_load.len();
+    if nl < 2 * k || threads == 0 {
+        return Vec::new();
+    }
+    let opt_per_thread = total_load / threads as f64;
+    let weight = |l: usize| level_load[l] / opt_per_thread.max(1e-300);
+    let mut pairs: Vec<Pair> = Vec::new();
+    let mut pos = 0usize;
+    let mut threads_left = threads as i64;
+    while pos < nl && threads_left > 0 {
+        // accumulate at least 2k levels
+        let mut hi = (pos + 2 * k).min(nl);
+        let mut acc: f64 = (pos..hi).map(weight).sum();
+        let (mut best_eps, mut b) = epsilon(acc);
+        let mut best_hi = hi;
+        if best_eps <= eps_s || acc < 1.0 {
+            // keep extending until the criterion holds (or levels run out)
+            while hi < nl && (best_eps <= eps_s || acc + 1e-12 < 1.0) {
+                acc += weight(hi);
+                hi += 1;
+                let (e, bb) = epsilon(acc);
+                if e > best_eps || acc >= 1.0 && b == 0 {
+                    best_eps = e;
+                    b = bb;
+                    best_hi = hi;
+                }
+            }
+        }
+        // once b is fixed, try to extend further if it improves ε toward b
+        {
+            let mut probe_acc: f64 = (pos..best_hi).map(weight).sum();
+            let mut probe_hi = best_hi;
+            while probe_hi < nl {
+                probe_acc += weight(probe_hi);
+                probe_hi += 1;
+                let e = 1.0 - (probe_acc - b as f64).abs();
+                if e > best_eps {
+                    best_eps = e;
+                    best_hi = probe_hi;
+                } else if probe_acc > b as f64 + 0.5 {
+                    break;
+                }
+            }
+        }
+        hi = best_hi;
+        // remaining levels must either be empty or still allow one more pair
+        let remaining = nl - hi;
+        if remaining > 0 && remaining < 2 * k {
+            hi = nl; // absorb the tail: too few levels for another pair
+        }
+        let b = (b as i64).clamp(1, threads_left) as u32;
+        // initial red/blue split: half the levels each, at least k per side
+        let span = hi - pos;
+        let mid = (pos + span / 2).clamp(pos + k, hi - k);
+        pairs.push(Pair {
+            level_start: pos as u32,
+            level_mid: mid as u32,
+            level_end: hi as u32,
+            threads: b,
+        });
+        threads_left -= b as i64;
+        pos = hi;
+    }
+    // leftover levels (threads exhausted): absorb into the last pair
+    if pos < nl {
+        if let Some(last) = pairs.last_mut() {
+            last.level_end = nl as u32;
+            let span = (last.level_end - last.level_start) as usize;
+            let mid = last.level_start as usize + span / 2;
+            last.level_mid =
+                mid.clamp(last.level_start as usize + k, last.level_end as usize - k) as u32;
+        }
+    }
+    // leftover threads: give them to the heaviest pair so the recursion can
+    // exploit them (conserves Σ b = N_t).
+    if threads_left > 0 && !pairs.is_empty() {
+        let loads: Vec<f64> = pairs
+            .iter()
+            .map(|p| (p.level_start..p.level_end).map(|l| level_load[l as usize]).sum())
+            .collect();
+        let imax = loads
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap();
+        pairs[imax].threads += threads_left as u32;
+    }
+    pairs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn epsilon_behaviour() {
+        assert!((epsilon(1.0).0 - 1.0).abs() < 1e-12);
+        assert_eq!(epsilon(1.9).1, 2);
+        assert!((epsilon(0.875).0 - 0.875).abs() < 1e-12);
+        assert_eq!(epsilon(0.3).1, 1, "b = max(1, [a])");
+    }
+
+    #[test]
+    fn uniform_levels_exact_threads() {
+        // 16 levels, weight total = 4 threads: expect pairs summing to 4
+        let load = vec![10.0; 16];
+        let pairs = aggregate_pairs(&load, 160.0, 4, 2, 0.8);
+        assert!(!pairs.is_empty());
+        let sum: u32 = pairs.iter().map(|p| p.threads).sum();
+        assert_eq!(sum, 4, "{pairs:?}");
+        // pairs tile the level range
+        assert_eq!(pairs[0].level_start, 0);
+        assert_eq!(pairs.last().unwrap().level_end, 16);
+        for w in pairs.windows(2) {
+            assert_eq!(w[0].level_end, w[1].level_start);
+        }
+        for p in &pairs {
+            assert!(p.level_mid - p.level_start >= 2);
+            assert!(p.level_end - p.level_mid >= 2);
+        }
+    }
+
+    #[test]
+    fn too_few_levels_gives_nothing() {
+        let load = vec![5.0; 3];
+        assert!(aggregate_pairs(&load, 15.0, 4, 2, 0.8).is_empty());
+    }
+
+    #[test]
+    fn threads_conserved_various() {
+        for threads in [2usize, 3, 5, 8, 16] {
+            let load: Vec<f64> = (0..40).map(|i| 1.0 + (i % 7) as f64).collect();
+            let total = load.iter().sum();
+            let pairs = aggregate_pairs(&load, total, threads, 2, 0.8);
+            let sum: u32 = pairs.iter().map(|p| p.threads).sum();
+            assert_eq!(sum as usize, threads, "threads={threads} pairs={pairs:?}");
+        }
+    }
+
+    #[test]
+    fn lens_shape_gives_small_end_pairs_more_levels() {
+        // lens: tiny outer levels, fat middle (paper Fig. 8 situation)
+        let mut load = Vec::new();
+        for i in 0..20 {
+            let x = (i as f64 - 9.5).abs();
+            load.push(40.0 - 3.5 * x);
+        }
+        let total: f64 = load.iter().sum();
+        let pairs = aggregate_pairs(&load, total, 5, 2, 0.6);
+        assert!(pairs.len() >= 2);
+        let first_span = pairs[0].level_end - pairs[0].level_start;
+        // the first pair covers light levels: it should take > minimum span
+        assert!(first_span >= 4, "{pairs:?}");
+    }
+}

@@ -1,0 +1,199 @@
+//! Load balancing across level groups (§4.3, Algorithm 4).
+//!
+//! Given level loads and a `T_ptr` array of level-group boundaries
+//! (alternating red/blue groups) with per-group worker counts, iteratively
+//! shift single levels between groups to minimize the summed per-color
+//! variance of load-per-thread, while every group keeps at least `k`
+//! levels (preserving the distance-k guarantee).
+
+/// Balance `t_ptr` in place. `level_load[l]` is the load of level `l`;
+/// `t_ptr` has `len+1` entries delimiting `len` level groups; `workers[g]`
+/// is the thread count of group `g`; `k` the minimum levels per group.
+pub fn balance_level_groups(level_load: &[f64], t_ptr: &mut [u32], workers: &[u32], k: usize) {
+    let len = workers.len();
+    assert_eq!(t_ptr.len(), len + 1);
+    if len < 2 {
+        return;
+    }
+    let kmin = k.max(1) as u32;
+    let mut var = variance(level_load, t_ptr, workers);
+    // Iterate until no single-level shift lowers the overall variance.
+    // Each outer pass tries moves ranked by absolute deviation (Alg. 4).
+    for _pass in 0..4 * level_load.len().max(8) {
+        let (diff, _) = deviations(level_load, t_ptr, workers);
+        // rank groups by |deviation|, largest first
+        let mut rank: Vec<usize> = (0..len).collect();
+        rank.sort_by(|&a, &b| diff[b].abs().partial_cmp(&diff[a].abs()).unwrap());
+        let mut improved = false;
+        'outer: for &g in &rank {
+            // candidate moves: grow g from a neighbour side (if underloaded)
+            // or shrink g toward the most underloaded group (if overloaded).
+            let candidates: Vec<(usize, usize)> = if diff[g] < 0.0 {
+                // acquire one level from some donor group (size > k),
+                // preferring the most overloaded donor (Alg. 4 line 32).
+                let mut donors: Vec<usize> = (0..len)
+                    .filter(|&d| d != g && t_ptr[d + 1] - t_ptr[d] > kmin)
+                    .collect();
+                donors.sort_by(|&a, &b| diff[b].partial_cmp(&diff[a]).unwrap());
+                donors.into_iter().map(|d| (d, g)).collect()
+            } else {
+                // give one level away to the most underloaded acceptor
+                if t_ptr[g + 1] - t_ptr[g] <= kmin {
+                    continue;
+                }
+                let mut acceptors: Vec<usize> = (0..len).filter(|&d| d != g).collect();
+                acceptors.sort_by(|&a, &b| diff[a].partial_cmp(&diff[b]).unwrap());
+                acceptors.into_iter().map(|d| (g, d)).collect()
+            };
+            for (from, to) in candidates {
+                let mut trial = t_ptr.to_vec();
+                if !shift(&mut trial, from, to, kmin) {
+                    continue;
+                }
+                let v = variance(level_load, &trial, workers);
+                if v + 1e-12 < var {
+                    t_ptr.copy_from_slice(&trial);
+                    var = v;
+                    improved = true;
+                    continue 'outer;
+                }
+            }
+        }
+        if !improved {
+            break;
+        }
+    }
+}
+
+/// Move one level from group `from` toward group `to` by shifting the
+/// intermediate boundaries (Alg. 4 `shift`). Returns false if any group on
+/// the chain would drop below `kmin` levels.
+fn shift(t_ptr: &mut [u32], from: usize, to: usize, kmin: u32) -> bool {
+    if from == to {
+        return false;
+    }
+    if t_ptr[from + 1] - t_ptr[from] <= kmin {
+        return false;
+    }
+    if from < to {
+        // donate from the right edge of `from`: boundaries (from+1 ..= to)
+        // move left by one
+        for i in from + 1..=to {
+            if t_ptr[i] == 0 {
+                return false;
+            }
+            t_ptr[i] -= 1;
+        }
+    } else {
+        // donate from the left edge of `from`: boundaries (to+1 ..= from)
+        // move right by one
+        for i in to + 1..=from {
+            t_ptr[i] += 1;
+        }
+    }
+    // validate monotonicity and minimum sizes
+    for g in 0..t_ptr.len() - 1 {
+        if t_ptr[g + 1] < t_ptr[g] || t_ptr[g + 1] - t_ptr[g] < kmin {
+            return false;
+        }
+    }
+    true
+}
+
+/// Per-group deviation from the per-color mean of load-per-worker.
+fn deviations(level_load: &[f64], t_ptr: &[u32], workers: &[u32]) -> (Vec<f64>, f64) {
+    let len = workers.len();
+    let mut per_worker = vec![0f64; len];
+    for g in 0..len {
+        let s: f64 =
+            (t_ptr[g]..t_ptr[g + 1]).map(|l| level_load[l as usize]).sum();
+        per_worker[g] = s / workers[g].max(1) as f64;
+    }
+    let mut diff = vec![0f64; len];
+    let mut var = 0f64;
+    for color in 0..2 {
+        let idx: Vec<usize> = (color..len).step_by(2).collect();
+        let nw: f64 = idx.iter().map(|&g| workers[g] as f64).sum();
+        let mean =
+            idx.iter().map(|&g| per_worker[g] * workers[g] as f64).sum::<f64>() / nw.max(1.0);
+        for &g in &idx {
+            diff[g] = per_worker[g] - mean;
+            var += diff[g] * diff[g];
+        }
+    }
+    (diff, var)
+}
+
+/// Overall variance objective (sum over both colors).
+fn variance(level_load: &[f64], t_ptr: &[u32], workers: &[u32]) -> f64 {
+    deviations(level_load, t_ptr, workers).1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn balances_lens_distribution() {
+        // 17 levels like the paper's Fig. 7 walkthrough: light ends, fat
+        // middle, six groups, one worker each.
+        let load = vec![2.0, 3.0, 5.0, 8.0, 12.0, 15.0, 17.0, 18.0, 18.0, 17.0, 15.0, 12.0, 8.0, 5.0, 3.0, 2.0, 1.0];
+        let mut t_ptr = vec![0u32, 3, 6, 9, 12, 14, 17];
+        let workers = vec![1u32; 6];
+        let before = variance(&load, &t_ptr, &workers);
+        balance_level_groups(&load, &mut t_ptr, &workers, 2);
+        let after = variance(&load, &t_ptr, &workers);
+        assert!(after <= before, "variance must not increase: {before} -> {after}");
+        // constraints hold
+        for g in 0..6 {
+            assert!(t_ptr[g + 1] - t_ptr[g] >= 2, "group {g} lost distance-2: {t_ptr:?}");
+        }
+        assert_eq!(t_ptr[0], 0);
+        assert_eq!(t_ptr[6], 17);
+    }
+
+    #[test]
+    fn respects_min_levels() {
+        let load = vec![100.0, 1.0, 1.0, 1.0];
+        let mut t_ptr = vec![0u32, 2, 4];
+        let workers = vec![1u32, 1];
+        balance_level_groups(&load, &mut t_ptr, &workers, 2);
+        // nothing can move: both groups already at the k=2 minimum
+        assert_eq!(t_ptr, vec![0, 2, 4]);
+    }
+
+    #[test]
+    fn weighted_workers() {
+        // Two pairs: red groups 0 (3 workers) and 2 (1 worker), blue
+        // groups 1 (3 workers) and 3 (1 worker). Balanced per color when
+        // the 3-worker groups hold ~3x the rows of the 1-worker groups.
+        let load = vec![1.0; 16];
+        let mut t_ptr = vec![0u32, 4, 8, 12, 16];
+        let workers = vec![3u32, 3, 1, 1];
+        balance_level_groups(&load, &mut t_ptr, &workers, 2);
+        let size = |g: usize| (t_ptr[g + 1] - t_ptr[g]) as f64;
+        // per-worker loads must be closer than before (initial: 4/3 vs 4)
+        let red_ratio = (size(0) / 3.0 - size(2)).abs();
+        assert!(red_ratio < (4.0 / 3.0 - 4.0f64).abs(), "{t_ptr:?}");
+        assert!(size(0) > size(2), "3-worker group should hold more rows: {t_ptr:?}");
+    }
+
+    #[test]
+    fn single_pair_is_noop() {
+        // one red + one blue group run sequentially on the same threads:
+        // their split cannot change the critical path, and per-color
+        // variance is zero — Alg. 4 must leave the pair untouched.
+        let load = vec![9.0, 1.0, 1.0, 1.0, 1.0, 1.0];
+        let mut t_ptr = vec![0u32, 3, 6];
+        balance_level_groups(&load, &mut t_ptr, &[2, 2], 2);
+        assert_eq!(t_ptr, vec![0, 3, 6]);
+    }
+
+    #[test]
+    fn shift_chain_preserves_sizes_between() {
+        let mut t = vec![0u32, 4, 8, 12, 16];
+        assert!(shift(&mut t, 3, 0, 2));
+        // group 1 and 2 sizes unchanged, group 0 grew, group 3 shrank
+        assert_eq!(t, vec![0, 5, 9, 13, 16]);
+    }
+}

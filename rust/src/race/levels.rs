@@ -1,0 +1,209 @@
+//! Level construction on halo-extended subgraphs (§4.1, §4.4.2).
+//!
+//! For recursion stage s ≥ 1 with distance-k dependencies, two vertices of
+//! a level group can be distance-k neighbours *via vertices outside the
+//! group* (Fig. 11). Levels are therefore computed on the subgraph induced
+//! by the group **plus its distance-⌈k/2⌉ neighbourhood**; halo vertices
+//! participate in the BFS (so level gaps reflect true subgraph distances)
+//! but only in-group vertices are assigned to the returned levels.
+
+use crate::sparse::Csr;
+
+/// Result of subgraph level construction.
+pub struct SubgraphLevels {
+    /// `level[i]` = level of the i-th vertex of the input slice
+    /// (positional, not by vertex id).
+    pub level: Vec<u32>,
+    /// Total number of levels (including levels that ended up empty after
+    /// dropping halo vertices — gaps carry distance information).
+    pub nlevels: usize,
+}
+
+/// Compute BFS levels for the vertices in `group` (original vertex ids) on
+/// the subgraph `group ∪ N^halo(group)` of `a`. Disconnected islands are
+/// assigned level bases offset by +2 (§4.4.1) so their colors remain
+/// independent.
+pub fn subgraph_levels(a: &Csr, group: &[u32], halo: usize) -> SubgraphLevels {
+    let n = a.nrows();
+    let g = group.len();
+    // membership: pos+1 for in-group (so 0 = not in group), and a halo flag
+    let mut pos_of = vec![0u32; n];
+    for (i, &v) in group.iter().enumerate() {
+        pos_of[v as usize] = i as u32 + 1;
+    }
+    // halo set: vertices within `halo` hops of the group but outside it
+    let mut in_sub = vec![false; n];
+    for &v in group {
+        in_sub[v as usize] = true;
+    }
+    if halo > 0 {
+        let mut frontier: Vec<u32> = group.to_vec();
+        let mut hdist = vec![0u8; n];
+        for d in 1..=halo {
+            let mut next = Vec::new();
+            for &u in &frontier {
+                let (cols, _) = a.row(u as usize);
+                for &c in cols {
+                    if !in_sub[c as usize] && hdist[c as usize] == 0 && pos_of[c as usize] == 0 {
+                        hdist[c as usize] = d as u8;
+                        in_sub[c as usize] = true;
+                        next.push(c);
+                    }
+                }
+            }
+            frontier = next;
+        }
+    }
+    // BFS over the subgraph, islands get +2 level offsets
+    let mut level_of = vec![u32::MAX; n]; // subgraph-wide levels (incl. halo)
+    let mut out = vec![u32::MAX; g];
+    let mut base = 0u32;
+    let mut max_level = 0i64;
+    let mut assigned = 0usize;
+    let mut scan = 0usize; // scan position over `group` for island roots
+    while assigned < g {
+        // next unvisited in-group vertex is the island root; refine it to a
+        // pseudo-peripheral vertex of its island for longer level structures
+        while pos_of[group[scan] as usize] == 0 || out[(pos_of[group[scan] as usize] - 1) as usize] != u32::MAX
+        {
+            scan += 1;
+        }
+        let root = pseudo_peripheral_sub(a, &in_sub, group[scan] as usize);
+        // BFS from root across the subgraph
+        let mut frontier = vec![root as u32];
+        level_of[root] = 0;
+        let mut lvl = 0u32;
+        let mut island_max = 0u32;
+        while !frontier.is_empty() {
+            for &u in &frontier {
+                let p = pos_of[u as usize];
+                if p != 0 && out[(p - 1) as usize] == u32::MAX {
+                    out[(p - 1) as usize] = base + lvl;
+                    assigned += 1;
+                    island_max = island_max.max(base + lvl);
+                }
+            }
+            lvl += 1;
+            let mut next = Vec::new();
+            for &u in &frontier {
+                let (cols, _) = a.row(u as usize);
+                for &c in cols {
+                    if in_sub[c as usize] && level_of[c as usize] == u32::MAX {
+                        level_of[c as usize] = lvl;
+                        next.push(c);
+                    }
+                }
+            }
+            frontier = next;
+        }
+        max_level = max_level.max(island_max as i64);
+        base = island_max + 2;
+    }
+    SubgraphLevels { level: out, nlevels: max_level as usize + 1 }
+}
+
+/// Pseudo-peripheral vertex restricted to the subgraph `in_sub`.
+fn pseudo_peripheral_sub(a: &Csr, in_sub: &[bool], start: usize) -> usize {
+    let mut root = start;
+    let mut ecc = 0u32;
+    let mut dist = vec![u32::MAX; a.nrows()];
+    loop {
+        for d in dist.iter_mut() {
+            *d = u32::MAX;
+        }
+        dist[root] = 0;
+        let mut frontier = vec![root as u32];
+        let mut far = root;
+        let mut fd = 0u32;
+        let mut lvl = 0u32;
+        while !frontier.is_empty() {
+            lvl += 1;
+            let mut next = Vec::new();
+            for &u in &frontier {
+                let (cols, _) = a.row(u as usize);
+                for &c in cols {
+                    if in_sub[c as usize] && dist[c as usize] == u32::MAX {
+                        dist[c as usize] = lvl;
+                        if lvl > fd {
+                            fd = lvl;
+                            far = c as usize;
+                        }
+                        next.push(c);
+                    }
+                }
+            }
+            frontier = next;
+        }
+        if fd <= ecc {
+            return root;
+        }
+        ecc = fd;
+        root = far;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen;
+
+    #[test]
+    fn full_graph_levels_match_bfs() {
+        let a = gen::stencil2d_5pt(8, 8);
+        let group: Vec<u32> = (0..64).collect();
+        let lv = subgraph_levels(&a, &group, 0);
+        assert_eq!(lv.nlevels, 15);
+        assert!(lv.level.iter().all(|&l| (l as usize) < lv.nlevels));
+    }
+
+    #[test]
+    fn halo_preserves_gap_levels() {
+        // path 0-1-2-3-4; group = {0, 2, 4}; halo 1 brings in 1 and 3.
+        // On the halo subgraph, 0,2,4 sit at BFS distances 0,2,4 from an
+        // endpoint: the empty levels 1,3 must be preserved.
+        let mut coo = crate::sparse::Coo::new(5);
+        for i in 0..4 {
+            coo.push_sym(i, i + 1, 1.0);
+        }
+        for i in 0..5 {
+            coo.push(i, i, 1.0);
+        }
+        let a = coo.to_csr();
+        let lv = subgraph_levels(&a, &[0, 2, 4], 1);
+        assert_eq!(lv.nlevels, 5);
+        let mut lvls = lv.level.clone();
+        lvls.sort_unstable();
+        assert_eq!(lvls, vec![0, 2, 4]);
+    }
+
+    #[test]
+    fn without_halo_islands_split() {
+        // same path, group {0,2,4}, halo 0: three isolated vertices — each
+        // becomes an island with +2 level offsets.
+        let mut coo = crate::sparse::Coo::new(5);
+        for i in 0..4 {
+            coo.push_sym(i, i + 1, 1.0);
+        }
+        for i in 0..5 {
+            coo.push(i, i, 1.0);
+        }
+        let a = coo.to_csr();
+        let lv = subgraph_levels(&a, &[0, 2, 4], 0);
+        let mut lvls = lv.level.clone();
+        lvls.sort_unstable();
+        assert_eq!(lvls, vec![0, 2, 4], "islands offset by 2");
+    }
+
+    #[test]
+    fn levels_positional_indexing() {
+        // group given in scrambled order: output must be positional
+        let a = gen::stencil2d_5pt(4, 1); // path of 4
+        let lv = subgraph_levels(&a, &[3, 0, 1, 2], 0);
+        // root is pseudo-peripheral (0 or 3); distances consistent
+        let l = &lv.level;
+        assert_eq!(lv.nlevels, 4);
+        // positions: group[0]=3, group[1]=0 ... check adjacency differences
+        assert_eq!((l[0] as i64 - l[3] as i64).abs(), 1); // vertices 3 and 2
+        assert_eq!((l[1] as i64 - l[2] as i64).abs(), 1); // vertices 0 and 1
+    }
+}

@@ -1,0 +1,380 @@
+//! RACE — the recursive algebraic coloring engine (paper §4–§5).
+//!
+//! The engine turns a symmetric sparse matrix into
+//!
+//! 1. a symmetric permutation that orders rows by recursive level groups
+//!    (high data locality), and
+//! 2. an execution **tree** ([`tree::TreeNode`]): every node is a level
+//!    group with a color (red/blue) and a thread count; same-color siblings
+//!    are mutually distance-k independent and run concurrently, and a node
+//!    with more than one thread is recursively refined (§4.4).
+//!
+//! The construction follows the paper's three steps — level construction
+//! (§4.1, Algorithm 3), distance-k coloring by level aggregation (§4.2,
+//! §4.4.3), and load balancing (§4.3, Algorithm 4) — applied recursively on
+//! halo-extended subgraphs (§4.4.2).
+
+mod aggregate;
+mod balance;
+mod levels;
+mod tree;
+mod verify;
+
+pub use aggregate::{aggregate_pairs, Pair};
+pub use balance::balance_level_groups;
+pub use levels::subgraph_levels;
+pub use tree::{format_tree, TreeNode, NO_NODE};
+pub use verify::verify_race_tree;
+
+use crate::sparse::Csr;
+use anyhow::{bail, Result};
+
+/// RACE tuning parameters.
+#[derive(Debug, Clone)]
+pub struct RaceConfig {
+    /// Number of threads to generate parallelism for (`N_t`).
+    pub threads: usize,
+    /// Dependency distance `k` (2 for SymmSpMV).
+    pub dist: usize,
+    /// ε_s per recursion stage (§4.4.3). Stages beyond the vector use the
+    /// last entry. Paper default: ε₀ = ε₁ = 0.8, ε_{s>1} = 0.5.
+    pub eps: Vec<f64>,
+    /// Balance by nonzeros instead of rows (§4.3 supports both).
+    pub balance_nnz: bool,
+    /// Maximum recursion depth (safety stop; the paper's corner-case
+    /// discussion notes ε ≈ 1 can prevent termination).
+    pub max_stages: usize,
+    /// Ablation: disable the Algorithm-4 load balancing step (§4.3).
+    pub no_load_balance: bool,
+    /// Ablation: disable recursion (§4.4) — stage-0 level groups only;
+    /// groups with more than one assigned thread serialize.
+    pub no_recursion: bool,
+}
+
+impl Default for RaceConfig {
+    fn default() -> Self {
+        RaceConfig {
+            threads: 4,
+            dist: 2,
+            eps: vec![0.8, 0.8, 0.5],
+            balance_nnz: false,
+            max_stages: 24,
+            no_load_balance: false,
+            no_recursion: false,
+        }
+    }
+}
+
+impl RaceConfig {
+    /// ε for stage `s`.
+    pub fn eps_at(&self, s: usize) -> f64 {
+        let e = *self.eps.get(s).or(self.eps.last()).unwrap_or(&0.5);
+        e.clamp(0.5, 0.999)
+    }
+}
+
+/// The built engine: permutation + execution tree + efficiency statistics.
+pub struct RaceEngine {
+    /// Configuration used to build.
+    pub cfg: RaceConfig,
+    /// Execution tree; node 0 is the root (`T_{-1}(0)` in the paper).
+    pub tree: Vec<TreeNode>,
+    /// Final symmetric permutation `perm[old] = new`.
+    pub perm: Vec<u32>,
+    /// The permuted matrix `P A Pᵀ`.
+    a_perm: Csr,
+    /// Number of levels found at stage 0 (`N_ℓ`).
+    pub nlevels0: usize,
+}
+
+impl RaceEngine {
+    /// Build the engine for matrix `a`. The matrix must be structurally
+    /// symmetric (undirected graph).
+    pub fn build(a: &Csr, cfg: &RaceConfig) -> Result<RaceEngine> {
+        if cfg.threads == 0 {
+            bail!("threads must be >= 1");
+        }
+        if cfg.dist == 0 {
+            bail!("dist must be >= 1");
+        }
+        let n = a.nrows();
+        // `order[pos] = original vertex` — refined in place by recursion.
+        let mut order: Vec<u32> = (0..n as u32).collect();
+        let mut tree: Vec<TreeNode> = vec![TreeNode::root(n as u32, cfg.threads as u32)];
+        let mut nlevels0 = 0usize;
+        Self::refine(a, cfg, &mut order, &mut tree, 0, 0, &mut nlevels0);
+        // order -> perm
+        let mut perm = vec![0u32; n];
+        for (new, &old) in order.iter().enumerate() {
+            perm[old as usize] = new as u32;
+        }
+        let a_perm = a.permute_symmetric(&perm);
+        tree::compute_eff_rows(&mut tree, 0);
+        Ok(RaceEngine { cfg: cfg.clone(), tree, perm, a_perm, nlevels0 })
+    }
+
+    /// The permuted matrix the executors run on.
+    pub fn permuted_matrix(&self) -> &Csr {
+        &self.a_perm
+    }
+
+    /// Parallel efficiency η (§5): optimal per-thread load divided by the
+    /// critical-path effective row count.
+    pub fn efficiency(&self) -> f64 {
+        let root = &self.tree[0];
+        let total = (root.end - root.start) as f64;
+        let eff = root.eff_rows.max(1.0);
+        (total / (eff * self.cfg.threads as f64)).min(1.0)
+    }
+
+    /// `N_t^eff = η × N_t` (§5.1, Fig. 17).
+    pub fn effective_threads(&self) -> f64 {
+        self.efficiency() * self.cfg.threads as f64
+    }
+
+    /// Leaves of the tree in execution order (depth-first, color-major per
+    /// parent).
+    pub fn leaves(&self) -> Vec<u32> {
+        let mut out = Vec::new();
+        let mut stack = vec![0u32];
+        while let Some(id) = stack.pop() {
+            let node = &self.tree[id as usize];
+            if node.children.is_empty() {
+                out.push(id);
+            } else {
+                for &c in node.children.iter().rev() {
+                    stack.push(c);
+                }
+            }
+        }
+        out
+    }
+
+    /// Total number of tree nodes.
+    pub fn node_count(&self) -> usize {
+        self.tree.len()
+    }
+
+    /// Recursive refinement of tree node `node_id` (rows
+    /// `order[start..end]`), assigning its `threads` over new child level
+    /// groups. Follows §4.4.3 steps (1)–(4).
+    #[allow(clippy::too_many_arguments)]
+    fn refine(
+        a: &Csr,
+        cfg: &RaceConfig,
+        order: &mut [u32],
+        tree: &mut Vec<TreeNode>,
+        node_id: usize,
+        stage: usize,
+        nlevels0: &mut usize,
+    ) {
+        let (start, end, threads) =
+            (tree[node_id].start as usize, tree[node_id].end as usize, tree[node_id].threads);
+        let rows = end - start;
+        if threads <= 1 || rows <= 1 || stage >= cfg.max_stages {
+            return; // leaf
+        }
+        let k = cfg.dist;
+        // ---- step 1: level construction on the halo-extended subgraph ----
+        let halo = k.div_ceil(2);
+        let lv = subgraph_levels(a, &order[start..end], halo);
+        if stage == 0 {
+            *nlevels0 = lv.nlevels;
+        }
+        if lv.nlevels < 2 * k {
+            return; // not enough levels to split into even one red/blue pair
+        }
+        // level weights: rows (or nnz) per level relative to optimal load
+        let mut level_load = vec![0f64; lv.nlevels];
+        let mut total_load = 0f64;
+        for (i, &v) in order[start..end].iter().enumerate() {
+            let load = if cfg.balance_nnz {
+                (a.row_ptr[v as usize + 1] - a.row_ptr[v as usize]) as f64
+            } else {
+                1.0
+            };
+            level_load[lv.level[i] as usize] += load;
+            total_load += load;
+        }
+        // ---- step 2–3: aggregate levels into pairs of level groups ----
+        let pairs =
+            aggregate_pairs(&level_load, total_load, threads as usize, k, cfg.eps_at(stage));
+        if pairs.len() < 2 {
+            return; // a single pair exposes no new parallelism: stop here
+        }
+        // ---- step 4: per-color load balancing across level groups ----
+        // Build T_ptr over levels: each pair contributes two level groups.
+        let mut t_ptr: Vec<u32> = Vec::with_capacity(pairs.len() * 2 + 1);
+        let mut workers: Vec<u32> = Vec::with_capacity(pairs.len() * 2);
+        for p in &pairs {
+            t_ptr.push(p.level_start);
+            t_ptr.push(p.level_mid);
+            workers.push(p.threads);
+            workers.push(p.threads);
+        }
+        t_ptr.push(lv.nlevels as u32);
+        if !cfg.no_load_balance {
+            balance_level_groups(&level_load, &mut t_ptr, &workers, k);
+        }
+        // ---- permute rows within the range by (level) — level groups are
+        // level ranges, so a stable sort by level realizes the grouping and
+        // keeps prior relative order (locality) inside each level.
+        let mut idx: Vec<u32> = (0..rows as u32).collect();
+        idx.sort_by_key(|&i| lv.level[i as usize]);
+        let old_slice: Vec<u32> = order[start..end].to_vec();
+        for (pos, &i) in idx.iter().enumerate() {
+            order[start + pos] = old_slice[i as usize];
+        }
+        // level -> cumulative row offsets (within range) for child ranges
+        let mut level_row_ptr = vec![0u32; lv.nlevels + 1];
+        {
+            let mut counts = vec![0u32; lv.nlevels];
+            for &i in &idx {
+                counts[lv.level[i as usize] as usize] += 1;
+            }
+            for l in 0..lv.nlevels {
+                level_row_ptr[l + 1] = level_row_ptr[l] + counts[l];
+            }
+        }
+        // ---- create children ----
+        let ngroups = t_ptr.len() - 1;
+        let mut children = Vec::with_capacity(ngroups);
+        for g in 0..ngroups {
+            let lvl_lo = t_ptr[g] as usize;
+            let lvl_hi = t_ptr[g + 1] as usize;
+            let r0 = start as u32 + level_row_ptr[lvl_lo];
+            let r1 = start as u32 + level_row_ptr[lvl_hi];
+            let id = tree.len() as u32;
+            tree.push(TreeNode {
+                start: r0,
+                end: r1,
+                threads: workers[g],
+                color: (g % 2) as u8,
+                stage: stage as i16,
+                parent: node_id as u32,
+                children: Vec::new(),
+                eff_rows: 0.0,
+            });
+            children.push(id);
+        }
+        tree[node_id].children = children.clone();
+        // recurse into children that received more than one thread
+        if cfg.no_recursion {
+            return;
+        }
+        for &c in &children {
+            let (cs, ce, ct) =
+                (tree[c as usize].start, tree[c as usize].end, tree[c as usize].threads);
+            if ct > 1 && ce > cs {
+                // guard against non-progress: a child spanning the whole
+                // parent with the same thread count would recurse forever.
+                if (cs as usize, ce as usize) == (start, end) {
+                    continue;
+                }
+                Self::refine(a, cfg, order, tree, c as usize, stage + 1, nlevels0);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen;
+
+    #[test]
+    fn build_stencil_16x16_eight_threads() {
+        // The paper's running example (§4.4.3, Fig. 13/14): 16x16 stencil,
+        // 8 threads, distance-2.
+        let a = gen::race_paper_stencil(16, 16);
+        let cfg = RaceConfig { threads: 8, dist: 2, eps: vec![0.6, 0.5], ..Default::default() };
+        let eng = RaceEngine::build(&a, &cfg).unwrap();
+        assert!(crate::graph::is_permutation(&eng.perm));
+        let eta = eng.efficiency();
+        assert!(eta > 0.3 && eta <= 1.0, "eta={eta}");
+        // leaves partition all rows
+        let mut covered = vec![false; 256];
+        for l in eng.leaves() {
+            let n = &eng.tree[l as usize];
+            for r in n.start..n.end {
+                assert!(!covered[r as usize], "row {r} covered twice");
+                covered[r as usize] = true;
+            }
+        }
+        assert!(covered.iter().all(|&c| c));
+    }
+
+    #[test]
+    fn distance2_independence_of_same_color_siblings() {
+        for (name, a) in [
+            ("stencil", gen::race_paper_stencil(16, 16)),
+            ("spin", gen::spin_chain_xxz(9, gen::SpinKind::XXZ)),
+            ("graphene", gen::graphene(10, 10)),
+            ("delaunay", gen::delaunay_like(14, 14, 5)),
+        ] {
+            let cfg = RaceConfig { threads: 6, dist: 2, ..Default::default() };
+            let eng = RaceEngine::build(&a, &cfg).unwrap();
+            assert!(verify_race_tree(&eng), "{name}: distance-2 violation");
+        }
+    }
+
+    #[test]
+    fn distance1_also_valid() {
+        let a = gen::stencil2d_5pt(20, 20);
+        let cfg = RaceConfig { threads: 4, dist: 1, ..Default::default() };
+        let eng = RaceEngine::build(&a, &cfg).unwrap();
+        assert!(verify_race_tree(&eng));
+    }
+
+    #[test]
+    fn single_thread_is_one_leaf() {
+        let a = gen::stencil2d_5pt(10, 10);
+        let cfg = RaceConfig { threads: 1, ..Default::default() };
+        let eng = RaceEngine::build(&a, &cfg).unwrap();
+        assert_eq!(eng.node_count(), 1);
+        assert!((eng.efficiency() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn efficiency_decreases_with_threads_on_limited_matrix() {
+        // corner case: wide-band matrix with few levels (crankseg-like)
+        let a = gen::dense_band(600, 40, 500, 3);
+        let eta: Vec<f64> = [2, 8, 32]
+            .iter()
+            .map(|&t| {
+                let cfg = RaceConfig { threads: t, ..Default::default() };
+                RaceEngine::build(&a, &cfg).unwrap().efficiency()
+            })
+            .collect();
+        assert!(eta[0] >= eta[2], "eta should not grow with threads: {eta:?}");
+        assert!(eta[2] < 0.7, "crankseg-like matrix must show limited parallelism: {eta:?}");
+    }
+
+    #[test]
+    fn efficiency_high_on_graphene() {
+        // paper Fig. 16: Graphene is the best case, near-perfect η
+        let a = gen::graphene(64, 64);
+        let cfg = RaceConfig { threads: 8, ..Default::default() };
+        let eng = RaceEngine::build(&a, &cfg).unwrap();
+        assert!(eng.efficiency() > 0.8, "eta={}", eng.efficiency());
+    }
+
+    #[test]
+    fn permuted_matrix_spmv_matches_original() {
+        let a = gen::stencil2d_9pt(12, 12);
+        let cfg = RaceConfig { threads: 4, ..Default::default() };
+        let eng = RaceEngine::build(&a, &cfg).unwrap();
+        let n = a.nrows();
+        let x: Vec<f64> = (0..n).map(|i| (i as f64).sin()).collect();
+        // permute x, run SpMV on permuted matrix, unpermute result
+        let mut xp = vec![0.0; n];
+        for (old, &new) in eng.perm.iter().enumerate() {
+            xp[new as usize] = x[old];
+        }
+        let bp = eng.permuted_matrix().spmv_ref(&xp);
+        let b = a.spmv_ref(&x);
+        for (old, &new) in eng.perm.iter().enumerate() {
+            assert!((bp[new as usize] - b[old]).abs() < 1e-10);
+        }
+    }
+}

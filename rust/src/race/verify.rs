@@ -1,0 +1,93 @@
+//! Structural verification of a RACE tree: any two same-color sibling
+//! level groups (whose subtrees run concurrently) must be mutually
+//! distance-k independent on the permuted matrix. This is exactly the
+//! safety condition the executors rely on.
+
+use super::RaceEngine;
+
+/// Check distance-k independence between all same-color sibling pairs.
+/// O(nnz · k) per sibling-set via a frontier expansion from each group.
+pub fn verify_race_tree(eng: &RaceEngine) -> bool {
+    let a = eng.permuted_matrix();
+    let k = eng.cfg.dist;
+    let n = a.nrows();
+    let mut group_of = vec![u32::MAX; n];
+    for (id, node) in eng.tree.iter().enumerate() {
+        if node.children.is_empty() {
+            continue;
+        }
+        for color in 0..2u8 {
+            // mark each same-color child's rows with its id
+            for g in group_of.iter_mut() {
+                *g = u32::MAX;
+            }
+            let sibs: Vec<u32> = node
+                .children
+                .iter()
+                .copied()
+                .filter(|&c| eng.tree[c as usize].color == color)
+                .collect();
+            if sibs.len() < 2 {
+                continue;
+            }
+            for &c in &sibs {
+                let nd = &eng.tree[c as usize];
+                for r in nd.start..nd.end {
+                    group_of[r as usize] = c;
+                }
+            }
+            // BFS k steps from every marked vertex; reaching a *different*
+            // group is a violation. Do it per group to bound memory.
+            for &c in &sibs {
+                let nd = &eng.tree[c as usize];
+                let mut frontier: Vec<u32> = (nd.start..nd.end).collect();
+                let mut dist = vec![u8::MAX; n];
+                for &v in &frontier {
+                    dist[v as usize] = 0;
+                }
+                for step in 1..=k as u8 {
+                    let mut next = Vec::new();
+                    for &u in &frontier {
+                        let (cols, _) = a.row(u as usize);
+                        for &w in cols {
+                            if dist[w as usize] == u8::MAX {
+                                dist[w as usize] = step;
+                                let g = group_of[w as usize];
+                                if g != u32::MAX && g != c {
+                                    eprintln!(
+                                        "RACE verify: node {id} color {color}: group {c} reaches group {g} in {step} steps (row {w})"
+                                    );
+                                    return false;
+                                }
+                                next.push(w);
+                            }
+                        }
+                    }
+                    frontier = next;
+                }
+            }
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::gen;
+    use crate::race::{RaceConfig, RaceEngine};
+
+    #[test]
+    fn detects_violation_when_tree_is_corrupted() {
+        let a = gen::stencil2d_5pt(16, 16);
+        let cfg = RaceConfig { threads: 4, dist: 2, ..Default::default() };
+        let mut eng = RaceEngine::build(&a, &cfg).unwrap();
+        assert!(super::verify_race_tree(&eng));
+        // corrupt: force two adjacent groups to the same color
+        let root_children = eng.tree[0].children.clone();
+        if root_children.len() >= 2 {
+            let c1 = root_children[1] as usize;
+            eng.tree[c1].color = 0; // was blue, now collides with its red neighbor
+            assert!(!super::verify_race_tree(&eng), "corruption must be detected");
+        }
+    }
+}

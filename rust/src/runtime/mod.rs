@@ -1,0 +1,136 @@
+//! PJRT runtime — loads AOT-compiled JAX/Pallas artifacts (HLO text
+//! produced by `python/compile/aot.py`) and executes them on the XLA CPU
+//! client. After `make artifacts`, Python is never on the request path.
+//!
+//! Interchange is HLO *text*, not serialized `HloModuleProto`: jax ≥ 0.5
+//! emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// A PJRT CPU client plus a cache of compiled executables keyed by name.
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl XlaRuntime {
+    /// Create the CPU client.
+    pub fn cpu() -> Result<XlaRuntime> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(XlaRuntime { client, exes: HashMap::new() })
+    }
+
+    /// Platform string (for diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load and compile an HLO-text artifact under `name`.
+    pub fn load_artifact(&mut self, name: &str, path: &Path) -> Result<()> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+        self.exes.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Whether `name` has been loaded.
+    pub fn has(&self, name: &str) -> bool {
+        self.exes.contains_key(name)
+    }
+
+    /// Execute artifact `name` with f32 inputs of the given shapes.
+    /// The artifact is expected to return a 1-tuple (jax lowered with
+    /// `return_tuple=True`); returns the flattened f32 output.
+    pub fn execute_f32(&self, name: &str, inputs: &[(&[f32], &[i64])]) -> Result<Vec<f32>> {
+        let exe = self.exes.get(name).with_context(|| format!("artifact {name} not loaded"))?;
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, dims) in inputs {
+            let lit = xla::Literal::vec1(data);
+            let lit = if dims.len() == 1 && dims[0] as usize == data.len() {
+                lit
+            } else {
+                lit.reshape(dims).map_err(|e| anyhow!("reshape {dims:?}: {e:?}"))?
+            };
+            literals.push(lit);
+        }
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+        let out = out.to_tuple1().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        out.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))
+    }
+
+    /// Execute with i32 + f32 mixed inputs (sparse formats carry index
+    /// arrays). Argument order matches `aot.py::specs`: index arrays
+    /// first, then f32 data. Returns every element of the output tuple,
+    /// each flattened to f32 (scalars become length-1 vectors).
+    pub fn execute_mixed(
+        &self,
+        name: &str,
+        f32_inputs: &[(&[f32], &[i64])],
+        i32_inputs: &[(&[i32], &[i64])],
+    ) -> Result<Vec<Vec<f32>>> {
+        let exe = self.exes.get(name).with_context(|| format!("artifact {name} not loaded"))?;
+        let mut literals: Vec<xla::Literal> = Vec::new();
+        for (data, dims) in i32_inputs {
+            let lit = xla::Literal::vec1(data);
+            let lit = if dims.len() == 1 && dims[0] as usize == data.len() {
+                lit
+            } else {
+                lit.reshape(dims).map_err(|e| anyhow!("reshape: {e:?}"))?
+            };
+            literals.push(lit);
+        }
+        for (data, dims) in f32_inputs {
+            let lit = xla::Literal::vec1(data);
+            let lit = if dims.len() == 1 && dims[0] as usize == data.len() {
+                lit
+            } else {
+                lit.reshape(dims).map_err(|e| anyhow!("reshape: {e:?}"))?
+            };
+            literals.push(lit);
+        }
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+        let parts = out.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        parts
+            .into_iter()
+            .map(|p| p.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}")))
+            .collect()
+    }
+}
+
+/// Default artifacts directory (repo-relative, overridable via
+/// `RACE_ARTIFACTS`).
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var("RACE_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    // Runtime integration tests live in rust/tests/xla_runtime.rs (they
+    // need built artifacts); here we only check client creation, which
+    // exercises the PJRT linkage.
+    #[test]
+    fn cpu_client_comes_up() {
+        let rt = super::XlaRuntime::cpu().expect("PJRT CPU client");
+        assert!(rt.platform().to_lowercase().contains("cpu") || !rt.platform().is_empty());
+        assert!(!rt.has("nope"));
+    }
+}

@@ -1,0 +1,288 @@
+//! Multicore execution simulator.
+//!
+//! **Why this exists:** the paper's evaluation runs on 10- and 20-core
+//! sockets; this host has a single core, so real scaling curves are
+//! unobtainable. The simulator replays the *real* schedules produced by
+//! the real RACE/MC/ABMC implementations and charges
+//!
+//! * per-thread compute time from actual per-row nonzero counts
+//!   (`core_flops` calibrated single-core throughput),
+//! * a full-socket memory-bandwidth floor from the cache-simulator's
+//!   traffic measurement (the roofline constraint, Eq. 1),
+//! * synchronization costs per phase / scope join.
+//!
+//! These are precisely the ingredients of the paper's own performance
+//! analysis (§3, §5), so the simulated curves reproduce the *shapes* of
+//! Figs. 2, 17–23: who wins, by what factor, and where saturation sets in.
+
+use crate::color::ColorSchedule;
+use crate::machine::Machine;
+use crate::race::RaceEngine;
+use crate::sparse::Csr;
+
+/// Simulated execution of one kernel invocation.
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    /// Thread count simulated.
+    pub threads: usize,
+    /// Effective performance in GF/s (flops of the *full* matrix op).
+    pub gflops: f64,
+    /// Total simulated time (s).
+    pub time: f64,
+    /// Critical-path compute time (s).
+    pub t_compute: f64,
+    /// Memory-bandwidth floor (s).
+    pub t_mem: f64,
+    /// Synchronization overhead (s).
+    pub t_sync: f64,
+}
+
+/// Flops of one SymmSpMV = flops of one SpMV = 2 × nnz(full matrix).
+pub fn flops_full(nnz_full: usize) -> f64 {
+    2.0 * nnz_full as f64
+}
+
+fn result(flops: f64, threads: usize, t_compute: f64, t_mem: f64, t_sync: f64) -> SimResult {
+    let time = t_compute.max(t_mem) + t_sync;
+    SimResult { threads, gflops: flops / time / 1e9, time, t_compute, t_mem, t_sync }
+}
+
+/// Per-row flops for upper-triangle SymmSpMV: 4 per off-diagonal + 2 per
+/// diagonal entry.
+fn row_flops_symm(upper: &Csr, row: usize) -> f64 {
+    let cnt = (upper.row_ptr[row + 1] - upper.row_ptr[row]) as f64;
+    4.0 * (cnt - 1.0) + 2.0
+}
+
+/// Simulate the RACE executor: the critical path follows the tree exactly
+/// like `N_r^eff` (§5) but weighted in flops, plus one local
+/// synchronization per color per inner node.
+pub fn simulate_race(
+    machine: &Machine,
+    eng: &RaceEngine,
+    upper: &Csr,
+    traffic_bytes: u64,
+    nnz_full: usize,
+) -> SimResult {
+    // prefix flops over permuted rows for O(1) range sums
+    let n = upper.nrows();
+    let mut prefix = vec![0f64; n + 1];
+    for r in 0..n {
+        prefix[r + 1] = prefix[r] + row_flops_symm(upper, r);
+    }
+    let (t_compute, t_sync) = race_critical_path(machine, eng, 0, &prefix);
+    let flops = flops_full(nnz_full);
+    let t_mem = traffic_bytes as f64 / machine.bw_copy;
+    result(flops, eng.cfg.threads, t_compute, t_mem, t_sync)
+}
+
+fn race_critical_path(
+    machine: &Machine,
+    eng: &RaceEngine,
+    node: usize,
+    prefix: &[f64],
+) -> (f64, f64) {
+    let nd = &eng.tree[node];
+    if nd.children.is_empty() {
+        let flops = prefix[nd.end as usize] - prefix[nd.start as usize];
+        return (flops / machine.core_flops, 0.0);
+    }
+    let mut t_total = 0f64;
+    let mut sync_total = 0f64;
+    for color in 0..2u8 {
+        let mut max_t = 0f64;
+        let mut any = false;
+        for &c in &nd.children {
+            if eng.tree[c as usize].color != color {
+                continue;
+            }
+            any = true;
+            let (t, s) = race_critical_path(machine, eng, c as usize, prefix);
+            max_t = max_t.max(t + s);
+        }
+        if any {
+            t_total += max_t;
+            // one (local or global) synchronization per color phase
+            sync_total += machine.sync_cost * (1.0 + (nd.threads as f64).log2().max(0.0));
+        }
+    }
+    (t_total, sync_total)
+}
+
+/// Simulate a coloring executor (MC/ABMC): per phase, the slowest work
+/// unit (after chunking for splittable schedules) sets the pace; one
+/// global synchronization per phase.
+pub fn simulate_color(
+    machine: &Machine,
+    sched: &ColorSchedule,
+    upper: &Csr,
+    threads: usize,
+    traffic_bytes: u64,
+    nnz_full: usize,
+) -> SimResult {
+    let n = upper.nrows();
+    let mut prefix = vec![0f64; n + 1];
+    for r in 0..n {
+        prefix[r + 1] = prefix[r] + row_flops_symm(upper, r);
+    }
+    let mut t_compute = 0f64;
+    for units in &sched.phases {
+        let phase_flops: f64 =
+            units.iter().map(|&(s, e)| prefix[e as usize] - prefix[s as usize]).sum();
+        let t_phase = if sched.splittable {
+            // rows of a color split arbitrarily: ideal balance up to one row
+            phase_flops / threads as f64 / machine.core_flops
+        } else {
+            // greedy LPT assignment of whole blocks to threads
+            let mut loads = vec![0f64; threads];
+            let mut unit_flops: Vec<f64> =
+                units.iter().map(|&(s, e)| prefix[e as usize] - prefix[s as usize]).collect();
+            unit_flops.sort_by(|a, b| b.partial_cmp(a).unwrap());
+            for f in unit_flops {
+                let imin = loads
+                    .iter()
+                    .enumerate()
+                    .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i)
+                    .unwrap();
+                loads[imin] += f;
+            }
+            loads.iter().cloned().fold(0f64, f64::max) / machine.core_flops
+        };
+        t_compute += t_phase;
+    }
+    let t_sync = sched.phases.len() as f64
+        * machine.sync_cost
+        * (1.0 + (threads as f64).log2().max(0.0));
+    let flops = flops_full(nnz_full);
+    let t_mem = traffic_bytes as f64 / machine.bw_copy;
+    result(flops, threads, t_compute, t_mem, t_sync)
+}
+
+/// Simulate the baseline parallel SpMV (no dependencies, embarrassingly
+/// parallel): compute scales perfectly, memory saturates — the classic
+/// bandwidth-saturation curve of Figs. 2(a)/(c).
+pub fn simulate_spmv(
+    machine: &Machine,
+    a: &Csr,
+    threads: usize,
+    traffic_bytes: u64,
+) -> SimResult {
+    let flops = flops_full(a.nnz());
+    // SpMV does 2 flops per nonzero; a core sustains `core_flops` on
+    // SymmSpMV's 4-flop rows — SpMV's simpler loop runs at roughly the
+    // same flop rate.
+    let t_compute = flops / (threads as f64 * machine.core_flops);
+    let t_mem = traffic_bytes as f64 / machine.bw_copy;
+    result(flops, threads, t_compute, t_mem, 0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cachesim;
+    use crate::color::{abmc_schedule, mc_schedule};
+    use crate::gen;
+    use crate::machine;
+    use crate::race::{RaceConfig, RaceEngine};
+
+    /// End-to-end shape test: on a Spin-chain matrix, full-socket SKX,
+    /// RACE must beat MC clearly (paper §6.2.1: ≥ 3.3x vs best coloring;
+    /// we assert a conservative 1.5x vs MC).
+    #[test]
+    fn race_beats_mc_on_spin_chain() {
+        let a0 = gen::spin_chain_xxz(13, gen::SpinKind::XXZ);
+        let perm = crate::graph::rcm(&a0);
+        let a = a0.permute_symmetric(&perm);
+        let m = machine::skx();
+        let threads = m.cores;
+
+        let cfg = RaceConfig { threads, ..Default::default() };
+        let eng = RaceEngine::build(&a, &cfg).unwrap();
+        let up_race = eng.permuted_matrix().upper_triangle();
+        let tr_race = cachesim::measure_symmspmv_traffic(&up_race, a.nnz(), &m);
+        let race = simulate_race(&m, &eng, &up_race, tr_race.bytes_total, a.nnz());
+
+        let mc = mc_schedule(&a, 2);
+        let a_mc = a.permute_symmetric(&mc.perm);
+        let up_mc = a_mc.upper_triangle();
+        let tr_mc = cachesim::measure_symmspmv_traffic(&up_mc, a.nnz(), &m);
+        let mc_res = simulate_color(&m, &mc, &up_mc, threads, tr_mc.bytes_total, a.nnz());
+
+        assert!(
+            race.gflops > 1.5 * mc_res.gflops,
+            "RACE {:.2} GF/s vs MC {:.2} GF/s",
+            race.gflops,
+            mc_res.gflops
+        );
+    }
+
+    #[test]
+    fn race_within_roofline() {
+        // ivb (10 cores): the 20^3 27-pt stencil has only ~20 BFS levels,
+        // so 20 threads would be level-starved at this test scale (the
+        // paper's HPCG-192 has ~10x the levels); 10 threads is the regime
+        // the figure benches reproduce.
+        let a = gen::stencil3d_27pt(20, 20, 20);
+        let m = machine::ivb();
+        let cfg = RaceConfig { threads: m.cores, ..Default::default() };
+        let eng = RaceEngine::build(&a, &cfg).unwrap();
+        let up = eng.permuted_matrix().upper_triangle();
+        let tr = cachesim::measure_symmspmv_traffic(&up, a.nnz(), &m);
+        let r = simulate_race(&m, &eng, &up, tr.bytes_total, a.nnz());
+        let w = crate::perfmodel::symmspmv_window(&m, tr.alpha, a.nnzr());
+        assert!(
+            r.gflops * 1e9 <= w.p_load * 1.05,
+            "simulated {} GF/s exceeds roofline {}",
+            r.gflops,
+            w.p_load / 1e9
+        );
+        // test-scale matrices are partially sync-bound (the kernel runs in
+        // tens of microseconds); the full-scale benches hit 60-100% of the
+        // window. Assert a loose sanity floor here.
+        assert!(
+            r.gflops * 1e9 > 0.15 * w.p_copy,
+            "unreasonably slow: {} GF/s (eta={}, nodes={}, nlevels={}, t_c={} t_m={} t_s={})",
+            r.gflops,
+            eng.efficiency(),
+            eng.node_count(),
+            eng.nlevels0,
+            r.t_compute,
+            r.t_mem,
+            r.t_sync
+        );
+    }
+
+    #[test]
+    fn spmv_saturates_with_cores() {
+        let a = gen::stencil3d_27pt(16, 16, 16);
+        let m = machine::ivb();
+        let tr = cachesim::measure_spmv_traffic(&a, &m);
+        let g: Vec<f64> = [1usize, 2, 5, 10]
+            .iter()
+            .map(|&t| simulate_spmv(&m, &a, t, tr.bytes_total).gflops)
+            .collect();
+        assert!(g[1] > 1.7 * g[0], "2 cores should nearly double: {g:?}");
+        assert!(g[3] < 2.0 * g[2] || g[3] / g[2] < 1.2, "saturation expected: {g:?}");
+    }
+
+    #[test]
+    fn abmc_between_mc_and_race() {
+        let a0 = gen::spin_chain_xxz(12, gen::SpinKind::XXZ);
+        let perm = crate::graph::rcm(&a0);
+        let a = a0.permute_symmetric(&perm);
+        let m = machine::ivb();
+        let threads = m.cores;
+        let nnz = a.nnz();
+
+        let mk = |sched: &crate::color::ColorSchedule| {
+            let ap = a.permute_symmetric(&sched.perm);
+            let up = ap.upper_triangle();
+            let tr = cachesim::measure_symmspmv_traffic(&up, nnz, &m);
+            simulate_color(&m, sched, &up, threads, tr.bytes_total, nnz).gflops
+        };
+        let g_mc = mk(&mc_schedule(&a, 2));
+        let g_abmc = mk(&abmc_schedule(&a, a.nrows() / 100, 2));
+        assert!(g_abmc > g_mc, "ABMC {g_abmc} should beat MC {g_mc}");
+    }
+}

@@ -1,0 +1,390 @@
+//! Compressed row storage (CRS/CSR) matrices and a COO assembly buffer.
+//!
+//! All matrices in this reproduction are square, real and — unless stated
+//! otherwise — structurally and numerically symmetric, matching the paper's
+//! restriction to fully connected undirected graphs.
+
+/// Coordinate-format assembly buffer. Duplicate entries are summed on
+/// conversion to [`Csr`].
+#[derive(Debug, Clone, Default)]
+pub struct Coo {
+    /// Number of rows (== number of columns).
+    pub n: usize,
+    /// (row, col, value) triplets in arbitrary order.
+    pub entries: Vec<(u32, u32, f64)>,
+}
+
+impl Coo {
+    /// New empty COO buffer for an `n x n` matrix.
+    pub fn new(n: usize) -> Self {
+        Coo { n, entries: Vec::new() }
+    }
+
+    /// Push a single entry.
+    pub fn push(&mut self, row: usize, col: usize, val: f64) {
+        debug_assert!(row < self.n && col < self.n);
+        self.entries.push((row as u32, col as u32, val));
+    }
+
+    /// Push `(row, col, val)` and, when off-diagonal, its mirror
+    /// `(col, row, val)` — convenience for symmetric assembly.
+    pub fn push_sym(&mut self, row: usize, col: usize, val: f64) {
+        self.push(row, col, val);
+        if row != col {
+            self.push(col, row, val);
+        }
+    }
+
+    /// Convert to CSR, summing duplicates, sorting column indices per row.
+    pub fn to_csr(&self) -> Csr {
+        let n = self.n;
+        let mut row_counts = vec![0u32; n + 1];
+        for &(r, _, _) in &self.entries {
+            row_counts[r as usize + 1] += 1;
+        }
+        let mut row_ptr: Vec<u32> = Vec::with_capacity(n + 1);
+        let mut acc = 0u32;
+        for c in &row_counts {
+            acc += c;
+            row_ptr.push(acc);
+        }
+        // row_ptr currently holds end offsets shifted by one row; rebuild
+        // classic prefix sums.
+        let mut ptr = vec![0u32; n + 1];
+        for i in 0..n {
+            ptr[i + 1] = ptr[i] + row_counts[i + 1];
+        }
+        let nnz = ptr[n] as usize;
+        let mut col = vec![0u32; nnz];
+        let mut val = vec![0f64; nnz];
+        let mut cursor = ptr.clone();
+        for &(r, c, v) in &self.entries {
+            let at = cursor[r as usize] as usize;
+            col[at] = c;
+            val[at] = v;
+            cursor[r as usize] += 1;
+        }
+        let mut csr = Csr { n, row_ptr: ptr, col, val };
+        csr.sort_rows_and_merge();
+        csr
+    }
+}
+
+/// CSR sparse matrix (the paper's CRS format, Algorithm 1).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Csr {
+    /// Matrix dimension (square).
+    pub n: usize,
+    /// Row pointers, length `n + 1`.
+    pub row_ptr: Vec<u32>,
+    /// Column indices, length `nnz`, sorted ascending within each row.
+    pub col: Vec<u32>,
+    /// Nonzero values, length `nnz`.
+    pub val: Vec<f64>,
+}
+
+impl Csr {
+    /// Number of rows.
+    pub fn nrows(&self) -> usize {
+        self.n
+    }
+
+    /// Total number of stored nonzeros.
+    pub fn nnz(&self) -> usize {
+        self.col.len()
+    }
+
+    /// Average nonzeros per row (the paper's `N_nzr`).
+    pub fn nnzr(&self) -> f64 {
+        self.nnz() as f64 / self.n.max(1) as f64
+    }
+
+    /// Row `r` as `(cols, vals)` slices.
+    pub fn row(&self, r: usize) -> (&[u32], &[f64]) {
+        let lo = self.row_ptr[r] as usize;
+        let hi = self.row_ptr[r + 1] as usize;
+        (&self.col[lo..hi], &self.val[lo..hi])
+    }
+
+    /// Sort column indices within each row and merge duplicates (summing
+    /// values). Called by COO conversion; idempotent.
+    pub fn sort_rows_and_merge(&mut self) {
+        let mut new_ptr = vec![0u32; self.n + 1];
+        let mut new_col: Vec<u32> = Vec::with_capacity(self.nnz());
+        let mut new_val: Vec<f64> = Vec::with_capacity(self.nnz());
+        let mut scratch: Vec<(u32, f64)> = Vec::new();
+        for r in 0..self.n {
+            let lo = self.row_ptr[r] as usize;
+            let hi = self.row_ptr[r + 1] as usize;
+            scratch.clear();
+            scratch.extend(self.col[lo..hi].iter().copied().zip(self.val[lo..hi].iter().copied()));
+            scratch.sort_unstable_by_key(|&(c, _)| c);
+            let mut i = 0;
+            while i < scratch.len() {
+                let (c, mut v) = scratch[i];
+                let mut j = i + 1;
+                while j < scratch.len() && scratch[j].0 == c {
+                    v += scratch[j].1;
+                    j += 1;
+                }
+                new_col.push(c);
+                new_val.push(v);
+                i = j;
+            }
+            new_ptr[r + 1] = new_col.len() as u32;
+        }
+        self.row_ptr = new_ptr;
+        self.col = new_col;
+        self.val = new_val;
+    }
+
+    /// Structural + numerical symmetry check (tolerance on values).
+    pub fn is_symmetric(&self) -> bool {
+        for r in 0..self.n {
+            let (cols, vals) = self.row(r);
+            for (&c, &v) in cols.iter().zip(vals) {
+                let c = c as usize;
+                // binary search for r in row c
+                let (ccols, cvals) = self.row(c);
+                match ccols.binary_search(&(r as u32)) {
+                    Ok(idx) => {
+                        if (cvals[idx] - v).abs() > 1e-12 * (1.0 + v.abs()) {
+                            return false;
+                        }
+                    }
+                    Err(_) => return false,
+                }
+            }
+        }
+        true
+    }
+
+    /// Matrix bandwidth: max |row - col| over nonzeros (Table 2 `bw`).
+    pub fn bandwidth(&self) -> usize {
+        let mut bw = 0usize;
+        for r in 0..self.n {
+            let (cols, _) = self.row(r);
+            for &c in cols {
+                bw = bw.max((r as i64 - c as i64).unsigned_abs() as usize);
+            }
+        }
+        bw
+    }
+
+    /// Extract the upper triangle including the diagonal — the storage used
+    /// by the SymmSpMV kernel (Algorithm 2). Rows missing an explicit
+    /// diagonal entry get one with value 0 so the kernel's `diag_idx`
+    /// convention (first entry of each row is the diagonal) always holds.
+    pub fn upper_triangle(&self) -> Csr {
+        let mut coo = Coo::new(self.n);
+        for r in 0..self.n {
+            let (cols, vals) = self.row(r);
+            let mut have_diag = false;
+            for (&c, &v) in cols.iter().zip(vals) {
+                if c as usize >= r {
+                    coo.push(r, c as usize, v);
+                    if c as usize == r {
+                        have_diag = true;
+                    }
+                }
+            }
+            if !have_diag {
+                coo.push(r, r, 0.0);
+            }
+        }
+        coo.to_csr()
+    }
+
+    /// Apply a symmetric permutation `B = P A P^T`, where `perm[old] = new`.
+    /// Both rows and columns are permuted, preserving symmetry.
+    pub fn permute_symmetric(&self, perm: &[u32]) -> Csr {
+        assert_eq!(perm.len(), self.n);
+        // inverse permutation: inv[new] = old
+        let mut inv = vec![0u32; self.n];
+        for (old, &new) in perm.iter().enumerate() {
+            inv[new as usize] = old as u32;
+        }
+        let mut row_ptr = vec![0u32; self.n + 1];
+        for new_r in 0..self.n {
+            let old_r = inv[new_r] as usize;
+            let cnt = self.row_ptr[old_r + 1] - self.row_ptr[old_r];
+            row_ptr[new_r + 1] = row_ptr[new_r] + cnt;
+        }
+        let nnz = row_ptr[self.n] as usize;
+        let mut col = vec![0u32; nnz];
+        let mut val = vec![0f64; nnz];
+        for new_r in 0..self.n {
+            let old_r = inv[new_r] as usize;
+            let (ocols, ovals) = self.row(old_r);
+            let base = row_ptr[new_r] as usize;
+            let mut pairs: Vec<(u32, f64)> = ocols
+                .iter()
+                .map(|&c| perm[c as usize])
+                .zip(ovals.iter().copied())
+                .collect();
+            pairs.sort_unstable_by_key(|&(c, _)| c);
+            for (i, (c, v)) in pairs.into_iter().enumerate() {
+                col[base + i] = c;
+                val[base + i] = v;
+            }
+        }
+        Csr { n: self.n, row_ptr, col, val }
+    }
+
+    /// Reference (serial) SpMV `b = A x`, Algorithm 1.
+    pub fn spmv_ref(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.n);
+        let mut b = vec![0f64; self.n];
+        for r in 0..self.n {
+            let (cols, vals) = self.row(r);
+            let mut tmp = 0f64;
+            for (&c, &v) in cols.iter().zip(vals) {
+                tmp += v * x[c as usize];
+            }
+            b[r] = tmp;
+        }
+        b
+    }
+
+    /// Bytes to store this matrix in CRS with f64 values + u32 indices —
+    /// used for the Table 2 caching-candidate classification.
+    pub fn crs_bytes(&self) -> usize {
+        self.nnz() * (8 + 4) + (self.n + 1) * 4
+    }
+
+    /// Identity matrix of size n (useful in tests).
+    pub fn identity(n: usize) -> Csr {
+        Csr {
+            n,
+            row_ptr: (0..=n as u32).collect(),
+            col: (0..n as u32).collect(),
+            val: vec![1.0; n],
+        }
+    }
+
+    /// Validate internal invariants: monotone row_ptr, sorted in-range
+    /// columns. Used by property tests and after I/O.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.row_ptr.len() != self.n + 1 {
+            return Err("row_ptr length".into());
+        }
+        if self.row_ptr[0] != 0 || *self.row_ptr.last().unwrap() as usize != self.col.len() {
+            return Err("row_ptr ends".into());
+        }
+        if self.col.len() != self.val.len() {
+            return Err("col/val length mismatch".into());
+        }
+        for r in 0..self.n {
+            if self.row_ptr[r] > self.row_ptr[r + 1] {
+                return Err(format!("row_ptr not monotone at {r}"));
+            }
+            let (cols, _) = self.row(r);
+            for w in cols.windows(2) {
+                if w[0] >= w[1] {
+                    return Err(format!("row {r} columns not strictly sorted"));
+                }
+            }
+            if let Some(&c) = cols.last() {
+                if c as usize >= self.n {
+                    return Err(format!("row {r} column out of range"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Csr {
+        // [2 1 0]
+        // [1 3 1]
+        // [0 1 4]
+        let mut coo = Coo::new(3);
+        coo.push(0, 0, 2.0);
+        coo.push_sym(0, 1, 1.0);
+        coo.push(1, 1, 3.0);
+        coo.push_sym(1, 2, 1.0);
+        coo.push(2, 2, 4.0);
+        coo.to_csr()
+    }
+
+    #[test]
+    fn coo_to_csr_sorts_and_merges() {
+        let mut coo = Coo::new(2);
+        coo.push(0, 1, 1.0);
+        coo.push(0, 0, 2.0);
+        coo.push(0, 1, 3.0); // duplicate, summed
+        coo.push(1, 1, 5.0);
+        let csr = coo.to_csr();
+        assert_eq!(csr.row_ptr, vec![0, 2, 3]);
+        assert_eq!(csr.col, vec![0, 1, 1]);
+        assert_eq!(csr.val, vec![2.0, 4.0, 5.0]);
+        csr.validate().unwrap();
+    }
+
+    #[test]
+    fn symmetry_and_bandwidth() {
+        let a = toy();
+        assert!(a.is_symmetric());
+        assert_eq!(a.bandwidth(), 1);
+        assert_eq!(a.nnz(), 7);
+        assert!((a.nnzr() - 7.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn upper_triangle_has_leading_diag() {
+        let a = toy();
+        let u = a.upper_triangle();
+        u.validate().unwrap();
+        for r in 0..u.n {
+            let (cols, _) = u.row(r);
+            assert_eq!(cols[0] as usize, r, "diagonal must lead row {r}");
+        }
+        assert_eq!(u.nnz(), 5);
+    }
+
+    #[test]
+    fn upper_triangle_inserts_missing_diag() {
+        let mut coo = Coo::new(2);
+        coo.push_sym(0, 1, 1.0);
+        let a = coo.to_csr();
+        let u = a.upper_triangle();
+        assert_eq!(u.row(0).0, &[0, 1]);
+        assert_eq!(u.row(1).0, &[1]);
+        assert_eq!(u.row(1).1, &[0.0]);
+    }
+
+    #[test]
+    fn permute_symmetric_roundtrip() {
+        let a = toy();
+        let perm = vec![2u32, 0, 1]; // old->new
+        let b = a.permute_symmetric(&perm);
+        b.validate().unwrap();
+        assert!(b.is_symmetric());
+        // permute back with inverse
+        let mut inv = vec![0u32; 3];
+        for (old, &new) in perm.iter().enumerate() {
+            inv[new as usize] = old as u32;
+        }
+        let a2 = b.permute_symmetric(&inv);
+        assert_eq!(a, a2);
+    }
+
+    #[test]
+    fn spmv_ref_matches_dense() {
+        let a = toy();
+        let x = vec![1.0, 2.0, 3.0];
+        let b = a.spmv_ref(&x);
+        assert_eq!(b, vec![2.0 * 1.0 + 1.0 * 2.0, 1.0 + 6.0 + 3.0, 2.0 + 12.0]);
+    }
+
+    #[test]
+    fn identity_spmv() {
+        let i = Csr::identity(4);
+        let x = vec![1.0, 2.0, 3.0, 4.0];
+        assert_eq!(i.spmv_ref(&x), x);
+    }
+}

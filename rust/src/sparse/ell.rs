@@ -1,0 +1,162 @@
+//! Mirrored padded-ELL packing — the Rust twin of
+//! `python/compile/kernels/symmspmv.py::pack_symmetric`.
+//!
+//! The AOT artifacts are shape-specialized `(n, wu, wl, block)` functions;
+//! the Rust coordinator packs any symmetric CSR matrix into the same
+//! layout at load time and feeds the arrays to
+//! [`crate::runtime::XlaRuntime::execute_mixed`]. Upper-triangle values are
+//! stored once; the mirrored lower part is index-only (see DESIGN.md
+//! §Hardware-Adaptation).
+
+use super::Csr;
+
+/// Packed operands for the XLA SymmSpMV artifact (f32).
+#[derive(Debug, Clone)]
+pub struct SymmEllPack {
+    /// Padded dimension (multiple of `block`).
+    pub n: usize,
+    /// Original matrix dimension.
+    pub n_orig: usize,
+    /// Upper width.
+    pub wu: usize,
+    /// Mirror width.
+    pub wl: usize,
+    /// (n, wu) row-major upper values, diagonal first, zero-padded.
+    pub vals_u: Vec<f32>,
+    /// (n, wu) upper columns (pad: own row).
+    pub cols_u: Vec<i32>,
+    /// (n, wl) flat indices into `vals_u` (pad: n*wu → appended zero slot).
+    pub idx_l: Vec<i32>,
+    /// (n, wl) mirrored columns (pad: own row).
+    pub cols_l: Vec<i32>,
+}
+
+impl SymmEllPack {
+    /// Pack a symmetric matrix (full storage) for the artifact shape.
+    /// `block` must match the AOT block size.
+    pub fn from_csr(a: &Csr, block: usize) -> SymmEllPack {
+        let upper = a.upper_triangle(); // diag leads each row
+        let n_orig = a.nrows();
+        let n = n_orig.div_ceil(block) * block;
+        let wu = (0..n_orig)
+            .map(|r| (upper.row_ptr[r + 1] - upper.row_ptr[r]) as usize)
+            .max()
+            .unwrap_or(1);
+        // mirror lists: (flat_idx, col) per row, built in ascending source
+        // row order like the python packer
+        let mut rows_l: Vec<Vec<(i32, i32)>> = vec![Vec::new(); n_orig];
+        for j in 0..n_orig {
+            let lo = upper.row_ptr[j] as usize;
+            let hi = upper.row_ptr[j + 1] as usize;
+            for (slot, idx) in (lo..hi).enumerate() {
+                let cj = upper.col[idx] as usize;
+                if cj != j {
+                    rows_l[cj].push(((j * wu + slot) as i32, j as i32));
+                }
+            }
+        }
+        let wl = rows_l.iter().map(Vec::len).max().unwrap_or(1).max(1);
+
+        let mut vals_u = vec![0f32; n * wu];
+        let mut cols_u: Vec<i32> = (0..n).flat_map(|r| std::iter::repeat_n(r as i32, wu)).collect();
+        let mut idx_l = vec![(n * wu) as i32; n * wl];
+        let mut cols_l: Vec<i32> = (0..n).flat_map(|r| std::iter::repeat_n(r as i32, wl)).collect();
+        for r in 0..n_orig {
+            let lo = upper.row_ptr[r] as usize;
+            let hi = upper.row_ptr[r + 1] as usize;
+            for (slot, idx) in (lo..hi).enumerate() {
+                vals_u[r * wu + slot] = upper.val[idx] as f32;
+                cols_u[r * wu + slot] = upper.col[idx] as i32;
+            }
+            for (k, &(fi, cj)) in rows_l[r].iter().enumerate() {
+                idx_l[r * wl + k] = fi;
+                cols_l[r * wl + k] = cj;
+            }
+        }
+        SymmEllPack { n, n_orig, wu, wl, vals_u, cols_u, idx_l, cols_l }
+    }
+
+    /// Reference evaluation of the packed operands (f32, same arithmetic
+    /// as the kernel) — validates packing without XLA.
+    pub fn apply_ref(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.n);
+        let mut flat = self.vals_u.clone();
+        flat.push(0.0);
+        let mut b = vec![0f32; self.n];
+        for r in 0..self.n {
+            let mut acc = 0f32;
+            for s in 0..self.wu {
+                acc += self.vals_u[r * self.wu + s] * x[self.cols_u[r * self.wu + s] as usize];
+            }
+            for s in 0..self.wl {
+                acc += flat[self.idx_l[r * self.wl + s] as usize]
+                    * x[self.cols_l[r * self.wl + s] as usize];
+            }
+            b[r] = acc;
+        }
+        b
+    }
+
+    /// Pad an f64 vector to the packed dimension as f32.
+    pub fn pad_x(&self, x: &[f64]) -> Vec<f32> {
+        let mut out = vec![0f32; self.n];
+        for (i, &v) in x.iter().enumerate() {
+            out[i] = v as f32;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen;
+
+    #[test]
+    fn pack_matches_serial_kernel() {
+        for a in [
+            gen::stencil2d_5pt(9, 7),
+            gen::spin_chain_xxz(7, gen::SpinKind::XXZ),
+            gen::graphene(5, 5),
+        ] {
+            let pack = SymmEllPack::from_csr(&a, 8);
+            let x: Vec<f64> = (0..a.nrows()).map(|i| ((i % 7) as f64) - 3.0).collect();
+            let want = a.spmv_ref(&x);
+            let got = pack.apply_ref(&pack.pad_x(&x));
+            for i in 0..a.nrows() {
+                assert!(
+                    (got[i] as f64 - want[i]).abs() < 1e-3 * (1.0 + want[i].abs()),
+                    "row {i}: {} vs {}",
+                    got[i],
+                    want[i]
+                );
+            }
+            // padded rows inert
+            for i in a.nrows()..pack.n {
+                assert_eq!(got[i], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn quickstart_stencil_shape_matches_aot_defaults() {
+        // aot.py defaults: n=4096, wu=3, wl=2, block=64 for the 64x64
+        // 5-point stencil — the xla_parity contract.
+        let a = gen::stencil2d_5pt(64, 64);
+        let pack = SymmEllPack::from_csr(&a, 64);
+        assert_eq!(pack.n, 4096);
+        assert_eq!(pack.wu, 3);
+        assert_eq!(pack.wl, 2);
+    }
+
+    #[test]
+    fn values_stored_once() {
+        let a = gen::stencil2d_9pt(6, 6);
+        let pack = SymmEllPack::from_csr(&a, 8);
+        let upper = a.upper_triangle();
+        let strict_upper = upper.nnz() - a.nrows();
+        let real_mirrors =
+            pack.idx_l.iter().filter(|&&i| (i as usize) < pack.n * pack.wu).count();
+        assert_eq!(real_mirrors, strict_upper);
+    }
+}

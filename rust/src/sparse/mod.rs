@@ -1,0 +1,12 @@
+//! Sparse matrix substrate: CSR storage, COO assembly, MatrixMarket I/O,
+//! symmetric permutation and matrix statistics (Table 2 quantities).
+
+mod csr;
+mod ell;
+mod mm;
+mod stats;
+
+pub use csr::{Coo, Csr};
+pub use ell::SymmEllPack;
+pub use mm::{read_matrix_market, write_matrix_market};
+pub use stats::MatrixStats;

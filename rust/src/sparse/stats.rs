@@ -1,0 +1,65 @@
+//! Matrix statistics — the quantities reported in the paper's Table 2.
+
+use super::Csr;
+
+/// Summary statistics for one benchmark matrix (one Table 2 row).
+#[derive(Debug, Clone)]
+pub struct MatrixStats {
+    /// Matrix name.
+    pub name: String,
+    /// Number of rows `N_r`.
+    pub nrows: usize,
+    /// Number of nonzeros `N_nz` (full storage).
+    pub nnz: usize,
+    /// Average nonzeros per row `N_nzr`.
+    pub nnzr: f64,
+    /// Bandwidth before reordering.
+    pub bw: usize,
+    /// Bandwidth after RCM reordering.
+    pub bw_rcm: usize,
+    /// CRS bytes of the upper triangle (for cache-candidate classification).
+    pub sym_bytes: usize,
+    /// CRS bytes of the full matrix.
+    pub full_bytes: usize,
+}
+
+impl MatrixStats {
+    /// Compute the full Table 2 row (RCM is recomputed here).
+    pub fn compute(name: &str, a: &Csr) -> MatrixStats {
+        let perm = crate::graph::rcm(a);
+        let a_rcm = a.permute_symmetric(&perm);
+        MatrixStats {
+            name: name.to_string(),
+            nrows: a.nrows(),
+            nnz: a.nnz(),
+            nnzr: a.nnzr(),
+            bw: a.bandwidth(),
+            bw_rcm: a_rcm.bandwidth(),
+            sym_bytes: a.upper_triangle().crs_bytes(),
+            full_bytes: a.crs_bytes(),
+        }
+    }
+
+    /// The paper's `N_nzr^symm` = (N_nzr - 1)/2 + 1 (Eq. 4).
+    pub fn nnzr_symm(&self) -> f64 {
+        (self.nnzr - 1.0) / 2.0 + 1.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen;
+
+    #[test]
+    fn stencil_stats() {
+        let a = gen::stencil2d_5pt(16, 16);
+        let s = MatrixStats::compute("stencil16", &a);
+        assert_eq!(s.nrows, 256);
+        // interior rows have 5 nnz, edges fewer
+        assert!(s.nnzr > 4.0 && s.nnzr <= 5.0);
+        assert_eq!(s.bw, 16);
+        assert!(s.bw_rcm <= s.bw, "RCM must not increase stencil bandwidth");
+        assert!((s.nnzr_symm() - ((s.nnzr - 1.0) / 2.0 + 1.0)).abs() < 1e-12);
+    }
+}

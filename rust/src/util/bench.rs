@@ -1,0 +1,86 @@
+//! Micro-benchmark harness (criterion substitute; offline environment has
+//! no criterion). Runs a closure repeatedly, reports min/median/mean and a
+//! derived GF/s if a flop count is supplied. Used by every `benches/`
+//! target via `harness = false`.
+
+use std::time::Instant;
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    /// Case label.
+    pub name: String,
+    /// Iterations timed.
+    pub iters: usize,
+    /// Minimum per-iteration seconds.
+    pub min: f64,
+    /// Median per-iteration seconds.
+    pub median: f64,
+    /// Mean per-iteration seconds.
+    pub mean: f64,
+}
+
+impl BenchStats {
+    /// GF/s given flops per iteration (uses the median).
+    pub fn gflops(&self, flops: f64) -> f64 {
+        flops / self.median / 1e9
+    }
+}
+
+/// Time `f` with auto-calibrated iteration count targeting
+/// `target_secs` of total runtime (min 5 iterations).
+pub fn bench<F: FnMut()>(name: &str, target_secs: f64, mut f: F) -> BenchStats {
+    // warmup + calibration
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().as_secs_f64().max(1e-9);
+    let iters = ((target_secs / once) as usize).clamp(5, 10_000);
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let min = samples[0];
+    let median = samples[samples.len() / 2];
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    BenchStats { name: name.to_string(), iters, min, median, mean }
+}
+
+/// Print a standard row for a stats record.
+pub fn report(stats: &BenchStats, flops: Option<f64>) {
+    match flops {
+        Some(fl) => println!(
+            "{:<44} {:>8} iters  median {:>10.3} ms  {:>8.3} GF/s",
+            stats.name,
+            stats.iters,
+            stats.median * 1e3,
+            stats.gflops(fl)
+        ),
+        None => println!(
+            "{:<44} {:>8} iters  median {:>10.3} ms  (min {:.3} ms)",
+            stats.name,
+            stats.iters,
+            stats.median * 1e3,
+            stats.min * 1e3
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let mut acc = 0u64;
+        let s = bench("spin", 0.01, || {
+            for i in 0..10_000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+        });
+        std::hint::black_box(acc);
+        assert!(s.min > 0.0 && s.median >= s.min && s.iters >= 5);
+    }
+}

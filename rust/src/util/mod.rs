@@ -1,0 +1,9 @@
+//! Small self-contained utilities standing in for crates that are not
+//! available in this offline environment (see DESIGN.md §Substitutions):
+//! a minimal JSON writer/parser ([`json`]), a micro-benchmark harness
+//! ([`bench`]) used by the `benches/` targets, and a tiny property-testing
+//! driver ([`prop`]).
+
+pub mod bench;
+pub mod json;
+pub mod prop;

@@ -1,0 +1,72 @@
+//! Tiny property-testing driver (proptest substitute for the offline
+//! environment): deterministic seeds, many cases, first-failure report.
+//! No shrinking — failures print the seed so the case can be replayed.
+
+use crate::gen::XorShift64;
+
+/// Run `cases` property checks. `f` gets a seeded RNG and returns
+/// `Err(description)` on failure; panics with seed + description so the
+/// failing case is reproducible.
+pub fn check<F: FnMut(&mut XorShift64) -> Result<(), String>>(name: &str, cases: usize, mut f: F) {
+    for case in 0..cases {
+        let seed = 0xC0FFEE ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = XorShift64::new(seed);
+        if let Err(msg) = f(&mut rng) {
+            panic!("property {name:?} failed on case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Random symmetric CSR matrix for property tests: `n` in [lo, hi),
+/// mixed structure families.
+pub fn arb_symmetric(rng: &mut XorShift64, lo: usize, hi: usize) -> crate::sparse::Csr {
+    let n = lo + rng.next_below(hi - lo);
+    match rng.next_below(5) {
+        0 => {
+            let nx = (n as f64).sqrt() as usize + 2;
+            crate::gen::stencil2d_5pt(nx, nx)
+        }
+        1 => {
+            let nx = (n as f64).sqrt() as usize + 2;
+            crate::gen::stencil2d_9pt(nx, nx.max(3))
+        }
+        2 => crate::gen::random_symmetric(n.max(8), 2 + rng.next_below(6), rng.next_u64()),
+        3 => {
+            let nx = (n as f64).sqrt() as usize + 2;
+            crate::gen::delaunay_like(nx, nx, rng.next_u64())
+        }
+        _ => crate::gen::dense_band(n.max(16), 4 + rng.next_below(12), (n / 2).max(4), rng.next_u64()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_runs_all_cases() {
+        let mut count = 0;
+        check("counts", 17, |_| {
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, 17);
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn check_reports_failure() {
+        check("fails", 3, |_| Err("boom".into()));
+    }
+
+    #[test]
+    fn arb_symmetric_is_symmetric() {
+        check("arb symmetric", 10, |rng| {
+            let a = arb_symmetric(rng, 20, 120);
+            if !a.is_symmetric() {
+                return Err("not symmetric".into());
+            }
+            a.validate().map_err(|e| e)
+        });
+    }
+}

@@ -1,0 +1,296 @@
+//! Edge cases and failure injection: degenerate matrices, pathological
+//! graphs, invalid inputs, and robustness of every public entry point.
+
+use race::color::{abmc_schedule, mc_schedule, verify_schedule};
+use race::coordinator::{self, Method};
+use race::gen;
+use race::graph;
+use race::kernels;
+use race::machine;
+use race::race::{RaceConfig, RaceEngine};
+use race::sparse::{Coo, Csr};
+
+/// A 1x1 matrix.
+fn tiny() -> Csr {
+    let mut coo = Coo::new(1);
+    coo.push(0, 0, 3.0);
+    coo.to_csr()
+}
+
+/// Diagonal-only matrix (no off-diagonal dependencies at all).
+fn diagonal(n: usize) -> Csr {
+    let mut coo = Coo::new(n);
+    for i in 0..n {
+        coo.push(i, i, 2.0 + i as f64);
+    }
+    coo.to_csr()
+}
+
+/// Star graph: one hub connected to everything (a dense row).
+fn star(n: usize) -> Csr {
+    let mut coo = Coo::new(n);
+    for i in 0..n {
+        coo.push(i, i, 10.0);
+    }
+    for i in 1..n {
+        coo.push_sym(0, i, -1.0);
+    }
+    coo.to_csr()
+}
+
+#[test]
+fn one_by_one_matrix() {
+    let a = tiny();
+    let cfg = RaceConfig { threads: 4, ..Default::default() };
+    let eng = RaceEngine::build(&a, &cfg).unwrap();
+    let upper = eng.permuted_matrix().upper_triangle();
+    let mut b = vec![0.0];
+    kernels::symmspmv_race(&eng, &upper, &[2.0], &mut b);
+    assert_eq!(b, vec![6.0]);
+}
+
+#[test]
+fn diagonal_matrix_all_methods() {
+    let a = diagonal(40);
+    for method in [Method::Race, Method::Mc, Method::Abmc, Method::Serial] {
+        let m = machine::ivb();
+        let r = coordinator::run_pipeline("stencil2d:4x4", method, 2, &m, true).unwrap();
+        assert!(r.max_rel_err < 1e-9);
+    }
+    // direct: diagonal SymmSpMV == scaling
+    let upper = a.upper_triangle();
+    let x: Vec<f64> = (0..40).map(|i| i as f64).collect();
+    let mut b = vec![0.0; 40];
+    kernels::symmspmv_serial(&upper, &x, &mut b);
+    for i in 0..40 {
+        assert_eq!(b[i], (2.0 + i as f64) * i as f64);
+    }
+}
+
+#[test]
+fn star_graph_dense_row() {
+    // paper footnote 7: a dense row collapses the level structure to
+    // N_l = 2 — parallelism exists but is minimal.
+    let a = star(200);
+    let (_, nl) = graph::bfs_levels_all(&a, 0);
+    assert!(nl <= 3, "star graph must have <= 3 levels, got {nl}");
+    let cfg = RaceConfig { threads: 8, ..Default::default() };
+    let eng = RaceEngine::build(&a, &cfg).unwrap();
+    // correctness still holds even with terrible eta
+    let upper = eng.permuted_matrix().upper_triangle();
+    let x: Vec<f64> = (0..200).map(|i| (i as f64).sin()).collect();
+    let xp = coordinator::permute_vec(&x, &eng.perm);
+    let mut b = vec![0.0; 200];
+    kernels::symmspmv_race(&eng, &upper, &xp, &mut b);
+    let want = a.spmv_ref(&x);
+    for (old, &new) in eng.perm.iter().enumerate() {
+        assert!((b[new as usize] - want[old]).abs() < 1e-10);
+    }
+}
+
+#[test]
+fn disconnected_components() {
+    // two independent grids in one matrix
+    let g = gen::stencil2d_5pt(8, 8);
+    let n = g.nrows();
+    let mut coo = Coo::new(2 * n);
+    for r in 0..n {
+        let (cols, vals) = g.row(r);
+        for (&c, &v) in cols.iter().zip(vals) {
+            coo.push(r, c as usize, v);
+            coo.push(n + r, n + c as usize, v);
+        }
+    }
+    let a = coo.to_csr();
+    let cfg = RaceConfig { threads: 4, ..Default::default() };
+    let eng = RaceEngine::build(&a, &cfg).unwrap();
+    assert!(race::race::verify_race_tree(&eng));
+    let upper = eng.permuted_matrix().upper_triangle();
+    let x = vec![1.0; 2 * n];
+    let mut b = vec![0.0; 2 * n];
+    kernels::symmspmv_race(&eng, &upper, &x, &mut b);
+    // rows sum to 1 in each copy
+    for v in &b {
+        assert!((v - 1.0).abs() < 1e-10);
+    }
+}
+
+#[test]
+fn zero_threads_rejected() {
+    let a = tiny();
+    let cfg = RaceConfig { threads: 0, ..Default::default() };
+    assert!(RaceEngine::build(&a, &cfg).is_err());
+    let cfg = RaceConfig { dist: 0, ..Default::default() };
+    assert!(RaceEngine::build(&a, &cfg).is_err());
+}
+
+#[test]
+fn oversubscribed_threads() {
+    // more threads than rows: must not panic, eta degrades gracefully
+    let a = gen::stencil2d_5pt(4, 4);
+    let cfg = RaceConfig { threads: 64, ..Default::default() };
+    let eng = RaceEngine::build(&a, &cfg).unwrap();
+    assert!(eng.efficiency() > 0.0);
+    let upper = eng.permuted_matrix().upper_triangle();
+    let x = vec![1.0; 16];
+    let mut b = vec![0.0; 16];
+    kernels::symmspmv_race(&eng, &upper, &x, &mut b);
+    for v in &b {
+        assert!((v - 1.0).abs() < 1e-10);
+    }
+}
+
+#[test]
+fn schedules_on_dense_block() {
+    // fully dense small matrix: every pair of rows conflicts; MC needs
+    // n colors, ABMC one block per color — still valid, fully serial.
+    let n = 12;
+    let mut coo = Coo::new(n);
+    for i in 0..n {
+        for j in 0..n {
+            coo.push(i, j, if i == j { 4.0 } else { -0.1 });
+        }
+    }
+    let a = coo.to_csr();
+    let mc = mc_schedule(&a, 2);
+    assert_eq!(mc.phases.len(), n, "dense block needs n colors");
+    let ap = a.permute_symmetric(&mc.perm);
+    assert!(verify_schedule(&ap, &mc));
+    let ab = abmc_schedule(&a, 4, 2);
+    let ap2 = a.permute_symmetric(&ab.perm);
+    assert!(verify_schedule(&ap2, &ab));
+}
+
+#[test]
+fn pipeline_rejects_unknown_inputs() {
+    let m = machine::ivb();
+    assert!(coordinator::run_pipeline("nope:1x1", Method::Race, 2, &m, true).is_err());
+    assert!("bogus".parse::<Method>().is_err());
+    assert!("race".parse::<Method>().is_ok());
+}
+
+#[test]
+fn mm_reader_rejects_nonsymmetric_for_pipeline() {
+    let dir = std::env::temp_dir().join("race_edge");
+    std::fs::create_dir_all(&dir).unwrap();
+    let p = dir.join("asym.mtx");
+    std::fs::write(&p, "%%MatrixMarket matrix coordinate real general\n2 2 2\n1 1 1.0\n1 2 2.0\n")
+        .unwrap();
+    let m = machine::ivb();
+    let res = coordinator::run_pipeline(p.to_str().unwrap(), Method::Race, 2, &m, true);
+    assert!(res.is_err(), "asymmetric matrix must be rejected");
+}
+
+#[test]
+fn json_parser_fuzz_does_not_panic() {
+    use race::util::json::Json;
+    let mut rng = gen::XorShift64::new(99);
+    let charset: Vec<char> = "{}[]\",:0123456789.eE+-truefalsn ".chars().collect();
+    for _ in 0..3000 {
+        let len = rng.next_below(60);
+        let s: String = (0..len).map(|_| charset[rng.next_below(charset.len())]).collect();
+        let _ = Json::parse(&s); // must never panic
+    }
+}
+
+#[test]
+fn gs_race_on_anisotropic_grid() {
+    let a0 = gen::stencil2d_9pt(15, 7);
+    let cfg = RaceConfig { threads: 3, dist: 1, ..Default::default() };
+    let eng = RaceEngine::build(&a0, &cfg).unwrap();
+    let a = eng.permuted_matrix().clone();
+    let b = vec![1.0; a.nrows()];
+    let mut x = vec![0.0; a.nrows()];
+    for _ in 0..400 {
+        kernels::gauss_seidel_race(&eng, &a, &b, &mut x);
+    }
+    let ax = a.spmv_ref(&x);
+    let res: f64 = ax.iter().zip(&b).map(|(p, q)| (p - q) * (p - q)).sum::<f64>().sqrt();
+    assert!(res < 1e-8, "GS residual {res}");
+}
+
+#[test]
+fn dist1_engine_rejected_for_kaczmarz() {
+    let a = gen::stencil2d_5pt(6, 6);
+    let cfg = RaceConfig { threads: 2, dist: 1, ..Default::default() };
+    let eng = RaceEngine::build(&a, &cfg).unwrap();
+    let a_perm = eng.permuted_matrix().clone();
+    let b = vec![1.0; 36];
+    let mut x = vec![0.0; 36];
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        kernels::kaczmarz_race(&eng, &a_perm, &b, &mut x);
+    }));
+    assert!(result.is_err(), "distance-1 engine must be rejected for Kaczmarz");
+}
+
+#[test]
+fn distance_k_greater_than_two() {
+    // the engine's distance-k machinery is generic (§4.2): verify k = 3
+    // and k = 4 trees keep same-color siblings distance-k independent.
+    for k in [3usize, 4] {
+        for (name, a) in [
+            ("stencil", gen::stencil2d_5pt(24, 24)),
+            ("graphene", gen::graphene(10, 10)),
+        ] {
+            let cfg = RaceConfig { threads: 4, dist: k, ..Default::default() };
+            let eng = RaceEngine::build(&a, &cfg).unwrap();
+            assert!(
+                race::race::verify_race_tree(&eng),
+                "{name}: distance-{k} violation"
+            );
+            // matvec still correct
+            let upper = eng.permuted_matrix().upper_triangle();
+            let x: Vec<f64> = (0..a.nrows()).map(|i| (i as f64 * 0.2).cos()).collect();
+            let xp = coordinator::permute_vec(&x, &eng.perm);
+            let mut b = vec![0.0; a.nrows()];
+            kernels::symmspmv_race(&eng, &upper, &xp, &mut b);
+            let want = a.spmv_ref(&x);
+            for (old, &new) in eng.perm.iter().enumerate() {
+                assert!((b[new as usize] - want[old]).abs() < 1e-10, "{name} k={k} row {old}");
+            }
+        }
+    }
+}
+
+#[test]
+fn ssor_pcg_on_anisotropic_problem() {
+    let a0 = gen::stencil2d_9pt(20, 20);
+    let cfg = RaceConfig { threads: 3, dist: 1, ..Default::default() };
+    let eng = RaceEngine::build(&a0, &cfg).unwrap();
+    let a = eng.permuted_matrix().clone();
+    let upper = a.upper_triangle();
+    let n = a.nrows();
+    let rhs: Vec<f64> = (0..n).map(|i| ((i * 7 % 13) as f64) - 6.0).collect();
+    let mut x = vec![0.0; n];
+    let a_ref = &a;
+    let eng_ref = &eng;
+    let res = kernels::pcg_solve(
+        &mut |v, out| kernels::symmspmv_serial(&upper, v, out),
+        &mut |r, z| kernels::ssor_precond(eng_ref, a_ref, r, z),
+        &rhs,
+        &mut x,
+        1e-9,
+        2000,
+    );
+    assert!(res.converged, "PCG iters={}", res.iterations);
+    let ax = a.spmv_ref(&x);
+    let rel = ax.iter().zip(&rhs).map(|(p, q)| (p - q) * (p - q)).sum::<f64>().sqrt()
+        / rhs.iter().map(|v| v * v).sum::<f64>().sqrt();
+    assert!(rel < 1e-7, "true residual {rel}");
+}
+
+#[test]
+fn ablation_flags_change_tree() {
+    let e = gen::corpus_entry("inline_1").unwrap();
+    let a = (e.build)(true);
+    let base = RaceConfig { threads: 12, ..Default::default() };
+    let full = RaceEngine::build(&a, &base).unwrap();
+    let norec =
+        RaceEngine::build(&a, &RaceConfig { no_recursion: true, ..base.clone() }).unwrap();
+    assert!(
+        norec.node_count() <= full.node_count(),
+        "no-recursion tree must not be larger"
+    );
+    // recursion must have been adding parallelism on this matrix
+    assert!(norec.efficiency() <= full.efficiency() + 1e-9);
+}

@@ -1,0 +1,191 @@
+//! Integration tests over the coordinator pipeline, the corpus, the
+//! figure-level claims at test scale, and the matvec service.
+
+use race::cachesim;
+use race::color::{abmc_schedule, mc_schedule};
+use race::coordinator::{self, Method};
+use race::gen;
+use race::machine;
+use race::race::{RaceConfig, RaceEngine};
+use race::sim;
+
+/// Every corpus matrix runs the full RACE pipeline correctly (small scale).
+#[test]
+fn corpus_race_pipeline_correct() {
+    let m = machine::skx();
+    for e in gen::corpus() {
+        let r = coordinator::run_pipeline(e.name, Method::Race, 4, &m, true)
+            .unwrap_or_else(|err| panic!("{}: {err}", e.name));
+        assert!(r.max_rel_err < 1e-9, "{}: err={}", e.name, r.max_rel_err);
+        assert!(r.eta > 0.0 && r.eta <= 1.0, "{}: eta={}", e.name, r.eta);
+        assert!(r.sim.gflops > 0.0, "{}", e.name);
+    }
+}
+
+/// The paper's global headline at test scale: summed over the corpus,
+/// RACE-simulated SymmSpMV beats the best coloring method clearly.
+#[test]
+fn race_beats_colorings_in_aggregate() {
+    let m = machine::skx();
+    let mut g_race_sum = 0.0;
+    let mut g_best_color_sum = 0.0;
+    for e in gen::corpus().into_iter().step_by(3) {
+        let a0 = (e.build)(true);
+        let perm = race::graph::rcm(&a0);
+        let a = a0.permute_symmetric(&perm);
+        let nnz = a.nnz();
+        let t = m.cores;
+        let cfg = RaceConfig { threads: t, ..Default::default() };
+        let eng = RaceEngine::build(&a, &cfg).unwrap();
+        let up = eng.permuted_matrix().upper_triangle();
+        let tr = cachesim::measure_symmspmv_traffic(&up, nnz, &m);
+        g_race_sum += sim::simulate_race(&m, &eng, &up, tr.bytes_total, nnz).gflops;
+
+        let mc = mc_schedule(&a, 2);
+        let a_mc = a.permute_symmetric(&mc.perm);
+        let up_mc = a_mc.upper_triangle();
+        let tr_mc = cachesim::measure_symmspmv_traffic(&up_mc, nnz, &m);
+        let g_mc = sim::simulate_color(&m, &mc, &up_mc, t, tr_mc.bytes_total, nnz).gflops;
+        let ab = abmc_schedule(&a, (a.nrows() / 64).max(16), 2);
+        let a_ab = a.permute_symmetric(&ab.perm);
+        let up_ab = a_ab.upper_triangle();
+        let tr_ab = cachesim::measure_symmspmv_traffic(&up_ab, nnz, &m);
+        let g_ab = sim::simulate_color(&m, &ab, &up_ab, t, tr_ab.bytes_total, nnz).gflops;
+        g_best_color_sum += g_mc.max(g_ab);
+    }
+    assert!(
+        g_race_sum > 1.2 * g_best_color_sum,
+        "aggregate RACE {g_race_sum:.2} vs best coloring {g_best_color_sum:.2}"
+    );
+}
+
+/// CG through every executor converges to the same solution.
+#[test]
+fn cg_all_backends_same_solution() {
+    use race::kernels::{self, cg_solve};
+    let a0 = gen::stencil2d_5pt(24, 24);
+    let n = a0.nrows();
+    let rhs = vec![1.0; n];
+
+    // serial in natural order
+    let upper0 = a0.upper_triangle();
+    let mut x_serial = vec![0.0; n];
+    let r0 = cg_solve(
+        &mut |v, out| kernels::symmspmv_serial(&upper0, v, out),
+        &rhs,
+        &mut x_serial,
+        1e-10,
+        4000,
+    );
+    assert!(r0.converged);
+
+    // RACE (permuted: solve in permuted space, compare back)
+    let cfg = RaceConfig { threads: 4, ..Default::default() };
+    let eng = RaceEngine::build(&a0, &cfg).unwrap();
+    let upper_r = eng.permuted_matrix().upper_triangle();
+    let rhs_p = coordinator::permute_vec(&rhs, &eng.perm);
+    let mut x_race_p = vec![0.0; n];
+    let r1 = cg_solve(
+        &mut |v, out| kernels::symmspmv_race(&eng, &upper_r, v, out),
+        &rhs_p,
+        &mut x_race_p,
+        1e-10,
+        4000,
+    );
+    assert!(r1.converged);
+    for (old, &new) in eng.perm.iter().enumerate() {
+        assert!(
+            (x_serial[old] - x_race_p[new as usize]).abs() < 1e-6,
+            "row {old}"
+        );
+    }
+}
+
+/// The matvec service handles a realistic request batch.
+#[test]
+fn matvec_service_batch() {
+    let svc = coordinator::MatvecService::build("graphene:8x8", 3, true).unwrap();
+    for k in 0..5 {
+        let x: Vec<f64> = (0..svc.n).map(|i| ((i + k) as f64 * 0.1).sin()).collect();
+        let (b, secs) = svc.matvec(&x).unwrap();
+        assert_eq!(b.len(), svc.n);
+        assert!(secs >= 0.0);
+        assert!(b.iter().all(|v| v.is_finite()));
+    }
+}
+
+/// TCP round-trip through the real server.
+#[test]
+fn serve_tcp_roundtrip() {
+    use std::io::{BufRead, BufReader, Write};
+    // pick an ephemeral port by binding ourselves first
+    let probe = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = probe.local_addr().unwrap();
+    drop(probe);
+    let addr_s = addr.to_string();
+    let addr_clone = addr_s.clone();
+    std::thread::spawn(move || {
+        let _ = coordinator::serve("stencil2d:8x8", 2, &addr_clone, true);
+    });
+    // wait for the listener
+    let mut stream = None;
+    for _ in 0..50 {
+        match std::net::TcpStream::connect(&addr_s) {
+            Ok(s) => {
+                stream = Some(s);
+                break;
+            }
+            Err(_) => std::thread::sleep(std::time::Duration::from_millis(20)),
+        }
+    }
+    let mut stream = stream.expect("server did not come up");
+    let x = vec![1.0; 64];
+    let req = format!("{{\"x\": {x:?}}}\n");
+    stream.write_all(req.as_bytes()).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let j = race::util::json::Json::parse(line.trim()).unwrap();
+    let b = j.get("b").and_then(|v| v.as_f64_arr()).expect("b array");
+    assert_eq!(b.len(), 64);
+    // 5-pt stencil rows sum to 1.0 -> A*ones = ones
+    for v in &b {
+        assert!((v - 1.0).abs() < 1e-9);
+    }
+}
+
+/// Figure-2 shape at test scale: MC SymmSpMV slower than SpMV on Spin.
+#[test]
+fn fig2_shape_mc_loses_to_spmv() {
+    let m = machine::ivb();
+    let e = gen::corpus_entry("Spin-26").unwrap();
+    let a0 = (e.build)(true);
+    let perm = race::graph::rcm(&a0);
+    let a = a0.permute_symmetric(&perm);
+    let nnz = a.nnz();
+    let t = m.cores;
+    let tr_spmv = cachesim::measure_spmv_traffic(&a, &m);
+    let g_spmv = sim::simulate_spmv(&m, &a, t, tr_spmv.bytes_total).gflops;
+    let mc = mc_schedule(&a, 2);
+    let a_mc = a.permute_symmetric(&mc.perm);
+    let up_mc = a_mc.upper_triangle();
+    let tr_mc = cachesim::measure_symmspmv_traffic(&up_mc, nnz, &m);
+    let g_mc = sim::simulate_color(&m, &mc, &up_mc, t, tr_mc.bytes_total, nnz).gflops;
+    assert!(g_mc < g_spmv, "MC {g_mc} must lose to SpMV {g_spmv} (paper Fig. 2)");
+}
+
+/// Explain path (Figs. 4-14 walkthrough) produces a sane tree for the
+/// paper's 16x16 stencil / 8 threads example.
+#[test]
+fn explain_walkthrough_numbers() {
+    let a = gen::race_paper_stencil(16, 16);
+    let cfg = RaceConfig { threads: 8, dist: 2, eps: vec![0.6, 0.5], ..Default::default() };
+    let eng = RaceEngine::build(&a, &cfg).unwrap();
+    // the paper's Fig. 13 finds ~8 stage-0 level groups and recursion on
+    // the inner ones; η = 0.73 for their exact stencil. Ours is a similar
+    // stencil: assert the same regime rather than the exact number.
+    assert!(eng.nlevels0 >= 14 && eng.nlevels0 <= 40, "nlevels={}", eng.nlevels0);
+    let eta = eng.efficiency();
+    assert!(eta > 0.45 && eta <= 1.0, "eta={eta}");
+    assert!(eng.node_count() > 4);
+}

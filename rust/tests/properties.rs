@@ -1,0 +1,275 @@
+//! Property-based invariants (DESIGN.md §Key invariants) over randomly
+//! generated symmetric matrices, using the in-tree prop driver.
+
+use race::color::{abmc_schedule, greedy_coloring, mc_schedule, verify_coloring, verify_schedule};
+use race::gen::XorShift64;
+use race::graph;
+use race::kernels;
+use race::race::{verify_race_tree, RaceConfig, RaceEngine};
+use race::util::prop::{arb_symmetric, check};
+
+fn rand_x(rng: &mut XorShift64, n: usize) -> Vec<f64> {
+    (0..n).map(|_| rng.next_f64() * 4.0 - 2.0).collect()
+}
+
+#[test]
+fn prop_rcm_is_bijection_and_preserves_structure() {
+    check("rcm bijection", 30, |rng| {
+        let a = arb_symmetric(rng, 30, 200);
+        let perm = graph::rcm(&a);
+        if !graph::is_permutation(&perm) {
+            return Err("not a permutation".into());
+        }
+        let b = a.permute_symmetric(&perm);
+        if b.nnz() != a.nnz() {
+            return Err("nnz changed".into());
+        }
+        if !b.is_symmetric() {
+            return Err("symmetry lost".into());
+        }
+        // row sums are permutation-invariant
+        let ones = vec![1.0; a.nrows()];
+        let sa = a.spmv_ref(&ones);
+        let sb = b.spmv_ref(&ones);
+        for (old, &new) in perm.iter().enumerate() {
+            if (sa[old] - sb[new as usize]).abs() > 1e-9 {
+                return Err(format!("row sum mismatch at {old}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_levels_partition_and_match_bfs() {
+    check("levels partition", 25, |rng| {
+        let a = arb_symmetric(rng, 30, 150);
+        let (levels, nl) = graph::bfs_levels_all(&a, 0);
+        let mut counts = vec![0usize; nl];
+        for &l in &levels {
+            if l as usize >= nl {
+                return Err("level out of range".into());
+            }
+            counts[l as usize] += 1;
+        }
+        if counts.iter().sum::<usize>() != a.nrows() {
+            return Err("levels don't partition".into());
+        }
+        // adjacency: neighbours differ by at most 1 level (within an island)
+        for v in 0..a.nrows() {
+            let (cols, _) = a.row(v);
+            for &c in cols {
+                let d = (levels[v] as i64 - levels[c as usize] as i64).abs();
+                if d > 1 && d != 2 && d != 3 {
+                    // islands are offset by +2, so cross-island "edges"
+                    // cannot exist at all; within an island d <= 1.
+                    return Err(format!("BFS level jump {d} on edge {v}-{c}"));
+                }
+                if d > 1 {
+                    return Err(format!("edge crosses islands?! {v}-{c}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_greedy_d2_coloring_valid() {
+    check("greedy d2", 20, |rng| {
+        let a = arb_symmetric(rng, 20, 120);
+        let c = greedy_coloring(&a, 2, None);
+        if !verify_coloring(&a, &c, 2) {
+            return Err("invalid distance-2 coloring".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_mc_abmc_schedules_valid() {
+    check("schedules valid", 15, |rng| {
+        let a = arb_symmetric(rng, 30, 150);
+        for sched in [mc_schedule(&a, 2), abmc_schedule(&a, 8 + rng.next_below(16), 2)] {
+            if !graph::is_permutation(&sched.perm) {
+                return Err("schedule perm invalid".into());
+            }
+            let ap = a.permute_symmetric(&sched.perm);
+            if !verify_schedule(&ap, &sched) {
+                return Err("schedule violates distance-2".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_race_tree_valid_and_partitions() {
+    check("race tree", 15, |rng| {
+        let a = arb_symmetric(rng, 40, 200);
+        let threads = 2 + rng.next_below(7);
+        let cfg = RaceConfig { threads, dist: 2, ..Default::default() };
+        let eng = RaceEngine::build(&a, &cfg).map_err(|e| e.to_string())?;
+        if !graph::is_permutation(&eng.perm) {
+            return Err("perm invalid".into());
+        }
+        if !verify_race_tree(&eng) {
+            return Err("distance-2 sibling violation".into());
+        }
+        // leaves partition rows
+        let mut covered = vec![false; a.nrows()];
+        for l in eng.leaves() {
+            let nd = &eng.tree[l as usize];
+            for r in nd.start..nd.end {
+                if covered[r as usize] {
+                    return Err("leaf overlap".into());
+                }
+                covered[r as usize] = true;
+            }
+        }
+        if !covered.iter().all(|&c| c) {
+            return Err("leaves don't cover all rows".into());
+        }
+        let eta = eng.efficiency();
+        if !(eta > 0.0 && eta <= 1.0 + 1e-9) {
+            return Err(format!("eta out of range: {eta}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_all_executors_agree() {
+    check("executors agree", 12, |rng| {
+        let a = arb_symmetric(rng, 40, 160);
+        let n = a.nrows();
+        let x = rand_x(rng, n);
+        let want = a.spmv_ref(&x);
+        let tol = |w: f64| 1e-9 * (1.0 + w.abs());
+
+        // serial + locks + private on natural order
+        let upper = a.upper_triangle();
+        let mut b1 = vec![0.0; n];
+        kernels::symmspmv_serial(&upper, &x, &mut b1);
+        let mut b2 = vec![0.0; n];
+        kernels::symmspmv_locks(&upper, &x, &mut b2, 4);
+        let mut b3 = vec![0.0; n];
+        kernels::symmspmv_private(&upper, &x, &mut b3, 3);
+        for i in 0..n {
+            if (b1[i] - want[i]).abs() > tol(want[i]) {
+                return Err(format!("serial row {i}"));
+            }
+            if (b2[i] - want[i]).abs() > tol(want[i]) {
+                return Err(format!("locks row {i}"));
+            }
+            if (b3[i] - want[i]).abs() > tol(want[i]) {
+                return Err(format!("private row {i}"));
+            }
+        }
+
+        // RACE
+        let cfg = RaceConfig { threads: 2 + rng.next_below(6), ..Default::default() };
+        let eng = RaceEngine::build(&a, &cfg).map_err(|e| e.to_string())?;
+        let up_r = eng.permuted_matrix().upper_triangle();
+        let xp = race::coordinator::permute_vec(&x, &eng.perm);
+        let mut br = vec![0.0; n];
+        kernels::symmspmv_race(&eng, &up_r, &xp, &mut br);
+        for (old, &new) in eng.perm.iter().enumerate() {
+            if (br[new as usize] - want[old]).abs() > tol(want[old]) {
+                return Err(format!("race row {old}"));
+            }
+        }
+
+        // MC + ABMC
+        for sched in [mc_schedule(&a, 2), abmc_schedule(&a, 12, 2)] {
+            let ap = a.permute_symmetric(&sched.perm);
+            let up = ap.upper_triangle();
+            let xp = race::coordinator::permute_vec(&x, &sched.perm);
+            let mut bc = vec![0.0; n];
+            kernels::symmspmv_color(&sched, &up, &xp, &mut bc, 4);
+            for (old, &new) in sched.perm.iter().enumerate() {
+                if (bc[new as usize] - want[old]).abs() > tol(want[old]) {
+                    return Err(format!("color row {old}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_unchecked_kernel_equals_checked() {
+    // §Perf: the bounds-check-free hot path must be bit-identical to the
+    // checked reference on every matrix family.
+    check("unchecked == checked", 20, |rng| {
+        let a = arb_symmetric(rng, 20, 150);
+        let upper = a.upper_triangle();
+        let n = a.nrows();
+        let x = rand_x(rng, n);
+        let mut b1 = vec![0.0; n];
+        kernels::symmspmv_range_checked(&upper, &x, &mut b1, 0, n);
+        let mut b2 = vec![0.0; n];
+        race::kernels::symmspmv_range_unchecked(&upper, &x, &mut b2, 0, n);
+        if b1 != b2 {
+            return Err("unchecked kernel diverges from checked".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_upper_triangle_diag_leads() {
+    check("upper triangle", 20, |rng| {
+        let a = arb_symmetric(rng, 10, 120);
+        let u = a.upper_triangle();
+        u.validate().map_err(|e| e)?;
+        for r in 0..u.nrows() {
+            let (cols, _) = u.row(r);
+            if cols[0] as usize != r {
+                return Err(format!("row {r}: diag not first"));
+            }
+            if cols.iter().any(|&c| (c as usize) < r) {
+                return Err(format!("row {r}: lower entry present"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_ell_pack_matches_reference() {
+    check("ell pack", 15, |rng| {
+        let a = arb_symmetric(rng, 16, 100);
+        let block = [4usize, 8, 16][rng.next_below(3)];
+        let pack = race::sparse::SymmEllPack::from_csr(&a, block);
+        if pack.n % block != 0 {
+            return Err("padding not block-aligned".into());
+        }
+        let x = rand_x(rng, a.nrows());
+        let got = pack.apply_ref(&pack.pad_x(&x));
+        let want = a.spmv_ref(&x);
+        for i in 0..a.nrows() {
+            if (got[i] as f64 - want[i]).abs() > 1e-2 * (1.0 + want[i].abs()) {
+                return Err(format!("row {i}: {} vs {}", got[i], want[i]));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_mm_roundtrip() {
+    check("matrixmarket roundtrip", 10, |rng| {
+        let a = arb_symmetric(rng, 10, 80);
+        let dir = std::env::temp_dir().join("race_prop_mm");
+        std::fs::create_dir_all(&dir).map_err(|e| e.to_string())?;
+        let p = dir.join(format!("m{}.mtx", rng.next_u64()));
+        race::sparse::write_matrix_market(&p, &a, true).map_err(|e| e.to_string())?;
+        let b = race::sparse::read_matrix_market(&p).map_err(|e| e.to_string())?;
+        let _ = std::fs::remove_file(&p);
+        if a != b {
+            return Err("roundtrip mismatch".into());
+        }
+        Ok(())
+    });
+}

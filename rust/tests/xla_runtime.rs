@@ -1,0 +1,104 @@
+//! XLA runtime integration: load the AOT artifacts produced by
+//! `make artifacts` and check the Pallas SymmSpMV against the native Rust
+//! kernel. Skips (with a loud message) if artifacts are missing — CI runs
+//! `make artifacts` first.
+
+use race::gen;
+use race::kernels;
+use race::runtime::{artifacts_dir, XlaRuntime};
+use race::sparse::SymmEllPack;
+
+fn artifact(name: &str) -> Option<std::path::PathBuf> {
+    let p = artifacts_dir().join(format!("{name}.hlo.txt"));
+    if p.exists() {
+        Some(p)
+    } else {
+        eprintln!("SKIP: artifact {} missing (run `make artifacts`)", p.display());
+        None
+    }
+}
+
+#[test]
+fn symmspmv_artifact_matches_native() {
+    let Some(path) = artifact("symmspmv") else { return };
+    let a = gen::stencil2d_5pt(64, 64);
+    let pack = SymmEllPack::from_csr(&a, 64);
+    assert_eq!((pack.n, pack.wu, pack.wl), (4096, 3, 2), "artifact shape contract");
+
+    let mut rt = XlaRuntime::cpu().unwrap();
+    rt.load_artifact("symmspmv", &path).unwrap();
+
+    let x: Vec<f64> = (0..a.nrows()).map(|i| (i as f64 * 0.11).cos()).collect();
+    let xp = pack.pad_x(&x);
+    let nn = pack.n as i64;
+    let out = rt
+        .execute_mixed(
+            "symmspmv",
+            &[(&pack.vals_u, &[nn, pack.wu as i64]), (&xp, &[nn])],
+            &[
+                (&pack.cols_u, &[nn, pack.wu as i64]),
+                (&pack.idx_l, &[nn, pack.wl as i64]),
+                (&pack.cols_l, &[nn, pack.wl as i64]),
+            ],
+        )
+        .unwrap()
+        .remove(0);
+
+    let upper = a.upper_triangle();
+    let mut want = vec![0.0f64; a.nrows()];
+    kernels::symmspmv_serial(&upper, &x, &mut want);
+    for i in 0..a.nrows() {
+        let e = (out[i] as f64 - want[i]).abs() / (1.0 + want[i].abs());
+        assert!(e < 1e-4, "row {i}: {} vs {}", out[i], want[i]);
+    }
+}
+
+#[test]
+fn cg_step_artifact_reduces_residual() {
+    let Some(path) = artifact("cg_step") else { return };
+    let a = gen::stencil2d_5pt(64, 64);
+    let n = a.nrows();
+    let pack = SymmEllPack::from_csr(&a, 64);
+    let mut rt = XlaRuntime::cpu().unwrap();
+    rt.load_artifact("cg_step", &path).unwrap();
+
+    // state: x=0, r=p=rhs, rs = |rhs|^2
+    let rhs = vec![1.0f32; pack.n];
+    let x0 = vec![0.0f32; pack.n];
+    let rs0: f32 = rhs.iter().map(|v| v * v).sum();
+    let nn = pack.n as i64;
+    let mut x = x0;
+    let mut r = rhs.clone();
+    let mut p = rhs.clone();
+    let mut rs = rs0;
+    for _ in 0..30 {
+        let out = rt
+            .execute_mixed(
+                "cg_step",
+                &[
+                    (&pack.vals_u, &[nn, pack.wu as i64]),
+                    (&x, &[nn]),
+                    (&r, &[nn]),
+                    (&p, &[nn]),
+                    (std::slice::from_ref(&rs), &[]),
+                ],
+                &[
+                    (&pack.cols_u, &[nn, pack.wu as i64]),
+                    (&pack.idx_l, &[nn, pack.wl as i64]),
+                    (&pack.cols_l, &[nn, pack.wl as i64]),
+                ],
+            )
+            .unwrap();
+        // cg_step returns the 4-tuple (x', r', p', rs')
+        assert_eq!(out.len(), 4, "expected 4-tuple from cg_step");
+        let mut it = out.into_iter();
+        x = it.next().unwrap();
+        r = it.next().unwrap();
+        p = it.next().unwrap();
+        rs = it.next().unwrap()[0];
+    }
+    assert!(rs < 0.01 * rs0, "CG must reduce the residual: {rs} vs {rs0}");
+    // solution approaches ones on the interior
+    let errs = x[..n].iter().filter(|v| (**v - 1.0).abs() > 0.2).count();
+    assert!(errs < n / 4, "solution far from ones: {errs}/{n}");
+}
