@@ -1,0 +1,112 @@
+//! MPK level-blocking bench: `p` naive back-to-back SpMV sweeps vs. the
+//! level-blocked diamond schedule — host wallclock GF/s plus simulated
+//! memory traffic per nonzero application, on a small corpus (one stencil,
+//! one lattice, one irregular graph).
+//!
+//! Emits `BENCH_mpk.json` (override the path with `RACE_BENCH_OUT`) so the
+//! perf trajectory is machine-readable from this PR onward:
+//! `{"bench": "mpk_blocking", "power": p, "cases": [{matrix, naive_gfs,
+//! mpk_gfs, speedup, naive_bytes_per_nnz, mpk_bytes_per_nnz,
+//! traffic_ratio, nlevels, nblocks}]}`.
+//!
+//! `RACE_BENCH_FULL=1` runs the larger variants.
+
+use race::cachesim;
+use race::coordinator::permute_vec;
+use race::gen;
+use race::kernels;
+use race::machine;
+use race::mpk::{powers_ref, MpkConfig, MpkPlan};
+use race::sparse::Csr;
+use race::util::bench;
+use race::util::json::Json;
+
+fn main() {
+    let small = std::env::var("RACE_BENCH_FULL").is_err();
+    let p = 4usize;
+    let cases: Vec<(&str, Csr)> = if small {
+        vec![
+            ("stencil2d:96x96", gen::stencil2d_5pt(96, 96)),
+            ("graphene:48x48", gen::graphene(48, 48)),
+            ("delaunay:48x48", gen::delaunay_like(48, 48, 9)),
+        ]
+    } else {
+        vec![
+            ("stencil2d:256x256", gen::stencil2d_5pt(256, 256)),
+            ("graphene:128x128", gen::graphene(128, 128)),
+            ("delaunay:128x128", gen::delaunay_like(128, 128, 9)),
+        ]
+    };
+    let mut rows = Vec::new();
+    for (name, a0) in cases {
+        let perm = race::graph::rcm(&a0);
+        let a = a0.permute_symmetric(&perm);
+        // scale the simulated cache so the matrix working set exceeds it —
+        // the regime where blocking matters (the paper-scale situation)
+        let m = machine::skx().under_pressure(a.crs_bytes(), 4);
+        let cfg = MpkConfig { p, cache_bytes: m.effective_cache() / 2 };
+        let plan = MpkPlan::build(&a, &cfg).expect("plan");
+        assert!(plan.verify(), "{name}: invalid plan");
+
+        let ap = plan.permuted_matrix();
+        // naive measured on the same level-permuted matrix: the ratio
+        // isolates blocking from ordering effects
+        let tr_blk = cachesim::measure_mpk_traffic(&plan, &m);
+        let tr_nv = cachesim::measure_spmv_powers_traffic(ap, p, &m);
+
+        let x: Vec<f64> = (0..a.nrows()).map(|i| ((i % 97) as f64) * 0.02 - 1.0).collect();
+        let xp = permute_vec(&x, &plan.perm);
+        let flops = 2.0 * a.nnz() as f64 * p as f64;
+        let s_nv = bench::bench(&format!("{name}/naive-{p}-sweeps"), 0.2, || {
+            std::hint::black_box(kernels::spmv_powers(ap, &xp, p, 1));
+        });
+        let s_blk = bench::bench(&format!("{name}/mpk-blocked"), 0.2, || {
+            std::hint::black_box(kernels::mpk_powers(&plan, &xp, 1));
+        });
+        bench::report(&s_nv, Some(flops));
+        bench::report(&s_blk, Some(flops));
+
+        // correctness paranoia: blocked result equals p reference sweeps
+        let want = powers_ref(&a, &x, p);
+        let ys = kernels::mpk_powers(&plan, &xp, 1);
+        let err = race::mpk::rel_err_vs_ref(&want[p - 1], &ys[p - 1], &plan.perm);
+        assert!(err <= 1e-9, "{name}: vector-relative error {err:.2e}");
+        // headline acceptance: strictly fewer bytes per nonzero application
+        assert!(
+            tr_blk.bytes_per_nnz_full < tr_nv.bytes_per_nnz_full,
+            "{name}: blocked traffic {:.2} must undercut naive {:.2}",
+            tr_blk.bytes_per_nnz_full,
+            tr_nv.bytes_per_nnz_full
+        );
+        println!(
+            "{name}: traffic {:.2} -> {:.2} B/nnz-app ({:.2}x), {} levels in {} blocks",
+            tr_nv.bytes_per_nnz_full,
+            tr_blk.bytes_per_nnz_full,
+            tr_nv.bytes_per_nnz_full / tr_blk.bytes_per_nnz_full,
+            plan.nlevels,
+            plan.nblocks()
+        );
+        rows.push(Json::obj(vec![
+            ("matrix", Json::Str(name.to_string())),
+            ("naive_gfs", Json::Num(s_nv.gflops(flops))),
+            ("mpk_gfs", Json::Num(s_blk.gflops(flops))),
+            ("speedup", Json::Num(s_nv.median / s_blk.median)),
+            ("naive_bytes_per_nnz", Json::Num(tr_nv.bytes_per_nnz_full)),
+            ("mpk_bytes_per_nnz", Json::Num(tr_blk.bytes_per_nnz_full)),
+            (
+                "traffic_ratio",
+                Json::Num(tr_nv.bytes_per_nnz_full / tr_blk.bytes_per_nnz_full),
+            ),
+            ("nlevels", Json::Num(plan.nlevels as f64)),
+            ("nblocks", Json::Num(plan.nblocks() as f64)),
+        ]));
+    }
+    let out = Json::obj(vec![
+        ("bench", Json::Str("mpk_blocking".to_string())),
+        ("power", Json::Num(p as f64)),
+        ("cases", Json::Arr(rows)),
+    ]);
+    let path = std::env::var("RACE_BENCH_OUT").unwrap_or_else(|_| "BENCH_mpk.json".to_string());
+    std::fs::write(&path, out.to_string() + "\n").expect("write BENCH_mpk.json");
+    println!("wrote {path}");
+}

@@ -1,7 +1,8 @@
 //! Pipeline coordinator: the L3 driver tying everything together —
 //! generate/load a matrix, RCM-preprocess, build a schedule (RACE / MC /
-//! ABMC / baselines), execute the real threaded kernel, measure simulated
-//! traffic and multicore performance, and emit a JSON-able report.
+//! ABMC / level-blocked MPK / baselines), execute the real threaded
+//! kernel, measure simulated traffic and multicore performance, and emit a
+//! JSON-able report.
 //!
 //! Also provides the threaded matvec service used by `race-cli serve`: the
 //! request loop keeps the compiled schedule + matrix resident and answers
@@ -15,6 +16,7 @@ use crate::gen;
 use crate::graph;
 use crate::kernels;
 use crate::machine::Machine;
+use crate::mpk::{MpkConfig, MpkPlan};
 use crate::perfmodel;
 use crate::race::{RaceConfig, RaceEngine};
 use crate::sim::{self, SimResult};
@@ -40,7 +42,14 @@ pub enum Method {
     /// Reference full-matrix SpMV ("MKL-IE" equivalent — §6.2.2 shows
     /// MKL-IE runs plain SpMV on the full matrix).
     SpmvRef,
+    /// Level-blocked matrix power kernel `y = A^p x` (the `mpk`
+    /// subsystem); the pipeline runs `p =` [`MPK_PIPELINE_POWER`].
+    Mpk,
 }
+
+/// Power used when MPK runs through the generic pipeline (the dedicated
+/// `race-cli mpk` subcommand exposes `--power`).
+pub const MPK_PIPELINE_POWER: usize = 4;
 
 impl std::str::FromStr for Method {
     type Err = anyhow::Error;
@@ -53,6 +62,7 @@ impl std::str::FromStr for Method {
             "locks" => Method::Locks,
             "private" => Method::Private,
             "spmv" | "mkl" | "mkl-ie" => Method::SpmvRef,
+            "mpk" => Method::Mpk,
             other => bail!("unknown method {other:?}"),
         })
     }
@@ -232,12 +242,33 @@ pub fn run_pipeline(
             let err = max_rel(&want, &b);
             (traffic, sim_res, host_seconds, max_rel_err) = (tr, s, dt, err);
         }
+        Method::Mpk => {
+            let p = MPK_PIPELINE_POWER;
+            let mcfg = MpkConfig { p, cache_bytes: machine.mpk_block_bytes() };
+            let plan = MpkPlan::build(&a, &mcfg).context("MPK plan")?;
+            let tr = cachesim::measure_mpk_traffic(&plan, machine);
+            let xp = permute_vec(&x, &plan.perm);
+            let t0 = std::time::Instant::now();
+            let ys = kernels::mpk_powers(&plan, &xp, threads);
+            let dt = t0.elapsed().as_secs_f64();
+            // vector-relative metric: per-element denominators are
+            // cancellation-fragile on unnormalized power vectors
+            let want_pows = crate::mpk::powers_ref(&a, &x, p);
+            let err = crate::mpk::rel_err_vs_ref(&want_pows[p - 1], &ys[p - 1], &plan.perm);
+            // per-sweep traffic feeds the saturating-SpMV model: the
+            // blocked schedule is bandwidth-bound like SpMV, with less data
+            let s = sim::simulate_spmv(machine, &a, threads, tr.bytes_total / p as u64);
+            (traffic, sim_res, host_seconds, max_rel_err) = (tr, s, dt, err);
+        }
     }
     let w = match method {
-        Method::SpmvRef => perfmodel::spmv_window(machine, traffic.alpha, stats.nnzr),
+        Method::SpmvRef | Method::Mpk => perfmodel::spmv_window(machine, traffic.alpha, stats.nnzr),
         _ => perfmodel::symmspmv_window(machine, traffic.alpha, stats.nnzr),
     };
-    let flops = 2.0 * nnz_full as f64;
+    let flops = match method {
+        Method::Mpk => 2.0 * nnz_full as f64 * MPK_PIPELINE_POWER as f64,
+        _ => 2.0 * nnz_full as f64,
+    };
     Ok(Report {
         matrix: name,
         method: format!("{method:?}"),
@@ -271,7 +302,9 @@ fn max_rel(want: &[f64], got: &[f64]) -> f64 {
         .fold(0.0, f64::max)
 }
 
-fn rel_err_permuted(want: &[f64], got_permuted: &[f64], perm: &[u32]) -> f64 {
+/// Max relative error between `want` (original indexing) and
+/// `got_permuted` (permuted indexing, `perm[old] = new`).
+pub fn rel_err_permuted(want: &[f64], got_permuted: &[f64], perm: &[u32]) -> f64 {
     let mut err = 0f64;
     for (old, &new) in perm.iter().enumerate() {
         let e = (want[old] - got_permuted[new as usize]).abs() / (1.0 + want[old].abs());
@@ -412,6 +445,7 @@ mod tests {
             Method::Locks,
             Method::Private,
             Method::SpmvRef,
+            Method::Mpk,
         ] {
             let r = run_pipeline("stencil2d:24x24", method, 3, &m, true).unwrap();
             assert!(r.max_rel_err < 1e-9, "{method:?}: err={}", r.max_rel_err);

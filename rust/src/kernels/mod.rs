@@ -1,14 +1,20 @@
 //! SpMV / SymmSpMV kernels (paper Algorithms 1 & 2) and their parallel
 //! executors: RACE fork-join, MC/ABMC color phases, and the lock-based and
-//! thread-private baselines mentioned in §1's related work.
+//! thread-private baselines mentioned in §1's related work — plus the
+//! level-blocked matrix-power executors ([`mpk_powers`],
+//! [`mpk_three_term`]) that drive [`crate::mpk`] plans.
 
 mod cg;
 mod executors;
+mod mpk;
 mod solvers;
 
 pub use cg::{cg_solve, pcg_solve, CgResult};
 pub use executors::{
     symmspmv_color, symmspmv_locks, symmspmv_private, symmspmv_race, SendPtr,
+};
+pub use mpk::{
+    mpk_execute, mpk_powers, mpk_powers_serial, mpk_three_term, spmv_powers, spmv_range_affine,
 };
 pub use solvers::{
     chebyshev_step, gauss_seidel_race, gauss_seidel_serial, kaczmarz_race, kaczmarz_serial,

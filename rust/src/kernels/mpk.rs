@@ -1,0 +1,294 @@
+//! MPK executors: run an [`MpkPlan`] schedule serially or threaded.
+//!
+//! The work unit is [`spmv_range_affine`] — the SpMV analogue of
+//! [`super::symmspmv_range`]: a row-range sweep computing
+//! `dst[row] = sigma·(A src)[row] + tau·src[row] + rho·acc[row]`.
+//! With `(sigma, tau, rho) = (1, 0, 0)` this is plain SpMV (monomial
+//! powers `y_k = A y_{k-1}`); with `tau`/`rho` set it evaluates one step
+//! of a shifted three-term recurrence `z_{k+1} = (σA + τI) z_k + ρ z_{k-1}`
+//! — the Chebyshev form — inside the same level-blocked schedule.
+//!
+//! Safety of the threaded paths is simpler than SymmSpMV's: the kernel is
+//! a pure gather (each row writes only `dst[row]`), so any row partition
+//! of one step is race-free. Steps still execute strictly in plan order —
+//! that ordering is the dependency guarantee [`MpkPlan::verify`] checks.
+//!
+//! Threading cost: each step is a scoped fork-join, so a multi-block plan
+//! pays ~`nblocks × p` spawn+join rounds versus `p` for the naive sweep —
+//! on small matrices that overhead can mask the cache win (the wallclock
+//! comparisons in `benches/mpk_blocking.rs` run `threads = 1` for this
+//! reason). A persistent worker pool is an open ROADMAP item.
+
+use super::SendPtr;
+use crate::mpk::MpkPlan;
+use crate::sparse::Csr;
+
+/// Below this many rows a step is not worth forking for.
+const MIN_PAR_ROWS: usize = 64;
+
+/// Row-range affine SpMV work unit:
+/// `dst[row] = sigma * Σ_c A[row,c]·src[c] + tau * src[row] + rho * acc[row]`
+/// for `row` in `[start, end)`. `acc` may be `None` when `rho == 0`.
+pub fn spmv_range_affine(
+    a: &Csr,
+    src: &[f64],
+    acc: Option<&[f64]>,
+    dst: &mut [f64],
+    sigma: f64,
+    tau: f64,
+    rho: f64,
+    start: usize,
+    end: usize,
+) {
+    assert!(end <= a.nrows());
+    assert!(src.len() >= a.nrows() && dst.len() >= a.nrows());
+    let rp = &a.row_ptr;
+    let col = &a.col;
+    let val = &a.val;
+    match acc {
+        None => {
+            debug_assert_eq!(rho, 0.0);
+            for row in start..end {
+                let lo = rp[row] as usize;
+                let hi = rp[row + 1] as usize;
+                let mut tmp = 0f64;
+                for idx in lo..hi {
+                    tmp += val[idx] * src[col[idx] as usize];
+                }
+                dst[row] = sigma * tmp + tau * src[row];
+            }
+        }
+        Some(acc) => {
+            assert!(acc.len() >= a.nrows());
+            for row in start..end {
+                let lo = rp[row] as usize;
+                let hi = rp[row + 1] as usize;
+                let mut tmp = 0f64;
+                for idx in lo..hi {
+                    tmp += val[idx] * src[col[idx] as usize];
+                }
+                dst[row] = sigma * tmp + tau * src[row] + rho * acc[row];
+            }
+        }
+    }
+}
+
+/// Run one row range, forking into up to `threads` disjoint chunks.
+fn run_range_threaded(
+    a: &Csr,
+    src: &[f64],
+    acc: Option<&[f64]>,
+    dst: &mut [f64],
+    sigma: f64,
+    tau: f64,
+    rho: f64,
+    lo: usize,
+    hi: usize,
+    threads: usize,
+) {
+    let rows = hi - lo;
+    if threads <= 1 || rows < 2 * MIN_PAR_ROWS {
+        spmv_range_affine(a, src, acc, dst, sigma, tau, rho, lo, hi);
+        return;
+    }
+    let nt = threads.min(rows.div_ceil(MIN_PAR_ROWS)).max(2);
+    let chunk = rows.div_ceil(nt);
+    let n = dst.len();
+    let dp = SendPtr(dst.as_mut_ptr());
+    std::thread::scope(|s| {
+        for t in 1..nt {
+            let t_lo = lo + t * chunk;
+            let t_hi = (t_lo + chunk).min(hi);
+            if t_lo >= t_hi {
+                break;
+            }
+            s.spawn(move || {
+                // SAFETY: chunks write disjoint dst rows (pure gather).
+                let dst = unsafe { std::slice::from_raw_parts_mut(dp.0, n) };
+                spmv_range_affine(a, src, acc, dst, sigma, tau, rho, t_lo, t_hi);
+            });
+        }
+        // SAFETY: chunk 0 is disjoint from every spawned chunk.
+        let dst0 = unsafe { std::slice::from_raw_parts_mut(dp.0, n) };
+        spmv_range_affine(a, src, acc, dst0, sigma, tau, rho, lo, (lo + chunk).min(hi));
+    }); // scope join == step barrier
+}
+
+/// Execute an MPK plan's steps over a window of vectors. A step with
+/// `power == k` reads `bufs[base + k - 1]` (and `bufs[base + k - 2]` when
+/// `rho != 0`) and writes `bufs[base + k]`; `bufs[..=base]` are the given
+/// starting vectors. Wrapped by [`mpk_powers`] / [`mpk_three_term`] —
+/// exposed for callers composing their own recurrences.
+pub fn mpk_execute(
+    plan: &MpkPlan,
+    bufs: &mut [Vec<f64>],
+    base: usize,
+    sigma: f64,
+    tau: f64,
+    rho: f64,
+    threads: usize,
+) {
+    let a = plan.permuted_matrix();
+    let n = a.nrows();
+    assert_eq!(bufs.len(), base + plan.cfg.p + 1, "need base + p + 1 vectors");
+    assert!(rho == 0.0 || base >= 1, "three-term recurrence needs base >= 1");
+    for b in bufs.iter() {
+        assert_eq!(b.len(), n);
+    }
+    for step in &plan.steps {
+        let k = step.power as usize;
+        let (lo, hi) = (step.row_lo as usize, step.row_hi as usize);
+        if lo == hi {
+            continue; // empty level range (island gap)
+        }
+        let (left, right) = bufs.split_at_mut(base + k);
+        let src: &[f64] = &left[base + k - 1];
+        let acc: Option<&[f64]> = if rho != 0.0 { Some(&left[base + k - 2]) } else { None };
+        let dst: &mut [f64] = &mut right[0];
+        run_range_threaded(a, src, acc, dst, sigma, tau, rho, lo, hi, threads);
+    }
+}
+
+/// Level-blocked matrix powers: returns `[A x, A² x, .., A^p x]` in the
+/// plan's permuted numbering (`x` must already be permuted with
+/// `plan.perm`, e.g. via [`crate::coordinator::permute_vec`]).
+pub fn mpk_powers(plan: &MpkPlan, x: &[f64], threads: usize) -> Vec<Vec<f64>> {
+    let p = plan.cfg.p;
+    let n = x.len();
+    let mut bufs = Vec::with_capacity(p + 1);
+    bufs.push(x.to_vec());
+    for _ in 0..p {
+        bufs.push(vec![0.0; n]);
+    }
+    mpk_execute(plan, &mut bufs, 0, 1.0, 0.0, 0.0, threads);
+    bufs.remove(0);
+    bufs
+}
+
+/// Serial MPK powers (the `threads == 1` executor, named for symmetry with
+/// [`super::symmspmv_serial`]).
+pub fn mpk_powers_serial(plan: &MpkPlan, x: &[f64]) -> Vec<Vec<f64>> {
+    mpk_powers(plan, x, 1)
+}
+
+/// Level-blocked three-term recurrence
+/// `z_{k+1} = (sigma·A + tau·I) z_k + rho·z_{k-1}`, `k = 0..p-1`, given
+/// `z_{-1} = z_prev` and `z_0`. Returns `[z_1, .., z_p]` (permuted
+/// numbering). With `sigma = 2/e`, `tau = -2c/e`, `rho = -1` this is the
+/// Chebyshev filter recurrence evaluated through the cache-blocked sweep.
+pub fn mpk_three_term(
+    plan: &MpkPlan,
+    z_prev: &[f64],
+    z0: &[f64],
+    sigma: f64,
+    tau: f64,
+    rho: f64,
+    threads: usize,
+) -> Vec<Vec<f64>> {
+    let p = plan.cfg.p;
+    let n = z0.len();
+    assert_eq!(z_prev.len(), n);
+    let mut bufs = Vec::with_capacity(p + 2);
+    bufs.push(z_prev.to_vec());
+    bufs.push(z0.to_vec());
+    for _ in 0..p {
+        bufs.push(vec![0.0; n]);
+    }
+    mpk_execute(plan, &mut bufs, 1, sigma, tau, rho, threads);
+    bufs.drain(0..2);
+    bufs
+}
+
+/// Naive baseline: `p` back-to-back full-matrix sweeps with the same work
+/// unit and threading as the blocked executor — the fair wallclock and
+/// traffic comparison target.
+pub fn spmv_powers(a: &Csr, x: &[f64], p: usize, threads: usize) -> Vec<Vec<f64>> {
+    let n = a.nrows();
+    assert_eq!(x.len(), n);
+    // no copies in the sweep loop — this path is timed against mpk_powers
+    let mut out: Vec<Vec<f64>> = (0..p).map(|_| vec![0.0; n]).collect();
+    for k in 0..p {
+        let (left, right) = out.split_at_mut(k);
+        let src: &[f64] = if k == 0 { x } else { &left[k - 1] };
+        run_range_threaded(a, src, None, &mut right[0], 1.0, 0.0, 0.0, 0, n, threads);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::permute_vec;
+    use crate::gen;
+    use crate::mpk::{powers_ref, MpkConfig, MpkPlan};
+
+    fn close_permuted(want: &[f64], got: &[f64], perm: &[u32], ctx: &str) {
+        let err = crate::mpk::rel_err_vs_ref(want, got, perm);
+        assert!(err <= 1e-9, "{ctx}: vector-relative error {err:.2e}");
+    }
+
+    #[test]
+    fn blocked_powers_match_reference() {
+        let a = gen::stencil2d_9pt(20, 16);
+        let x: Vec<f64> = (0..a.nrows()).map(|i| ((i * 7 % 23) as f64) * 0.1 - 1.0).collect();
+        let cfg = MpkConfig { p: 3, cache_bytes: 8 << 10 };
+        let plan = MpkPlan::build(&a, &cfg).unwrap();
+        assert!(plan.nblocks() > 1);
+        let want = powers_ref(&a, &x, 3);
+        let xp = permute_vec(&x, &plan.perm);
+        for threads in [1usize, 3] {
+            let ys = mpk_powers(&plan, &xp, threads);
+            for k in 0..3 {
+                close_permuted(&want[k], &ys[k], &plan.perm, &format!("k={k} t={threads}"));
+            }
+        }
+        // serial alias
+        let ys = mpk_powers_serial(&plan, &xp);
+        close_permuted(&want[2], &ys[2], &plan.perm, "serial");
+    }
+
+    #[test]
+    fn three_term_matches_unblocked_recurrence() {
+        let a = gen::graphene(10, 10);
+        let n = a.nrows();
+        let (sigma, tau, rho) = (0.35, -0.2, -1.0);
+        let z_prev: Vec<f64> = (0..n).map(|i| (i as f64 * 0.3).sin()).collect();
+        let z0: Vec<f64> = (0..n).map(|i| (i as f64 * 0.17).cos()).collect();
+        // reference on the original matrix
+        let (mut rp, mut r0) = (z_prev.clone(), z0.clone());
+        let mut want = Vec::new();
+        for _ in 0..4 {
+            let az = a.spmv_ref(&r0);
+            let z1: Vec<f64> =
+                (0..n).map(|i| sigma * az[i] + tau * r0[i] + rho * rp[i]).collect();
+            want.push(z1.clone());
+            rp = r0;
+            r0 = z1;
+        }
+        let cfg = MpkConfig { p: 4, cache_bytes: 6 << 10 };
+        let plan = MpkPlan::build(&a, &cfg).unwrap();
+        let zp_p = permute_vec(&z_prev, &plan.perm);
+        let z0_p = permute_vec(&z0, &plan.perm);
+        for threads in [1usize, 2] {
+            let zs = mpk_three_term(&plan, &zp_p, &z0_p, sigma, tau, rho, threads);
+            for k in 0..4 {
+                close_permuted(&want[k], &zs[k], &plan.perm, &format!("cheb k={k}"));
+            }
+        }
+    }
+
+    #[test]
+    fn naive_powers_helper_matches_reference() {
+        let a = gen::delaunay_like(10, 10, 3);
+        let x: Vec<f64> = (0..a.nrows()).map(|i| (i % 7) as f64 - 3.0).collect();
+        let want = powers_ref(&a, &x, 2);
+        for threads in [1usize, 4] {
+            let got = spmv_powers(&a, &x, 2, threads);
+            for k in 0..2 {
+                for i in 0..a.nrows() {
+                    assert!((want[k][i] - got[k][i]).abs() < 1e-12 * (1.0 + want[k][i].abs()));
+                }
+            }
+        }
+    }
+}

@@ -17,7 +17,11 @@
 //! * [`race`] — the paper's contribution: recursive level-group construction,
 //!   distance-k coloring, load balancing and the execution tree.
 //! * [`kernels`] — SpMV / SymmSpMV kernels and parallel executors driven by
-//!   RACE or coloring schedules, plus a CG solver.
+//!   RACE or coloring schedules, plus a CG solver and the MPK executors.
+//! * [`mpk`] — level-blocked Matrix Power Kernels `y = A^p x`: RACE levels
+//!   grouped into cache-sized blocks, powers swept inside each block
+//!   ("diamond" scheduling, after arXiv:2205.01598) so repeated SpMV turns
+//!   cache-resident instead of `p` memory-bound full sweeps.
 //! * [`cachesim`] — a multi-level LRU cache simulator (LIKWID substitute)
 //!   measuring α and bytes/nonzero traffic.
 //! * [`perfmodel`] — the roofline model of §3 (Eqs. 1–4).
@@ -54,6 +58,7 @@ pub mod gen;
 pub mod graph;
 pub mod kernels;
 pub mod machine;
+pub mod mpk;
 pub mod partition;
 pub mod perfmodel;
 pub mod race;

@@ -137,6 +137,27 @@ impl Machine {
         }
     }
 
+    /// Cache-budget target for one MPK level block
+    /// ([`crate::mpk::MpkConfig::cache_bytes`]): half the effective cache,
+    /// leaving the other half for the next block's incoming lines and the
+    /// streamed power vectors.
+    pub fn mpk_block_bytes(&self) -> usize {
+        (self.effective_cache() / 2).max(32 << 10)
+    }
+
+    /// Variant with the cache shrunk so a matrix of `matrix_bytes` exceeds
+    /// it `ratio`-fold — the paper-scale pressure regime the MPK traffic
+    /// comparisons (tests, benches, examples) are measured in. A flat
+    /// (non-victim) LLC keeps [`Machine::effective_cache`] equal to the
+    /// shrunk size.
+    pub fn under_pressure(&self, matrix_bytes: usize, ratio: usize) -> Machine {
+        let mut m = self.clone();
+        m.l3 = (matrix_bytes / ratio.max(1)).max(16 << 10);
+        m.l2 = 1 << 10;
+        m.l3_victim = false;
+        m
+    }
+
     /// Scale the machine to a reduced-size matrix analogue: the corpus
     /// matrices are ~1/40 the paper's size, so caches (and the per-sync
     /// cost relative to kernel time) are scaled by `ours/paper` rows to
@@ -176,6 +197,15 @@ mod tests {
         let h = host(8);
         assert!(h.bw_load > 1e8, "host load bw {}", h.bw_load);
         assert!(h.bw_copy > 1e8, "host copy bw {}", h.bw_copy);
+    }
+
+    #[test]
+    fn mpk_block_target() {
+        let s = skx();
+        assert_eq!(s.mpk_block_bytes(), s.effective_cache() / 2);
+        // floor kicks in for pathologically small scaled caches
+        let tiny = s.scaled_to(1, 1_000_000);
+        assert!(tiny.mpk_block_bytes() >= 32 << 10);
     }
 
     #[test]

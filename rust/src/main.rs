@@ -4,11 +4,15 @@
 //! index). Arg parsing is hand-rolled (offline environment has no clap).
 
 use anyhow::{bail, Result};
+use race::cachesim;
 use race::coordinator::{self, Method};
 use race::gen;
+use race::kernels;
 use race::machine;
+use race::mpk::{powers_ref, MpkConfig, MpkPlan};
 use race::race::{format_tree, RaceConfig, RaceEngine};
 use race::sparse::MatrixStats;
+use race::util::json::Json;
 
 const USAGE: &str = "race-cli — RACE: recursive algebraic coloring engine (paper reproduction)
 
@@ -17,10 +21,14 @@ USAGE:
       Print machine models (paper Table 1).
   race-cli corpus [--table 2|3] [--small] [--machine skx] [--only NAME]
       Corpus tables: Table 2 (matrix properties), Table 3 (alpha/intensity).
-  race-cli run --matrix SPEC [--method race|mc|abmc|serial|locks|private|spmv]
+  race-cli run --matrix SPEC [--method race|mc|abmc|serial|locks|private|spmv|mpk]
                [--threads N] [--machine ivb|skx|host] [--small] [--json]
       Full pipeline for one matrix (corpus name, generator spec like
       stencil2d:64x64 / spin:12 / graphene:32x32, or a .mtx path).
+  race-cli mpk --matrix SPEC [--power P] [--threads N] [--cache BYTES]
+               [--machine ivb|skx|host] [--small] [--json]
+      Level-blocked matrix power kernel y = A^p x: plan summary plus
+      traffic and wallclock comparison against p naive SpMV sweeps.
   race-cli explain [--stencil N] [--threads N] [--dist K] [--eps0 E]
       Walk the paper's Fig. 4-14 construction on the artificial stencil.
   race-cli serve --matrix SPEC [--threads N] [--addr HOST:PORT] [--small]
@@ -35,6 +43,27 @@ struct Args {
     flags: std::collections::HashMap<String, String>,
 }
 
+/// A token introduces a flag iff it starts with `--` and the remainder is
+/// not numeric — so negative numbers (`--shift -0.5`) parse as *values*,
+/// not as the next flag. A double-dash numeric (`--3`) is flag-style
+/// spelling of the negative number `-3` (see [`Args::parse`]).
+fn is_flag_token(tok: &str) -> bool {
+    match tok.strip_prefix("--") {
+        Some(rest) => !rest.is_empty() && rest.parse::<f64>().is_err(),
+        None => false,
+    }
+}
+
+/// Value tokens pass through verbatim, except `--N` numerics, which are
+/// normalized to `-N` so `get_f64`/`get_usize` can parse what
+/// [`is_flag_token`] classified as a number.
+fn normalize_value(tok: &str) -> String {
+    match tok.strip_prefix("--") {
+        Some(rest) if rest.parse::<f64>().is_ok() => format!("-{rest}"),
+        _ => tok.to_string(),
+    }
+}
+
 impl Args {
     fn parse(argv: &[String]) -> Args {
         let mut positional = Vec::new();
@@ -42,9 +71,10 @@ impl Args {
         let mut i = 0;
         while i < argv.len() {
             let a = &argv[i];
-            if let Some(key) = a.strip_prefix("--") {
-                if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
-                    flags.insert(key.to_string(), argv[i + 1].clone());
+            if is_flag_token(a) {
+                let key = a.strip_prefix("--").unwrap();
+                if i + 1 < argv.len() && !is_flag_token(&argv[i + 1]) {
+                    flags.insert(key.to_string(), normalize_value(&argv[i + 1]));
                     i += 2;
                 } else {
                     flags.insert(key.to_string(), "true".to_string());
@@ -97,6 +127,7 @@ fn main() -> Result<()> {
         "machine" => cmd_machine(&args),
         "corpus" => cmd_corpus(&args),
         "run" => cmd_run(&args),
+        "mpk" => cmd_mpk(&args),
         "explain" => cmd_explain(&args),
         "serve" => {
             let matrix = args.require("matrix")?;
@@ -230,6 +261,89 @@ fn cmd_run(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_mpk(args: &Args) -> Result<()> {
+    let matrix = args.require("matrix")?;
+    let p = args.get_usize("power", 4)?;
+    let threads = args.get_usize("threads", 4)?;
+    let mach = args.get("machine", "skx");
+    let m = machine::by_name(&mach).ok_or_else(|| anyhow::anyhow!("unknown machine {mach}"))?;
+    let (name, a0) = coordinator::resolve_matrix(&matrix, args.has("small"))?;
+    let perm = race::graph::rcm(&a0);
+    let a = a0.permute_symmetric(&perm);
+    let cache = args.get_usize("cache", m.mpk_block_bytes())?;
+    let plan = MpkPlan::build(&a, &MpkConfig { p, cache_bytes: cache })?;
+    let ap = plan.permuted_matrix();
+
+    // both measurements on the same (level-permuted) matrix, so the ratio
+    // isolates blocking from ordering effects
+    let tr_mpk = cachesim::measure_mpk_traffic(&plan, &m);
+    let tr_naive = cachesim::measure_spmv_powers_traffic(ap, p, &m);
+
+    let x: Vec<f64> = (0..a.nrows()).map(|i| ((i % 100) as f64) * 0.01 - 0.5).collect();
+    let xp = coordinator::permute_vec(&x, &plan.perm);
+    // warmed, repeated timings (median) — one-shot runs would charge the
+    // first-touch page faults to whichever path runs first
+    let s_naive = race::util::bench::bench("naive", 0.05, || {
+        std::hint::black_box(kernels::spmv_powers(ap, &xp, p, threads));
+    });
+    let s_mpk = race::util::bench::bench("mpk", 0.05, || {
+        std::hint::black_box(kernels::mpk_powers(&plan, &xp, threads));
+    });
+    let (dt_naive, dt_mpk) = (s_naive.median, s_mpk.median);
+
+    // correctness: p reference sweeps on the (RCM-ordered) input matrix,
+    // vector-relative metric (same number the tests and bench report)
+    let ys = kernels::mpk_powers(&plan, &xp, threads);
+    let want = powers_ref(&a, &x, p);
+    let err = race::mpk::rel_err_vs_ref(&want[p - 1], &ys[p - 1], &plan.perm);
+    let flops = 2.0 * a.nnz() as f64 * p as f64;
+    if args.has("json") {
+        let j = Json::obj(vec![
+            ("matrix", Json::Str(name)),
+            ("power", Json::Num(p as f64)),
+            ("threads", Json::Num(threads as f64)),
+            ("nlevels", Json::Num(plan.nlevels as f64)),
+            ("nblocks", Json::Num(plan.nblocks() as f64)),
+            ("nsteps", Json::Num(plan.steps.len() as f64)),
+            ("cache_bytes", Json::Num(cache as f64)),
+            ("mpk_bytes_per_nnz", Json::Num(tr_mpk.bytes_per_nnz_full)),
+            ("naive_bytes_per_nnz", Json::Num(tr_naive.bytes_per_nnz_full)),
+            ("mpk_seconds", Json::Num(dt_mpk)),
+            ("naive_seconds", Json::Num(dt_naive)),
+            ("mpk_gflops", Json::Num(flops / dt_mpk / 1e9)),
+            ("naive_gflops", Json::Num(flops / dt_naive / 1e9)),
+            ("max_rel_err", Json::Num(err)),
+        ]);
+        println!("{}", j.to_string());
+    } else {
+        println!("{name}: y = A^{p} x via level-blocked MPK on {}", m.name);
+        println!(
+            "  N_r={} N_nz={}  levels={} blocks={} steps={} (cache target {} KB)",
+            a.nrows(),
+            a.nnz(),
+            plan.nlevels,
+            plan.nblocks(),
+            plan.steps.len(),
+            cache / 1024
+        );
+        println!(
+            "  traffic/nnz-app (cachesim): MPK {:.2} B vs naive {:.2} B  ({:.2}x less)",
+            tr_mpk.bytes_per_nnz_full,
+            tr_naive.bytes_per_nnz_full,
+            tr_naive.bytes_per_nnz_full / tr_mpk.bytes_per_nnz_full
+        );
+        println!(
+            "  host wallclock: MPK {:.3} ms ({:.3} GF/s) vs naive {:.3} ms ({:.3} GF/s)",
+            dt_mpk * 1e3,
+            flops / dt_mpk / 1e9,
+            dt_naive * 1e3,
+            flops / dt_naive / 1e9
+        );
+        println!("  max rel err vs {p} reference sweeps: {err:.2e}");
+    }
+    Ok(())
+}
+
 fn cmd_explain(args: &Args) -> Result<()> {
     let stencil = args.get_usize("stencil", 16)?;
     let threads = args.get_usize("threads", 8)?;
@@ -254,4 +368,38 @@ fn cmd_explain(args: &Args) -> Result<()> {
         eng.effective_threads()
     );
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(tokens: &[&str]) -> Vec<String> {
+        tokens.iter().map(|t| t.to_string()).collect()
+    }
+
+    #[test]
+    fn parse_negative_numeric_flag_values() {
+        let a = Args::parse(&argv(&["--shift", "-0.5", "--offset", "-3", "--sci", "-1e-3"]));
+        assert_eq!(a.get_f64("shift", 0.0).unwrap(), -0.5);
+        assert_eq!(a.get("offset", ""), "-3");
+        assert_eq!(a.get_f64("sci", 0.0).unwrap(), -1e-3);
+        // double-dash numerics are values (normalized to negatives), not flags
+        let b = Args::parse(&argv(&["--level", "--2"]));
+        assert_eq!(b.get("level", ""), "-2");
+        assert_eq!(b.get_f64("level", 0.0).unwrap(), -2.0);
+        assert!(!b.has("2"));
+    }
+
+    #[test]
+    fn parse_flags_booleans_positionals() {
+        let a = Args::parse(&argv(&["pos1", "--small", "--threads", "8", "pos2", "-7"]));
+        assert!(a.has("small"), "--small followed by a flag stays boolean");
+        assert_eq!(a.get_usize("threads", 1).unwrap(), 8);
+        assert_eq!(a.positional, ["pos1", "pos2", "-7"]);
+        assert!(a.require("missing").is_err());
+        // trailing boolean flag
+        let b = Args::parse(&argv(&["--json"]));
+        assert!(b.has("json"));
+    }
 }

@@ -1,0 +1,408 @@
+//! MPK — level-blocked Matrix Power Kernels `y_k = A^k x`, k = 1..p.
+//!
+//! RACE's level construction (§4.1) resolves exactly the dependencies of
+//! repeated SpMV: BFS levels guarantee that every edge connects rows whose
+//! levels differ by at most one, so computing `y_k` on level `ℓ` needs
+//! `y_{k-1}` only on levels `ℓ-1..ℓ+1`. The RACE authors' follow-up paper
+//! (*Level-based Blocking for Sparse Matrices: Sparse Matrix-Power-Vector
+//! Multiplication*, arXiv:2205.01598) exploits this to turn `p`
+//! memory-bound full-matrix sweeps into one cache-resident sweep: group
+//! consecutive levels into blocks whose working set fits a cache-size
+//! target, and inside each block sweep the powers before moving on
+//! ("diamond" scheduling).
+//!
+//! This module builds the *plan* — permutation, level table, cache-sized
+//! blocks and the dependency-correct step sequence. The serial/threaded
+//! executors live in [`crate::kernels`] (`mpk_powers`, `mpk_three_term`),
+//! traffic measurement in [`crate::cachesim::measure_mpk_traffic`].
+//!
+//! Within one step all rows write only their own `y_k[row]` (SpMV is a
+//! pure gather), so any row partition is race-free — MPK needs levels but,
+//! unlike SymmSpMV, no distance-2 coloring.
+
+use crate::race::{subgraph_levels, RaceEngine};
+use crate::sparse::Csr;
+use anyhow::{bail, Result};
+
+/// MPK tuning parameters.
+#[derive(Debug, Clone)]
+pub struct MpkConfig {
+    /// Highest power `p` of `y = A^p x`; all intermediate powers are kept.
+    pub p: usize,
+    /// Cache-size target in bytes for one level block's working set
+    /// (matrix rows + `p+1` vector slices). See
+    /// [`crate::machine::Machine::mpk_block_bytes`].
+    pub cache_bytes: usize,
+}
+
+impl Default for MpkConfig {
+    fn default() -> Self {
+        MpkConfig { p: 4, cache_bytes: 2 << 20 }
+    }
+}
+
+/// One scheduled step: compute power `power` over levels
+/// `[level_lo, level_hi)` = rows `[row_lo, row_hi)`. Steps must execute in
+/// plan order; a step only reads vectors whose frontiers earlier steps
+/// have advanced far enough (checked by [`MpkPlan::verify`]).
+#[derive(Debug, Clone, Copy)]
+pub struct MpkStep {
+    /// Power index `k` in `1..=p`: reads `y_{k-1}`, writes `y_k`.
+    pub power: u32,
+    /// First level (inclusive).
+    pub level_lo: u32,
+    /// One-past-last level.
+    pub level_hi: u32,
+    /// First row in the MPK permutation (== `level_ptr[level_lo]`).
+    pub row_lo: u32,
+    /// One-past-last row (== `level_ptr[level_hi]`).
+    pub row_hi: u32,
+    /// Owning level block (diagnostics; the tail of the last block carries
+    /// the wind-down of all remaining powers).
+    pub block: u32,
+}
+
+/// The compiled MPK plan: level permutation + block/step schedule.
+pub struct MpkPlan {
+    /// Configuration used to build.
+    pub cfg: MpkConfig,
+    /// Symmetric permutation `perm[old] = new` sorting rows by BFS level.
+    pub perm: Vec<u32>,
+    /// Number of BFS levels (island gaps included, possibly empty).
+    pub nlevels: usize,
+    /// Row range of each level in the permuted numbering; `nlevels + 1`
+    /// entries.
+    pub level_ptr: Vec<u32>,
+    /// Level blocks: block `b` spans levels
+    /// `[block_ptr[b], block_ptr[b+1])`.
+    pub block_ptr: Vec<u32>,
+    /// Diamond schedule, in execution order.
+    pub steps: Vec<MpkStep>,
+    /// The permuted matrix the executors run on.
+    a_perm: Csr,
+}
+
+impl MpkPlan {
+    /// Build a plan for matrix `a`: RACE level construction (BFS from a
+    /// pseudo-peripheral root, islands offset so they stay independent),
+    /// then cache-sized blocking and diamond scheduling.
+    pub fn build(a: &Csr, cfg: &MpkConfig) -> Result<MpkPlan> {
+        let n = a.nrows();
+        if n == 0 {
+            bail!("MPK plan needs a non-empty matrix");
+        }
+        let group: Vec<u32> = (0..n as u32).collect();
+        let lv = subgraph_levels(a, &group, 0);
+        Self::from_levels(a, &lv.level, lv.nlevels, cfg)
+    }
+
+    /// Build a plan reusing the stage-0 level construction of an existing
+    /// [`RaceEngine`]. `a` must be the same matrix the engine was built
+    /// from (the engine stores only its own permuted copy). Falls back to
+    /// a fresh level construction when the engine exited before computing
+    /// levels (single thread / tiny matrix).
+    pub fn from_engine(a: &Csr, eng: &RaceEngine, cfg: &MpkConfig) -> Result<MpkPlan> {
+        if a.nrows() != eng.perm.len() {
+            bail!(
+                "matrix has {} rows but engine was built for {}",
+                a.nrows(),
+                eng.perm.len()
+            );
+        }
+        if eng.level0.len() != a.nrows() {
+            return Self::build(a, cfg);
+        }
+        Self::from_levels(a, &eng.level0, eng.nlevels0, cfg)
+    }
+
+    fn from_levels(a: &Csr, level_of: &[u32], nlevels: usize, cfg: &MpkConfig) -> Result<MpkPlan> {
+        let n = a.nrows();
+        if cfg.p == 0 {
+            bail!("power p must be >= 1");
+        }
+        if cfg.cache_bytes == 0 {
+            bail!("cache_bytes must be > 0");
+        }
+        debug_assert_eq!(level_of.len(), n);
+        let nlevels = nlevels.max(1);
+        // ---- permutation: stable sort by level keeps prior relative row
+        // order (locality) inside each level ----
+        let mut idx: Vec<u32> = (0..n as u32).collect();
+        idx.sort_by_key(|&i| level_of[i as usize]);
+        let mut perm = vec![0u32; n];
+        for (new, &old) in idx.iter().enumerate() {
+            perm[old as usize] = new as u32;
+        }
+        let a_perm = a.permute_symmetric(&perm);
+        // ---- level row ranges ----
+        let mut level_ptr = vec![0u32; nlevels + 1];
+        for &l in level_of {
+            level_ptr[l as usize + 1] += 1;
+        }
+        for l in 0..nlevels {
+            level_ptr[l + 1] += level_ptr[l];
+        }
+        // ---- cache-sized blocks: greedily append levels while the block
+        // working set (matrix slice + p+1 vector slices) fits ----
+        let level_bytes = |l: usize| -> usize {
+            range_bytes(&a_perm.row_ptr, level_ptr[l] as usize, level_ptr[l + 1] as usize, cfg.p)
+        };
+        let mut block_ptr: Vec<u32> = vec![0];
+        let mut lvl = 0usize;
+        while lvl < nlevels {
+            let mut bytes = level_bytes(lvl);
+            let mut hi = lvl + 1;
+            while hi < nlevels && bytes + level_bytes(hi) <= cfg.cache_bytes {
+                bytes += level_bytes(hi);
+                hi += 1;
+            }
+            block_ptr.push(hi as u32);
+            lvl = hi;
+        }
+        // ---- diamond schedule ----
+        // f[k] = number of leading levels for which y_k is complete
+        // (exclusive frontier); y_0 = x is known everywhere.
+        let p = cfg.p;
+        let last = nlevels as i64;
+        let mut f: Vec<i64> = vec![0; p + 1];
+        f[0] = last;
+        let mut steps = Vec::new();
+        for b in 0..block_ptr.len() - 1 {
+            let e = block_ptr[b + 1] as i64;
+            for k in 1..=p {
+                // y_k on level ℓ needs y_{k-1} on ℓ+1 — except at the top
+                // level, which has no upper neighbour.
+                let limit = if f[k - 1] == last { last } else { f[k - 1] - 1 };
+                let hi = e.min(limit);
+                if hi > f[k] {
+                    let (lo_l, hi_l) = (f[k] as usize, hi as usize);
+                    steps.push(MpkStep {
+                        power: k as u32,
+                        level_lo: lo_l as u32,
+                        level_hi: hi_l as u32,
+                        row_lo: level_ptr[lo_l],
+                        row_hi: level_ptr[hi_l],
+                        block: b as u32,
+                    });
+                    f[k] = hi;
+                }
+            }
+        }
+        // the final block's pass winds every power down to the last level
+        debug_assert!(f.iter().all(|&fk| fk == last), "incomplete schedule: {f:?}");
+        Ok(MpkPlan { cfg: cfg.clone(), perm, nlevels, level_ptr, block_ptr, steps, a_perm })
+    }
+
+    /// The permuted matrix the executors run on.
+    pub fn permuted_matrix(&self) -> &Csr {
+        &self.a_perm
+    }
+
+    /// Number of level blocks.
+    pub fn nblocks(&self) -> usize {
+        self.block_ptr.len() - 1
+    }
+
+    /// Level of each permuted row (derived from `level_ptr`).
+    pub fn row_levels(&self) -> Vec<u32> {
+        let mut out = vec![0u32; self.a_perm.nrows()];
+        for l in 0..self.nlevels {
+            for r in self.level_ptr[l]..self.level_ptr[l + 1] {
+                out[r as usize] = l as u32;
+            }
+        }
+        out
+    }
+
+    /// Check the plan invariants: steps extend each power's frontier
+    /// contiguously, never read past the producing power's frontier, end
+    /// with every power complete — and the level structure itself is valid
+    /// (every matrix edge spans at most one level).
+    pub fn verify(&self) -> bool {
+        let nl = self.nlevels;
+        let mut f = vec![0usize; self.cfg.p + 1];
+        f[0] = nl;
+        for s in &self.steps {
+            let k = s.power as usize;
+            if k == 0 || k > self.cfg.p {
+                return false;
+            }
+            if s.level_lo as usize != f[k] || s.level_hi as usize <= f[k] {
+                return false; // frontier must extend contiguously
+            }
+            let need = (s.level_hi as usize + 1).min(nl);
+            if f[k - 1] < need {
+                return false; // reads past the producer's frontier
+            }
+            if self.level_ptr[s.level_lo as usize] != s.row_lo
+                || self.level_ptr[s.level_hi as usize] != s.row_hi
+            {
+                return false;
+            }
+            f[k] = s.level_hi as usize;
+        }
+        if f.iter().any(|&fk| fk != nl) {
+            return false;
+        }
+        let row_level = self.row_levels();
+        for r in 0..self.a_perm.nrows() {
+            let (cols, _) = self.a_perm.row(r);
+            for &c in cols {
+                let d = (row_level[r] as i64 - row_level[c as usize] as i64).abs();
+                if d > 1 {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    /// Estimated working-set bytes of block `b` (the quantity the blocking
+    /// heuristic bounds by `cfg.cache_bytes`).
+    pub fn block_bytes(&self, b: usize) -> usize {
+        let l0 = self.block_ptr[b] as usize;
+        let l1 = self.block_ptr[b + 1] as usize;
+        range_bytes(
+            &self.a_perm.row_ptr,
+            self.level_ptr[l0] as usize,
+            self.level_ptr[l1] as usize,
+            self.cfg.p,
+        )
+    }
+}
+
+/// Working-set bytes of the permuted row range `[r0, r1)` for a power-`p`
+/// sweep: matrix slice (12 B per nonzero + 4 B per row of row pointer)
+/// plus one f64 per row for each of the `p + 1` power vectors.
+fn range_bytes(row_ptr: &[u32], r0: usize, r1: usize, p: usize) -> usize {
+    let nnz = (row_ptr[r1] - row_ptr[r0]) as usize;
+    nnz * 12 + (r1 - r0) * (4 + 8 * (p + 1))
+}
+
+/// Reference powers: `p` applications of [`Csr::spmv_ref`] on the
+/// *original* (unpermuted) matrix. Returns `[A x, A² x, .., A^p x]`.
+pub fn powers_ref(a: &Csr, x: &[f64], p: usize) -> Vec<Vec<f64>> {
+    let mut out = Vec::with_capacity(p);
+    let mut cur = x.to_vec();
+    for _ in 0..p {
+        cur = a.spmv_ref(&cur);
+        out.push(cur.clone());
+    }
+    out
+}
+
+/// Vector-relative error between `want` (original indexing) and
+/// `got_permuted` (`perm[old] = new`): max absolute difference divided by
+/// `1 + max|want|`. The magnitude-relative metric the MPK tests and
+/// benches compare against 1e-9 — power vectors of unnormalized operators
+/// grow large, where per-element denominators would turn benign rounding
+/// on cancellation-prone rows into spurious failures.
+pub fn rel_err_vs_ref(want: &[f64], got_permuted: &[f64], perm: &[u32]) -> f64 {
+    let scale = want.iter().fold(0f64, |m, w| m.max(w.abs()));
+    let mut err = 0f64;
+    for (old, &new) in perm.iter().enumerate() {
+        err = err.max((want[old] - got_permuted[new as usize]).abs());
+    }
+    err / (1.0 + scale)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen;
+    use crate::graph::is_permutation;
+
+    #[test]
+    fn plan_structure_on_stencil() {
+        let a = gen::stencil2d_5pt(32, 32);
+        let cfg = MpkConfig { p: 3, cache_bytes: 16 << 10 };
+        let plan = MpkPlan::build(&a, &cfg).unwrap();
+        assert!(is_permutation(&plan.perm));
+        assert!(plan.nlevels > 10, "2D stencil should have many levels");
+        assert!(plan.nblocks() > 1, "16 KB target must split this matrix");
+        assert!(plan.nblocks() < plan.nlevels, "blocks should group levels");
+        assert!(plan.verify());
+        // level_ptr covers all rows
+        assert_eq!(plan.level_ptr[plan.nlevels] as usize, a.nrows());
+        // every non-final block respects the cache target
+        for b in 0..plan.nblocks() - 1 {
+            let levels = (plan.block_ptr[b + 1] - plan.block_ptr[b]) as usize;
+            assert!(
+                levels == 1 || plan.block_bytes(b) <= cfg.cache_bytes,
+                "block {b}: {} bytes over target",
+                plan.block_bytes(b)
+            );
+        }
+    }
+
+    #[test]
+    fn p1_is_a_plain_blocked_sweep() {
+        let a = gen::stencil2d_5pt(20, 20);
+        let cfg = MpkConfig { p: 1, cache_bytes: 8 << 10 };
+        let plan = MpkPlan::build(&a, &cfg).unwrap();
+        assert!(plan.verify());
+        assert_eq!(plan.steps.len(), plan.nblocks());
+        let rows: u32 = plan.steps.iter().map(|s| s.row_hi - s.row_lo).sum();
+        assert_eq!(rows as usize, a.nrows());
+    }
+
+    #[test]
+    fn huge_cache_gives_single_block() {
+        let a = gen::graphene(12, 12);
+        let cfg = MpkConfig { p: 4, cache_bytes: 1 << 30 };
+        let plan = MpkPlan::build(&a, &cfg).unwrap();
+        assert_eq!(plan.nblocks(), 1);
+        assert!(plan.verify());
+        // one block: each power is one full sweep
+        assert_eq!(plan.steps.len(), 4);
+    }
+
+    #[test]
+    fn disconnected_islands_stay_valid() {
+        // two disjoint paths; island level offsets leave empty levels
+        let mut coo = crate::sparse::Coo::new(12);
+        for i in 0..5 {
+            coo.push_sym(i, i + 1, 1.0);
+        }
+        for i in 6..11 {
+            coo.push_sym(i, i + 1, 1.0);
+        }
+        for i in 0..12 {
+            coo.push(i, i, 2.0);
+        }
+        let a = coo.to_csr();
+        let cfg = MpkConfig { p: 3, cache_bytes: 256 };
+        let plan = MpkPlan::build(&a, &cfg).unwrap();
+        assert!(plan.verify(), "island plan must stay dependency-correct");
+        let x: Vec<f64> = (0..12).map(|i| i as f64 * 0.5 - 3.0).collect();
+        let want = powers_ref(&a, &x, 3);
+        let xp = crate::coordinator::permute_vec(&x, &plan.perm);
+        let ys = crate::kernels::mpk_powers(&plan, &xp, 1);
+        for (old, &new) in plan.perm.iter().enumerate() {
+            let (w, g) = (want[2][old], ys[2][new as usize]);
+            assert!((w - g).abs() < 1e-12 * (1.0 + w.abs()), "row {old}: {w} vs {g}");
+        }
+    }
+
+    #[test]
+    fn from_engine_matches_build() {
+        use crate::race::{RaceConfig, RaceEngine};
+        let a = gen::stencil2d_5pt(24, 24);
+        let eng = RaceEngine::build(&a, &RaceConfig { threads: 4, ..Default::default() }).unwrap();
+        let cfg = MpkConfig { p: 2, cache_bytes: 8 << 10 };
+        let plan = MpkPlan::from_engine(&a, &eng, &cfg).unwrap();
+        assert!(plan.verify());
+        assert_eq!(plan.nlevels, eng.nlevels0);
+        // single-thread engines skip level construction; fallback path
+        let eng1 = RaceEngine::build(&a, &RaceConfig { threads: 1, ..Default::default() }).unwrap();
+        let plan1 = MpkPlan::from_engine(&a, &eng1, &cfg).unwrap();
+        assert!(plan1.verify());
+    }
+
+    #[test]
+    fn bad_config_rejected() {
+        let a = gen::stencil2d_5pt(4, 4);
+        assert!(MpkPlan::build(&a, &MpkConfig { p: 0, cache_bytes: 1024 }).is_err());
+        assert!(MpkPlan::build(&a, &MpkConfig { p: 2, cache_bytes: 0 }).is_err());
+    }
+}

@@ -85,6 +85,11 @@ pub struct RaceEngine {
     a_perm: Csr,
     /// Number of levels found at stage 0 (`N_ℓ`).
     pub nlevels0: usize,
+    /// Stage-0 BFS level of every *original* vertex (§4.1) — reused by the
+    /// matrix-power planner ([`crate::mpk::MpkPlan::from_engine`]). Empty
+    /// when the build exited before level construction (single thread or
+    /// trivially small matrix).
+    pub level0: Vec<u32>,
 }
 
 impl RaceEngine {
@@ -102,7 +107,8 @@ impl RaceEngine {
         let mut order: Vec<u32> = (0..n as u32).collect();
         let mut tree: Vec<TreeNode> = vec![TreeNode::root(n as u32, cfg.threads as u32)];
         let mut nlevels0 = 0usize;
-        Self::refine(a, cfg, &mut order, &mut tree, 0, 0, &mut nlevels0);
+        let mut level0: Vec<u32> = Vec::new();
+        Self::refine(a, cfg, &mut order, &mut tree, 0, 0, &mut nlevels0, &mut level0);
         // order -> perm
         let mut perm = vec![0u32; n];
         for (new, &old) in order.iter().enumerate() {
@@ -110,7 +116,7 @@ impl RaceEngine {
         }
         let a_perm = a.permute_symmetric(&perm);
         tree::compute_eff_rows(&mut tree, 0);
-        Ok(RaceEngine { cfg: cfg.clone(), tree, perm, a_perm, nlevels0 })
+        Ok(RaceEngine { cfg: cfg.clone(), tree, perm, a_perm, nlevels0, level0 })
     }
 
     /// The permuted matrix the executors run on.
@@ -167,6 +173,7 @@ impl RaceEngine {
         node_id: usize,
         stage: usize,
         nlevels0: &mut usize,
+        level0: &mut Vec<u32>,
     ) {
         let (start, end, threads) =
             (tree[node_id].start as usize, tree[node_id].end as usize, tree[node_id].threads);
@@ -180,6 +187,9 @@ impl RaceEngine {
         let lv = subgraph_levels(a, &order[start..end], halo);
         if stage == 0 {
             *nlevels0 = lv.nlevels;
+            // at stage 0 `order` is still the identity, so positional
+            // levels are per-vertex levels — kept for the MPK planner.
+            *level0 = lv.level.clone();
         }
         if lv.nlevels < 2 * k {
             return; // not enough levels to split into even one red/blue pair
@@ -271,7 +281,7 @@ impl RaceEngine {
                 if (cs as usize, ce as usize) == (start, end) {
                     continue;
                 }
-                Self::refine(a, cfg, order, tree, c as usize, stage + 1, nlevels0);
+                Self::refine(a, cfg, order, tree, c as usize, stage + 1, nlevels0, level0);
             }
         }
     }

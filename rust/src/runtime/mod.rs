@@ -5,114 +5,183 @@
 //! Interchange is HLO *text*, not serialized `HloModuleProto`: jax ≥ 0.5
 //! emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
 //! parser reassigns ids (see /opt/xla-example/README.md).
+//!
+//! The whole PJRT path is gated behind the **`xla` cargo feature**: the
+//! bindings crate is not vendored offline, so a clean checkout builds and
+//! tests without it. Without the feature, [`XlaRuntime`] is a stub whose
+//! constructor returns an error; integration tests
+//! (`rust/tests/xla_runtime.rs`, and the client-creation test here)
+//! additionally require `RACE_XLA_TESTS=1` so `cargo test` stays green on
+//! machines where the artifacts or the PJRT plugin are absent.
 
-use anyhow::{anyhow, Context, Result};
-use std::collections::HashMap;
-use std::path::Path;
+#[cfg(feature = "xla")]
+mod imp {
+    use anyhow::{anyhow, Context, Result};
+    use std::collections::HashMap;
+    use std::path::Path;
 
-/// A PJRT CPU client plus a cache of compiled executables keyed by name.
-pub struct XlaRuntime {
-    client: xla::PjRtClient,
-    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// A PJRT CPU client plus a cache of compiled executables keyed by name.
+    pub struct XlaRuntime {
+        client: xla::PjRtClient,
+        exes: HashMap<String, xla::PjRtLoadedExecutable>,
+    }
+
+    impl XlaRuntime {
+        /// Create the CPU client.
+        pub fn cpu() -> Result<XlaRuntime> {
+            let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+            Ok(XlaRuntime { client, exes: HashMap::new() })
+        }
+
+        /// Platform string (for diagnostics).
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Load and compile an HLO-text artifact under `name`.
+        pub fn load_artifact(&mut self, name: &str, path: &Path) -> Result<()> {
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("artifact path not utf-8")?,
+            )
+            .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp).map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+            self.exes.insert(name.to_string(), exe);
+            Ok(())
+        }
+
+        /// Whether `name` has been loaded.
+        pub fn has(&self, name: &str) -> bool {
+            self.exes.contains_key(name)
+        }
+
+        /// Execute artifact `name` with f32 inputs of the given shapes.
+        /// The artifact is expected to return a 1-tuple (jax lowered with
+        /// `return_tuple=True`); returns the flattened f32 output.
+        pub fn execute_f32(&self, name: &str, inputs: &[(&[f32], &[i64])]) -> Result<Vec<f32>> {
+            let exe =
+                self.exes.get(name).with_context(|| format!("artifact {name} not loaded"))?;
+            let mut literals = Vec::with_capacity(inputs.len());
+            for (data, dims) in inputs {
+                let lit = xla::Literal::vec1(data);
+                let lit = if dims.len() == 1 && dims[0] as usize == data.len() {
+                    lit
+                } else {
+                    lit.reshape(dims).map_err(|e| anyhow!("reshape {dims:?}: {e:?}"))?
+                };
+                literals.push(lit);
+            }
+            let result = exe
+                .execute::<xla::Literal>(&literals)
+                .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
+            let out = result[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+            let out = out.to_tuple1().map_err(|e| anyhow!("untuple: {e:?}"))?;
+            out.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))
+        }
+
+        /// Execute with i32 + f32 mixed inputs (sparse formats carry index
+        /// arrays). Argument order matches `aot.py::specs`: index arrays
+        /// first, then f32 data. Returns every element of the output tuple,
+        /// each flattened to f32 (scalars become length-1 vectors).
+        pub fn execute_mixed(
+            &self,
+            name: &str,
+            f32_inputs: &[(&[f32], &[i64])],
+            i32_inputs: &[(&[i32], &[i64])],
+        ) -> Result<Vec<Vec<f32>>> {
+            let exe =
+                self.exes.get(name).with_context(|| format!("artifact {name} not loaded"))?;
+            let mut literals: Vec<xla::Literal> = Vec::new();
+            for (data, dims) in i32_inputs {
+                let lit = xla::Literal::vec1(data);
+                let lit = if dims.len() == 1 && dims[0] as usize == data.len() {
+                    lit
+                } else {
+                    lit.reshape(dims).map_err(|e| anyhow!("reshape: {e:?}"))?
+                };
+                literals.push(lit);
+            }
+            for (data, dims) in f32_inputs {
+                let lit = xla::Literal::vec1(data);
+                let lit = if dims.len() == 1 && dims[0] as usize == data.len() {
+                    lit
+                } else {
+                    lit.reshape(dims).map_err(|e| anyhow!("reshape: {e:?}"))?
+                };
+                literals.push(lit);
+            }
+            let result = exe
+                .execute::<xla::Literal>(&literals)
+                .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
+            let out = result[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+            let parts = out.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))?;
+            parts
+                .into_iter()
+                .map(|p| p.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}")))
+                .collect()
+        }
+    }
 }
 
-impl XlaRuntime {
-    /// Create the CPU client.
-    pub fn cpu() -> Result<XlaRuntime> {
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
-        Ok(XlaRuntime { client, exes: HashMap::new() })
-    }
+#[cfg(not(feature = "xla"))]
+mod imp {
+    use anyhow::{bail, Result};
+    use std::path::Path;
 
-    /// Platform string (for diagnostics).
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
+    const DISABLED: &str =
+        "built without the `xla` feature — add the xla-rs bindings to [dependencies] in \
+         Cargo.toml (not vendored offline; see the [features] comment), rebuild with \
+         `--features xla`, and run `make artifacts` to load PJRT artifacts";
 
-    /// Load and compile an HLO-text artifact under `name`.
-    pub fn load_artifact(&mut self, name: &str, path: &Path) -> Result<()> {
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("artifact path not utf-8")?,
-        )
-        .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp).map_err(|e| anyhow!("compile {name}: {e:?}"))?;
-        self.exes.insert(name.to_string(), exe);
-        Ok(())
-    }
+    /// Stub runtime compiled when the `xla` feature is off: keeps the CLI,
+    /// examples and benches compiling; every entry point reports that the
+    /// feature is disabled.
+    pub struct XlaRuntime;
 
-    /// Whether `name` has been loaded.
-    pub fn has(&self, name: &str) -> bool {
-        self.exes.contains_key(name)
-    }
-
-    /// Execute artifact `name` with f32 inputs of the given shapes.
-    /// The artifact is expected to return a 1-tuple (jax lowered with
-    /// `return_tuple=True`); returns the flattened f32 output.
-    pub fn execute_f32(&self, name: &str, inputs: &[(&[f32], &[i64])]) -> Result<Vec<f32>> {
-        let exe = self.exes.get(name).with_context(|| format!("artifact {name} not loaded"))?;
-        let mut literals = Vec::with_capacity(inputs.len());
-        for (data, dims) in inputs {
-            let lit = xla::Literal::vec1(data);
-            let lit = if dims.len() == 1 && dims[0] as usize == data.len() {
-                lit
-            } else {
-                lit.reshape(dims).map_err(|e| anyhow!("reshape {dims:?}: {e:?}"))?
-            };
-            literals.push(lit);
+    impl XlaRuntime {
+        /// Always fails: no PJRT client without the `xla` feature.
+        pub fn cpu() -> Result<XlaRuntime> {
+            bail!(DISABLED)
         }
-        let result = exe
-            .execute::<xla::Literal>(&literals)
-            .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
-        let out = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
-        let out = out.to_tuple1().map_err(|e| anyhow!("untuple: {e:?}"))?;
-        out.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))
-    }
 
-    /// Execute with i32 + f32 mixed inputs (sparse formats carry index
-    /// arrays). Argument order matches `aot.py::specs`: index arrays
-    /// first, then f32 data. Returns every element of the output tuple,
-    /// each flattened to f32 (scalars become length-1 vectors).
-    pub fn execute_mixed(
-        &self,
-        name: &str,
-        f32_inputs: &[(&[f32], &[i64])],
-        i32_inputs: &[(&[i32], &[i64])],
-    ) -> Result<Vec<Vec<f32>>> {
-        let exe = self.exes.get(name).with_context(|| format!("artifact {name} not loaded"))?;
-        let mut literals: Vec<xla::Literal> = Vec::new();
-        for (data, dims) in i32_inputs {
-            let lit = xla::Literal::vec1(data);
-            let lit = if dims.len() == 1 && dims[0] as usize == data.len() {
-                lit
-            } else {
-                lit.reshape(dims).map_err(|e| anyhow!("reshape: {e:?}"))?
-            };
-            literals.push(lit);
+        /// Platform string (for diagnostics).
+        pub fn platform(&self) -> String {
+            "disabled".to_string()
         }
-        for (data, dims) in f32_inputs {
-            let lit = xla::Literal::vec1(data);
-            let lit = if dims.len() == 1 && dims[0] as usize == data.len() {
-                lit
-            } else {
-                lit.reshape(dims).map_err(|e| anyhow!("reshape: {e:?}"))?
-            };
-            literals.push(lit);
+
+        /// Unreachable in practice (no constructor succeeds); kept for
+        /// signature parity.
+        pub fn load_artifact(&mut self, _name: &str, _path: &Path) -> Result<()> {
+            bail!(DISABLED)
         }
-        let result = exe
-            .execute::<xla::Literal>(&literals)
-            .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
-        let out = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
-        let parts = out.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))?;
-        parts
-            .into_iter()
-            .map(|p| p.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}")))
-            .collect()
+
+        /// Whether `name` has been loaded (never, in the stub).
+        pub fn has(&self, _name: &str) -> bool {
+            false
+        }
+
+        /// Signature-parity stub.
+        pub fn execute_f32(&self, _name: &str, _inputs: &[(&[f32], &[i64])]) -> Result<Vec<f32>> {
+            bail!(DISABLED)
+        }
+
+        /// Signature-parity stub.
+        pub fn execute_mixed(
+            &self,
+            _name: &str,
+            _f32_inputs: &[(&[f32], &[i64])],
+            _i32_inputs: &[(&[i32], &[i64])],
+        ) -> Result<Vec<Vec<f32>>> {
+            bail!(DISABLED)
+        }
     }
 }
+
+pub use imp::XlaRuntime;
 
 /// Default artifacts directory (repo-relative, overridable via
 /// `RACE_ARTIFACTS`).
@@ -122,15 +191,37 @@ pub fn artifacts_dir() -> std::path::PathBuf {
         .unwrap_or_else(|_| std::path::PathBuf::from("artifacts"))
 }
 
+/// Whether the environment opts into the PJRT integration tests
+/// (`RACE_XLA_TESTS=1`). Artifact-dependent tests check this *and* the
+/// artifact files, so `cargo test -q` passes on a clean checkout.
+pub fn xla_tests_enabled() -> bool {
+    std::env::var("RACE_XLA_TESTS").map(|v| v == "1").unwrap_or(false)
+}
+
 #[cfg(test)]
 mod tests {
     // Runtime integration tests live in rust/tests/xla_runtime.rs (they
     // need built artifacts); here we only check client creation, which
-    // exercises the PJRT linkage.
+    // exercises the PJRT linkage — gated on the feature AND the env opt-in.
+    #[cfg(feature = "xla")]
     #[test]
     fn cpu_client_comes_up() {
+        if !super::xla_tests_enabled() {
+            eprintln!("SKIP: set RACE_XLA_TESTS=1 to exercise the PJRT client");
+            return;
+        }
         let rt = super::XlaRuntime::cpu().expect("PJRT CPU client");
         assert!(rt.platform().to_lowercase().contains("cpu") || !rt.platform().is_empty());
         assert!(!rt.has("nope"));
+    }
+
+    #[cfg(not(feature = "xla"))]
+    #[test]
+    fn stub_reports_disabled() {
+        let err = match super::XlaRuntime::cpu() {
+            Err(e) => e,
+            Ok(_) => panic!("stub constructor must fail"),
+        };
+        assert!(err.to_string().contains("xla"), "{err}");
     }
 }
