@@ -1,0 +1,157 @@
+//! Pool vs scoped-spawn executor latency, and batched serve throughput.
+//!
+//! Part 1 — the tentpole claim: for the same RACE engine, the persistent
+//! worker pool ([`race::pool`]) answers a SymmSpMV no slower than the
+//! scoped-spawn executor at every measured (matrix, threads) point: the
+//! per-call `thread::scope` spawn/join rounds are replaced by one condvar
+//! wake plus per-step barriers on resident workers.
+//!
+//! Part 2 — serve batching: vectors/second of the service batch path at
+//! batch sizes 1 / 4 / 16. One multi-vector sweep (`B = A X`) amortizes
+//! the matrix traffic over the batch, so throughput must rise with the
+//! batch size.
+//!
+//! Emits `BENCH_pool.json` (override with `RACE_BENCH_OUT`):
+//! `{"bench": "pool_latency", "cases": [{matrix, threads, scoped_ms,
+//! pool_ms, speedup, nsteps, nunits}], "serve": [{matrix, batch,
+//! ms_per_batch, vectors_per_s, speedup_vs_single}]}`.
+//! `RACE_BENCH_FULL=1` runs larger variants.
+
+use race::gen;
+use race::kernels;
+use race::pool::{self, WorkerPool};
+use race::race::{RaceConfig, RaceEngine};
+use race::serve::{MatvecService, ServeOptions};
+use race::sparse::Csr;
+use race::util::bench;
+use race::util::json::Json;
+
+fn main() {
+    let small = std::env::var("RACE_BENCH_FULL").is_err();
+    let cases: Vec<(&str, Csr)> = if small {
+        vec![
+            ("stencil2d:64x64", gen::stencil2d_5pt(64, 64)),
+            ("graphene:40x40", gen::graphene(40, 40)),
+            ("delaunay:40x40", gen::delaunay_like(40, 40, 9)),
+        ]
+    } else {
+        vec![
+            ("stencil2d:192x192", gen::stencil2d_5pt(192, 192)),
+            ("graphene:96x96", gen::graphene(96, 96)),
+            ("delaunay:96x96", gen::delaunay_like(96, 96, 9)),
+        ]
+    };
+
+    // ---- part 1: scoped-spawn vs persistent pool ----
+    let mut rows = Vec::new();
+    for (name, a0) in &cases {
+        let perm = race::graph::rcm(a0);
+        let a = a0.permute_symmetric(&perm);
+        let n = a.nrows();
+        for threads in [2usize, 4] {
+            let cfg = RaceConfig { threads, dist: 2, ..Default::default() };
+            let eng = RaceEngine::build(&a, &cfg).expect("engine");
+            let upper = eng.permuted_matrix().upper_triangle();
+            let x: Vec<f64> = (0..n).map(|i| ((i % 97) as f64) * 0.02 - 1.0).collect();
+            let mut b = vec![0.0; n];
+            let s_scoped = bench::bench(&format!("{name}/t{threads}/scoped"), 0.2, || {
+                b.iter_mut().for_each(|v| *v = 0.0);
+                kernels::symmspmv_race(&eng, &upper, &x, &mut b);
+                std::hint::black_box(&b);
+            });
+            let wp = WorkerPool::new(threads);
+            let prog = pool::compile_race(&eng);
+            let mut b2 = vec![0.0; n];
+            let s_pool = bench::bench(&format!("{name}/t{threads}/pool"), 0.2, || {
+                b2.iter_mut().for_each(|v| *v = 0.0);
+                pool::symmspmv_pool(&wp, &prog, &upper, &x, &mut b2);
+                std::hint::black_box(&b2);
+            });
+            bench::report(&s_scoped, None);
+            bench::report(&s_pool, None);
+            // correctness paranoia: both executors agree bit-for-bit
+            assert_eq!(b, b2, "{name}/t{threads}: pool result diverges");
+            // headline acceptance: the pool never loses to spawn/join
+            assert!(
+                s_pool.median <= s_scoped.median,
+                "{name}/t{threads}: pool {:.3} ms must not exceed scoped {:.3} ms",
+                s_pool.median * 1e3,
+                s_scoped.median * 1e3
+            );
+            println!(
+                "{name}/t{threads}: scoped {:.3} ms -> pool {:.3} ms ({:.2}x), {} steps / {} units",
+                s_scoped.median * 1e3,
+                s_pool.median * 1e3,
+                s_scoped.median / s_pool.median,
+                prog.nsteps(),
+                prog.nunits()
+            );
+            rows.push(Json::obj(vec![
+                ("matrix", Json::Str(name.to_string())),
+                ("threads", Json::Num(threads as f64)),
+                ("scoped_ms", Json::Num(s_scoped.median * 1e3)),
+                ("pool_ms", Json::Num(s_pool.median * 1e3)),
+                ("speedup", Json::Num(s_scoped.median / s_pool.median)),
+                ("nsteps", Json::Num(prog.nsteps() as f64)),
+                ("nunits", Json::Num(prog.nunits() as f64)),
+            ]));
+        }
+    }
+
+    // ---- part 2: serve throughput vs batch size ----
+    let mut serve_rows = Vec::new();
+    for (name, _) in &cases {
+        let opts = ServeOptions {
+            matrices: vec![name.to_string()],
+            threads: 2,
+            small: true,
+            ..Default::default()
+        };
+        let svc = MatvecService::build(&opts).expect("service");
+        let n = svc.entries()[0].n;
+        let mut per_vector_single = 0.0f64;
+        for batch in [1usize, 4, 16] {
+            let xs: Vec<Vec<f64>> = (0..batch)
+                .map(|j| (0..n).map(|i| ((i * (j + 2)) % 101) as f64 * 0.02 - 1.0).collect())
+                .collect();
+            let s = bench::bench(&format!("{name}/serve-batch{batch}"), 0.2, || {
+                std::hint::black_box(svc.matvec_batch(None, &xs).expect("batch"));
+            });
+            bench::report(&s, None);
+            let per_vector = s.median / batch as f64;
+            if batch == 1 {
+                per_vector_single = per_vector;
+            } else {
+                // batching must beat one-vector-at-a-time throughput
+                assert!(
+                    per_vector < per_vector_single,
+                    "{name}/batch{batch}: {:.1} us/vec must undercut single {:.1} us/vec",
+                    per_vector * 1e6,
+                    per_vector_single * 1e6
+                );
+            }
+            println!(
+                "{name}/batch{batch}: {:.3} ms/batch = {:.0} vectors/s ({:.2}x vs single)",
+                s.median * 1e3,
+                batch as f64 / s.median,
+                per_vector_single / per_vector
+            );
+            serve_rows.push(Json::obj(vec![
+                ("matrix", Json::Str(name.to_string())),
+                ("batch", Json::Num(batch as f64)),
+                ("ms_per_batch", Json::Num(s.median * 1e3)),
+                ("vectors_per_s", Json::Num(batch as f64 / s.median)),
+                ("speedup_vs_single", Json::Num(per_vector_single / per_vector)),
+            ]));
+        }
+    }
+
+    let out = Json::obj(vec![
+        ("bench", Json::Str("pool_latency".to_string())),
+        ("cases", Json::Arr(rows)),
+        ("serve", Json::Arr(serve_rows)),
+    ]);
+    let path = std::env::var("RACE_BENCH_OUT").unwrap_or_else(|_| "BENCH_pool.json".to_string());
+    std::fs::write(&path, out.to_string() + "\n").expect("write BENCH_pool.json");
+    println!("wrote {path}");
+}

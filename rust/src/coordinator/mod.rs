@@ -4,11 +4,12 @@
 //! kernel, measure simulated traffic and multicore performance, and emit a
 //! JSON-able report.
 //!
-//! Also provides the threaded matvec service used by `race-cli serve`: the
-//! request loop keeps the compiled schedule + matrix resident and answers
-//! SymmSpMV requests with no Python anywhere near the path. (The offline
-//! environment has no tokio; the server uses std::net with a thread per
-//! connection — same architecture, simpler runtime.)
+//! The RACE host execution runs on the persistent worker pool
+//! ([`crate::pool`]): the engine tree is compiled to a step program once,
+//! outside the timed region, so `host_seconds` measures the resident
+//! executor the serve path uses rather than per-call thread spawn/join.
+//! (The matvec network service formerly here has grown into the
+//! [`crate::serve`] subsystem.)
 
 use crate::cachesim::{self, TrafficReport};
 use crate::color::{abmc_schedule, mc_schedule};
@@ -190,11 +191,14 @@ pub fn run_pipeline(
             let upper = ap.upper_triangle();
             let tr = cachesim::measure_symmspmv_traffic(&upper, nnz_full, machine);
             let s = sim::simulate_race(machine, &eng, &upper, tr.bytes_total, nnz_full);
-            // real host execution + correctness
+            // real host execution + correctness, on the resident pool
+            // (program compilation and worker spawn stay outside the timer)
+            let prog = crate::pool::compile_race(&eng);
+            let wp = crate::pool::WorkerPool::new(threads);
             let xp = permute_vec(&x, &eng.perm);
             let mut b = vec![0.0; a.nrows()];
             let t0 = std::time::Instant::now();
-            kernels::symmspmv_race(&eng, &upper, &xp, &mut b);
+            crate::pool::symmspmv_pool(&wp, &prog, &upper, &xp, &mut b);
             let dt = t0.elapsed().as_secs_f64();
             let err = rel_err_permuted(&want, &b, &eng.perm);
             (traffic, sim_res, host_seconds, max_rel_err) = (tr, s, dt, err);
@@ -295,6 +299,16 @@ pub fn permute_vec(v: &[f64], perm: &[u32]) -> Vec<f64> {
     out
 }
 
+/// Inverse of [`permute_vec`]: `out[i] = v[perm[i]]` — map a vector in
+/// permuted numbering back to the original ordering.
+pub fn unpermute_vec(v: &[f64], perm: &[u32]) -> Vec<f64> {
+    let mut out = vec![0.0; v.len()];
+    for (old, &new) in perm.iter().enumerate() {
+        out[old] = v[new as usize];
+    }
+    out
+}
+
 fn max_rel(want: &[f64], got: &[f64]) -> f64 {
     want.iter()
         .zip(got)
@@ -311,109 +325,6 @@ pub fn rel_err_permuted(want: &[f64], got_permuted: &[f64], perm: &[u32]) -> f64
         err = err.max(e);
     }
     err
-}
-
-/// Resident SymmSpMV service state: build once, answer many requests.
-pub struct MatvecService {
-    eng: RaceEngine,
-    upper: Csr,
-    total_perm: Vec<u32>,
-    /// Matrix name.
-    pub name: String,
-    /// Matrix dimension.
-    pub n: usize,
-}
-
-impl MatvecService {
-    /// Build the service for a matrix spec.
-    pub fn build(matrix_spec: &str, threads: usize, small: bool) -> Result<MatvecService> {
-        let (name, a0) = resolve_matrix(matrix_spec, small)?;
-        let perm = graph::rcm(&a0);
-        let a = a0.permute_symmetric(&perm);
-        let cfg = RaceConfig { threads, ..Default::default() };
-        let eng = RaceEngine::build(&a, &cfg)?;
-        let upper = eng.permuted_matrix().upper_triangle();
-        let total_perm = graph::compose_perm(&perm, &eng.perm);
-        let n = a.nrows();
-        Ok(MatvecService { eng, upper, total_perm, name, n })
-    }
-
-    /// One request: `b = A x` in original (pre-permutation) indexing.
-    pub fn matvec(&self, x: &[f64]) -> Result<(Vec<f64>, f64)> {
-        if x.len() != self.n {
-            bail!("expected {} entries, got {}", self.n, x.len());
-        }
-        let xp = permute_vec(x, &self.total_perm);
-        let mut bp = vec![0.0; self.n];
-        let t0 = std::time::Instant::now();
-        kernels::symmspmv_race(&self.eng, &self.upper, &xp, &mut bp);
-        let dt = t0.elapsed().as_secs_f64();
-        let mut b = vec![0.0; self.n];
-        for (old, &new) in self.total_perm.iter().enumerate() {
-            b[old] = bp[new as usize];
-        }
-        Ok((b, dt))
-    }
-
-    /// Handle one JSON request line.
-    pub fn handle(&self, line: &str) -> String {
-        let resp = (|| -> Result<String> {
-            let req = Json::parse(line).map_err(|e| anyhow::anyhow!(e))?;
-            let x = req
-                .get("x")
-                .and_then(|j| j.as_f64_arr())
-                .context("request must be {\"x\": [..]}")?;
-            let (b, dt) = self.matvec(&x)?;
-            Ok(Json::obj(vec![("b", Json::arr_f64(&b)), ("seconds", Json::Num(dt))]).to_string())
-        })();
-        resp.unwrap_or_else(|e| {
-            Json::obj(vec![("error", Json::Str(e.to_string()))]).to_string()
-        })
-    }
-}
-
-/// Threaded matvec service over TCP: newline-delimited JSON
-/// `{"x": [..]}` → `{"b": [..], "seconds": t}`.
-pub fn serve(matrix_spec: &str, threads: usize, addr: &str, small: bool) -> Result<()> {
-    use std::io::{BufRead, BufReader, Write};
-    let svc = std::sync::Arc::new(MatvecService::build(matrix_spec, threads, small)?);
-    let listener = std::net::TcpListener::bind(addr)?;
-    eprintln!("serving SymmSpMV for {} ({} rows) on {addr}", svc.name, svc.n);
-    for stream in listener.incoming() {
-        let stream = match stream {
-            Ok(s) => s,
-            Err(e) => {
-                eprintln!("accept: {e}");
-                continue;
-            }
-        };
-        let svc = svc.clone();
-        std::thread::spawn(move || {
-            let peer = stream.peer_addr().map(|p| p.to_string()).unwrap_or_default();
-            let mut writer = match stream.try_clone() {
-                Ok(w) => w,
-                Err(_) => return,
-            };
-            let reader = BufReader::new(stream);
-            for line in reader.lines() {
-                let line = match line {
-                    Ok(l) => l,
-                    Err(_) => break,
-                };
-                if line.trim().is_empty() {
-                    continue;
-                }
-                let resp = svc.handle(&line);
-                if writer.write_all(resp.as_bytes()).is_err()
-                    || writer.write_all(b"\n").is_err()
-                {
-                    break;
-                }
-            }
-            eprintln!("connection {peer} closed");
-        });
-    }
-    Ok(())
 }
 
 #[cfg(test)]
@@ -453,6 +364,15 @@ mod tests {
     }
 
     #[test]
+    fn permute_unpermute_roundtrip() {
+        let perm = vec![2u32, 0, 3, 1];
+        let v = vec![10.0, 11.0, 12.0, 13.0];
+        let p = permute_vec(&v, &perm);
+        assert_eq!(p, vec![11.0, 13.0, 10.0, 12.0]);
+        assert_eq!(unpermute_vec(&p, &perm), v);
+    }
+
+    #[test]
     fn resolve_specs() {
         assert!(resolve_matrix("Graphene-4096", true).is_ok());
         assert!(resolve_matrix("stencil3d:8x8x8", true).is_ok());
@@ -460,19 +380,4 @@ mod tests {
         assert!(resolve_matrix("bogus:1", true).is_err());
     }
 
-    #[test]
-    fn matvec_service_roundtrip() {
-        let svc = MatvecService::build("stencil2d:16x16", 2, true).unwrap();
-        let x = vec![1.0; svc.n];
-        let (b, _) = svc.matvec(&x).unwrap();
-        // A x where row sums are 1.0 (5-pt stencil construction)
-        for (i, v) in b.iter().enumerate() {
-            assert!((v - 1.0).abs() < 1e-9, "row {i}: {v}");
-        }
-        // JSON request path
-        let resp = svc.handle(&format!("{{\"x\": {:?}}}", vec![1.0; svc.n]));
-        assert!(resp.contains("\"b\""), "{resp}");
-        let err = svc.handle("{\"x\": [1,2]}");
-        assert!(err.contains("error"));
-    }
 }

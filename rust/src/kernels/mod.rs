@@ -7,7 +7,7 @@
 mod cg;
 mod executors;
 mod mpk;
-mod solvers;
+pub(crate) mod solvers;
 
 pub use cg::{cg_solve, pcg_solve, CgResult};
 pub use executors::{
@@ -16,6 +16,8 @@ pub use executors::{
 pub use mpk::{
     mpk_execute, mpk_powers, mpk_powers_serial, mpk_three_term, spmv_powers, spmv_range_affine,
 };
+// `symmspmv_range_multi` (below) is the multi-RHS work unit scheduled by
+// the pool executor `crate::pool::symmspmv_race_multi`.
 pub use solvers::{
     chebyshev_step, gauss_seidel_race, gauss_seidel_serial, kaczmarz_race, kaczmarz_serial,
     ssor_precond,
@@ -121,6 +123,64 @@ pub fn symmspmv_range_unchecked(upper: &Csr, x: &[f64], b: &mut [f64], start: us
     }
 }
 
+/// Multi-vector SymmSpMV over the row range `[start, end)`: `B = A X` for
+/// `nrhs` right-hand sides stored row-major (`xs[row * nrhs + j]` is the
+/// `j`-th vector's entry for `row`). One sweep over the matrix serves all
+/// `nrhs` vectors — the matrix bytes that dominate SymmSpMV traffic are
+/// amortized over the batch, which is what makes batched serving cheaper
+/// than `nrhs` single-vector sweeps. Safety of concurrent calls on
+/// distance-2 independent ranges carries over verbatim: the flat index
+/// sets written (`row * nrhs + j`, `col * nrhs + j`) stay disjoint when
+/// the row/col sets are. **`bs` must be zeroed by the caller.**
+pub fn symmspmv_range_multi(
+    upper: &Csr,
+    xs: &[f64],
+    bs: &mut [f64],
+    nrhs: usize,
+    start: usize,
+    end: usize,
+) {
+    assert!(end <= upper.nrows());
+    assert!(nrhs > 0);
+    assert!(xs.len() >= upper.nrows() * nrhs && bs.len() >= upper.nrows() * nrhs);
+    let rp = &upper.row_ptr;
+    let col = &upper.col;
+    let val = &upper.val;
+    // scratch for the row accumulators: stack for typical batch sizes so
+    // the pool's per-unit calls stay allocation-free on the hot path
+    const STACK_RHS: usize = 32;
+    let mut stack_buf = [0f64; STACK_RHS];
+    let mut heap_buf: Vec<f64>;
+    let tmp: &mut [f64] = if nrhs <= STACK_RHS {
+        &mut stack_buf[..nrhs]
+    } else {
+        heap_buf = vec![0f64; nrhs];
+        &mut heap_buf
+    };
+    for row in start..end {
+        let lo = rp[row] as usize;
+        let hi = rp[row + 1] as usize;
+        debug_assert_eq!(col[lo] as usize, row);
+        let d = val[lo];
+        let rb = row * nrhs;
+        for j in 0..nrhs {
+            tmp[j] = d * xs[rb + j];
+        }
+        for idx in lo + 1..hi {
+            let c = col[idx] as usize;
+            let v = val[idx];
+            let cb = c * nrhs;
+            for j in 0..nrhs {
+                tmp[j] += v * xs[cb + j];
+                bs[cb + j] += v * xs[rb + j];
+            }
+        }
+        for j in 0..nrhs {
+            bs[rb + j] += tmp[j];
+        }
+    }
+}
+
 /// Scalar (non-unrolled) variant used by the Fig. 22 vectorization study.
 #[inline(never)]
 pub fn symmspmv_range_scalar(upper: &Csr, x: &[f64], b: &mut [f64], start: usize, end: usize) {
@@ -209,6 +269,36 @@ mod tests {
         check_symm_matches_spmv(&gen::graphene(8, 8));
         check_symm_matches_spmv(&gen::delaunay_like(10, 10, 4));
         check_symm_matches_spmv(&gen::dense_band(150, 30, 120, 2));
+    }
+
+    #[test]
+    fn multi_rhs_range_matches_single_sweeps() {
+        let a = gen::stencil2d_9pt(12, 10);
+        let n = a.nrows();
+        let upper = a.upper_triangle();
+        let nrhs = 3usize;
+        // column j of X is a distinct vector
+        let mut xs = vec![0f64; n * nrhs];
+        for row in 0..n {
+            for j in 0..nrhs {
+                xs[row * nrhs + j] = ((row * (j + 2) + 7) % 13) as f64 - 6.0;
+            }
+        }
+        let mut bs = vec![0f64; n * nrhs];
+        symmspmv_range_multi(&upper, &xs, &mut bs, nrhs, 0, n);
+        for j in 0..nrhs {
+            let x: Vec<f64> = (0..n).map(|row| xs[row * nrhs + j]).collect();
+            let mut b = vec![0f64; n];
+            symmspmv_serial(&upper, &x, &mut b);
+            for row in 0..n {
+                let got = bs[row * nrhs + j];
+                assert!(
+                    (b[row] - got).abs() < 1e-12 * (1.0 + b[row].abs()),
+                    "rhs {j} row {row}: {} vs {got}",
+                    b[row]
+                );
+            }
+        }
     }
 
     #[test]

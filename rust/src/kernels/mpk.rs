@@ -17,7 +17,10 @@
 //! pays ~`nblocks × p` spawn+join rounds versus `p` for the naive sweep —
 //! on small matrices that overhead can mask the cache win (the wallclock
 //! comparisons in `benches/mpk_blocking.rs` run `threads = 1` for this
-//! reason). A persistent worker pool is an open ROADMAP item.
+//! reason). The persistent-pool executor
+//! ([`crate::pool::mpk_powers_pool`] on a [`crate::pool::compile_mpk`]
+//! program) removes those rounds; this scoped path remains the baseline
+//! the pool is benchmarked against.
 
 use super::SendPtr;
 use crate::mpk::MpkPlan;

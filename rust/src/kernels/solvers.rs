@@ -15,22 +15,29 @@
 use crate::race::RaceEngine;
 use crate::sparse::Csr;
 
+/// One Gauss–Seidel row update `x[row] = (b[row] - sigma) / diag` — the
+/// work unit shared by the serial, scoped and pool-program sweeps.
+#[inline]
+pub(crate) fn gs_row(a: &Csr, b: &[f64], x: &mut [f64], row: usize) {
+    let (cols, vals) = a.row(row);
+    let mut sigma = 0.0;
+    let mut diag = 0.0;
+    for (&c, &v) in cols.iter().zip(vals) {
+        if c as usize == row {
+            diag = v;
+        } else {
+            sigma += v * x[c as usize];
+        }
+    }
+    debug_assert!(diag != 0.0, "GS needs nonzero diagonal");
+    x[row] = (b[row] - sigma) / diag;
+}
+
 /// One forward Gauss–Seidel sweep on the full matrix in natural row order:
 /// `x <- x + D^{-1}(b - A x)` applied row-sequentially.
 pub fn gauss_seidel_serial(a: &Csr, b: &[f64], x: &mut [f64]) {
     for row in 0..a.nrows() {
-        let (cols, vals) = a.row(row);
-        let mut sigma = 0.0;
-        let mut diag = 0.0;
-        for (&c, &v) in cols.iter().zip(vals) {
-            if c as usize == row {
-                diag = v;
-            } else {
-                sigma += v * x[c as usize];
-            }
-        }
-        debug_assert!(diag != 0.0, "GS needs nonzero diagonal");
-        x[row] = (b[row] - sigma) / diag;
+        gs_row(a, b, x, row);
     }
 }
 
@@ -53,17 +60,7 @@ fn gs_node(eng: &RaceEngine, id: usize, a: &Csr, b: &[f64], xp: super::SendPtr, 
         // running leaf reads or writes these rows' neighbourhoods.
         let x = unsafe { std::slice::from_raw_parts_mut(xp.0, n) };
         for row in node.start as usize..node.end as usize {
-            let (cols, vals) = a.row(row);
-            let mut sigma = 0.0;
-            let mut diag = 0.0;
-            for (&c, &v) in cols.iter().zip(vals) {
-                if c as usize == row {
-                    diag = v;
-                } else {
-                    sigma += v * x[c as usize];
-                }
-            }
-            x[row] = (b[row] - sigma) / diag;
+            gs_row(a, b, x, row);
         }
         return;
     }
@@ -106,17 +103,7 @@ fn gs_backward(eng: &RaceEngine, id: usize, a: &Csr, b: &[f64], xp: super::SendP
     if node.children.is_empty() {
         let x = unsafe { std::slice::from_raw_parts_mut(xp.0, n) };
         for row in (node.start as usize..node.end as usize).rev() {
-            let (cols, vals) = a.row(row);
-            let mut sigma = 0.0;
-            let mut diag = 0.0;
-            for (&c, &v) in cols.iter().zip(vals) {
-                if c as usize == row {
-                    diag = v;
-                } else {
-                    sigma += v * x[c as usize];
-                }
-            }
-            x[row] = (b[row] - sigma) / diag;
+            gs_row(a, b, x, row);
         }
         return;
     }
@@ -149,7 +136,7 @@ pub fn kaczmarz_serial(a: &Csr, b: &[f64], x: &mut [f64]) {
 }
 
 #[inline]
-fn kaczmarz_row(a: &Csr, b: &[f64], x: &mut [f64], row: usize) {
+pub(crate) fn kaczmarz_row(a: &Csr, b: &[f64], x: &mut [f64], row: usize) {
     let (cols, vals) = a.row(row);
     let mut dot = 0.0;
     let mut nrm = 0.0;

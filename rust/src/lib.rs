@@ -28,6 +28,13 @@
 //! * [`machine`] — machine descriptions (Ivy Bridge EP, Skylake SP, host).
 //! * [`sim`] — a multicore execution simulator replaying real schedules
 //!   (substitute for the 10/20-core sockets; this host has one core).
+//! * [`pool`] — the persistent worker-pool execution runtime: RACE trees
+//!   and MPK plans are compiled into flat step programs executed by
+//!   resident workers with a barrier between steps, replacing the
+//!   per-call scoped spawn/join rounds of the baseline executors.
+//! * [`serve`] — SymmSpMV/MPK as a resident TCP service: multi-matrix
+//!   registry, request micro-batching onto a multi-vector kernel, an MPK
+//!   endpoint, stats, and graceful shutdown.
 //! * [`runtime`] — PJRT/XLA artifact loading so AOT-compiled JAX/Pallas
 //!   kernels run from Rust with no Python on the request path.
 //! * [`coordinator`] — the pipeline driver used by the CLI, benches and
@@ -61,8 +68,10 @@ pub mod machine;
 pub mod mpk;
 pub mod partition;
 pub mod perfmodel;
+pub mod pool;
 pub mod race;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod sparse;
 pub mod util;

@@ -31,8 +31,13 @@ USAGE:
       traffic and wallclock comparison against p naive SpMV sweeps.
   race-cli explain [--stencil N] [--threads N] [--dist K] [--eps0 E]
       Walk the paper's Fig. 4-14 construction on the artificial stencil.
-  race-cli serve --matrix SPEC [--threads N] [--addr HOST:PORT] [--small]
-      SymmSpMV-as-a-service over TCP (newline-delimited JSON).
+  race-cli serve --matrix SPEC[,SPEC..] [--threads N] [--addr HOST:PORT]
+                 [--small] [--max-requests N] [--mpk-power P] [--mpk-cache BYTES]
+      SymmSpMV/MPK-as-a-service over TCP (newline-delimited JSON, see
+      README.md): multi-matrix registry, request micro-batching on a
+      persistent worker pool, {\"x\": [..], \"p\": k} matrix powers,
+      {\"stats\": true} counters, {\"shutdown\": true} / --max-requests
+      for graceful shutdown.
   race-cli xla [--name model]
       Load + compile an AOT artifact from artifacts/.
 ";
@@ -130,13 +135,28 @@ fn main() -> Result<()> {
         "mpk" => cmd_mpk(&args),
         "explain" => cmd_explain(&args),
         "serve" => {
-            let matrix = args.require("matrix")?;
-            coordinator::serve(
-                &matrix,
-                args.get_usize("threads", 4)?,
-                &args.get("addr", "127.0.0.1:7777"),
-                args.has("small"),
-            )
+            let matrices: Vec<String> = args
+                .require("matrix")?
+                .split(',')
+                .map(str::trim)
+                .filter(|s| !s.is_empty())
+                .map(String::from)
+                .collect();
+            let max_requests = if args.has("max-requests") {
+                Some(args.get_usize("max-requests", 0)? as u64)
+            } else {
+                None
+            };
+            let opts = race::serve::ServeOptions {
+                matrices,
+                threads: args.get_usize("threads", 4)?,
+                addr: args.get("addr", "127.0.0.1:7777"),
+                small: args.has("small"),
+                max_requests,
+                mpk_power_max: args.get_usize("mpk-power", 8)?,
+                mpk_cache_bytes: args.get_usize("mpk-cache", 2 << 20)?,
+            };
+            race::serve::serve(&opts)
         }
         "xla" => {
             let name = args.get("name", "model");

@@ -1,0 +1,297 @@
+//! Pool-program executors: the persistent-pool counterparts of the
+//! scoped-spawn executors in [`crate::kernels`].
+//!
+//! Each function binds a kernel work unit to a compiled [`StepProgram`]
+//! and runs it on a [`WorkerPool`]. Safety mirrors the scoped executors
+//! exactly — the schedule guarantees that units within a step write
+//! disjoint locations (distance-2 for SymmSpMV/Kaczmarz, distance-1 for
+//! Gauss–Seidel, own-rows-only for MPK) — but the synchronization cost
+//! drops from one `thread::scope` spawn/join round per tree color (or
+//! per MPK step) to one condvar wake per kernel call plus one barrier
+//! per step.
+//!
+//! Results are bit-compatible with the scoped executors: every unit runs
+//! the identical serial work-unit kernel, and any two units whose write
+//! sets overlap are separated by a barrier in the same relative order as
+//! the scoped execution (see `program` module docs), so floating-point
+//! accumulation orders are unchanged.
+
+use super::program::StepProgram;
+use super::workers::WorkerPool;
+use crate::kernels::{self, SendPtr};
+use crate::mpk::MpkPlan;
+use crate::sparse::Csr;
+
+/// SymmSpMV `b = A x` on a tree program (upper-triangle storage, permuted
+/// numbering). **`b` must be zeroed by the caller** (same contract as
+/// [`kernels::symmspmv_race`]).
+pub fn symmspmv_pool(
+    pool: &WorkerPool,
+    prog: &StepProgram,
+    upper: &Csr,
+    x: &[f64],
+    b: &mut [f64],
+) {
+    assert_eq!(upper.nrows(), x.len());
+    assert_eq!(upper.nrows(), b.len());
+    let n = b.len();
+    let bp = SendPtr(b.as_mut_ptr());
+    pool.execute(prog, |u| {
+        // SAFETY: units of one step are distance-2 independent — their
+        // written index sets (own rows + upper partners) are disjoint.
+        let b = unsafe { std::slice::from_raw_parts_mut(bp.0, n) };
+        kernels::symmspmv_range(upper, x, b, u.start as usize, u.end as usize);
+    });
+}
+
+/// Multi-vector SymmSpMV `B = A X` on a tree program: `nrhs` right-hand
+/// sides stored row-major (`xs[row * nrhs + j]`), one matrix sweep
+/// amortized over the whole batch. **`bs` must be zeroed by the caller.**
+pub fn symmspmv_race_multi(
+    pool: &WorkerPool,
+    prog: &StepProgram,
+    upper: &Csr,
+    xs: &[f64],
+    bs: &mut [f64],
+    nrhs: usize,
+) {
+    let n = upper.nrows();
+    assert!(nrhs > 0);
+    assert_eq!(xs.len(), n * nrhs);
+    assert_eq!(bs.len(), n * nrhs);
+    let len = bs.len();
+    let bp = SendPtr(bs.as_mut_ptr());
+    pool.execute(prog, |u| {
+        // SAFETY: disjoint row/col index sets scale to disjoint flat
+        // ranges `idx * nrhs + j` — the distance-2 argument is unchanged.
+        let bs = unsafe { std::slice::from_raw_parts_mut(bp.0, len) };
+        kernels::symmspmv_range_multi(upper, xs, bs, nrhs, u.start as usize, u.end as usize);
+    });
+}
+
+/// Forward Gauss–Seidel sweep on a **distance-1** tree program (full
+/// matrix `a` in the engine's permuted numbering).
+pub fn gauss_seidel_pool(
+    pool: &WorkerPool,
+    prog: &StepProgram,
+    a: &Csr,
+    b: &[f64],
+    x: &mut [f64],
+) {
+    assert_eq!(a.nrows(), x.len());
+    let n = x.len();
+    let xp = SendPtr(x.as_mut_ptr());
+    pool.execute(prog, |u| {
+        // SAFETY: distance-1 independence — no concurrent unit reads or
+        // writes these rows' neighbourhoods.
+        let x = unsafe { std::slice::from_raw_parts_mut(xp.0, n) };
+        for row in u.start as usize..u.end as usize {
+            kernels::solvers::gs_row(a, b, x, row);
+        }
+    });
+}
+
+/// Kaczmarz sweep on a **distance-2** tree program: concurrently executed
+/// rows share no column, so the scattered projections are race-free.
+pub fn kaczmarz_pool(pool: &WorkerPool, prog: &StepProgram, a: &Csr, b: &[f64], x: &mut [f64]) {
+    assert_eq!(a.nrows(), x.len());
+    let n = x.len();
+    let xp = SendPtr(x.as_mut_ptr());
+    pool.execute(prog, |u| {
+        // SAFETY: distance-2 independence of units within a step.
+        let x = unsafe { std::slice::from_raw_parts_mut(xp.0, n) };
+        for row in u.start as usize..u.end as usize {
+            kernels::solvers::kaczmarz_row(a, b, x, row);
+        }
+    });
+}
+
+/// Execute an MPK program over a window of vectors — the pool counterpart
+/// of [`kernels::mpk_execute`], same buffer contract: a unit with
+/// `power == k` reads `bufs[base + k - 1]` (and `bufs[base + k - 2]` when
+/// `rho != 0`) and writes `bufs[base + k]`.
+pub fn mpk_execute_pool(
+    pool: &WorkerPool,
+    prog: &StepProgram,
+    plan: &MpkPlan,
+    bufs: &mut [Vec<f64>],
+    base: usize,
+    sigma: f64,
+    tau: f64,
+    rho: f64,
+) {
+    let a = plan.permuted_matrix();
+    let n = a.nrows();
+    assert_eq!(bufs.len(), base + plan.cfg.p + 1, "need base + p + 1 vectors");
+    assert!(rho == 0.0 || base >= 1, "three-term recurrence needs base >= 1");
+    for b in bufs.iter() {
+        assert_eq!(b.len(), n);
+    }
+    let ptrs: Vec<SendPtr> = bufs.iter_mut().map(|b| SendPtr(b.as_mut_ptr())).collect();
+    pool.execute(prog, |u| {
+        let k = u.power as usize;
+        debug_assert!(k >= 1 && base + k < ptrs.len());
+        // SAFETY: all units of one step carry the same power (compile_mpk
+        // invariant), so within a step `src`/`acc` are never written and
+        // `dst` rows are disjoint (pure gather, disjoint chunks). Across
+        // steps the barrier orders frontier advancement exactly as the
+        // plan's `verify()`d schedule requires.
+        let src = unsafe { std::slice::from_raw_parts(ptrs[base + k - 1].0 as *const f64, n) };
+        let dst = unsafe { std::slice::from_raw_parts_mut(ptrs[base + k].0, n) };
+        let acc = if rho != 0.0 {
+            Some(unsafe { std::slice::from_raw_parts(ptrs[base + k - 2].0 as *const f64, n) })
+        } else {
+            None
+        };
+        let (lo, hi) = (u.start as usize, u.end as usize);
+        kernels::spmv_range_affine(a, src, acc, dst, sigma, tau, rho, lo, hi);
+    });
+}
+
+/// Level-blocked matrix powers on the pool: returns `[A x, .., A^p x]` in
+/// the plan's permuted numbering (pool counterpart of
+/// [`kernels::mpk_powers`]).
+pub fn mpk_powers_pool(
+    pool: &WorkerPool,
+    prog: &StepProgram,
+    plan: &MpkPlan,
+    x: &[f64],
+) -> Vec<Vec<f64>> {
+    let p = plan.cfg.p;
+    let n = x.len();
+    let mut bufs = Vec::with_capacity(p + 1);
+    bufs.push(x.to_vec());
+    for _ in 0..p {
+        bufs.push(vec![0.0; n]);
+    }
+    mpk_execute_pool(pool, prog, plan, &mut bufs, 0, 1.0, 0.0, 0.0);
+    bufs.remove(0);
+    bufs
+}
+
+/// Level-blocked three-term recurrence on the pool (pool counterpart of
+/// [`kernels::mpk_three_term`]): `z_{k+1} = (sigma·A + tau·I) z_k + rho·z_{k-1}`.
+pub fn mpk_three_term_pool(
+    pool: &WorkerPool,
+    prog: &StepProgram,
+    plan: &MpkPlan,
+    z_prev: &[f64],
+    z0: &[f64],
+    sigma: f64,
+    tau: f64,
+    rho: f64,
+) -> Vec<Vec<f64>> {
+    let p = plan.cfg.p;
+    let n = z0.len();
+    assert_eq!(z_prev.len(), n);
+    let mut bufs = Vec::with_capacity(p + 2);
+    bufs.push(z_prev.to_vec());
+    bufs.push(z0.to_vec());
+    for _ in 0..p {
+        bufs.push(vec![0.0; n]);
+    }
+    mpk_execute_pool(pool, prog, plan, &mut bufs, 1, sigma, tau, rho);
+    bufs.drain(0..2);
+    bufs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen;
+    use crate::mpk::{powers_ref, MpkConfig};
+    use crate::pool::{compile_mpk, compile_race};
+    use crate::race::{RaceConfig, RaceEngine};
+
+    #[test]
+    fn pool_symmspmv_bitwise_matches_scoped() {
+        for (name, a) in [
+            ("stencil", gen::race_paper_stencil(16, 16)),
+            ("graphene", gen::graphene(9, 9)),
+        ] {
+            for threads in [1usize, 3, 6] {
+                let cfg = RaceConfig { threads, dist: 2, ..Default::default() };
+                let eng = RaceEngine::build(&a, &cfg).unwrap();
+                let upper = eng.permuted_matrix().upper_triangle();
+                let n = a.nrows();
+                let x: Vec<f64> = (0..n).map(|i| (i as f64 * 0.37).sin()).collect();
+                let mut scoped = vec![0.0; n];
+                kernels::symmspmv_race(&eng, &upper, &x, &mut scoped);
+                let pool = WorkerPool::new(threads);
+                let prog = compile_race(&eng);
+                let mut pooled = vec![0.0; n];
+                symmspmv_pool(&pool, &prog, &upper, &x, &mut pooled);
+                assert_eq!(scoped, pooled, "{name}/{threads}: pool diverges from scoped");
+            }
+        }
+    }
+
+    #[test]
+    fn pool_multi_matches_repeated_single() {
+        let a = gen::delaunay_like(12, 12, 3);
+        let n = a.nrows();
+        let cfg = RaceConfig { threads: 4, dist: 2, ..Default::default() };
+        let eng = RaceEngine::build(&a, &cfg).unwrap();
+        let upper = eng.permuted_matrix().upper_triangle();
+        let pool = WorkerPool::new(4);
+        let prog = compile_race(&eng);
+        let nrhs = 5usize;
+        let mut xs = vec![0f64; n * nrhs];
+        for row in 0..n {
+            for j in 0..nrhs {
+                xs[row * nrhs + j] = ((row * 3 + j * 11) % 17) as f64 * 0.25 - 2.0;
+            }
+        }
+        let mut bs = vec![0f64; n * nrhs];
+        symmspmv_race_multi(&pool, &prog, &upper, &xs, &mut bs, nrhs);
+        for j in 0..nrhs {
+            let x: Vec<f64> = (0..n).map(|row| xs[row * nrhs + j]).collect();
+            let mut b = vec![0.0; n];
+            symmspmv_pool(&pool, &prog, &upper, &x, &mut b);
+            for row in 0..n {
+                assert_eq!(b[row], bs[row * nrhs + j], "rhs {j} row {row}");
+            }
+        }
+    }
+
+    #[test]
+    fn pool_mpk_matches_reference_and_scoped() {
+        let a = gen::stencil2d_9pt(20, 16);
+        let x: Vec<f64> = (0..a.nrows()).map(|i| ((i * 7 % 23) as f64) * 0.1 - 1.0).collect();
+        let cfg = MpkConfig { p: 3, cache_bytes: 8 << 10 };
+        let plan = MpkPlan::build(&a, &cfg).unwrap();
+        let want = powers_ref(&a, &x, 3);
+        let xp = crate::coordinator::permute_vec(&x, &plan.perm);
+        for threads in [1usize, 3] {
+            let pool = WorkerPool::new(threads);
+            let prog = compile_mpk(&plan, threads);
+            let ys = mpk_powers_pool(&pool, &prog, &plan, &xp);
+            let scoped = kernels::mpk_powers(&plan, &xp, threads);
+            for k in 0..3 {
+                assert_eq!(ys[k], scoped[k], "k={k} t={threads}: pool vs scoped");
+                let err = crate::mpk::rel_err_vs_ref(&want[k], &ys[k], &plan.perm);
+                assert!(err <= 1e-9, "k={k} t={threads}: err {err:.2e}");
+            }
+        }
+    }
+
+    #[test]
+    fn pool_three_term_matches_scoped() {
+        let a = gen::graphene(8, 8);
+        let n = a.nrows();
+        let (sigma, tau, rho) = (0.4, -0.1, -1.0);
+        let z_prev: Vec<f64> = (0..n).map(|i| (i as f64 * 0.3).sin()).collect();
+        let z0: Vec<f64> = (0..n).map(|i| (i as f64 * 0.17).cos()).collect();
+        let plan = MpkPlan::build(&a, &MpkConfig { p: 3, cache_bytes: 6 << 10 }).unwrap();
+        let zp_p = crate::coordinator::permute_vec(&z_prev, &plan.perm);
+        let z0_p = crate::coordinator::permute_vec(&z0, &plan.perm);
+        let scoped = kernels::mpk_three_term(&plan, &zp_p, &z0_p, sigma, tau, rho, 2);
+        let pool = WorkerPool::new(2);
+        let prog = compile_mpk(&plan, 2);
+        let pooled = mpk_three_term_pool(&pool, &prog, &plan, &zp_p, &z0_p, sigma, tau, rho);
+        assert_eq!(scoped.len(), pooled.len());
+        for k in 0..scoped.len() {
+            assert_eq!(scoped[k], pooled[k], "k={k}");
+        }
+    }
+}

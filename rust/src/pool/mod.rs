@@ -1,0 +1,37 @@
+//! Persistent worker-pool execution runtime.
+//!
+//! The scoped-spawn executors in [`crate::kernels`] realize RACE's
+//! red/blue tree synchronization (and the MPK diamond schedule) by
+//! spawning and joining OS threads at every color of every tree node —
+//! `O(tree nodes)` fork/join rounds per kernel invocation, and
+//! `~nblocks × p` rounds per MPK sweep. That overhead is invisible on
+//! paper-sized matrices but dominates small-matrix latency and a serve
+//! loop answering thousands of requests per second.
+//!
+//! This module removes it in two layers:
+//!
+//! 1. **Step programs** ([`StepProgram`], [`compile_race`],
+//!    [`compile_mpk`]): the recursive schedule is flattened *once at
+//!    build time* into a sequence of steps, each a set of row-range
+//!    [`WorkUnit`]s that are mutually independent (distance-k for tree
+//!    programs, own-rows-only for MPK).
+//! 2. **A resident pool** ([`WorkerPool`]): `threads - 1` parked workers
+//!    plus the calling thread execute the steps with one barrier between
+//!    steps and a single condvar wake per kernel call.
+//!
+//! The executors in this module ([`symmspmv_pool`],
+//! [`symmspmv_race_multi`], [`gauss_seidel_pool`], [`kaczmarz_pool`],
+//! [`mpk_powers_pool`], …) are bit-compatible with their scoped
+//! counterparts; `benches/pool_latency.rs` measures the latency win and
+//! `rust/tests/pool.rs` property-tests the equivalence.
+
+mod exec;
+mod program;
+mod workers;
+
+pub use exec::{
+    gauss_seidel_pool, kaczmarz_pool, mpk_execute_pool, mpk_powers_pool, mpk_three_term_pool,
+    symmspmv_pool, symmspmv_race_multi,
+};
+pub use program::{compile_mpk, compile_race, StepProgram, WorkUnit};
+pub use workers::WorkerPool;

@@ -1,0 +1,290 @@
+//! Step programs: the flat schedules the worker pool executes.
+//!
+//! A [`StepProgram`] is a sequence of **steps**; each step is a set of
+//! [`WorkUnit`] row ranges that are safe to execute concurrently. The
+//! pool runs the steps strictly in order with a barrier in between
+//! ([`super::WorkerPool::execute`]), so the whole dependency structure of
+//! a kernel is compiled down to "units within a step are independent".
+//!
+//! Two compilers exist:
+//!
+//! * [`compile_race`] flattens a [`RaceEngine`] execution tree. The
+//!   scoped executors realize the tree's color synchronization with
+//!   recursive fork/join; here the recursion is unrolled at *build* time:
+//!   a leaf is a one-unit step, an inner node concatenates, per color,
+//!   the **zip-merge** of its children's step sequences (step `s` of the
+//!   merge is the union of every child's step `s`). Zip-merging is sound
+//!   because same-color siblings are mutually distance-k independent in
+//!   their entirety — any unit of one may run beside any unit of another
+//!   — while each child's internal order is preserved verbatim. The
+//!   merged schedule is a refinement of the scoped one (global barriers
+//!   where the tree had local joins), so every write-ordering the scoped
+//!   executor guarantees is preserved and results agree bit-for-bit.
+//! * [`compile_mpk`] lays out an [`MpkPlan`] diamond schedule: each plan
+//!   step (one power over one level range) becomes a program step whose
+//!   units are disjoint row chunks carrying the step's power index. SpMV
+//!   is a pure gather, so any row partition of a step is race-free.
+
+use crate::mpk::MpkPlan;
+use crate::race::RaceEngine;
+
+/// Rows below which an MPK step is not worth splitting across workers
+/// (mirrors the scoped executor's threshold in `kernels::mpk`).
+const MIN_PAR_ROWS: usize = 64;
+
+/// One schedulable row range. `power` is the MPK power index `k` (the
+/// unit reads `y_{k-1}` and writes `y_k`); tree programs use `power = 0`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WorkUnit {
+    /// First row (in the schedule's permuted numbering).
+    pub start: u32,
+    /// One-past-last row.
+    pub end: u32,
+    /// MPK power index (`0` for tree programs).
+    pub power: u32,
+}
+
+/// A compiled schedule: steps of concurrently executable units.
+#[derive(Debug, Clone)]
+pub struct StepProgram {
+    /// All units, flat; step `s` spans `units[step_ptr[s]..step_ptr[s+1]]`.
+    pub units: Vec<WorkUnit>,
+    /// `nsteps + 1` offsets into `units`.
+    pub step_ptr: Vec<u32>,
+}
+
+impl StepProgram {
+    /// Build from a step list, dropping empty steps and empty units.
+    pub fn from_steps(steps: Vec<Vec<WorkUnit>>) -> StepProgram {
+        let mut units = Vec::new();
+        let mut step_ptr = vec![0u32];
+        for step in steps {
+            let before = units.len();
+            units.extend(step.into_iter().filter(|u| u.end > u.start));
+            if units.len() > before {
+                step_ptr.push(units.len() as u32);
+            }
+        }
+        StepProgram { units, step_ptr }
+    }
+
+    /// Number of steps (== barriers the pool will cross).
+    pub fn nsteps(&self) -> usize {
+        self.step_ptr.len() - 1
+    }
+
+    /// Units of step `s`.
+    pub fn step(&self, s: usize) -> &[WorkUnit] {
+        &self.units[self.step_ptr[s] as usize..self.step_ptr[s + 1] as usize]
+    }
+
+    /// Total number of units.
+    pub fn nunits(&self) -> usize {
+        self.units.len()
+    }
+
+    /// Widest step (units available to run concurrently).
+    pub fn max_width(&self) -> usize {
+        (0..self.nsteps()).map(|s| self.step(s).len()).max().unwrap_or(0)
+    }
+
+    /// True iff the tree-program units partition `0..n` (each row covered
+    /// exactly once). MPK programs cover each row once *per power*, so
+    /// pass the appropriate expectation via `times`.
+    pub fn covers_rows(&self, n: usize, times: usize) -> bool {
+        let mut cover = vec![0usize; n];
+        for u in &self.units {
+            if u.end as usize > n {
+                return false;
+            }
+            for r in u.start..u.end {
+                cover[r as usize] += 1;
+            }
+        }
+        cover.iter().all(|&c| c == times)
+    }
+}
+
+/// Flatten a RACE execution tree into a step program (see module docs for
+/// the zip-merge argument).
+pub fn compile_race(eng: &RaceEngine) -> StepProgram {
+    StepProgram::from_steps(flatten(eng, 0))
+}
+
+fn flatten(eng: &RaceEngine, id: usize) -> Vec<Vec<WorkUnit>> {
+    let node = &eng.tree[id];
+    if node.children.is_empty() {
+        if node.end == node.start {
+            return Vec::new();
+        }
+        return vec![vec![WorkUnit { start: node.start, end: node.end, power: 0 }]];
+    }
+    let mut out = Vec::new();
+    for color in 0..2u8 {
+        let kid_steps: Vec<Vec<Vec<WorkUnit>>> = node
+            .children
+            .iter()
+            .copied()
+            .filter(|&c| eng.tree[c as usize].color == color)
+            .map(|c| flatten(eng, c as usize))
+            .collect();
+        let depth = kid_steps.iter().map(Vec::len).max().unwrap_or(0);
+        for s in 0..depth {
+            let mut step = Vec::new();
+            for ks in &kid_steps {
+                if let Some(units) = ks.get(s) {
+                    step.extend_from_slice(units);
+                }
+            }
+            if !step.is_empty() {
+                out.push(step);
+            }
+        }
+    }
+    out
+}
+
+/// Lay out an MPK plan for `threads` workers: one program step per plan
+/// step, split into up to `threads` row chunks (kept whole below the
+/// parallel-worthiness threshold, mirroring the scoped executor).
+pub fn compile_mpk(plan: &MpkPlan, threads: usize) -> StepProgram {
+    let threads = threads.max(1);
+    let mut steps = Vec::with_capacity(plan.steps.len());
+    for s in &plan.steps {
+        let (lo, hi) = (s.row_lo as usize, s.row_hi as usize);
+        if lo == hi {
+            continue; // empty level range (island gap)
+        }
+        let rows = hi - lo;
+        let mut units = Vec::new();
+        if threads == 1 || rows < 2 * MIN_PAR_ROWS {
+            units.push(WorkUnit { start: lo as u32, end: hi as u32, power: s.power });
+        } else {
+            let nt = threads.min(rows.div_ceil(MIN_PAR_ROWS)).max(2);
+            let chunk = rows.div_ceil(nt);
+            let mut at = lo;
+            while at < hi {
+                let e = (at + chunk).min(hi);
+                units.push(WorkUnit { start: at as u32, end: e as u32, power: s.power });
+                at = e;
+            }
+        }
+        steps.push(units);
+    }
+    StepProgram::from_steps(steps)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen;
+    use crate::mpk::MpkConfig;
+    use crate::race::RaceConfig;
+    use crate::sparse::Csr;
+
+    /// Distance-2 independence of the units within every step: the write
+    /// set of a SymmSpMV unit is its rows plus their upper-triangle
+    /// partners; units of one step must have pairwise disjoint write
+    /// sets. This is the program-level analogue of `verify_race_tree`.
+    fn verify_symm_step_independence(prog: &StepProgram, upper: &Csr) -> bool {
+        let n = upper.nrows();
+        for s in 0..prog.nsteps() {
+            let units = prog.step(s);
+            if units.len() < 2 {
+                continue;
+            }
+            let mut owner = vec![usize::MAX; n];
+            for (ui, u) in units.iter().enumerate() {
+                for row in u.start as usize..u.end as usize {
+                    let (cols, _) = upper.row(row);
+                    for &c in cols {
+                        let c = c as usize;
+                        if owner[c] != usize::MAX && owner[c] != ui {
+                            return false;
+                        }
+                        owner[c] = ui;
+                    }
+                }
+            }
+        }
+        true
+    }
+
+    #[test]
+    fn race_program_partitions_and_is_independent() {
+        for (name, a) in [
+            ("stencil", gen::race_paper_stencil(16, 16)),
+            ("spin", gen::spin_chain_xxz(9, gen::SpinKind::XXZ)),
+            ("graphene", gen::graphene(10, 10)),
+            ("delaunay", gen::delaunay_like(14, 14, 5)),
+        ] {
+            for threads in [1usize, 2, 4, 8] {
+                let cfg = RaceConfig { threads, dist: 2, ..Default::default() };
+                let eng = RaceEngine::build(&a, &cfg).unwrap();
+                let prog = compile_race(&eng);
+                assert!(prog.covers_rows(a.nrows(), 1), "{name}/{threads}: bad row cover");
+                let upper = eng.permuted_matrix().upper_triangle();
+                assert!(
+                    verify_symm_step_independence(&prog, &upper),
+                    "{name}/{threads}: step units not distance-2 independent"
+                );
+                assert_eq!(
+                    prog.nunits(),
+                    eng.leaves().iter().filter(|&&l| eng.tree[l as usize].rows() > 0).count(),
+                    "{name}/{threads}: one unit per non-empty leaf"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn single_thread_program_is_one_step() {
+        let a = gen::stencil2d_5pt(10, 10);
+        let eng = RaceEngine::build(&a, &RaceConfig { threads: 1, ..Default::default() }).unwrap();
+        let prog = compile_race(&eng);
+        assert_eq!(prog.nsteps(), 1);
+        assert_eq!(prog.nunits(), 1);
+        assert_eq!(prog.step(0)[0], WorkUnit { start: 0, end: 100, power: 0 });
+    }
+
+    #[test]
+    fn program_units_preserve_scoped_write_order() {
+        // Any two units whose write sets intersect must appear in
+        // different steps — and in the same relative order as the scoped
+        // executor would run them (program order == tree color order by
+        // construction; here we check the separation invariant).
+        let a = gen::race_paper_stencil(16, 16);
+        let eng = RaceEngine::build(&a, &RaceConfig { threads: 8, ..Default::default() }).unwrap();
+        let prog = compile_race(&eng);
+        assert!(prog.nsteps() >= 2, "8-thread tree must need multiple colors");
+        let upper = eng.permuted_matrix().upper_triangle();
+        assert!(verify_symm_step_independence(&prog, &upper));
+    }
+
+    #[test]
+    fn mpk_program_mirrors_plan_steps() {
+        // cache target sized so blocks span ≥ 128 rows — the regime where
+        // the compiler actually splits steps into per-worker chunks
+        let a = gen::stencil2d_9pt(24, 20);
+        let plan = MpkPlan::build(&a, &MpkConfig { p: 3, cache_bytes: 32 << 10 }).unwrap();
+        for threads in [1usize, 4] {
+            let prog = compile_mpk(&plan, threads);
+            // every power covers every row exactly once
+            assert!(prog.covers_rows(a.nrows(), 3), "t={threads}");
+            // program steps execute in plan order with matching powers
+            let plan_powers: Vec<u32> =
+                plan.steps.iter().filter(|s| s.row_hi > s.row_lo).map(|s| s.power).collect();
+            let mut prog_powers = Vec::new();
+            for s in 0..prog.nsteps() {
+                let units = prog.step(s);
+                assert!(units.iter().all(|u| u.power == units[0].power));
+                prog_powers.push(units[0].power);
+            }
+            assert_eq!(plan_powers, prog_powers);
+        }
+        // threads=4 splits large steps into more units than plan steps
+        let prog4 = compile_mpk(&plan, 4);
+        assert!(prog4.nunits() > plan.steps.len(), "expected chunked steps");
+        assert!(prog4.max_width() <= 4);
+    }
+}

@@ -1,0 +1,253 @@
+//! The resident worker pool: `N_t - 1` parked threads plus the calling
+//! thread, woken per job through a condvar handoff and synchronized
+//! between program steps by a reusable barrier.
+//!
+//! Design notes:
+//!
+//! * The **caller participates as worker 0**. A pool built for `t`
+//!   threads spawns only `t - 1` resident workers, so a single-threaded
+//!   pool degenerates to plain inline execution with zero synchronization
+//!   — the pool is never slower than the serial path it replaces.
+//! * Jobs are published as a type-erased `&dyn Fn(usize)` pointer. The
+//!   publishing [`WorkerPool::run`] call blocks until every worker has
+//!   finished, which is exactly the window in which workers may
+//!   dereference the pointer — the lifetime erasure is sound because the
+//!   borrow outlives all uses.
+//! * [`WorkerPool::execute`] runs a [`StepProgram`]: each participant
+//!   sweeps the units of a step round-robin by worker id, then waits at
+//!   the step barrier. One condvar wake per *job* plus one barrier per
+//!   *step* replaces the `O(tree nodes)` thread spawn/join rounds of the
+//!   scoped executors ([`crate::kernels::symmspmv_race`] and friends).
+
+use super::program::StepProgram;
+use std::sync::{Arc, Barrier, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// Type-erased job pointer. Only dereferenced while the publishing `run`
+/// call blocks, so the erased lifetime never actually dangles.
+#[derive(Clone, Copy)]
+struct JobPtr(*const (dyn Fn(usize) + Sync));
+// SAFETY: the pointee is `Sync` (shared-callable from many threads) and
+// `run` guarantees it outlives every dereference.
+unsafe impl Send for JobPtr {}
+
+struct State {
+    /// Bumped once per published job; workers run when it advances.
+    epoch: u64,
+    job: Option<JobPtr>,
+    /// Workers finished with the current job.
+    done: usize,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    /// Workers sleep here between jobs.
+    work_cv: Condvar,
+    /// The publisher sleeps here until `done == workers`.
+    done_cv: Condvar,
+    /// Step barrier for all `threads` participants (caller included).
+    barrier: Barrier,
+}
+
+/// A persistent pool of `threads - 1` resident workers (plus the caller).
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+    threads: usize,
+    /// Serializes concurrent `run` callers: the pool executes one job at
+    /// a time, so it is safe to share behind an `Arc` (the serve path
+    /// does exactly that).
+    gate: Mutex<()>,
+}
+
+impl WorkerPool {
+    /// Build a pool that executes programs with `threads` participants
+    /// (`threads - 1` resident workers are spawned; the caller is the
+    /// last participant).
+    pub fn new(threads: usize) -> WorkerPool {
+        let threads = threads.max(1);
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State { epoch: 0, job: None, done: 0, shutdown: false }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+            barrier: Barrier::new(threads),
+        });
+        let handles = (1..threads)
+            .map(|id| {
+                let sh = shared.clone();
+                std::thread::spawn(move || worker_loop(sh, id))
+            })
+            .collect();
+        WorkerPool { shared, handles, threads, gate: Mutex::new(()) }
+    }
+
+    /// Number of participants (resident workers + caller).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `f(worker_id)` on every participant — resident workers get ids
+    /// `1..threads`, the calling thread runs id `0` — and return once all
+    /// have finished. Concurrent callers are serialized. If `f` panics on
+    /// the calling thread, the call still waits for the workers before
+    /// unwinding (the job pointer must not outlive the borrow); a panic
+    /// *inside a worker* (or at a barrier) is not recovered — kernels
+    /// validate their inputs before publishing work.
+    pub fn run<F: Fn(usize) + Sync>(&self, f: F) {
+        let _gate = self.gate.lock().unwrap();
+        let nworkers = self.handles.len();
+        if nworkers == 0 {
+            f(0);
+            return;
+        }
+        {
+            let obj: *const (dyn Fn(usize) + Sync + '_) = &f;
+            // SAFETY: lifetime erasure only (fat-pointer layout is
+            // unchanged); the wait guard below keeps `f` borrowed until
+            // every worker is done with the pointer — even on unwind.
+            let job = JobPtr(unsafe { std::mem::transmute(obj) });
+            let mut st = self.shared.state.lock().unwrap();
+            st.job = Some(job);
+            st.done = 0;
+            st.epoch += 1;
+            self.shared.work_cv.notify_all();
+        }
+        let _wait = WaitForWorkers { shared: self.shared.as_ref(), nworkers };
+        // participate as worker 0; the guard joins the workers afterwards
+        f(0);
+    }
+
+    /// Execute a compiled step program: every participant sweeps the
+    /// units of each step round-robin by worker id (`unit_fn` is called
+    /// once per unit), then waits at the step barrier. Steps therefore
+    /// execute strictly in program order while units within a step run
+    /// concurrently — the schedule contract the compilers in
+    /// [`super::program`] establish.
+    pub fn execute<F: Fn(&super::WorkUnit) + Sync>(&self, prog: &StepProgram, unit_fn: F) {
+        let nt = self.threads;
+        self.run(|wid| {
+            for s in 0..prog.nsteps() {
+                let units = prog.step(s);
+                let mut i = wid;
+                while i < units.len() {
+                    unit_fn(&units[i]);
+                    i += nt;
+                }
+                self.shared.barrier.wait();
+            }
+        });
+    }
+}
+
+/// Blocks (in `drop`, so also during unwinding) until every resident
+/// worker has finished the current job, then clears the job pointer.
+struct WaitForWorkers<'a> {
+    shared: &'a Shared,
+    nworkers: usize,
+}
+
+impl Drop for WaitForWorkers<'_> {
+    fn drop(&mut self) {
+        let mut st = self.shared.state.lock().unwrap();
+        while st.done < self.nworkers {
+            st = self.shared.done_cv.wait(st).unwrap();
+        }
+        st.job = None;
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+            self.shared.work_cv.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>, id: usize) {
+    let mut seen = 0u64;
+    loop {
+        let job = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.epoch != seen {
+                    seen = st.epoch;
+                    break st.job.expect("epoch advanced without a job");
+                }
+                st = shared.work_cv.wait(st).unwrap();
+            }
+        };
+        // SAFETY: the publishing `run` blocks until `done` reaches the
+        // worker count, so the closure behind `job` is still alive.
+        unsafe { (*job.0)(id) };
+        let mut st = shared.state.lock().unwrap();
+        st.done += 1;
+        shared.done_cv.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn run_reaches_every_worker() {
+        for threads in [1usize, 2, 5] {
+            let pool = WorkerPool::new(threads);
+            let hits = AtomicUsize::new(0);
+            let ids = Mutex::new(Vec::new());
+            pool.run(|wid| {
+                hits.fetch_add(1, Ordering::SeqCst);
+                ids.lock().unwrap().push(wid);
+            });
+            assert_eq!(hits.load(Ordering::SeqCst), threads);
+            let mut got = ids.into_inner().unwrap();
+            got.sort_unstable();
+            assert_eq!(got, (0..threads).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn pool_is_reusable_across_jobs() {
+        let pool = WorkerPool::new(3);
+        let count = AtomicUsize::new(0);
+        for _ in 0..50 {
+            pool.run(|_| {
+                count.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        assert_eq!(count.load(Ordering::SeqCst), 150);
+    }
+
+    #[test]
+    fn concurrent_runs_serialize() {
+        let pool = Arc::new(WorkerPool::new(2));
+        let total = Arc::new(AtomicUsize::new(0));
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let pool = pool.clone();
+            let total = total.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..25 {
+                    pool.run(|_| {
+                        total.fetch_add(1, Ordering::SeqCst);
+                    });
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(total.load(Ordering::SeqCst), 4 * 25 * 2);
+    }
+}

@@ -1,0 +1,126 @@
+//! Request micro-batching: coalesce concurrent matvec requests into one
+//! multi-vector kernel sweep.
+//!
+//! The aggregator uses **natural batching** — no timers, no tuning knob:
+//! requests enqueue themselves, then contend for the per-matrix execution
+//! lock. Whoever wins becomes the *leader* and drains everything queued
+//! at that moment (its own request included) into one batch; requests
+//! arriving while a batch is in flight queue up and form the next batch.
+//! Under no concurrency every request is its own batch of 1 with one
+//! uncontended lock acquisition of overhead; under load the batch size
+//! tracks the instantaneous concurrency, which is exactly when the
+//! traffic amortization of the multi-vector kernel pays.
+
+use std::sync::{Arc, Mutex};
+
+/// Result of one served request.
+#[derive(Debug, Clone)]
+pub struct BatchResult {
+    /// Output vector (still in the schedule's permuted numbering).
+    pub b: Vec<f64>,
+    /// Kernel seconds of the batch that served this request.
+    pub seconds: f64,
+    /// Size of that batch.
+    pub batch: usize,
+}
+
+struct Slot {
+    result: Mutex<Option<BatchResult>>,
+}
+
+struct Pending {
+    x: Vec<f64>,
+    slot: Arc<Slot>,
+}
+
+/// Per-matrix request aggregator.
+#[derive(Default)]
+pub struct Batcher {
+    queue: Mutex<Vec<Pending>>,
+    /// One batch in flight at a time; doubles as the follower rendezvous.
+    exec: Mutex<()>,
+}
+
+impl Batcher {
+    pub fn new() -> Batcher {
+        Batcher { queue: Mutex::new(Vec::new()), exec: Mutex::new(()) }
+    }
+
+    /// Submit one (already permuted) vector and block until it is served.
+    /// `run` computes a whole micro-batch — it is invoked only by the
+    /// leader, with the batch inputs in submission order, and must return
+    /// one output per input plus the kernel seconds.
+    pub fn matvec<F>(&self, x: Vec<f64>, run: F) -> BatchResult
+    where
+        F: FnOnce(&[Vec<f64>]) -> (Vec<Vec<f64>>, f64),
+    {
+        let slot = Arc::new(Slot { result: Mutex::new(None) });
+        self.queue.lock().unwrap().push(Pending { x, slot: slot.clone() });
+        let _exec = self.exec.lock().unwrap();
+        // A previous leader may have drained us while we waited for the
+        // lock — in that case our slot is already filled.
+        if let Some(r) = slot.result.lock().unwrap().take() {
+            return r;
+        }
+        let pend: Vec<Pending> = std::mem::take(&mut *self.queue.lock().unwrap());
+        debug_assert!(!pend.is_empty(), "own request must still be queued");
+        let (xs, slots): (Vec<Vec<f64>>, Vec<Arc<Slot>>) =
+            pend.into_iter().map(|p| (p.x, p.slot)).unzip();
+        let m = xs.len();
+        let (bs, seconds) = run(&xs);
+        debug_assert_eq!(bs.len(), m, "leader must return one output per input");
+        for (s, b) in slots.iter().zip(bs) {
+            *s.result.lock().unwrap() = Some(BatchResult { b, seconds, batch: m });
+        }
+        let own = slot.result.lock().unwrap().take();
+        own.expect("leader serves its own request in the drained batch")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn single_request_is_batch_of_one() {
+        let b = Batcher::new();
+        let r = b.matvec(vec![1.0, 2.0], |xs| {
+            assert_eq!(xs.len(), 1);
+            (vec![xs[0].iter().map(|v| v * 2.0).collect()], 0.5)
+        });
+        assert_eq!(r.b, vec![2.0, 4.0]);
+        assert_eq!(r.batch, 1);
+        assert_eq!(r.seconds, 0.5);
+    }
+
+    #[test]
+    fn concurrent_requests_coalesce_and_route_correctly() {
+        let b = Arc::new(Batcher::new());
+        let batches = Arc::new(AtomicUsize::new(0));
+        let nreq = 16usize;
+        let mut handles = Vec::new();
+        for i in 0..nreq {
+            let b = b.clone();
+            let batches = batches.clone();
+            handles.push(std::thread::spawn(move || {
+                let x = vec![i as f64; 4];
+                let r = b.matvec(x, |xs| {
+                    batches.fetch_add(1, Ordering::SeqCst);
+                    // slow "kernel" so followers pile up behind the leader
+                    std::thread::sleep(std::time::Duration::from_millis(5));
+                    (xs.iter().map(|x| x.iter().map(|v| v + 1.0).collect()).collect(), 0.0)
+                });
+                // each request gets *its own* answer back
+                assert_eq!(r.b, vec![i as f64 + 1.0; 4]);
+                assert!(r.batch >= 1 && r.batch <= nreq);
+                r.batch
+            }));
+        }
+        let sizes: Vec<usize> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        // every request served exactly once, across however many batches
+        let nbatches = batches.load(Ordering::SeqCst);
+        assert!(nbatches <= nreq);
+        assert!(sizes.iter().all(|&s| s >= 1));
+    }
+}

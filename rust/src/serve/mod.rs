@@ -1,0 +1,631 @@
+//! SymmSpMV / MPK as a resident network service.
+//!
+//! Grown out of the original `coordinator::serve` loop into a real
+//! subsystem:
+//!
+//! * **Multi-matrix registry** — each registered matrix spec is compiled
+//!   once (RCM → RACE engine → upper triangle → pool step program) and
+//!   stays resident; requests route by `"matrix"` name and default to
+//!   the first registered matrix.
+//! * **Batched execution** — concurrent SymmSpMV requests for the same
+//!   matrix coalesce in a [`batch::Batcher`] and are answered by one
+//!   [`crate::pool::symmspmv_race_multi`] sweep (`B = A X`): the matrix
+//!   traffic that dominates SymmSpMV is paid once per micro-batch
+//!   instead of once per request.
+//! * **MPK endpoint** — `{"x": [..], "p": k}` computes `y = A^k x` on a
+//!   resident level-blocked [`MpkPlan`] (plans are built lazily per
+//!   power and cached).
+//! * **Structured errors and stats** — malformed requests, non-finite
+//!   inputs, unknown matrices and out-of-range powers answer
+//!   `{"error": {"code", "message"}}`; `{"stats": true}` reports
+//!   request/batch counters.
+//!
+//! All kernels run on one shared persistent [`WorkerPool`]; building a
+//! service is the only time threads are spawned. The TCP front end
+//! (newline-delimited JSON, graceful shutdown, `--max-requests`) lives
+//! in [`server`].
+
+mod batch;
+mod server;
+
+pub use batch::BatchResult;
+pub use server::{serve, Server};
+
+use crate::coordinator::{permute_vec, resolve_matrix, unpermute_vec};
+use crate::graph;
+use crate::mpk::{MpkConfig, MpkPlan};
+use crate::pool::{self, StepProgram, WorkerPool};
+use crate::race::{RaceConfig, RaceEngine};
+use crate::sparse::Csr;
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Service configuration (CLI flags of `race-cli serve`).
+#[derive(Debug, Clone)]
+pub struct ServeOptions {
+    /// Matrix specs to register (corpus names, generator specs, `.mtx`
+    /// paths). The first one is the default for requests that don't name
+    /// a matrix.
+    pub matrices: Vec<String>,
+    /// Pool participants.
+    pub threads: usize,
+    /// Listen address, e.g. `127.0.0.1:7777` (port 0 picks one).
+    pub addr: String,
+    /// Build small variants of corpus matrices.
+    pub small: bool,
+    /// Stop serving after this many requests (graceful shutdown).
+    pub max_requests: Option<u64>,
+    /// Highest power the MPK endpoint accepts.
+    pub mpk_power_max: usize,
+    /// Cache-size target for resident MPK plans.
+    pub mpk_cache_bytes: usize,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions {
+            matrices: Vec::new(),
+            threads: 4,
+            addr: "127.0.0.1:7777".to_string(),
+            small: false,
+            max_requests: None,
+            mpk_power_max: 8,
+            mpk_cache_bytes: 2 << 20,
+        }
+    }
+}
+
+/// Structured service error: a stable machine-readable code plus a
+/// human-readable message. Rendered as `{"error": {"code", "message"}}`.
+#[derive(Debug, Clone)]
+pub struct ServeError {
+    pub code: &'static str,
+    pub message: String,
+}
+
+impl ServeError {
+    fn new(code: &'static str, message: impl Into<String>) -> ServeError {
+        ServeError { code, message: message.into() }
+    }
+
+    /// JSON rendering of the error envelope.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![(
+            "error",
+            Json::obj(vec![
+                ("code", Json::Str(self.code.to_string())),
+                ("message", Json::Str(self.message.clone())),
+            ]),
+        )])
+    }
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}: {}", self.code, self.message)
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// One registered matrix: compiled schedules + aggregation state.
+pub struct MatrixEntry {
+    /// Registry name (the spec it was resolved from).
+    pub name: String,
+    /// Matrix dimension.
+    pub n: usize,
+    eng: RaceEngine,
+    upper: Csr,
+    program: StepProgram,
+    /// RCM ∘ RACE permutation, original -> executor numbering.
+    total_perm: Vec<u32>,
+    /// RCM permutation alone (MPK plans are built on the RCM matrix).
+    rcm_perm: Vec<u32>,
+    /// The RCM-permuted matrix (kept for lazy MPK plan builds).
+    a_rcm: Csr,
+    mpk: Mutex<HashMap<usize, Arc<MpkResident>>>,
+    batcher: batch::Batcher,
+}
+
+impl MatrixEntry {
+    /// RACE parallel efficiency of the resident schedule.
+    pub fn eta(&self) -> f64 {
+        self.eng.efficiency()
+    }
+}
+
+struct MpkResident {
+    plan: MpkPlan,
+    prog: StepProgram,
+    /// RCM ∘ level permutation, original -> plan numbering.
+    total_perm: Vec<u32>,
+}
+
+#[derive(Default)]
+struct ServiceStats {
+    requests: AtomicU64,
+    errors: AtomicU64,
+    matvecs: AtomicU64,
+    mpk_requests: AtomicU64,
+    batches: AtomicU64,
+    batched_vectors: AtomicU64,
+    max_batch: AtomicU64,
+    /// Total kernel nanoseconds (matvec batches + MPK sweeps).
+    kernel_nanos: AtomicU64,
+}
+
+/// The resident service: registry + pool, shared across connections.
+pub struct MatvecService {
+    pool: WorkerPool,
+    entries: Vec<Arc<MatrixEntry>>,
+    threads: usize,
+    mpk_power_max: usize,
+    mpk_cache_bytes: usize,
+    stats: ServiceStats,
+}
+
+impl MatvecService {
+    /// Compile every registered matrix and start the worker pool.
+    pub fn build(opts: &ServeOptions) -> Result<MatvecService> {
+        anyhow::ensure!(!opts.matrices.is_empty(), "serve needs at least one --matrix spec");
+        let threads = opts.threads.max(1);
+        let mut entries = Vec::with_capacity(opts.matrices.len());
+        for spec in &opts.matrices {
+            let (name, a0) = resolve_matrix(spec, opts.small)
+                .with_context(|| format!("registering matrix {spec:?}"))?;
+            let rcm_perm = graph::rcm(&a0);
+            let a_rcm = a0.permute_symmetric(&rcm_perm);
+            let cfg = RaceConfig { threads, ..Default::default() };
+            let eng = RaceEngine::build(&a_rcm, &cfg)
+                .with_context(|| format!("RACE build for {spec:?}"))?;
+            let upper = eng.permuted_matrix().upper_triangle();
+            let program = pool::compile_race(&eng);
+            let total_perm = graph::compose_perm(&rcm_perm, &eng.perm);
+            let n = a_rcm.nrows();
+            entries.push(Arc::new(MatrixEntry {
+                name,
+                n,
+                eng,
+                upper,
+                program,
+                total_perm,
+                rcm_perm,
+                a_rcm,
+                mpk: Mutex::new(HashMap::new()),
+                batcher: batch::Batcher::new(),
+            }));
+        }
+        Ok(MatvecService {
+            pool: WorkerPool::new(threads),
+            entries,
+            threads,
+            mpk_power_max: opts.mpk_power_max.max(1),
+            mpk_cache_bytes: opts.mpk_cache_bytes.max(1),
+            stats: ServiceStats::default(),
+        })
+    }
+
+    /// Registered matrices.
+    pub fn entries(&self) -> &[Arc<MatrixEntry>] {
+        &self.entries
+    }
+
+    /// Pool participants.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Resolve a request's matrix: by name, or the first registered.
+    pub fn entry(&self, name: Option<&str>) -> Result<&Arc<MatrixEntry>, ServeError> {
+        match name {
+            None => Ok(&self.entries[0]),
+            Some(n) => self.entries.iter().find(|e| e.name == n).ok_or_else(|| {
+                let known: Vec<&str> = self.entries.iter().map(|e| e.name.as_str()).collect();
+                ServeError::new(
+                    "unknown_matrix",
+                    format!("matrix {n:?} not registered (have: {})", known.join(", ")),
+                )
+            }),
+        }
+    }
+
+    fn check_input(entry: &MatrixEntry, x: &[f64]) -> Result<(), ServeError> {
+        if x.len() != entry.n {
+            return Err(ServeError::new(
+                "bad_request",
+                format!("matrix {} expects {} entries, got {}", entry.name, entry.n, x.len()),
+            ));
+        }
+        if let Some(i) = x.iter().position(|v| !v.is_finite()) {
+            return Err(ServeError::new(
+                "nonfinite_input",
+                format!("x[{i}] is {} — request vectors must be finite", x[i]),
+            ));
+        }
+        Ok(())
+    }
+
+    /// Serve one SymmSpMV request `b = A x` (original indexing). Blocks
+    /// until a micro-batch containing this request has run; returns the
+    /// result plus kernel seconds and the batch size it rode in.
+    pub fn matvec(
+        &self,
+        name: Option<&str>,
+        x: &[f64],
+    ) -> Result<(Vec<f64>, f64, usize), ServeError> {
+        let entry = self.entry(name)?;
+        Self::check_input(entry, x)?;
+        self.stats.matvecs.fetch_add(1, Ordering::Relaxed);
+        let xp = permute_vec(x, &entry.total_perm);
+        let r = entry.batcher.matvec(xp, |xs| self.run_batch(entry, xs));
+        Ok((unpermute_vec(&r.b, &entry.total_perm), r.seconds, r.batch))
+    }
+
+    /// Run one whole micro-batch directly (bench/test entry; bypasses the
+    /// aggregator). Inputs and outputs in original indexing.
+    pub fn matvec_batch(
+        &self,
+        name: Option<&str>,
+        xs: &[Vec<f64>],
+    ) -> Result<Vec<Vec<f64>>, ServeError> {
+        let entry = self.entry(name)?;
+        if xs.is_empty() {
+            return Ok(Vec::new());
+        }
+        for x in xs {
+            Self::check_input(entry, x)?;
+        }
+        let xps: Vec<Vec<f64>> = xs.iter().map(|x| permute_vec(x, &entry.total_perm)).collect();
+        let (bps, _) = self.run_batch(entry, &xps);
+        Ok(bps.into_iter().map(|bp| unpermute_vec(&bp, &entry.total_perm)).collect())
+    }
+
+    /// Leader-side batch execution: one pool sweep for the whole batch.
+    /// Inputs/outputs in executor (permuted) numbering.
+    fn run_batch(&self, entry: &MatrixEntry, xs: &[Vec<f64>]) -> (Vec<Vec<f64>>, f64) {
+        let n = entry.n;
+        let m = xs.len();
+        let t0 = std::time::Instant::now();
+        let out = if m == 1 {
+            let mut b = vec![0.0; n];
+            pool::symmspmv_pool(&self.pool, &entry.program, &entry.upper, &xs[0], &mut b);
+            vec![b]
+        } else {
+            // pack row-major so one matrix sweep serves all m vectors
+            let mut xsf = vec![0f64; n * m];
+            for (j, x) in xs.iter().enumerate() {
+                for row in 0..n {
+                    xsf[row * m + j] = x[row];
+                }
+            }
+            let mut bsf = vec![0f64; n * m];
+            pool::symmspmv_race_multi(&self.pool, &entry.program, &entry.upper, &xsf, &mut bsf, m);
+            (0..m).map(|j| (0..n).map(|row| bsf[row * m + j]).collect()).collect()
+        };
+        let dt = t0.elapsed();
+        self.stats.batches.fetch_add(1, Ordering::Relaxed);
+        self.stats.batched_vectors.fetch_add(m as u64, Ordering::Relaxed);
+        self.stats.max_batch.fetch_max(m as u64, Ordering::Relaxed);
+        self.stats.kernel_nanos.fetch_add(dt.as_nanos() as u64, Ordering::Relaxed);
+        (out, dt.as_secs_f64())
+    }
+
+    /// Serve one MPK request `y = A^p x` (original indexing) on the
+    /// resident plan for power `p` (built and cached on first use).
+    pub fn mpk(
+        &self,
+        name: Option<&str>,
+        x: &[f64],
+        p: usize,
+    ) -> Result<(Vec<f64>, f64), ServeError> {
+        let entry = self.entry(name)?;
+        Self::check_input(entry, x)?;
+        if p == 0 || p > self.mpk_power_max {
+            return Err(ServeError::new(
+                "bad_power",
+                format!("power must be in 1..={}, got {p}", self.mpk_power_max),
+            ));
+        }
+        self.stats.mpk_requests.fetch_add(1, Ordering::Relaxed);
+        let res = self.mpk_resident(entry, p)?;
+        let xp = permute_vec(x, &res.total_perm);
+        let t0 = std::time::Instant::now();
+        let ys = pool::mpk_powers_pool(&self.pool, &res.prog, &res.plan, &xp);
+        let dt = t0.elapsed();
+        self.stats.kernel_nanos.fetch_add(dt.as_nanos() as u64, Ordering::Relaxed);
+        Ok((unpermute_vec(&ys[p - 1], &res.total_perm), dt.as_secs_f64()))
+    }
+
+    fn mpk_resident(
+        &self,
+        entry: &MatrixEntry,
+        p: usize,
+    ) -> Result<Arc<MpkResident>, ServeError> {
+        let mut cache = entry.mpk.lock().unwrap();
+        if let Some(r) = cache.get(&p) {
+            return Ok(r.clone());
+        }
+        let cfg = MpkConfig { p, cache_bytes: self.mpk_cache_bytes };
+        let plan = MpkPlan::from_engine(&entry.a_rcm, &entry.eng, &cfg)
+            .map_err(|e| ServeError::new("internal", format!("MPK plan: {e}")))?;
+        let prog = pool::compile_mpk(&plan, self.threads);
+        let total_perm = graph::compose_perm(&entry.rcm_perm, &plan.perm);
+        let res = Arc::new(MpkResident { plan, prog, total_perm });
+        cache.insert(p, res.clone());
+        Ok(res)
+    }
+
+    /// Stats snapshot as JSON.
+    pub fn stats_json(&self) -> Json {
+        let batches = self.stats.batches.load(Ordering::Relaxed);
+        let vectors = self.stats.batched_vectors.load(Ordering::Relaxed);
+        let avg = if batches > 0 { vectors as f64 / batches as f64 } else { 0.0 };
+        let matrices: Vec<Json> = self
+            .entries
+            .iter()
+            .map(|e| {
+                Json::obj(vec![
+                    ("name", Json::Str(e.name.clone())),
+                    ("rows", Json::Num(e.n as f64)),
+                    ("eta", Json::Num(e.eta())),
+                    ("steps", Json::Num(e.program.nsteps() as f64)),
+                    ("units", Json::Num(e.program.nunits() as f64)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![(
+            "stats",
+            Json::obj(vec![
+                ("requests", Json::Num(self.stats.requests.load(Ordering::Relaxed) as f64)),
+                ("errors", Json::Num(self.stats.errors.load(Ordering::Relaxed) as f64)),
+                ("matvecs", Json::Num(self.stats.matvecs.load(Ordering::Relaxed) as f64)),
+                (
+                    "mpk_requests",
+                    Json::Num(self.stats.mpk_requests.load(Ordering::Relaxed) as f64),
+                ),
+                ("batches", Json::Num(batches as f64)),
+                ("batched_vectors", Json::Num(vectors as f64)),
+                ("avg_batch", Json::Num(avg)),
+                ("max_batch", Json::Num(self.stats.max_batch.load(Ordering::Relaxed) as f64)),
+                (
+                    "kernel_seconds",
+                    Json::Num(self.stats.kernel_nanos.load(Ordering::Relaxed) as f64 / 1e9),
+                ),
+                ("threads", Json::Num(self.threads as f64)),
+                ("matrices", Json::Arr(matrices)),
+            ]),
+        )])
+    }
+
+    /// Handle one JSON request line. Returns the response line and
+    /// whether the request asked the server to shut down.
+    pub fn handle(&self, line: &str) -> (String, bool) {
+        self.stats.requests.fetch_add(1, Ordering::Relaxed);
+        match self.handle_inner(line) {
+            Ok((resp, shutdown)) => (resp, shutdown),
+            Err(e) => {
+                self.stats.errors.fetch_add(1, Ordering::Relaxed);
+                (e.to_json().to_string(), false)
+            }
+        }
+    }
+
+    fn handle_inner(&self, line: &str) -> Result<(String, bool), ServeError> {
+        let req = Json::parse(line)
+            .map_err(|e| ServeError::new("bad_json", format!("request is not valid JSON: {e}")))?;
+        if req.get("stats").is_some() {
+            return Ok((self.stats_json().to_string(), false));
+        }
+        if req.get("shutdown").is_some() {
+            let ack = Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("shutting_down", Json::Bool(true)),
+            ]);
+            return Ok((ack.to_string(), true));
+        }
+        let x = req.get("x").and_then(|j| j.as_f64_arr()).ok_or_else(|| {
+            ServeError::new(
+                "bad_request",
+                "request must be {\"x\": [..]} (optional \"matrix\", \"p\", or \
+                 {\"stats\": true} / {\"shutdown\": true})",
+            )
+        })?;
+        let name = match req.get("matrix") {
+            Some(Json::Str(s)) => Some(s.as_str()),
+            Some(_) => {
+                return Err(ServeError::new("bad_request", "\"matrix\" must be a string"));
+            }
+            None => None,
+        };
+        if let Some(pj) = req.get("p") {
+            let p = pj
+                .as_f64()
+                .filter(|p| p.fract() == 0.0 && *p >= 1.0)
+                .ok_or_else(|| ServeError::new("bad_power", "\"p\" must be a positive integer"))?
+                as usize;
+            let (y, secs) = self.mpk(name, &x, p)?;
+            let resp = Json::obj(vec![
+                ("y", Json::arr_f64(&y)),
+                ("p", Json::Num(p as f64)),
+                ("seconds", Json::Num(secs)),
+            ]);
+            return Ok((resp.to_string(), false));
+        }
+        let (b, secs, m) = self.matvec(name, &x)?;
+        let resp = Json::obj(vec![
+            ("b", Json::arr_f64(&b)),
+            ("batch", Json::Num(m as f64)),
+            ("seconds", Json::Num(secs)),
+        ]);
+        Ok((resp.to_string(), false))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mpk::powers_ref;
+
+    fn opts(specs: &[&str]) -> ServeOptions {
+        ServeOptions {
+            matrices: specs.iter().map(|s| s.to_string()).collect(),
+            threads: 2,
+            small: true,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn registry_routes_by_name_and_rejects_unknown() {
+        let svc = MatvecService::build(&opts(&["stencil2d:8x8", "graphene:6x6"])).unwrap();
+        assert_eq!(svc.entries().len(), 2);
+        assert_eq!(svc.entry(None).unwrap().name, "stencil2d:8x8");
+        assert_eq!(svc.entry(Some("graphene:6x6")).unwrap().name, "graphene:6x6");
+        // (`.err()` rather than `unwrap_err`: MatrixEntry is not Debug)
+        let err = svc.entry(Some("nope")).err().unwrap();
+        assert_eq!(err.code, "unknown_matrix");
+    }
+
+    #[test]
+    fn matvec_matches_reference_on_both_matrices() {
+        let svc = MatvecService::build(&opts(&["stencil2d:8x8", "spin:6"])).unwrap();
+        for e in svc.entries() {
+            let x: Vec<f64> = (0..e.n).map(|i| ((i * 5 + 1) % 9) as f64 * 0.3 - 1.0).collect();
+            let (b, _, m) = svc.matvec(Some(e.name.as_str()), &x).unwrap();
+            assert_eq!(m, 1);
+            // reference on the RCM matrix in original indexing
+            let want = e.a_rcm.spmv_ref(&permute_vec(&x, &e.rcm_perm));
+            for (old, &new) in e.rcm_perm.iter().enumerate() {
+                let w = want[new as usize];
+                assert!((b[old] - w).abs() < 1e-9 * (1.0 + w.abs()), "{} row {old}", e.name);
+            }
+        }
+    }
+
+    #[test]
+    fn batch_output_matches_singles() {
+        let svc = MatvecService::build(&opts(&["delaunay:10x10"])).unwrap();
+        let n = svc.entries()[0].n;
+        let xs: Vec<Vec<f64>> = (0..6)
+            .map(|j| (0..n).map(|i| ((i * (j + 2)) % 11) as f64 * 0.2 - 1.0).collect())
+            .collect();
+        let batched = svc.matvec_batch(None, &xs).unwrap();
+        for (j, x) in xs.iter().enumerate() {
+            let (single, _, _) = svc.matvec(None, x).unwrap();
+            for i in 0..n {
+                assert!(
+                    (batched[j][i] - single[i]).abs() <= 1e-12 * (1.0 + single[i].abs()),
+                    "rhs {j} row {i}: {} vs {}",
+                    batched[j][i],
+                    single[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn nonfinite_and_shape_errors_are_structured() {
+        let svc = MatvecService::build(&opts(&["stencil2d:6x6"])).unwrap();
+        let n = svc.entries()[0].n;
+        let mut x = vec![1.0; n];
+        x[3] = f64::NAN;
+        assert_eq!(svc.matvec(None, &x).unwrap_err().code, "nonfinite_input");
+        x[3] = f64::INFINITY;
+        assert_eq!(svc.matvec(None, &x).unwrap_err().code, "nonfinite_input");
+        assert_eq!(svc.matvec(None, &[1.0, 2.0]).unwrap_err().code, "bad_request");
+        // through the JSON front door: 1e999 parses to +inf
+        let (resp, _) = svc.handle(&format!("{{\"x\": [{}1e999]}}", "1, ".repeat(n - 1)));
+        assert!(resp.contains("nonfinite_input"), "{resp}");
+        let err = Json::parse(&resp).unwrap();
+        assert_eq!(
+            err.get("error").and_then(|e| e.get("code")),
+            Some(&Json::Str("nonfinite_input".into()))
+        );
+    }
+
+    #[test]
+    fn mpk_endpoint_matches_reference_powers() {
+        let svc = MatvecService::build(&opts(&["stencil2d:10x10"])).unwrap();
+        let e = &svc.entries()[0];
+        let x: Vec<f64> = (0..e.n).map(|i| ((i % 7) as f64) * 0.5 - 1.5).collect();
+        for p in 1..=3usize {
+            let (y, _) = svc.mpk(None, &x, p).unwrap();
+            // reference on the RCM matrix, mapped back to original order
+            let want = powers_ref(&e.a_rcm, &permute_vec(&x, &e.rcm_perm), p);
+            let scale =
+                1.0 + want[p - 1].iter().fold(0f64, |m, v| m.max(v.abs()));
+            for (old, &new) in e.rcm_perm.iter().enumerate() {
+                let w = want[p - 1][new as usize];
+                assert!((y[old] - w).abs() / scale < 1e-9, "p={p} row {old}: {} vs {w}", y[old]);
+            }
+        }
+        assert_eq!(svc.mpk(None, &x, 0).unwrap_err().code, "bad_power");
+        assert_eq!(svc.mpk(None, &x, 99).unwrap_err().code, "bad_power");
+    }
+
+    #[test]
+    fn handle_dispatches_all_request_kinds() {
+        let svc = MatvecService::build(&opts(&["stencil2d:6x6"])).unwrap();
+        let n = svc.entries()[0].n;
+        let ones = vec![1.0; n];
+        // matvec: 5-pt stencil rows sum to 1 -> b == ones
+        let (resp, stop) = svc.handle(&format!("{{\"x\": {ones:?}}}"));
+        assert!(!stop);
+        let j = Json::parse(&resp).unwrap();
+        let b = j.get("b").and_then(|v| v.as_f64_arr()).unwrap();
+        assert!(b.iter().all(|v| (v - 1.0).abs() < 1e-9), "{resp}");
+        // mpk: A^2 ones == ones as well
+        let (resp, _) = svc.handle(&format!("{{\"x\": {ones:?}, \"p\": 2}}"));
+        let j = Json::parse(&resp).unwrap();
+        let y = j.get("y").and_then(|v| v.as_f64_arr()).unwrap();
+        assert!(y.iter().all(|v| (v - 1.0).abs() < 1e-9), "{resp}");
+        // stats reflects the traffic
+        let (resp, _) = svc.handle("{\"stats\": true}");
+        let j = Json::parse(&resp).unwrap();
+        let s = j.get("stats").unwrap();
+        assert_eq!(s.get("matvecs").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(s.get("mpk_requests").and_then(Json::as_f64), Some(1.0));
+        assert!(s.get("requests").and_then(Json::as_f64).unwrap() >= 3.0);
+        // shutdown ack
+        let (resp, stop) = svc.handle("{\"shutdown\": true}");
+        assert!(stop);
+        assert!(resp.contains("shutting_down"));
+        // garbage
+        let (resp, _) = svc.handle("{nope");
+        assert!(resp.contains("bad_json"));
+        let (resp, _) = svc.handle("{\"y\": 3}");
+        assert!(resp.contains("bad_request"));
+    }
+
+    #[test]
+    fn concurrent_requests_all_answered_correctly() {
+        let svc = Arc::new(MatvecService::build(&opts(&["stencil2d:12x12"])).unwrap());
+        let n = svc.entries()[0].n;
+        let mut handles = Vec::new();
+        for t in 0..8usize {
+            let svc = svc.clone();
+            handles.push(std::thread::spawn(move || {
+                let x = vec![(t + 1) as f64; n];
+                let (b, _, m) = svc.matvec(None, &x).unwrap();
+                // rows sum to 1 -> b == x
+                for (i, v) in b.iter().enumerate() {
+                    assert!((v - (t + 1) as f64).abs() < 1e-9, "t={t} row {i}: {v}");
+                }
+                m
+            }));
+        }
+        let mut served = 0u64;
+        for h in handles {
+            let m = h.join().unwrap();
+            assert!(m >= 1);
+            served += 1;
+        }
+        assert_eq!(served, 8);
+        let s = svc.stats_json();
+        let stats = s.get("stats").unwrap();
+        assert_eq!(stats.get("batched_vectors").and_then(Json::as_f64), Some(8.0));
+    }
+}

@@ -1,0 +1,185 @@
+//! TCP front end: newline-delimited JSON over `std::net` (the offline
+//! environment has no tokio; one thread per connection, which the
+//! batching layer turns into micro-batches on the shared pool).
+//!
+//! The accept loop is stoppable — unlike the original infinite
+//! `listener.incoming()` loop — via two triggers:
+//!
+//! * a `{"shutdown": true}` request, and
+//! * an optional request budget (`--max-requests N`): after `N` handled
+//!   request lines the server stops accepting and drains.
+//!
+//! Both set a stop flag and poke the listener with a loopback connection
+//! so the blocking `accept` wakes up; open connections are shut down
+//! after their in-flight request completes (handlers re-check the flag
+//! between requests) and every connection thread is joined before
+//! [`Server::run`] returns — so the e2e tests can drive a real server
+//! deterministically.
+
+use super::{MatvecService, ServeOptions};
+use anyhow::Result;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicI64, Ordering};
+use std::sync::Arc;
+
+/// A bound, not-yet-running server. Splitting bind from run lets callers
+/// learn the actual address (port 0 binds an ephemeral port) before
+/// starting the blocking accept loop.
+pub struct Server {
+    svc: Arc<MatvecService>,
+    listener: TcpListener,
+    local: SocketAddr,
+    stop: Arc<AtomicBool>,
+    /// Remaining request budget (`i64::MAX` when unlimited).
+    budget: Arc<AtomicI64>,
+}
+
+impl Server {
+    /// Build the service (compiling every registered matrix) and bind the
+    /// listen address.
+    pub fn bind(opts: &ServeOptions) -> Result<Server> {
+        let svc = Arc::new(MatvecService::build(opts)?);
+        let listener = TcpListener::bind(&opts.addr)?;
+        let local = listener.local_addr()?;
+        let budget = match opts.max_requests {
+            Some(n) => i64::try_from(n).unwrap_or(i64::MAX),
+            None => i64::MAX,
+        };
+        Ok(Server {
+            svc,
+            listener,
+            local,
+            stop: Arc::new(AtomicBool::new(false)),
+            budget: Arc::new(AtomicI64::new(budget)),
+        })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local
+    }
+
+    /// The shared service (for tests and stats inspection).
+    pub fn service(&self) -> &Arc<MatvecService> {
+        &self.svc
+    }
+
+    /// Accept-and-serve until shutdown is requested or the request budget
+    /// is exhausted; joins every connection thread before returning.
+    pub fn run(&self) -> Result<()> {
+        let names: Vec<&str> = self.svc.entries().iter().map(|e| e.name.as_str()).collect();
+        eprintln!(
+            "serving SymmSpMV/MPK for [{}] on {} ({} pool threads)",
+            names.join(", "),
+            self.local,
+            self.svc.threads()
+        );
+        if self.budget.load(Ordering::SeqCst) <= 0 {
+            // --max-requests 0: nothing to serve, stop before accepting
+            self.stop.store(true, Ordering::SeqCst);
+            eprintln!("server on {} stopped (request budget is 0)", self.local);
+            return Ok(());
+        }
+        let mut conns: Vec<(std::thread::JoinHandle<()>, Option<TcpStream>)> = Vec::new();
+        for stream in self.listener.incoming() {
+            if self.stop.load(Ordering::SeqCst) {
+                break;
+            }
+            let stream = match stream {
+                Ok(s) => s,
+                Err(e) => {
+                    eprintln!("accept: {e}");
+                    continue;
+                }
+            };
+            let clone = stream.try_clone().ok();
+            let svc = self.svc.clone();
+            let stop = self.stop.clone();
+            let budget = self.budget.clone();
+            let local = self.local;
+            let handle = std::thread::spawn(move || {
+                handle_conn(stream, svc, stop, budget, local);
+            });
+            conns.push((handle, clone));
+            // reap finished connections so a long-lived server doesn't
+            // accumulate dead threads and cloned fds
+            conns.retain(|(h, _)| !h.is_finished());
+        }
+        // stop was requested: close every live connection (in-flight
+        // requests have been answered; handlers exit on the next read)
+        // and join.
+        for (h, c) in conns {
+            if let Some(c) = c {
+                let _ = c.shutdown(std::net::Shutdown::Both);
+            }
+            let _ = h.join();
+        }
+        eprintln!("server on {} stopped", self.local);
+        Ok(())
+    }
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    svc: Arc<MatvecService>,
+    stop: Arc<AtomicBool>,
+    budget: Arc<AtomicI64>,
+    local: SocketAddr,
+) {
+    let peer = stream.peer_addr().map(|p| p.to_string()).unwrap_or_default();
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let line = match line {
+            Ok(l) => l,
+            Err(_) => break,
+        };
+        if line.trim().is_empty() {
+            continue;
+        }
+        // claim one unit of the request budget before serving
+        let prev = budget.fetch_sub(1, Ordering::SeqCst);
+        if prev <= 0 {
+            break; // budget already spent by other connections
+        }
+        let (resp, shutdown) = svc.handle(&line);
+        if writer.write_all(resp.as_bytes()).is_err() || writer.write_all(b"\n").is_err() {
+            break;
+        }
+        if shutdown || prev == 1 {
+            stop.store(true, Ordering::SeqCst);
+            wake_listener(local);
+            break;
+        }
+    }
+    if !peer.is_empty() {
+        eprintln!("connection {peer} closed");
+    }
+}
+
+/// Poke the accept loop so it observes the stop flag. A wildcard bind
+/// address (0.0.0.0 / ::) is not connectable everywhere, so target
+/// loopback on the same port in that case.
+fn wake_listener(addr: SocketAddr) {
+    use std::net::{IpAddr, Ipv4Addr, Ipv6Addr};
+    let mut target = addr;
+    if target.ip().is_unspecified() {
+        target.set_ip(match target.ip() {
+            IpAddr::V4(_) => IpAddr::V4(Ipv4Addr::LOCALHOST),
+            IpAddr::V6(_) => IpAddr::V6(Ipv6Addr::LOCALHOST),
+        });
+    }
+    let _ = TcpStream::connect_timeout(&target, std::time::Duration::from_millis(250));
+}
+
+/// Bind and run in one call (the `race-cli serve` entry point).
+pub fn serve(opts: &ServeOptions) -> Result<()> {
+    Server::bind(opts)?.run()
+}

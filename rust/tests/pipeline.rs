@@ -1,5 +1,6 @@
-//! Integration tests over the coordinator pipeline, the corpus, the
-//! figure-level claims at test scale, and the matvec service.
+//! Integration tests over the coordinator pipeline, the corpus and the
+//! figure-level claims at test scale. (The matvec service tests live in
+//! `rust/tests/serve.rs` since the service became the `serve` subsystem.)
 
 use race::cachesim;
 use race::color::{abmc_schedule, mc_schedule};
@@ -98,59 +99,6 @@ fn cg_all_backends_same_solution() {
             (x_serial[old] - x_race_p[new as usize]).abs() < 1e-6,
             "row {old}"
         );
-    }
-}
-
-/// The matvec service handles a realistic request batch.
-#[test]
-fn matvec_service_batch() {
-    let svc = coordinator::MatvecService::build("graphene:8x8", 3, true).unwrap();
-    for k in 0..5 {
-        let x: Vec<f64> = (0..svc.n).map(|i| ((i + k) as f64 * 0.1).sin()).collect();
-        let (b, secs) = svc.matvec(&x).unwrap();
-        assert_eq!(b.len(), svc.n);
-        assert!(secs >= 0.0);
-        assert!(b.iter().all(|v| v.is_finite()));
-    }
-}
-
-/// TCP round-trip through the real server.
-#[test]
-fn serve_tcp_roundtrip() {
-    use std::io::{BufRead, BufReader, Write};
-    // pick an ephemeral port by binding ourselves first
-    let probe = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
-    let addr = probe.local_addr().unwrap();
-    drop(probe);
-    let addr_s = addr.to_string();
-    let addr_clone = addr_s.clone();
-    std::thread::spawn(move || {
-        let _ = coordinator::serve("stencil2d:8x8", 2, &addr_clone, true);
-    });
-    // wait for the listener
-    let mut stream = None;
-    for _ in 0..50 {
-        match std::net::TcpStream::connect(&addr_s) {
-            Ok(s) => {
-                stream = Some(s);
-                break;
-            }
-            Err(_) => std::thread::sleep(std::time::Duration::from_millis(20)),
-        }
-    }
-    let mut stream = stream.expect("server did not come up");
-    let x = vec![1.0; 64];
-    let req = format!("{{\"x\": {x:?}}}\n");
-    stream.write_all(req.as_bytes()).unwrap();
-    let mut reader = BufReader::new(stream.try_clone().unwrap());
-    let mut line = String::new();
-    reader.read_line(&mut line).unwrap();
-    let j = race::util::json::Json::parse(line.trim()).unwrap();
-    let b = j.get("b").and_then(|v| v.as_f64_arr()).expect("b array");
-    assert_eq!(b.len(), 64);
-    // 5-pt stencil rows sum to 1.0 -> A*ones = ones
-    for v in &b {
-        assert!((v - 1.0).abs() < 1e-9);
     }
 }
 

@@ -1,0 +1,194 @@
+//! Pool-program executor properties: the persistent-pool executors must
+//! match the serial kernels and the scoped-spawn executors across every
+//! generator family, for threads ∈ {1, 2, 4} — SymmSpMV, multi-RHS
+//! SymmSpMV, Gauss–Seidel, Kaczmarz, and MPK powers p ∈ 1..4.
+
+use race::coordinator::permute_vec;
+use race::gen;
+use race::kernels;
+use race::mpk::{powers_ref, MpkConfig, MpkPlan};
+use race::pool::{self, WorkerPool};
+use race::race::{RaceConfig, RaceEngine};
+use race::sparse::Csr;
+
+const THREADS: [usize; 3] = [1, 2, 4];
+
+/// One matrix per generator family.
+fn families() -> Vec<(&'static str, Csr)> {
+    vec![
+        ("stencil5", gen::stencil2d_5pt(20, 17)),
+        ("stencil9", gen::stencil2d_9pt(14, 14)),
+        ("paperstencil", gen::race_paper_stencil(16, 16)),
+        ("spin", gen::spin_chain_xxz(9, gen::SpinKind::XXZ)),
+        ("graphene", gen::graphene(9, 9)),
+        ("delaunay", gen::delaunay_like(12, 12, 7)),
+        ("band", gen::dense_band(260, 20, 220, 5)),
+    ]
+}
+
+fn close(ctx: &str, want: &[f64], got: &[f64], tol: f64) {
+    for i in 0..want.len() {
+        assert!(
+            (want[i] - got[i]).abs() <= tol * (1.0 + want[i].abs()),
+            "{ctx}: row {i}: {} vs {}",
+            want[i],
+            got[i]
+        );
+    }
+}
+
+#[test]
+fn pool_symmspmv_matches_serial_all_families() {
+    for (name, a) in families() {
+        let n = a.nrows();
+        let x: Vec<f64> = (0..n).map(|i| ((i * 13 + 5) % 23) as f64 * 0.2 - 2.0).collect();
+        for threads in THREADS {
+            let cfg = RaceConfig { threads, dist: 2, ..Default::default() };
+            let eng = RaceEngine::build(&a, &cfg).unwrap();
+            let upper = eng.permuted_matrix().upper_triangle();
+            let xp = permute_vec(&x, &eng.perm);
+            // serial reference on the permuted matrix
+            let want = eng.permuted_matrix().spmv_ref(&xp);
+            let wp = WorkerPool::new(threads);
+            let prog = pool::compile_race(&eng);
+            let mut got = vec![0.0; n];
+            pool::symmspmv_pool(&wp, &prog, &upper, &xp, &mut got);
+            close(&format!("{name}/t{threads} vs serial"), &want, &got, 1e-9);
+            // vs the scoped-spawn executor: bit-identical-tolerance
+            let mut scoped = vec![0.0; n];
+            kernels::symmspmv_race(&eng, &upper, &xp, &mut scoped);
+            close(&format!("{name}/t{threads} vs scoped"), &scoped, &got, 1e-12);
+        }
+    }
+}
+
+#[test]
+fn pool_multi_rhs_matches_serial_all_families() {
+    let nrhs = 3usize;
+    for (name, a) in families() {
+        let n = a.nrows();
+        let cfg = RaceConfig { threads: 4, dist: 2, ..Default::default() };
+        let eng = RaceEngine::build(&a, &cfg).unwrap();
+        let upper = eng.permuted_matrix().upper_triangle();
+        let wp = WorkerPool::new(4);
+        let prog = pool::compile_race(&eng);
+        let mut xs = vec![0f64; n * nrhs];
+        for row in 0..n {
+            for j in 0..nrhs {
+                xs[row * nrhs + j] = ((row * (3 + j) + 11 * j) % 19) as f64 * 0.25 - 2.0;
+            }
+        }
+        let mut bs = vec![0f64; n * nrhs];
+        pool::symmspmv_race_multi(&wp, &prog, &upper, &xs, &mut bs, nrhs);
+        for j in 0..nrhs {
+            let x: Vec<f64> = (0..n).map(|row| xs[row * nrhs + j]).collect();
+            let want = eng.permuted_matrix().spmv_ref(&x);
+            let got: Vec<f64> = (0..n).map(|row| bs[row * nrhs + j]).collect();
+            close(&format!("{name}/rhs{j}"), &want, &got, 1e-9);
+        }
+    }
+}
+
+#[test]
+fn pool_gauss_seidel_matches_scoped_sweeps() {
+    // GS divides by the diagonal, so restrict to families with a
+    // guaranteed nonzero diagonal (the stencil generators).
+    for (name, a) in [
+        ("stencil5", gen::stencil2d_5pt(18, 18)),
+        ("stencil9", gen::stencil2d_9pt(13, 13)),
+        ("paperstencil", gen::race_paper_stencil(16, 16)),
+    ] {
+        let n = a.nrows();
+        let b = vec![1.0; n];
+        for threads in THREADS {
+            let cfg = RaceConfig { threads, dist: 1, ..Default::default() };
+            let eng = RaceEngine::build(&a, &cfg).unwrap();
+            let ap = eng.permuted_matrix().clone();
+            let wp = WorkerPool::new(threads);
+            let prog = pool::compile_race(&eng);
+            let mut x_scoped = vec![0.0; n];
+            let mut x_pool = vec![0.0; n];
+            for sweep in 0..25 {
+                kernels::gauss_seidel_race(&eng, &ap, &b, &mut x_scoped);
+                pool::gauss_seidel_pool(&wp, &prog, &ap, &b, &mut x_pool);
+                close(
+                    &format!("{name}/t{threads} sweep {sweep}"),
+                    &x_scoped,
+                    &x_pool,
+                    1e-12,
+                );
+            }
+            // and both converge toward A x = b
+            let ax = ap.spmv_ref(&x_pool);
+            let res: f64 =
+                ax.iter().zip(&b).map(|(p, q)| (p - q) * (p - q)).sum::<f64>().sqrt();
+            let res0 = (n as f64).sqrt(); // residual of x = 0
+            assert!(res < 0.5 * res0, "{name}/t{threads}: residual {res} vs initial {res0}");
+        }
+    }
+}
+
+#[test]
+fn pool_kaczmarz_matches_scoped_sweeps() {
+    for (name, a) in [
+        ("stencil5", gen::stencil2d_5pt(14, 14)),
+        ("graphene", gen::graphene(8, 8)),
+        ("delaunay", gen::delaunay_like(10, 10, 4)),
+    ] {
+        let n = a.nrows();
+        let b = vec![1.0; n];
+        for threads in THREADS {
+            let cfg = RaceConfig { threads, dist: 2, ..Default::default() };
+            let eng = RaceEngine::build(&a, &cfg).unwrap();
+            let ap = eng.permuted_matrix().clone();
+            let wp = WorkerPool::new(threads);
+            let prog = pool::compile_race(&eng);
+            let mut x_scoped = vec![0.0; n];
+            let mut x_pool = vec![0.0; n];
+            for sweep in 0..20 {
+                kernels::kaczmarz_race(&eng, &ap, &b, &mut x_scoped);
+                pool::kaczmarz_pool(&wp, &prog, &ap, &b, &mut x_pool);
+                close(
+                    &format!("{name}/t{threads} sweep {sweep}"),
+                    &x_scoped,
+                    &x_pool,
+                    1e-12,
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn pool_mpk_matches_reference_all_families() {
+    for (name, a) in families() {
+        let n = a.nrows();
+        let x: Vec<f64> = (0..n).map(|i| ((i * 7 + 3) % 13) as f64 * 0.15 - 0.9).collect();
+        for p in 1..=4usize {
+            // small cache target so multi-block diamond schedules appear
+            let plan = MpkPlan::build(&a, &MpkConfig { p, cache_bytes: 8 << 10 }).unwrap();
+            assert!(plan.verify(), "{name}/p{p}: invalid plan");
+            let want = powers_ref(&a, &x, p);
+            let xp = permute_vec(&x, &plan.perm);
+            for threads in THREADS {
+                let wp = WorkerPool::new(threads);
+                let prog = pool::compile_mpk(&plan, threads);
+                let ys = pool::mpk_powers_pool(&wp, &prog, &plan, &xp);
+                assert_eq!(ys.len(), p);
+                for k in 0..p {
+                    let err = race::mpk::rel_err_vs_ref(&want[k], &ys[k], &plan.perm);
+                    assert!(
+                        err <= 1e-9,
+                        "{name}/p{p}/t{threads}: power {} err {err:.2e}",
+                        k + 1
+                    );
+                }
+                // scoped-executor agreement (bitwise: same per-row sums)
+                let scoped = kernels::mpk_powers(&plan, &xp, threads);
+                for k in 0..p {
+                    assert_eq!(ys[k], scoped[k], "{name}/p{p}/t{threads}: pool vs scoped k={k}");
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,192 @@
+//! End-to-end tests of the serve subsystem: a real TCP server, the
+//! newline-delimited JSON protocol, request budgets and graceful
+//! shutdown, plus service-level request batches.
+
+use race::serve::{MatvecService, ServeOptions, Server};
+use race::util::json::Json;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+fn opts(specs: &[&str]) -> ServeOptions {
+    ServeOptions {
+        matrices: specs.iter().map(|s| s.to_string()).collect(),
+        threads: 2,
+        addr: "127.0.0.1:0".to_string(),
+        small: true,
+        ..Default::default()
+    }
+}
+
+/// Full TCP round trip: matvec, MPK, structured error, stats — then the
+/// request budget runs out and the server shuts down gracefully.
+#[test]
+fn tcp_roundtrip_with_request_budget() {
+    let mut o = opts(&["stencil2d:8x8"]);
+    o.max_requests = Some(4);
+    let server = Server::bind(&o).unwrap();
+    let addr = server.local_addr();
+    let handle = std::thread::spawn(move || server.run().unwrap());
+
+    let stream = TcpStream::connect(addr).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    let ones = vec![1.0; 64];
+
+    // 1: matvec — 5-pt stencil rows sum to 1, so A·ones = ones
+    writer.write_all(format!("{{\"x\": {ones:?}}}\n").as_bytes()).unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    let j = Json::parse(line.trim()).unwrap();
+    let b = j.get("b").and_then(|v| v.as_f64_arr()).expect("b array");
+    assert_eq!(b.len(), 64);
+    assert!(b.iter().all(|v| (v - 1.0).abs() < 1e-9), "{line}");
+    assert_eq!(j.get("batch").and_then(Json::as_f64), Some(1.0));
+
+    // 2: MPK — A² ones = ones too
+    writer.write_all(format!("{{\"x\": {ones:?}, \"p\": 2}}\n").as_bytes()).unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    let j = Json::parse(line.trim()).unwrap();
+    let y = j.get("y").and_then(|v| v.as_f64_arr()).expect("y array");
+    assert!(y.iter().all(|v| (v - 1.0).abs() < 1e-9), "{line}");
+
+    // 3: structured error for a wrong-length vector
+    writer.write_all(b"{\"x\": [1, 2, 3]}\n").unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    let j = Json::parse(line.trim()).unwrap();
+    assert_eq!(
+        j.get("error").and_then(|e| e.get("code")),
+        Some(&Json::Str("bad_request".into())),
+        "{line}"
+    );
+
+    // 4: stats — last budgeted request; the server stops afterwards
+    writer.write_all(b"{\"stats\": true}\n").unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    let j = Json::parse(line.trim()).unwrap();
+    let stats = j.get("stats").expect("stats object");
+    assert_eq!(stats.get("requests").and_then(Json::as_f64), Some(4.0));
+    assert_eq!(stats.get("errors").and_then(Json::as_f64), Some(1.0));
+
+    // budget exhausted: run() returns and the connection closes
+    handle.join().unwrap();
+    line.clear();
+    let n = reader.read_line(&mut line).unwrap_or(0);
+    assert_eq!(n, 0, "connection should be closed after shutdown: {line:?}");
+}
+
+/// `{"shutdown": true}` stops the server without a request budget.
+#[test]
+fn tcp_shutdown_request_stops_server() {
+    let server = Server::bind(&opts(&["stencil2d:6x6"])).unwrap();
+    let addr = server.local_addr();
+    let handle = std::thread::spawn(move || server.run().unwrap());
+
+    let stream = TcpStream::connect(addr).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+    writer.write_all(b"{\"shutdown\": true}\n").unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let j = Json::parse(line.trim()).unwrap();
+    assert_eq!(j.get("shutting_down"), Some(&Json::Bool(true)), "{line}");
+    handle.join().unwrap();
+}
+
+/// Two matrices registered on one server; requests route by name and the
+/// non-finite guard answers a structured error.
+#[test]
+fn tcp_multi_matrix_routing_and_nonfinite_guard() {
+    let mut o = opts(&["stencil2d:8x8", "graphene:6x6"]);
+    o.max_requests = Some(3);
+    let server = Server::bind(&o).unwrap();
+    let addr = server.local_addr();
+    let graphene_n = server.service().entries()[1].n;
+    let handle = std::thread::spawn(move || server.run().unwrap());
+
+    let stream = TcpStream::connect(addr).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+
+    // route to the second matrix by name
+    let x = vec![0.5; graphene_n];
+    writer
+        .write_all(format!("{{\"x\": {x:?}, \"matrix\": \"graphene:6x6\"}}\n").as_bytes())
+        .unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    let j = Json::parse(line.trim()).unwrap();
+    assert!(j.get("b").is_some(), "{line}");
+
+    // unknown matrix name
+    writer.write_all(b"{\"x\": [1], \"matrix\": \"nope\"}\n").unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("unknown_matrix"), "{line}");
+
+    // non-finite input (1e999 overflows to +inf during JSON parsing)
+    let huge = format!("{{\"x\": [{}1e999]}}\n", "1, ".repeat(63));
+    writer.write_all(huge.as_bytes()).unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("nonfinite_input"), "{line}");
+
+    handle.join().unwrap();
+}
+
+/// Concurrent clients: every request answered correctly; the stats
+/// counters account for every vector exactly once.
+#[test]
+fn tcp_concurrent_clients_batch() {
+    let mut o = opts(&["stencil2d:10x10"]);
+    o.max_requests = Some(12);
+    let server = Server::bind(&o).unwrap();
+    let addr = server.local_addr();
+    let handle = std::thread::spawn(move || server.run().unwrap());
+
+    let mut clients = Vec::new();
+    for t in 0..12usize {
+        clients.push(std::thread::spawn(move || {
+            let stream = TcpStream::connect(addr).unwrap();
+            let mut writer = stream.try_clone().unwrap();
+            let mut reader = BufReader::new(stream);
+            let x = vec![(t + 1) as f64; 100];
+            writer.write_all(format!("{{\"x\": {x:?}}}\n").as_bytes()).unwrap();
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            let j = Json::parse(line.trim()).unwrap();
+            let b = j.get("b").and_then(|v| v.as_f64_arr()).expect("b array");
+            // rows sum to 1 -> b == x
+            assert!(b.iter().all(|v| (v - (t + 1) as f64).abs() < 1e-9), "{line}");
+            j.get("batch").and_then(Json::as_f64).unwrap() as usize
+        }));
+    }
+    let sizes: Vec<usize> = clients.into_iter().map(|c| c.join().unwrap()).collect();
+    assert!(sizes.iter().all(|&s| s >= 1));
+    handle.join().unwrap();
+}
+
+/// Service-level batch call: the batched answer equals request-at-a-time
+/// answers (the bench relies on this API).
+#[test]
+fn service_batch_equals_singles() {
+    let svc = MatvecService::build(&opts(&["spin:6"])).unwrap();
+    let n = svc.entries()[0].n;
+    let xs: Vec<Vec<f64>> = (0..4)
+        .map(|j| (0..n).map(|i| ((i * (j + 3) + 1) % 7) as f64 * 0.4 - 1.2).collect())
+        .collect();
+    let batched = svc.matvec_batch(None, &xs).unwrap();
+    for (j, x) in xs.iter().enumerate() {
+        let (single, _, _) = svc.matvec(None, x).unwrap();
+        for i in 0..n {
+            assert!(
+                (batched[j][i] - single[i]).abs() <= 1e-12 * (1.0 + single[i].abs()),
+                "rhs {j} row {i}"
+            );
+        }
+    }
+}
