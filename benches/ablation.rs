@@ -6,7 +6,8 @@
 use race::cachesim;
 use race::gen;
 use race::machine;
-use race::race::{RaceConfig, RaceEngine};
+use race::op::{OpConfig, Operator};
+use race::race::RaceConfig;
 use race::sim;
 
 fn run(
@@ -15,15 +16,16 @@ fn run(
     m: &race::machine::Machine,
     cfg: &RaceConfig,
 ) -> (f64, f64) {
-    let eng = match RaceEngine::build(a, cfg) {
-        Ok(e) => e,
+    // ablation variants flip RaceConfig switches through the facade; RCM
+    // is applied (or withheld) by the caller, so the handle skips it
+    let op = match Operator::build(a, OpConfig::new().rcm(false).race_config(cfg.clone())) {
+        Ok(o) => o,
         Err(_) => return (0.0, 0.0),
     };
-    let up = eng.permuted_matrix().upper_triangle();
-    let tr = cachesim::measure_symmspmv_traffic(&up, a.nnz(), m);
-    let g = sim::simulate_race(m, &eng, &up, tr.bytes_total, a.nnz()).gflops;
+    let tr = cachesim::measure_symmspmv_traffic(op.upper(), a.nnz(), m);
+    let g = sim::simulate_race(m, op.engine(), op.upper(), tr.bytes_total, a.nnz()).gflops;
     let _ = name;
-    (eng.efficiency(), g)
+    (op.eta(), g)
 }
 
 fn main() {

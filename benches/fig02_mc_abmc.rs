@@ -8,6 +8,7 @@ use race::color::{abmc_schedule, mc_schedule};
 use race::gen;
 use race::graph;
 use race::machine;
+use race::op;
 use race::perfmodel;
 use race::sim;
 
@@ -28,16 +29,16 @@ fn main() {
         // schedules + traffic (independent of thread count)
         let mc = mc_schedule(&a, 2);
         let a_mc = a.permute_symmetric(&mc.perm);
-        let up_mc = a_mc.upper_triangle();
+        let up_mc = op::upper(&a_mc);
         let tr_mc = cachesim::measure_symmspmv_traffic(&up_mc, nnz, &m);
 
         let abmc = abmc_schedule(&a, (a.nrows() / 64).max(16), 2);
         let a_ab = a.permute_symmetric(&abmc.perm);
-        let up_ab = a_ab.upper_triangle();
+        let up_ab = op::upper(&a_ab);
         let tr_ab = cachesim::measure_symmspmv_traffic(&up_ab, nnz, &m);
 
         let tr_spmv = cachesim::measure_spmv_traffic(&a, &m);
-        let tr_symm_ideal = cachesim::measure_symmspmv_traffic(&a.upper_triangle(), nnz, &m);
+        let tr_symm_ideal = cachesim::measure_symmspmv_traffic(&op::upper(&a), nnz, &m);
 
         println!("traffic per full-matrix nonzero (paper Fig. 2b/2d):");
         println!("  SpMV          {:>7.2} B/nnz (alpha={:.3})", tr_spmv.bytes_per_nnz_full, tr_spmv.alpha);

@@ -6,8 +6,9 @@
 use race::cachesim;
 use race::gen;
 use race::machine;
+use race::op::{OpConfig, Operator};
 use race::perfmodel;
-use race::race::{RaceConfig, RaceEngine};
+use race::race::RaceConfig;
 use race::sim;
 
 fn main() {
@@ -32,12 +33,12 @@ fn main() {
         println!("{:>6} {:>10} {:>10} {:>12}", "cores", "RACE GF/s", "SpMV GF/s", "symm B/nnz");
         for t in [1usize, 2, 4, 8, 12, 16, 20] {
             let cfg = RaceConfig { threads: t, eps: vec![0.8, 0.8, 0.5], ..Default::default() };
-            let (g_race, bpn) = match RaceEngine::build(&a, &cfg) {
-                Ok(eng) => {
-                    let up = eng.permuted_matrix().upper_triangle();
-                    let tr = cachesim::measure_symmspmv_traffic(&up, nnz, &m);
+            let ocfg = OpConfig::new().rcm(false).race_config(cfg);
+            let (g_race, bpn) = match Operator::build(&a, ocfg) {
+                Ok(op) => {
+                    let tr = cachesim::measure_symmspmv_traffic(op.upper(), nnz, &m);
                     (
-                        sim::simulate_race(&m, &eng, &up, tr.bytes_total, nnz).gflops,
+                        sim::simulate_race(&m, op.engine(), op.upper(), tr.bytes_total, nnz).gflops,
                         tr.bytes_per_nnz_stored,
                     )
                 }

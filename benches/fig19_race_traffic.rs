@@ -8,8 +8,9 @@ use race::cachesim;
 use race::color::{abmc_schedule, mc_schedule};
 use race::gen;
 use race::machine;
+use race::op::{self, OpConfig, Operator};
 use race::perfmodel;
-use race::race::{RaceConfig, RaceEngine};
+use race::race::RaceConfig;
 use race::sim;
 
 fn main() {
@@ -28,17 +29,16 @@ fn main() {
         let t = m.cores;
         // RACE
         let cfg = RaceConfig { threads: t, eps: vec![0.8, 0.8, 0.5], ..Default::default() };
-        let eng = RaceEngine::build(&a, &cfg).unwrap();
-        let up_race = eng.permuted_matrix().upper_triangle();
-        let tr_race = cachesim::measure_symmspmv_traffic(&up_race, nnz, &m);
+        let op_full = Operator::build(&a, OpConfig::new().rcm(false).race_config(cfg)).unwrap();
+        let tr_race = cachesim::measure_symmspmv_traffic(op_full.upper(), nnz, &m);
         // MC / ABMC
         let mc = mc_schedule(&a, 2);
         let a_mc = a.permute_symmetric(&mc.perm);
-        let up_mc = a_mc.upper_triangle();
+        let up_mc = op::upper(&a_mc);
         let tr_mc = cachesim::measure_symmspmv_traffic(&up_mc, nnz, &m);
         let abmc = abmc_schedule(&a, (a.nrows() / 64).max(16), 2);
         let a_ab = a.permute_symmetric(&abmc.perm);
-        let up_ab = a_ab.upper_triangle();
+        let up_ab = op::upper(&a_ab);
         let tr_ab = cachesim::measure_symmspmv_traffic(&up_ab, nnz, &m);
         // baseline SpMV
         let tr_spmv = cachesim::measure_spmv_traffic(&a, &m);
@@ -51,10 +51,10 @@ fn main() {
         let mut cores = 1;
         loop {
             let cfg = RaceConfig { threads: cores, eps: vec![0.8, 0.8, 0.5], ..Default::default() };
-            let eng_t = RaceEngine::build(&a, &cfg).unwrap();
-            let up_t = eng_t.permuted_matrix().upper_triangle();
-            let tr_t = cachesim::measure_symmspmv_traffic(&up_t, nnz, &m);
-            let g_race = sim::simulate_race(&m, &eng_t, &up_t, tr_t.bytes_total, nnz).gflops;
+            let op_t = Operator::build(&a, OpConfig::new().rcm(false).race_config(cfg)).unwrap();
+            let tr_t = cachesim::measure_symmspmv_traffic(op_t.upper(), nnz, &m);
+            let g_race =
+                sim::simulate_race(&m, op_t.engine(), op_t.upper(), tr_t.bytes_total, nnz).gflops;
             let g_ab = sim::simulate_color(&m, &abmc, &up_ab, cores, tr_ab.bytes_total, nnz).gflops;
             let g_mc = sim::simulate_color(&m, &mc, &up_mc, cores, tr_mc.bytes_total, nnz).gflops;
             let g_spmv = sim::simulate_spmv(&m, &a, cores, tr_spmv.bytes_total).gflops;
@@ -65,7 +65,9 @@ fn main() {
             cores = (cores * 2).min(m.cores);
         }
         // headline metrics (§6.2.1)
-        let g_race = sim::simulate_race(&m, &eng, &up_race, tr_race.bytes_total, nnz).gflops;
+        let g_race =
+            sim::simulate_race(&m, op_full.engine(), op_full.upper(), tr_race.bytes_total, nnz)
+                .gflops;
         let g_best_color = {
             let g_ab = sim::simulate_color(&m, &abmc, &up_ab, t, tr_ab.bytes_total, nnz).gflops;
             let g_mc = sim::simulate_color(&m, &mc, &up_mc, t, tr_mc.bytes_total, nnz).gflops;

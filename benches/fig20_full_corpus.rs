@@ -8,8 +8,9 @@
 use race::cachesim;
 use race::gen;
 use race::machine;
+use race::op::{OpConfig, Operator};
 use race::perfmodel;
-use race::race::{RaceConfig, RaceEngine};
+use race::race::RaceConfig;
 use race::sim;
 
 fn main() {
@@ -31,13 +32,13 @@ fn main() {
             let nnz = a.nnz();
             let cfg =
                 RaceConfig { threads: m.cores, eps: vec![0.8, 0.8, 0.5], ..Default::default() };
-            let eng = match RaceEngine::build(&a, &cfg) {
-                Ok(e) => e,
+            let op = match Operator::build(&a, OpConfig::new().rcm(false).race_config(cfg)) {
+                Ok(o) => o,
                 Err(_) => continue,
             };
-            let up = eng.permuted_matrix().upper_triangle();
-            let tr = cachesim::measure_symmspmv_traffic(&up, nnz, &m);
-            let g_race = sim::simulate_race(&m, &eng, &up, tr.bytes_total, nnz).gflops;
+            let tr = cachesim::measure_symmspmv_traffic(op.upper(), nnz, &m);
+            let g_race =
+                sim::simulate_race(&m, op.engine(), op.upper(), tr.bytes_total, nnz).gflops;
             let tr_spmv = cachesim::measure_spmv_traffic(&a, &m);
             let g_spmv = sim::simulate_spmv(&m, &a, m.cores, tr_spmv.bytes_total).gflops;
             let w = perfmodel::symmspmv_window(&m, tr_spmv.alpha, a.nnzr());
@@ -50,7 +51,7 @@ fn main() {
                 g_spmv,
                 w.p_copy / 1e9,
                 w.p_load / 1e9,
-                eng.efficiency(),
+                op.eta(),
                 100.0 * frac
             );
             speedups.push(g_race / g_spmv);

@@ -6,6 +6,7 @@
 
 use race::gen;
 use race::kernels;
+use race::op;
 use race::util::bench::bench;
 
 fn main() {
@@ -18,7 +19,7 @@ fn main() {
         let a0 = (e.build)(small);
         let perm = race::graph::rcm(&a0);
         let a = a0.permute_symmetric(&perm);
-        let upper = a.upper_triangle();
+        let upper = op::upper(&a);
         let n = a.nrows();
         let x: Vec<f64> = (0..n).map(|i| (i as f64 * 0.3).sin()).collect();
         let mut b = vec![0.0; n];

@@ -7,7 +7,7 @@ use race::cachesim;
 use race::gen;
 use race::kernels;
 use race::machine;
-use race::race::{RaceConfig, RaceEngine};
+use race::op::{self, OpConfig, Operator};
 use race::sim;
 use race::util::bench::bench;
 
@@ -17,7 +17,7 @@ fn main() {
     let a0 = (e.build)(small);
     let perm = race::graph::rcm(&a0);
     let a = a0.permute_symmetric(&perm);
-    let upper = a.upper_triangle();
+    let upper = op::upper(&a);
     let n = a.nrows();
     println!(
         "delaunay analogue: {} rows, {} nnz, N_nzr = {:.2} (upper: {:.2})",
@@ -50,14 +50,13 @@ fn main() {
     // socket-level simulation: same schedule, core_flops calibrated from
     // the two host kernels' relative speed
     let m = machine::skx();
-    let cfg = RaceConfig { threads: m.cores, ..Default::default() };
-    let eng = RaceEngine::build(&a, &cfg).unwrap();
-    let up = eng.permuted_matrix().upper_triangle();
-    let tr = cachesim::measure_symmspmv_traffic(&up, a.nnz(), &m);
+    let rop = Operator::build(&a, OpConfig::new().rcm(false).threads(m.cores)).unwrap();
+    let tr = cachesim::measure_symmspmv_traffic(rop.upper(), a.nnz(), &m);
     let mut m_scalar = m.clone();
     m_scalar.core_flops = m.core_flops * s_vec.median / s_scalar.median;
-    let g_vec = sim::simulate_race(&m, &eng, &up, tr.bytes_total, a.nnz()).gflops;
-    let g_scalar = sim::simulate_race(&m_scalar, &eng, &up, tr.bytes_total, a.nnz()).gflops;
+    let g_vec = sim::simulate_race(&m, rop.engine(), rop.upper(), tr.bytes_total, a.nnz()).gflops;
+    let g_scalar =
+        sim::simulate_race(&m_scalar, rop.engine(), rop.upper(), tr.bytes_total, a.nnz()).gflops;
     let tr_spmv = cachesim::measure_spmv_traffic(&a, &m);
     println!("\nSKX socket simulation (20 cores):");
     println!("  SymmSpMV unrolled: {g_vec:.2} GF/s");

@@ -8,7 +8,8 @@ use race::cachesim;
 use race::color::{abmc_schedule, mc_schedule};
 use race::gen;
 use race::machine;
-use race::race::{RaceConfig, RaceEngine};
+use race::op::{self, OpConfig, Operator};
+use race::race::RaceConfig;
 use race::sim;
 
 fn main() {
@@ -29,23 +30,22 @@ fn main() {
             let t = m.cores;
 
             let cfg = RaceConfig { threads: t, eps: vec![0.8, 0.8, 0.5], ..Default::default() };
-            let g_race = match RaceEngine::build(&a, &cfg) {
-                Ok(eng) => {
-                    let up = eng.permuted_matrix().upper_triangle();
-                    let tr = cachesim::measure_symmspmv_traffic(&up, nnz, &m);
-                    sim::simulate_race(&m, &eng, &up, tr.bytes_total, nnz).gflops
+            let g_race = match Operator::build(&a, OpConfig::new().rcm(false).race_config(cfg)) {
+                Ok(rop) => {
+                    let tr = cachesim::measure_symmspmv_traffic(rop.upper(), nnz, &m);
+                    sim::simulate_race(&m, rop.engine(), rop.upper(), tr.bytes_total, nnz).gflops
                 }
                 Err(_) => 0.0,
             };
             let mc = mc_schedule(&a, 2);
             let a_mc = a.permute_symmetric(&mc.perm);
-            let up_mc = a_mc.upper_triangle();
+            let up_mc = op::upper(&a_mc);
             let tr_mc = cachesim::measure_symmspmv_traffic(&up_mc, nnz, &m);
             let g_mc = sim::simulate_color(&m, &mc, &up_mc, t, tr_mc.bytes_total, nnz).gflops;
 
             let abmc = abmc_schedule(&a, (a.nrows() / 64).max(t * 4), 2);
             let a_ab = a.permute_symmetric(&abmc.perm);
-            let up_ab = a_ab.upper_triangle();
+            let up_ab = op::upper(&a_ab);
             let tr_ab = cachesim::measure_symmspmv_traffic(&up_ab, nnz, &m);
             let g_ab = sim::simulate_color(&m, &abmc, &up_ab, t, tr_ab.bytes_total, nnz).gflops;
 

@@ -1,7 +1,9 @@
 //! MPK level-blocking bench: `p` naive back-to-back SpMV sweeps vs. the
 //! level-blocked diamond schedule — host wallclock GF/s plus simulated
 //! memory traffic per nonzero application, on a small corpus (one stencil,
-//! one lattice, one irregular graph).
+//! one lattice, one irregular graph). Both paths run through one
+//! [`race::op::Operator`] handle (serial backend — the blocking win is a
+//! cache effect, not a threading one).
 //!
 //! Emits `BENCH_mpk.json` (override the path with `RACE_BENCH_OUT`) so the
 //! perf trajectory is machine-readable from this PR onward:
@@ -12,11 +14,11 @@
 //! `RACE_BENCH_FULL=1` runs the larger variants.
 
 use race::cachesim;
-use race::coordinator::permute_vec;
 use race::gen;
 use race::kernels;
 use race::machine;
-use race::mpk::{powers_ref, MpkConfig, MpkPlan};
+use race::mpk::powers_ref;
+use race::op::{self, Backend, OpConfig, Operator};
 use race::sparse::Csr;
 use race::util::bench;
 use race::util::json::Json;
@@ -39,37 +41,44 @@ fn main() {
     };
     let mut rows = Vec::new();
     for (name, a0) in cases {
-        let perm = race::graph::rcm(&a0);
-        let a = a0.permute_symmetric(&perm);
         // scale the simulated cache so the matrix working set exceeds it —
         // the regime where blocking matters (the paper-scale situation)
-        let m = machine::skx().under_pressure(a.crs_bytes(), 4);
-        let cfg = MpkConfig { p, cache_bytes: m.effective_cache() / 2 };
-        let plan = MpkPlan::build(&a, &cfg).expect("plan");
+        let m = machine::skx().under_pressure(a0.crs_bytes(), 4);
+        let op = Operator::build(
+            &a0,
+            OpConfig::new()
+                .threads(1)
+                .backend(Backend::Serial)
+                .cache_bytes(m.effective_cache() / 2),
+        )
+        .expect("operator");
+        let h = op.mpk(p).expect("plan");
+        let plan = h.plan();
         assert!(plan.verify(), "{name}: invalid plan");
 
         let ap = plan.permuted_matrix();
         // naive measured on the same level-permuted matrix: the ratio
         // isolates blocking from ordering effects
-        let tr_blk = cachesim::measure_mpk_traffic(&plan, &m);
+        let tr_blk = cachesim::measure_mpk_traffic(plan, &m);
         let tr_nv = cachesim::measure_spmv_powers_traffic(ap, p, &m);
 
-        let x: Vec<f64> = (0..a.nrows()).map(|i| ((i % 97) as f64) * 0.02 - 1.0).collect();
-        let xp = permute_vec(&x, &plan.perm);
-        let flops = 2.0 * a.nnz() as f64 * p as f64;
+        let x: Vec<f64> = (0..a0.nrows()).map(|i| ((i % 97) as f64) * 0.02 - 1.0).collect();
+        let xp = h.permute(&x);
+        let flops = 2.0 * a0.nnz() as f64 * p as f64;
         let s_nv = bench::bench(&format!("{name}/naive-{p}-sweeps"), 0.2, || {
             std::hint::black_box(kernels::spmv_powers(ap, &xp, p, 1));
         });
         let s_blk = bench::bench(&format!("{name}/mpk-blocked"), 0.2, || {
-            std::hint::black_box(kernels::mpk_powers(&plan, &xp, 1));
+            std::hint::black_box(op.powers_permuted(&h, &xp));
         });
         bench::report(&s_nv, Some(flops));
         bench::report(&s_blk, Some(flops));
 
-        // correctness paranoia: blocked result equals p reference sweeps
-        let want = powers_ref(&a, &x, p);
-        let ys = kernels::mpk_powers(&plan, &xp, 1);
-        let err = race::mpk::rel_err_vs_ref(&want[p - 1], &ys[p - 1], &plan.perm);
+        // correctness paranoia: blocked result equals p reference sweeps,
+        // compared in logical order through the facade
+        let want = powers_ref(&a0, &x, p);
+        let ys = op.powers(&x, p).expect("powers");
+        let err = op::rel_err(&want[p - 1], &ys[p - 1]);
         assert!(err <= 1e-9, "{name}: vector-relative error {err:.2e}");
         // headline acceptance: strictly fewer bytes per nonzero application
         assert!(

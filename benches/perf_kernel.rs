@@ -8,6 +8,7 @@ use race::cachesim;
 use race::gen;
 use race::kernels;
 use race::machine;
+use race::op;
 use race::util::bench::{bench, report};
 
 fn main() {
@@ -20,7 +21,7 @@ fn main() {
     for (name, a0) in &mats {
         let perm = race::graph::rcm(a0);
         let a = a0.permute_symmetric(&perm);
-        let upper = a.upper_triangle();
+        let upper = op::upper(&a);
         let n = a.nrows();
         let x: Vec<f64> = (0..n).map(|i| (i as f64 * 0.3).sin()).collect();
         let mut b = vec![0.0; n];
@@ -68,7 +69,7 @@ fn main() {
     // cache simulator throughput (drives the corpus benches)
     println!("== cache simulator throughput ==");
     let a = &mats[0].1;
-    let upper = a.upper_triangle();
+    let upper = op::upper(&a);
     let m = machine::skx();
     let s = bench("measure_symmspmv_traffic", 0.5, || {
         std::hint::black_box(cachesim::measure_symmspmv_traffic(&upper, a.nnz(), &m));

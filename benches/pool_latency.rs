@@ -1,10 +1,13 @@
 //! Pool vs scoped-spawn executor latency, and batched serve throughput.
 //!
-//! Part 1 — the tentpole claim: for the same RACE engine, the persistent
-//! worker pool ([`race::pool`]) answers a SymmSpMV no slower than the
-//! scoped-spawn executor at every measured (matrix, threads) point: the
-//! per-call `thread::scope` spawn/join rounds are replaced by one condvar
-//! wake plus per-step barriers on resident workers.
+//! Part 1 — the tentpole claim: for the same RACE schedule, the
+//! persistent worker pool (`Backend::Pool` of the [`race::op::Operator`]
+//! facade) answers a SymmSpMV no slower than the scoped-spawn executor
+//! at every measured (matrix, threads) point: the per-call
+//! `thread::scope` spawn/join rounds are replaced by one condvar wake
+//! plus per-step barriers on resident workers. The scoped baseline runs
+//! through the same handle's engine and upper triangle, so the
+//! comparison isolates the execution runtime.
 //!
 //! Part 2 — serve batching: vectors/second of the service batch path at
 //! batch sizes 1 / 4 / 16. One multi-vector sweep (`B = A X`) amortizes
@@ -19,8 +22,7 @@
 
 use race::gen;
 use race::kernels;
-use race::pool::{self, WorkerPool};
-use race::race::{RaceConfig, RaceEngine};
+use race::op::{Backend, OpConfig, Operator};
 use race::serve::{MatvecService, ServeOptions};
 use race::sparse::Csr;
 use race::util::bench;
@@ -45,26 +47,23 @@ fn main() {
     // ---- part 1: scoped-spawn vs persistent pool ----
     let mut rows = Vec::new();
     for (name, a0) in &cases {
-        let perm = race::graph::rcm(a0);
-        let a = a0.permute_symmetric(&perm);
-        let n = a.nrows();
+        let n = a0.nrows();
         for threads in [2usize, 4] {
-            let cfg = RaceConfig { threads, dist: 2, ..Default::default() };
-            let eng = RaceEngine::build(&a, &cfg).expect("engine");
-            let upper = eng.permuted_matrix().upper_triangle();
+            // one handle owns RCM + engine + upper triangle + program +
+            // resident pool; the scoped baseline reuses its schedule
+            let op = Operator::build(a0, OpConfig::new().threads(threads).backend(Backend::Pool))
+                .expect("operator");
             let x: Vec<f64> = (0..n).map(|i| ((i % 97) as f64) * 0.02 - 1.0).collect();
+            let xp = op.permute(&x);
             let mut b = vec![0.0; n];
             let s_scoped = bench::bench(&format!("{name}/t{threads}/scoped"), 0.2, || {
                 b.iter_mut().for_each(|v| *v = 0.0);
-                kernels::symmspmv_race(&eng, &upper, &x, &mut b);
+                kernels::symmspmv_race(op.engine(), op.upper(), &xp, &mut b);
                 std::hint::black_box(&b);
             });
-            let wp = WorkerPool::new(threads);
-            let prog = pool::compile_race(&eng);
             let mut b2 = vec![0.0; n];
             let s_pool = bench::bench(&format!("{name}/t{threads}/pool"), 0.2, || {
-                b2.iter_mut().for_each(|v| *v = 0.0);
-                pool::symmspmv_pool(&wp, &prog, &upper, &x, &mut b2);
+                op.symmspmv_permuted(&xp, &mut b2);
                 std::hint::black_box(&b2);
             });
             bench::report(&s_scoped, None);
@@ -83,8 +82,8 @@ fn main() {
                 s_scoped.median * 1e3,
                 s_pool.median * 1e3,
                 s_scoped.median / s_pool.median,
-                prog.nsteps(),
-                prog.nunits()
+                op.program().nsteps(),
+                op.program().nunits()
             );
             rows.push(Json::obj(vec![
                 ("matrix", Json::Str(name.to_string())),
@@ -92,8 +91,8 @@ fn main() {
                 ("scoped_ms", Json::Num(s_scoped.median * 1e3)),
                 ("pool_ms", Json::Num(s_pool.median * 1e3)),
                 ("speedup", Json::Num(s_scoped.median / s_pool.median)),
-                ("nsteps", Json::Num(prog.nsteps() as f64)),
-                ("nunits", Json::Num(prog.nunits() as f64)),
+                ("nsteps", Json::Num(op.program().nsteps() as f64)),
+                ("nunits", Json::Num(op.program().nunits() as f64)),
             ]));
         }
     }

@@ -1,15 +1,17 @@
 //! End-to-end driver (the validation workload mandated in DESIGN.md):
 //! solve a 2D Poisson problem with conjugate gradients where every matvec
-//! is a RACE-parallel SymmSpMV, log the residual curve and report
-//! throughput — the "iterative solver built on SymmSpMV" the paper
-//! motivates in §1. Results are recorded in EXPERIMENTS.md §E2E.
+//! is a RACE-parallel SymmSpMV on the resident worker pool, log the
+//! residual curve and report throughput — the "iterative solver built on
+//! SymmSpMV" the paper motivates in §1. The whole pipeline (RCM, engine,
+//! upper triangle, step program, pool) lives behind one `Operator`
+//! handle; the solve runs in executor numbering via the `_permuted` hot
+//! path so the CG loop stays allocation-free.
 //!
 //! Run: `cargo run --release --example cg_solver [-- grid_side threads]`
 
 use race::gen;
-use race::graph;
-use race::kernels::{self, cg_solve};
-use race::race::{RaceConfig, RaceEngine};
+use race::kernels::cg_solve;
+use race::op::{Backend, OpConfig, Operator};
 
 fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().collect();
@@ -22,19 +24,16 @@ fn main() -> anyhow::Result<()> {
     println!("CG on 2D Poisson {side}x{side}: {} rows, {} nnz", n, a0.nnz());
 
     let t_pre = std::time::Instant::now();
-    let perm = graph::rcm(&a0);
-    let a = a0.permute_symmetric(&perm);
-    let cfg = RaceConfig { threads, dist: 2, ..Default::default() };
-    let eng = RaceEngine::build(&a, &cfg)?;
-    let upper = eng.permuted_matrix().upper_triangle();
+    let op = Operator::build(&a0, OpConfig::new().threads(threads).backend(Backend::Pool))?;
     println!(
         "preprocessing {:.2}s (RCM + RACE: eta = {:.3}, {} tree nodes)",
         t_pre.elapsed().as_secs_f64(),
-        eng.efficiency(),
-        eng.node_count()
+        op.eta(),
+        op.engine().node_count()
     );
 
-    // nontrivial rhs: a localized + oscillatory source (in RACE ordering).
+    // nontrivial rhs: a localized + oscillatory source (in executor
+    // ordering — the solve stays in permuted space end to end).
     // (note: A·ones == ones for this stencil — ones is an eigenvector — so
     // a constant rhs would trivially converge in one step)
     let rhs: Vec<f64> = (0..n)
@@ -47,7 +46,7 @@ fn main() -> anyhow::Result<()> {
     let res = cg_solve(
         &mut |v, out| {
             matvecs += 1;
-            kernels::symmspmv_race(&eng, &upper, v, out)
+            op.symmspmv_permuted(v, out)
         },
         &rhs,
         &mut x,
@@ -70,7 +69,7 @@ fn main() -> anyhow::Result<()> {
             println!("  iter {i:>5}: ||r|| = {r:.3e}");
         }
     }
-    let flops = 2.0 * a.nnz() as f64 * matvecs as f64;
+    let flops = 2.0 * a0.nnz() as f64 * matvecs as f64;
     println!(
         "SymmSpMV throughput: {:.3} GF/s over {} matvecs (1-core host)",
         flops / dt / 1e9,
@@ -78,7 +77,7 @@ fn main() -> anyhow::Result<()> {
     );
     // verify with the TRUE residual computed by the reference SpMV on the
     // full matrix (independent of the SymmSpMV under test)
-    let ax = eng.permuted_matrix().spmv_ref(&x);
+    let ax = op.permuted_matrix().spmv_ref(&x);
     let true_res = ax
         .iter()
         .zip(&rhs)

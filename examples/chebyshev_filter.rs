@@ -11,13 +11,10 @@
 //! Run: `cargo run --release --example chebyshev_filter [-- sites degree chunk]`
 
 use race::cachesim;
-use race::coordinator::permute_vec;
 use race::gen;
-use race::graph;
 use race::kernels;
 use race::machine;
-use race::mpk::{MpkConfig, MpkPlan};
-use race::race::{RaceConfig, RaceEngine};
+use race::op::{OpConfig, Operator};
 
 fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().collect();
@@ -29,16 +26,14 @@ fn main() -> anyhow::Result<()> {
     let n = a0.nrows();
     println!("XXZ spin chain, {sites} sites: {} rows, {} nnz", n, a0.nnz());
 
-    let perm = graph::rcm(&a0);
-    let a = a0.permute_symmetric(&perm);
-    // the RACE engine supplies the level construction the MPK plan blocks on
-    let cfg = RaceConfig { threads: 8, dist: 2, ..Default::default() };
-    let eng = RaceEngine::build(&a, &cfg)?;
-    let mcfg = MpkConfig { p: chunk, cache_bytes: 1 << 20 };
-    let plan = MpkPlan::from_engine(&a, &eng, &mcfg)?;
+    // one handle: RCM preorder + RACE engine (its level construction is
+    // what the MPK plan blocks on) + the level-blocked plan for `chunk`
+    let op = Operator::build(&a0, OpConfig::new().threads(8).cache_bytes(1 << 20))?;
+    let h = op.mpk(chunk)?;
+    let plan = h.plan();
     println!(
         "RACE eta = {:.3}; MPK plan: {} levels in {} blocks, {} steps per chunk of {chunk}",
-        eng.efficiency(),
+        op.eta(),
         plan.nlevels,
         plan.nblocks(),
         plan.steps.len()
@@ -48,7 +43,7 @@ fn main() -> anyhow::Result<()> {
     // spectral bounds estimate (Gershgorin): |lambda| <= max row 1-norm
     let mut bound = 0.0f64;
     for r in 0..n {
-        let s: f64 = a.row(r).1.iter().map(|v| v.abs()).sum();
+        let s: f64 = op.matrix().row(r).1.iter().map(|v| v.abs()).sum();
         bound = bound.max(s);
     }
     // filter window targeting the upper edge: map [-bound, bound*0.2] away
@@ -64,7 +59,7 @@ fn main() -> anyhow::Result<()> {
         (0..n).map(|i| ((i * 2654435761) % 1000) as f64 / 500.0 - 1.0).collect();
     let nrm = v0.iter().map(|z| z * z).sum::<f64>().sqrt();
     v0.iter_mut().for_each(|z| *z /= nrm);
-    let v0 = permute_vec(&v0, &plan.perm);
+    let v0 = h.permute(&v0);
     // full chunks through the blocked sweep; the remainder runs as plain
     // steps so exactly `degree` recurrence steps execute, as requested
     let nchunks = degree / chunk;
@@ -79,7 +74,7 @@ fn main() -> anyhow::Result<()> {
     bufs[1] = v0.clone();
     let t0 = std::time::Instant::now();
     for _ in 0..nchunks {
-        kernels::mpk_execute(&plan, &mut bufs, 1, sigma, tau, -1.0, 1);
+        kernels::mpk_execute(plan, &mut bufs, 1, sigma, tau, -1.0, 1);
         bufs.swap(0, chunk);
         bufs.swap(1, chunk + 1);
         // the recurrence is linear: scaling (u, v) jointly preserves the
@@ -146,7 +141,7 @@ fn main() -> anyhow::Result<()> {
         / v.iter().map(|z| z * z).sum::<f64>();
     println!("extremal eigenvalue estimate: {rq:.6}");
 
-    let flops = 2.0 * a.nnz() as f64 * steps_total as f64;
+    let flops = 2.0 * a0.nnz() as f64 * steps_total as f64;
     println!(
         "{} recurrence steps: MPK {:.3}s ({:.3} GF/s) vs naive {:.3}s ({:.3} GF/s) -> {:.2}x",
         steps_total,
@@ -158,14 +153,10 @@ fn main() -> anyhow::Result<()> {
     );
 
     // simulated traffic at paper-like cache pressure (matrix >> cache)
-    let m = machine::skx().under_pressure(a.crs_bytes(), 4);
-    let plan_sim = MpkPlan::from_engine(
-        &a,
-        &eng,
-        &MpkConfig { p: chunk, cache_bytes: m.effective_cache() / 2 },
-    )?;
-    let tr_blk = cachesim::measure_mpk_traffic(&plan_sim, &m);
-    let tr_nv = cachesim::measure_spmv_powers_traffic(plan_sim.permuted_matrix(), chunk, &m);
+    let m = machine::skx().under_pressure(op.matrix().crs_bytes(), 4);
+    let h_sim = op.mpk_with(chunk, m.effective_cache() / 2)?;
+    let tr_blk = cachesim::measure_mpk_traffic(h_sim.plan(), &m);
+    let tr_nv = cachesim::measure_spmv_powers_traffic(h_sim.plan().permuted_matrix(), chunk, &m);
     println!(
         "simulated traffic per chunk (matrix 4x cache): MPK {:.2} vs naive {:.2} B/nnz-app ({:.2}x less)",
         tr_blk.bytes_per_nnz_full,

@@ -1,48 +1,43 @@
-//! Quickstart: build a matrix, color it with RACE, run parallel SymmSpMV,
-//! verify against the reference, and inspect the performance model.
+//! Quickstart: build one `Operator` handle, run parallel SymmSpMV and
+//! matrix powers in logical order, verify against the reference, and
+//! inspect the performance model.
 //!
 //! Run: `cargo run --release --example quickstart`
 
 use race::cachesim;
 use race::gen;
-use race::graph;
-use race::kernels;
 use race::machine;
+use race::op::{Backend, OpConfig, Operator};
 use race::perfmodel;
-use race::race::{RaceConfig, RaceEngine};
 use race::sim;
 
 fn main() -> anyhow::Result<()> {
     // 1. A matrix: 2D Poisson on a 128x128 grid (or pick any corpus entry
     //    via race::gen::corpus_entry("Spin-26")).
-    let a0 = gen::stencil2d_5pt(128, 128);
-    println!("matrix: {} rows, {} nnz, bandwidth {}", a0.nrows(), a0.nnz(), a0.bandwidth());
+    let a = gen::stencil2d_5pt(128, 128);
+    println!("matrix: {} rows, {} nnz, bandwidth {}", a.nrows(), a.nnz(), a.bandwidth());
 
-    // 2. RCM preprocessing (the paper applies it to every method, §6.1).
-    let perm = graph::rcm(&a0);
-    let a = a0.permute_symmetric(&perm);
-    println!("after RCM: bandwidth {}", a.bandwidth());
-
-    // 3. Build the RACE engine: distance-2 coloring for 8 threads.
-    let cfg = RaceConfig { threads: 8, dist: 2, ..Default::default() };
-    let eng = RaceEngine::build(&a, &cfg)?;
+    // 2. One handle wires the whole pipeline: RCM preordering (§6.1),
+    //    the distance-2 RACE engine for 8 threads, the upper-triangle
+    //    storage and the compiled step program — executed on a resident
+    //    worker pool.
+    let op = Operator::build(&a, OpConfig::new().threads(8).backend(Backend::Pool))?;
+    println!("after RCM: bandwidth {}", op.matrix().bandwidth());
     println!(
         "RACE: {} levels, {} tree nodes, eta = {:.3} (N_t_eff = {:.2})",
-        eng.nlevels0,
-        eng.node_count(),
-        eng.efficiency(),
-        eng.effective_threads()
+        op.engine().nlevels0,
+        op.engine().node_count(),
+        op.eta(),
+        op.engine().effective_threads()
     );
 
-    // 4. Run SymmSpMV on the upper triangle through the engine.
-    let ap = eng.permuted_matrix();
-    let upper = ap.upper_triangle();
-    let x: Vec<f64> = (0..a.nrows()).map(|i| (i as f64 * 0.01).sin()).collect();
-    let mut b = vec![0.0; a.nrows()];
-    kernels::symmspmv_race(&eng, &upper, &x, &mut b);
-
-    // 5. Verify against the full-matrix SpMV.
-    let want = ap.spmv_ref(&x);
+    // 3. SymmSpMV in logical order — permutations are the handle's
+    //    problem, so the result compares directly against the reference
+    //    SpMV on the original matrix.
+    let x: Vec<f64> = (0..op.n()).map(|i| (i as f64 * 0.01).sin()).collect();
+    let mut b = vec![0.0; op.n()];
+    op.symmspmv(&x, &mut b);
+    let want = a.spmv_ref(&x);
     let max_err = b
         .iter()
         .zip(&want)
@@ -51,10 +46,18 @@ fn main() -> anyhow::Result<()> {
     println!("max rel err vs SpMV reference: {max_err:.2e}");
     assert!(max_err < 1e-10);
 
-    // 6. What would this do on a Skylake SP socket? (execution simulator)
+    // 4. Matrix powers y_k = A^k x through the same handle: the
+    //    level-blocked MPK plan is built lazily and cached per power.
+    let ys = op.powers(&x, 3)?;
+    let err3 = race::op::rel_err(&race::mpk::powers_ref(&a, &x, 3)[2], &ys[2]);
+    println!("A^3 x via level-blocked MPK: vector-relative err {err3:.2e}");
+    assert!(err3 < 1e-9);
+
+    // 5. What would this do on a Skylake SP socket? (execution simulator;
+    //    the handle exposes the engine and upper triangle it built)
     let m = machine::skx();
-    let tr = cachesim::measure_symmspmv_traffic(&upper, a.nnz(), &m);
-    let s = sim::simulate_race(&m, &eng, &upper, tr.bytes_total, a.nnz());
+    let tr = cachesim::measure_symmspmv_traffic(op.upper(), a.nnz(), &m);
+    let s = sim::simulate_race(&m, op.engine(), op.upper(), tr.bytes_total, a.nnz());
     let w = perfmodel::symmspmv_window(&m, tr.alpha, a.nnzr());
     println!(
         "simulated on {}: {:.2} GF/s (roofline window {:.2}..{:.2} GF/s, traffic {:.1} B/nnz)",

@@ -56,7 +56,7 @@ fn main() -> anyhow::Result<()> {
     let dt_xla = t0.elapsed().as_secs_f64();
 
     // native Rust reference
-    let upper = a.upper_triangle();
+    let upper = race::op::upper(&a);
     let mut want = vec![0.0f64; n];
     let t1 = std::time::Instant::now();
     kernels::symmspmv_serial(&upper, &x, &mut want);

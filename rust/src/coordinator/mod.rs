@@ -4,12 +4,13 @@
 //! kernel, measure simulated traffic and multicore performance, and emit a
 //! JSON-able report.
 //!
-//! The RACE host execution runs on the persistent worker pool
-//! ([`crate::pool`]): the engine tree is compiled to a step program once,
-//! outside the timed region, so `host_seconds` measures the resident
-//! executor the serve path uses rather than per-call thread spawn/join.
-//! (The matvec network service formerly here has grown into the
-//! [`crate::serve`] subsystem.)
+//! The RACE and MPK host executions run through the [`crate::op`]
+//! facade: one `Operator` handle owns the engine, the compiled step
+//! program and the resident worker pool, so `host_seconds` measures the
+//! resident executor the serve path uses rather than per-call thread
+//! spawn/join — with schedule compilation and permutation outside the
+//! timed region. (The matvec network service formerly here has grown
+//! into the [`crate::serve`] subsystem.)
 
 use crate::cachesim::{self, TrafficReport};
 use crate::color::{abmc_schedule, mc_schedule};
@@ -17,9 +18,8 @@ use crate::gen;
 use crate::graph;
 use crate::kernels;
 use crate::machine::Machine;
-use crate::mpk::{MpkConfig, MpkPlan};
+use crate::op::{Backend, OpConfig, Operator};
 use crate::perfmodel;
-use crate::race::{RaceConfig, RaceEngine};
 use crate::sim::{self, SimResult};
 use crate::sparse::{Csr, MatrixStats};
 use crate::util::json::Json;
@@ -184,23 +184,25 @@ pub fn run_pipeline(
     let (traffic, sim_res, host_seconds, max_rel_err): (TrafficReport, SimResult, f64, f64);
     match method {
         Method::Race => {
-            let cfg = RaceConfig { threads, ..Default::default() };
-            let eng = RaceEngine::build(&a, &cfg).context("RACE build")?;
-            eta = eng.efficiency();
-            let ap = eng.permuted_matrix();
-            let upper = ap.upper_triangle();
-            let tr = cachesim::measure_symmspmv_traffic(&upper, nnz_full, machine);
-            let s = sim::simulate_race(machine, &eng, &upper, tr.bytes_total, nnz_full);
-            // real host execution + correctness, on the resident pool
-            // (program compilation and worker spawn stay outside the timer)
-            let prog = crate::pool::compile_race(&eng);
-            let wp = crate::pool::WorkerPool::new(threads);
-            let xp = permute_vec(&x, &eng.perm);
+            // the facade builds engine + upper triangle + step program +
+            // resident pool behind one handle (RCM already applied above)
+            let op = Operator::build(
+                &a,
+                OpConfig::new().threads(threads).rcm(false).backend(Backend::Pool),
+            )
+            .context("RACE build")?;
+            eta = op.eta();
+            let tr = cachesim::measure_symmspmv_traffic(op.upper(), nnz_full, machine);
+            let s = sim::simulate_race(machine, op.engine(), op.upper(), tr.bytes_total, nnz_full);
+            // real host execution + correctness on the resident pool
+            // (compilation, worker spawn and permutation outside the timer)
+            let xp = op.permute(&x);
             let mut b = vec![0.0; a.nrows()];
+            op.symmspmv_permuted(&xp, &mut b); // warm the lazy program + pool
             let t0 = std::time::Instant::now();
-            crate::pool::symmspmv_pool(&wp, &prog, &upper, &xp, &mut b);
+            op.symmspmv_permuted(&xp, &mut b);
             let dt = t0.elapsed().as_secs_f64();
-            let err = rel_err_permuted(&want, &b, &eng.perm);
+            let err = max_rel(&want, &op.unpermute(&b));
             (traffic, sim_res, host_seconds, max_rel_err) = (tr, s, dt, err);
         }
         Method::Mc | Method::Abmc => {
@@ -210,7 +212,7 @@ pub fn run_pipeline(
                 abmc_schedule(&a, (a.nrows() / 64).max(threads * 4), 2)
             };
             let ap = a.permute_symmetric(&sched.perm);
-            let upper = ap.upper_triangle();
+            let upper = crate::op::upper(&ap);
             let tr = cachesim::measure_symmspmv_traffic(&upper, nnz_full, machine);
             let s = sim::simulate_color(machine, &sched, &upper, threads, tr.bytes_total, nnz_full);
             let xp = permute_vec(&x, &sched.perm);
@@ -222,7 +224,7 @@ pub fn run_pipeline(
             (traffic, sim_res, host_seconds, max_rel_err) = (tr, s, dt, err);
         }
         Method::Serial | Method::Locks | Method::Private => {
-            let upper = a.upper_triangle();
+            let upper = crate::op::upper(&a);
             let tr = cachesim::measure_symmspmv_traffic(&upper, nnz_full, machine);
             let mut b = vec![0.0; a.nrows()];
             let t0 = std::time::Instant::now();
@@ -248,17 +250,25 @@ pub fn run_pipeline(
         }
         Method::Mpk => {
             let p = MPK_PIPELINE_POWER;
-            let mcfg = MpkConfig { p, cache_bytes: machine.mpk_block_bytes() };
-            let plan = MpkPlan::build(&a, &mcfg).context("MPK plan")?;
-            let tr = cachesim::measure_mpk_traffic(&plan, machine);
-            let xp = permute_vec(&x, &plan.perm);
+            let op = Operator::build(
+                &a,
+                OpConfig::new()
+                    .threads(threads)
+                    .rcm(false)
+                    .backend(Backend::Scoped)
+                    .cache_bytes(machine.mpk_block_bytes()),
+            )
+            .context("MPK operator")?;
+            let h = op.mpk(p).context("MPK plan")?;
+            let tr = cachesim::measure_mpk_traffic(h.plan(), machine);
+            let xp = h.permute(&x);
             let t0 = std::time::Instant::now();
-            let ys = kernels::mpk_powers(&plan, &xp, threads);
+            let ys = op.powers_permuted(&h, &xp);
             let dt = t0.elapsed().as_secs_f64();
             // vector-relative metric: per-element denominators are
             // cancellation-fragile on unnormalized power vectors
             let want_pows = crate::mpk::powers_ref(&a, &x, p);
-            let err = crate::mpk::rel_err_vs_ref(&want_pows[p - 1], &ys[p - 1], &plan.perm);
+            let err = crate::op::rel_err(&want_pows[p - 1], &h.unpermute(&ys[p - 1]));
             // per-sweep traffic feeds the saturating-SpMV model: the
             // blocked schedule is bandwidth-bound like SpMV, with less data
             let s = sim::simulate_spmv(machine, &a, threads, tr.bytes_total / p as u64);

@@ -14,7 +14,8 @@ pub use executors::{
     symmspmv_color, symmspmv_locks, symmspmv_private, symmspmv_race, SendPtr,
 };
 pub use mpk::{
-    mpk_execute, mpk_powers, mpk_powers_serial, mpk_three_term, spmv_powers, spmv_range_affine,
+    mpk_execute, mpk_execute_multi, mpk_powers, mpk_powers_multi, mpk_powers_serial,
+    mpk_three_term, spmv_powers, spmv_range_affine, spmv_range_affine_multi,
 };
 // `symmspmv_range_multi` (below) is the multi-RHS work unit scheduled by
 // the pool executor `crate::pool::symmspmv_race_multi`.

@@ -76,6 +76,76 @@ pub fn spmv_range_affine(
     }
 }
 
+/// Multi-RHS variant of [`spmv_range_affine`]: the same affine update
+/// applied to `nrhs` vectors stored row-major (`srcs[row * nrhs + j]` is
+/// the `j`-th vector's entry for `row`). One sweep over the matrix rows
+/// serves the whole batch, so the matrix bytes that dominate an SpMV
+/// power sweep are amortized across the batch — the MPK analogue of
+/// [`super::symmspmv_range_multi`]. Per right-hand side the accumulation
+/// order is identical to the single-vector kernel, so results are
+/// bit-identical to `nrhs` separate sweeps.
+#[allow(clippy::too_many_arguments)]
+pub fn spmv_range_affine_multi(
+    a: &Csr,
+    srcs: &[f64],
+    acc: Option<&[f64]>,
+    dsts: &mut [f64],
+    nrhs: usize,
+    sigma: f64,
+    tau: f64,
+    rho: f64,
+    start: usize,
+    end: usize,
+) {
+    assert!(end <= a.nrows());
+    assert!(nrhs > 0);
+    assert!(srcs.len() >= a.nrows() * nrhs && dsts.len() >= a.nrows() * nrhs);
+    if let Some(acc) = acc {
+        assert!(acc.len() >= a.nrows() * nrhs);
+    } else {
+        debug_assert_eq!(rho, 0.0);
+    }
+    let rp = &a.row_ptr;
+    let col = &a.col;
+    let val = &a.val;
+    // stack scratch for typical batch sizes (mirrors symmspmv_range_multi)
+    const STACK_RHS: usize = 32;
+    let mut stack_buf = [0f64; STACK_RHS];
+    let mut heap_buf: Vec<f64>;
+    let tmp: &mut [f64] = if nrhs <= STACK_RHS {
+        &mut stack_buf[..nrhs]
+    } else {
+        heap_buf = vec![0f64; nrhs];
+        &mut heap_buf
+    };
+    for row in start..end {
+        let lo = rp[row] as usize;
+        let hi = rp[row + 1] as usize;
+        tmp.fill(0.0);
+        for idx in lo..hi {
+            let c = col[idx] as usize;
+            let v = val[idx];
+            let cb = c * nrhs;
+            for j in 0..nrhs {
+                tmp[j] += v * srcs[cb + j];
+            }
+        }
+        let rb = row * nrhs;
+        match acc {
+            None => {
+                for j in 0..nrhs {
+                    dsts[rb + j] = sigma * tmp[j] + tau * srcs[rb + j];
+                }
+            }
+            Some(acc) => {
+                for j in 0..nrhs {
+                    dsts[rb + j] = sigma * tmp[j] + tau * srcs[rb + j] + rho * acc[rb + j];
+                }
+            }
+        }
+    }
+}
+
 /// Run one row range, forking into up to `threads` disjoint chunks.
 fn run_range_threaded(
     a: &Csr,
@@ -117,6 +187,51 @@ fn run_range_threaded(
     }); // scope join == step barrier
 }
 
+/// Multi-RHS counterpart of [`run_range_threaded`]: chunks write disjoint
+/// row blocks, which scale to disjoint flat ranges `row * nrhs + j`.
+#[allow(clippy::too_many_arguments)]
+fn run_range_threaded_multi(
+    a: &Csr,
+    srcs: &[f64],
+    acc: Option<&[f64]>,
+    dsts: &mut [f64],
+    nrhs: usize,
+    sigma: f64,
+    tau: f64,
+    rho: f64,
+    lo: usize,
+    hi: usize,
+    threads: usize,
+) {
+    let rows = hi - lo;
+    if threads <= 1 || rows < 2 * MIN_PAR_ROWS {
+        spmv_range_affine_multi(a, srcs, acc, dsts, nrhs, sigma, tau, rho, lo, hi);
+        return;
+    }
+    let nt = threads.min(rows.div_ceil(MIN_PAR_ROWS)).max(2);
+    let chunk = rows.div_ceil(nt);
+    let len = dsts.len();
+    let dp = SendPtr(dsts.as_mut_ptr());
+    std::thread::scope(|s| {
+        for t in 1..nt {
+            let t_lo = lo + t * chunk;
+            let t_hi = (t_lo + chunk).min(hi);
+            if t_lo >= t_hi {
+                break;
+            }
+            s.spawn(move || {
+                // SAFETY: chunks write disjoint dst rows (pure gather).
+                let dsts = unsafe { std::slice::from_raw_parts_mut(dp.0, len) };
+                spmv_range_affine_multi(a, srcs, acc, dsts, nrhs, sigma, tau, rho, t_lo, t_hi);
+            });
+        }
+        // SAFETY: chunk 0 is disjoint from every spawned chunk.
+        let dsts0 = unsafe { std::slice::from_raw_parts_mut(dp.0, len) };
+        let hi0 = (lo + chunk).min(hi);
+        spmv_range_affine_multi(a, srcs, acc, dsts0, nrhs, sigma, tau, rho, lo, hi0);
+    }); // scope join == step barrier
+}
+
 /// Execute an MPK plan's steps over a window of vectors. A step with
 /// `power == k` reads `bufs[base + k - 1]` (and `bufs[base + k - 2]` when
 /// `rho != 0`) and writes `bufs[base + k]`; `bufs[..=base]` are the given
@@ -150,6 +265,63 @@ pub fn mpk_execute(
         let dst: &mut [f64] = &mut right[0];
         run_range_threaded(a, src, acc, dst, sigma, tau, rho, lo, hi, threads);
     }
+}
+
+/// Multi-RHS counterpart of [`mpk_execute`]: each buffer holds `nrhs`
+/// vectors row-major (`bufs[w][row * nrhs + j]`), and every step advances
+/// all `nrhs` vectors through one sweep of its row range. Same buffer
+/// window contract as [`mpk_execute`].
+#[allow(clippy::too_many_arguments)]
+pub fn mpk_execute_multi(
+    plan: &MpkPlan,
+    bufs: &mut [Vec<f64>],
+    nrhs: usize,
+    base: usize,
+    sigma: f64,
+    tau: f64,
+    rho: f64,
+    threads: usize,
+) {
+    let a = plan.permuted_matrix();
+    let n = a.nrows();
+    assert!(nrhs > 0);
+    assert_eq!(bufs.len(), base + plan.cfg.p + 1, "need base + p + 1 vector blocks");
+    assert!(rho == 0.0 || base >= 1, "three-term recurrence needs base >= 1");
+    for b in bufs.iter() {
+        assert_eq!(b.len(), n * nrhs);
+    }
+    for step in &plan.steps {
+        let k = step.power as usize;
+        let (lo, hi) = (step.row_lo as usize, step.row_hi as usize);
+        if lo == hi {
+            continue; // empty level range (island gap)
+        }
+        let (left, right) = bufs.split_at_mut(base + k);
+        let src: &[f64] = &left[base + k - 1];
+        let acc: Option<&[f64]> = if rho != 0.0 { Some(&left[base + k - 2]) } else { None };
+        let dst: &mut [f64] = &mut right[0];
+        run_range_threaded_multi(a, src, acc, dst, nrhs, sigma, tau, rho, lo, hi, threads);
+    }
+}
+
+/// Multi-RHS level-blocked matrix powers: `nrhs` input vectors stored
+/// row-major (`xs[row * nrhs + j]`, already in the plan's permuted
+/// numbering) are advanced together; returns one flat block per power
+/// (`out[k - 1][row * nrhs + j]` is `(A^k x_j)[row]`). Bit-identical to
+/// `nrhs` separate [`mpk_powers`] runs, with the block traffic paid once
+/// per batch.
+pub fn mpk_powers_multi(plan: &MpkPlan, xs: &[f64], nrhs: usize, threads: usize) -> Vec<Vec<f64>> {
+    let p = plan.cfg.p;
+    let n = plan.permuted_matrix().nrows();
+    assert_eq!(xs.len(), n * nrhs);
+    let mut bufs = Vec::with_capacity(p + 1);
+    bufs.push(xs.to_vec());
+    for _ in 0..p {
+        bufs.push(vec![0.0; n * nrhs]);
+    }
+    mpk_execute_multi(plan, &mut bufs, nrhs, 0, 1.0, 0.0, 0.0, threads);
+    bufs.remove(0);
+    bufs
 }
 
 /// Level-blocked matrix powers: returns `[A x, A² x, .., A^p x]` in the
@@ -276,6 +448,32 @@ mod tests {
             let zs = mpk_three_term(&plan, &zp_p, &z0_p, sigma, tau, rho, threads);
             for k in 0..4 {
                 close_permuted(&want[k], &zs[k], &plan.perm, &format!("cheb k={k}"));
+            }
+        }
+    }
+
+    #[test]
+    fn multi_rhs_powers_bitwise_match_single_sweeps() {
+        let a = gen::stencil2d_9pt(16, 12);
+        let n = a.nrows();
+        let nrhs = 3usize;
+        let plan = MpkPlan::build(&a, &MpkConfig { p: 3, cache_bytes: 8 << 10 }).unwrap();
+        let mut xs = vec![0f64; n * nrhs];
+        for row in 0..n {
+            for j in 0..nrhs {
+                xs[row * nrhs + j] = ((row * (j + 2) + 5 * j) % 13) as f64 * 0.2 - 1.1;
+            }
+        }
+        for threads in [1usize, 3] {
+            let ys = mpk_powers_multi(&plan, &xs, nrhs, threads);
+            assert_eq!(ys.len(), 3);
+            for j in 0..nrhs {
+                let x: Vec<f64> = (0..n).map(|row| xs[row * nrhs + j]).collect();
+                let single = mpk_powers(&plan, &x, threads);
+                for k in 0..3 {
+                    let got: Vec<f64> = (0..n).map(|row| ys[k][row * nrhs + j]).collect();
+                    assert_eq!(single[k], got, "t={threads} rhs {j} power {}", k + 1);
+                }
             }
         }
     }

@@ -35,6 +35,10 @@
 //! * [`serve`] — SymmSpMV/MPK as a resident TCP service: multi-matrix
 //!   registry, request micro-batching onto a multi-vector kernel, an MPK
 //!   endpoint, stats, and graceful shutdown.
+//! * [`op`] — the **`Operator` facade**: one typed handle running
+//!   build → permute → plan → execute for SymmSpMV, matrix powers and
+//!   distance-k solver sweeps, with a `Backend` selecting the serial /
+//!   scoped / pooled executor and all permutations handled internally.
 //! * [`runtime`] — PJRT/XLA artifact loading so AOT-compiled JAX/Pallas
 //!   kernels run from Rust with no Python on the request path.
 //! * [`coordinator`] — the pipeline driver used by the CLI, benches and
@@ -42,21 +46,30 @@
 //!
 //! ## Quickstart
 //!
+//! One handle wires the whole pipeline; vectors stay in the matrix's
+//! original (logical) row order:
+//!
 //! ```
 //! use race::gen;
-//! use race::race::{RaceEngine, RaceConfig};
-//! use race::kernels;
+//! use race::op::{Backend, OpConfig, Operator};
 //!
 //! // 2D 5-point Poisson matrix, 64x64 grid.
 //! let a = gen::stencil2d_5pt(64, 64);
-//! let engine = RaceEngine::build(&a, &RaceConfig { threads: 4, dist: 2, ..Default::default() }).unwrap();
-//! let upper = engine.permuted_matrix().upper_triangle();
-//! let x = vec![1.0; a.nrows()];
-//! let mut b = vec![0.0; a.nrows()];
-//! kernels::symmspmv_race(&engine, &upper, &x, &mut b);
-//! let b_ref = engine.permuted_matrix().spmv_ref(&x);
+//! // RCM preorder -> RACE engine -> upper triangle -> step program,
+//! // executed on a resident worker pool. All built behind the handle.
+//! let op = Operator::build(&a, OpConfig::new().threads(4).backend(Backend::Pool)).unwrap();
+//! let x = vec![1.0; op.n()];
+//! let mut b = vec![0.0; op.n()];
+//! op.symmspmv(&x, &mut b); // logical order in, logical order out
+//! let b_ref = a.spmv_ref(&x);
 //! for (u, v) in b.iter().zip(&b_ref) { assert!((u - v).abs() < 1e-9); }
+//! // matrix powers y_k = A^k x through the same handle (level-blocked MPK)
+//! let ys = op.powers(&x, 3).unwrap();
+//! assert_eq!(ys.len(), 3);
 //! ```
+//!
+//! The free functions the facade dispatches to ([`kernels`], [`pool`],
+//! [`mpk`], [`race`]) remain public for benches and custom compositions.
 
 pub mod cachesim;
 pub mod color;
@@ -66,6 +79,7 @@ pub mod graph;
 pub mod kernels;
 pub mod machine;
 pub mod mpk;
+pub mod op;
 pub mod partition;
 pub mod perfmodel;
 pub mod pool;

@@ -9,7 +9,8 @@ use race::coordinator::{self, Method};
 use race::gen;
 use race::kernels;
 use race::machine;
-use race::mpk::{powers_ref, MpkConfig, MpkPlan};
+use race::mpk::powers_ref;
+use race::op::{Backend, OpConfig, Operator};
 use race::race::{format_tree, RaceConfig, RaceEngine};
 use race::sparse::MatrixStats;
 use race::util::json::Json;
@@ -33,11 +34,14 @@ USAGE:
       Walk the paper's Fig. 4-14 construction on the artificial stencil.
   race-cli serve --matrix SPEC[,SPEC..] [--threads N] [--addr HOST:PORT]
                  [--small] [--max-requests N] [--mpk-power P] [--mpk-cache BYTES]
+                 [--batch-window-us N]
       SymmSpMV/MPK-as-a-service over TCP (newline-delimited JSON, see
       README.md): multi-matrix registry, request micro-batching on a
-      persistent worker pool, {\"x\": [..], \"p\": k} matrix powers,
-      {\"stats\": true} counters, {\"shutdown\": true} / --max-requests
-      for graceful shutdown.
+      persistent worker pool (SymmSpMV and MPK requests both batch),
+      {\"x\": [..], \"p\": k} matrix powers, {\"stats\": true} counters,
+      {\"shutdown\": true} / --max-requests for graceful shutdown.
+      --batch-window-us makes batch leaders wait a bounded time (capped
+      at the last kernel latency) so medium-load traffic coalesces.
   race-cli xla [--name model]
       Load + compile an AOT artifact from artifacts/.
 ";
@@ -155,6 +159,7 @@ fn main() -> Result<()> {
                 max_requests,
                 mpk_power_max: args.get_usize("mpk-power", 8)?,
                 mpk_cache_bytes: args.get_usize("mpk-cache", 2 << 20)?,
+                batch_window_us: args.get_usize("batch-window-us", 0)? as u64,
             };
             race::serve::serve(&opts)
         }
@@ -288,35 +293,39 @@ fn cmd_mpk(args: &Args) -> Result<()> {
     let mach = args.get("machine", "skx");
     let m = machine::by_name(&mach).ok_or_else(|| anyhow::anyhow!("unknown machine {mach}"))?;
     let (name, a0) = coordinator::resolve_matrix(&matrix, args.has("small"))?;
-    let perm = race::graph::rcm(&a0);
-    let a = a0.permute_symmetric(&perm);
     let cache = args.get_usize("cache", m.mpk_block_bytes())?;
-    let plan = MpkPlan::build(&a, &MpkConfig { p, cache_bytes: cache })?;
+    // one handle: RCM preorder + engine + level-blocked plan for power p
+    let op = Operator::build(
+        &a0,
+        OpConfig::new().threads(threads).backend(Backend::Scoped).cache_bytes(cache),
+    )?;
+    let h = op.mpk(p)?;
+    let plan = h.plan();
     let ap = plan.permuted_matrix();
 
     // both measurements on the same (level-permuted) matrix, so the ratio
     // isolates blocking from ordering effects
-    let tr_mpk = cachesim::measure_mpk_traffic(&plan, &m);
+    let tr_mpk = cachesim::measure_mpk_traffic(plan, &m);
     let tr_naive = cachesim::measure_spmv_powers_traffic(ap, p, &m);
 
-    let x: Vec<f64> = (0..a.nrows()).map(|i| ((i % 100) as f64) * 0.01 - 0.5).collect();
-    let xp = coordinator::permute_vec(&x, &plan.perm);
+    let x: Vec<f64> = (0..op.n()).map(|i| ((i % 100) as f64) * 0.01 - 0.5).collect();
+    let xp = h.permute(&x);
     // warmed, repeated timings (median) — one-shot runs would charge the
     // first-touch page faults to whichever path runs first
     let s_naive = race::util::bench::bench("naive", 0.05, || {
         std::hint::black_box(kernels::spmv_powers(ap, &xp, p, threads));
     });
     let s_mpk = race::util::bench::bench("mpk", 0.05, || {
-        std::hint::black_box(kernels::mpk_powers(&plan, &xp, threads));
+        std::hint::black_box(op.powers_permuted(&h, &xp));
     });
     let (dt_naive, dt_mpk) = (s_naive.median, s_mpk.median);
 
-    // correctness: p reference sweeps on the (RCM-ordered) input matrix,
-    // vector-relative metric (same number the tests and bench report)
-    let ys = kernels::mpk_powers(&plan, &xp, threads);
-    let want = powers_ref(&a, &x, p);
-    let err = race::mpk::rel_err_vs_ref(&want[p - 1], &ys[p - 1], &plan.perm);
-    let flops = 2.0 * a.nnz() as f64 * p as f64;
+    // correctness: p reference sweeps on the original matrix, compared in
+    // logical order (same vector-relative metric the tests report)
+    let ys = op.powers(&x, p)?;
+    let want = powers_ref(&a0, &x, p);
+    let err = race::op::rel_err(&want[p - 1], &ys[p - 1]);
+    let flops = 2.0 * a0.nnz() as f64 * p as f64;
     if args.has("json") {
         let j = Json::obj(vec![
             ("matrix", Json::Str(name)),
@@ -339,8 +348,8 @@ fn cmd_mpk(args: &Args) -> Result<()> {
         println!("{name}: y = A^{p} x via level-blocked MPK on {}", m.name);
         println!(
             "  N_r={} N_nz={}  levels={} blocks={} steps={} (cache target {} KB)",
-            a.nrows(),
-            a.nnz(),
+            a0.nrows(),
+            a0.nnz(),
             plan.nlevels,
             plan.nblocks(),
             plan.steps.len(),

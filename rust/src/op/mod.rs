@@ -1,0 +1,842 @@
+//! The [`Operator`] facade — one typed handle for the whole
+//! build → permute → plan → execute pipeline.
+//!
+//! The paper's pipeline (level construction → distance-k coloring → load
+//! balancing → SymmSpMV execution) plus the follow-up subsystems (MPK
+//! level blocking, the persistent pool) exist as composable free
+//! functions — but every caller used to wire the same dance by hand:
+//! `rcm → permute_symmetric → RaceEngine::build → permuted_matrix() →
+//! upper-triangle storage → compile_race → WorkerPool → symmspmv_pool`,
+//! with MPK repeating it for `MpkPlan`. This module folds that into one
+//! handle:
+//!
+//! * [`Operator::build`]`(a, OpConfig)` runs RCM preordering (on by
+//!   default), builds the RACE engine, extracts the upper-triangle
+//!   storage, and records the composed permutation. Step programs, the
+//!   resident [`WorkerPool`], per-power [`MpkPlan`]s and the auxiliary
+//!   distance-1/distance-2 schedules for Gauss–Seidel/Kaczmarz are all
+//!   built lazily on first use and cached inside the handle.
+//! * Execution goes through one surface — [`Operator::symmspmv`],
+//!   [`Operator::symmspmv_multi`], [`Operator::powers`],
+//!   [`Operator::powers_multi`], [`Operator::three_term`],
+//!   [`Operator::gauss_seidel`], [`Operator::kaczmarz`] — with a
+//!   [`Backend`] selecting the executor.
+//! * Vectors cross the facade in **logical** (pre-permutation) order;
+//!   the handle permutes on the way in and unpermutes on the way out, so
+//!   the `permute_vec`/`rel_err_vs_ref` plumbing disappears from
+//!   callers. Hot paths that want to stay in executor numbering use
+//!   [`Operator::permute`]/[`Operator::unpermute`] and the `_permuted`
+//!   entry points.
+//!
+//! All three backends produce **bit-identical** results for every
+//! kernel: `Serial` executes the compiled step program inline in program
+//! order, `Scoped` runs the classic scoped-spawn executors (or a scoped
+//! sweep of the same program), and `Pool` runs the resident worker pool
+//! — and the step-program compilation preserves every ordering of
+//! overlapping writes (see [`crate::pool`] docs), while units within a
+//! step have disjoint write sets, so any interleaving agrees bitwise.
+//! `rust/tests/op.rs` asserts exact equality across backends for every
+//! generator family.
+//!
+//! The old free functions remain as the thin internals this facade
+//! dispatches to — benches that compare executors against each other
+//! keep calling them directly with the handle's accessors
+//! ([`Operator::engine`], [`Operator::upper`], [`MpkHandle::plan`]).
+
+use crate::coordinator::{permute_vec, unpermute_vec};
+use crate::graph;
+use crate::kernels;
+use crate::mpk::{MpkConfig, MpkPlan};
+use crate::pool::{self, StepProgram, WorkUnit, WorkerPool};
+use crate::race::{RaceConfig, RaceEngine};
+use crate::sparse::Csr;
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Which executor a handle's kernels run on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Backend {
+    /// The compiled step program, executed inline on the calling thread.
+    Serial,
+    /// The scoped-spawn executors (`thread::scope` per tree color /
+    /// program step) — the paper's fork-join execution.
+    Scoped,
+    /// The resident [`WorkerPool`]: one condvar wake per kernel call,
+    /// one barrier per step. The production path.
+    #[default]
+    Pool,
+}
+
+/// Builder-style configuration for [`Operator::build`].
+#[derive(Clone)]
+pub struct OpConfig {
+    /// RACE engine parameters (threads, dependency distance, ε schedule,
+    /// ablation switches). Defaults to [`RaceConfig::default`]:
+    /// 4 threads, distance 2.
+    pub race: RaceConfig,
+    /// Executor selection (default [`Backend::Pool`]).
+    pub backend: Backend,
+    /// Cache-size target in bytes for level-blocked MPK plans.
+    pub cache_bytes: usize,
+    /// Apply RCM bandwidth reduction before building the engine (§6.1:
+    /// the paper preorders every method). On by default.
+    pub rcm: bool,
+    /// Share a caller-owned worker pool instead of spawning one per
+    /// handle — the serve registry points every matrix at one pool.
+    pub shared_pool: Option<Arc<WorkerPool>>,
+}
+
+impl Default for OpConfig {
+    fn default() -> Self {
+        OpConfig {
+            race: RaceConfig::default(),
+            backend: Backend::Pool,
+            cache_bytes: 2 << 20,
+            rcm: true,
+            shared_pool: None,
+        }
+    }
+}
+
+impl OpConfig {
+    /// Start from the defaults (4 threads, distance 2, RCM on,
+    /// [`Backend::Pool`], 2 MiB MPK block target).
+    pub fn new() -> OpConfig {
+        OpConfig::default()
+    }
+
+    /// Number of threads to build parallelism for (engine `N_t`, pool
+    /// participants, scoped fork width).
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.race.threads = threads;
+        self
+    }
+
+    /// Dependency distance `k` of the main schedule (2 for SymmSpMV).
+    pub fn dist(mut self, dist: usize) -> Self {
+        self.race.dist = dist;
+        self
+    }
+
+    /// ε schedule per recursion stage (§4.4.3).
+    pub fn eps(mut self, eps: Vec<f64>) -> Self {
+        self.race.eps = eps;
+        self
+    }
+
+    /// Replace the whole [`RaceConfig`] (ablation studies flip
+    /// `no_load_balance` / `no_recursion` this way).
+    pub fn race_config(mut self, race: RaceConfig) -> Self {
+        self.race = race;
+        self
+    }
+
+    /// Executor selection.
+    pub fn backend(mut self, backend: Backend) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    /// Cache-size target for MPK level blocks.
+    pub fn cache_bytes(mut self, bytes: usize) -> Self {
+        self.cache_bytes = bytes;
+        self
+    }
+
+    /// Enable/disable RCM preordering.
+    pub fn rcm(mut self, rcm: bool) -> Self {
+        self.rcm = rcm;
+        self
+    }
+
+    /// Use a caller-owned pool for [`Backend::Pool`] execution.
+    pub fn shared_pool(mut self, pool: Arc<WorkerPool>) -> Self {
+        self.shared_pool = Some(pool);
+        self
+    }
+}
+
+/// A resident level-blocked matrix-power schedule: plan + compiled step
+/// program + the composed original → plan permutation. Built lazily per
+/// power by [`Operator::mpk`] and cached inside the handle.
+pub struct MpkHandle {
+    plan: MpkPlan,
+    prog: StepProgram,
+    total_perm: Vec<u32>,
+}
+
+impl MpkHandle {
+    /// The underlying level-blocked plan (for traffic measurement and
+    /// direct `kernels::mpk_execute` composition).
+    pub fn plan(&self) -> &MpkPlan {
+        &self.plan
+    }
+
+    /// The compiled step program the pool backend executes.
+    pub fn program(&self) -> &StepProgram {
+        &self.prog
+    }
+
+    /// Composed permutation `perm[old] = new`, original → plan numbering.
+    pub fn total_perm(&self) -> &[u32] {
+        &self.total_perm
+    }
+
+    /// Map a logical-order vector into the plan's numbering.
+    pub fn permute(&self, v: &[f64]) -> Vec<f64> {
+        permute_vec(v, &self.total_perm)
+    }
+
+    /// Map a plan-numbered vector back to logical order.
+    pub fn unpermute(&self, v: &[f64]) -> Vec<f64> {
+        unpermute_vec(v, &self.total_perm)
+    }
+}
+
+/// Serial work-unit row kernel of a solver sweep.
+type RowFn = fn(&Csr, &[f64], &mut [f64], usize);
+/// Scoped tree executor of a solver sweep.
+type ScopedFn = fn(&RaceEngine, &Csr, &[f64], &mut [f64]);
+/// Pool-program executor of a solver sweep.
+type PooledFn = fn(&WorkerPool, &StepProgram, &Csr, &[f64], &mut [f64]);
+
+/// Auxiliary distance-`k` schedule for kernels whose dependency distance
+/// differs from the main engine's (Gauss–Seidel needs distance 1,
+/// Kaczmarz distance 2).
+struct AuxSchedule {
+    eng: RaceEngine,
+    prog: StepProgram,
+    total_perm: Vec<u32>,
+}
+
+/// The typed operator handle: everything needed to execute SymmSpMV,
+/// matrix powers, and distance-k solver sweeps against one symmetric
+/// sparse matrix, behind one permutation-transparent surface. See the
+/// module docs for the design.
+pub struct Operator {
+    cfg: OpConfig,
+    /// RCM permutation (identity when `cfg.rcm` is off).
+    rcm_perm: Vec<u32>,
+    /// The (possibly RCM-preordered) matrix every schedule builds on.
+    a_rcm: Csr,
+    eng: RaceEngine,
+    /// Upper-triangle storage of the engine-permuted matrix.
+    upper: Csr,
+    /// Composed `rcm ∘ race` permutation, original → executor numbering.
+    total_perm: Vec<u32>,
+    program: OnceLock<StepProgram>,
+    pool: OnceLock<Arc<WorkerPool>>,
+    mpk: Mutex<HashMap<usize, Arc<MpkHandle>>>,
+    aux: Mutex<HashMap<usize, Arc<AuxSchedule>>>,
+}
+
+impl Operator {
+    /// Build the handle: (optional) RCM preorder, RACE engine, upper
+    /// triangle, composed permutation. Lazy pieces (step program, pool,
+    /// MPK plans, auxiliary schedules) materialize on first use.
+    pub fn build(a: &Csr, cfg: OpConfig) -> Result<Operator> {
+        if a.nrows() == 0 {
+            bail!("Operator needs a non-empty matrix");
+        }
+        if !a.is_symmetric() {
+            bail!("Operator needs a structurally symmetric matrix");
+        }
+        let n = a.nrows();
+        let (rcm_perm, a_rcm) = if cfg.rcm {
+            let p = graph::rcm(a);
+            let m = a.permute_symmetric(&p);
+            (p, m)
+        } else {
+            (graph::identity_perm(n), a.clone())
+        };
+        let eng = RaceEngine::build(&a_rcm, &cfg.race)?;
+        let upper = eng.permuted_matrix().upper_triangle();
+        let total_perm = graph::compose_perm(&rcm_perm, &eng.perm);
+        Ok(Operator {
+            cfg,
+            rcm_perm,
+            a_rcm,
+            eng,
+            upper,
+            total_perm,
+            program: OnceLock::new(),
+            pool: OnceLock::new(),
+            mpk: Mutex::new(HashMap::new()),
+            aux: Mutex::new(HashMap::new()),
+        })
+    }
+
+    // ---- accessors ----
+
+    /// Matrix dimension.
+    pub fn n(&self) -> usize {
+        self.a_rcm.nrows()
+    }
+
+    /// Configured thread count.
+    pub fn threads(&self) -> usize {
+        self.cfg.race.threads
+    }
+
+    /// Configured backend.
+    pub fn backend(&self) -> Backend {
+        self.cfg.backend
+    }
+
+    /// The build configuration.
+    pub fn config(&self) -> &OpConfig {
+        &self.cfg
+    }
+
+    /// The RACE engine (tree, η statistics, engine permutation).
+    pub fn engine(&self) -> &RaceEngine {
+        &self.eng
+    }
+
+    /// Upper-triangle storage of the executor-permuted matrix — what the
+    /// SymmSpMV kernels and the cache simulator consume.
+    pub fn upper(&self) -> &Csr {
+        &self.upper
+    }
+
+    /// The (RCM-preordered) matrix the schedules were built on.
+    pub fn matrix(&self) -> &Csr {
+        &self.a_rcm
+    }
+
+    /// The fully permuted matrix the executors run on.
+    pub fn permuted_matrix(&self) -> &Csr {
+        self.eng.permuted_matrix()
+    }
+
+    /// RCM permutation (identity when RCM is disabled).
+    pub fn rcm_perm(&self) -> &[u32] {
+        &self.rcm_perm
+    }
+
+    /// Composed permutation `perm[old] = new`, original → executor
+    /// numbering.
+    pub fn total_perm(&self) -> &[u32] {
+        &self.total_perm
+    }
+
+    /// RACE parallel efficiency η of the main schedule.
+    pub fn eta(&self) -> f64 {
+        self.eng.efficiency()
+    }
+
+    /// The compiled main step program (lazily built).
+    pub fn program(&self) -> &StepProgram {
+        self.program.get_or_init(|| pool::compile_race(&self.eng))
+    }
+
+    /// The resident pool (lazily spawned; shared when
+    /// [`OpConfig::shared_pool`] was set).
+    pub fn worker_pool(&self) -> &Arc<WorkerPool> {
+        self.pool.get_or_init(|| match &self.cfg.shared_pool {
+            Some(p) => p.clone(),
+            None => Arc::new(WorkerPool::new(self.cfg.race.threads)),
+        })
+    }
+
+    /// Map a logical-order vector into executor numbering.
+    pub fn permute(&self, v: &[f64]) -> Vec<f64> {
+        permute_vec(v, &self.total_perm)
+    }
+
+    /// Map an executor-numbered vector back to logical order.
+    pub fn unpermute(&self, v: &[f64]) -> Vec<f64> {
+        unpermute_vec(v, &self.total_perm)
+    }
+
+    /// Reference SpMV `b = A x` in logical order (independent of every
+    /// executor under test).
+    pub fn spmv_ref(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.n());
+        let xr = permute_vec(x, &self.rcm_perm);
+        unpermute_vec(&self.a_rcm.spmv_ref(&xr), &self.rcm_perm)
+    }
+
+    /// Reference powers `[A x, .., A^p x]` in logical order.
+    pub fn powers_ref(&self, x: &[f64], p: usize) -> Vec<Vec<f64>> {
+        assert_eq!(x.len(), self.n());
+        let xr = permute_vec(x, &self.rcm_perm);
+        crate::mpk::powers_ref(&self.a_rcm, &xr, p)
+            .iter()
+            .map(|y| unpermute_vec(y, &self.rcm_perm))
+            .collect()
+    }
+
+    // ---- SymmSpMV ----
+
+    /// SymmSpMV `b = A x`, logical order in and out. `b` is overwritten.
+    pub fn symmspmv(&self, x: &[f64], b: &mut [f64]) {
+        assert_eq!(x.len(), self.n());
+        assert_eq!(b.len(), self.n());
+        let xp = permute_vec(x, &self.total_perm);
+        let mut bp = vec![0.0; self.n()];
+        self.symmspmv_permuted(&xp, &mut bp);
+        for (old, &new) in self.total_perm.iter().enumerate() {
+            b[old] = bp[new as usize];
+        }
+    }
+
+    /// SymmSpMV in executor numbering (`x` pre-permuted with
+    /// [`Operator::permute`]) — the zero-copy hot path for benches and
+    /// iterative solvers. `b` is overwritten (zeroed internally).
+    pub fn symmspmv_permuted(&self, xp: &[f64], bp: &mut [f64]) {
+        assert!(
+            self.cfg.race.dist >= 2,
+            "SymmSpMV needs a distance-2 schedule (configured dist = {})",
+            self.cfg.race.dist
+        );
+        assert_eq!(xp.len(), self.n());
+        assert_eq!(bp.len(), self.n());
+        bp.iter_mut().for_each(|v| *v = 0.0);
+        match self.cfg.backend {
+            Backend::Serial => {
+                let prog = self.program();
+                for s in 0..prog.nsteps() {
+                    for u in prog.step(s) {
+                        let (lo, hi) = (u.start as usize, u.end as usize);
+                        kernels::symmspmv_range(&self.upper, xp, bp, lo, hi);
+                    }
+                }
+            }
+            Backend::Scoped => kernels::symmspmv_race(&self.eng, &self.upper, xp, bp),
+            Backend::Pool => {
+                pool::symmspmv_pool(self.worker_pool(), self.program(), &self.upper, xp, bp)
+            }
+        }
+    }
+
+    /// Multi-RHS SymmSpMV `B = A X`, logical order: one matrix sweep
+    /// serves the whole batch. Outputs are bit-identical to per-vector
+    /// [`Operator::symmspmv`] calls. Each `bs[j]` is overwritten.
+    pub fn symmspmv_multi(&self, xs: &[Vec<f64>], bs: &mut [Vec<f64>]) {
+        assert_eq!(xs.len(), bs.len());
+        let m = xs.len();
+        if m == 0 {
+            return;
+        }
+        if m == 1 {
+            self.symmspmv(&xs[0], &mut bs[0]);
+            return;
+        }
+        let n = self.n();
+        for (x, b) in xs.iter().zip(bs.iter()) {
+            assert_eq!(x.len(), n);
+            assert_eq!(b.len(), n);
+        }
+        let mut xsf = vec![0.0; n * m];
+        for (j, x) in xs.iter().enumerate() {
+            for (old, &new) in self.total_perm.iter().enumerate() {
+                xsf[new as usize * m + j] = x[old];
+            }
+        }
+        let mut bsf = vec![0.0; n * m];
+        self.symmspmv_multi_permuted(&xsf, &mut bsf, m);
+        for (j, b) in bs.iter_mut().enumerate() {
+            for (old, &new) in self.total_perm.iter().enumerate() {
+                b[old] = bsf[new as usize * m + j];
+            }
+        }
+    }
+
+    /// Multi-RHS SymmSpMV in executor numbering, vectors row-major
+    /// (`xs[row * nrhs + j]`). `bs` is overwritten (zeroed internally).
+    pub fn symmspmv_multi_permuted(&self, xsf: &[f64], bsf: &mut [f64], nrhs: usize) {
+        assert!(self.cfg.race.dist >= 2, "SymmSpMV needs a distance-2 schedule");
+        let n = self.n();
+        assert!(nrhs > 0);
+        assert_eq!(xsf.len(), n * nrhs);
+        assert_eq!(bsf.len(), n * nrhs);
+        bsf.iter_mut().for_each(|v| *v = 0.0);
+        match self.cfg.backend {
+            Backend::Serial => {
+                let prog = self.program();
+                for s in 0..prog.nsteps() {
+                    for u in prog.step(s) {
+                        kernels::symmspmv_range_multi(
+                            &self.upper,
+                            xsf,
+                            bsf,
+                            nrhs,
+                            u.start as usize,
+                            u.end as usize,
+                        );
+                    }
+                }
+            }
+            Backend::Scoped => {
+                let len = bsf.len();
+                let bp = kernels::SendPtr(bsf.as_mut_ptr());
+                run_program_scoped(self.program(), self.cfg.race.threads, |u| {
+                    // SAFETY: units of one step are distance-2
+                    // independent; disjoint row/col sets scale to
+                    // disjoint flat ranges `idx * nrhs + j`.
+                    let bs = unsafe { std::slice::from_raw_parts_mut(bp.0, len) };
+                    kernels::symmspmv_range_multi(
+                        &self.upper,
+                        xsf,
+                        bs,
+                        nrhs,
+                        u.start as usize,
+                        u.end as usize,
+                    );
+                });
+            }
+            Backend::Pool => pool::symmspmv_race_multi(
+                self.worker_pool(),
+                self.program(),
+                &self.upper,
+                xsf,
+                bsf,
+                nrhs,
+            ),
+        }
+    }
+
+    // ---- matrix powers (MPK) ----
+
+    /// The resident level-blocked schedule for power `p`, built on first
+    /// use (reusing the engine's stage-0 level construction) and cached.
+    pub fn mpk(&self, p: usize) -> Result<Arc<MpkHandle>> {
+        if p == 0 {
+            bail!("power p must be >= 1");
+        }
+        let mut cache = self.mpk.lock().unwrap();
+        if let Some(h) = cache.get(&p) {
+            return Ok(h.clone());
+        }
+        let h = Arc::new(self.build_mpk_handle(p, self.cfg.cache_bytes)?);
+        cache.insert(p, h.clone());
+        Ok(h)
+    }
+
+    /// Build an uncached handle with an explicit cache target (traffic
+    /// studies sweep this knob without disturbing the resident plans).
+    pub fn mpk_with(&self, p: usize, cache_bytes: usize) -> Result<MpkHandle> {
+        if p == 0 {
+            bail!("power p must be >= 1");
+        }
+        self.build_mpk_handle(p, cache_bytes)
+    }
+
+    fn build_mpk_handle(&self, p: usize, cache_bytes: usize) -> Result<MpkHandle> {
+        let mcfg = MpkConfig { p, cache_bytes };
+        let plan = MpkPlan::from_engine(&self.a_rcm, &self.eng, &mcfg)?;
+        let prog = pool::compile_mpk(&plan, self.cfg.race.threads);
+        let total_perm = graph::compose_perm(&self.rcm_perm, &plan.perm);
+        Ok(MpkHandle { plan, prog, total_perm })
+    }
+
+    /// Force the resident plan for power `p` to exist — callers that
+    /// batch requests surface plan errors here, before enqueueing.
+    pub fn prepare_powers(&self, p: usize) -> Result<()> {
+        self.mpk(p).map(|_| ())
+    }
+
+    /// Matrix powers `[A x, A² x, .., A^p x]` through the level-blocked
+    /// schedule, logical order in and out.
+    pub fn powers(&self, x: &[f64], p: usize) -> Result<Vec<Vec<f64>>> {
+        assert_eq!(x.len(), self.n());
+        let h = self.mpk(p)?;
+        let xp = permute_vec(x, &h.total_perm);
+        let ys = self.powers_permuted(&h, &xp);
+        Ok(ys.iter().map(|y| unpermute_vec(y, &h.total_perm)).collect())
+    }
+
+    /// Matrix powers in the plan's numbering (`xp` pre-permuted with
+    /// [`MpkHandle::permute`]) — the allocation-light path benches time.
+    pub fn powers_permuted(&self, h: &MpkHandle, xp: &[f64]) -> Vec<Vec<f64>> {
+        match self.cfg.backend {
+            Backend::Serial => kernels::mpk_powers(&h.plan, xp, 1),
+            Backend::Scoped => kernels::mpk_powers(&h.plan, xp, self.cfg.race.threads),
+            Backend::Pool => {
+                pool::mpk_powers_pool(self.worker_pool(), &h.prog, &h.plan, xp)
+            }
+        }
+    }
+
+    /// Batched matrix powers: `ys[j] = A^p xs[j]` (final power only),
+    /// logical order, one level-blocked sweep for the whole batch — the
+    /// multi-RHS variant the batched MPK serve endpoint rides on.
+    /// Bit-identical to per-vector [`Operator::powers`] calls.
+    pub fn powers_multi(&self, xs: &[Vec<f64>], p: usize) -> Result<Vec<Vec<f64>>> {
+        let m = xs.len();
+        if m == 0 {
+            return Ok(Vec::new());
+        }
+        let n = self.n();
+        for x in xs {
+            assert_eq!(x.len(), n);
+        }
+        let h = self.mpk(p)?;
+        if m == 1 {
+            let xp = permute_vec(&xs[0], &h.total_perm);
+            let ys = self.powers_permuted(&h, &xp);
+            return Ok(vec![unpermute_vec(&ys[p - 1], &h.total_perm)]);
+        }
+        let mut xsf = vec![0.0; n * m];
+        for (j, x) in xs.iter().enumerate() {
+            for (old, &new) in h.total_perm.iter().enumerate() {
+                xsf[new as usize * m + j] = x[old];
+            }
+        }
+        let ys = match self.cfg.backend {
+            Backend::Serial => kernels::mpk_powers_multi(&h.plan, &xsf, m, 1),
+            Backend::Scoped => kernels::mpk_powers_multi(&h.plan, &xsf, m, self.cfg.race.threads),
+            Backend::Pool => {
+                pool::mpk_powers_multi_pool(self.worker_pool(), &h.prog, &h.plan, &xsf, m)
+            }
+        };
+        let last = &ys[p - 1];
+        let mut out = Vec::with_capacity(m);
+        for j in 0..m {
+            let mut y = vec![0.0; n];
+            for (old, &new) in h.total_perm.iter().enumerate() {
+                y[old] = last[new as usize * m + j];
+            }
+            out.push(y);
+        }
+        Ok(out)
+    }
+
+    /// Three-term recurrence `z_{k+1} = (σ·A + τ·I) z_k + ρ·z_{k-1}` for
+    /// `p` steps through the level-blocked schedule (the Chebyshev filter
+    /// form), logical order. Returns `[z_1, .., z_p]`.
+    pub fn three_term(
+        &self,
+        z_prev: &[f64],
+        z0: &[f64],
+        sigma: f64,
+        tau: f64,
+        rho: f64,
+        p: usize,
+    ) -> Result<Vec<Vec<f64>>> {
+        let n = self.n();
+        assert_eq!(z_prev.len(), n);
+        assert_eq!(z0.len(), n);
+        let h = self.mpk(p)?;
+        let zp = permute_vec(z_prev, &h.total_perm);
+        let z0p = permute_vec(z0, &h.total_perm);
+        let zs = match self.cfg.backend {
+            Backend::Serial => kernels::mpk_three_term(&h.plan, &zp, &z0p, sigma, tau, rho, 1),
+            Backend::Scoped => {
+                kernels::mpk_three_term(&h.plan, &zp, &z0p, sigma, tau, rho, self.cfg.race.threads)
+            }
+            Backend::Pool => pool::mpk_three_term_pool(
+                self.worker_pool(),
+                &h.prog,
+                &h.plan,
+                &zp,
+                &z0p,
+                sigma,
+                tau,
+                rho,
+            ),
+        };
+        Ok(zs.iter().map(|z| unpermute_vec(z, &h.total_perm)).collect())
+    }
+
+    // ---- distance-k solver sweeps ----
+
+    /// Auxiliary schedule for dependency distance `dist` (cached).
+    fn aux_schedule(&self, dist: usize) -> Arc<AuxSchedule> {
+        let mut cache = self.aux.lock().unwrap();
+        if let Some(s) = cache.get(&dist) {
+            return s.clone();
+        }
+        let cfg = RaceConfig { dist, ..self.cfg.race.clone() };
+        let eng = RaceEngine::build(&self.a_rcm, &cfg)
+            .expect("auxiliary schedule build cannot fail for dist >= 1");
+        let prog = pool::compile_race(&eng);
+        let total_perm = graph::compose_perm(&self.rcm_perm, &eng.perm);
+        let s = Arc::new(AuxSchedule { eng, prog, total_perm });
+        cache.insert(dist, s.clone());
+        s
+    }
+
+    /// One forward Gauss–Seidel sweep `x ← x + D⁻¹(b − A x)` on a
+    /// distance-1 schedule, logical order (x is updated in place). The
+    /// colored update order differs from a natural-order sweep — as with
+    /// any colored GS — but is identical across backends.
+    pub fn gauss_seidel(&self, b: &[f64], x: &mut [f64]) {
+        self.sweep(
+            1,
+            b,
+            x,
+            kernels::solvers::gs_row,
+            kernels::gauss_seidel_race,
+            pool::gauss_seidel_pool,
+        );
+    }
+
+    /// One Kaczmarz projection sweep on a distance-2 schedule, logical
+    /// order (x is updated in place).
+    pub fn kaczmarz(&self, b: &[f64], x: &mut [f64]) {
+        self.sweep(
+            2,
+            b,
+            x,
+            kernels::solvers::kaczmarz_row,
+            kernels::kaczmarz_race,
+            pool::kaczmarz_pool,
+        );
+    }
+
+    /// Shared plumbing of the distance-k solver sweeps: pick the main or
+    /// auxiliary schedule for `dist`, permute in, dispatch one of the
+    /// three executors, permute out.
+    fn sweep(
+        &self,
+        dist: usize,
+        b: &[f64],
+        x: &mut [f64],
+        row_kernel: RowFn,
+        scoped: ScopedFn,
+        pooled: PooledFn,
+    ) {
+        let n = self.n();
+        assert_eq!(b.len(), n);
+        assert_eq!(x.len(), n);
+        let aux;
+        let (eng, prog, perm): (&RaceEngine, &StepProgram, &[u32]) = if self.cfg.race.dist == dist
+        {
+            (&self.eng, self.program(), self.total_perm.as_slice())
+        } else {
+            aux = self.aux_schedule(dist);
+            (&aux.eng, &aux.prog, aux.total_perm.as_slice())
+        };
+        let a = eng.permuted_matrix();
+        let bp = permute_vec(b, perm);
+        let mut xp = permute_vec(x, perm);
+        match self.cfg.backend {
+            Backend::Serial => {
+                for s in 0..prog.nsteps() {
+                    for u in prog.step(s) {
+                        for row in u.start as usize..u.end as usize {
+                            row_kernel(a, &bp, &mut xp, row);
+                        }
+                    }
+                }
+            }
+            Backend::Scoped => scoped(eng, a, &bp, &mut xp),
+            Backend::Pool => {
+                let wp: &WorkerPool = self.worker_pool();
+                pooled(wp, prog, a, &bp, &mut xp);
+            }
+        }
+        for (old, &new) in perm.iter().enumerate() {
+            x[old] = xp[new as usize];
+        }
+    }
+}
+
+/// Scoped-spawn execution of a step program: up to `threads` scoped
+/// threads sweep each step's units round-robin, with the scope join as
+/// the step barrier — the fork-join analogue of
+/// [`WorkerPool::execute`].
+fn run_program_scoped<F: Fn(&WorkUnit) + Sync>(prog: &StepProgram, threads: usize, f: F) {
+    for s in 0..prog.nsteps() {
+        let units = prog.step(s);
+        let nt = threads.min(units.len()).max(1);
+        if nt <= 1 {
+            for u in units {
+                f(u);
+            }
+            continue;
+        }
+        std::thread::scope(|sc| {
+            let fref = &f;
+            for t in 1..nt {
+                sc.spawn(move || {
+                    let mut i = t;
+                    while i < units.len() {
+                        fref(&units[i]);
+                        i += nt;
+                    }
+                });
+            }
+            let mut i = 0;
+            while i < units.len() {
+                f(&units[i]);
+                i += nt;
+            }
+        });
+    }
+}
+
+/// Upper-triangle storage (diagonal leading each row) for a matrix that
+/// is *not* owned by an [`Operator`] — baseline color schedules (MC /
+/// ABMC) and raw-kernel studies build their SymmSpMV input through this
+/// instead of hand-rolling the extraction.
+pub fn upper(a: &Csr) -> Csr {
+    a.upper_triangle()
+}
+
+/// Vector-relative error between two logical-order vectors: max absolute
+/// difference over `1 + max|want|` — the facade-era counterpart of
+/// `mpk::rel_err_vs_ref` with the permutation plumbing gone.
+pub fn rel_err(want: &[f64], got: &[f64]) -> f64 {
+    debug_assert_eq!(want.len(), got.len());
+    let scale = want.iter().fold(0f64, |m, w| m.max(w.abs()));
+    let mut err = 0f64;
+    for (w, g) in want.iter().zip(got) {
+        err = err.max((w - g).abs());
+    }
+    err / (1.0 + scale)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen;
+
+    #[test]
+    fn build_rejects_degenerate_inputs() {
+        let a = gen::stencil2d_5pt(6, 6);
+        assert!(Operator::build(&a, OpConfig::new()).is_ok());
+        // non-symmetric matrix
+        let mut coo = crate::sparse::Coo::new(3);
+        coo.push(0, 1, 1.0);
+        for i in 0..3 {
+            coo.push(i, i, 2.0);
+        }
+        let asym = coo.to_csr();
+        assert!(Operator::build(&asym, OpConfig::new()).is_err());
+        // bad powers
+        let op = Operator::build(&a, OpConfig::new().threads(2)).unwrap();
+        assert!(op.mpk(0).is_err());
+        assert!(op.prepare_powers(2).is_ok());
+        assert!(op.mpk_with(3, 4 << 10).is_ok());
+    }
+
+    #[test]
+    fn logical_order_round_trip() {
+        let a = gen::delaunay_like(8, 8, 3);
+        let n = a.nrows();
+        let op = Operator::build(&a, OpConfig::new().threads(3)).unwrap();
+        let x: Vec<f64> = (0..n).map(|i| (i as f64 * 0.7).sin()).collect();
+        assert_eq!(op.unpermute(&op.permute(&x)), x);
+        let want = a.spmv_ref(&x);
+        let mut b = vec![0.0; n];
+        op.symmspmv(&x, &mut b);
+        assert!(rel_err(&want, &b) < 1e-9, "err {:.2e}", rel_err(&want, &b));
+        // spmv_ref agrees with the original-ordering reference
+        assert!(rel_err(&want, &op.spmv_ref(&x)) < 1e-12);
+    }
+
+    #[test]
+    fn helpers_cover_baseline_paths() {
+        let a = gen::stencil2d_5pt(7, 7);
+        let u = upper(&a);
+        assert_eq!(u.nrows(), 49);
+        let x = vec![1.0; 49];
+        let mut b = vec![0.0; 49];
+        kernels::symmspmv_serial(&u, &x, &mut b);
+        assert!(rel_err(&a.spmv_ref(&x), &b) < 1e-12);
+    }
+}

@@ -148,6 +148,72 @@ pub fn mpk_execute_pool(
     });
 }
 
+/// Multi-RHS counterpart of [`mpk_execute_pool`]: every buffer holds
+/// `nrhs` vectors row-major (`bufs[w][row * nrhs + j]`), one sweep per
+/// step advances the whole batch (pool counterpart of
+/// [`kernels::mpk_execute_multi`]).
+#[allow(clippy::too_many_arguments)]
+pub fn mpk_execute_multi_pool(
+    pool: &WorkerPool,
+    prog: &StepProgram,
+    plan: &MpkPlan,
+    bufs: &mut [Vec<f64>],
+    nrhs: usize,
+    base: usize,
+    sigma: f64,
+    tau: f64,
+    rho: f64,
+) {
+    let a = plan.permuted_matrix();
+    let n = a.nrows();
+    assert!(nrhs > 0);
+    assert_eq!(bufs.len(), base + plan.cfg.p + 1, "need base + p + 1 vector blocks");
+    assert!(rho == 0.0 || base >= 1, "three-term recurrence needs base >= 1");
+    for b in bufs.iter() {
+        assert_eq!(b.len(), n * nrhs);
+    }
+    let len = n * nrhs;
+    let ptrs: Vec<SendPtr> = bufs.iter_mut().map(|b| SendPtr(b.as_mut_ptr())).collect();
+    pool.execute(prog, |u| {
+        let k = u.power as usize;
+        debug_assert!(k >= 1 && base + k < ptrs.len());
+        // SAFETY: same argument as `mpk_execute_pool`, scaled to flat
+        // ranges `row * nrhs + j` — disjoint row chunks stay disjoint.
+        let src = unsafe { std::slice::from_raw_parts(ptrs[base + k - 1].0 as *const f64, len) };
+        let dst = unsafe { std::slice::from_raw_parts_mut(ptrs[base + k].0, len) };
+        let acc = if rho != 0.0 {
+            Some(unsafe { std::slice::from_raw_parts(ptrs[base + k - 2].0 as *const f64, len) })
+        } else {
+            None
+        };
+        let (lo, hi) = (u.start as usize, u.end as usize);
+        kernels::spmv_range_affine_multi(a, src, acc, dst, nrhs, sigma, tau, rho, lo, hi);
+    });
+}
+
+/// Multi-RHS level-blocked matrix powers on the pool: returns one flat
+/// block per power, `out[k - 1][row * nrhs + j]` (pool counterpart of
+/// [`kernels::mpk_powers_multi`]).
+pub fn mpk_powers_multi_pool(
+    pool: &WorkerPool,
+    prog: &StepProgram,
+    plan: &MpkPlan,
+    xs: &[f64],
+    nrhs: usize,
+) -> Vec<Vec<f64>> {
+    let p = plan.cfg.p;
+    let n = plan.permuted_matrix().nrows();
+    assert_eq!(xs.len(), n * nrhs);
+    let mut bufs = Vec::with_capacity(p + 1);
+    bufs.push(xs.to_vec());
+    for _ in 0..p {
+        bufs.push(vec![0.0; n * nrhs]);
+    }
+    mpk_execute_multi_pool(pool, prog, plan, &mut bufs, nrhs, 0, 1.0, 0.0, 0.0);
+    bufs.remove(0);
+    bufs
+}
+
 /// Level-blocked matrix powers on the pool: returns `[A x, .., A^p x]` in
 /// the plan's permuted numbering (pool counterpart of
 /// [`kernels::mpk_powers`]).
@@ -271,6 +337,31 @@ mod tests {
                 assert_eq!(ys[k], scoped[k], "k={k} t={threads}: pool vs scoped");
                 let err = crate::mpk::rel_err_vs_ref(&want[k], &ys[k], &plan.perm);
                 assert!(err <= 1e-9, "k={k} t={threads}: err {err:.2e}");
+            }
+        }
+    }
+
+    #[test]
+    fn pool_multi_powers_match_single_powers() {
+        let a = gen::stencil2d_9pt(18, 14);
+        let n = a.nrows();
+        let nrhs = 4usize;
+        let plan = MpkPlan::build(&a, &MpkConfig { p: 3, cache_bytes: 8 << 10 }).unwrap();
+        let mut xs = vec![0f64; n * nrhs];
+        for row in 0..n {
+            for j in 0..nrhs {
+                xs[row * nrhs + j] = ((row * (j + 3) + 7 * j) % 17) as f64 * 0.2 - 1.5;
+            }
+        }
+        let pool = WorkerPool::new(3);
+        let prog = compile_mpk(&plan, 3);
+        let ys = mpk_powers_multi_pool(&pool, &prog, &plan, &xs, nrhs);
+        for j in 0..nrhs {
+            let x: Vec<f64> = (0..n).map(|row| xs[row * nrhs + j]).collect();
+            let single = mpk_powers_pool(&pool, &prog, &plan, &x);
+            for k in 0..3 {
+                let got: Vec<f64> = (0..n).map(|row| ys[k][row * nrhs + j]).collect();
+                assert_eq!(single[k], got, "rhs {j} power {}", k + 1);
             }
         }
     }

@@ -1,29 +1,34 @@
 //! SymmSpMV / MPK as a resident network service.
 //!
-//! Grown out of the original `coordinator::serve` loop into a real
-//! subsystem:
+//! The service is a thin front end over the [`Operator`] facade:
 //!
 //! * **Multi-matrix registry** — each registered matrix spec is compiled
-//!   once (RCM → RACE engine → upper triangle → pool step program) and
-//!   stays resident; requests route by `"matrix"` name and default to
-//!   the first registered matrix.
+//!   once into a resident [`Operator`] (RCM → RACE engine → upper
+//!   triangle → pool step program, MPK plans lazily per power inside the
+//!   handle); requests route by `"matrix"` name and default to the first
+//!   registered matrix. All operators share one persistent
+//!   [`WorkerPool`].
 //! * **Batched execution** — concurrent SymmSpMV requests for the same
 //!   matrix coalesce in a [`batch::Batcher`] and are answered by one
-//!   [`crate::pool::symmspmv_race_multi`] sweep (`B = A X`): the matrix
-//!   traffic that dominates SymmSpMV is paid once per micro-batch
-//!   instead of once per request.
-//! * **MPK endpoint** — `{"x": [..], "p": k}` computes `y = A^k x` on a
-//!   resident level-blocked [`MpkPlan`] (plans are built lazily per
-//!   power and cached).
+//!   [`Operator::symmspmv_multi`] sweep (`B = A X`); concurrent MPK
+//!   requests for the same `(matrix, power)` coalesce the same way onto
+//!   [`Operator::powers_multi`], amortizing the level-block traffic
+//!   across the batch. An optional dynamic batching window
+//!   (`--batch-window-us`, capped at the last measured kernel latency)
+//!   coalesces medium-load traffic that wouldn't naturally overlap.
+//! * **Validation before enqueue** — shape and non-finite checks (and
+//!   MPK plan construction) run on the request thread *before* the
+//!   vector joins a batch, so one bad request is answered with a
+//!   structured error and can never poison a drained batch.
 //! * **Structured errors and stats** — malformed requests, non-finite
 //!   inputs, unknown matrices and out-of-range powers answer
 //!   `{"error": {"code", "message"}}`; `{"stats": true}` reports
 //!   request/batch counters.
 //!
-//! All kernels run on one shared persistent [`WorkerPool`]; building a
-//! service is the only time threads are spawned. The TCP front end
-//! (newline-delimited JSON, graceful shutdown, `--max-requests`) lives
-//! in [`server`].
+//! Vectors cross the protocol in the matrix's original (logical) row
+//! numbering; permutations live entirely inside the operator handles.
+//! The TCP front end (newline-delimited JSON, graceful shutdown,
+//! `--max-requests`) lives in [`server`].
 
 mod batch;
 mod server;
@@ -31,12 +36,9 @@ mod server;
 pub use batch::BatchResult;
 pub use server::{serve, Server};
 
-use crate::coordinator::{permute_vec, resolve_matrix, unpermute_vec};
-use crate::graph;
-use crate::mpk::{MpkConfig, MpkPlan};
-use crate::pool::{self, StepProgram, WorkerPool};
-use crate::race::{RaceConfig, RaceEngine};
-use crate::sparse::Csr;
+use crate::coordinator::resolve_matrix;
+use crate::op::{OpConfig, Operator};
+use crate::pool::WorkerPool;
 use crate::util::json::Json;
 use anyhow::{Context, Result};
 use std::collections::HashMap;
@@ -62,6 +64,9 @@ pub struct ServeOptions {
     pub mpk_power_max: usize,
     /// Cache-size target for resident MPK plans.
     pub mpk_cache_bytes: usize,
+    /// Dynamic batching window in microseconds (0 = natural batching
+    /// only). Leaders wait at most `min(window, last kernel latency)`.
+    pub batch_window_us: u64,
 }
 
 impl Default for ServeOptions {
@@ -74,6 +79,7 @@ impl Default for ServeOptions {
             max_requests: None,
             mpk_power_max: 8,
             mpk_cache_bytes: 2 << 20,
+            batch_window_us: 0,
         }
     }
 }
@@ -111,37 +117,33 @@ impl std::fmt::Display for ServeError {
 
 impl std::error::Error for ServeError {}
 
-/// One registered matrix: compiled schedules + aggregation state.
+/// One registered matrix: a resident [`Operator`] plus its aggregation
+/// state (one batcher for SymmSpMV, one per MPK power).
 pub struct MatrixEntry {
     /// Registry name (the spec it was resolved from).
     pub name: String,
     /// Matrix dimension.
     pub n: usize,
-    eng: RaceEngine,
-    upper: Csr,
-    program: StepProgram,
-    /// RCM ∘ RACE permutation, original -> executor numbering.
-    total_perm: Vec<u32>,
-    /// RCM permutation alone (MPK plans are built on the RCM matrix).
-    rcm_perm: Vec<u32>,
-    /// The RCM-permuted matrix (kept for lazy MPK plan builds).
-    a_rcm: Csr,
-    mpk: Mutex<HashMap<usize, Arc<MpkResident>>>,
+    op: Operator,
     batcher: batch::Batcher,
+    mpk_batchers: Mutex<HashMap<usize, Arc<batch::Batcher>>>,
 }
 
 impl MatrixEntry {
     /// RACE parallel efficiency of the resident schedule.
     pub fn eta(&self) -> f64 {
-        self.eng.efficiency()
+        self.op.eta()
     }
-}
 
-struct MpkResident {
-    plan: MpkPlan,
-    prog: StepProgram,
-    /// RCM ∘ level permutation, original -> plan numbering.
-    total_perm: Vec<u32>,
+    /// The resident operator handle.
+    pub fn op(&self) -> &Operator {
+        &self.op
+    }
+
+    fn mpk_batcher(&self, p: usize, window_us: u64) -> Arc<batch::Batcher> {
+        let mut map = self.mpk_batchers.lock().unwrap();
+        map.entry(p).or_insert_with(|| Arc::new(batch::Batcher::with_window_us(window_us))).clone()
+    }
 }
 
 #[derive(Default)]
@@ -152,58 +154,55 @@ struct ServiceStats {
     mpk_requests: AtomicU64,
     batches: AtomicU64,
     batched_vectors: AtomicU64,
+    mpk_batches: AtomicU64,
+    mpk_batched_vectors: AtomicU64,
     max_batch: AtomicU64,
     /// Total kernel nanoseconds (matvec batches + MPK sweeps).
     kernel_nanos: AtomicU64,
 }
 
-/// The resident service: registry + pool, shared across connections.
+/// The resident service: operator registry + shared pool, shared across
+/// connections.
 pub struct MatvecService {
-    pool: WorkerPool,
     entries: Vec<Arc<MatrixEntry>>,
     threads: usize,
     mpk_power_max: usize,
-    mpk_cache_bytes: usize,
+    batch_window_us: u64,
     stats: ServiceStats,
 }
 
 impl MatvecService {
-    /// Compile every registered matrix and start the worker pool.
+    /// Compile every registered matrix into a resident operator (all
+    /// sharing one worker pool).
     pub fn build(opts: &ServeOptions) -> Result<MatvecService> {
         anyhow::ensure!(!opts.matrices.is_empty(), "serve needs at least one --matrix spec");
         let threads = opts.threads.max(1);
+        let pool = Arc::new(WorkerPool::new(threads));
         let mut entries = Vec::with_capacity(opts.matrices.len());
         for spec in &opts.matrices {
             let (name, a0) = resolve_matrix(spec, opts.small)
                 .with_context(|| format!("registering matrix {spec:?}"))?;
-            let rcm_perm = graph::rcm(&a0);
-            let a_rcm = a0.permute_symmetric(&rcm_perm);
-            let cfg = RaceConfig { threads, ..Default::default() };
-            let eng = RaceEngine::build(&a_rcm, &cfg)
-                .with_context(|| format!("RACE build for {spec:?}"))?;
-            let upper = eng.permuted_matrix().upper_triangle();
-            let program = pool::compile_race(&eng);
-            let total_perm = graph::compose_perm(&rcm_perm, &eng.perm);
-            let n = a_rcm.nrows();
+            let op = Operator::build(
+                &a0,
+                OpConfig::new()
+                    .threads(threads)
+                    .cache_bytes(opts.mpk_cache_bytes.max(1))
+                    .shared_pool(pool.clone()),
+            )
+            .with_context(|| format!("compiling operator for {spec:?}"))?;
             entries.push(Arc::new(MatrixEntry {
                 name,
-                n,
-                eng,
-                upper,
-                program,
-                total_perm,
-                rcm_perm,
-                a_rcm,
-                mpk: Mutex::new(HashMap::new()),
-                batcher: batch::Batcher::new(),
+                n: op.n(),
+                op,
+                batcher: batch::Batcher::with_window_us(opts.batch_window_us),
+                mpk_batchers: Mutex::new(HashMap::new()),
             }));
         }
         Ok(MatvecService {
-            pool: WorkerPool::new(threads),
             entries,
             threads,
             mpk_power_max: opts.mpk_power_max.max(1),
-            mpk_cache_bytes: opts.mpk_cache_bytes.max(1),
+            batch_window_us: opts.batch_window_us,
             stats: ServiceStats::default(),
         })
     }
@@ -232,6 +231,8 @@ impl MatvecService {
         }
     }
 
+    /// Shape + finiteness validation. Runs on the request thread
+    /// *before* the vector is enqueued into any batch.
     fn check_input(entry: &MatrixEntry, x: &[f64]) -> Result<(), ServeError> {
         if x.len() != entry.n {
             return Err(ServeError::new(
@@ -259,9 +260,8 @@ impl MatvecService {
         let entry = self.entry(name)?;
         Self::check_input(entry, x)?;
         self.stats.matvecs.fetch_add(1, Ordering::Relaxed);
-        let xp = permute_vec(x, &entry.total_perm);
-        let r = entry.batcher.matvec(xp, |xs| self.run_batch(entry, xs));
-        Ok((unpermute_vec(&r.b, &entry.total_perm), r.seconds, r.batch))
+        let r = entry.batcher.matvec(x.to_vec(), |xs| self.run_batch(entry, xs));
+        Ok((r.b, r.seconds, r.batch))
     }
 
     /// Run one whole micro-batch directly (bench/test entry; bypasses the
@@ -275,52 +275,44 @@ impl MatvecService {
         if xs.is_empty() {
             return Ok(Vec::new());
         }
-        for x in xs {
-            Self::check_input(entry, x)?;
+        for (j, x) in xs.iter().enumerate() {
+            Self::check_input(entry, x)
+                .map_err(|e| ServeError::new(e.code, format!("vector {j}: {}", e.message)))?;
         }
-        let xps: Vec<Vec<f64>> = xs.iter().map(|x| permute_vec(x, &entry.total_perm)).collect();
-        let (bps, _) = self.run_batch(entry, &xps);
-        Ok(bps.into_iter().map(|bp| unpermute_vec(&bp, &entry.total_perm)).collect())
+        let (bs, _) = self.run_batch(entry, xs);
+        Ok(bs)
     }
 
-    /// Leader-side batch execution: one pool sweep for the whole batch.
-    /// Inputs/outputs in executor (permuted) numbering.
+    /// Leader-side batch execution: one facade sweep for the whole batch
+    /// (logical order throughout — the operator permutes internally).
+    /// The reported seconds cover the whole batch *service* — permute,
+    /// pack, kernel, unpack — which is deliberately also the quantity
+    /// the dynamic batching window caps at: a leader may wait at most
+    /// one full batch-service time, not just one raw kernel sweep.
     fn run_batch(&self, entry: &MatrixEntry, xs: &[Vec<f64>]) -> (Vec<Vec<f64>>, f64) {
         let n = entry.n;
         let m = xs.len();
         let t0 = std::time::Instant::now();
-        let out = if m == 1 {
-            let mut b = vec![0.0; n];
-            pool::symmspmv_pool(&self.pool, &entry.program, &entry.upper, &xs[0], &mut b);
-            vec![b]
-        } else {
-            // pack row-major so one matrix sweep serves all m vectors
-            let mut xsf = vec![0f64; n * m];
-            for (j, x) in xs.iter().enumerate() {
-                for row in 0..n {
-                    xsf[row * m + j] = x[row];
-                }
-            }
-            let mut bsf = vec![0f64; n * m];
-            pool::symmspmv_race_multi(&self.pool, &entry.program, &entry.upper, &xsf, &mut bsf, m);
-            (0..m).map(|j| (0..n).map(|row| bsf[row * m + j]).collect()).collect()
-        };
+        let mut bs: Vec<Vec<f64>> = (0..m).map(|_| vec![0.0; n]).collect();
+        entry.op.symmspmv_multi(xs, &mut bs);
         let dt = t0.elapsed();
         self.stats.batches.fetch_add(1, Ordering::Relaxed);
         self.stats.batched_vectors.fetch_add(m as u64, Ordering::Relaxed);
         self.stats.max_batch.fetch_max(m as u64, Ordering::Relaxed);
         self.stats.kernel_nanos.fetch_add(dt.as_nanos() as u64, Ordering::Relaxed);
-        (out, dt.as_secs_f64())
+        (bs, dt.as_secs_f64())
     }
 
-    /// Serve one MPK request `y = A^p x` (original indexing) on the
-    /// resident plan for power `p` (built and cached on first use).
+    /// Serve one MPK request `y = A^p x` (original indexing). Concurrent
+    /// requests for the same `(matrix, p)` coalesce into one multi-RHS
+    /// level-blocked sweep; returns the result plus kernel seconds and
+    /// the batch size it rode in.
     pub fn mpk(
         &self,
         name: Option<&str>,
         x: &[f64],
         p: usize,
-    ) -> Result<(Vec<f64>, f64), ServeError> {
+    ) -> Result<(Vec<f64>, f64, usize), ServeError> {
         let entry = self.entry(name)?;
         Self::check_input(entry, x)?;
         if p == 0 || p > self.mpk_power_max {
@@ -329,33 +321,25 @@ impl MatvecService {
                 format!("power must be in 1..={}, got {p}", self.mpk_power_max),
             ));
         }
-        self.stats.mpk_requests.fetch_add(1, Ordering::Relaxed);
-        let res = self.mpk_resident(entry, p)?;
-        let xp = permute_vec(x, &res.total_perm);
-        let t0 = std::time::Instant::now();
-        let ys = pool::mpk_powers_pool(&self.pool, &res.prog, &res.plan, &xp);
-        let dt = t0.elapsed();
-        self.stats.kernel_nanos.fetch_add(dt.as_nanos() as u64, Ordering::Relaxed);
-        Ok((unpermute_vec(&ys[p - 1], &res.total_perm), dt.as_secs_f64()))
-    }
-
-    fn mpk_resident(
-        &self,
-        entry: &MatrixEntry,
-        p: usize,
-    ) -> Result<Arc<MpkResident>, ServeError> {
-        let mut cache = entry.mpk.lock().unwrap();
-        if let Some(r) = cache.get(&p) {
-            return Ok(r.clone());
-        }
-        let cfg = MpkConfig { p, cache_bytes: self.mpk_cache_bytes };
-        let plan = MpkPlan::from_engine(&entry.a_rcm, &entry.eng, &cfg)
+        // surface plan-construction failures before enqueueing, so a
+        // failing build cannot take a whole batch down with it
+        entry
+            .op
+            .prepare_powers(p)
             .map_err(|e| ServeError::new("internal", format!("MPK plan: {e}")))?;
-        let prog = pool::compile_mpk(&plan, self.threads);
-        let total_perm = graph::compose_perm(&entry.rcm_perm, &plan.perm);
-        let res = Arc::new(MpkResident { plan, prog, total_perm });
-        cache.insert(p, res.clone());
-        Ok(res)
+        self.stats.mpk_requests.fetch_add(1, Ordering::Relaxed);
+        let batcher = entry.mpk_batcher(p, self.batch_window_us);
+        let r = batcher.matvec(x.to_vec(), |xs| {
+            let t0 = std::time::Instant::now();
+            let ys = entry.op.powers_multi(xs, p).expect("plan prepared before enqueue");
+            let dt = t0.elapsed();
+            self.stats.mpk_batches.fetch_add(1, Ordering::Relaxed);
+            self.stats.mpk_batched_vectors.fetch_add(xs.len() as u64, Ordering::Relaxed);
+            self.stats.max_batch.fetch_max(xs.len() as u64, Ordering::Relaxed);
+            self.stats.kernel_nanos.fetch_add(dt.as_nanos() as u64, Ordering::Relaxed);
+            (ys, dt.as_secs_f64())
+        });
+        Ok((r.b, r.seconds, r.batch))
     }
 
     /// Stats snapshot as JSON.
@@ -371,8 +355,8 @@ impl MatvecService {
                     ("name", Json::Str(e.name.clone())),
                     ("rows", Json::Num(e.n as f64)),
                     ("eta", Json::Num(e.eta())),
-                    ("steps", Json::Num(e.program.nsteps() as f64)),
-                    ("units", Json::Num(e.program.nunits() as f64)),
+                    ("steps", Json::Num(e.op.program().nsteps() as f64)),
+                    ("units", Json::Num(e.op.program().nunits() as f64)),
                 ])
             })
             .collect();
@@ -389,6 +373,14 @@ impl MatvecService {
                 ("batches", Json::Num(batches as f64)),
                 ("batched_vectors", Json::Num(vectors as f64)),
                 ("avg_batch", Json::Num(avg)),
+                (
+                    "mpk_batches",
+                    Json::Num(self.stats.mpk_batches.load(Ordering::Relaxed) as f64),
+                ),
+                (
+                    "mpk_batched_vectors",
+                    Json::Num(self.stats.mpk_batched_vectors.load(Ordering::Relaxed) as f64),
+                ),
                 ("max_batch", Json::Num(self.stats.max_batch.load(Ordering::Relaxed) as f64)),
                 (
                     "kernel_seconds",
@@ -446,10 +438,11 @@ impl MatvecService {
                 .filter(|p| p.fract() == 0.0 && *p >= 1.0)
                 .ok_or_else(|| ServeError::new("bad_power", "\"p\" must be a positive integer"))?
                 as usize;
-            let (y, secs) = self.mpk(name, &x, p)?;
+            let (y, secs, m) = self.mpk(name, &x, p)?;
             let resp = Json::obj(vec![
                 ("y", Json::arr_f64(&y)),
                 ("p", Json::Num(p as f64)),
+                ("batch", Json::Num(m as f64)),
                 ("seconds", Json::Num(secs)),
             ]);
             return Ok((resp.to_string(), false));
@@ -478,6 +471,12 @@ mod tests {
         }
     }
 
+    /// Rebuild the original (unpermuted) matrix behind a registry entry —
+    /// the reference every logical-order response is checked against.
+    fn original(spec: &str) -> crate::sparse::Csr {
+        resolve_matrix(spec, true).unwrap().1
+    }
+
     #[test]
     fn registry_routes_by_name_and_rejects_unknown() {
         let svc = MatvecService::build(&opts(&["stencil2d:8x8", "graphene:6x6"])).unwrap();
@@ -493,14 +492,19 @@ mod tests {
     fn matvec_matches_reference_on_both_matrices() {
         let svc = MatvecService::build(&opts(&["stencil2d:8x8", "spin:6"])).unwrap();
         for e in svc.entries() {
+            let a0 = original(&e.name);
             let x: Vec<f64> = (0..e.n).map(|i| ((i * 5 + 1) % 9) as f64 * 0.3 - 1.0).collect();
             let (b, _, m) = svc.matvec(Some(e.name.as_str()), &x).unwrap();
             assert_eq!(m, 1);
-            // reference on the RCM matrix in original indexing
-            let want = e.a_rcm.spmv_ref(&permute_vec(&x, &e.rcm_perm));
-            for (old, &new) in e.rcm_perm.iter().enumerate() {
-                let w = want[new as usize];
-                assert!((b[old] - w).abs() < 1e-9 * (1.0 + w.abs()), "{} row {old}", e.name);
+            // responses are in logical order: compare directly against
+            // the reference SpMV on the original matrix
+            let want = a0.spmv_ref(&x);
+            for i in 0..e.n {
+                assert!(
+                    (b[i] - want[i]).abs() < 1e-9 * (1.0 + want[i].abs()),
+                    "{} row {i}",
+                    e.name
+                );
             }
         }
     }
@@ -536,6 +540,11 @@ mod tests {
         x[3] = f64::INFINITY;
         assert_eq!(svc.matvec(None, &x).unwrap_err().code, "nonfinite_input");
         assert_eq!(svc.matvec(None, &[1.0, 2.0]).unwrap_err().code, "bad_request");
+        // batch-entry validation reports the offending vector index
+        let bad = vec![vec![1.0; n], x.clone()];
+        let err = svc.matvec_batch(None, &bad).unwrap_err();
+        assert_eq!(err.code, "nonfinite_input");
+        assert!(err.message.contains("vector 1"), "{}", err.message);
         // through the JSON front door: 1e999 parses to +inf
         let (resp, _) = svc.handle(&format!("{{\"x\": [{}1e999]}}", "1, ".repeat(n - 1)));
         assert!(resp.contains("nonfinite_input"), "{resp}");
@@ -547,23 +556,82 @@ mod tests {
     }
 
     #[test]
+    fn bad_vector_cannot_poison_concurrent_batch() {
+        // One client submits a NaN vector while others submit good ones:
+        // the bad request is rejected before it can join a batch, and
+        // every good request is answered correctly.
+        let svc = Arc::new(MatvecService::build(&opts(&["stencil2d:10x10"])).unwrap());
+        let n = svc.entries()[0].n;
+        let mut handles = Vec::new();
+        for t in 0..6usize {
+            let svc = svc.clone();
+            handles.push(std::thread::spawn(move || {
+                if t == 0 {
+                    let mut x = vec![1.0; n];
+                    x[n / 2] = f64::NAN;
+                    let err = svc.matvec(None, &x).unwrap_err();
+                    assert_eq!(err.code, "nonfinite_input");
+                } else {
+                    let x = vec![t as f64; n];
+                    let (b, _, _) = svc.matvec(None, &x).unwrap();
+                    // rows sum to 1 -> b == x, and every entry is finite
+                    for (i, v) in b.iter().enumerate() {
+                        assert!((v - t as f64).abs() < 1e-9, "t={t} row {i}: {v}");
+                    }
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
     fn mpk_endpoint_matches_reference_powers() {
         let svc = MatvecService::build(&opts(&["stencil2d:10x10"])).unwrap();
         let e = &svc.entries()[0];
+        let a0 = original(&e.name);
         let x: Vec<f64> = (0..e.n).map(|i| ((i % 7) as f64) * 0.5 - 1.5).collect();
         for p in 1..=3usize {
-            let (y, _) = svc.mpk(None, &x, p).unwrap();
-            // reference on the RCM matrix, mapped back to original order
-            let want = powers_ref(&e.a_rcm, &permute_vec(&x, &e.rcm_perm), p);
-            let scale =
-                1.0 + want[p - 1].iter().fold(0f64, |m, v| m.max(v.abs()));
-            for (old, &new) in e.rcm_perm.iter().enumerate() {
-                let w = want[p - 1][new as usize];
-                assert!((y[old] - w).abs() / scale < 1e-9, "p={p} row {old}: {} vs {w}", y[old]);
+            let (y, _, _) = svc.mpk(None, &x, p).unwrap();
+            // logical order: compare against p reference sweeps directly
+            let want = powers_ref(&a0, &x, p);
+            let scale = 1.0 + want[p - 1].iter().fold(0f64, |m, v| m.max(v.abs()));
+            for i in 0..e.n {
+                let w = want[p - 1][i];
+                assert!((y[i] - w).abs() / scale < 1e-9, "p={p} row {i}: {} vs {w}", y[i]);
             }
         }
         assert_eq!(svc.mpk(None, &x, 0).unwrap_err().code, "bad_power");
         assert_eq!(svc.mpk(None, &x, 99).unwrap_err().code, "bad_power");
+    }
+
+    #[test]
+    fn concurrent_mpk_requests_batch_on_one_plan() {
+        let svc = Arc::new(MatvecService::build(&opts(&["stencil2d:10x10"])).unwrap());
+        let n = svc.entries()[0].n;
+        let mut handles = Vec::new();
+        for t in 0..6usize {
+            let svc = svc.clone();
+            handles.push(std::thread::spawn(move || {
+                let x = vec![(t + 1) as f64; n];
+                let (y, _, m) = svc.mpk(None, &x, 2).unwrap();
+                // rows sum to 1 -> A^2 x == x
+                for (i, v) in y.iter().enumerate() {
+                    assert!((v - (t + 1) as f64).abs() < 1e-9, "t={t} row {i}: {v}");
+                }
+                m
+            }));
+        }
+        let mut served = 0u64;
+        for h in handles {
+            assert!(h.join().unwrap() >= 1);
+            served += 1;
+        }
+        assert_eq!(served, 6);
+        let s = svc.stats_json();
+        let stats = s.get("stats").unwrap();
+        assert_eq!(stats.get("mpk_batched_vectors").and_then(Json::as_f64), Some(6.0));
     }
 
     #[test]
@@ -582,12 +650,14 @@ mod tests {
         let j = Json::parse(&resp).unwrap();
         let y = j.get("y").and_then(|v| v.as_f64_arr()).unwrap();
         assert!(y.iter().all(|v| (v - 1.0).abs() < 1e-9), "{resp}");
+        assert_eq!(j.get("batch").and_then(Json::as_f64), Some(1.0));
         // stats reflects the traffic
         let (resp, _) = svc.handle("{\"stats\": true}");
         let j = Json::parse(&resp).unwrap();
         let s = j.get("stats").unwrap();
         assert_eq!(s.get("matvecs").and_then(Json::as_f64), Some(1.0));
         assert_eq!(s.get("mpk_requests").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(s.get("mpk_batches").and_then(Json::as_f64), Some(1.0));
         assert!(s.get("requests").and_then(Json::as_f64).unwrap() >= 3.0);
         // shutdown ack
         let (resp, stop) = svc.handle("{\"shutdown\": true}");
@@ -627,5 +697,17 @@ mod tests {
         let s = svc.stats_json();
         let stats = s.get("stats").unwrap();
         assert_eq!(stats.get("batched_vectors").and_then(Json::as_f64), Some(8.0));
+    }
+
+    #[test]
+    fn batch_window_option_still_serves_correctly() {
+        let mut o = opts(&["stencil2d:6x6"]);
+        o.batch_window_us = 2_000;
+        let svc = MatvecService::build(&o).unwrap();
+        let n = svc.entries()[0].n;
+        let ones = vec![1.0; n];
+        let (b, _, m) = svc.matvec(None, &ones).unwrap();
+        assert!(m >= 1);
+        assert!(b.iter().all(|v| (v - 1.0).abs() < 1e-9));
     }
 }

@@ -1,0 +1,290 @@
+//! `Operator` facade properties: every backend (`Serial` / `Scoped` /
+//! `Pool`) must produce **bit-identical** results on every generator
+//! family, for threads ∈ {1, 2, 4} and MPK powers p ∈ 1..4 — and all of
+//! them must match the plain `spmv_ref` / `powers_ref` references in
+//! logical (pre-permutation) order, proving the facade's internal
+//! permutation plumbing is transparent.
+
+use race::gen;
+use race::op::{self, Backend, OpConfig, Operator};
+use race::sparse::Csr;
+
+const THREADS: [usize; 3] = [1, 2, 4];
+const BACKENDS: [Backend; 3] = [Backend::Serial, Backend::Scoped, Backend::Pool];
+
+/// One matrix per generator family.
+fn families() -> Vec<(&'static str, Csr)> {
+    vec![
+        ("stencil5", gen::stencil2d_5pt(16, 13)),
+        ("stencil9", gen::stencil2d_9pt(12, 11)),
+        ("paperstencil", gen::race_paper_stencil(16, 16)),
+        ("spin", gen::spin_chain_xxz(8, gen::SpinKind::XXZ)),
+        ("graphene", gen::graphene(8, 8)),
+        ("delaunay", gen::delaunay_like(10, 10, 7)),
+        ("band", gen::dense_band(150, 30, 120, 2)),
+    ]
+}
+
+/// One operator per backend, identically configured otherwise.
+fn ops(a: &Csr, threads: usize) -> Vec<(Backend, Operator)> {
+    BACKENDS
+        .iter()
+        .map(|&bk| {
+            let cfg = OpConfig::new().threads(threads).backend(bk).cache_bytes(8 << 10);
+            (bk, Operator::build(a, cfg).unwrap())
+        })
+        .collect()
+}
+
+#[test]
+fn symmspmv_bit_identical_across_backends_and_matches_reference() {
+    for (name, a) in families() {
+        let n = a.nrows();
+        let x: Vec<f64> = (0..n).map(|i| ((i * 13 + 5) % 23) as f64 * 0.2 - 2.0).collect();
+        // logical-order reference on the ORIGINAL matrix: no permutation
+        // plumbing on the caller side at all
+        let want = a.spmv_ref(&x);
+        for threads in THREADS {
+            let mut results: Vec<(Backend, Vec<f64>)> = Vec::new();
+            for (bk, op) in ops(&a, threads) {
+                assert_eq!(op.n(), n);
+                let mut b = vec![0.0; n];
+                op.symmspmv(&x, &mut b);
+                for i in 0..n {
+                    assert!(
+                        (want[i] - b[i]).abs() <= 1e-9 * (1.0 + want[i].abs()),
+                        "{name}/t{threads}/{bk:?}: row {i}: {} vs {}",
+                        want[i],
+                        b[i]
+                    );
+                }
+                results.push((bk, b));
+            }
+            let (bk0, b0) = &results[0];
+            for (bk, b) in &results[1..] {
+                assert_eq!(b0, b, "{name}/t{threads}: {bk0:?} vs {bk:?} not bit-identical");
+            }
+        }
+    }
+}
+
+#[test]
+fn symmspmv_multi_matches_singles_bitwise() {
+    let m = 4usize;
+    for (name, a) in families() {
+        let n = a.nrows();
+        let xs: Vec<Vec<f64>> = (0..m)
+            .map(|j| (0..n).map(|i| ((i * (j + 3) + 2 * j) % 17) as f64 * 0.3 - 1.4).collect())
+            .collect();
+        for (bk, op) in ops(&a, 4) {
+            let mut bs: Vec<Vec<f64>> = (0..m).map(|_| vec![0.0; n]).collect();
+            op.symmspmv_multi(&xs, &mut bs);
+            for j in 0..m {
+                let mut b = vec![0.0; n];
+                op.symmspmv(&xs[j], &mut b);
+                assert_eq!(b, bs[j], "{name}/{bk:?}: rhs {j}");
+            }
+        }
+    }
+}
+
+#[test]
+fn powers_bit_identical_across_backends_and_match_reference() {
+    for (name, a) in families() {
+        let n = a.nrows();
+        let x: Vec<f64> = (0..n).map(|i| ((i * 7 + 3) % 13) as f64 * 0.15 - 0.9).collect();
+        let want = race::mpk::powers_ref(&a, &x, 4);
+        for threads in THREADS {
+            let backends = ops(&a, threads);
+            for p in 1..=4usize {
+                let mut results: Vec<(Backend, Vec<Vec<f64>>)> = Vec::new();
+                for (bk, op) in &backends {
+                    let ys = op.powers(&x, p).unwrap();
+                    assert_eq!(ys.len(), p);
+                    for k in 0..p {
+                        let err = op::rel_err(&want[k], &ys[k]);
+                        assert!(
+                            err <= 1e-9,
+                            "{name}/t{threads}/p{p}/{bk:?}: power {} err {err:.2e}",
+                            k + 1
+                        );
+                    }
+                    results.push((*bk, ys));
+                }
+                let (bk0, y0) = &results[0];
+                for (bk, ys) in &results[1..] {
+                    assert_eq!(
+                        y0, ys,
+                        "{name}/t{threads}/p{p}: {bk0:?} vs {bk:?} not bit-identical"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn powers_multi_matches_singles_bitwise() {
+    let a = gen::stencil2d_9pt(14, 12);
+    let n = a.nrows();
+    let m = 5usize;
+    let xs: Vec<Vec<f64>> = (0..m)
+        .map(|j| (0..n).map(|i| ((i * (j + 2) + 3 * j) % 19) as f64 * 0.25 - 2.0).collect())
+        .collect();
+    for threads in [1usize, 4] {
+        for (bk, op) in ops(&a, threads) {
+            for p in 1..=3usize {
+                let ys = op.powers_multi(&xs, p).unwrap();
+                assert_eq!(ys.len(), m);
+                for j in 0..m {
+                    let single = op.powers(&xs[j], p).unwrap();
+                    assert_eq!(single[p - 1], ys[j], "{bk:?}/t{threads}/p{p}: rhs {j}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn gauss_seidel_and_kaczmarz_identical_across_backends() {
+    // GS divides by the diagonal, so restrict to families with a
+    // guaranteed nonzero diagonal (the stencil generators).
+    for (name, a) in
+        [("stencil5", gen::stencil2d_5pt(14, 14)), ("stencil9", gen::stencil2d_9pt(12, 10))]
+    {
+        let n = a.nrows();
+        let b = vec![1.0; n];
+        for threads in [1usize, 4] {
+            let backends = ops(&a, threads);
+            let mut gs: Vec<(Backend, Vec<f64>)> = Vec::new();
+            let mut kz: Vec<(Backend, Vec<f64>)> = Vec::new();
+            for (bk, op) in &backends {
+                let mut x = vec![0.0; n];
+                for _ in 0..20 {
+                    op.gauss_seidel(&b, &mut x);
+                }
+                gs.push((*bk, x));
+                let mut x = vec![0.0; n];
+                for _ in 0..20 {
+                    op.kaczmarz(&b, &mut x);
+                }
+                kz.push((*bk, x));
+            }
+            for (bk, x) in &gs[1..] {
+                assert_eq!(&gs[0].1, x, "{name}/t{threads}: GS {:?} vs {bk:?}", gs[0].0);
+            }
+            for (bk, x) in &kz[1..] {
+                assert_eq!(&kz[0].1, x, "{name}/t{threads}: KZ {:?} vs {bk:?}", kz[0].0);
+            }
+            // and the sweeps actually converge toward A x = b, checked
+            // entirely in logical order against the original matrix
+            let res = |x: &[f64]| -> f64 {
+                let ax = a.spmv_ref(x);
+                ax.iter().zip(&b).map(|(p, q)| (p - q) * (p - q)).sum::<f64>().sqrt()
+            };
+            let res0 = (n as f64).sqrt(); // residual of x = 0
+            assert!(res(&gs[0].1) < 0.5 * res0, "{name}/t{threads}: GS residual");
+            assert!(res(&kz[0].1) < 0.9 * res0, "{name}/t{threads}: KZ residual");
+        }
+    }
+}
+
+#[test]
+fn three_term_matches_manual_recurrence() {
+    let a = gen::graphene(8, 8);
+    let n = a.nrows();
+    let (sigma, tau, rho) = (0.4, -0.1, -1.0);
+    let z_prev: Vec<f64> = (0..n).map(|i| (i as f64 * 0.3).sin()).collect();
+    let z0: Vec<f64> = (0..n).map(|i| (i as f64 * 0.17).cos()).collect();
+    // manual recurrence with the reference SpMV, all in logical order
+    let mut want = Vec::new();
+    let (mut u, mut v) = (z_prev.clone(), z0.clone());
+    for _ in 0..3 {
+        let av = a.spmv_ref(&v);
+        let z: Vec<f64> = (0..n).map(|i| sigma * av[i] + tau * v[i] + rho * u[i]).collect();
+        want.push(z.clone());
+        u = v;
+        v = z;
+    }
+    let mut results: Vec<(Backend, Vec<Vec<f64>>)> = Vec::new();
+    for (bk, op) in ops(&a, 2) {
+        let zs = op.three_term(&z_prev, &z0, sigma, tau, rho, 3).unwrap();
+        assert_eq!(zs.len(), 3);
+        for k in 0..3 {
+            let err = op::rel_err(&want[k], &zs[k]);
+            assert!(err <= 1e-9, "{bk:?}: step {} err {err:.2e}", k + 1);
+        }
+        results.push((bk, zs));
+    }
+    for (bk, zs) in &results[1..] {
+        assert_eq!(&results[0].1, zs, "three-term {:?} vs {bk:?}", results[0].0);
+    }
+}
+
+#[test]
+fn logical_order_is_invariant_to_internal_permutations() {
+    let a = gen::delaunay_like(9, 9, 3);
+    let n = a.nrows();
+    let x: Vec<f64> = (0..n).map(|i| (i as f64 * 0.37).sin()).collect();
+    let want = a.spmv_ref(&x);
+    // with and without RCM the logical-order answer is the same function
+    for rcm in [true, false] {
+        let op = Operator::build(&a, OpConfig::new().threads(3).rcm(rcm)).unwrap();
+        let mut b = vec![0.0; n];
+        op.symmspmv(&x, &mut b);
+        assert!(op::rel_err(&want, &b) < 1e-9, "rcm={rcm}");
+        // round trip through executor numbering is lossless
+        assert_eq!(op.unpermute(&op.permute(&x)), x);
+        // the handle's own reference agrees with the original-order one
+        assert!(op::rel_err(&want, &op.spmv_ref(&x)) < 1e-12, "rcm={rcm}");
+    }
+}
+
+#[test]
+fn shared_pool_serves_multiple_operators() {
+    use race::pool::WorkerPool;
+    use std::sync::Arc;
+    let pool = Arc::new(WorkerPool::new(2));
+    let mats = [gen::stencil2d_5pt(10, 10), gen::graphene(6, 6)];
+    let ops: Vec<Operator> = mats
+        .iter()
+        .map(|a| {
+            Operator::build(a, OpConfig::new().threads(2).shared_pool(pool.clone())).unwrap()
+        })
+        .collect();
+    for (a, op) in mats.iter().zip(&ops) {
+        let n = a.nrows();
+        let x: Vec<f64> = (0..n).map(|i| ((i % 5) as f64) * 0.5 - 1.0).collect();
+        let mut b = vec![0.0; n];
+        op.symmspmv(&x, &mut b);
+        let want = a.spmv_ref(&x);
+        assert!(op::rel_err(&want, &b) < 1e-9);
+        let ys = op.powers(&x, 2).unwrap();
+        assert!(op::rel_err(&op.powers_ref(&x, 2)[1], &ys[1]) < 1e-9);
+    }
+}
+
+#[test]
+fn facade_guards_and_helpers() {
+    let a = gen::stencil2d_5pt(8, 8);
+    let op = Operator::build(&a, OpConfig::new().threads(2)).unwrap();
+    // p = 0 is a structured error, not a panic
+    assert!(op.powers(&[1.0; 64], 0).is_err());
+    assert!(op.prepare_powers(3).is_ok());
+    assert!(op.mpk_with(2, 4 << 10).is_ok());
+    // facade accessors expose the pieces benches compose manually
+    assert!(op.eta() > 0.0 && op.eta() <= 1.0);
+    assert_eq!(op.upper().nrows(), 64);
+    assert_eq!(op.total_perm().len(), 64);
+    assert!(op.program().nsteps() >= 1);
+    // the op::upper helper covers schedules not owned by an Operator
+    let u = op::upper(&a);
+    assert_eq!(u.nrows(), 64);
+    // non-symmetric input is rejected at build time
+    let mut coo = race::sparse::Coo::new(3);
+    coo.push(0, 1, 1.0);
+    for i in 0..3 {
+        coo.push(i, i, 2.0);
+    }
+    assert!(Operator::build(&coo.to_csr(), OpConfig::new()).is_err());
+}
