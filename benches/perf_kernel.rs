@@ -1,27 +1,50 @@
 //! §Perf harness: hot-path iteration log for the serial SymmSpMV kernel
-//! (the unit of work every parallel executor schedules) and the cache
-//! simulator (the corpus-level bench bottleneck). Run with
-//! `cargo bench --bench perf_kernel`; results recorded in
-//! EXPERIMENTS.md §Perf.
+//! (the unit of work every parallel executor schedules), its
+//! delta-compressed pack twins, and the cache simulator (the corpus-level
+//! bench bottleneck). Run with `cargo bench --bench perf_kernel`; results
+//! recorded in EXPERIMENTS.md §Perf.
+//!
+//! Emits `BENCH_perf.json` (override the path with `RACE_BENCH_OUT`, same
+//! shape family as `BENCH_mpk.json`) so the scalar / unrolled / packed
+//! kernel GF/s trajectory is machine-readable from this PR onward:
+//! `{"bench": "perf_kernel", "cases": [{matrix, kernel, gfs, median_ms}]}`.
+//!
+//! `RACE_BENCH_FULL=1` runs the larger variants.
 
 use race::cachesim;
 use race::gen;
 use race::kernels;
 use race::machine;
 use race::op;
-use race::util::bench::{bench, report};
+use race::sparse::{CsrPack, ValPrec};
+use race::util::bench::{bench, report, BenchStats};
+use race::util::json::Json;
 
 fn main() {
     let full = std::env::var("RACE_BENCH_FULL").is_ok();
     // representative pair: high-N_nzr stencil + low-N_nzr quantum chain
     let mats = vec![
-        ("stencil27", if full { gen::stencil3d_27pt(40, 40, 40) } else { gen::stencil3d_27pt(24, 24, 24) }),
+        (
+            "stencil27",
+            if full { gen::stencil3d_27pt(40, 40, 40) } else { gen::stencil3d_27pt(24, 24, 24) },
+        ),
         ("spin", gen::spin_chain_xxz(if full { 17 } else { 14 }, gen::SpinKind::XXZ)),
     ];
+    fn case_row(matrix: &str, kernel: &str, s: &BenchStats, flops: f64) -> Json {
+        Json::obj(vec![
+            ("matrix", Json::Str(matrix.to_string())),
+            ("kernel", Json::Str(kernel.to_string())),
+            ("gfs", Json::Num(s.gflops(flops))),
+            ("median_ms", Json::Num(s.median * 1e3)),
+        ])
+    }
+    let mut rows = Vec::new();
     for (name, a0) in &mats {
         let perm = race::graph::rcm(a0);
         let a = a0.permute_symmetric(&perm);
         let upper = op::upper(&a);
+        let pack64 = CsrPack::pack_upper(&upper, ValPrec::F64);
+        let pack32 = CsrPack::pack_upper(&upper, ValPrec::F32);
         let n = a.nrows();
         let x: Vec<f64> = (0..n).map(|i| (i as f64 * 0.3).sin()).collect();
         let mut b = vec![0.0; n];
@@ -33,26 +56,43 @@ fn main() {
             kernels::symmspmv_range_checked(&upper, &x, &mut b, 0, n);
         });
         report(&s, Some(flops));
-        let s = bench("symmspmv_range (hot path, unchecked)", 0.4, || {
+        rows.push(case_row(name, "checked", &s, flops));
+        let s = bench("symmspmv_range (external entry)", 0.4, || {
             b.iter_mut().for_each(|v| *v = 0.0);
             kernels::symmspmv_range(&upper, &x, &mut b, 0, n);
         });
         report(&s, Some(flops));
+        rows.push(case_row(name, "range", &s, flops));
         let s = bench("unchecked (no bounds checks)", 0.4, || {
             b.iter_mut().for_each(|v| *v = 0.0);
             kernels::symmspmv_range_unchecked(&upper, &x, &mut b, 0, n);
         });
         report(&s, Some(flops));
+        rows.push(case_row(name, "unchecked", &s, flops));
         let s = bench("unrolled x4", 0.4, || {
             b.iter_mut().for_each(|v| *v = 0.0);
             kernels::symmspmv_range_unrolled(&upper, &x, &mut b, 0, n);
         });
         report(&s, Some(flops));
+        rows.push(case_row(name, "unrolled", &s, flops));
         let s = bench("scalar reference", 0.4, || {
             b.iter_mut().for_each(|v| *v = 0.0);
             kernels::symmspmv_range_scalar(&upper, &x, &mut b, 0, n);
         });
         report(&s, Some(flops));
+        rows.push(case_row(name, "scalar", &s, flops));
+        let s = bench("pack f64 (u16 deltas)", 0.4, || {
+            b.iter_mut().for_each(|v| *v = 0.0);
+            kernels::symmspmv_range_pack(&pack64, &x, &mut b, 0, n);
+        });
+        report(&s, Some(flops));
+        rows.push(case_row(name, "pack_f64", &s, flops));
+        let s = bench("pack f32 (u16 deltas + f32 vals)", 0.4, || {
+            b.iter_mut().for_each(|v| *v = 0.0);
+            kernels::symmspmv_range_pack(&pack32, &x, &mut b, 0, n);
+        });
+        report(&s, Some(flops));
+        rows.push(case_row(name, "pack_f32", &s, flops));
         std::hint::black_box(&b);
 
         // roofline context for this matrix on the host
@@ -69,14 +109,19 @@ fn main() {
     // cache simulator throughput (drives the corpus benches)
     println!("== cache simulator throughput ==");
     let a = &mats[0].1;
-    let upper = op::upper(&a);
+    let upper = op::upper(a);
     let m = machine::skx();
     let s = bench("measure_symmspmv_traffic", 0.5, || {
         std::hint::black_box(cachesim::measure_symmspmv_traffic(&upper, a.nnz(), &m));
     });
     report(&s, None);
-    println!(
-        "  = {:.1} M accesses/s",
-        2.0 * upper.nnz() as f64 / s.median / 1e6
-    );
+    println!("  = {:.1} M accesses/s", 2.0 * upper.nnz() as f64 / s.median / 1e6);
+
+    let out = Json::obj(vec![
+        ("bench", Json::Str("perf_kernel".to_string())),
+        ("cases", Json::Arr(rows)),
+    ]);
+    let path = std::env::var("RACE_BENCH_OUT").unwrap_or_else(|_| "BENCH_perf.json".to_string());
+    std::fs::write(&path, out.to_string() + "\n").expect("write BENCH_perf.json");
+    println!("wrote {path}");
 }

@@ -1,0 +1,145 @@
+//! Traffic-compact storage bench: CSR vs the delta-compressed
+//! [`race::sparse::CsrPack`] over the whole RCM-permuted corpus —
+//! cachesim-measured SymmSpMV bytes/nnz (the Roofline quantity the paper
+//! optimizes) plus host wallclock for the serial range kernel, per
+//! matrix and per value precision.
+//!
+//! Emits `BENCH_traffic.json` (override with `RACE_BENCH_OUT`):
+//! `{"bench": "traffic_compact", "machine": .., "cases": [{matrix,
+//! nrows, nnz_upper, bw_rcm, escapes, rows_escaped, feasible_f64,
+//! csr_bytes_per_nnz, pack_f64_bytes_per_nnz, pack_f32_bytes_per_nnz,
+//! cut_f64, cut_f32, csr_gfs, pack_f64_gfs, pack_f32_gfs}],
+//! "summary": {mean_cut_f64, mean_cut_f32, feasible}}`.
+//!
+//! Acceptance (asserted here, so CI catches regressions): over the
+//! pack-feasible corpus the mean traffic cut of the f32 pack is >= 20%,
+//! the f64 pack strictly undercuts CSR on every feasible matrix, and the
+//! f64 pack kernel returns bit-identical results.
+//!
+//! `RACE_BENCH_FULL=1` runs the bench-scale corpus variants.
+
+use race::cachesim;
+use race::gen;
+use race::kernels;
+use race::machine;
+use race::util::bench;
+use race::util::json::Json;
+
+fn main() {
+    let small = std::env::var("RACE_BENCH_FULL").is_err();
+    let m = machine::skx();
+    let mut rows = Vec::new();
+    let (mut cut64_sum, mut cut32_sum, mut feasible) = (0.0f64, 0.0f64, 0usize);
+    let mut total = 0usize;
+    for e in gen::corpus() {
+        let a0 = (e.build)(small);
+        let perm = race::graph::rcm(&a0);
+        let a = a0.permute_symmetric(&perm);
+        let upper = a.upper_triangle();
+        let n = a.nrows();
+
+        // simulated memory traffic (the headline metric) — the same
+        // shared comparison `race-cli pack-stats` prints
+        let cmp = cachesim::compare_symmspmv_pack_traffic(&upper, a.nnz(), &m);
+        let (pack64, pack32) = (&cmp.pack_f64, &cmp.pack_f32);
+        let (tr_csr, tr_p64, tr_p32) = (&cmp.tr_csr, &cmp.tr_f64, &cmp.tr_f32);
+        let (cut64, cut32) = (cmp.cut_f64(), cmp.cut_f32());
+
+        // host wallclock of the serial range kernel on each encoding
+        let x: Vec<f64> = (0..n).map(|i| ((i % 97) as f64) * 0.02 - 1.0).collect();
+        let mut b = vec![0.0; n];
+        let flops = 2.0 * a.nnz() as f64;
+        let s_csr = bench::bench(&format!("{}/csr", e.name), 0.05, || {
+            b.iter_mut().for_each(|v| *v = 0.0);
+            kernels::symmspmv_range(&upper, &x, &mut b, 0, n);
+        });
+        let want = b.clone();
+        let s_p64 = bench::bench(&format!("{}/pack-f64", e.name), 0.05, || {
+            b.iter_mut().for_each(|v| *v = 0.0);
+            kernels::symmspmv_range_pack(pack64, &x, &mut b, 0, n);
+        });
+        // correctness paranoia: the f64 pack result is bit-identical
+        assert_eq!(want, b, "{}: f64 pack diverged from CSR", e.name);
+        let s_p32 = bench::bench(&format!("{}/pack-f32", e.name), 0.05, || {
+            b.iter_mut().for_each(|v| *v = 0.0);
+            kernels::symmspmv_range_pack(pack32, &x, &mut b, 0, n);
+        });
+        std::hint::black_box(&b);
+
+        total += 1;
+        if cmp.feasible() {
+            feasible += 1;
+            cut64_sum += cut64;
+            cut32_sum += cut32;
+            assert!(
+                tr_p64.bytes_total < tr_csr.bytes_total,
+                "{}: feasible f64 pack must undercut CSR traffic ({} vs {})",
+                e.name,
+                tr_p64.bytes_total,
+                tr_csr.bytes_total
+            );
+        }
+        let st = cmp.stats();
+        println!(
+            "{:<26} traffic {:>6.2} -> {:>6.2} (f64) / {:>6.2} (f32) B/nnz  \
+             cut {:>5.1}% / {:>5.1}%  esc {} ({} rows){}",
+            e.name,
+            tr_csr.bytes_per_nnz_full,
+            tr_p64.bytes_per_nnz_full,
+            tr_p32.bytes_per_nnz_full,
+            cut64 * 100.0,
+            cut32 * 100.0,
+            st.escapes,
+            st.rows_escaped,
+            if cmp.feasible() { "" } else { "  [fallback: csr]" }
+        );
+        rows.push(Json::obj(vec![
+            ("matrix", Json::Str(e.name.to_string())),
+            ("nrows", Json::Num(n as f64)),
+            ("nnz_upper", Json::Num(upper.nnz() as f64)),
+            ("bw_rcm", Json::Num(a.bandwidth() as f64)),
+            ("escapes", Json::Num(st.escapes as f64)),
+            ("rows_escaped", Json::Num(st.rows_escaped as f64)),
+            ("feasible_f64", Json::Bool(cmp.feasible())),
+            ("csr_bytes_per_nnz", Json::Num(tr_csr.bytes_per_nnz_full)),
+            ("pack_f64_bytes_per_nnz", Json::Num(tr_p64.bytes_per_nnz_full)),
+            ("pack_f32_bytes_per_nnz", Json::Num(tr_p32.bytes_per_nnz_full)),
+            ("cut_f64", Json::Num(cut64)),
+            ("cut_f32", Json::Num(cut32)),
+            ("csr_gfs", Json::Num(s_csr.gflops(flops))),
+            ("pack_f64_gfs", Json::Num(s_p64.gflops(flops))),
+            ("pack_f32_gfs", Json::Num(s_p32.gflops(flops))),
+        ]));
+    }
+    let mean64 = cut64_sum / feasible.max(1) as f64;
+    let mean32 = cut32_sum / feasible.max(1) as f64;
+    println!(
+        "corpus mean traffic cut over {feasible}/{total} pack-feasible matrices: \
+         {:.1}% (f64) / {:.1}% (f32)",
+        mean64 * 100.0,
+        mean32 * 100.0
+    );
+    // headline acceptance: the compact engine must cut >= 20% of the
+    // measured SymmSpMV traffic (single-precision pack), and most of the
+    // corpus must be pack-feasible after RCM
+    assert!(feasible * 2 > total, "only {feasible}/{total} matrices pack-feasible");
+    assert!(mean32 >= 0.20, "mean f32 traffic cut {:.3} below the 20% acceptance bar", mean32);
+    assert!(mean64 > 0.0, "f64 pack must cut traffic on average");
+    let out = Json::obj(vec![
+        ("bench", Json::Str("traffic_compact".to_string())),
+        ("machine", Json::Str(m.name.clone())),
+        ("cases", Json::Arr(rows)),
+        (
+            "summary",
+            Json::obj(vec![
+                ("mean_cut_f64", Json::Num(mean64)),
+                ("mean_cut_f32", Json::Num(mean32)),
+                ("feasible", Json::Num(feasible as f64)),
+                ("total", Json::Num(total as f64)),
+            ]),
+        ),
+    ]);
+    let path = std::env::var("RACE_BENCH_OUT").unwrap_or_else(|_| "BENCH_traffic.json".to_string());
+    std::fs::write(&path, out.to_string() + "\n").expect("write BENCH_traffic.json");
+    println!("wrote {path}");
+}

@@ -7,7 +7,7 @@
 //! layers; the lock-based and private-array executors need no such
 //! guarantee and serve as baselines.
 
-use super::symmspmv_range;
+use super::{symmspmv_range, symmspmv_range_unchecked};
 use crate::color::ColorSchedule;
 use crate::race::RaceEngine;
 use crate::sparse::Csr;
@@ -27,6 +27,10 @@ unsafe impl Sync for SendPtr {}
 pub fn symmspmv_race(eng: &RaceEngine, upper: &Csr, x: &[f64], b: &mut [f64]) {
     assert_eq!(upper.nrows(), x.len());
     assert_eq!(upper.nrows(), b.len());
+    // every leaf range sits inside the root range, so one check keeps a
+    // tree/matrix mismatch a deterministic panic even though the per-leaf
+    // asserts are hoisted (the leaves run the unchecked kernel)
+    assert!(eng.tree[0].end as usize <= upper.nrows(), "tree was built for a larger matrix");
     let bp = SendPtr(b.as_mut_ptr());
     exec_node(eng, 0, upper, x, bp, b.len());
 }
@@ -37,7 +41,9 @@ fn exec_node(eng: &RaceEngine, id: usize, upper: &Csr, x: &[f64], bp: SendPtr, n
         // SAFETY: concurrently executed leaves are distance-k independent:
         // their written index sets (own rows + upper partners) are disjoint.
         let b = unsafe { std::slice::from_raw_parts_mut(bp.0, n) };
-        symmspmv_range(upper, x, b, node.start as usize, node.end as usize);
+        // lengths validated once in symmspmv_race; leaf ranges are tree
+        // invariants — per-leaf asserts hoisted (symmspmv_range docs)
+        symmspmv_range_unchecked(upper, x, b, node.start as usize, node.end as usize);
         return;
     }
     for color in 0..2u8 {

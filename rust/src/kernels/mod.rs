@@ -7,6 +7,7 @@
 mod cg;
 mod executors;
 mod mpk;
+mod pack;
 pub(crate) mod solvers;
 
 pub use cg::{cg_solve, pcg_solve, CgResult};
@@ -14,8 +15,13 @@ pub use executors::{
     symmspmv_color, symmspmv_locks, symmspmv_private, symmspmv_race, SendPtr,
 };
 pub use mpk::{
-    mpk_execute, mpk_execute_multi, mpk_powers, mpk_powers_multi, mpk_powers_serial,
-    mpk_three_term, spmv_powers, spmv_range_affine, spmv_range_affine_multi,
+    mpk_execute, mpk_execute_multi, mpk_execute_multi_on, mpk_execute_on, mpk_powers,
+    mpk_powers_multi, mpk_powers_multi_on, mpk_powers_on, mpk_powers_serial, mpk_three_term,
+    mpk_three_term_on, spmv_powers, spmv_range_affine, spmv_range_affine_multi, PowerMat,
+};
+pub use pack::{
+    spmv_range_affine_multi_pack, spmv_range_affine_pack, symmspmv_range_multi_pack,
+    symmspmv_range_pack, symmspmv_range_pack_unchecked,
 };
 // `symmspmv_range_multi` (below) is the multi-RHS work unit scheduled by
 // the pool executor `crate::pool::symmspmv_race_multi`.
@@ -60,6 +66,13 @@ pub fn symmspmv_serial(upper: &Csr, x: &[f64], b: &mut [f64]) {
 /// Delegates to the bounds-check-free implementation (§Perf: +68-80% over
 /// the checked loop); the checked variant remains available as
 /// [`symmspmv_range_checked`] and the equivalence is property-tested.
+///
+/// This is the *external* entry: it re-validates the range and vector
+/// lengths on every call. The step-program executors (pool, scoped
+/// sweep, serial program loop) validate those invariants once per kernel
+/// call and dispatch their per-unit work straight to
+/// [`symmspmv_range_unchecked`] — at pool granularity the hoisted
+/// asserts are measurable, one branch pair per scheduled unit.
 #[inline]
 pub fn symmspmv_range(upper: &Csr, x: &[f64], b: &mut [f64], start: usize, end: usize) {
     debug_assert!(upper.validate().is_ok());

@@ -22,12 +22,82 @@
 //! program) removes those rounds; this scoped path remains the baseline
 //! the pool is benchmarked against.
 
-use super::SendPtr;
+use super::{spmv_range_affine_multi_pack, spmv_range_affine_pack, SendPtr};
 use crate::mpk::MpkPlan;
-use crate::sparse::Csr;
+use crate::sparse::{Csr, CsrPack};
 
 /// Below this many rows a step is not worth forking for.
 const MIN_PAR_ROWS: usize = 64;
+
+/// Which storage an MPK power sweep streams: plain CSR or the
+/// delta-compressed [`CsrPack`] (`Full` kind). Every executor dispatches
+/// through this enum, so the traffic-compact pack rides the same plans,
+/// step programs and threading as the CSR baseline — and the f64 pack is
+/// bit-identical (see [`crate::kernels::spmv_range_affine_pack`]).
+#[derive(Clone, Copy)]
+pub enum PowerMat<'a> {
+    /// Plain CSR storage (`plan.permuted_matrix()`).
+    Csr(&'a Csr),
+    /// Delta-compressed full-matrix pack of the same permuted matrix.
+    Pack(&'a CsrPack),
+}
+
+impl PowerMat<'_> {
+    /// Matrix dimension.
+    pub fn nrows(&self) -> usize {
+        match *self {
+            PowerMat::Csr(a) => a.nrows(),
+            PowerMat::Pack(p) => p.nrows(),
+        }
+    }
+
+    /// The affine work unit on this storage (see [`spmv_range_affine`]).
+    #[allow(clippy::too_many_arguments)]
+    #[inline]
+    pub fn affine(
+        &self,
+        src: &[f64],
+        acc: Option<&[f64]>,
+        dst: &mut [f64],
+        sigma: f64,
+        tau: f64,
+        rho: f64,
+        start: usize,
+        end: usize,
+    ) {
+        match *self {
+            PowerMat::Csr(a) => spmv_range_affine(a, src, acc, dst, sigma, tau, rho, start, end),
+            PowerMat::Pack(p) => {
+                spmv_range_affine_pack(p, src, acc, dst, sigma, tau, rho, start, end)
+            }
+        }
+    }
+
+    /// The multi-RHS affine work unit (see [`spmv_range_affine_multi`]).
+    #[allow(clippy::too_many_arguments)]
+    #[inline]
+    pub fn affine_multi(
+        &self,
+        srcs: &[f64],
+        acc: Option<&[f64]>,
+        dsts: &mut [f64],
+        nrhs: usize,
+        sigma: f64,
+        tau: f64,
+        rho: f64,
+        start: usize,
+        end: usize,
+    ) {
+        match *self {
+            PowerMat::Csr(a) => {
+                spmv_range_affine_multi(a, srcs, acc, dsts, nrhs, sigma, tau, rho, start, end)
+            }
+            PowerMat::Pack(p) => {
+                spmv_range_affine_multi_pack(p, srcs, acc, dsts, nrhs, sigma, tau, rho, start, end)
+            }
+        }
+    }
+}
 
 /// Row-range affine SpMV work unit:
 /// `dst[row] = sigma * Σ_c A[row,c]·src[c] + tau * src[row] + rho * acc[row]`
@@ -147,8 +217,9 @@ pub fn spmv_range_affine_multi(
 }
 
 /// Run one row range, forking into up to `threads` disjoint chunks.
+#[allow(clippy::too_many_arguments)]
 fn run_range_threaded(
-    a: &Csr,
+    m: PowerMat<'_>,
     src: &[f64],
     acc: Option<&[f64]>,
     dst: &mut [f64],
@@ -161,7 +232,7 @@ fn run_range_threaded(
 ) {
     let rows = hi - lo;
     if threads <= 1 || rows < 2 * MIN_PAR_ROWS {
-        spmv_range_affine(a, src, acc, dst, sigma, tau, rho, lo, hi);
+        m.affine(src, acc, dst, sigma, tau, rho, lo, hi);
         return;
     }
     let nt = threads.min(rows.div_ceil(MIN_PAR_ROWS)).max(2);
@@ -178,12 +249,12 @@ fn run_range_threaded(
             s.spawn(move || {
                 // SAFETY: chunks write disjoint dst rows (pure gather).
                 let dst = unsafe { std::slice::from_raw_parts_mut(dp.0, n) };
-                spmv_range_affine(a, src, acc, dst, sigma, tau, rho, t_lo, t_hi);
+                m.affine(src, acc, dst, sigma, tau, rho, t_lo, t_hi);
             });
         }
         // SAFETY: chunk 0 is disjoint from every spawned chunk.
         let dst0 = unsafe { std::slice::from_raw_parts_mut(dp.0, n) };
-        spmv_range_affine(a, src, acc, dst0, sigma, tau, rho, lo, (lo + chunk).min(hi));
+        m.affine(src, acc, dst0, sigma, tau, rho, lo, (lo + chunk).min(hi));
     }); // scope join == step barrier
 }
 
@@ -191,7 +262,7 @@ fn run_range_threaded(
 /// row blocks, which scale to disjoint flat ranges `row * nrhs + j`.
 #[allow(clippy::too_many_arguments)]
 fn run_range_threaded_multi(
-    a: &Csr,
+    m: PowerMat<'_>,
     srcs: &[f64],
     acc: Option<&[f64]>,
     dsts: &mut [f64],
@@ -205,7 +276,7 @@ fn run_range_threaded_multi(
 ) {
     let rows = hi - lo;
     if threads <= 1 || rows < 2 * MIN_PAR_ROWS {
-        spmv_range_affine_multi(a, srcs, acc, dsts, nrhs, sigma, tau, rho, lo, hi);
+        m.affine_multi(srcs, acc, dsts, nrhs, sigma, tau, rho, lo, hi);
         return;
     }
     let nt = threads.min(rows.div_ceil(MIN_PAR_ROWS)).max(2);
@@ -222,13 +293,13 @@ fn run_range_threaded_multi(
             s.spawn(move || {
                 // SAFETY: chunks write disjoint dst rows (pure gather).
                 let dsts = unsafe { std::slice::from_raw_parts_mut(dp.0, len) };
-                spmv_range_affine_multi(a, srcs, acc, dsts, nrhs, sigma, tau, rho, t_lo, t_hi);
+                m.affine_multi(srcs, acc, dsts, nrhs, sigma, tau, rho, t_lo, t_hi);
             });
         }
         // SAFETY: chunk 0 is disjoint from every spawned chunk.
         let dsts0 = unsafe { std::slice::from_raw_parts_mut(dp.0, len) };
         let hi0 = (lo + chunk).min(hi);
-        spmv_range_affine_multi(a, srcs, acc, dsts0, nrhs, sigma, tau, rho, lo, hi0);
+        m.affine_multi(srcs, acc, dsts0, nrhs, sigma, tau, rho, lo, hi0);
     }); // scope join == step barrier
 }
 
@@ -246,8 +317,26 @@ pub fn mpk_execute(
     rho: f64,
     threads: usize,
 ) {
-    let a = plan.permuted_matrix();
-    let n = a.nrows();
+    let m = PowerMat::Csr(plan.permuted_matrix());
+    mpk_execute_on(plan, m, bufs, base, sigma, tau, rho, threads)
+}
+
+/// [`mpk_execute`] over an explicit storage encoding: `m` must encode
+/// `plan.permuted_matrix()` (CSR, or its `Full`-kind [`CsrPack`] — f64
+/// packs are bit-identical).
+#[allow(clippy::too_many_arguments)]
+pub fn mpk_execute_on(
+    plan: &MpkPlan,
+    m: PowerMat<'_>,
+    bufs: &mut [Vec<f64>],
+    base: usize,
+    sigma: f64,
+    tau: f64,
+    rho: f64,
+    threads: usize,
+) {
+    let n = m.nrows();
+    assert_eq!(n, plan.permuted_matrix().nrows(), "storage does not match the plan");
     assert_eq!(bufs.len(), base + plan.cfg.p + 1, "need base + p + 1 vectors");
     assert!(rho == 0.0 || base >= 1, "three-term recurrence needs base >= 1");
     for b in bufs.iter() {
@@ -263,7 +352,7 @@ pub fn mpk_execute(
         let src: &[f64] = &left[base + k - 1];
         let acc: Option<&[f64]> = if rho != 0.0 { Some(&left[base + k - 2]) } else { None };
         let dst: &mut [f64] = &mut right[0];
-        run_range_threaded(a, src, acc, dst, sigma, tau, rho, lo, hi, threads);
+        run_range_threaded(m, src, acc, dst, sigma, tau, rho, lo, hi, threads);
     }
 }
 
@@ -282,8 +371,26 @@ pub fn mpk_execute_multi(
     rho: f64,
     threads: usize,
 ) {
-    let a = plan.permuted_matrix();
-    let n = a.nrows();
+    let m = PowerMat::Csr(plan.permuted_matrix());
+    mpk_execute_multi_on(plan, m, bufs, nrhs, base, sigma, tau, rho, threads)
+}
+
+/// [`mpk_execute_multi`] over an explicit storage encoding (see
+/// [`mpk_execute_on`]).
+#[allow(clippy::too_many_arguments)]
+pub fn mpk_execute_multi_on(
+    plan: &MpkPlan,
+    m: PowerMat<'_>,
+    bufs: &mut [Vec<f64>],
+    nrhs: usize,
+    base: usize,
+    sigma: f64,
+    tau: f64,
+    rho: f64,
+    threads: usize,
+) {
+    let n = m.nrows();
+    assert_eq!(n, plan.permuted_matrix().nrows(), "storage does not match the plan");
     assert!(nrhs > 0);
     assert_eq!(bufs.len(), base + plan.cfg.p + 1, "need base + p + 1 vector blocks");
     assert!(rho == 0.0 || base >= 1, "three-term recurrence needs base >= 1");
@@ -300,7 +407,7 @@ pub fn mpk_execute_multi(
         let src: &[f64] = &left[base + k - 1];
         let acc: Option<&[f64]> = if rho != 0.0 { Some(&left[base + k - 2]) } else { None };
         let dst: &mut [f64] = &mut right[0];
-        run_range_threaded_multi(a, src, acc, dst, nrhs, sigma, tau, rho, lo, hi, threads);
+        run_range_threaded_multi(m, src, acc, dst, nrhs, sigma, tau, rho, lo, hi, threads);
     }
 }
 
@@ -311,6 +418,17 @@ pub fn mpk_execute_multi(
 /// `nrhs` separate [`mpk_powers`] runs, with the block traffic paid once
 /// per batch.
 pub fn mpk_powers_multi(plan: &MpkPlan, xs: &[f64], nrhs: usize, threads: usize) -> Vec<Vec<f64>> {
+    mpk_powers_multi_on(plan, PowerMat::Csr(plan.permuted_matrix()), xs, nrhs, threads)
+}
+
+/// [`mpk_powers_multi`] over an explicit storage encoding.
+pub fn mpk_powers_multi_on(
+    plan: &MpkPlan,
+    m: PowerMat<'_>,
+    xs: &[f64],
+    nrhs: usize,
+    threads: usize,
+) -> Vec<Vec<f64>> {
     let p = plan.cfg.p;
     let n = plan.permuted_matrix().nrows();
     assert_eq!(xs.len(), n * nrhs);
@@ -319,7 +437,7 @@ pub fn mpk_powers_multi(plan: &MpkPlan, xs: &[f64], nrhs: usize, threads: usize)
     for _ in 0..p {
         bufs.push(vec![0.0; n * nrhs]);
     }
-    mpk_execute_multi(plan, &mut bufs, nrhs, 0, 1.0, 0.0, 0.0, threads);
+    mpk_execute_multi_on(plan, m, &mut bufs, nrhs, 0, 1.0, 0.0, 0.0, threads);
     bufs.remove(0);
     bufs
 }
@@ -328,6 +446,11 @@ pub fn mpk_powers_multi(plan: &MpkPlan, xs: &[f64], nrhs: usize, threads: usize)
 /// plan's permuted numbering (`x` must already be permuted with
 /// `plan.perm`, e.g. via [`crate::coordinator::permute_vec`]).
 pub fn mpk_powers(plan: &MpkPlan, x: &[f64], threads: usize) -> Vec<Vec<f64>> {
+    mpk_powers_on(plan, PowerMat::Csr(plan.permuted_matrix()), x, threads)
+}
+
+/// [`mpk_powers`] over an explicit storage encoding.
+pub fn mpk_powers_on(plan: &MpkPlan, m: PowerMat<'_>, x: &[f64], threads: usize) -> Vec<Vec<f64>> {
     let p = plan.cfg.p;
     let n = x.len();
     let mut bufs = Vec::with_capacity(p + 1);
@@ -335,7 +458,7 @@ pub fn mpk_powers(plan: &MpkPlan, x: &[f64], threads: usize) -> Vec<Vec<f64>> {
     for _ in 0..p {
         bufs.push(vec![0.0; n]);
     }
-    mpk_execute(plan, &mut bufs, 0, 1.0, 0.0, 0.0, threads);
+    mpk_execute_on(plan, m, &mut bufs, 0, 1.0, 0.0, 0.0, threads);
     bufs.remove(0);
     bufs
 }
@@ -360,6 +483,22 @@ pub fn mpk_three_term(
     rho: f64,
     threads: usize,
 ) -> Vec<Vec<f64>> {
+    let m = PowerMat::Csr(plan.permuted_matrix());
+    mpk_three_term_on(plan, m, z_prev, z0, sigma, tau, rho, threads)
+}
+
+/// [`mpk_three_term`] over an explicit storage encoding.
+#[allow(clippy::too_many_arguments)]
+pub fn mpk_three_term_on(
+    plan: &MpkPlan,
+    m: PowerMat<'_>,
+    z_prev: &[f64],
+    z0: &[f64],
+    sigma: f64,
+    tau: f64,
+    rho: f64,
+    threads: usize,
+) -> Vec<Vec<f64>> {
     let p = plan.cfg.p;
     let n = z0.len();
     assert_eq!(z_prev.len(), n);
@@ -369,7 +508,7 @@ pub fn mpk_three_term(
     for _ in 0..p {
         bufs.push(vec![0.0; n]);
     }
-    mpk_execute(plan, &mut bufs, 1, sigma, tau, rho, threads);
+    mpk_execute_on(plan, m, &mut bufs, 1, sigma, tau, rho, threads);
     bufs.drain(0..2);
     bufs
 }
@@ -385,7 +524,8 @@ pub fn spmv_powers(a: &Csr, x: &[f64], p: usize, threads: usize) -> Vec<Vec<f64>
     for k in 0..p {
         let (left, right) = out.split_at_mut(k);
         let src: &[f64] = if k == 0 { x } else { &left[k - 1] };
-        run_range_threaded(a, src, None, &mut right[0], 1.0, 0.0, 0.0, 0, n, threads);
+        let m = PowerMat::Csr(a);
+        run_range_threaded(m, src, None, &mut right[0], 1.0, 0.0, 0.0, 0, n, threads);
     }
     out
 }

@@ -1,0 +1,509 @@
+//! Range kernels over [`CsrPack`] storage — the traffic-compact twins of
+//! the CSR kernels in [`super`] (`symmspmv_range`, `symmspmv_range_multi`,
+//! `spmv_range_affine`, `spmv_range_affine_multi`).
+//!
+//! Every kernel keeps the *exact* accumulation order of its CSR twin —
+//! diagonal first for SymmSpMV (the upper-triangle convention), sorted
+//! column order for the affine sweep — so with
+//! [`ValPrec::F64`](crate::sparse::ValPrec) values the results are
+//! **bit-identical** to the CSR path; only the bytes streamed per nonzero
+//! change (u16 delta instead of u32 column, split f64 diagonal instead of
+//! an explicit diagonal entry). With
+//! [`ValPrec::F32`](crate::sparse::ValPrec) each value is widened to
+//! `f64` at use, so the
+//! arithmetic (and its order) is unchanged and the only perturbation is
+//! the one-time rounding of the matrix entries.
+//!
+//! Escapes are resolved through a cursor seeded once per range call
+//! ([`CsrPack::esc_start`]) and advanced in encounter order — a range
+//! kernel never scans the side table.
+
+use crate::sparse::{CsrPack, PackKind, PackVals, ESCAPE, FULL_BIAS};
+
+/// Value widening shared by the f64/f32 monomorphizations.
+trait PackScalar: Copy + Send + Sync {
+    fn wide(self) -> f64;
+}
+
+impl PackScalar for f64 {
+    #[inline(always)]
+    fn wide(self) -> f64 {
+        self
+    }
+}
+
+impl PackScalar for f32 {
+    #[inline(always)]
+    fn wide(self) -> f64 {
+        self as f64
+    }
+}
+
+/// SymmSpMV over rows `[start, end)` of a [`PackKind::Upper`] pack —
+/// the packed twin of [`super::symmspmv_range`], same contract (`b`
+/// zeroed by the caller, concurrent calls safe on distance-2 independent
+/// ranges). Validates the range, then runs the bounds-check-free body.
+#[inline]
+pub fn symmspmv_range_pack(p: &CsrPack, x: &[f64], b: &mut [f64], start: usize, end: usize) {
+    debug_assert!(p.validate().is_ok());
+    assert_eq!(p.kind, PackKind::Upper, "SymmSpMV needs an Upper pack");
+    assert!(end <= p.n);
+    assert!(x.len() >= p.n && b.len() >= p.n);
+    symmspmv_range_pack_unchecked(p, x, b, start, end);
+}
+
+/// Bounds-check-free SymmSpMV pack body (hot path; the per-unit entry the
+/// executors call after validating the invariant inputs once per kernel
+/// call — see [`super::symmspmv_range`] on the hoisted checks).
+///
+/// # Safety-by-construction
+/// All indices come from a validated pack ([`CsrPack::validate`]
+/// invariants: monotone `row_ptr`, in-range decoded columns, escape
+/// bookkeeping consistent), so the unchecked accesses are in bounds for
+/// any pack built through [`CsrPack::pack_upper`].
+#[inline]
+pub fn symmspmv_range_pack_unchecked(
+    p: &CsrPack,
+    x: &[f64],
+    b: &mut [f64],
+    start: usize,
+    end: usize,
+) {
+    debug_assert!(end <= p.n && x.len() >= p.n && b.len() >= p.n);
+    match &p.vals {
+        PackVals::F64 { diag, body } => symm_body(p, diag, body, x, b, start, end),
+        PackVals::F32 { diag, body } => symm_body(p, diag, body, x, b, start, end),
+    }
+}
+
+fn symm_body<T: PackScalar>(
+    p: &CsrPack,
+    diag: &[T],
+    body: &[T],
+    x: &[f64],
+    b: &mut [f64],
+    start: usize,
+    end: usize,
+) {
+    let rp = &p.row_ptr;
+    let delta = &p.delta;
+    let mut esc = p.esc_start(start);
+    for row in start..end {
+        // SAFETY: row < n and the pack invariants (see fn docs) keep
+        // every derived index in bounds.
+        let lo = unsafe { *rp.get_unchecked(row) } as usize;
+        let hi = unsafe { *rp.get_unchecked(row + 1) } as usize;
+        let xr = unsafe { *x.get_unchecked(row) };
+        let mut tmp = unsafe { diag.get_unchecked(row) }.wide() * xr;
+        for idx in lo..hi {
+            unsafe {
+                let d = *delta.get_unchecked(idx);
+                let c = if d != ESCAPE {
+                    row + d as usize
+                } else {
+                    let c = *p.esc_col.get_unchecked(esc) as usize;
+                    esc += 1;
+                    c
+                };
+                let v = body.get_unchecked(idx).wide();
+                tmp += v * *x.get_unchecked(c);
+                *b.get_unchecked_mut(c) += v * xr;
+            }
+        }
+        unsafe {
+            *b.get_unchecked_mut(row) += tmp;
+        }
+    }
+}
+
+/// Multi-RHS SymmSpMV over an Upper pack: packed twin of
+/// [`super::symmspmv_range_multi`], identical contract and per-RHS
+/// accumulation order (row-major vectors, `bs` zeroed by the caller).
+pub fn symmspmv_range_multi_pack(
+    p: &CsrPack,
+    xs: &[f64],
+    bs: &mut [f64],
+    nrhs: usize,
+    start: usize,
+    end: usize,
+) {
+    assert_eq!(p.kind, PackKind::Upper, "SymmSpMV needs an Upper pack");
+    assert!(end <= p.n);
+    assert!(nrhs > 0);
+    assert!(xs.len() >= p.n * nrhs && bs.len() >= p.n * nrhs);
+    match &p.vals {
+        PackVals::F64 { diag, body } => symm_multi_body(p, diag, body, xs, bs, nrhs, start, end),
+        PackVals::F32 { diag, body } => symm_multi_body(p, diag, body, xs, bs, nrhs, start, end),
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn symm_multi_body<T: PackScalar>(
+    p: &CsrPack,
+    diag: &[T],
+    body: &[T],
+    xs: &[f64],
+    bs: &mut [f64],
+    nrhs: usize,
+    start: usize,
+    end: usize,
+) {
+    let rp = &p.row_ptr;
+    let delta = &p.delta;
+    let mut esc = p.esc_start(start);
+    // stack scratch for typical batch sizes (mirrors symmspmv_range_multi)
+    const STACK_RHS: usize = 32;
+    let mut stack_buf = [0f64; STACK_RHS];
+    let mut heap_buf: Vec<f64>;
+    let tmp: &mut [f64] = if nrhs <= STACK_RHS {
+        &mut stack_buf[..nrhs]
+    } else {
+        heap_buf = vec![0f64; nrhs];
+        &mut heap_buf
+    };
+    for row in start..end {
+        let lo = rp[row] as usize;
+        let hi = rp[row + 1] as usize;
+        let d0 = diag[row].wide();
+        let rb = row * nrhs;
+        for j in 0..nrhs {
+            tmp[j] = d0 * xs[rb + j];
+        }
+        for idx in lo..hi {
+            let d = delta[idx];
+            let c = if d != ESCAPE {
+                row + d as usize
+            } else {
+                let c = p.esc_col[esc] as usize;
+                esc += 1;
+                c
+            };
+            let v = body[idx].wide();
+            let cb = c * nrhs;
+            for j in 0..nrhs {
+                tmp[j] += v * xs[cb + j];
+                bs[cb + j] += v * xs[rb + j];
+            }
+        }
+        for j in 0..nrhs {
+            bs[rb + j] += tmp[j];
+        }
+    }
+}
+
+/// Row-range affine SpMV over a [`PackKind::Full`] pack — the packed twin
+/// of [`super::spmv_range_affine`] (MPK work unit):
+/// `dst[row] = sigma·(A src)[row] + tau·src[row] + rho·acc[row]`.
+#[allow(clippy::too_many_arguments)]
+pub fn spmv_range_affine_pack(
+    p: &CsrPack,
+    src: &[f64],
+    acc: Option<&[f64]>,
+    dst: &mut [f64],
+    sigma: f64,
+    tau: f64,
+    rho: f64,
+    start: usize,
+    end: usize,
+) {
+    assert_eq!(p.kind, PackKind::Full, "affine SpMV needs a Full pack");
+    assert!(end <= p.n);
+    assert!(src.len() >= p.n && dst.len() >= p.n);
+    if let Some(acc) = acc {
+        assert!(acc.len() >= p.n);
+    } else {
+        debug_assert_eq!(rho, 0.0);
+    }
+    match &p.vals {
+        PackVals::F64 { body, .. } => {
+            affine_body(p, body, src, acc, dst, sigma, tau, rho, start, end)
+        }
+        PackVals::F32 { body, .. } => {
+            affine_body(p, body, src, acc, dst, sigma, tau, rho, start, end)
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn affine_body<T: PackScalar>(
+    p: &CsrPack,
+    body: &[T],
+    src: &[f64],
+    acc: Option<&[f64]>,
+    dst: &mut [f64],
+    sigma: f64,
+    tau: f64,
+    rho: f64,
+    start: usize,
+    end: usize,
+) {
+    let rp = &p.row_ptr;
+    let delta = &p.delta;
+    let bias = FULL_BIAS as usize;
+    let mut esc = p.esc_start(start);
+    for row in start..end {
+        let lo = rp[row] as usize;
+        let hi = rp[row + 1] as usize;
+        let mut tmp = 0f64;
+        for idx in lo..hi {
+            let d = delta[idx];
+            let c = if d != ESCAPE {
+                (row + d as usize).wrapping_sub(bias)
+            } else {
+                let c = p.esc_col[esc] as usize;
+                esc += 1;
+                c
+            };
+            tmp += body[idx].wide() * src[c];
+        }
+        dst[row] = match acc {
+            None => sigma * tmp + tau * src[row],
+            Some(acc) => sigma * tmp + tau * src[row] + rho * acc[row],
+        };
+    }
+}
+
+/// Multi-RHS affine SpMV over a Full pack — packed twin of
+/// [`super::spmv_range_affine_multi`] (row-major vectors).
+#[allow(clippy::too_many_arguments)]
+pub fn spmv_range_affine_multi_pack(
+    p: &CsrPack,
+    srcs: &[f64],
+    acc: Option<&[f64]>,
+    dsts: &mut [f64],
+    nrhs: usize,
+    sigma: f64,
+    tau: f64,
+    rho: f64,
+    start: usize,
+    end: usize,
+) {
+    assert_eq!(p.kind, PackKind::Full, "affine SpMV needs a Full pack");
+    assert!(end <= p.n);
+    assert!(nrhs > 0);
+    assert!(srcs.len() >= p.n * nrhs && dsts.len() >= p.n * nrhs);
+    if let Some(acc) = acc {
+        assert!(acc.len() >= p.n * nrhs);
+    } else {
+        debug_assert_eq!(rho, 0.0);
+    }
+    match &p.vals {
+        PackVals::F64 { body, .. } => {
+            affine_multi_body(p, body, srcs, acc, dsts, nrhs, sigma, tau, rho, start, end)
+        }
+        PackVals::F32 { body, .. } => {
+            affine_multi_body(p, body, srcs, acc, dsts, nrhs, sigma, tau, rho, start, end)
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn affine_multi_body<T: PackScalar>(
+    p: &CsrPack,
+    body: &[T],
+    srcs: &[f64],
+    acc: Option<&[f64]>,
+    dsts: &mut [f64],
+    nrhs: usize,
+    sigma: f64,
+    tau: f64,
+    rho: f64,
+    start: usize,
+    end: usize,
+) {
+    let rp = &p.row_ptr;
+    let delta = &p.delta;
+    let bias = FULL_BIAS as usize;
+    let mut esc = p.esc_start(start);
+    const STACK_RHS: usize = 32;
+    let mut stack_buf = [0f64; STACK_RHS];
+    let mut heap_buf: Vec<f64>;
+    let tmp: &mut [f64] = if nrhs <= STACK_RHS {
+        &mut stack_buf[..nrhs]
+    } else {
+        heap_buf = vec![0f64; nrhs];
+        &mut heap_buf
+    };
+    for row in start..end {
+        let lo = rp[row] as usize;
+        let hi = rp[row + 1] as usize;
+        tmp.fill(0.0);
+        for idx in lo..hi {
+            let d = delta[idx];
+            let c = if d != ESCAPE {
+                (row + d as usize).wrapping_sub(bias)
+            } else {
+                let c = p.esc_col[esc] as usize;
+                esc += 1;
+                c
+            };
+            let v = body[idx].wide();
+            let cb = c * nrhs;
+            for j in 0..nrhs {
+                tmp[j] += v * srcs[cb + j];
+            }
+        }
+        let rb = row * nrhs;
+        match acc {
+            None => {
+                for j in 0..nrhs {
+                    dsts[rb + j] = sigma * tmp[j] + tau * srcs[rb + j];
+                }
+            }
+            Some(acc) => {
+                for j in 0..nrhs {
+                    dsts[rb + j] = sigma * tmp[j] + tau * srcs[rb + j] + rho * acc[rb + j];
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen;
+    use crate::kernels;
+    use crate::sparse::{Csr, ValPrec};
+
+    fn families() -> Vec<(&'static str, Csr)> {
+        vec![
+            ("stencil5", gen::stencil2d_5pt(13, 9)),
+            ("stencil9", gen::stencil2d_9pt(11, 8)),
+            ("spin", gen::spin_chain_xxz(8, gen::SpinKind::XXZ)),
+            ("graphene", gen::graphene(8, 8)),
+            ("delaunay", gen::delaunay_like(10, 10, 4)),
+            ("band", gen::dense_band(150, 30, 120, 2)),
+        ]
+    }
+
+    #[test]
+    fn pack_symmspmv_bitwise_matches_csr_kernel() {
+        for (name, a) in families() {
+            let n = a.nrows();
+            let upper = a.upper_triangle();
+            let p = CsrPack::pack_upper(&upper, ValPrec::F64);
+            let x: Vec<f64> = (0..n).map(|i| ((i * 7 + 3) % 11) as f64 - 5.0).collect();
+            let mut want = vec![0.0; n];
+            kernels::symmspmv_range(&upper, &x, &mut want, 0, n);
+            let mut got = vec![0.0; n];
+            symmspmv_range_pack(&p, &x, &mut got, 0, n);
+            assert_eq!(want, got, "{name}: f64 pack must be bit-identical");
+            // split ranges with a shared b: same totals bit-for-bit
+            let mut split = vec![0.0; n];
+            symmspmv_range_pack(&p, &x, &mut split, 0, n / 2);
+            symmspmv_range_pack(&p, &x, &mut split, n / 2, n);
+            assert_eq!(want, split, "{name}: range split changes nothing");
+        }
+    }
+
+    #[test]
+    fn pack_multi_bitwise_matches_csr_multi() {
+        let a = gen::stencil2d_9pt(12, 10);
+        let n = a.nrows();
+        let upper = a.upper_triangle();
+        let p = CsrPack::pack_upper(&upper, ValPrec::F64);
+        let nrhs = 3usize;
+        let mut xs = vec![0f64; n * nrhs];
+        for row in 0..n {
+            for j in 0..nrhs {
+                xs[row * nrhs + j] = ((row * (j + 2) + 7) % 13) as f64 - 6.0;
+            }
+        }
+        let mut want = vec![0f64; n * nrhs];
+        kernels::symmspmv_range_multi(&upper, &xs, &mut want, nrhs, 0, n);
+        let mut got = vec![0f64; n * nrhs];
+        symmspmv_range_multi_pack(&p, &xs, &mut got, nrhs, 0, n);
+        assert_eq!(want, got);
+    }
+
+    #[test]
+    fn pack_affine_bitwise_matches_csr_affine() {
+        for (name, a) in families() {
+            let n = a.nrows();
+            let p = CsrPack::pack_full(&a, ValPrec::F64);
+            let src: Vec<f64> = (0..n).map(|i| (i as f64 * 0.37).sin()).collect();
+            let accv: Vec<f64> = (0..n).map(|i| (i as f64 * 0.19).cos()).collect();
+            for (sigma, tau, rho, acc) in
+                [(1.0, 0.0, 0.0, None), (0.4, -0.2, -1.0, Some(accv.as_slice()))]
+            {
+                let mut want = vec![0.0; n];
+                kernels::spmv_range_affine(&a, &src, acc, &mut want, sigma, tau, rho, 0, n);
+                let mut got = vec![0.0; n];
+                spmv_range_affine_pack(&p, &src, acc, &mut got, sigma, tau, rho, 0, n);
+                assert_eq!(want, got, "{name}: affine pack must be bit-identical");
+            }
+        }
+    }
+
+    #[test]
+    fn pack_affine_multi_bitwise_matches_csr() {
+        let a = gen::graphene(7, 7);
+        let n = a.nrows();
+        let p = CsrPack::pack_full(&a, ValPrec::F64);
+        let nrhs = 4usize;
+        let mut srcs = vec![0f64; n * nrhs];
+        for row in 0..n {
+            for j in 0..nrhs {
+                srcs[row * nrhs + j] = ((row * (j + 3) + 5) % 17) as f64 * 0.2 - 1.5;
+            }
+        }
+        let mut want = vec![0f64; n * nrhs];
+        kernels::spmv_range_affine_multi(&a, &srcs, None, &mut want, nrhs, 1.0, 0.0, 0.0, 0, n);
+        let mut got = vec![0f64; n * nrhs];
+        spmv_range_affine_multi_pack(&p, &srcs, None, &mut got, nrhs, 1.0, 0.0, 0.0, 0, n);
+        assert_eq!(want, got);
+    }
+
+    #[test]
+    fn f32_pack_stays_within_single_precision_error() {
+        let a = gen::stencil3d_27pt(6, 6, 6);
+        let n = a.nrows();
+        let upper = a.upper_triangle();
+        let p = CsrPack::pack_upper(&upper, ValPrec::F32);
+        let x: Vec<f64> = (0..n).map(|i| (i as f64 * 0.31).sin()).collect();
+        let mut want = vec![0.0; n];
+        kernels::symmspmv_range(&upper, &x, &mut want, 0, n);
+        let mut got = vec![0.0; n];
+        symmspmv_range_pack(&p, &x, &mut got, 0, n);
+        let err = crate::op::rel_err(&want, &got);
+        assert!(err > 0.0, "f32 rounding should be visible");
+        assert!(err < 1e-5, "f32 pack error {err:.2e} too large");
+    }
+
+    #[test]
+    fn escaped_entries_reach_the_kernels() {
+        // couple row 0 to a far column so the escape path executes
+        let n = 70_000usize;
+        let mut coo = crate::sparse::Coo::new(n);
+        for i in 0..n {
+            coo.push(i, i, 2.0);
+        }
+        coo.push_sym(0, 66_000, -1.0);
+        coo.push_sym(5, 67_000, 0.5);
+        let a = coo.to_csr();
+        let upper = a.upper_triangle();
+        let p = CsrPack::pack_upper(&upper, ValPrec::F64);
+        assert_eq!(p.escapes(), 2);
+        let x: Vec<f64> = (0..n).map(|i| ((i % 23) as f64) * 0.1 - 1.0).collect();
+        let mut want = vec![0.0; n];
+        kernels::symmspmv_range(&upper, &x, &mut want, 0, n);
+        let mut got = vec![0.0; n];
+        symmspmv_range_pack(&p, &x, &mut got, 0, n);
+        assert_eq!(want, got);
+        // a range starting past the first escape must seed its cursor
+        let mut partial_want = vec![0.0; n];
+        kernels::symmspmv_range(&upper, &x, &mut partial_want, 4, n);
+        let mut partial_got = vec![0.0; n];
+        symmspmv_range_pack(&p, &x, &mut partial_got, 4, n);
+        assert_eq!(partial_want, partial_got);
+        // Full-kind escapes through the affine kernel
+        let pf = CsrPack::pack_full(&a, ValPrec::F64);
+        assert!(pf.escapes() >= 4);
+        let mut aw = vec![0.0; n];
+        kernels::spmv_range_affine(&a, &x, None, &mut aw, 1.0, 0.0, 0.0, 0, n);
+        let mut ag = vec![0.0; n];
+        spmv_range_affine_pack(&pf, &x, None, &mut ag, 1.0, 0.0, 0.0, 0, n);
+        assert_eq!(aw, ag);
+    }
+}

@@ -6,7 +6,10 @@
 //!
 //! The library provides:
 //!
-//! * [`sparse`] — CSR sparse matrices, MatrixMarket I/O, symmetric permutation.
+//! * [`sparse`] — CSR sparse matrices, MatrixMarket I/O, symmetric
+//!   permutation, and the traffic-compact delta pack (`CsrPack`: u16
+//!   column deltas + split diagonal, f64 or f32 values) the hot kernels
+//!   stream by default.
 //! * [`gen`] — matrix generators standing in for the paper's SuiteSparse /
 //!   ScaMaC corpus (stencils, quantum chains, graphene, Delaunay-like meshes).
 //! * [`graph`] — BFS level construction and RCM bandwidth reduction.

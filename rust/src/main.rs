@@ -10,9 +10,9 @@ use race::gen;
 use race::kernels;
 use race::machine;
 use race::mpk::powers_ref;
-use race::op::{Backend, OpConfig, Operator};
+use race::op::{Backend, OpConfig, Operator, Storage};
 use race::race::{format_tree, RaceConfig, RaceEngine};
-use race::sparse::MatrixStats;
+use race::sparse::{MatrixStats, ValPrec};
 use race::util::json::Json;
 
 const USAGE: &str = "race-cli — RACE: recursive algebraic coloring engine (paper reproduction)
@@ -32,9 +32,13 @@ USAGE:
       traffic and wallclock comparison against p naive SpMV sweeps.
   race-cli explain [--stencil N] [--threads N] [--dist K] [--eps0 E]
       Walk the paper's Fig. 4-14 construction on the artificial stencil.
+  race-cli pack-stats [--small] [--machine skx] [--only NAME] [--json]
+      Delta-pack feasibility over the whole corpus: escapes, storage
+      bytes/nnz and cachesim traffic for CSR vs the u16-delta pack
+      (f64 and f32 values), plus the automatic CSR fallback verdict.
   race-cli serve --matrix SPEC[,SPEC..] [--threads N] [--addr HOST:PORT]
                  [--small] [--max-requests N] [--mpk-power P] [--mpk-cache BYTES]
-                 [--batch-window-us N]
+                 [--batch-window-us N] [--storage pack|csr] [--prec f64|f32]
       SymmSpMV/MPK-as-a-service over TCP (newline-delimited JSON, see
       README.md): multi-matrix registry, request micro-batching on a
       persistent worker pool (SymmSpMV and MPK requests both batch),
@@ -42,6 +46,9 @@ USAGE:
       {\"shutdown\": true} / --max-requests for graceful shutdown.
       --batch-window-us makes batch leaders wait a bounded time (capped
       at the last kernel latency) so medium-load traffic coalesces.
+      --storage/--prec select the matrix encoding the kernels stream
+      (delta-compressed pack by default; f64 packs answer bit-identically
+      to CSR, f32 cuts another 4 bytes/nnz at ~1e-7 relative error).
   race-cli xla [--name model]
       Load + compile an AOT artifact from artifacts/.
 ";
@@ -124,6 +131,22 @@ impl Args {
     }
 }
 
+fn parse_storage(s: &str) -> Result<Storage> {
+    match s {
+        "pack" => Ok(Storage::Pack),
+        "csr" => Ok(Storage::Csr),
+        other => bail!("unknown storage {other:?} (expected pack|csr)"),
+    }
+}
+
+fn parse_prec(s: &str) -> Result<ValPrec> {
+    match s {
+        "f64" => Ok(ValPrec::F64),
+        "f32" => Ok(ValPrec::F32),
+        other => bail!("unknown precision {other:?} (expected f64|f32)"),
+    }
+}
+
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     if argv.is_empty() || argv[0] == "--help" || argv[0] == "-h" {
@@ -137,6 +160,7 @@ fn main() -> Result<()> {
         "corpus" => cmd_corpus(&args),
         "run" => cmd_run(&args),
         "mpk" => cmd_mpk(&args),
+        "pack-stats" => cmd_pack_stats(&args),
         "explain" => cmd_explain(&args),
         "serve" => {
             let matrices: Vec<String> = args
@@ -160,6 +184,8 @@ fn main() -> Result<()> {
                 mpk_power_max: args.get_usize("mpk-power", 8)?,
                 mpk_cache_bytes: args.get_usize("mpk-cache", 2 << 20)?,
                 batch_window_us: args.get_usize("batch-window-us", 0)? as u64,
+                storage: parse_storage(&args.get("storage", "pack"))?,
+                prec: parse_prec(&args.get("prec", "f64"))?,
             };
             race::serve::serve(&opts)
         }
@@ -369,6 +395,88 @@ fn cmd_mpk(args: &Args) -> Result<()> {
             flops / dt_naive / 1e9
         );
         println!("  max rel err vs {p} reference sweeps: {err:.2e}");
+    }
+    Ok(())
+}
+
+/// Delta-pack feasibility over the whole corpus: how many entries escape
+/// the u16 reach after RCM, what the pack saves in storage bytes and in
+/// cachesim-measured SymmSpMV traffic, and whether the automatic CSR
+/// fallback would trigger (`Operator::effective_storage`).
+fn cmd_pack_stats(args: &Args) -> Result<()> {
+    let small = args.has("small");
+    let mach = args.get("machine", "skx");
+    let m = machine::by_name(&mach).ok_or_else(|| anyhow::anyhow!("unknown machine {mach}"))?;
+    let only = args.flags.get("only").cloned();
+    let json = args.has("json");
+    if !json {
+        println!(
+            "{:>3} {:<26} {:>8} {:>9} {:>7} {:>6} {:>8} {:>8} {:>8} {:>8} {:>9}",
+            "idx",
+            "matrix",
+            "N_r",
+            "nnz_u",
+            "bw_rcm",
+            "esc",
+            "escrows",
+            "csrB/nz",
+            "p64B/nz",
+            "p32B/nz",
+            "storage"
+        );
+    }
+    let mut rows = Vec::new();
+    for e in gen::corpus() {
+        if let Some(f) = &only {
+            if !e.name.eq_ignore_ascii_case(f) {
+                continue;
+            }
+        }
+        let a0 = (e.build)(small);
+        let perm = race::graph::rcm(&a0);
+        let a = a0.permute_symmetric(&perm);
+        let upper = a.upper_triangle();
+        // same shared comparison `benches/traffic_compact.rs` records
+        let cmp = cachesim::compare_symmspmv_pack_traffic(&upper, a.nnz(), &m);
+        let s64 = cmp.stats();
+        let (tr_csr, tr_p64, tr_p32) = (&cmp.tr_csr, &cmp.tr_f64, &cmp.tr_f32);
+        let storage = if cmp.feasible() { "pack" } else { "csr (fallback)" };
+        if json {
+            rows.push(Json::obj(vec![
+                ("index", Json::Num(e.index as f64)),
+                ("matrix", Json::Str(e.name.to_string())),
+                ("nrows", Json::Num(a.nrows() as f64)),
+                ("nnz_upper", Json::Num(upper.nnz() as f64)),
+                ("bw_rcm", Json::Num(a.bandwidth() as f64)),
+                ("escapes", Json::Num(s64.escapes as f64)),
+                ("rows_escaped", Json::Num(s64.rows_escaped as f64)),
+                ("bytes_csr", Json::Num(s64.bytes_csr as f64)),
+                ("bytes_pack_f64", Json::Num(s64.bytes_pack as f64)),
+                ("bytes_pack_f32", Json::Num(cmp.pack_f32.bytes() as f64)),
+                ("csr_bytes_per_nnz", Json::Num(tr_csr.bytes_per_nnz_full)),
+                ("pack_f64_bytes_per_nnz", Json::Num(tr_p64.bytes_per_nnz_full)),
+                ("pack_f32_bytes_per_nnz", Json::Num(tr_p32.bytes_per_nnz_full)),
+                ("feasible", Json::Bool(cmp.feasible())),
+            ]));
+        } else {
+            println!(
+                "{:>3} {:<26} {:>8} {:>9} {:>7} {:>6} {:>8} {:>8.2} {:>8.2} {:>8.2} {:>9}",
+                e.index,
+                e.name,
+                a.nrows(),
+                upper.nnz(),
+                a.bandwidth(),
+                s64.escapes,
+                s64.rows_escaped,
+                tr_csr.bytes_per_nnz_full,
+                tr_p64.bytes_per_nnz_full,
+                tr_p32.bytes_per_nnz_full,
+                storage
+            );
+        }
+    }
+    if json {
+        println!("{}", Json::obj(vec![("pack_stats", Json::Arr(rows))]).to_string());
     }
     Ok(())
 }

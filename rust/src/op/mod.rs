@@ -27,6 +27,13 @@
 //!   callers. Hot paths that want to stay in executor numbering use
 //!   [`Operator::permute`]/[`Operator::unpermute`] and the `_permuted`
 //!   entry points.
+//! * A [`Storage`] knob selects the matrix encoding the kernels stream:
+//!   plain CSR, or (the default) the delta-compressed
+//!   [`CsrPack`](crate::sparse::CsrPack) — u16 column deltas made viable
+//!   by the RCM preorder, built lazily on first use, automatically
+//!   falling back to CSR when the pack would not be smaller. f64 packs
+//!   are bit-identical on every backend; [`OpConfig::precision`] drops
+//!   values to f32 for another 4 bytes/nnz at ~1e-7 relative error.
 //!
 //! All three backends produce **bit-identical** results for every
 //! kernel: `Serial` executes the compiled step program inline in program
@@ -45,11 +52,11 @@
 
 use crate::coordinator::{permute_vec, unpermute_vec};
 use crate::graph;
-use crate::kernels;
+use crate::kernels::{self, PowerMat};
 use crate::mpk::{MpkConfig, MpkPlan};
 use crate::pool::{self, StepProgram, WorkUnit, WorkerPool};
 use crate::race::{RaceConfig, RaceEngine};
-use crate::sparse::Csr;
+use crate::sparse::{Csr, CsrPack, ValPrec};
 use anyhow::{bail, Result};
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex, OnceLock};
@@ -66,6 +73,23 @@ pub enum Backend {
     /// one barrier per step. The production path.
     #[default]
     Pool,
+}
+
+/// Which matrix encoding the hot kernels stream (see
+/// [`crate::sparse::CsrPack`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Storage {
+    /// Plain CSR: u32 absolute columns + f64 values.
+    Csr,
+    /// Delta-compressed pack: u16 column deltas relative to the row
+    /// (viable because RCM bounds the bandwidth) with a u32 escape side
+    /// table, split diagonal, and values at [`OpConfig::precision`].
+    /// Falls back to [`Storage::Csr`] automatically when the pack would
+    /// not be smaller (e.g. post-RCM bandwidth far beyond the u16
+    /// reach — see [`Operator::effective_storage`]). The production
+    /// default: f64 packs are bit-identical to CSR on every backend.
+    #[default]
+    Pack,
 }
 
 /// Builder-style configuration for [`Operator::build`].
@@ -85,6 +109,14 @@ pub struct OpConfig {
     /// Share a caller-owned worker pool instead of spawning one per
     /// handle — the serve registry points every matrix at one pool.
     pub shared_pool: Option<Arc<WorkerPool>>,
+    /// Matrix encoding the kernels stream (default [`Storage::Pack`],
+    /// which self-falls-back to CSR when the pack would not be smaller).
+    pub storage: Storage,
+    /// Value precision of packed storage (default [`ValPrec::F64`],
+    /// bit-identical; [`ValPrec::F32`] trades ~1e-7 relative error on
+    /// the matrix entries for 4 fewer bytes/nnz). Ignored for
+    /// [`Storage::Csr`].
+    pub prec: ValPrec,
 }
 
 impl Default for OpConfig {
@@ -95,6 +127,8 @@ impl Default for OpConfig {
             cache_bytes: 2 << 20,
             rcm: true,
             shared_pool: None,
+            storage: Storage::Pack,
+            prec: ValPrec::F64,
         }
     }
 }
@@ -155,6 +189,18 @@ impl OpConfig {
         self.shared_pool = Some(pool);
         self
     }
+
+    /// Matrix encoding the kernels stream.
+    pub fn storage(mut self, storage: Storage) -> Self {
+        self.storage = storage;
+        self
+    }
+
+    /// Value precision of packed storage.
+    pub fn precision(mut self, prec: ValPrec) -> Self {
+        self.prec = prec;
+        self
+    }
 }
 
 /// A resident level-blocked matrix-power schedule: plan + compiled step
@@ -164,6 +210,11 @@ pub struct MpkHandle {
     plan: MpkPlan,
     prog: StepProgram,
     total_perm: Vec<u32>,
+    /// Lazily built `Full`-kind pack of the plan's permuted matrix
+    /// (`None` once built = infeasible, fell back to CSR).
+    pack: OnceLock<Option<CsrPack>>,
+    want_pack: bool,
+    prec: ValPrec,
 }
 
 impl MpkHandle {
@@ -176,6 +227,29 @@ impl MpkHandle {
     /// The compiled step program the pool backend executes.
     pub fn program(&self) -> &StepProgram {
         &self.prog
+    }
+
+    /// The delta-compressed pack of the plan's permuted matrix, if packed
+    /// storage is configured and pays (built on first use, cached).
+    pub fn pack(&self) -> Option<&CsrPack> {
+        if !self.want_pack {
+            return None;
+        }
+        self.pack
+            .get_or_init(|| {
+                let p = CsrPack::pack_full(self.plan.permuted_matrix(), self.prec);
+                if p.feasible() { Some(p) } else { None }
+            })
+            .as_ref()
+    }
+
+    /// The storage the power executors stream (pack when configured and
+    /// feasible, the plan's CSR otherwise).
+    pub fn power_mat(&self) -> PowerMat<'_> {
+        match self.pack() {
+            Some(p) => PowerMat::Pack(p),
+            None => PowerMat::Csr(self.plan.permuted_matrix()),
+        }
     }
 
     /// Composed permutation `perm[old] = new`, original → plan numbering.
@@ -227,6 +301,9 @@ pub struct Operator {
     total_perm: Vec<u32>,
     program: OnceLock<StepProgram>,
     pool: OnceLock<Arc<WorkerPool>>,
+    /// Lazily built `Upper`-kind pack of `upper` (`None` once built =
+    /// infeasible, the SymmSpMV kernels fall back to CSR).
+    pack: OnceLock<Option<CsrPack>>,
     mpk: Mutex<HashMap<usize, Arc<MpkHandle>>>,
     aux: Mutex<HashMap<usize, Arc<AuxSchedule>>>,
 }
@@ -262,6 +339,7 @@ impl Operator {
             total_perm,
             program: OnceLock::new(),
             pool: OnceLock::new(),
+            pack: OnceLock::new(),
             mpk: Mutex::new(HashMap::new()),
             aux: Mutex::new(HashMap::new()),
         })
@@ -298,6 +376,48 @@ impl Operator {
     /// SymmSpMV kernels and the cache simulator consume.
     pub fn upper(&self) -> &Csr {
         &self.upper
+    }
+
+    /// The delta-compressed upper-triangle pack, if [`Storage::Pack`] is
+    /// configured and the pack is smaller than CSR (built on first use,
+    /// cached for the life of the handle).
+    pub fn pack(&self) -> Option<&CsrPack> {
+        if self.cfg.storage != Storage::Pack {
+            return None;
+        }
+        self.pack
+            .get_or_init(|| {
+                let p = CsrPack::pack_upper(&self.upper, self.cfg.prec);
+                if p.feasible() { Some(p) } else { None }
+            })
+            .as_ref()
+    }
+
+    /// The storage the SymmSpMV kernels actually stream: the configured
+    /// one, downgraded to [`Storage::Csr`] when a configured pack turned
+    /// out infeasible (documented fallback — e.g. post-RCM bandwidth so
+    /// far beyond the u16 delta reach that escapes dominate).
+    ///
+    /// This reports the *SymmSpMV* (Upper-pack) decision only. Each MPK
+    /// plan decides its `Full`-kind pack independently — its biased
+    /// deltas reach ±32767, half the Upper reach, so a matrix with
+    /// post-RCM bandwidth in 32768..=65535 can stream the pack for
+    /// SymmSpMV while its power sweeps fall back to CSR. Check
+    /// [`MpkHandle::pack`] for a specific plan's outcome.
+    pub fn effective_storage(&self) -> Storage {
+        if self.pack().is_some() { Storage::Pack } else { Storage::Csr }
+    }
+
+    /// Like [`Operator::effective_storage`] but without forcing the lazy
+    /// pack build: `None` while the decision is still pending (pack
+    /// configured but no kernel has run yet). Cheap introspection for
+    /// stats endpoints that must not trigger an O(nnz) re-encode.
+    pub fn storage_if_built(&self) -> Option<Storage> {
+        if self.cfg.storage != Storage::Pack {
+            return Some(Storage::Csr);
+        }
+        let built = self.pack.get()?;
+        Some(if built.is_some() { Storage::Pack } else { Storage::Csr })
     }
 
     /// The (RCM-preordered) matrix the schedules were built on.
@@ -394,19 +514,52 @@ impl Operator {
         assert_eq!(xp.len(), self.n());
         assert_eq!(bp.len(), self.n());
         bp.iter_mut().for_each(|v| *v = 0.0);
-        match self.cfg.backend {
-            Backend::Serial => {
+        match (self.cfg.backend, self.pack()) {
+            (Backend::Serial, None) => {
+                // range/length invariants established by the asserts
+                // above; program units are schedule invariants — per-unit
+                // checks hoisted (see kernels::symmspmv_range docs)
                 let prog = self.program();
                 for s in 0..prog.nsteps() {
                     for u in prog.step(s) {
                         let (lo, hi) = (u.start as usize, u.end as usize);
-                        kernels::symmspmv_range(&self.upper, xp, bp, lo, hi);
+                        kernels::symmspmv_range_unchecked(&self.upper, xp, bp, lo, hi);
                     }
                 }
             }
-            Backend::Scoped => kernels::symmspmv_race(&self.eng, &self.upper, xp, bp),
-            Backend::Pool => {
+            (Backend::Serial, Some(pk)) => {
+                let prog = self.program();
+                for s in 0..prog.nsteps() {
+                    for u in prog.step(s) {
+                        let (lo, hi) = (u.start as usize, u.end as usize);
+                        kernels::symmspmv_range_pack_unchecked(pk, xp, bp, lo, hi);
+                    }
+                }
+            }
+            (Backend::Scoped, None) => kernels::symmspmv_race(&self.eng, &self.upper, xp, bp),
+            (Backend::Scoped, Some(pk)) => {
+                // program-order scoped sweep: bit-identical to the tree
+                // execution (order-preserving flatten, crate::pool docs)
+                let len = bp.len();
+                let b = kernels::SendPtr(bp.as_mut_ptr());
+                run_program_scoped(self.program(), self.cfg.race.threads, |u| {
+                    // SAFETY: units of one step are distance-2
+                    // independent — written index sets are disjoint.
+                    let bp = unsafe { std::slice::from_raw_parts_mut(b.0, len) };
+                    kernels::symmspmv_range_pack_unchecked(
+                        pk,
+                        xp,
+                        bp,
+                        u.start as usize,
+                        u.end as usize,
+                    );
+                });
+            }
+            (Backend::Pool, None) => {
                 pool::symmspmv_pool(self.worker_pool(), self.program(), &self.upper, xp, bp)
+            }
+            (Backend::Pool, Some(pk)) => {
+                pool::symmspmv_pool_pack(self.worker_pool(), self.program(), pk, xp, bp)
             }
         }
     }
@@ -453,8 +606,8 @@ impl Operator {
         assert_eq!(xsf.len(), n * nrhs);
         assert_eq!(bsf.len(), n * nrhs);
         bsf.iter_mut().for_each(|v| *v = 0.0);
-        match self.cfg.backend {
-            Backend::Serial => {
+        match (self.cfg.backend, self.pack()) {
+            (Backend::Serial, None) => {
                 let prog = self.program();
                 for s in 0..prog.nsteps() {
                     for u in prog.step(s) {
@@ -469,7 +622,22 @@ impl Operator {
                     }
                 }
             }
-            Backend::Scoped => {
+            (Backend::Serial, Some(pk)) => {
+                let prog = self.program();
+                for s in 0..prog.nsteps() {
+                    for u in prog.step(s) {
+                        kernels::symmspmv_range_multi_pack(
+                            pk,
+                            xsf,
+                            bsf,
+                            nrhs,
+                            u.start as usize,
+                            u.end as usize,
+                        );
+                    }
+                }
+            }
+            (Backend::Scoped, pk) => {
                 let len = bsf.len();
                 let bp = kernels::SendPtr(bsf.as_mut_ptr());
                 run_program_scoped(self.program(), self.cfg.race.threads, |u| {
@@ -477,20 +645,38 @@ impl Operator {
                     // independent; disjoint row/col sets scale to
                     // disjoint flat ranges `idx * nrhs + j`.
                     let bs = unsafe { std::slice::from_raw_parts_mut(bp.0, len) };
-                    kernels::symmspmv_range_multi(
-                        &self.upper,
-                        xsf,
-                        bs,
-                        nrhs,
-                        u.start as usize,
-                        u.end as usize,
-                    );
+                    match pk {
+                        Some(pk) => kernels::symmspmv_range_multi_pack(
+                            pk,
+                            xsf,
+                            bs,
+                            nrhs,
+                            u.start as usize,
+                            u.end as usize,
+                        ),
+                        None => kernels::symmspmv_range_multi(
+                            &self.upper,
+                            xsf,
+                            bs,
+                            nrhs,
+                            u.start as usize,
+                            u.end as usize,
+                        ),
+                    }
                 });
             }
-            Backend::Pool => pool::symmspmv_race_multi(
+            (Backend::Pool, None) => pool::symmspmv_race_multi(
                 self.worker_pool(),
                 self.program(),
                 &self.upper,
+                xsf,
+                bsf,
+                nrhs,
+            ),
+            (Backend::Pool, Some(pk)) => pool::symmspmv_multi_pool_pack(
+                self.worker_pool(),
+                self.program(),
+                pk,
                 xsf,
                 bsf,
                 nrhs,
@@ -529,7 +715,14 @@ impl Operator {
         let plan = MpkPlan::from_engine(&self.a_rcm, &self.eng, &mcfg)?;
         let prog = pool::compile_mpk(&plan, self.cfg.race.threads);
         let total_perm = graph::compose_perm(&self.rcm_perm, &plan.perm);
-        Ok(MpkHandle { plan, prog, total_perm })
+        Ok(MpkHandle {
+            plan,
+            prog,
+            total_perm,
+            pack: OnceLock::new(),
+            want_pack: self.cfg.storage == Storage::Pack,
+            prec: self.cfg.prec,
+        })
     }
 
     /// Force the resident plan for power `p` to exist — callers that
@@ -551,11 +744,12 @@ impl Operator {
     /// Matrix powers in the plan's numbering (`xp` pre-permuted with
     /// [`MpkHandle::permute`]) — the allocation-light path benches time.
     pub fn powers_permuted(&self, h: &MpkHandle, xp: &[f64]) -> Vec<Vec<f64>> {
+        let m = h.power_mat();
         match self.cfg.backend {
-            Backend::Serial => kernels::mpk_powers(&h.plan, xp, 1),
-            Backend::Scoped => kernels::mpk_powers(&h.plan, xp, self.cfg.race.threads),
+            Backend::Serial => kernels::mpk_powers_on(&h.plan, m, xp, 1),
+            Backend::Scoped => kernels::mpk_powers_on(&h.plan, m, xp, self.cfg.race.threads),
             Backend::Pool => {
-                pool::mpk_powers_pool(self.worker_pool(), &h.prog, &h.plan, xp)
+                pool::mpk_powers_pool_on(self.worker_pool(), &h.prog, &h.plan, m, xp)
             }
         }
     }
@@ -585,11 +779,14 @@ impl Operator {
                 xsf[new as usize * m + j] = x[old];
             }
         }
+        let pm = h.power_mat();
         let ys = match self.cfg.backend {
-            Backend::Serial => kernels::mpk_powers_multi(&h.plan, &xsf, m, 1),
-            Backend::Scoped => kernels::mpk_powers_multi(&h.plan, &xsf, m, self.cfg.race.threads),
+            Backend::Serial => kernels::mpk_powers_multi_on(&h.plan, pm, &xsf, m, 1),
+            Backend::Scoped => {
+                kernels::mpk_powers_multi_on(&h.plan, pm, &xsf, m, self.cfg.race.threads)
+            }
             Backend::Pool => {
-                pool::mpk_powers_multi_pool(self.worker_pool(), &h.prog, &h.plan, &xsf, m)
+                pool::mpk_powers_multi_pool_on(self.worker_pool(), &h.prog, &h.plan, pm, &xsf, m)
             }
         };
         let last = &ys[p - 1];
@@ -622,15 +819,20 @@ impl Operator {
         let h = self.mpk(p)?;
         let zp = permute_vec(z_prev, &h.total_perm);
         let z0p = permute_vec(z0, &h.total_perm);
+        let m = h.power_mat();
         let zs = match self.cfg.backend {
-            Backend::Serial => kernels::mpk_three_term(&h.plan, &zp, &z0p, sigma, tau, rho, 1),
-            Backend::Scoped => {
-                kernels::mpk_three_term(&h.plan, &zp, &z0p, sigma, tau, rho, self.cfg.race.threads)
+            Backend::Serial => {
+                kernels::mpk_three_term_on(&h.plan, m, &zp, &z0p, sigma, tau, rho, 1)
             }
-            Backend::Pool => pool::mpk_three_term_pool(
+            Backend::Scoped => {
+                let t = self.cfg.race.threads;
+                kernels::mpk_three_term_on(&h.plan, m, &zp, &z0p, sigma, tau, rho, t)
+            }
+            Backend::Pool => pool::mpk_three_term_pool_on(
                 self.worker_pool(),
                 &h.prog,
                 &h.plan,
+                m,
                 &zp,
                 &z0p,
                 sigma,

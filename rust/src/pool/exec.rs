@@ -18,9 +18,9 @@
 
 use super::program::StepProgram;
 use super::workers::WorkerPool;
-use crate::kernels::{self, SendPtr};
+use crate::kernels::{self, PowerMat, SendPtr};
 use crate::mpk::MpkPlan;
-use crate::sparse::Csr;
+use crate::sparse::{Csr, CsrPack};
 
 /// SymmSpMV `b = A x` on a tree program (upper-triangle storage, permuted
 /// numbering). **`b` must be zeroed by the caller** (same contract as
@@ -34,13 +34,67 @@ pub fn symmspmv_pool(
 ) {
     assert_eq!(upper.nrows(), x.len());
     assert_eq!(upper.nrows(), b.len());
+    assert!(prog.max_row() <= upper.nrows(), "program was compiled for a larger matrix");
+    debug_assert!(upper.validate().is_ok());
     let n = b.len();
     let bp = SendPtr(b.as_mut_ptr());
     pool.execute(prog, |u| {
         // SAFETY: units of one step are distance-2 independent — their
         // written index sets (own rows + upper partners) are disjoint.
         let b = unsafe { std::slice::from_raw_parts_mut(bp.0, n) };
-        kernels::symmspmv_range(upper, x, b, u.start as usize, u.end as usize);
+        // range/length invariants validated once above; per-unit entry is
+        // the hoisted-assert hot path (see kernels::symmspmv_range docs)
+        kernels::symmspmv_range_unchecked(upper, x, b, u.start as usize, u.end as usize);
+    });
+}
+
+/// SymmSpMV on a tree program over [`CsrPack`] storage (`Upper` kind) —
+/// the traffic-compact twin of [`symmspmv_pool`]; f64 packs are
+/// bit-identical. **`b` must be zeroed by the caller.**
+pub fn symmspmv_pool_pack(
+    pool: &WorkerPool,
+    prog: &StepProgram,
+    pack: &CsrPack,
+    x: &[f64],
+    b: &mut [f64],
+) {
+    assert_eq!(pack.nrows(), x.len());
+    assert_eq!(pack.nrows(), b.len());
+    assert!(prog.max_row() <= pack.nrows(), "program was compiled for a larger matrix");
+    debug_assert!(pack.validate().is_ok());
+    let n = b.len();
+    let bp = SendPtr(b.as_mut_ptr());
+    pool.execute(prog, |u| {
+        // SAFETY: identical write-disjointness argument as symmspmv_pool
+        // (the pack encodes the same sparsity pattern).
+        let b = unsafe { std::slice::from_raw_parts_mut(bp.0, n) };
+        kernels::symmspmv_range_pack_unchecked(pack, x, b, u.start as usize, u.end as usize);
+    });
+}
+
+/// Multi-vector SymmSpMV on a tree program over [`CsrPack`] storage —
+/// the packed twin of [`symmspmv_race_multi`] (row-major vectors).
+/// **`bs` must be zeroed by the caller.**
+pub fn symmspmv_multi_pool_pack(
+    pool: &WorkerPool,
+    prog: &StepProgram,
+    pack: &CsrPack,
+    xs: &[f64],
+    bs: &mut [f64],
+    nrhs: usize,
+) {
+    let n = pack.nrows();
+    assert!(nrhs > 0);
+    assert_eq!(xs.len(), n * nrhs);
+    assert_eq!(bs.len(), n * nrhs);
+    assert!(prog.max_row() <= n, "program was compiled for a larger matrix");
+    let len = bs.len();
+    let bp = SendPtr(bs.as_mut_ptr());
+    pool.execute(prog, |u| {
+        // SAFETY: disjoint row/col index sets scale to disjoint flat
+        // ranges `idx * nrhs + j` — the distance-2 argument is unchanged.
+        let bs = unsafe { std::slice::from_raw_parts_mut(bp.0, len) };
+        kernels::symmspmv_range_multi_pack(pack, xs, bs, nrhs, u.start as usize, u.end as usize);
     });
 }
 
@@ -120,8 +174,27 @@ pub fn mpk_execute_pool(
     tau: f64,
     rho: f64,
 ) {
-    let a = plan.permuted_matrix();
-    let n = a.nrows();
+    let m = PowerMat::Csr(plan.permuted_matrix());
+    mpk_execute_pool_on(pool, prog, plan, m, bufs, base, sigma, tau, rho)
+}
+
+/// [`mpk_execute_pool`] over an explicit storage encoding: `m` must
+/// encode `plan.permuted_matrix()` (CSR or its `Full`-kind pack — f64
+/// packs are bit-identical, see [`kernels::mpk_execute_on`]).
+#[allow(clippy::too_many_arguments)]
+pub fn mpk_execute_pool_on(
+    pool: &WorkerPool,
+    prog: &StepProgram,
+    plan: &MpkPlan,
+    m: PowerMat<'_>,
+    bufs: &mut [Vec<f64>],
+    base: usize,
+    sigma: f64,
+    tau: f64,
+    rho: f64,
+) {
+    let n = m.nrows();
+    assert_eq!(n, plan.permuted_matrix().nrows(), "storage does not match the plan");
     assert_eq!(bufs.len(), base + plan.cfg.p + 1, "need base + p + 1 vectors");
     assert!(rho == 0.0 || base >= 1, "three-term recurrence needs base >= 1");
     for b in bufs.iter() {
@@ -144,7 +217,7 @@ pub fn mpk_execute_pool(
             None
         };
         let (lo, hi) = (u.start as usize, u.end as usize);
-        kernels::spmv_range_affine(a, src, acc, dst, sigma, tau, rho, lo, hi);
+        m.affine(src, acc, dst, sigma, tau, rho, lo, hi);
     });
 }
 
@@ -164,8 +237,27 @@ pub fn mpk_execute_multi_pool(
     tau: f64,
     rho: f64,
 ) {
-    let a = plan.permuted_matrix();
-    let n = a.nrows();
+    let m = PowerMat::Csr(plan.permuted_matrix());
+    mpk_execute_multi_pool_on(pool, prog, plan, m, bufs, nrhs, base, sigma, tau, rho)
+}
+
+/// [`mpk_execute_multi_pool`] over an explicit storage encoding (see
+/// [`mpk_execute_pool_on`]).
+#[allow(clippy::too_many_arguments)]
+pub fn mpk_execute_multi_pool_on(
+    pool: &WorkerPool,
+    prog: &StepProgram,
+    plan: &MpkPlan,
+    m: PowerMat<'_>,
+    bufs: &mut [Vec<f64>],
+    nrhs: usize,
+    base: usize,
+    sigma: f64,
+    tau: f64,
+    rho: f64,
+) {
+    let n = m.nrows();
+    assert_eq!(n, plan.permuted_matrix().nrows(), "storage does not match the plan");
     assert!(nrhs > 0);
     assert_eq!(bufs.len(), base + plan.cfg.p + 1, "need base + p + 1 vector blocks");
     assert!(rho == 0.0 || base >= 1, "three-term recurrence needs base >= 1");
@@ -177,7 +269,7 @@ pub fn mpk_execute_multi_pool(
     pool.execute(prog, |u| {
         let k = u.power as usize;
         debug_assert!(k >= 1 && base + k < ptrs.len());
-        // SAFETY: same argument as `mpk_execute_pool`, scaled to flat
+        // SAFETY: same argument as `mpk_execute_pool_on`, scaled to flat
         // ranges `row * nrhs + j` — disjoint row chunks stay disjoint.
         let src = unsafe { std::slice::from_raw_parts(ptrs[base + k - 1].0 as *const f64, len) };
         let dst = unsafe { std::slice::from_raw_parts_mut(ptrs[base + k].0, len) };
@@ -187,7 +279,7 @@ pub fn mpk_execute_multi_pool(
             None
         };
         let (lo, hi) = (u.start as usize, u.end as usize);
-        kernels::spmv_range_affine_multi(a, src, acc, dst, nrhs, sigma, tau, rho, lo, hi);
+        m.affine_multi(src, acc, dst, nrhs, sigma, tau, rho, lo, hi);
     });
 }
 
@@ -201,6 +293,19 @@ pub fn mpk_powers_multi_pool(
     xs: &[f64],
     nrhs: usize,
 ) -> Vec<Vec<f64>> {
+    let m = PowerMat::Csr(plan.permuted_matrix());
+    mpk_powers_multi_pool_on(pool, prog, plan, m, xs, nrhs)
+}
+
+/// [`mpk_powers_multi_pool`] over an explicit storage encoding.
+pub fn mpk_powers_multi_pool_on(
+    pool: &WorkerPool,
+    prog: &StepProgram,
+    plan: &MpkPlan,
+    m: PowerMat<'_>,
+    xs: &[f64],
+    nrhs: usize,
+) -> Vec<Vec<f64>> {
     let p = plan.cfg.p;
     let n = plan.permuted_matrix().nrows();
     assert_eq!(xs.len(), n * nrhs);
@@ -209,7 +314,7 @@ pub fn mpk_powers_multi_pool(
     for _ in 0..p {
         bufs.push(vec![0.0; n * nrhs]);
     }
-    mpk_execute_multi_pool(pool, prog, plan, &mut bufs, nrhs, 0, 1.0, 0.0, 0.0);
+    mpk_execute_multi_pool_on(pool, prog, plan, m, &mut bufs, nrhs, 0, 1.0, 0.0, 0.0);
     bufs.remove(0);
     bufs
 }
@@ -223,6 +328,18 @@ pub fn mpk_powers_pool(
     plan: &MpkPlan,
     x: &[f64],
 ) -> Vec<Vec<f64>> {
+    let m = PowerMat::Csr(plan.permuted_matrix());
+    mpk_powers_pool_on(pool, prog, plan, m, x)
+}
+
+/// [`mpk_powers_pool`] over an explicit storage encoding.
+pub fn mpk_powers_pool_on(
+    pool: &WorkerPool,
+    prog: &StepProgram,
+    plan: &MpkPlan,
+    m: PowerMat<'_>,
+    x: &[f64],
+) -> Vec<Vec<f64>> {
     let p = plan.cfg.p;
     let n = x.len();
     let mut bufs = Vec::with_capacity(p + 1);
@@ -230,7 +347,7 @@ pub fn mpk_powers_pool(
     for _ in 0..p {
         bufs.push(vec![0.0; n]);
     }
-    mpk_execute_pool(pool, prog, plan, &mut bufs, 0, 1.0, 0.0, 0.0);
+    mpk_execute_pool_on(pool, prog, plan, m, &mut bufs, 0, 1.0, 0.0, 0.0);
     bufs.remove(0);
     bufs
 }
@@ -247,6 +364,23 @@ pub fn mpk_three_term_pool(
     tau: f64,
     rho: f64,
 ) -> Vec<Vec<f64>> {
+    let m = PowerMat::Csr(plan.permuted_matrix());
+    mpk_three_term_pool_on(pool, prog, plan, m, z_prev, z0, sigma, tau, rho)
+}
+
+/// [`mpk_three_term_pool`] over an explicit storage encoding.
+#[allow(clippy::too_many_arguments)]
+pub fn mpk_three_term_pool_on(
+    pool: &WorkerPool,
+    prog: &StepProgram,
+    plan: &MpkPlan,
+    m: PowerMat<'_>,
+    z_prev: &[f64],
+    z0: &[f64],
+    sigma: f64,
+    tau: f64,
+    rho: f64,
+) -> Vec<Vec<f64>> {
     let p = plan.cfg.p;
     let n = z0.len();
     assert_eq!(z_prev.len(), n);
@@ -256,7 +390,7 @@ pub fn mpk_three_term_pool(
     for _ in 0..p {
         bufs.push(vec![0.0; n]);
     }
-    mpk_execute_pool(pool, prog, plan, &mut bufs, 1, sigma, tau, rho);
+    mpk_execute_pool_on(pool, prog, plan, m, &mut bufs, 1, sigma, tau, rho);
     bufs.drain(0..2);
     bufs
 }

@@ -51,6 +51,8 @@ pub struct StepProgram {
     pub units: Vec<WorkUnit>,
     /// `nsteps + 1` offsets into `units`.
     pub step_ptr: Vec<u32>,
+    /// One-past-last row any unit touches (cached at build time).
+    max_row: u32,
 }
 
 impl StepProgram {
@@ -65,7 +67,8 @@ impl StepProgram {
                 step_ptr.push(units.len() as u32);
             }
         }
-        StepProgram { units, step_ptr }
+        let max_row = units.iter().map(|u| u.end).max().unwrap_or(0);
+        StepProgram { units, step_ptr, max_row }
     }
 
     /// Number of steps (== barriers the pool will cross).
@@ -86,6 +89,15 @@ impl StepProgram {
     /// Widest step (units available to run concurrently).
     pub fn max_width(&self) -> usize {
         (0..self.nsteps()).map(|s| self.step(s).len()).max().unwrap_or(0)
+    }
+
+    /// One-past-last row any unit touches (O(1), cached at build time).
+    /// Executors whose per-unit work runs bounds-check-free validate this
+    /// against their matrix once per kernel call, so a program/matrix
+    /// mismatch stays a deterministic panic instead of an out-of-bounds
+    /// access.
+    pub fn max_row(&self) -> usize {
+        self.max_row as usize
     }
 
     /// True iff the tree-program units partition `0..n` (each row covered

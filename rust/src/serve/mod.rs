@@ -37,8 +37,9 @@ pub use batch::BatchResult;
 pub use server::{serve, Server};
 
 use crate::coordinator::resolve_matrix;
-use crate::op::{OpConfig, Operator};
+use crate::op::{OpConfig, Operator, Storage};
 use crate::pool::WorkerPool;
+use crate::sparse::ValPrec;
 use crate::util::json::Json;
 use anyhow::{Context, Result};
 use std::collections::HashMap;
@@ -67,6 +68,14 @@ pub struct ServeOptions {
     /// Dynamic batching window in microseconds (0 = natural batching
     /// only). Leaders wait at most `min(window, last kernel latency)`.
     pub batch_window_us: u64,
+    /// Matrix encoding the resident operators stream (default
+    /// [`Storage::Pack`], which self-falls-back to CSR per matrix when
+    /// the pack would not be smaller).
+    pub storage: Storage,
+    /// Value precision of packed storage (default [`ValPrec::F64`],
+    /// bit-identical responses; `F32` trades ~1e-7 relative error for
+    /// less matrix traffic per request).
+    pub prec: ValPrec,
 }
 
 impl Default for ServeOptions {
@@ -80,6 +89,8 @@ impl Default for ServeOptions {
             mpk_power_max: 8,
             mpk_cache_bytes: 2 << 20,
             batch_window_us: 0,
+            storage: Storage::Pack,
+            prec: ValPrec::F64,
         }
     }
 }
@@ -187,6 +198,8 @@ impl MatvecService {
                 OpConfig::new()
                     .threads(threads)
                     .cache_bytes(opts.mpk_cache_bytes.max(1))
+                    .storage(opts.storage)
+                    .precision(opts.prec)
                     .shared_pool(pool.clone()),
             )
             .with_context(|| format!("compiling operator for {spec:?}"))?;
@@ -357,6 +370,15 @@ impl MatvecService {
                     ("eta", Json::Num(e.eta())),
                     ("steps", Json::Num(e.op.program().nsteps() as f64)),
                     ("units", Json::Num(e.op.program().nunits() as f64)),
+                    (
+                        // reported without forcing the lazy pack build:
+                        // "pending" until the first kernel call decides
+                        "storage",
+                        Json::Str(match e.op.storage_if_built() {
+                            Some(s) => format!("{s:?}").to_lowercase(),
+                            None => "pending".to_string(),
+                        }),
+                    ),
                 ])
             })
             .collect();
@@ -697,6 +719,33 @@ mod tests {
         let s = svc.stats_json();
         let stats = s.get("stats").unwrap();
         assert_eq!(stats.get("batched_vectors").and_then(Json::as_f64), Some(8.0));
+    }
+
+    #[test]
+    fn storage_knob_plumbs_through_and_answers_are_bit_identical() {
+        let mut o_pack = opts(&["stencil2d:8x8"]);
+        o_pack.storage = Storage::Pack;
+        let mut o_csr = o_pack.clone();
+        o_csr.storage = Storage::Csr;
+        let pack = MatvecService::build(&o_pack).unwrap();
+        let csr = MatvecService::build(&o_csr).unwrap();
+        assert_eq!(pack.entries()[0].op().effective_storage(), Storage::Pack);
+        assert_eq!(csr.entries()[0].op().effective_storage(), Storage::Csr);
+        let n = pack.entries()[0].n;
+        let x: Vec<f64> = (0..n).map(|i| ((i * 3 + 1) % 7) as f64 * 0.4 - 1.2).collect();
+        let (bp, _, _) = pack.matvec(None, &x).unwrap();
+        let (bc, _, _) = csr.matvec(None, &x).unwrap();
+        assert_eq!(bp, bc, "f64 pack responses must be bit-identical to CSR");
+        let (yp, _, _) = pack.mpk(None, &x, 3).unwrap();
+        let (yc, _, _) = csr.mpk(None, &x, 3).unwrap();
+        assert_eq!(yp, yc, "MPK pack responses must be bit-identical to CSR");
+        // f32 storage keeps serving within single-precision error
+        let mut o_f32 = o_pack.clone();
+        o_f32.prec = ValPrec::F32;
+        let svc32 = MatvecService::build(&o_f32).unwrap();
+        let (b32, _, _) = svc32.matvec(None, &x).unwrap();
+        let err = crate::op::rel_err(&bc, &b32);
+        assert!(err < 1e-5, "f32 serve error {err:.2e}");
     }
 
     #[test]

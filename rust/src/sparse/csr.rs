@@ -42,14 +42,6 @@ impl Coo {
         for &(r, _, _) in &self.entries {
             row_counts[r as usize + 1] += 1;
         }
-        let mut row_ptr: Vec<u32> = Vec::with_capacity(n + 1);
-        let mut acc = 0u32;
-        for c in &row_counts {
-            acc += c;
-            row_ptr.push(acc);
-        }
-        // row_ptr currently holds end offsets shifted by one row; rebuild
-        // classic prefix sums.
         let mut ptr = vec![0u32; n + 1];
         for i in 0..n {
             ptr[i + 1] = ptr[i] + row_counts[i + 1];

@@ -1,12 +1,15 @@
 //! Sparse matrix substrate: CSR storage, COO assembly, MatrixMarket I/O,
-//! symmetric permutation and matrix statistics (Table 2 quantities).
+//! symmetric permutation, matrix statistics (Table 2 quantities) and the
+//! traffic-compact delta pack ([`CsrPack`]) the hot kernels stream.
 
 mod csr;
 mod ell;
 mod mm;
+mod pack;
 mod stats;
 
 pub use csr::{Coo, Csr};
 pub use ell::SymmEllPack;
 pub use mm::{read_matrix_market, write_matrix_market};
+pub use pack::{CsrPack, PackKind, PackStats, PackVals, ValPrec, ESCAPE, FULL_BIAS};
 pub use stats::MatrixStats;

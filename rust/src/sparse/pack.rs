@@ -1,0 +1,555 @@
+//! Traffic-compact CSR packs: delta-compressed column indices.
+//!
+//! The Roofline analysis (§3) makes SymmSpMV purely data-traffic bound,
+//! so after the symmetric-storage halving the next lever is shrinking the
+//! bytes every nonzero streams. RCM preordering (applied by
+//! `Operator::build`) bounds the column *bandwidth*, which is exactly
+//! what makes narrow delta-coded indices viable: instead of a `u32`
+//! absolute column per nonzero, [`CsrPack`] stores a **`u16` delta
+//! relative to the row index**, with the rare out-of-band entries RCM
+//! leaves behind escaping to a `u32` side table. Values stay `f64`
+//! ([`ValPrec::F64`], bit-identical kernels) or drop to single precision
+//! ([`ValPrec::F32`]) for another 4 bytes/nnz.
+//!
+//! Two encodings share the struct:
+//!
+//! * [`PackKind::Upper`] — upper-triangle storage with the diagonal
+//!   *split out* into its own dense array (every row has one, by the
+//!   [`Csr::upper_triangle`] convention) and the strictly-upper body
+//!   delta-coded as `col - row` (1..=65535, unsigned: the full `u16`
+//!   reach). This feeds the SymmSpMV kernels.
+//! * [`PackKind::Full`] — general square storage for the MPK power
+//!   sweeps: *all* entries (diagonal included, in sorted column order so
+//!   accumulation order — and hence every f64 bit — matches the CSR
+//!   kernel) with the delta biased by [`FULL_BIAS`] to cover
+//!   `col - row` in −32767..=32767.
+//!
+//! In both kinds the reserved code [`ESCAPE`] (0 — never a valid
+//! encoding, the diagonal being split or bias-shifted) redirects to the
+//! next entry of `esc_col`; `esc_ptr` gives the per-row escape offsets so
+//! a range kernel starting at row `r` seeds its escape cursor with one
+//! lookup. Packing never fails — a matrix wider than the delta reach
+//! simply escapes more — but [`CsrPack::bytes`] lets callers fall back to
+//! plain CSR when the pack stops paying (the `Operator` does this
+//! automatically).
+
+use super::Csr;
+
+/// Value precision of a [`CsrPack`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ValPrec {
+    /// `f64` values — kernels are bit-identical to the CSR path.
+    #[default]
+    F64,
+    /// `f32` values (converted to `f64` at use): 4 fewer bytes/nnz for a
+    /// ~1e-7 relative perturbation of the matrix entries.
+    F32,
+}
+
+impl ValPrec {
+    /// Bytes per stored value.
+    pub fn bytes(self) -> usize {
+        match self {
+            ValPrec::F64 => 8,
+            ValPrec::F32 => 4,
+        }
+    }
+}
+
+/// Which matrix shape a [`CsrPack`] encodes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PackKind {
+    /// Upper triangle, diagonal split out, unsigned deltas (SymmSpMV).
+    Upper,
+    /// Full square matrix, diagonal in place, biased deltas (MPK/SpMV).
+    Full,
+}
+
+/// Reserved delta code: take the next column from the escape side table.
+pub const ESCAPE: u16 = 0;
+/// Bias added to `col - row` in [`PackKind::Full`] encoding.
+pub const FULL_BIAS: i64 = 32768;
+
+/// Value storage of a pack, split per precision. The `diag` array is
+/// used only by [`PackKind::Upper`] (empty for `Full`).
+#[derive(Debug, Clone)]
+pub enum PackVals {
+    /// Double precision (bit-identical kernels).
+    F64 {
+        /// Per-row diagonal values (`Upper` only).
+        diag: Vec<f64>,
+        /// Body values, parallel to `delta`.
+        body: Vec<f64>,
+    },
+    /// Single precision.
+    F32 {
+        /// Per-row diagonal values (`Upper` only).
+        diag: Vec<f32>,
+        /// Body values, parallel to `delta`.
+        body: Vec<f32>,
+    },
+}
+
+/// Pack build/feasibility statistics (the `race-cli pack-stats` row).
+#[derive(Debug, Clone)]
+pub struct PackStats {
+    /// Stored nonzeros (diagonal included for `Upper`).
+    pub nnz: usize,
+    /// Delta-coded body entries.
+    pub body: usize,
+    /// Entries escaped to the `u32` side table.
+    pub escapes: usize,
+    /// Rows owning at least one escaped entry.
+    pub rows_escaped: usize,
+    /// Byte footprint of the equivalent plain CSR (u32 cols, f64 vals).
+    pub bytes_csr: usize,
+    /// Byte footprint of the pack.
+    pub bytes_pack: usize,
+}
+
+impl PackStats {
+    /// `bytes_pack / bytes_csr` — below 1.0 the pack pays.
+    pub fn ratio(&self) -> f64 {
+        self.bytes_pack as f64 / self.bytes_csr.max(1) as f64
+    }
+}
+
+/// A delta-compressed CSR matrix (see module docs for the encoding).
+#[derive(Debug, Clone)]
+pub struct CsrPack {
+    /// Matrix dimension (square).
+    pub n: usize,
+    /// Encoding kind.
+    pub kind: PackKind,
+    /// Per-row offsets into `delta` / body values, length `n + 1`.
+    pub row_ptr: Vec<u32>,
+    /// Encoded column deltas ([`ESCAPE`] = side table), length `body`.
+    pub delta: Vec<u16>,
+    /// Per-row cumulative escape counts, length `n + 1` — **empty when
+    /// nothing escapes**, so in-band matrices pay no side-table bytes.
+    pub esc_ptr: Vec<u32>,
+    /// Absolute columns of escaped entries, in row-major encounter order.
+    pub esc_col: Vec<u32>,
+    /// Values (and the split diagonal for `Upper`).
+    pub vals: PackVals,
+}
+
+impl CsrPack {
+    /// Pack upper-triangle storage (diagonal leading each row, the
+    /// [`Csr::upper_triangle`] convention) for the SymmSpMV kernels.
+    pub fn pack_upper(upper: &Csr, prec: ValPrec) -> CsrPack {
+        let n = upper.nrows();
+        let mut row_ptr = Vec::with_capacity(n + 1);
+        row_ptr.push(0u32);
+        let mut delta = Vec::with_capacity(upper.nnz().saturating_sub(n));
+        let mut esc_counts = vec![0u32; n];
+        let mut esc_col = Vec::new();
+        let mut diag64 = Vec::with_capacity(n);
+        let mut body64 = Vec::with_capacity(delta.capacity());
+        for r in 0..n {
+            let (cols, vals) = upper.row(r);
+            assert!(
+                !cols.is_empty() && cols[0] as usize == r,
+                "pack_upper needs the diagonal leading row {r} (Csr::upper_triangle convention)"
+            );
+            diag64.push(vals[0]);
+            for (&c, &v) in cols.iter().zip(vals).skip(1) {
+                // body columns are strictly upper (d >= 1) for any
+                // Csr::upper_triangle input; a degenerate duplicate
+                // diagonal (d == 0) must NOT alias the ESCAPE code, so
+                // anything outside 1..=u16::MAX goes to the side table
+                let d = (c as i64) - (r as i64);
+                if (1..=u16::MAX as i64).contains(&d) {
+                    delta.push(d as u16);
+                } else {
+                    delta.push(ESCAPE);
+                    esc_col.push(c);
+                    esc_counts[r] += 1;
+                }
+                body64.push(v);
+            }
+            row_ptr.push(delta.len() as u32);
+        }
+        let k = PackKind::Upper;
+        Self::assemble(n, k, prec, row_ptr, delta, esc_counts, esc_col, diag64, body64)
+    }
+
+    /// Pack a general square matrix (sorted in-range columns, the
+    /// [`Csr::validate`] invariants) for the affine SpMV / MPK kernels.
+    /// Entry order — diagonal included, in place — matches the CSR row
+    /// order exactly, so f64 kernels accumulate bit-identically.
+    pub fn pack_full(a: &Csr, prec: ValPrec) -> CsrPack {
+        let n = a.nrows();
+        let mut row_ptr = Vec::with_capacity(n + 1);
+        row_ptr.push(0u32);
+        let mut delta = Vec::with_capacity(a.nnz());
+        let mut esc_counts = vec![0u32; n];
+        let mut esc_col = Vec::new();
+        let mut body64 = Vec::with_capacity(a.nnz());
+        for r in 0..n {
+            let (cols, vals) = a.row(r);
+            for (&c, &v) in cols.iter().zip(vals) {
+                let e = c as i64 - r as i64 + FULL_BIAS;
+                if (1..=u16::MAX as i64).contains(&e) {
+                    delta.push(e as u16);
+                } else {
+                    delta.push(ESCAPE);
+                    esc_col.push(c);
+                    esc_counts[r] += 1;
+                }
+                body64.push(v);
+            }
+            row_ptr.push(delta.len() as u32);
+        }
+        let k = PackKind::Full;
+        Self::assemble(n, k, prec, row_ptr, delta, esc_counts, esc_col, Vec::new(), body64)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn assemble(
+        n: usize,
+        kind: PackKind,
+        prec: ValPrec,
+        row_ptr: Vec<u32>,
+        delta: Vec<u16>,
+        esc_counts: Vec<u32>,
+        esc_col: Vec<u32>,
+        diag64: Vec<f64>,
+        body64: Vec<f64>,
+    ) -> CsrPack {
+        let esc_ptr = if esc_col.is_empty() {
+            Vec::new()
+        } else {
+            let mut p = Vec::with_capacity(n + 1);
+            p.push(0u32);
+            let mut acc = 0u32;
+            for c in esc_counts {
+                acc += c;
+                p.push(acc);
+            }
+            p
+        };
+        let vals = match prec {
+            ValPrec::F64 => PackVals::F64 { diag: diag64, body: body64 },
+            ValPrec::F32 => PackVals::F32 {
+                diag: diag64.iter().map(|&v| v as f32).collect(),
+                body: body64.iter().map(|&v| v as f32).collect(),
+            },
+        };
+        CsrPack { n, kind, row_ptr, delta, esc_ptr, esc_col, vals }
+    }
+
+    /// Matrix dimension.
+    pub fn nrows(&self) -> usize {
+        self.n
+    }
+
+    /// Stored nonzeros (split diagonal included for `Upper`).
+    pub fn nnz(&self) -> usize {
+        match self.kind {
+            PackKind::Upper => self.n + self.delta.len(),
+            PackKind::Full => self.delta.len(),
+        }
+    }
+
+    /// Value precision.
+    pub fn prec(&self) -> ValPrec {
+        match self.vals {
+            PackVals::F64 { .. } => ValPrec::F64,
+            PackVals::F32 { .. } => ValPrec::F32,
+        }
+    }
+
+    /// Entries escaped to the side table.
+    pub fn escapes(&self) -> usize {
+        self.esc_col.len()
+    }
+
+    /// Rows owning at least one escaped entry.
+    pub fn rows_escaped(&self) -> usize {
+        if self.esc_ptr.is_empty() {
+            return 0;
+        }
+        self.esc_ptr.windows(2).filter(|w| w[1] > w[0]).count()
+    }
+
+    /// Escape cursor for a range kernel starting at `row`.
+    #[inline]
+    pub fn esc_start(&self, row: usize) -> usize {
+        if self.esc_ptr.is_empty() { 0 } else { self.esc_ptr[row] as usize }
+    }
+
+    /// Decode the column of body slot `idx` in `row` given its delta
+    /// code and the current escape cursor (advanced on escape). Kernels
+    /// inline this logic; this method is the reference decoder used by
+    /// [`CsrPack::to_csr`] and the traffic replay.
+    #[inline]
+    fn decode(&self, row: usize, d: u16, esc: &mut usize) -> usize {
+        if d != ESCAPE {
+            match self.kind {
+                PackKind::Upper => row + d as usize,
+                PackKind::Full => (row as i64 + d as i64 - FULL_BIAS) as usize,
+            }
+        } else {
+            let c = self.esc_col[*esc] as usize;
+            *esc += 1;
+            c
+        }
+    }
+
+    /// Byte footprint of the pack (what the kernel actually streams:
+    /// row pointers, deltas, values, split diagonal, escape table).
+    pub fn bytes(&self) -> usize {
+        let w = self.prec().bytes();
+        let diag = match self.kind {
+            PackKind::Upper => self.n * w,
+            PackKind::Full => 0,
+        };
+        diag + self.delta.len() * (2 + w)
+            + (self.n + 1) * 4
+            + self.esc_ptr.len() * 4
+            + self.esc_col.len() * 4
+    }
+
+    /// Byte footprint of the equivalent plain CSR storage (u32 columns,
+    /// f64 values) — the fallback comparison target.
+    pub fn csr_bytes(&self) -> usize {
+        self.nnz() * 12 + (self.n + 1) * 4
+    }
+
+    /// True when the pack is smaller than plain CSR — the automatic
+    /// storage-selection rule (`Operator` falls back to CSR otherwise,
+    /// e.g. when most deltas exceed the u16 reach and escape).
+    pub fn feasible(&self) -> bool {
+        self.bytes() < self.csr_bytes()
+    }
+
+    /// Build/feasibility statistics.
+    pub fn stats(&self) -> PackStats {
+        PackStats {
+            nnz: self.nnz(),
+            body: self.delta.len(),
+            escapes: self.escapes(),
+            rows_escaped: self.rows_escaped(),
+            bytes_csr: self.csr_bytes(),
+            bytes_pack: self.bytes(),
+        }
+    }
+
+    /// Decode back to plain CSR (f32 packs round values through `f32`) —
+    /// the round-trip used by the property tests and the traffic replay.
+    pub fn to_csr(&self) -> Csr {
+        let n = self.n;
+        let mut row_ptr = vec![0u32; n + 1];
+        let mut col = Vec::with_capacity(self.nnz());
+        let mut val = Vec::with_capacity(self.nnz());
+        let mut esc = 0usize;
+        for r in 0..n {
+            let lo = self.row_ptr[r] as usize;
+            let hi = self.row_ptr[r + 1] as usize;
+            if self.kind == PackKind::Upper {
+                col.push(r as u32);
+                val.push(match &self.vals {
+                    PackVals::F64 { diag, .. } => diag[r],
+                    PackVals::F32 { diag, .. } => diag[r] as f64,
+                });
+            }
+            for idx in lo..hi {
+                let c = self.decode(r, self.delta[idx], &mut esc);
+                col.push(c as u32);
+                val.push(match &self.vals {
+                    PackVals::F64 { body, .. } => body[idx],
+                    PackVals::F32 { body, .. } => body[idx] as f64,
+                });
+            }
+            row_ptr[r + 1] = col.len() as u32;
+        }
+        Csr { n, row_ptr, col, val }
+    }
+
+    /// Iterate the decoded columns of `row` (diagonal excluded for
+    /// `Upper` — it is implicit). Allocation-free caller loop for the
+    /// cache-simulator replay.
+    pub fn for_each_col<F: FnMut(usize)>(&self, row: usize, esc: &mut usize, mut f: F) {
+        let lo = self.row_ptr[row] as usize;
+        let hi = self.row_ptr[row + 1] as usize;
+        for idx in lo..hi {
+            f(self.decode(row, self.delta[idx], esc));
+        }
+    }
+
+    /// Validate internal invariants (mirrors [`Csr::validate`]): monotone
+    /// offsets, escape bookkeeping consistent, decoded columns in range.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.row_ptr.len() != self.n + 1 {
+            return Err("row_ptr length".into());
+        }
+        if *self.row_ptr.last().unwrap() as usize != self.delta.len() {
+            return Err("row_ptr end".into());
+        }
+        let nesc = self.delta.iter().filter(|&&d| d == ESCAPE).count();
+        if nesc != self.esc_col.len() {
+            return Err(format!("{} escape codes but {} side entries", nesc, self.esc_col.len()));
+        }
+        if !self.esc_ptr.is_empty() {
+            if self.esc_ptr.len() != self.n + 1 {
+                return Err("esc_ptr length".into());
+            }
+            if *self.esc_ptr.last().unwrap() as usize != self.esc_col.len() {
+                return Err("esc_ptr end".into());
+            }
+        } else if !self.esc_col.is_empty() {
+            return Err("escapes without esc_ptr".into());
+        }
+        let (dlen, blen) = match &self.vals {
+            PackVals::F64 { diag, body } => (diag.len(), body.len()),
+            PackVals::F32 { diag, body } => (diag.len(), body.len()),
+        };
+        match self.kind {
+            PackKind::Upper if dlen != self.n => return Err("diag length".into()),
+            PackKind::Full if dlen != 0 => return Err("Full pack must not split a diagonal".into()),
+            _ => {}
+        }
+        if blen != self.delta.len() {
+            return Err("body/delta length mismatch".into());
+        }
+        let mut esc = 0usize;
+        for r in 0..self.n {
+            if self.row_ptr[r] > self.row_ptr[r + 1] {
+                return Err(format!("row_ptr not monotone at {r}"));
+            }
+            if !self.esc_ptr.is_empty() && esc != self.esc_ptr[r] as usize {
+                return Err(format!("esc_ptr out of sync at row {r}"));
+            }
+            let lo = self.row_ptr[r] as usize;
+            let hi = self.row_ptr[r + 1] as usize;
+            for idx in lo..hi {
+                let c = self.decode(r, self.delta[idx], &mut esc);
+                if c >= self.n {
+                    return Err(format!("row {r} decodes column {c} out of range"));
+                }
+                if self.kind == PackKind::Upper && c <= r {
+                    return Err(format!("row {r} upper body decodes column {c} <= row"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen;
+    use crate::sparse::Coo;
+
+    #[test]
+    fn upper_pack_round_trips_exactly() {
+        let a = gen::stencil2d_9pt(9, 7);
+        let upper = a.upper_triangle();
+        let p = CsrPack::pack_upper(&upper, ValPrec::F64);
+        p.validate().unwrap();
+        assert_eq!(p.escapes(), 0, "banded stencil must stay in u16 reach");
+        assert!(p.esc_ptr.is_empty(), "no side table without escapes");
+        assert_eq!(p.to_csr(), upper);
+        assert!(p.feasible());
+        assert!(p.bytes() < upper.nnz() * 12 + (upper.n + 1) * 4);
+    }
+
+    #[test]
+    fn full_pack_round_trips_exactly() {
+        let a = gen::graphene(6, 6);
+        let p = CsrPack::pack_full(&a, ValPrec::F64);
+        p.validate().unwrap();
+        assert_eq!(p.nnz(), a.nnz());
+        assert_eq!(p.to_csr(), a);
+    }
+
+    #[test]
+    fn f32_pack_rounds_values_through_f32() {
+        let a = gen::delaunay_like(7, 7, 3);
+        let upper = a.upper_triangle();
+        let p = CsrPack::pack_upper(&upper, ValPrec::F32);
+        p.validate().unwrap();
+        let back = p.to_csr();
+        assert_eq!(back.col, upper.col);
+        for (w, g) in upper.val.iter().zip(&back.val) {
+            assert_eq!(*g, *w as f32 as f64);
+        }
+        assert!(p.bytes() < CsrPack::pack_upper(&upper, ValPrec::F64).bytes());
+    }
+
+    #[test]
+    fn out_of_band_entries_escape_and_round_trip() {
+        // row 0 couples to a column > 2^16 away: must escape, in both kinds
+        let n = 70_000usize;
+        let mut coo = Coo::new(n);
+        for i in 0..n {
+            coo.push(i, i, 2.0 + (i % 5) as f64);
+        }
+        coo.push_sym(0, 66_000, -1.0);
+        coo.push_sym(3, 69_999, -0.5);
+        coo.push_sym(10, 40_000, 0.25); // in band: stays delta-coded
+        let a = coo.to_csr();
+        let upper = a.upper_triangle();
+        let pu = CsrPack::pack_upper(&upper, ValPrec::F64);
+        pu.validate().unwrap();
+        assert_eq!(pu.escapes(), 2);
+        assert_eq!(pu.rows_escaped(), 2);
+        assert_eq!(pu.to_csr(), upper);
+        // Full kind: the biased reach is only ±32767, so the 40_000-wide
+        // pair escapes too, in both mirror halves
+        let pf = CsrPack::pack_full(&a, ValPrec::F64);
+        pf.validate().unwrap();
+        assert_eq!(pf.escapes(), 6, "out-of-reach entries escape in both mirror rows");
+        assert_eq!(pf.to_csr(), a);
+    }
+
+    #[test]
+    fn full_bias_covers_negative_deltas() {
+        let a = gen::dense_band(200, 24, 160, 3);
+        let p = CsrPack::pack_full(&a, ValPrec::F64);
+        p.validate().unwrap();
+        assert_eq!(p.escapes(), 0, "bandwidth 24 sits well inside the biased reach");
+        assert_eq!(p.to_csr(), a);
+    }
+
+    #[test]
+    fn degenerate_duplicate_diagonal_escapes_instead_of_aliasing() {
+        // A hand-built row with a duplicate diagonal entry in the body
+        // (impossible via Coo, which merges duplicates) must not encode
+        // delta 0 — that would alias the ESCAPE code and desynchronize
+        // the side-table cursor. It escapes instead, and the kernel
+        // result still matches the CSR kernel bit for bit.
+        let a = Csr {
+            n: 2,
+            row_ptr: vec![0, 3, 4],
+            col: vec![0, 0, 1, 1],
+            val: vec![2.0, 1.0, 3.0, 4.0],
+        };
+        let p = CsrPack::pack_upper(&a, ValPrec::F64);
+        assert_eq!(p.escapes(), 1, "the duplicate diagonal must escape");
+        assert_eq!(p.to_csr(), a);
+        let x = vec![1.5, -0.5];
+        let mut want = vec![0.0; 2];
+        // degenerate storage fails full validation on both sides
+        // (duplicate column / escaped column <= row), so exercise the
+        // kernels through the entries that skip the validate
+        // debug_assert — the point is memory safety and bit parity
+        crate::kernels::symmspmv_range_checked(&a, &x, &mut want, 0, 2);
+        let mut got = vec![0.0; 2];
+        crate::kernels::symmspmv_range_pack_unchecked(&p, &x, &mut got, 0, 2);
+        assert_eq!(want, got);
+    }
+
+    #[test]
+    fn stats_report_the_footprint_cut() {
+        let a = gen::stencil3d_27pt(8, 8, 8);
+        let upper = a.upper_triangle();
+        let s64 = CsrPack::pack_upper(&upper, ValPrec::F64).stats();
+        let s32 = CsrPack::pack_upper(&upper, ValPrec::F32).stats();
+        assert_eq!(s64.nnz, upper.nnz());
+        assert!(s64.ratio() < 0.90, "f64 pack ratio {}", s64.ratio());
+        assert!(s32.ratio() < 0.60, "f32 pack ratio {}", s32.ratio());
+    }
+}

@@ -1,0 +1,241 @@
+//! Traffic-compact storage properties: CSR → `CsrPack` round-trips over
+//! every generator family, **bit-identical** f64 SymmSpMV / matrix-power
+//! results between packed and CSR storage across all backends × threads
+//! {1, 2, 4} × powers 1..4, single-precision (`ValPrec::F32`) tolerance
+//! bounds, and the automatic CSR fallback when a pack would not pay.
+
+use race::gen;
+use race::op::{self, Backend, OpConfig, Operator, Storage};
+use race::sparse::{Coo, Csr, CsrPack, PackKind, ValPrec};
+
+const THREADS: [usize; 3] = [1, 2, 4];
+const BACKENDS: [Backend; 3] = [Backend::Serial, Backend::Scoped, Backend::Pool];
+
+/// One matrix per generator family (stencils, quantum chains, lattices,
+/// irregular meshes, dense bands, random graphs).
+fn families() -> Vec<(&'static str, Csr)> {
+    vec![
+        ("stencil5", gen::stencil2d_5pt(16, 13)),
+        ("stencil9", gen::stencil2d_9pt(12, 11)),
+        ("stencil3d7", gen::stencil3d_7pt(6, 6, 6)),
+        ("stencil3d27", gen::stencil3d_27pt(5, 5, 5)),
+        ("paperstencil", gen::race_paper_stencil(16, 16)),
+        ("spin", gen::spin_chain_xxz(8, gen::SpinKind::XXZ)),
+        ("hubbard", gen::hubbard_chain(4, 4.0)),
+        ("boson", gen::free_boson_chain(4, 3)),
+        ("anderson", gen::anderson3d(4, 2.0, 7)),
+        ("graphene", gen::graphene(8, 8)),
+        ("delaunay", gen::delaunay_like(10, 10, 7)),
+        ("band", gen::dense_band(150, 30, 120, 2)),
+        ("random", gen::random_symmetric(120, 8, 11)),
+    ]
+}
+
+fn test_vector(n: usize) -> Vec<f64> {
+    (0..n).map(|i| ((i * 7 + 3) % 23) as f64 * 0.21 - 2.0).collect()
+}
+
+#[test]
+fn pack_round_trips_every_family() {
+    for (name, a) in families() {
+        let upper = a.upper_triangle();
+        for prec in [ValPrec::F64, ValPrec::F32] {
+            let pu = CsrPack::pack_upper(&upper, prec);
+            pu.validate().unwrap_or_else(|e| panic!("{name}/upper/{prec:?}: {e}"));
+            assert_eq!(pu.kind, PackKind::Upper);
+            assert_eq!(pu.nnz(), upper.nnz(), "{name}: pack must store every nonzero");
+            let pf = CsrPack::pack_full(&a, prec);
+            pf.validate().unwrap_or_else(|e| panic!("{name}/full/{prec:?}: {e}"));
+            assert_eq!(pf.nnz(), a.nnz());
+            if prec == ValPrec::F64 {
+                assert_eq!(pu.to_csr(), upper, "{name}: upper round-trip");
+                assert_eq!(pf.to_csr(), a, "{name}: full round-trip");
+            } else {
+                // f32 packs round values; the structure must survive
+                let (bu, bf) = (pu.to_csr(), pf.to_csr());
+                assert_eq!(bu.col, upper.col, "{name}: upper f32 structure");
+                assert_eq!(bf.col, a.col, "{name}: full f32 structure");
+                for (w, g) in upper.val.iter().zip(&bu.val) {
+                    assert_eq!(*g, *w as f32 as f64, "{name}: f32 value rounding");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn symmspmv_pack_bit_identical_to_csr_across_backends() {
+    for (name, a) in families() {
+        let n = a.nrows();
+        let x = test_vector(n);
+        for &threads in &THREADS {
+            // CSR reference output per backend
+            for &backend in &BACKENDS {
+                let cfg = |s: Storage| OpConfig::new().threads(threads).backend(backend).storage(s);
+                let csr = Operator::build(&a, cfg(Storage::Csr)).unwrap();
+                let pack = Operator::build(&a, cfg(Storage::Pack)).unwrap();
+                assert_eq!(csr.effective_storage(), Storage::Csr);
+                let mut bc = vec![0.0; n];
+                csr.symmspmv(&x, &mut bc);
+                let mut bp = vec![0.0; n];
+                pack.symmspmv(&x, &mut bp);
+                assert_eq!(bc, bp, "{name}: t={threads} {backend:?} symmspmv pack != csr");
+                // multi-RHS rides the same packs
+                let xs: Vec<Vec<f64>> = (0..3)
+                    .map(|j| (0..n).map(|i| ((i * (j + 2) + 5) % 13) as f64 * 0.3 - 1.7).collect())
+                    .collect();
+                let mut bsc: Vec<Vec<f64>> = vec![vec![0.0; n]; 3];
+                let mut bsp: Vec<Vec<f64>> = vec![vec![0.0; n]; 3];
+                csr.symmspmv_multi(&xs, &mut bsc);
+                pack.symmspmv_multi(&xs, &mut bsp);
+                assert_eq!(bsc, bsp, "{name}: t={threads} {backend:?} multi pack != csr");
+            }
+        }
+    }
+}
+
+#[test]
+fn powers_pack_bit_identical_to_csr_across_backends() {
+    // a subset of families keeps the p-sweep tractable; coverage of the
+    // remaining families comes from the symmspmv test above
+    let mats = vec![
+        ("stencil9", gen::stencil2d_9pt(12, 11)),
+        ("spin", gen::spin_chain_xxz(8, gen::SpinKind::XXZ)),
+        ("delaunay", gen::delaunay_like(10, 10, 7)),
+    ];
+    for (name, a) in mats {
+        let n = a.nrows();
+        let x = test_vector(n);
+        for &threads in &THREADS {
+            for &backend in &BACKENDS {
+                let cfg = |s: Storage| {
+                    OpConfig::new()
+                        .threads(threads)
+                        .backend(backend)
+                        .storage(s)
+                        .cache_bytes(8 << 10)
+                };
+                let csr = Operator::build(&a, cfg(Storage::Csr)).unwrap();
+                let pack = Operator::build(&a, cfg(Storage::Pack)).unwrap();
+                for p in 1..=4usize {
+                    let yc = csr.powers(&x, p).unwrap();
+                    let yp = pack.powers(&x, p).unwrap();
+                    assert_eq!(yc, yp, "{name}: t={threads} {backend:?} p={p} powers");
+                }
+                // batched powers and the three-term recurrence too
+                let xs: Vec<Vec<f64>> = (0..3)
+                    .map(|j| (0..n).map(|i| ((i * (j + 3) + 1) % 11) as f64 * 0.25 - 1.1).collect())
+                    .collect();
+                let yc = csr.powers_multi(&xs, 3).unwrap();
+                let yp = pack.powers_multi(&xs, 3).unwrap();
+                assert_eq!(yc, yp, "{name}: t={threads} {backend:?} powers_multi");
+                let z_prev = test_vector(n);
+                let z0: Vec<f64> = (0..n).map(|i| (i as f64 * 0.17).cos()).collect();
+                let zc = csr.three_term(&z_prev, &z0, 0.4, -0.1, -1.0, 3).unwrap();
+                let zp = pack.three_term(&z_prev, &z0, 0.4, -0.1, -1.0, 3).unwrap();
+                assert_eq!(zc, zp, "{name}: t={threads} {backend:?} three_term");
+            }
+        }
+    }
+}
+
+#[test]
+fn f32_pack_stays_within_tolerance() {
+    for (name, a) in families() {
+        let n = a.nrows();
+        let x = test_vector(n);
+        let f64_op = Operator::build(&a, OpConfig::new().threads(2)).unwrap();
+        let f32_op = Operator::build(
+            &a,
+            OpConfig::new().threads(2).storage(Storage::Pack).precision(ValPrec::F32),
+        )
+        .unwrap();
+        let mut want = vec![0.0; n];
+        f64_op.symmspmv(&x, &mut want);
+        let mut got = vec![0.0; n];
+        f32_op.symmspmv(&x, &mut got);
+        let err = op::rel_err(&want, &got);
+        assert!(err < 1e-5, "{name}: f32 symmspmv rel_err {err:.2e}");
+        // power sweeps compound the matrix-entry rounding ~linearly in p
+        let yw = f64_op.powers(&x, 4).unwrap();
+        let yg = f32_op.powers(&x, 4).unwrap();
+        let perr = op::rel_err(&yw[3], &yg[3]);
+        assert!(perr < 1e-3, "{name}: f32 powers rel_err {perr:.2e}");
+    }
+}
+
+#[test]
+fn infeasible_pack_falls_back_to_csr() {
+    // Without RCM, rows couple only to columns > 2^16 away, so every
+    // off-diagonal escapes and the pack is bigger than CSR: the operator
+    // must fall back to CSR storage and still answer correctly.
+    let n = 70_000usize;
+    let mut coo = Coo::new(n);
+    for i in 0..n {
+        coo.push(i, i, 2.0 + (i % 3) as f64);
+    }
+    for i in 0..1_000 {
+        coo.push_sym(i, i + 66_000, -0.5);
+        coo.push_sym(i, i + 67_500, 0.25);
+    }
+    let a = coo.to_csr();
+    let upper = a.upper_triangle();
+    let pack = CsrPack::pack_upper(&upper, ValPrec::F64);
+    assert_eq!(pack.escapes(), 2_000, "every off-diagonal must escape");
+    assert!(!pack.feasible(), "escape-dominated pack must not pay");
+    // threads(1) keeps the engine permutation at identity (single-leaf
+    // tree), so the wide couplings actually reach the storage layer
+    let op = Operator::build(
+        &a,
+        OpConfig::new().threads(1).backend(Backend::Serial).storage(Storage::Pack).rcm(false),
+    )
+    .unwrap();
+    assert_eq!(op.effective_storage(), Storage::Csr, "must fall back");
+    assert!(op.pack().is_none());
+    let x = test_vector(n);
+    let mut b = vec![0.0; n];
+    op.symmspmv(&x, &mut b);
+    let want = op.spmv_ref(&x);
+    assert!(op::rel_err(&want, &b) < 1e-9);
+    // with RCM the same matrix re-bands and the pack becomes feasible
+    let op_rcm = Operator::build(
+        &a,
+        OpConfig::new().threads(1).backend(Backend::Serial).storage(Storage::Pack),
+    )
+    .unwrap();
+    assert_eq!(op_rcm.effective_storage(), Storage::Pack, "RCM makes deltas narrow");
+    let mut b2 = vec![0.0; n];
+    op_rcm.symmspmv(&x, &mut b2);
+    assert!(op::rel_err(&want, &b2) < 1e-9);
+}
+
+#[test]
+fn escaped_entries_survive_the_operator_path() {
+    // mostly-banded matrix with a few out-of-band couplings: the pack
+    // stays feasible (escapes are rare) and must agree with CSR bitwise
+    let n = 70_000usize;
+    let mut coo = Coo::new(n);
+    for i in 0..n {
+        coo.push(i, i, 2.0);
+        if i + 1 < n {
+            coo.push_sym(i, i + 1, -0.5);
+        }
+    }
+    coo.push_sym(0, 66_000, -1.0);
+    coo.push_sym(123, 69_000, 0.75);
+    let a = coo.to_csr();
+    // rcm(false) + threads(1) (identity engine permutation) keeps the
+    // wide couplings wide, forcing real escapes on the operator path
+    let cfg =
+        |s: Storage| OpConfig::new().threads(1).backend(Backend::Serial).storage(s).rcm(false);
+    let pack_op = Operator::build(&a, cfg(Storage::Pack)).unwrap();
+    assert_eq!(pack_op.effective_storage(), Storage::Pack);
+    let pk = pack_op.pack().unwrap();
+    assert!(pk.escapes() >= 2, "wide couplings must escape");
+    let csr_op = Operator::build(&a, cfg(Storage::Csr)).unwrap();
+    let x = test_vector(n);
+    let (mut bp, mut bc) = (vec![0.0; n], vec![0.0; n]);
+    pack_op.symmspmv(&x, &mut bp);
+    csr_op.symmspmv(&x, &mut bc);
+    assert_eq!(bp, bc, "escape path must stay bit-identical");
+}
