@@ -1,0 +1,167 @@
+//! Solver convergence + traffic bench: f64 CG vs mixed-precision
+//! iterative refinement over the generator corpus, every matrix
+//! certified SPD by a Gershgorin shift where needed.
+//!
+//! For each corpus matrix the bench solves the same system twice on one
+//! `Operator` (pool backend, default packed storage) and charges each
+//! solve its cachesim-measured traffic: `matvecs × bytes-per-sweep` at
+//! the precision each sweep actually streamed (f64 pack — or CSR where
+//! the pack is infeasible — for full-precision sweeps, f32 pack for the
+//! mixed inner sweeps). That is the Roofline-level answer to "does the
+//! ValPrec knob pay inside a solver": same tolerance, fewer bytes.
+//!
+//! Emits `BENCH_solver.json` (override with `RACE_BENCH_OUT`):
+//! `{"bench": "solver_convergence", "machine": .., "cases": [{matrix,
+//! nrows, spd_shift, f64_iterations, f64_matvecs, f64_seconds,
+//! f64_traffic_bytes, mixed_outer, mixed_matvecs_f64, mixed_matvecs_f32,
+//! mixed_fell_back, mixed_used_f32, mixed_seconds, mixed_traffic_bytes,
+//! traffic_ratio, converged}], "summary": {mean_traffic_ratio,
+//! feasible_mean_traffic_ratio, converged, total}}`.
+//!
+//! Acceptance (asserted here, so CI catches regressions): every solve on
+//! the corpus reaches the tolerance (true residual, reference SpMV), and
+//! mixed precision spends measurably less traffic than f64 CG on the
+//! corpus mean.
+//!
+//! `RACE_BENCH_FULL=1` runs the bench-scale corpus variants.
+
+use race::cachesim;
+use race::gen;
+use race::machine;
+use race::op::{OpConfig, Operator};
+use race::solver::{self, Method, SolveConfig};
+use race::util::json::Json;
+
+const TOL: f64 = 1e-8;
+
+fn true_rel_residual(a: &race::sparse::Csr, rhs: &[f64], x: &[f64]) -> f64 {
+    let ax = a.spmv_ref(x);
+    let num: f64 = ax.iter().zip(rhs).map(|(p, q)| (p - q) * (p - q)).sum::<f64>().sqrt();
+    let den: f64 = rhs.iter().map(|v| v * v).sum::<f64>().sqrt();
+    num / den.max(1e-300)
+}
+
+fn main() {
+    let small = std::env::var("RACE_BENCH_FULL").is_err();
+    let m = machine::skx();
+    let mut rows = Vec::new();
+    let (mut ratio_sum, mut feasible_ratio_sum) = (0.0f64, 0.0f64);
+    let (mut total, mut feasible, mut converged) = (0usize, 0usize, 0usize);
+    for e in gen::corpus() {
+        let a0 = (e.build)(small);
+        // certify SPD: shift the Gershgorin interval to a bounded
+        // condition estimate (no-op for the diagonally dominant families)
+        let (a, shift) = solver::make_spd(&a0, 0.02);
+        let op = Operator::build(&a, OpConfig::new().threads(4)).expect("operator build");
+        let n = op.n();
+        let rhs: Vec<f64> = (0..n)
+            .map(|i| (i as f64 * 0.013).sin() + if i == n / 2 { 10.0 } else { 0.0 })
+            .collect();
+
+        let f64_sol = op
+            .solve(&rhs, &SolveConfig::new().tol(TOL).max_iter(20_000))
+            .expect("f64 CG solve");
+        let mixed = op
+            .solve(&rhs, &SolveConfig::new().method(Method::Mixed).tol(TOL).max_iter(20_000))
+            .expect("mixed solve");
+
+        // acceptance: both reach the tolerance, measured honestly
+        let r64 = true_rel_residual(&a, &rhs, &f64_sol.x);
+        let rmx = true_rel_residual(&a, &rhs, &mixed.x);
+        assert!(
+            f64_sol.converged && r64 <= TOL * 1.01,
+            "{}: f64 CG residual {r64:.3e}",
+            e.name
+        );
+        assert!(
+            mixed.converged && rmx <= TOL * 1.01,
+            "{}: mixed residual {rmx:.3e}",
+            e.name
+        );
+        converged += 1;
+
+        // cachesim traffic per sweep on the storage each solve streamed:
+        // the operator's default is the f64 pack (CSR where infeasible);
+        // mixed inner sweeps stream the f32 pack when feasible
+        let cmp = cachesim::compare_symmspmv_pack_traffic(op.upper(), a.nnz(), &m);
+        let sweep_f64 =
+            if cmp.feasible() { cmp.tr_f64.bytes_total } else { cmp.tr_csr.bytes_total };
+        let sweep_f32 = if mixed.used_f32 { cmp.tr_f32.bytes_total } else { sweep_f64 };
+        let traffic_f64 = f64_sol.matvecs as u64 * sweep_f64;
+        let traffic_mixed =
+            mixed.matvecs as u64 * sweep_f64 + mixed.matvecs_f32 as u64 * sweep_f32;
+        let ratio = traffic_mixed as f64 / traffic_f64 as f64;
+        total += 1;
+        ratio_sum += ratio;
+        if mixed.used_f32 {
+            feasible += 1;
+            feasible_ratio_sum += ratio;
+        }
+        println!(
+            "{:<26} f64 CG {:>5} mv / {:>7.1} MB   mixed {:>4}+{:<5} mv / {:>7.1} MB   \
+             ratio {:.2}{}{}",
+            e.name,
+            f64_sol.matvecs,
+            traffic_f64 as f64 / 1e6,
+            mixed.matvecs,
+            mixed.matvecs_f32,
+            traffic_mixed as f64 / 1e6,
+            ratio,
+            if mixed.fell_back { "  [fell back]" } else { "" },
+            if mixed.used_f32 { "" } else { "  [f32 pack infeasible]" }
+        );
+        rows.push(Json::obj(vec![
+            ("matrix", Json::Str(e.name.to_string())),
+            ("nrows", Json::Num(n as f64)),
+            ("spd_shift", Json::Num(shift)),
+            ("f64_iterations", Json::Num(f64_sol.iterations as f64)),
+            ("f64_matvecs", Json::Num(f64_sol.matvecs as f64)),
+            ("f64_seconds", Json::Num(f64_sol.seconds)),
+            ("f64_traffic_bytes", Json::Num(traffic_f64 as f64)),
+            ("mixed_outer", Json::Num(mixed.iterations as f64)),
+            ("mixed_matvecs_f64", Json::Num(mixed.matvecs as f64)),
+            ("mixed_matvecs_f32", Json::Num(mixed.matvecs_f32 as f64)),
+            ("mixed_fell_back", Json::Bool(mixed.fell_back)),
+            ("mixed_used_f32", Json::Bool(mixed.used_f32)),
+            ("mixed_seconds", Json::Num(mixed.seconds)),
+            ("mixed_traffic_bytes", Json::Num(traffic_mixed as f64)),
+            ("traffic_ratio", Json::Num(ratio)),
+            ("converged", Json::Bool(true)),
+        ]));
+    }
+    let mean_ratio = ratio_sum / total.max(1) as f64;
+    let feasible_mean = feasible_ratio_sum / feasible.max(1) as f64;
+    println!(
+        "corpus mean traffic ratio (mixed / f64): {mean_ratio:.3} over {total} matrices \
+         ({feasible_mean:.3} over the {feasible} f32-pack-feasible ones)"
+    );
+    // headline acceptance: same tolerance, measurably less traffic on
+    // the corpus mean
+    assert_eq!(converged, total, "every corpus solve must converge");
+    assert!(
+        mean_ratio < 0.95,
+        "mixed precision must cut solver traffic on the corpus mean (ratio {mean_ratio:.3})"
+    );
+    assert!(
+        feasible_mean < 0.85,
+        "pack-feasible matrices must see a clear cut (ratio {feasible_mean:.3})"
+    );
+    let out = Json::obj(vec![
+        ("bench", Json::Str("solver_convergence".to_string())),
+        ("machine", Json::Str(m.name.clone())),
+        ("tol", Json::Num(TOL)),
+        ("cases", Json::Arr(rows)),
+        (
+            "summary",
+            Json::obj(vec![
+                ("mean_traffic_ratio", Json::Num(mean_ratio)),
+                ("feasible_mean_traffic_ratio", Json::Num(feasible_mean)),
+                ("converged", Json::Num(converged as f64)),
+                ("total", Json::Num(total as f64)),
+            ]),
+        ),
+    ]);
+    let path = std::env::var("RACE_BENCH_OUT").unwrap_or_else(|_| "BENCH_solver.json".to_string());
+    std::fs::write(&path, out.to_string() + "\n").expect("write BENCH_solver.json");
+    println!("wrote {path}");
+}

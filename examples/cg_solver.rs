@@ -1,17 +1,18 @@
 //! End-to-end driver (the validation workload mandated in DESIGN.md):
-//! solve a 2D Poisson problem with conjugate gradients where every matvec
-//! is a RACE-parallel SymmSpMV on the resident worker pool, log the
-//! residual curve and report throughput — the "iterative solver built on
-//! SymmSpMV" the paper motivates in §1. The whole pipeline (RCM, engine,
-//! upper triangle, step program, pool) lives behind one `Operator`
-//! handle; the solve runs in executor numbering via the `_permuted` hot
-//! path so the CG loop stays allocation-free.
+//! solve a 2D Poisson problem through the [`race::solver`] subsystem,
+//! where every matvec is a RACE-parallel SymmSpMV on the resident worker
+//! pool — the "iterative solver built on SymmSpMV" the paper motivates
+//! in §1. The CG loop itself now lives behind [`Operator::solve`]; this
+//! example just configures it, and then runs the same system through
+//! mixed-precision iterative refinement (f32 delta-pack inner sweeps,
+//! f64 residual correction) to show the traffic-compact storage engine
+//! paying inside a solver.
 //!
 //! Run: `cargo run --release --example cg_solver [-- grid_side threads]`
 
 use race::gen;
-use race::kernels::cg_solve;
 use race::op::{Backend, OpConfig, Operator};
+use race::solver::{Method, SolveConfig};
 
 fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().collect();
@@ -32,61 +33,60 @@ fn main() -> anyhow::Result<()> {
         op.engine().node_count()
     );
 
-    // nontrivial rhs: a localized + oscillatory source (in executor
-    // ordering — the solve stays in permuted space end to end).
+    // nontrivial rhs: a localized + oscillatory source in logical order
     // (note: A·ones == ones for this stencil — ones is an eigenvector — so
     // a constant rhs would trivially converge in one step)
     let rhs: Vec<f64> = (0..n)
         .map(|i| (i as f64 * 0.013).sin() + if i == n / 2 { 10.0 } else { 0.0 })
         .collect();
 
-    let mut x = vec![0.0; n];
-    let mut matvecs = 0usize;
-    let t0 = std::time::Instant::now();
-    let res = cg_solve(
-        &mut |v, out| {
-            matvecs += 1;
-            op.symmspmv_permuted(v, out)
-        },
-        &rhs,
-        &mut x,
-        1e-8,
-        5000,
-    );
-    let dt = t0.elapsed().as_secs_f64();
-
+    let cfg = SolveConfig::new().method(Method::Cg).tol(1e-8).max_iter(5000);
+    let sol = op.solve(&rhs, &cfg)?;
     println!(
         "CG {} in {} iterations, {:.2}s ({} matvecs)",
-        if res.converged { "converged" } else { "did NOT converge" },
-        res.iterations,
-        dt,
-        matvecs
+        if sol.converged { "converged" } else { "did NOT converge" },
+        sol.iterations,
+        sol.seconds,
+        sol.matvecs
     );
     // residual curve (log every ~10%)
-    let step = (res.residuals.len() / 10).max(1);
-    for (i, r) in res.residuals.iter().enumerate() {
-        if i % step == 0 || i + 1 == res.residuals.len() {
+    let step = (sol.residuals.len() / 10).max(1);
+    for (i, r) in sol.residuals.iter().enumerate() {
+        if i % step == 0 || i + 1 == sol.residuals.len() {
             println!("  iter {i:>5}: ||r|| = {r:.3e}");
         }
     }
-    let flops = 2.0 * a0.nnz() as f64 * matvecs as f64;
+    let flops = 2.0 * a0.nnz() as f64 * sol.matvecs as f64;
     println!(
         "SymmSpMV throughput: {:.3} GF/s over {} matvecs (1-core host)",
-        flops / dt / 1e9,
-        matvecs
+        flops / sol.seconds / 1e9,
+        sol.matvecs
     );
-    // verify with the TRUE residual computed by the reference SpMV on the
-    // full matrix (independent of the SymmSpMV under test)
-    let ax = op.permuted_matrix().spmv_ref(&x);
-    let true_res = ax
-        .iter()
-        .zip(&rhs)
-        .map(|(p, q)| (p - q) * (p - q))
-        .sum::<f64>()
-        .sqrt()
-        / rhs.iter().map(|v| v * v).sum::<f64>().sqrt();
-    println!("true relative residual ||Ax-b||/||b|| = {true_res:.2e}");
-    assert!(res.converged && true_res < 1e-6, "solution check failed");
+    // the facade recomputes the final residual with the reference SpMV,
+    // independent of the SymmSpMV under test
+    println!("true relative residual ||Ax-b||/||b|| = {:.2e}", sol.rel_residual);
+    assert!(sol.converged && sol.rel_residual < 1e-6, "solution check failed");
+
+    // same system, mixed precision: inner CG streams the f32 delta pack
+    // (~40% less traffic per sweep), outer corrections stay f64
+    let mixed = op.solve(&rhs, &cfg.clone().method(Method::Mixed))?;
+    println!(
+        "mixed-precision refinement: {} outer steps, {} f32 + {} f64 matvecs, {:.2}s \
+         (true residual {:.2e}{}{})",
+        mixed.iterations,
+        mixed.matvecs_f32,
+        mixed.matvecs,
+        mixed.seconds,
+        mixed.rel_residual,
+        if mixed.used_f32 { "" } else { ", f32 pack infeasible -> full precision" },
+        if mixed.fell_back { ", fell back to f64 CG" } else { "" }
+    );
+    assert!(mixed.converged && mixed.rel_residual < 1e-6, "mixed solution check failed");
+    let scale = sol.x.iter().fold(0f64, |m, v| m.max(v.abs()));
+    let max_diff =
+        sol.x.iter().zip(&mixed.x).map(|(a, b)| (a - b).abs()).fold(0f64, f64::max);
+    println!("max |x_cg - x_mixed| = {:.2e} (scale {scale:.2e})", max_diff);
+    assert!(max_diff <= 1e-4 * (1.0 + scale), "mixed diverged from CG");
     println!("cg_solver OK");
     Ok(())
 }

@@ -42,6 +42,11 @@
 //!   build → permute → plan → execute for SymmSpMV, matrix powers and
 //!   distance-k solver sweeps, with a `Backend` selecting the serial /
 //!   scoped / pooled executor and all permutations handled internally.
+//! * [`solver`] — iterative solvers on the facade: CG, Jacobi/SSOR
+//!   preconditioned CG, Chebyshev iteration over the level-blocked
+//!   three-term sweeps, and mixed-precision iterative refinement (f32
+//!   delta-pack inner iterations, f64 residual correction, automatic
+//!   f64 fallback on stagnation).
 //! * [`runtime`] — PJRT/XLA artifact loading so AOT-compiled JAX/Pallas
 //!   kernels run from Rust with no Python on the request path.
 //! * [`coordinator`] — the pipeline driver used by the CLI, benches and
@@ -69,10 +74,19 @@
 //! // matrix powers y_k = A^k x through the same handle (level-blocked MPK)
 //! let ys = op.powers(&x, 3).unwrap();
 //! assert_eq!(ys.len(), 3);
+//! // and a full iterative solve (see `solver` for the method catalogue)
+//! let sol = op.solve(&x, &race::solver::SolveConfig::new()).unwrap();
+//! assert!(sol.converged);
 //! ```
 //!
 //! The free functions the facade dispatches to ([`kernels`], [`pool`],
 //! [`mpk`], [`race`]) remain public for benches and custom compositions.
+//!
+//! A map of how these modules stack — and the lifecycle of one request
+//! through them — lives in `docs/ARCHITECTURE.md`; the network protocol
+//! in `docs/SERVE_PROTOCOL.md`.
+
+#![warn(missing_docs)]
 
 pub mod cachesim;
 pub mod color;
@@ -90,5 +104,6 @@ pub mod race;
 pub mod runtime;
 pub mod serve;
 pub mod sim;
+pub mod solver;
 pub mod sparse;
 pub mod util;

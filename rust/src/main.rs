@@ -36,14 +36,27 @@ USAGE:
       Delta-pack feasibility over the whole corpus: escapes, storage
       bytes/nnz and cachesim traffic for CSR vs the u16-delta pack
       (f64 and f32 values), plus the automatic CSR fallback verdict.
+  race-cli solve --matrix SPEC [--method cg|jacobi|ssor|chebyshev|mixed]
+                 [--tol 1e-8] [--max-iter N] [--threads N] [--storage pack|csr]
+                 [--prec f64|f32] [--small] [--json]
+      Iterative solve A x = b on the Operator facade (rhs is a fixed
+      oscillatory source). Methods: plain CG, Jacobi/SSOR-preconditioned
+      CG, Chebyshev iteration on the level-blocked three-term sweeps,
+      and mixed-precision iterative refinement (f32 delta-pack inner
+      sweeps, f64 residual correction, f64 fallback on stagnation).
+      Matrices whose Gershgorin lower bound is not positive are shifted
+      to a certified SPD system first (the applied shift is reported).
   race-cli serve --matrix SPEC[,SPEC..] [--threads N] [--addr HOST:PORT]
                  [--small] [--max-requests N] [--mpk-power P] [--mpk-cache BYTES]
                  [--batch-window-us N] [--storage pack|csr] [--prec f64|f32]
-      SymmSpMV/MPK-as-a-service over TCP (newline-delimited JSON, see
-      README.md): multi-matrix registry, request micro-batching on a
-      persistent worker pool (SymmSpMV and MPK requests both batch),
-      {\"x\": [..], \"p\": k} matrix powers, {\"stats\": true} counters,
-      {\"shutdown\": true} / --max-requests for graceful shutdown.
+                 [--solve-iter-max N]
+      SymmSpMV/MPK/solve-as-a-service over TCP (newline-delimited JSON,
+      see docs/SERVE_PROTOCOL.md): multi-matrix registry, request
+      micro-batching on a persistent worker pool (SymmSpMV and MPK
+      requests both batch), {\"x\": [..], \"p\": k} matrix powers,
+      {\"solve\": {\"rhs\": [..], \"method\": \"cg\"}} iterative solves
+      (per-iteration SpMVs ride the same batcher), {\"stats\": true}
+      counters, {\"shutdown\": true} / --max-requests for shutdown.
       --batch-window-us makes batch leaders wait a bounded time (capped
       at the last kernel latency) so medium-load traffic coalesces.
       --storage/--prec select the matrix encoding the kernels stream
@@ -160,6 +173,7 @@ fn main() -> Result<()> {
         "corpus" => cmd_corpus(&args),
         "run" => cmd_run(&args),
         "mpk" => cmd_mpk(&args),
+        "solve" => cmd_solve(&args),
         "pack-stats" => cmd_pack_stats(&args),
         "explain" => cmd_explain(&args),
         "serve" => {
@@ -184,6 +198,7 @@ fn main() -> Result<()> {
                 mpk_power_max: args.get_usize("mpk-power", 8)?,
                 mpk_cache_bytes: args.get_usize("mpk-cache", 2 << 20)?,
                 batch_window_us: args.get_usize("batch-window-us", 0)? as u64,
+                solve_iter_max: args.get_usize("solve-iter-max", 10_000)?,
                 storage: parse_storage(&args.get("storage", "pack"))?,
                 prec: parse_prec(&args.get("prec", "f64"))?,
             };
@@ -395,6 +410,78 @@ fn cmd_mpk(args: &Args) -> Result<()> {
             flops / dt_naive / 1e9
         );
         println!("  max rel err vs {p} reference sweeps: {err:.2e}");
+    }
+    Ok(())
+}
+
+/// Iterative solve on the Operator facade: resolve the matrix, certify
+/// SPD via a Gershgorin shift when needed, run the chosen solver method,
+/// report convergence + the honest (reference-SpMV) final residual.
+fn cmd_solve(args: &Args) -> Result<()> {
+    use race::solver::{self, SolveConfig};
+    let matrix = args.require("matrix")?;
+    let method: race::solver::Method = args.get("method", "cg").parse()?;
+    let tol = args.get_f64("tol", 1e-8)?;
+    let max_iter = args.get_usize("max-iter", 2000)?;
+    let threads = args.get_usize("threads", 4)?;
+    let (name, a0) = coordinator::resolve_matrix(&matrix, args.has("small"))?;
+    let (a, shift) = solver::make_spd(&a0, 0.02);
+    let op = Operator::build(
+        &a,
+        OpConfig::new()
+            .threads(threads)
+            .storage(parse_storage(&args.get("storage", "pack"))?)
+            .precision(parse_prec(&args.get("prec", "f64"))?),
+    )?;
+    let n = op.n();
+    let rhs: Vec<f64> = (0..n)
+        .map(|i| (i as f64 * 0.013).sin() + if i == n / 2 { 10.0 } else { 0.0 })
+        .collect();
+    let cfg = SolveConfig::new().method(method).tol(tol).max_iter(max_iter);
+    let sol = op.solve(&rhs, &cfg)?;
+    if args.has("json") {
+        let j = Json::obj(vec![
+            ("matrix", Json::Str(name)),
+            ("method", Json::Str(sol.method.name().to_string())),
+            ("nrows", Json::Num(n as f64)),
+            ("spd_shift", Json::Num(shift)),
+            ("tol", Json::Num(tol)),
+            ("iterations", Json::Num(sol.iterations as f64)),
+            ("inner_iterations", Json::Num(sol.inner_iterations as f64)),
+            ("matvecs", Json::Num(sol.matvecs as f64)),
+            ("matvecs_f32", Json::Num(sol.matvecs_f32 as f64)),
+            ("precond_applies", Json::Num(sol.precond_applies as f64)),
+            ("converged", Json::Bool(sol.converged)),
+            ("fell_back", Json::Bool(sol.fell_back)),
+            ("used_f32", Json::Bool(sol.used_f32)),
+            ("rel_residual", Json::Num(sol.rel_residual)),
+            ("seconds", Json::Num(sol.seconds)),
+        ]);
+        println!("{}", j.to_string());
+    } else {
+        println!("{name}: solve A x = b with {} (tol {tol:.1e}, {threads} threads)", sol.method);
+        if shift > 0.0 {
+            println!("  Gershgorin shift +{shift:.4} applied to certify SPD");
+        }
+        println!(
+            "  {} in {} iterations ({} matvecs f64, {} f32, {} precond applies), {:.3} s",
+            if sol.converged { "converged" } else { "did NOT converge" },
+            sol.iterations,
+            sol.matvecs,
+            sol.matvecs_f32,
+            sol.precond_applies,
+            sol.seconds
+        );
+        if sol.fell_back {
+            println!("  mixed-precision refinement stagnated -> fell back to f64 CG");
+        }
+        println!("  true relative residual ||b - Ax|| / ||b|| = {:.2e}", sol.rel_residual);
+        let step = (sol.residuals.len() / 8).max(1);
+        for (i, r) in sol.residuals.iter().enumerate() {
+            if i % step == 0 || i + 1 == sol.residuals.len() {
+                println!("    iter {i:>5}: ||r|| = {r:.3e}");
+            }
+        }
     }
     Ok(())
 }

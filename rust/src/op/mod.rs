@@ -49,6 +49,26 @@
 //! dispatches to — benches that compare executors against each other
 //! keep calling them directly with the handle's accessors
 //! ([`Operator::engine`], [`Operator::upper`], [`MpkHandle::plan`]).
+//!
+//! The facade is also the seam the [`crate::solver`] subsystem rides:
+//! [`Operator::solve`] runs whole CG / Chebyshev / mixed-precision
+//! solves through the same backends, [`Operator::ssor_precond`] exposes
+//! the distance-1 forward+backward sweeps as a preconditioner, and
+//! [`Operator::f32_pack`] / [`Operator::symmspmv_permuted_f32`] provide
+//! the single-precision inner operator of iterative refinement.
+//!
+//! ```
+//! use race::gen;
+//! use race::op::{Backend, OpConfig, Operator};
+//!
+//! let a = gen::stencil2d_5pt(16, 16);
+//! let op = Operator::build(&a, OpConfig::new().threads(2).backend(Backend::Pool)).unwrap();
+//! let x = vec![1.0; op.n()];
+//! let mut b = vec![0.0; op.n()];
+//! op.symmspmv(&x, &mut b); // logical order in and out
+//! // the 5-point stencil's rows sum to 1, so b == x
+//! assert!(b.iter().all(|v| (v - 1.0).abs() < 1e-12));
+//! ```
 
 use crate::coordinator::{permute_vec, unpermute_vec};
 use crate::graph;
@@ -281,6 +301,8 @@ type PooledFn = fn(&WorkerPool, &StepProgram, &Csr, &[f64], &mut [f64]);
 struct AuxSchedule {
     eng: RaceEngine,
     prog: StepProgram,
+    /// Mirror of `prog` ([`StepProgram::reversed`]) for backward sweeps.
+    prog_rev: StepProgram,
     total_perm: Vec<u32>,
 }
 
@@ -300,10 +322,17 @@ pub struct Operator {
     /// Composed `rcm ∘ race` permutation, original → executor numbering.
     total_perm: Vec<u32>,
     program: OnceLock<StepProgram>,
+    /// Mirror of the main program for backward sweeps (built on first
+    /// SSOR application when the main schedule is distance-1).
+    program_rev: OnceLock<StepProgram>,
     pool: OnceLock<Arc<WorkerPool>>,
     /// Lazily built `Upper`-kind pack of `upper` (`None` once built =
     /// infeasible, the SymmSpMV kernels fall back to CSR).
     pack: OnceLock<Option<CsrPack>>,
+    /// Lazily built f32 companion pack driving mixed-precision inner
+    /// iterations ([`Operator::f32_pack`]), independent of the `storage`
+    /// knob (`None` once built = infeasible).
+    pack_f32: OnceLock<Option<CsrPack>>,
     mpk: Mutex<HashMap<usize, Arc<MpkHandle>>>,
     aux: Mutex<HashMap<usize, Arc<AuxSchedule>>>,
 }
@@ -338,8 +367,10 @@ impl Operator {
             upper,
             total_perm,
             program: OnceLock::new(),
+            program_rev: OnceLock::new(),
             pool: OnceLock::new(),
             pack: OnceLock::new(),
+            pack_f32: OnceLock::new(),
             mpk: Mutex::new(HashMap::new()),
             aux: Mutex::new(HashMap::new()),
         })
@@ -388,6 +419,28 @@ impl Operator {
         self.pack
             .get_or_init(|| {
                 let p = CsrPack::pack_upper(&self.upper, self.cfg.prec);
+                if p.feasible() { Some(p) } else { None }
+            })
+            .as_ref()
+    }
+
+    /// The single-precision `Upper` pack driving **mixed-precision inner
+    /// iterations** ([`crate::solver`]'s `Mixed` method): the same
+    /// sparsity pattern as [`Operator::upper`] with values rounded to
+    /// f32, built on first use and cached. Unlike [`Operator::pack`] it
+    /// is built regardless of the [`Storage`] knob — an f64-CSR operator
+    /// still wants a cheap inner operator — but it still yields `None`
+    /// when the delta encoding is infeasible (escape-dominated rows), in
+    /// which case the low-precision path falls back to the full-precision
+    /// one. When the handle is already configured as a packed f32
+    /// operator, the primary pack is reused instead of re-encoding.
+    pub fn f32_pack(&self) -> Option<&CsrPack> {
+        if self.cfg.storage == Storage::Pack && self.cfg.prec == ValPrec::F32 {
+            return self.pack();
+        }
+        self.pack_f32
+            .get_or_init(|| {
+                let p = CsrPack::pack_upper(&self.upper, ValPrec::F32);
                 if p.feasible() { Some(p) } else { None }
             })
             .as_ref()
@@ -506,6 +559,36 @@ impl Operator {
     /// [`Operator::permute`]) — the zero-copy hot path for benches and
     /// iterative solvers. `b` is overwritten (zeroed internally).
     pub fn symmspmv_permuted(&self, xp: &[f64], bp: &mut [f64]) {
+        self.symmspmv_permuted_on(self.pack(), xp, bp);
+    }
+
+    /// SymmSpMV in executor numbering over the **single-precision
+    /// companion pack** ([`Operator::f32_pack`]) — the inner-iteration
+    /// operator of mixed-precision iterative refinement. Returns `true`
+    /// when the f32 pack was streamed, `false` when the encoding was
+    /// infeasible and the call fell back to the full-precision path
+    /// (bitwise identical to [`Operator::symmspmv_permuted`] then).
+    /// `b` is overwritten (zeroed internally).
+    pub fn symmspmv_permuted_f32(&self, xp: &[f64], bp: &mut [f64]) -> bool {
+        match self.f32_pack() {
+            Some(_) => {
+                // re-borrow inside the arm: `f32_pack` may alias the
+                // primary pack, and `symmspmv_permuted_on` wants one
+                // coherent Option
+                self.symmspmv_permuted_on(self.f32_pack(), xp, bp);
+                true
+            }
+            None => {
+                self.symmspmv_permuted_on(self.pack(), xp, bp);
+                false
+            }
+        }
+    }
+
+    /// Backend dispatch shared by the full- and low-precision SymmSpMV
+    /// entry points: zero `bp`, then run the configured executor over
+    /// `pk` (packed) or [`Operator::upper`] (CSR).
+    fn symmspmv_permuted_on(&self, pk: Option<&CsrPack>, xp: &[f64], bp: &mut [f64]) {
         assert!(
             self.cfg.race.dist >= 2,
             "SymmSpMV needs a distance-2 schedule (configured dist = {})",
@@ -514,7 +597,7 @@ impl Operator {
         assert_eq!(xp.len(), self.n());
         assert_eq!(bp.len(), self.n());
         bp.iter_mut().for_each(|v| *v = 0.0);
-        match (self.cfg.backend, self.pack()) {
+        match (self.cfg.backend, pk) {
             (Backend::Serial, None) => {
                 // range/length invariants established by the asserts
                 // above; program units are schedule invariants — per-unit
@@ -855,8 +938,9 @@ impl Operator {
         let eng = RaceEngine::build(&self.a_rcm, &cfg)
             .expect("auxiliary schedule build cannot fail for dist >= 1");
         let prog = pool::compile_race(&eng);
+        let prog_rev = prog.reversed();
         let total_perm = graph::compose_perm(&self.rcm_perm, &eng.perm);
-        let s = Arc::new(AuxSchedule { eng, prog, total_perm });
+        let s = Arc::new(AuxSchedule { eng, prog, prog_rev, total_perm });
         cache.insert(dist, s.clone());
         s
     }
@@ -874,6 +958,62 @@ impl Operator {
             kernels::gauss_seidel_race,
             pool::gauss_seidel_pool,
         );
+    }
+
+    /// SSOR preconditioner application `z = M⁻¹ r` with
+    /// `M = (D+L) D⁻¹ (D+U)`, logical order: one forward and one backward
+    /// Gauss–Seidel sweep on a distance-1 schedule, starting from `z = 0`
+    /// (`z` is overwritten — the [`crate::kernels::pcg_solve`]
+    /// preconditioner contract). The colored sweep order differs from a
+    /// natural-order SSOR — as with any colored relaxation — but is
+    /// identical across backends: the serial and pool executors run the
+    /// compiled distance-1 program forward then exactly mirrored
+    /// ([`StepProgram::reversed`]), which reproduces the scoped
+    /// executor's tree recursion order ([`crate::kernels::ssor_precond`])
+    /// in both directions.
+    pub fn ssor_precond(&self, r: &[f64], z: &mut [f64]) {
+        let n = self.n();
+        assert_eq!(r.len(), n);
+        assert_eq!(z.len(), n);
+        let aux;
+        let (eng, prog, prog_rev, perm): (&RaceEngine, &StepProgram, &StepProgram, &[u32]) =
+            if self.cfg.race.dist == 1 {
+                let rev = self.program_rev.get_or_init(|| self.program().reversed());
+                (&self.eng, self.program(), rev, self.total_perm.as_slice())
+            } else {
+                aux = self.aux_schedule(1);
+                (&aux.eng, &aux.prog, &aux.prog_rev, aux.total_perm.as_slice())
+            };
+        let a = eng.permuted_matrix();
+        let rp = permute_vec(r, perm);
+        let mut zp = vec![0.0; n];
+        match self.cfg.backend {
+            Backend::Serial => {
+                for s in 0..prog.nsteps() {
+                    for u in prog.step(s) {
+                        for row in u.start as usize..u.end as usize {
+                            kernels::solvers::gs_row(a, &rp, &mut zp, row);
+                        }
+                    }
+                }
+                for s in 0..prog_rev.nsteps() {
+                    for u in prog_rev.step(s) {
+                        for row in (u.start as usize..u.end as usize).rev() {
+                            kernels::solvers::gs_row(a, &rp, &mut zp, row);
+                        }
+                    }
+                }
+            }
+            Backend::Scoped => kernels::ssor_precond(eng, a, &rp, &mut zp),
+            Backend::Pool => {
+                let wp: &WorkerPool = self.worker_pool();
+                pool::gauss_seidel_pool(wp, prog, a, &rp, &mut zp);
+                pool::gauss_seidel_pool_rev(wp, prog_rev, a, &rp, &mut zp);
+            }
+        }
+        for (old, &new) in perm.iter().enumerate() {
+            z[old] = zp[new as usize];
+        }
     }
 
     /// One Kaczmarz projection sweep on a distance-2 schedule, logical

@@ -145,6 +145,32 @@ pub fn gauss_seidel_pool(
     });
 }
 
+/// Backward Gauss–Seidel sweep: runs a [`StepProgram::reversed`] mirror
+/// of a distance-1 tree program with each unit's rows iterated in
+/// reverse, so the global update order is exactly the forward sweep's
+/// reversed — the back-substitution-like half of an SSOR application
+/// (`M = (D+L) D⁻¹ (D+U)`). Pass the *mirrored* program; the distance-1
+/// independence of units within a (mirrored) step is unchanged.
+pub fn gauss_seidel_pool_rev(
+    pool: &WorkerPool,
+    prog_rev: &StepProgram,
+    a: &Csr,
+    b: &[f64],
+    x: &mut [f64],
+) {
+    assert_eq!(a.nrows(), x.len());
+    let n = x.len();
+    let xp = SendPtr(x.as_mut_ptr());
+    pool.execute(prog_rev, |u| {
+        // SAFETY: distance-1 independence — no concurrent unit reads or
+        // writes these rows' neighbourhoods (symmetric under reversal).
+        let x = unsafe { std::slice::from_raw_parts_mut(xp.0, n) };
+        for row in (u.start as usize..u.end as usize).rev() {
+            kernels::solvers::gs_row(a, b, x, row);
+        }
+    });
+}
+
 /// Kaczmarz sweep on a **distance-2** tree program: concurrently executed
 /// rows share no column, so the scattered projections are race-free.
 pub fn kaczmarz_pool(pool: &WorkerPool, prog: &StepProgram, a: &Csr, b: &[f64], x: &mut [f64]) {

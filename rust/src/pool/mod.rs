@@ -30,7 +30,8 @@ mod program;
 mod workers;
 
 pub use exec::{
-    gauss_seidel_pool, kaczmarz_pool, mpk_execute_multi_pool, mpk_execute_multi_pool_on,
+    gauss_seidel_pool, gauss_seidel_pool_rev, kaczmarz_pool, mpk_execute_multi_pool,
+    mpk_execute_multi_pool_on,
     mpk_execute_pool, mpk_execute_pool_on, mpk_powers_multi_pool, mpk_powers_multi_pool_on,
     mpk_powers_pool, mpk_powers_pool_on, mpk_three_term_pool, mpk_three_term_pool_on,
     symmspmv_multi_pool_pack, symmspmv_pool, symmspmv_pool_pack, symmspmv_race_multi,

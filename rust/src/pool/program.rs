@@ -100,6 +100,23 @@ impl StepProgram {
         self.max_row as usize
     }
 
+    /// The exact mirror of this program: steps in reverse order, units
+    /// within each step reversed. An executor that additionally walks
+    /// each unit's rows backwards traverses the global row order exactly
+    /// reversed — the backward half of an SSOR sweep
+    /// ([`super::gauss_seidel_pool_rev`]). Conflict freedom is symmetric
+    /// (two rows independent forward are independent backward), so the
+    /// mirrored schedule is as race-free as the original.
+    pub fn reversed(&self) -> StepProgram {
+        let mut steps = Vec::with_capacity(self.nsteps());
+        for s in (0..self.nsteps()).rev() {
+            let mut units: Vec<WorkUnit> = self.step(s).to_vec();
+            units.reverse();
+            steps.push(units);
+        }
+        StepProgram::from_steps(steps)
+    }
+
     /// True iff the tree-program units partition `0..n` (each row covered
     /// exactly once). MPK programs cover each row once *per power*, so
     /// pass the appropriate expectation via `times`.

@@ -20,15 +20,44 @@
 //!   MPK plan construction) run on the request thread *before* the
 //!   vector joins a batch, so one bad request is answered with a
 //!   structured error and can never poison a drained batch.
+//! * **Iterative solves** — `{"solve": {"rhs": [..], "method": "cg"}}`
+//!   runs a whole [`crate::solver`] solve (CG, preconditioned CG,
+//!   Chebyshev, mixed precision) on the resident operator; the
+//!   full-precision per-iteration SpMVs go through the same batcher, so
+//!   concurrent solves coalesce their sweeps. One request exercises
+//!   long-lived pool residency instead of a single kernel call.
 //! * **Structured errors and stats** — malformed requests, non-finite
-//!   inputs, unknown matrices and out-of-range powers answer
-//!   `{"error": {"code", "message"}}`; `{"stats": true}` reports
-//!   request/batch counters.
+//!   inputs, unknown matrices, out-of-range powers and failed solves
+//!   answer `{"error": {"code", "message"}}`; `{"stats": true}` reports
+//!   request/batch/solve counters.
 //!
 //! Vectors cross the protocol in the matrix's original (logical) row
 //! numbering; permutations live entirely inside the operator handles.
 //! The TCP front end (newline-delimited JSON, graceful shutdown,
-//! `--max-requests`) lives in [`server`].
+//! `--max-requests`) lives in [`server`]. The full request/response/
+//! error catalogue, with worked transcripts, is `docs/SERVE_PROTOCOL.md`.
+//!
+//! The service core is usable without the TCP layer:
+//!
+//! ```
+//! use race::serve::{MatvecService, ServeOptions};
+//!
+//! let opts = ServeOptions {
+//!     matrices: vec!["stencil2d:8x8".into()],
+//!     threads: 2,
+//!     ..Default::default()
+//! };
+//! let svc = MatvecService::build(&opts).unwrap();
+//! let n = svc.entries()[0].n;
+//! // 5-point stencil rows sum to 1, so b == x for a constant vector
+//! let (resp, shutdown) = svc.handle(&format!("{{\"x\": {:?}}}", vec![1.0; n]));
+//! assert!(!shutdown && resp.contains("\"b\""));
+//! // a whole CG solve is one request
+//! let (resp, _) =
+//!     svc.handle(&format!("{{\"solve\": {{\"rhs\": {:?}, \"method\": \"cg\"}}}}", vec![1.0; n]));
+//! let j = race::util::json::Json::parse(&resp).unwrap();
+//! assert_eq!(j.get("converged"), Some(&race::util::json::Json::Bool(true)));
+//! ```
 
 mod batch;
 mod server;
@@ -68,6 +97,9 @@ pub struct ServeOptions {
     /// Dynamic batching window in microseconds (0 = natural batching
     /// only). Leaders wait at most `min(window, last kernel latency)`.
     pub batch_window_us: u64,
+    /// Cap on the per-request `max_iter` of the solve endpoint (requests
+    /// asking for more are clamped, not rejected).
+    pub solve_iter_max: usize,
     /// Matrix encoding the resident operators stream (default
     /// [`Storage::Pack`], which self-falls-back to CSR per matrix when
     /// the pack would not be smaller).
@@ -89,6 +121,7 @@ impl Default for ServeOptions {
             mpk_power_max: 8,
             mpk_cache_bytes: 2 << 20,
             batch_window_us: 0,
+            solve_iter_max: 10_000,
             storage: Storage::Pack,
             prec: ValPrec::F64,
         }
@@ -99,7 +132,10 @@ impl Default for ServeOptions {
 /// human-readable message. Rendered as `{"error": {"code", "message"}}`.
 #[derive(Debug, Clone)]
 pub struct ServeError {
+    /// Stable machine-readable code (see `docs/SERVE_PROTOCOL.md` for
+    /// the catalogue).
     pub code: &'static str,
+    /// Human-readable description of this occurrence.
     pub message: String,
 }
 
@@ -163,6 +199,9 @@ struct ServiceStats {
     errors: AtomicU64,
     matvecs: AtomicU64,
     mpk_requests: AtomicU64,
+    solves: AtomicU64,
+    /// Total solver iterations served (all solve requests).
+    solve_iterations: AtomicU64,
     batches: AtomicU64,
     batched_vectors: AtomicU64,
     mpk_batches: AtomicU64,
@@ -179,6 +218,7 @@ pub struct MatvecService {
     threads: usize,
     mpk_power_max: usize,
     batch_window_us: u64,
+    solve_iter_max: usize,
     stats: ServiceStats,
 }
 
@@ -216,6 +256,7 @@ impl MatvecService {
             threads,
             mpk_power_max: opts.mpk_power_max.max(1),
             batch_window_us: opts.batch_window_us,
+            solve_iter_max: opts.solve_iter_max.max(1),
             stats: ServiceStats::default(),
         })
     }
@@ -355,6 +396,34 @@ impl MatvecService {
         Ok((r.b, r.seconds, r.batch))
     }
 
+    /// Serve one iterative solve `A x = rhs` (original indexing) on the
+    /// resident operator — the long-lived-pool workload: one request
+    /// keeps the worker pool busy for the whole iteration history. The
+    /// full-precision per-iteration SpMVs are submitted to this matrix's
+    /// **existing request batcher**, so concurrent solves (and plain
+    /// matvec requests) on the same matrix coalesce their sweeps into
+    /// multi-vector kernels. Chebyshev basis sweeps and mixed-precision
+    /// f32 inner iterations run on the operator directly (a blocked
+    /// sweep does not decompose into batchable single matvecs).
+    pub fn solve(
+        &self,
+        name: Option<&str>,
+        rhs: &[f64],
+        cfg: &crate::solver::SolveConfig,
+    ) -> Result<crate::solver::SolveResult, ServeError> {
+        let entry = self.entry(name)?;
+        Self::check_input(entry, rhs)?;
+        self.stats.solves.fetch_add(1, Ordering::Relaxed);
+        let mut mv = |v: &[f64], out: &mut [f64]| {
+            let r = entry.batcher.matvec(v.to_vec(), |xs| self.run_batch(entry, xs));
+            out.copy_from_slice(&r.b);
+        };
+        let res = crate::solver::solve_with(entry.op(), &mut mv, rhs, cfg)
+            .map_err(|e| ServeError::new("solve_failed", e.to_string()))?;
+        self.stats.solve_iterations.fetch_add(res.iterations as u64, Ordering::Relaxed);
+        Ok(res)
+    }
+
     /// Stats snapshot as JSON.
     pub fn stats_json(&self) -> Json {
         let batches = self.stats.batches.load(Ordering::Relaxed);
@@ -391,6 +460,11 @@ impl MatvecService {
                 (
                     "mpk_requests",
                     Json::Num(self.stats.mpk_requests.load(Ordering::Relaxed) as f64),
+                ),
+                ("solves", Json::Num(self.stats.solves.load(Ordering::Relaxed) as f64)),
+                (
+                    "solve_iterations",
+                    Json::Num(self.stats.solve_iterations.load(Ordering::Relaxed) as f64),
                 ),
                 ("batches", Json::Num(batches as f64)),
                 ("batched_vectors", Json::Num(vectors as f64)),
@@ -440,13 +514,6 @@ impl MatvecService {
             ]);
             return Ok((ack.to_string(), true));
         }
-        let x = req.get("x").and_then(|j| j.as_f64_arr()).ok_or_else(|| {
-            ServeError::new(
-                "bad_request",
-                "request must be {\"x\": [..]} (optional \"matrix\", \"p\", or \
-                 {\"stats\": true} / {\"shutdown\": true})",
-            )
-        })?;
         let name = match req.get("matrix") {
             Some(Json::Str(s)) => Some(s.as_str()),
             Some(_) => {
@@ -454,6 +521,17 @@ impl MatvecService {
             }
             None => None,
         };
+        if let Some(sj) = req.get("solve") {
+            let resp = self.handle_solve(name, sj)?;
+            return Ok((resp, false));
+        }
+        let x = req.get("x").and_then(|j| j.as_f64_arr()).ok_or_else(|| {
+            ServeError::new(
+                "bad_request",
+                "request must be {\"x\": [..]} or {\"solve\": {\"rhs\": [..]}} (optional \
+                 \"matrix\", \"p\", or {\"stats\": true} / {\"shutdown\": true})",
+            )
+        })?;
         if let Some(pj) = req.get("p") {
             let p = pj
                 .as_f64()
@@ -476,6 +554,60 @@ impl MatvecService {
             ("seconds", Json::Num(secs)),
         ]);
         Ok((resp.to_string(), false))
+    }
+
+    /// Parse and serve one `{"solve": {...}}` request (the catalogue and
+    /// a worked transcript live in `docs/SERVE_PROTOCOL.md`).
+    fn handle_solve(&self, name: Option<&str>, sj: &Json) -> Result<String, ServeError> {
+        use crate::solver::{Method, SolveConfig};
+        let rhs = sj.get("rhs").and_then(|j| j.as_f64_arr()).ok_or_else(|| {
+            ServeError::new("bad_request", "\"solve\" must be {\"rhs\": [..], ..}")
+        })?;
+        let method: Method = match sj.get("method") {
+            None => Method::Cg,
+            Some(Json::Str(s)) => s
+                .parse()
+                .map_err(|e: anyhow::Error| ServeError::new("bad_request", e.to_string()))?,
+            Some(_) => {
+                return Err(ServeError::new("bad_request", "\"method\" must be a string"));
+            }
+        };
+        let tol = match sj.get("tol") {
+            None => 1e-8,
+            Some(j) => j.as_f64().filter(|t| t.is_finite() && *t > 0.0).ok_or_else(|| {
+                ServeError::new("bad_request", "\"tol\" must be a positive finite number")
+            })?,
+        };
+        let max_iter = match sj.get("max_iter") {
+            None => 1000usize.min(self.solve_iter_max),
+            Some(j) => {
+                let it = j.as_f64().filter(|p| p.fract() == 0.0 && *p >= 1.0).ok_or_else(|| {
+                    ServeError::new("bad_request", "\"max_iter\" must be a positive integer")
+                })? as usize;
+                it.min(self.solve_iter_max)
+            }
+        };
+        let mut cfg = SolveConfig::new().method(method).tol(tol).max_iter(max_iter);
+        if let Some(j) = sj.get("lambda") {
+            let b = j.as_f64_arr().filter(|b| b.len() == 2).ok_or_else(|| {
+                ServeError::new("bad_request", "\"lambda\" must be [lambda_min, lambda_max]")
+            })?;
+            cfg = cfg.lambda(b[0], b[1]);
+        }
+        let res = self.solve(name, &rhs, &cfg)?;
+        let resp = Json::obj(vec![
+            ("x", Json::arr_f64(&res.x)),
+            ("method", Json::Str(res.method.name().to_string())),
+            ("iterations", Json::Num(res.iterations as f64)),
+            ("matvecs", Json::Num(res.matvecs as f64)),
+            ("matvecs_f32", Json::Num(res.matvecs_f32 as f64)),
+            ("converged", Json::Bool(res.converged)),
+            ("fell_back", Json::Bool(res.fell_back)),
+            ("used_f32", Json::Bool(res.used_f32)),
+            ("rel_residual", Json::Num(res.rel_residual)),
+            ("seconds", Json::Num(res.seconds)),
+        ]);
+        Ok(resp.to_string())
     }
 }
 
@@ -746,6 +878,116 @@ mod tests {
         let (b32, _, _) = svc32.matvec(None, &x).unwrap();
         let err = crate::op::rel_err(&bc, &b32);
         assert!(err < 1e-5, "f32 serve error {err:.2e}");
+    }
+
+    #[test]
+    fn solve_endpoint_solves_and_reports() {
+        // request/response shapes documented in docs/SERVE_PROTOCOL.md §solve
+        let svc = MatvecService::build(&opts(&["stencil2d:10x10"])).unwrap();
+        let e = &svc.entries()[0];
+        let a0 = original(&e.name);
+        let xs: Vec<f64> = (0..e.n).map(|i| ((i * 3 + 1) % 7) as f64 * 0.5 - 1.5).collect();
+        let rhs = a0.spmv_ref(&xs);
+        for method in ["cg", "jacobi", "ssor", "chebyshev", "mixed"] {
+            let req = format!("{{\"solve\": {{\"rhs\": {rhs:?}, \"method\": \"{method}\"}}}}");
+            let (resp, stop) = svc.handle(&req);
+            assert!(!stop);
+            let j = Json::parse(&resp).unwrap();
+            assert_eq!(j.get("converged"), Some(&Json::Bool(true)), "{method}: {resp}");
+            assert_eq!(j.get("method"), Some(&Json::Str(method.into())), "{resp}");
+            let x = j.get("x").and_then(|v| v.as_f64_arr()).unwrap();
+            for i in 0..e.n {
+                assert!(
+                    (x[i] - xs[i]).abs() < 1e-5 * (1.0 + xs[i].abs()),
+                    "{method} row {i}: {} vs {}",
+                    x[i],
+                    xs[i]
+                );
+            }
+        }
+        let s = svc.stats_json();
+        let stats = s.get("stats").unwrap();
+        assert_eq!(stats.get("solves").and_then(Json::as_f64), Some(5.0));
+        assert!(stats.get("solve_iterations").and_then(Json::as_f64).unwrap() > 0.0);
+    }
+
+    #[test]
+    fn solve_endpoint_validates_requests() {
+        // error codes documented in docs/SERVE_PROTOCOL.md §errors
+        let svc = MatvecService::build(&opts(&["stencil2d:6x6"])).unwrap();
+        let n = svc.entries()[0].n;
+        let ones = vec![1.0; n];
+        let err = |resp: &str| {
+            let j = Json::parse(resp).unwrap();
+            match j.get("error").and_then(|e| e.get("code")) {
+                Some(Json::Str(c)) => c.clone(),
+                other => panic!("expected error envelope, got {other:?} in {resp}"),
+            }
+        };
+        let (r, _) = svc.handle("{\"solve\": {}}");
+        assert_eq!(err(&r), "bad_request");
+        let (r, _) = svc.handle("{\"solve\": {\"rhs\": [1.0, 2.0]}}");
+        assert_eq!(err(&r), "bad_request"); // wrong length
+        let (r, _) =
+            svc.handle(&format!("{{\"solve\": {{\"rhs\": {ones:?}, \"method\": \"qr\"}}}}"));
+        assert_eq!(err(&r), "bad_request");
+        let (r, _) = svc.handle(&format!("{{\"solve\": {{\"rhs\": {ones:?}, \"tol\": -1}}}}"));
+        assert_eq!(err(&r), "bad_request");
+        let (r, _) = svc.handle(&format!("{{\"solve\": {{\"rhs\": {ones:?}, \"max_iter\": 0}}}}"));
+        assert_eq!(err(&r), "bad_request");
+        let (r, _) = svc
+            .handle(&format!("{{\"solve\": {{\"rhs\": {ones:?}}}, \"matrix\": \"nope\"}}"));
+        assert_eq!(err(&r), "unknown_matrix");
+        let mut bad = ones.clone();
+        bad[0] = f64::NAN;
+        let se = svc.solve(None, &bad, &crate::solver::SolveConfig::new()).unwrap_err();
+        assert_eq!(se.code, "nonfinite_input");
+        // chebyshev needs a usable interval: lambda with a non-positive
+        // lower bound is a solve_failed error, not a panic
+        let (r, _) = svc.handle(&format!(
+            "{{\"solve\": {{\"rhs\": {ones:?}, \"method\": \"chebyshev\", \"lambda\": [-1, 5]}}}}"
+        ));
+        assert_eq!(err(&r), "solve_failed");
+    }
+
+    #[test]
+    fn concurrent_solves_batch_their_iteration_sweeps() {
+        // several CG solves in flight on one matrix: every one converges
+        // to its own solution, and — since this test issues NO plain
+        // matvec requests — a nonzero batch count proves the solves'
+        // per-iteration SpMVs actually ride the shared batcher (how much
+        // they coalesce is timing-dependent, so only routing is asserted)
+        let svc = Arc::new(MatvecService::build(&opts(&["stencil2d:12x12"])).unwrap());
+        let n = svc.entries()[0].n;
+        let mut handles = Vec::new();
+        for t in 0..4usize {
+            let svc = svc.clone();
+            handles.push(std::thread::spawn(move || {
+                let rhs: Vec<f64> =
+                    (0..n).map(|i| ((i * (t + 2)) % 11) as f64 * 0.3 - 1.0).collect();
+                let cfg = crate::solver::SolveConfig::new().tol(1e-9);
+                let res = svc.solve(None, &rhs, &cfg).unwrap();
+                assert!(res.converged && res.rel_residual < 1e-8, "t={t}");
+                (rhs, res.x)
+            }));
+        }
+        let a0 = original("stencil2d:12x12");
+        for h in handles {
+            let (rhs, x) = h.join().unwrap();
+            let ax = a0.spmv_ref(&x);
+            for i in 0..n {
+                assert!((ax[i] - rhs[i]).abs() < 1e-7 * (1.0 + rhs[i].abs()), "row {i}");
+            }
+        }
+        let s = svc.stats_json();
+        let stats = s.get("stats").unwrap();
+        let batches = stats.get("batches").and_then(Json::as_f64).unwrap();
+        let vectors = stats.get("batched_vectors").and_then(Json::as_f64).unwrap();
+        assert!(
+            batches > 0.0 && vectors >= batches,
+            "solve SpMVs must go through the batcher ({batches} batches, {vectors} vectors)"
+        );
+        assert_eq!(stats.get("solves").and_then(Json::as_f64), Some(4.0));
     }
 
     #[test]

@@ -1,0 +1,185 @@
+//! Chebyshev iteration on the level-blocked three-term sweeps.
+//!
+//! Classic Chebyshev semi-iteration for SPD `A` with spectrum inside
+//! `[λ_min, λ_max]`: the residual after `m` steps is the scaled Chebyshev
+//! polynomial `r_m = T_m(B) r_0 / T_m(μ)` with `B = (θI − A)/δ`,
+//! `θ = (λ_max + λ_min)/2`, `δ = (λ_max − λ_min)/2`, `μ = θ/δ`. The trick
+//! this module exploits: the *scaled residuals* `z_m = T_m(μ) r_m`
+//! satisfy the plain homogeneous Chebyshev recurrence
+//! `z_{m+1} = 2 B z_m − z_{m−1}` — exactly the shape of
+//! [`Operator::three_term`] — so the solver's matrix work is generated in
+//! cache-blocked chunks by the MPK subsystem instead of one memory-bound
+//! sweep per step. The iterate is recovered from the companion scalars
+//! `t_m = T_m(μ)` and vectors `w_m = t_m x_m`:
+//!
+//! * `w_1 = μ w_0 + z_0/δ`, and `w_{m+1} = 2μ w_m − w_{m−1} + (2/δ) z_m`
+//!   for `m ≥ 1` (the invariant `A w_m = t_m b − z_m` is preserved —
+//!   verified in the unit tests against reference CG);
+//! * `x_m = w_m / t_m`, and `‖r_m‖ = ‖z_m‖ / t_m` gives the convergence
+//!   estimate without an extra matvec.
+//!
+//! `t_m` grows like `exp(m·acosh μ)` — roughly `1/tol` at convergence —
+//! so the triple `(z, w, t)` is renormalized by `1/t_m` whenever `t_m`
+//! approaches the f64 range limit (the recurrences are jointly linear,
+//! so a common scale is invariant).
+
+use super::{l2, Method, SolveConfig, SolveResult};
+use crate::op::Operator;
+use anyhow::{ensure, Result};
+
+pub(super) fn chebyshev(op: &Operator, rhs: &[f64], cfg: &SolveConfig) -> Result<SolveResult> {
+    let n = op.n();
+    ensure!(cfg.cheb_chunk >= 1, "cheb_chunk must be >= 1");
+    let (lmin, lmax) = match cfg.lambda {
+        Some(b) => b,
+        None => super::gershgorin(op.matrix()),
+    };
+    ensure!(
+        lmin.is_finite() && lmax.is_finite() && lmax >= lmin,
+        "Chebyshev needs a finite interval [lambda_min, lambda_max], got [{lmin}, {lmax}]"
+    );
+    ensure!(
+        lmin > 0.0,
+        "Chebyshev needs positive spectrum bounds, got lambda_min = {lmin:.3e} — the matrix is \
+         not strictly diagonally dominant; pass SolveConfig::lambda for an SPD matrix"
+    );
+    let done = |x: Vec<f64>, it, mv, conv, residuals| SolveResult {
+        x,
+        method: Method::Chebyshev,
+        iterations: it,
+        inner_iterations: 0,
+        matvecs: mv,
+        matvecs_f32: 0,
+        precond_applies: 0,
+        converged: conv,
+        fell_back: false,
+        used_f32: false,
+        residuals,
+        rel_residual: f64::NAN, // filled by solve_with
+        seconds: 0.0,
+    };
+    let bnorm = l2(rhs);
+    let target = cfg.tol * bnorm.max(1e-300);
+    if bnorm <= target {
+        return Ok(done(vec![0.0; n], 0, 0, true, vec![bnorm]));
+    }
+    let theta = (lmax + lmin) / 2.0;
+    let delta = (lmax - lmin) / 2.0;
+    if delta == 0.0 {
+        // Gershgorin (or the caller) certified A = θI exactly
+        let x: Vec<f64> = rhs.iter().map(|v| v / theta).collect();
+        return Ok(done(x, 1, 0, true, vec![bnorm, 0.0]));
+    }
+    let mu = theta / delta;
+
+    // k = 0 state: z_0 = r_0 = b (x_0 = 0), t_0 = 1, w_0 = 0
+    let mut z_prev = rhs.to_vec();
+    let mut t_prev = 1.0f64;
+    let mut w_prev = vec![0.0f64; n];
+    // k = 1: z_1 = B r_0 via one three-term step with ρ = 0
+    let mut z_cur =
+        op.three_term(&z_prev, &z_prev, -1.0 / delta, theta / delta, 0.0, 1)?.pop().unwrap();
+    let mut t_cur = mu;
+    let mut w_cur: Vec<f64> = (0..n).map(|i| mu * w_prev[i] + z_prev[i] / delta).collect();
+    let mut m = 1usize;
+    let mut matvecs = 1usize;
+    let mut residuals = vec![bnorm, l2(&z_cur) / t_cur];
+    let mut converged = *residuals.last().unwrap() <= target;
+
+    while m < cfg.max_iter && !converged {
+        // one blocked sweep generates the next `cheb_chunk` basis vectors
+        let zs = op.three_term(
+            &z_prev,
+            &z_cur,
+            -2.0 / delta,
+            2.0 * theta / delta,
+            -1.0,
+            cfg.cheb_chunk,
+        )?;
+        matvecs += cfg.cheb_chunk;
+        for z_next in zs {
+            // advance w/t BEFORE rotating z: w_{m+1} consumes z_m
+            let w_next: Vec<f64> =
+                (0..n).map(|i| 2.0 * mu * w_cur[i] - w_prev[i] + 2.0 / delta * z_cur[i]).collect();
+            let t_next = 2.0 * mu * t_cur - t_prev;
+            w_prev = std::mem::replace(&mut w_cur, w_next);
+            t_prev = std::mem::replace(&mut t_cur, t_next);
+            z_prev = std::mem::replace(&mut z_cur, z_next);
+            m += 1;
+            let rn = l2(&z_cur) / t_cur;
+            residuals.push(rn);
+            if rn <= target {
+                converged = true;
+                break;
+            }
+            if m >= cfg.max_iter {
+                break;
+            }
+        }
+        if !converged && t_cur > 1e100 {
+            // joint rescale keeps every recurrence invariant — but only
+            // at a chunk boundary: the basis vectors of an in-flight
+            // chunk are at the old scale, so rescaling mid-chunk would
+            // mix scales (caught by the Python model check)
+            let s = 1.0 / t_cur;
+            z_prev.iter_mut().for_each(|v| *v *= s);
+            z_cur.iter_mut().for_each(|v| *v *= s);
+            w_prev.iter_mut().for_each(|v| *v *= s);
+            w_cur.iter_mut().for_each(|v| *v *= s);
+            t_prev *= s;
+            t_cur = 1.0;
+        }
+    }
+    let x: Vec<f64> = w_cur.iter().map(|w| w / t_cur).collect();
+    Ok(done(x, m, matvecs, converged, residuals))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen;
+    use crate::op::OpConfig;
+
+    #[test]
+    fn chebyshev_matches_reference_solution() {
+        let a = gen::stencil2d_5pt(20, 20);
+        let n = a.nrows();
+        let op = Operator::build(&a, OpConfig::new().threads(2)).unwrap();
+        let rhs: Vec<f64> = (0..n)
+            .map(|i| (i as f64 * 0.013).sin() + if i == n / 2 { 10.0 } else { 0.0 })
+            .collect();
+        let cfg = SolveConfig::new().method(Method::Chebyshev).tol(1e-8).max_iter(500);
+        let sol = op.solve(&rhs, &cfg).unwrap();
+        assert!(sol.converged, "chebyshev did not converge: {:?}", sol.residuals.last());
+        assert!(sol.rel_residual <= 5e-8, "true residual {:.3e}", sol.rel_residual);
+        // the internal estimate tracked the truth
+        let est = sol.residuals.last().unwrap() / super::l2(&rhs);
+        let drift = (est - sol.rel_residual).abs();
+        assert!(drift <= 1e-7, "estimate {est:.3e} vs {:.3e}", sol.rel_residual);
+        // and agrees with plain CG's answer
+        let cg = op.solve(&rhs, &SolveConfig::new().tol(1e-10)).unwrap();
+        let scale = cg.x.iter().fold(0f64, |m, v| m.max(v.abs()));
+        for i in 0..n {
+            assert!((sol.x[i] - cg.x[i]).abs() <= 1e-5 * (1.0 + scale), "row {i}");
+        }
+    }
+
+    #[test]
+    fn chebyshev_accepts_explicit_bounds_and_rejects_bad_ones() {
+        let a = gen::stencil2d_5pt(10, 10);
+        let op = Operator::build(&a, OpConfig::new().threads(2)).unwrap();
+        let rhs = vec![1.0; op.n()];
+        // explicit (looser) interval still converges
+        let cfg = SolveConfig::new().method(Method::Chebyshev).lambda(0.5, 12.0).max_iter(800);
+        let sol = op.solve(&rhs, &cfg).unwrap();
+        assert!(sol.converged);
+        // non-positive lower bound is refused with a helpful error
+        let bad = SolveConfig::new().method(Method::Chebyshev).lambda(-1.0, 5.0);
+        assert!(op.solve(&rhs, &bad).is_err());
+        // an indefinite matrix without explicit bounds is refused
+        let spin = gen::spin_chain_xxz(6, gen::SpinKind::XXZ);
+        let op2 = Operator::build(&spin, OpConfig::new().threads(2)).unwrap();
+        let r2 = vec![1.0; op2.n()];
+        assert!(op2.solve(&r2, &SolveConfig::new().method(Method::Chebyshev)).is_err());
+    }
+}

@@ -1,0 +1,199 @@
+//! Mixed-precision iterative refinement: f32-pack inner CG, f64 residual
+//! correction, automatic f64 fallback on stagnation.
+//!
+//! The classic iterative-refinement split, driven by the storage engine's
+//! [`ValPrec`](crate::sparse::ValPrec) knob: each outer step computes the
+//! residual `r = b − A x` at full precision (through the caller's matvec,
+//! so the serve layer can batch it), then solves the correction system
+//! `A d ≈ r` with CG whose sweeps stream the **single-precision delta
+//! pack** ([`Operator::f32_pack`]) — ~40% less traffic per sweep on the
+//! corpus — and applies `x += d` in f64. The inner solve runs entirely in
+//! executor numbering ([`Operator::symmspmv_permuted_f32`]), so the
+//! permutation cost is two O(n) maps per *outer* step, not per sweep.
+//!
+//! Refinement contracts the residual by roughly `inner_tol` per outer
+//! step while `cond(A) · ε_f32` stays below 1. When it does not — the
+//! outer residual shrinks by less than [`SolveConfig::stall`], turns
+//! non-finite, or the outer-step budget runs out — the solver **falls
+//! back to full f64 CG**, warm-started from the current iterate, so an
+//! ill-conditioned system degrades to the plain-CG cost instead of
+//! failing ([`SolveResult::fell_back`] reports it).
+
+use super::{l2, Method, SolveConfig, SolveResult};
+use crate::kernels;
+use crate::op::Operator;
+use anyhow::Result;
+use std::cell::Cell;
+
+pub(super) fn mixed(
+    op: &Operator,
+    custom: super::CustomMv<'_>,
+    rhs: &[f64],
+    cfg: &SolveConfig,
+) -> Result<SolveResult> {
+    let n = op.n();
+    let used_f32 = op.f32_pack().is_some();
+    let bnorm = l2(rhs);
+    let target = cfg.tol * bnorm.max(1e-300);
+    let calls = Cell::new(0usize);
+    // outer corrections are one matvec per refinement step, so the
+    // logical-order facade sweep is fine here (the hot loop is the
+    // inner CG, which stays in executor numbering below)
+    let mut facade_mv;
+    let base_mv: &mut dyn FnMut(&[f64], &mut [f64]) = match custom {
+        None => {
+            facade_mv = |v: &[f64], out: &mut [f64]| op.symmspmv(v, out);
+            &mut facade_mv
+        }
+        Some(f) => f,
+    };
+    let mut mv = |v: &[f64], out: &mut [f64]| {
+        calls.set(calls.get() + 1);
+        base_mv(v, out)
+    };
+    let mut x = vec![0.0f64; n];
+    let mut ax = vec![0.0f64; n];
+    let mut residuals = Vec::new();
+    let mut matvecs_f32 = 0usize;
+    // inner sweeps that ran at full precision because the f32 pack is
+    // infeasible — reported as f64 applications, NOT as matvecs_f32
+    let mut inner_full_prec = 0usize;
+    let mut inner_iterations = 0usize;
+    let mut outer = 0usize;
+    let mut prev_rn: Option<f64> = None;
+    let mut converged = false;
+    let mut fell_back = false;
+    while outer < cfg.max_outer {
+        let r: Vec<f64> = if outer == 0 {
+            rhs.to_vec() // x = 0: the residual is free
+        } else {
+            mv(&x, &mut ax);
+            rhs.iter().zip(&ax).map(|(b, a)| b - a).collect()
+        };
+        let rn = l2(&r);
+        residuals.push(rn);
+        if rn <= target {
+            converged = true;
+            break;
+        }
+        if !rn.is_finite() {
+            fell_back = true;
+            break;
+        }
+        if let Some(p) = prev_rn {
+            if rn > cfg.stall * p {
+                // the low-precision correction stopped paying: stagnation
+                fell_back = true;
+                break;
+            }
+        }
+        // inner correction solve A d ≈ r on the f32 pack, fully in
+        // executor numbering (two O(n) permutes per outer step)
+        let rp = op.permute(&r);
+        let mut dp = vec![0.0f64; n];
+        let inner_calls = Cell::new(0usize);
+        let mut inner_mv = |v: &[f64], out: &mut [f64]| {
+            inner_calls.set(inner_calls.get() + 1);
+            op.symmspmv_permuted_f32(v, out);
+        };
+        let inner = kernels::cg_solve(&mut inner_mv, &rp, &mut dp, cfg.inner_tol, cfg.inner_iter);
+        if used_f32 {
+            matvecs_f32 += inner_calls.get();
+        } else {
+            inner_full_prec += inner_calls.get();
+        }
+        inner_iterations += inner.iterations;
+        let d = op.unpermute(&dp);
+        for i in 0..n {
+            x[i] += d[i];
+        }
+        prev_rn = Some(rn);
+        outer += 1;
+    }
+    let mut iterations = outer;
+    if !converged {
+        // stagnation, a non-finite residual, or the outer budget ran out:
+        // finish at full precision, warm-started from the current iterate
+        // (a NaN-poisoned iterate restarts from zero)
+        fell_back = true;
+        if x.iter().any(|v| !v.is_finite()) {
+            x.iter_mut().for_each(|v| *v = 0.0);
+        }
+        let res = kernels::cg_solve(&mut mv, rhs, &mut x, cfg.tol, cfg.max_iter);
+        converged = res.converged;
+        iterations += res.iterations;
+        // res.residuals[0] re-measures the current residual — keep it
+        // only if the outer history is empty
+        let skip = usize::from(!residuals.is_empty());
+        residuals.extend(res.residuals.into_iter().skip(skip));
+    }
+    Ok(SolveResult {
+        x,
+        method: Method::Mixed,
+        iterations,
+        inner_iterations,
+        matvecs: calls.get() + inner_full_prec,
+        matvecs_f32,
+        precond_applies: 0,
+        converged,
+        fell_back,
+        used_f32,
+        residuals,
+        rel_residual: f64::NAN, // filled by solve_with
+        seconds: 0.0,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen;
+    use crate::op::OpConfig;
+    use crate::solver::SolveConfig;
+    use crate::sparse::Coo;
+
+    #[test]
+    fn mixed_converges_with_f32_inner_sweeps() {
+        let a = gen::stencil2d_5pt(20, 20);
+        let n = a.nrows();
+        let op = Operator::build(&a, OpConfig::new().threads(2)).unwrap();
+        let rhs: Vec<f64> = (0..n)
+            .map(|i| (i as f64 * 0.013).sin() + if i == n / 2 { 10.0 } else { 0.0 })
+            .collect();
+        let sol = op.solve(&rhs, &SolveConfig::new().method(Method::Mixed).tol(1e-8)).unwrap();
+        assert!(sol.converged && !sol.fell_back, "fell back: {:?}", sol.residuals);
+        assert!(sol.used_f32, "stencil pack must be feasible");
+        assert!(sol.rel_residual <= 1e-8, "true residual {:.3e}", sol.rel_residual);
+        // the work split is the whole point: sweeps ran at f32, only the
+        // outer corrections at f64
+        assert!(sol.matvecs_f32 > sol.matvecs, "{} f32 vs {} f64", sol.matvecs_f32, sol.matvecs);
+        assert!(sol.iterations <= 6, "refinement outers: {}", sol.iterations);
+    }
+
+    #[test]
+    fn mixed_falls_back_on_ill_conditioning_and_still_converges() {
+        // graded tridiagonal, cond ~ 1e9: cond * eps_f32 >> 1, so the
+        // low-precision correction stagnates and the f64 fallback fires
+        let n = 60usize;
+        let mut coo = Coo::new(n);
+        let d: Vec<f64> = (0..n).map(|i| 10f64.powf(-9.0 * i as f64 / (n - 1) as f64)).collect();
+        for i in 0..n {
+            coo.push(i, i, d[i]);
+            if i + 1 < n {
+                coo.push_sym(i, i + 1, -0.01 * d[i].min(d[i + 1]));
+            }
+        }
+        let a = coo.to_csr();
+        let rhs = a.spmv_ref(&vec![1.0; n]);
+        let op = Operator::build(&a, OpConfig::new().threads(2)).unwrap();
+        let cfg = SolveConfig::new().method(Method::Mixed).tol(1e-10).max_iter(5000);
+        let sol = op.solve(&rhs, &cfg).unwrap();
+        assert!(sol.fell_back, "expected stagnation fallback");
+        assert!(sol.converged, "fallback CG must still converge");
+        assert!(sol.rel_residual <= 1e-9, "true residual {:.3e}", sol.rel_residual);
+        // solution is the all-ones vector
+        for (i, v) in sol.x.iter().enumerate() {
+            assert!((v - 1.0).abs() < 1e-3, "row {i}: {v}");
+        }
+    }
+}

@@ -1,0 +1,553 @@
+//! Iterative solvers riding the [`Operator`] facade end to end — the
+//! "enclosing iterative solver" the paper motivates in §1, turned into a
+//! subsystem instead of an example.
+//!
+//! Every method consumes the facade's execution surface, so each solve
+//! inherits the whole pipeline underneath (RCM preorder, RACE schedule,
+//! delta-compressed storage, serial/scoped/pool backends):
+//!
+//! * [`Method::Cg`] — plain conjugate gradients; every matvec is one
+//!   [`Operator::symmspmv`] sweep.
+//! * [`Method::JacobiCg`] — CG preconditioned with the matrix diagonal.
+//! * [`Method::SsorCg`] — CG preconditioned with one forward + one
+//!   backward RACE-parallel Gauss–Seidel sweep
+//!   ([`Operator::ssor_precond`], distance-1 schedule) — the ICCG-class
+//!   solver family of the paper's related work.
+//! * [`Method::Chebyshev`] — Chebyshev iteration whose scaled-residual
+//!   basis `z_k = T_k((θI − A)/δ) r_0` is generated in cache-blocked
+//!   chunks by [`Operator::three_term`], i.e. the level-blocked MPK
+//!   sweeps of arXiv:2205.01598 doing the solver's matrix work.
+//! * [`Method::Mixed`] — mixed-precision iterative refinement: inner CG
+//!   on the f32 delta pack ([`Operator::f32_pack`], ~40% less traffic
+//!   per sweep), f64 residual correction outside, automatic fallback to
+//!   f64 CG when the low-precision correction stagnates.
+//!
+//! The entry point is [`Operator::solve`] (or [`solve_with`] to supply a
+//! custom full-precision matvec — the serve layer routes per-iteration
+//! SpMVs through its request batcher this way, so concurrent solves
+//! coalesce their sweeps):
+//!
+//! ```
+//! use race::gen;
+//! use race::op::{OpConfig, Operator};
+//! use race::solver::{Method, SolveConfig};
+//!
+//! let a = gen::stencil2d_5pt(24, 24);
+//! let op = Operator::build(&a, OpConfig::new().threads(2)).unwrap();
+//! let rhs = vec![1.0; op.n()];
+//! let sol = op.solve(&rhs, &SolveConfig::new().method(Method::Cg).tol(1e-8)).unwrap();
+//! assert!(sol.converged && sol.rel_residual < 1e-6);
+//! // mixed precision reaches the same tolerance with cheaper sweeps
+//! let mixed = op.solve(&rhs, &SolveConfig::new().method(Method::Mixed).tol(1e-8)).unwrap();
+//! assert!(mixed.converged && mixed.rel_residual < 1e-6);
+//! ```
+
+mod cheb;
+mod mixed;
+
+use crate::kernels;
+use crate::op::Operator;
+use crate::sparse::{Coo, Csr};
+use anyhow::{bail, ensure, Result};
+use std::cell::Cell;
+
+/// Which iterative method [`Operator::solve`] runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Method {
+    /// Plain conjugate gradients (SPD matrices).
+    #[default]
+    Cg,
+    /// CG with Jacobi (diagonal) preconditioning.
+    JacobiCg,
+    /// CG with SSOR preconditioning (forward + backward RACE-parallel
+    /// Gauss–Seidel sweeps on a distance-1 schedule).
+    SsorCg,
+    /// Chebyshev iteration over a spectral interval, its basis generated
+    /// by level-blocked [`Operator::three_term`] sweeps. Needs positive
+    /// spectrum bounds ([`SolveConfig::lambda`], or Gershgorin when the
+    /// matrix is diagonally dominant).
+    Chebyshev,
+    /// Mixed-precision iterative refinement: f32-pack inner CG + f64
+    /// residual correction, falling back to f64 CG on stagnation.
+    Mixed,
+}
+
+impl Method {
+    /// Stable lower-case name (the serve protocol / CLI spelling).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Cg => "cg",
+            Method::JacobiCg => "jacobi",
+            Method::SsorCg => "ssor",
+            Method::Chebyshev => "chebyshev",
+            Method::Mixed => "mixed",
+        }
+    }
+}
+
+impl std::fmt::Display for Method {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl std::str::FromStr for Method {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Method> {
+        match s {
+            "cg" => Ok(Method::Cg),
+            "jacobi" | "pcg-jacobi" => Ok(Method::JacobiCg),
+            "ssor" | "pcg-ssor" => Ok(Method::SsorCg),
+            "chebyshev" | "cheb" => Ok(Method::Chebyshev),
+            "mixed" | "ir" => Ok(Method::Mixed),
+            other => {
+                bail!("unknown solve method {other:?} (expected cg|jacobi|ssor|chebyshev|mixed)")
+            }
+        }
+    }
+}
+
+/// Builder-style configuration for [`Operator::solve`].
+#[derive(Debug, Clone)]
+pub struct SolveConfig {
+    /// Iterative method (default [`Method::Cg`]).
+    pub method: Method,
+    /// Relative residual target: converged when `‖b − Ax‖₂ ≤ tol·‖b‖₂`
+    /// (default `1e-8`).
+    pub tol: f64,
+    /// Iteration cap — CG iterations, Chebyshev steps, or (for
+    /// [`Method::Mixed`]) the fallback-CG budget (default 1000).
+    pub max_iter: usize,
+    /// Mixed: relative tolerance of each inner f32 CG solve
+    /// (default `1e-4`).
+    pub inner_tol: f64,
+    /// Mixed: iteration cap of each inner f32 CG solve (default 500).
+    pub inner_iter: usize,
+    /// Mixed: cap on outer refinement steps before falling back
+    /// (default 40).
+    pub max_outer: usize,
+    /// Mixed: stagnation threshold — fall back to f64 CG when an outer
+    /// step leaves `‖r_new‖ > stall·‖r_old‖` (default 0.25).
+    pub stall: f64,
+    /// Chebyshev: spectral interval `[λ_min, λ_max]` enclosing the
+    /// spectrum. `None` (default) uses [`gershgorin`] bounds, which are
+    /// positive exactly when the matrix is strictly diagonally dominant
+    /// with positive diagonal.
+    pub lambda: Option<(f64, f64)>,
+    /// Chebyshev: basis steps generated per blocked
+    /// [`Operator::three_term`] sweep (default 8).
+    pub cheb_chunk: usize,
+}
+
+impl Default for SolveConfig {
+    fn default() -> Self {
+        SolveConfig {
+            method: Method::Cg,
+            tol: 1e-8,
+            max_iter: 1000,
+            inner_tol: 1e-4,
+            inner_iter: 500,
+            max_outer: 40,
+            stall: 0.25,
+            lambda: None,
+            cheb_chunk: 8,
+        }
+    }
+}
+
+impl SolveConfig {
+    /// Start from the defaults (plain CG, `tol = 1e-8`, 1000 iterations).
+    pub fn new() -> SolveConfig {
+        SolveConfig::default()
+    }
+
+    /// Iterative method.
+    pub fn method(mut self, method: Method) -> Self {
+        self.method = method;
+        self
+    }
+
+    /// Relative residual target.
+    pub fn tol(mut self, tol: f64) -> Self {
+        self.tol = tol;
+        self
+    }
+
+    /// Iteration cap.
+    pub fn max_iter(mut self, max_iter: usize) -> Self {
+        self.max_iter = max_iter;
+        self
+    }
+
+    /// Mixed: inner f32 CG relative tolerance.
+    pub fn inner_tol(mut self, inner_tol: f64) -> Self {
+        self.inner_tol = inner_tol;
+        self
+    }
+
+    /// Mixed: inner f32 CG iteration cap.
+    pub fn inner_iter(mut self, inner_iter: usize) -> Self {
+        self.inner_iter = inner_iter;
+        self
+    }
+
+    /// Mixed: outer refinement-step cap.
+    pub fn max_outer(mut self, max_outer: usize) -> Self {
+        self.max_outer = max_outer;
+        self
+    }
+
+    /// Mixed: stagnation threshold for the f64 fallback.
+    pub fn stall(mut self, stall: f64) -> Self {
+        self.stall = stall;
+        self
+    }
+
+    /// Chebyshev: explicit spectral interval `[λ_min, λ_max]`.
+    pub fn lambda(mut self, lmin: f64, lmax: f64) -> Self {
+        self.lambda = Some((lmin, lmax));
+        self
+    }
+
+    /// Chebyshev: basis steps per blocked sweep.
+    pub fn cheb_chunk(mut self, chunk: usize) -> Self {
+        self.cheb_chunk = chunk;
+        self
+    }
+}
+
+/// Outcome of one [`Operator::solve`] call.
+#[derive(Debug, Clone)]
+pub struct SolveResult {
+    /// The solution, logical (original) row order.
+    pub x: Vec<f64>,
+    /// Method that produced it.
+    pub method: Method,
+    /// Iterations performed: CG iterations, Chebyshev steps, or (mixed)
+    /// outer refinement steps plus any fallback-CG iterations.
+    pub iterations: usize,
+    /// Mixed only: total inner f32 CG iterations across outer steps.
+    pub inner_iterations: usize,
+    /// Full-precision operator applications: the CG/outer sweeps routed
+    /// through the matvec hook, plus any mixed inner sweeps that fell
+    /// back to full precision because the f32 pack is infeasible.
+    pub matvecs: usize,
+    /// Mixed only: operator applications that actually streamed the f32
+    /// pack (0 whenever [`SolveResult::used_f32`] is `false`).
+    pub matvecs_f32: usize,
+    /// Preconditioner applications (Jacobi / SSOR variants).
+    pub precond_applies: usize,
+    /// Whether the residual target was reached.
+    pub converged: bool,
+    /// Mixed only: whether the f64 fallback was taken (stagnation, a
+    /// non-finite residual, or the outer-step cap).
+    pub fell_back: bool,
+    /// Mixed only: whether inner iterations actually streamed the f32
+    /// pack (`false` = encoding infeasible, inner ran at full precision).
+    pub used_f32: bool,
+    /// `‖r‖₂` history: index 0 is the initial residual, then one entry
+    /// per iteration (outer step for mixed; estimated `‖z_k‖/|t_k|` for
+    /// Chebyshev).
+    pub residuals: Vec<f64>,
+    /// True final relative residual `‖b − Ax‖₂ / ‖b‖₂`, recomputed with
+    /// the backend-independent reference SpMV — honest even if an
+    /// iteration's recurrence drifted.
+    pub rel_residual: f64,
+    /// Wall-clock seconds of the whole solve.
+    pub seconds: f64,
+}
+
+impl Operator {
+    /// Solve `A x = rhs` (logical order in and out) with the configured
+    /// iterative [`Method`], every sweep running on this handle's
+    /// backend and storage. The CG-family iteration runs entirely in
+    /// executor numbering on the zero-copy
+    /// [`Operator::symmspmv_permuted`] hot path — one permute in, one
+    /// permute out, no per-iteration permutation cost. See the
+    /// [module docs](crate::solver) for the method catalogue and a
+    /// runnable example.
+    pub fn solve(&self, rhs: &[f64], cfg: &SolveConfig) -> Result<SolveResult> {
+        solve_inner(self, None, rhs, cfg)
+    }
+}
+
+/// [`Operator::solve`] with a caller-supplied **full-precision matvec**
+/// (logical order; `out` is overwritten). The CG-family methods and the
+/// f64 residual corrections of [`Method::Mixed`] go through `matvec` —
+/// the serve layer substitutes its request batcher here so concurrent
+/// solves coalesce their per-iteration sweeps. [`Method::Chebyshev`]
+/// generates its basis with [`Operator::three_term`] (a blocked sweep
+/// does not decompose into single matvecs) and [`Method::Mixed`]'s inner
+/// iterations run on the handle directly; both still count into
+/// [`SolveResult::matvecs`] / [`SolveResult::matvecs_f32`].
+pub fn solve_with(
+    op: &Operator,
+    matvec: &mut dyn FnMut(&[f64], &mut [f64]),
+    rhs: &[f64],
+    cfg: &SolveConfig,
+) -> Result<SolveResult> {
+    solve_inner(op, Some(matvec), rhs, cfg)
+}
+
+/// Logical-order matvec hook: `None` = drive the facade's permuted hot
+/// path directly; `Some` = route full-precision sweeps through the
+/// caller's closure (the serve batcher).
+type CustomMv<'a> = Option<&'a mut dyn FnMut(&[f64], &mut [f64])>;
+
+fn solve_inner(
+    op: &Operator,
+    custom: CustomMv<'_>,
+    rhs: &[f64],
+    cfg: &SolveConfig,
+) -> Result<SolveResult> {
+    let n = op.n();
+    ensure!(rhs.len() == n, "rhs has {} entries, operator needs {}", rhs.len(), n);
+    ensure!(cfg.tol.is_finite() && cfg.tol > 0.0, "tol must be a positive finite number");
+    ensure!(cfg.max_iter >= 1, "max_iter must be >= 1");
+    let t0 = std::time::Instant::now();
+    let mut out = match cfg.method {
+        Method::Cg => run_cg(op, custom, rhs, cfg, Precond::None)?,
+        Method::JacobiCg => run_cg(op, custom, rhs, cfg, Precond::Jacobi)?,
+        Method::SsorCg => run_cg(op, custom, rhs, cfg, Precond::Ssor)?,
+        Method::Chebyshev => cheb::chebyshev(op, rhs, cfg)?,
+        Method::Mixed => mixed::mixed(op, custom, rhs, cfg)?,
+    };
+    out.seconds = t0.elapsed().as_secs_f64();
+    // honest final report: reference SpMV, independent of every backend
+    // and recurrence under test
+    let ax = op.spmv_ref(&out.x);
+    let rr = l2_diff(rhs, &ax);
+    out.rel_residual = rr / l2(rhs).max(1e-300);
+    Ok(out)
+}
+
+/// Preconditioner selector of the CG family.
+enum Precond {
+    None,
+    Jacobi,
+    Ssor,
+}
+
+/// CG / PCG in **executor numbering**: rhs is permuted once, every
+/// iteration runs on the zero-copy permuted surface, and the solution is
+/// unpermuted once at the end. A custom (logical-order) matvec hook is
+/// bridged per call — its permute cost is inherent to logical-order
+/// batching, not to this loop.
+fn run_cg(
+    op: &Operator,
+    custom: CustomMv<'_>,
+    rhs: &[f64],
+    cfg: &SolveConfig,
+    precond: Precond,
+) -> Result<SolveResult> {
+    let n = op.n();
+    let calls = Cell::new(0usize);
+    let papp = Cell::new(0usize);
+    let rhs_p = op.permute(rhs);
+    // the two closure shapes have distinct types; materialize whichever
+    // applies and erase to `&mut dyn` for the kernel-level CG loops
+    let mut facade_mv;
+    let mut custom_mv;
+    let mv: &mut dyn FnMut(&[f64], &mut [f64]) = match custom {
+        None => {
+            facade_mv = |vp: &[f64], outp: &mut [f64]| {
+                calls.set(calls.get() + 1);
+                op.symmspmv_permuted(vp, outp);
+            };
+            &mut facade_mv
+        }
+        Some(f) => {
+            // move `f` in, but only a *reference* to the counter
+            let calls = &calls;
+            custom_mv = move |vp: &[f64], outp: &mut [f64]| {
+                calls.set(calls.get() + 1);
+                let v = op.unpermute(vp);
+                let mut out = vec![0.0; n];
+                f(&v, &mut out);
+                outp.copy_from_slice(&op.permute(&out));
+            };
+            &mut custom_mv
+        }
+    };
+    let mut xp = vec![0.0; n];
+    let res = match precond {
+        Precond::None => kernels::cg_solve(mv, &rhs_p, &mut xp, cfg.tol, cfg.max_iter),
+        Precond::Jacobi => {
+            let inv_diag = jacobi_inv_diag_permuted(op)?;
+            let mut pc = |r: &[f64], z: &mut [f64]| {
+                papp.set(papp.get() + 1);
+                for i in 0..r.len() {
+                    z[i] = r[i] * inv_diag[i];
+                }
+            };
+            kernels::pcg_solve(mv, &mut pc, &rhs_p, &mut xp, cfg.tol, cfg.max_iter)
+        }
+        Precond::Ssor => {
+            jacobi_inv_diag_permuted(op)?; // same explicit-diagonal requirement
+            let mut pc = |rp: &[f64], zp: &mut [f64]| {
+                papp.set(papp.get() + 1);
+                // the distance-1 aux schedule has its own permutation, so
+                // the sweep crosses the facade in logical order
+                let r = op.unpermute(rp);
+                let mut z = vec![0.0; zp.len()];
+                op.ssor_precond(&r, &mut z);
+                zp.copy_from_slice(&op.permute(&z));
+            };
+            kernels::pcg_solve(mv, &mut pc, &rhs_p, &mut xp, cfg.tol, cfg.max_iter)
+        }
+    };
+    Ok(SolveResult {
+        x: op.unpermute(&xp),
+        method: cfg.method,
+        iterations: res.iterations,
+        inner_iterations: 0,
+        matvecs: calls.get(),
+        matvecs_f32: 0,
+        precond_applies: papp.get(),
+        converged: res.converged,
+        fell_back: false,
+        used_f32: false,
+        residuals: res.residuals,
+        rel_residual: f64::NAN, // filled by solve_inner
+        seconds: 0.0,
+    })
+}
+
+/// Inverse diagonal in executor numbering, read off the permuted upper
+/// triangle (whose diagonal leads each row).
+fn jacobi_inv_diag_permuted(op: &Operator) -> Result<Vec<f64>> {
+    let upper = op.upper();
+    let mut inv = vec![0.0; op.n()];
+    for (new, slot) in inv.iter_mut().enumerate() {
+        let lo = upper.row_ptr[new] as usize;
+        let hi = upper.row_ptr[new + 1] as usize;
+        ensure!(
+            lo < hi && upper.col[lo] as usize == new && upper.val[lo] != 0.0,
+            "Jacobi/SSOR preconditioning needs an explicit nonzero diagonal (permuted row {new})"
+        );
+        *slot = 1.0 / upper.val[lo];
+    }
+    Ok(inv)
+}
+
+/// `‖v‖₂`.
+pub(crate) fn l2(v: &[f64]) -> f64 {
+    v.iter().map(|x| x * x).sum::<f64>().sqrt()
+}
+
+/// `‖a − b‖₂`.
+pub(crate) fn l2_diff(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(p, q)| (p - q) * (p - q)).sum::<f64>().sqrt()
+}
+
+/// Gershgorin disc bounds of a symmetric matrix:
+/// `(min_i (a_ii − Σ_{j≠i} |a_ij|), max_i (a_ii + Σ_{j≠i} |a_ij|))`.
+/// The spectrum lies inside the returned interval; the lower bound is
+/// positive exactly when the matrix is strictly diagonally dominant with
+/// positive diagonal — the certificate [`Method::Chebyshev`] uses when
+/// no explicit [`SolveConfig::lambda`] interval is given.
+pub fn gershgorin(a: &Csr) -> (f64, f64) {
+    let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
+    for r in 0..a.nrows() {
+        let (cols, vals) = a.row(r);
+        let mut d = 0.0;
+        let mut off = 0.0;
+        for (&c, &v) in cols.iter().zip(vals) {
+            if c as usize == r {
+                d += v;
+            } else {
+                off += v.abs();
+            }
+        }
+        lo = lo.min(d - off);
+        hi = hi.max(d + off);
+    }
+    (lo, hi)
+}
+
+/// Shift a symmetric matrix's diagonal until its Gershgorin lower bound
+/// clears `ratio` times its upper bound — the cheap way the bench and
+/// property tests turn an arbitrary symmetric generator matrix into a
+/// certified SPD system with bounded condition estimate. Returns the
+/// (possibly unchanged) matrix and the applied shift; `ratio` must be in
+/// `(0, 1)`.
+pub fn make_spd(a: &Csr, ratio: f64) -> (Csr, f64) {
+    assert!(ratio > 0.0 && ratio < 1.0, "ratio must be in (0, 1)");
+    let (lo, hi) = gershgorin(a);
+    if lo > 0.0 && lo >= ratio * hi {
+        return (a.clone(), 0.0);
+    }
+    // lo + s = ratio * (hi + s); degenerate scalar matrix (lo == hi)
+    // shifts to diagonal 1 instead
+    let shift = if hi > lo { (ratio * hi - lo) / (1.0 - ratio) } else { 1.0 - lo };
+    let n = a.nrows();
+    let mut coo = Coo::new(n);
+    for r in 0..n {
+        let (cols, vals) = a.row(r);
+        for (&c, &v) in cols.iter().zip(vals) {
+            coo.push(r, c as usize, v);
+        }
+        coo.push(r, r, shift); // merged into the diagonal by to_csr
+    }
+    (coo.to_csr(), shift)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen;
+    use crate::op::OpConfig;
+
+    #[test]
+    fn method_round_trips_through_names() {
+        for m in [Method::Cg, Method::JacobiCg, Method::SsorCg, Method::Chebyshev, Method::Mixed]
+        {
+            assert_eq!(m.name().parse::<Method>().unwrap(), m);
+        }
+        assert!("nope".parse::<Method>().is_err());
+    }
+
+    #[test]
+    fn gershgorin_and_spd_shift() {
+        let a = gen::stencil2d_5pt(8, 8);
+        let (lo, hi) = gershgorin(&a);
+        assert_eq!(lo, 1.0); // row sums are 1, negative off-diagonals
+        assert!(hi <= 9.0 + 1e-12);
+        let (same, s0) = make_spd(&a, 0.05);
+        assert_eq!(s0, 0.0);
+        assert_eq!(same.nnz(), a.nnz());
+        // an indefinite matrix gets shifted into the certified interval
+        let spin = gen::spin_chain_xxz(6, gen::SpinKind::XXZ);
+        let (lo_s, _) = gershgorin(&spin);
+        assert!(lo_s <= 0.0, "spin chain should need a shift (lo = {lo_s})");
+        let (shifted, s) = make_spd(&spin, 0.02);
+        assert!(s > 0.0);
+        let (lo2, hi2) = gershgorin(&shifted);
+        assert!(lo2 > 0.0 && lo2 >= 0.02 * hi2 - 1e-9, "[{lo2}, {hi2}]");
+        assert!(shifted.is_symmetric());
+    }
+
+    #[test]
+    fn solve_validates_inputs() {
+        let a = gen::stencil2d_5pt(6, 6);
+        let op = Operator::build(&a, OpConfig::new().threads(2)).unwrap();
+        let bad = vec![1.0; 5];
+        assert!(op.solve(&bad, &SolveConfig::new()).is_err());
+        let rhs = vec![1.0; op.n()];
+        assert!(op.solve(&rhs, &SolveConfig::new().tol(0.0)).is_err());
+        assert!(op.solve(&rhs, &SolveConfig::new().max_iter(0)).is_err());
+    }
+
+    #[test]
+    fn zero_rhs_converges_immediately() {
+        let a = gen::stencil2d_5pt(6, 6);
+        let op = Operator::build(&a, OpConfig::new().threads(2)).unwrap();
+        let rhs = vec![0.0; op.n()];
+        for m in [Method::Cg, Method::Mixed, Method::Chebyshev] {
+            let sol = op.solve(&rhs, &SolveConfig::new().method(m)).unwrap();
+            assert!(sol.converged, "{m}");
+            assert!(sol.x.iter().all(|&v| v == 0.0), "{m}");
+        }
+    }
+}

@@ -32,6 +32,18 @@
 //! simply escapes more — but [`CsrPack::bytes`] lets callers fall back to
 //! plain CSR when the pack stops paying (the `Operator` does this
 //! automatically).
+//!
+//! Round trip and footprint in five lines:
+//!
+//! ```
+//! use race::sparse::{CsrPack, ValPrec};
+//!
+//! let upper = race::gen::stencil2d_5pt(32, 32).upper_triangle();
+//! let pack = CsrPack::pack_upper(&upper, ValPrec::F64);
+//! assert_eq!(pack.to_csr(), upper);          // lossless at f64
+//! assert!(pack.bytes() < pack.csr_bytes());  // and smaller: feasible
+//! assert!(pack.feasible());
+//! ```
 
 use super::Csr;
 

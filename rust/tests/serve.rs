@@ -1,6 +1,8 @@
 //! End-to-end tests of the serve subsystem: a real TCP server, the
 //! newline-delimited JSON protocol, request budgets and graceful
-//! shutdown, plus service-level request batches.
+//! shutdown, plus service-level request batches. The request/response
+//! shapes exercised here are the ones documented in
+//! `docs/SERVE_PROTOCOL.md` — when a field changes, change both.
 
 use race::serve::{MatvecService, ServeOptions, Server};
 use race::util::json::Json;
@@ -189,4 +191,70 @@ fn service_batch_equals_singles() {
             );
         }
     }
+}
+
+/// Full TCP round trip of the solve endpoint (`docs/SERVE_PROTOCOL.md`
+/// §solve): a CG solve and a mixed-precision solve over the wire, then a
+/// structured error for an unknown method.
+#[test]
+fn tcp_solve_roundtrip() {
+    let mut o = opts(&["stencil2d:8x8"]);
+    o.max_requests = Some(4);
+    let server = Server::bind(&o).unwrap();
+    let addr = server.local_addr();
+    let handle = std::thread::spawn(move || server.run().unwrap());
+
+    let stream = TcpStream::connect(addr).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    // rhs = A * x_true so the answer is checkable row by row
+    let (_, a) = race::coordinator::resolve_matrix("stencil2d:8x8", true).unwrap();
+    let n = a.nrows();
+    let x_true: Vec<f64> = (0..n).map(|i| ((i * 5 + 2) % 9) as f64 * 0.3 - 1.2).collect();
+    let rhs = a.spmv_ref(&x_true);
+
+    for method in ["cg", "mixed"] {
+        let body = format!("{{\"rhs\": {rhs:?}, \"method\": \"{method}\", \"tol\": 1e-9}}");
+        let req = format!("{{\"solve\": {body}}}\n");
+        writer.write_all(req.as_bytes()).unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        let j = Json::parse(line.trim()).unwrap();
+        assert_eq!(j.get("converged"), Some(&Json::Bool(true)), "{method}: {line}");
+        assert_eq!(j.get("method"), Some(&Json::Str(method.to_string())));
+        assert!(j.get("iterations").and_then(Json::as_f64).unwrap() >= 1.0);
+        let x = j.get("x").and_then(|v| v.as_f64_arr()).expect("x array");
+        for i in 0..n {
+            assert!(
+                (x[i] - x_true[i]).abs() < 1e-6 * (1.0 + x_true[i].abs()),
+                "{method} row {i}: {} vs {}",
+                x[i],
+                x_true[i]
+            );
+        }
+    }
+
+    // structured error for a bogus method
+    writer
+        .write_all(format!("{{\"solve\": {{\"rhs\": {rhs:?}, \"method\": \"qr\"}}}}\n").as_bytes())
+        .unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    let j = Json::parse(line.trim()).unwrap();
+    assert_eq!(
+        j.get("error").and_then(|e| e.get("code")),
+        Some(&Json::Str("bad_request".to_string())),
+        "{line}"
+    );
+
+    // stats shows the solves; this is also the budget's last request
+    writer.write_all(b"{\"stats\": true}\n").unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    let j = Json::parse(line.trim()).unwrap();
+    let stats = j.get("stats").expect("stats");
+    assert_eq!(stats.get("solves").and_then(Json::as_f64), Some(2.0), "{line}");
+    assert!(stats.get("solve_iterations").and_then(Json::as_f64).unwrap() >= 2.0);
+    handle.join().unwrap();
 }
