@@ -7,7 +7,10 @@
 //! Emits `BENCH_perf.json` (override the path with `RACE_BENCH_OUT`, same
 //! shape family as `BENCH_mpk.json`) so the scalar / unrolled / packed
 //! kernel GF/s trajectory is machine-readable from this PR onward:
-//! `{"bench": "perf_kernel", "cases": [{matrix, kernel, gfs, median_ms}]}`.
+//! `{"bench": "perf_kernel", "cases": [{matrix, kernel, gfs, median_ms}],
+//! "phases": [{phase, ms, count}]}` — the `phases` breakdown comes from
+//! the [`race::obs`] span recorder wrapped around the full
+//! `Operator::symmspmv` service path (permute in → kernel → permute out).
 //!
 //! `RACE_BENCH_FULL=1` runs the larger variants.
 
@@ -117,9 +120,43 @@ fn main() {
     report(&s, None);
     println!("  = {:.1} M accesses/s", 2.0 * upper.nnz() as f64 / s.median / 1e6);
 
+    // facade path through the obs recorder: where one full
+    // `Operator::symmspmv` service spends its time (permute in, pooled
+    // kernel, permute out) — the recorder replaces the ad-hoc Instant
+    // pairs this breakdown used to require
+    println!("== operator facade phases (obs recorder) ==");
+    let op = race::op::Operator::build(a, race::op::OpConfig::new().threads(4)).unwrap();
+    let nf = op.n();
+    let xf: Vec<f64> = (0..nf).map(|i| (i as f64 * 0.3).sin()).collect();
+    let mut bf = vec![0.0; nf];
+    op.symmspmv(&xf, &mut bf); // warm-up: pack encode + program compile
+    race::obs::set_enabled(true);
+    race::obs::recorder().drain();
+    let flops_f = 2.0 * a.nnz() as f64;
+    let s = bench("operator symmspmv (facade)", 0.4, || {
+        op.symmspmv(&xf, &mut bf);
+    });
+    race::obs::set_enabled(false);
+    report(&s, Some(flops_f));
+    rows.push(case_row(mats[0].0, "operator", &s, flops_f));
+    let facade_events = race::obs::recorder().drain();
+    let phase_rows: Vec<Json> = race::obs::phase_totals(&facade_events)
+        .iter()
+        .map(|p| {
+            println!("  {:<20} {:>10.3} ms  x{}", p.name, p.total_ms(), p.count);
+            Json::obj(vec![
+                ("phase", Json::Str(p.name.to_string())),
+                ("ms", Json::Num(p.total_ms())),
+                ("count", Json::Num(p.count as f64)),
+            ])
+        })
+        .collect();
+    std::hint::black_box(&bf);
+
     let out = Json::obj(vec![
         ("bench", Json::Str("perf_kernel".to_string())),
         ("cases", Json::Arr(rows)),
+        ("phases", Json::Arr(phase_rows)),
     ]);
     let path = std::env::var("RACE_BENCH_OUT").unwrap_or_else(|_| "BENCH_perf.json".to_string());
     std::fs::write(&path, out.to_string() + "\n").expect("write BENCH_perf.json");

@@ -132,6 +132,7 @@ impl Report {
 
 /// Resolve a matrix by corpus name, generator spec, or MatrixMarket path.
 pub fn resolve_matrix(spec: &str, small: bool) -> Result<(String, Csr)> {
+    let _sp = crate::obs::span_detail("build.resolve_matrix", || spec.to_string());
     if let Some(e) = gen::corpus_entry(spec) {
         return Ok((e.name.to_string(), (e.build)(small)));
     }

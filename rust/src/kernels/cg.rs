@@ -37,6 +37,7 @@ pub fn cg_solve(
     let mut iterations = 0;
     let mut converged = rs_old <= target;
     while iterations < max_iter && !converged {
+        let _sp = crate::obs::span("solve.iteration");
         for s in scratch.iter_mut() {
             *s = 0.0;
         }
@@ -96,6 +97,7 @@ pub fn pcg_solve(
     let mut iterations = 0;
     let mut converged = rr(&r) <= target;
     while iterations < max_iter && !converged {
+        let _sp = crate::obs::span("solve.iteration");
         scratch.iter_mut().for_each(|s| *s = 0.0);
         matvec(&p, &mut scratch);
         let p_ap: f64 = p.iter().zip(&scratch).map(|(a, b)| a * b).sum();

@@ -49,6 +49,10 @@
 //!   f64 fallback on stagnation).
 //! * [`runtime`] — PJRT/XLA artifact loading so AOT-compiled JAX/Pallas
 //!   kernels run from Rust with no Python on the request path.
+//! * [`obs`] — the observability substrate: nestable spans over every
+//!   build/execute phase, per-worker imbalance reports from the pool,
+//!   fixed-bucket latency histograms, attained-vs-model roofline rows and
+//!   a Chrome-trace exporter (`race-cli profile`, serve `{"metrics"}`).
 //! * [`coordinator`] — the pipeline driver used by the CLI, benches and
 //!   examples.
 //!
@@ -96,6 +100,7 @@ pub mod graph;
 pub mod kernels;
 pub mod machine;
 pub mod mpk;
+pub mod obs;
 pub mod op;
 pub mod partition;
 pub mod perfmodel;

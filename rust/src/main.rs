@@ -46,17 +46,31 @@ USAGE:
       sweeps, f64 residual correction, f64 fallback on stagnation).
       Matrices whose Gershgorin lower bound is not positive are shifted
       to a certified SPD system first (the applied shift is reported).
+  race-cli profile --matrix SPEC [--threads N] [--machine ivb|skx|host] [--small]
+                   [--power P] [--storage pack|csr] [--prec f64|f32]
+                   [--out BENCH_obs.json] [--trace-out race_trace.json] [--json]
+      Roofline-aware profile via the obs recorder: per-build-phase
+      timings (RCM, level construction, coloring recursion, load
+      balancing, pack encode), per-worker compute/wait breakdown with
+      load-imbalance ratio and idle fraction for one recorded SymmSpMV
+      execution, and attained-vs-model bandwidth (cachesim traffic over
+      the measured median). Writes a chrome://tracing-loadable span trace
+      plus BENCH_obs.json. --power P adds an MPK roofline row. Setting
+      RACE_OBS=1 enables the same recorder under every other subcommand.
   race-cli serve --matrix SPEC[,SPEC..] [--threads N] [--addr HOST:PORT]
                  [--small] [--max-requests N] [--mpk-power P] [--mpk-cache BYTES]
                  [--batch-window-us N] [--storage pack|csr] [--prec f64|f32]
-                 [--solve-iter-max N]
+                 [--solve-iter-max N] [--trace]
       SymmSpMV/MPK/solve-as-a-service over TCP (newline-delimited JSON,
       see docs/SERVE_PROTOCOL.md): multi-matrix registry, request
       micro-batching on a persistent worker pool (SymmSpMV and MPK
       requests both batch), {\"x\": [..], \"p\": k} matrix powers,
       {\"solve\": {\"rhs\": [..], \"method\": \"cg\"}} iterative solves
       (per-iteration SpMVs ride the same batcher), {\"stats\": true}
-      counters, {\"shutdown\": true} / --max-requests for shutdown.
+      counters with latency percentiles and per-matrix/error breakdowns,
+      {\"metrics\": true} Prometheus-style text, {\"trace\": true} span
+      capture (--trace enables the recorder at startup),
+      {\"shutdown\": true} / --max-requests for shutdown.
       --batch-window-us makes batch leaders wait a bounded time (capped
       at the last kernel latency) so medium-load traffic coalesces.
       --storage/--prec select the matrix encoding the kernels stream
@@ -176,6 +190,7 @@ fn main() -> Result<()> {
         "solve" => cmd_solve(&args),
         "pack-stats" => cmd_pack_stats(&args),
         "explain" => cmd_explain(&args),
+        "profile" => cmd_profile(&args),
         "serve" => {
             let matrices: Vec<String> = args
                 .require("matrix")?
@@ -201,6 +216,7 @@ fn main() -> Result<()> {
                 solve_iter_max: args.get_usize("solve-iter-max", 10_000)?,
                 storage: parse_storage(&args.get("storage", "pack"))?,
                 prec: parse_prec(&args.get("prec", "f64"))?,
+                trace: args.has("trace"),
             };
             race::serve::serve(&opts)
         }
@@ -565,6 +581,178 @@ fn cmd_pack_stats(args: &Args) -> Result<()> {
     if json {
         println!("{}", Json::obj(vec![("pack_stats", Json::Arr(rows))]).to_string());
     }
+    Ok(())
+}
+
+/// Roofline-aware profile: enable the obs recorder, build an Operator,
+/// split the build into its phase timings, record one SymmSpMV execution
+/// for the per-worker compute/wait breakdown, and compare the measured
+/// median against the cachesim traffic model (attained vs roofline
+/// bandwidth). Writes a Chrome-trace span capture plus `BENCH_obs.json`.
+fn cmd_profile(args: &Args) -> Result<()> {
+    use race::obs;
+    let matrix = args.require("matrix")?;
+    let threads = args.get_usize("threads", 4)?;
+    let mach = args.get("machine", "host");
+    let m = machine::by_name(&mach).ok_or_else(|| anyhow::anyhow!("unknown machine {mach}"))?;
+    let out = args.get("out", "BENCH_obs.json");
+    let trace_out = args.get("trace-out", "race_trace.json");
+    let json = args.has("json");
+
+    obs::set_enabled(true);
+    obs::recorder().drain(); // start from a clean buffer
+
+    let (name, a0) = coordinator::resolve_matrix(&matrix, args.has("small"))?;
+    let op = Operator::build(
+        &a0,
+        OpConfig::new()
+            .threads(threads)
+            .storage(parse_storage(&args.get("storage", "pack"))?)
+            .precision(parse_prec(&args.get("prec", "f64"))?),
+    )?;
+    // warm-up forces the lazy pieces (pack encode, program compile) so
+    // they land in the build-phase table instead of inside the bench
+    let x: Vec<f64> = (0..op.n()).map(|i| ((i % 97) as f64) * 0.02 - 0.9).collect();
+    let xp = op.permute(&x);
+    let mut bp = vec![0.0; op.n()];
+    op.symmspmv_permuted(&xp, &mut bp);
+    let build_events = obs::recorder().drain();
+    let phases: Vec<obs::PhaseTotal> = obs::phase_totals(&build_events)
+        .into_iter()
+        .filter(|p| p.name.starts_with("build") || p.name.starts_with("race"))
+        .collect();
+
+    // median timings run un-instrumented; then one recorded execution
+    // supplies the per-worker slots and the trace spans
+    obs::set_enabled(false);
+    let s_symm = race::util::bench::bench("symmspmv", 0.1, || {
+        op.symmspmv_permuted(&xp, std::hint::black_box(&mut bp));
+    });
+    obs::set_enabled(true);
+    op.symmspmv_permuted(&xp, &mut bp);
+    let report = op.worker_pool().take_exec_report();
+
+    let nnz_full = op.permuted_matrix().nnz();
+    let tr = match op.pack() {
+        Some(pack) => cachesim::measure_symmspmv_pack_traffic(pack, nnz_full, &m),
+        None => cachesim::measure_symmspmv_traffic(op.upper(), nnz_full, &m),
+    };
+    let flops = 2.0 * nnz_full as f64;
+    let bytes = tr.bytes_total as f64;
+    let mut roofs =
+        vec![obs::roofline::RooflineRow::new("symmspmv", s_symm.median, bytes, flops, &m)];
+    if args.has("power") {
+        let p = args.get_usize("power", 4)?;
+        let h = op.mpk(p)?;
+        obs::set_enabled(false);
+        let s_mpk = race::util::bench::bench("mpk", 0.1, || {
+            std::hint::black_box(op.powers_permuted(&h, &xp));
+        });
+        obs::set_enabled(true);
+        op.powers_permuted(&h, &xp);
+        let tr_mpk = cachesim::measure_mpk_traffic(h.plan(), &m);
+        roofs.push(obs::roofline::RooflineRow::new(
+            &format!("mpk p={p}"),
+            s_mpk.median,
+            tr_mpk.bytes_total as f64,
+            flops * p as f64,
+            &m,
+        ));
+    }
+    let mut events = build_events;
+    events.extend(obs::recorder().drain());
+    obs::trace::write_chrome_trace(&trace_out, &events)?;
+
+    let exec_json = match &report {
+        Some(r) => {
+            let workers: Vec<Json> = (0..r.threads)
+                .map(|w| {
+                    Json::obj(vec![
+                        ("compute_ms", Json::Num(r.compute_ns[w] as f64 / 1e6)),
+                        ("wait_ms", Json::Num(r.wait_ns[w] as f64 / 1e6)),
+                    ])
+                })
+                .collect();
+            Json::obj(vec![
+                ("median_ms", Json::Num(s_symm.median * 1e3)),
+                ("nsteps", Json::Num(r.nsteps as f64)),
+                ("imbalance", Json::Num(r.imbalance)),
+                ("step_imbalance", Json::Num(r.step_imbalance)),
+                ("idle_frac", Json::Num(r.idle_frac)),
+                ("workers", Json::Arr(workers)),
+            ])
+        }
+        None => Json::obj(vec![("median_ms", Json::Num(s_symm.median * 1e3))]),
+    };
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("profile".to_string())),
+        ("matrix", Json::Str(name.clone())),
+        ("threads", Json::Num(threads as f64)),
+        ("machine", Json::Str(m.name.to_string())),
+        (
+            "build_phases",
+            Json::Arr(
+                phases
+                    .iter()
+                    .map(|p| {
+                        Json::obj(vec![
+                            ("phase", Json::Str(p.name.to_string())),
+                            ("ms", Json::Num(p.total_ms())),
+                            ("count", Json::Num(p.count as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("exec", exec_json),
+        ("roofline", Json::Arr(roofs.iter().map(|r| r.to_json()).collect())),
+        ("trace_events", Json::Num(events.len() as f64)),
+        ("trace_file", Json::Str(trace_out.clone())),
+    ]);
+    std::fs::write(&out, doc.to_string())?;
+
+    if json {
+        println!("{}", doc.to_string());
+        return Ok(());
+    }
+    println!("{name}: profile on {} with {threads} threads", m.name);
+    println!("  build phases (span totals):");
+    for p in &phases {
+        println!("    {:<22} {:>10.3} ms  x{}", p.name, p.total_ms(), p.count);
+    }
+    if let Some(r) = &report {
+        println!("  symmspmv execution ({} steps, one recorded run):", r.nsteps);
+        println!("    {:>3} {:>12} {:>12}", "w", "compute ms", "wait ms");
+        for w in 0..r.threads {
+            println!(
+                "    {:>3} {:>12.3} {:>12.3}",
+                w,
+                r.compute_ns[w] as f64 / 1e6,
+                r.wait_ns[w] as f64 / 1e6
+            );
+        }
+        println!(
+            "    imbalance {:.3} (per-step {:.3}), idle fraction {:.3}",
+            r.imbalance, r.step_imbalance, r.idle_frac
+        );
+    }
+    println!("  roofline (median of {} iters, model traffic from cachesim):", s_symm.iters);
+    println!(
+        "    {:<10} {:>10} {:>10} {:>10} {:>10} {:>8}",
+        "kernel", "ms", "GB/s", "GF/s", "roof GF/s", "bw frac"
+    );
+    for r in &roofs {
+        println!(
+            "    {:<10} {:>10.3} {:>10.2} {:>10.2} {:>10.2} {:>8.2}",
+            r.kernel,
+            r.seconds * 1e3,
+            r.attained_bw / 1e9,
+            r.attained_flops / 1e9,
+            r.roof_load / 1e9,
+            r.bw_frac
+        );
+    }
+    println!("  wrote {out} and {trace_out} ({} span events)", events.len());
     Ok(())
 }
 

@@ -1,0 +1,206 @@
+//! Fixed-bucket atomic histograms with interpolated quantiles.
+//!
+//! The serve telemetry wants p50/p95/p99 latencies and a batch-size
+//! distribution without allocation or locking on the request path, so the
+//! histogram is a fixed array of atomic counters over **static bucket
+//! bounds** (doubling bounds, Prometheus-style `le` semantics: bucket `i`
+//! counts observations `v <= bounds[i]`, with one overflow bucket at the
+//! end). Observation is one relaxed `fetch_add` per counter touched;
+//! quantiles are computed on read by linear interpolation inside the
+//! selected bucket, exactly like `histogram_quantile` in PromQL.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Latency bucket upper bounds in nanoseconds: 1 µs doubling up to ~33 s.
+pub const LATENCY_BOUNDS_NS: [u64; 26] = [
+    1_000,
+    2_000,
+    4_000,
+    8_000,
+    16_000,
+    32_000,
+    64_000,
+    128_000,
+    256_000,
+    512_000,
+    1_024_000,
+    2_048_000,
+    4_096_000,
+    8_192_000,
+    16_384_000,
+    32_768_000,
+    65_536_000,
+    131_072_000,
+    262_144_000,
+    524_288_000,
+    1_048_576_000,
+    2_097_152_000,
+    4_194_304_000,
+    8_388_608_000,
+    16_777_216_000,
+    33_554_432_000,
+];
+
+/// Size bucket upper bounds (counts): 1 doubling up to 1024.
+pub const SIZE_BOUNDS: [u64; 11] = [1, 2, 4, 8, 16, 32, 64, 128, 256, 512, 1024];
+
+/// A fixed-bucket histogram over `u64` observations (thread-safe; all
+/// updates are relaxed atomics).
+pub struct Hist {
+    bounds: &'static [u64],
+    /// `bounds.len() + 1` counters; the last is the overflow bucket.
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Hist {
+    /// A histogram over the given strictly increasing bounds.
+    pub fn with_bounds(bounds: &'static [u64]) -> Hist {
+        debug_assert!(bounds.windows(2).all(|w| w[0] < w[1]), "bounds must increase");
+        Hist {
+            bounds,
+            buckets: (0..=bounds.len()).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    /// A latency histogram (nanosecond observations, [`LATENCY_BOUNDS_NS`]).
+    pub fn latency() -> Hist {
+        Hist::with_bounds(&LATENCY_BOUNDS_NS)
+    }
+
+    /// A size histogram (count observations, [`SIZE_BOUNDS`]).
+    pub fn sizes() -> Hist {
+        Hist::with_bounds(&SIZE_BOUNDS)
+    }
+
+    /// Record one observation.
+    pub fn observe(&self, v: u64) {
+        let idx = self.bounds.partition_point(|&b| b < v);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    /// Total observations.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Sum of all observations.
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    /// Largest observation (0 when empty).
+    pub fn max(&self) -> u64 {
+        self.max.load(Ordering::Relaxed)
+    }
+
+    /// Mean observation (0 when empty).
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum() as f64 / n as f64
+        }
+    }
+
+    /// The bucket bounds.
+    pub fn bounds(&self) -> &'static [u64] {
+        self.bounds
+    }
+
+    /// Current bucket counters (`bounds.len() + 1` entries, overflow last).
+    pub fn bucket_counts(&self) -> Vec<u64> {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect()
+    }
+
+    /// The `q`-quantile (`0 < q <= 1`) with linear interpolation inside
+    /// the selected bucket. Observations in the overflow bucket are
+    /// attributed the recorded maximum. Returns 0 when empty.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let counts = self.bucket_counts();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let rank = (q.clamp(0.0, 1.0) * total as f64).max(1.0);
+        let mut cum = 0u64;
+        for (i, &c) in counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            let next = cum + c;
+            if (next as f64) >= rank {
+                let lo = if i == 0 { 0 } else { self.bounds[i - 1] };
+                let hi = if i < self.bounds.len() { self.bounds[i] } else { self.max() };
+                let frac = (rank - cum as f64) / c as f64;
+                return lo as f64 + (hi.saturating_sub(lo)) as f64 * frac;
+            }
+            cum = next;
+        }
+        self.max() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buckets_use_le_semantics() {
+        let h = Hist::with_bounds(&SIZE_BOUNDS);
+        h.observe(1); // <= 1 -> bucket 0
+        h.observe(2); // <= 2 -> bucket 1
+        h.observe(3); // <= 4 -> bucket 2
+        h.observe(4); // <= 4 -> bucket 2
+        h.observe(5000); // overflow
+        let c = h.bucket_counts();
+        assert_eq!(c[0], 1);
+        assert_eq!(c[1], 1);
+        assert_eq!(c[2], 2);
+        assert_eq!(*c.last().unwrap(), 1);
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.sum(), 1 + 2 + 3 + 4 + 5000);
+        assert_eq!(h.max(), 5000);
+    }
+
+    #[test]
+    fn quantiles_interpolate_within_buckets() {
+        let h = Hist::latency();
+        // 100 observations at 10 µs (bucket (8_000, 16_000] ns) and 100
+        // at 1 ms (bucket (512_000, 1_024_000] ns): p50 must sit in the
+        // first group's bucket, p99 in the second's.
+        for _ in 0..100 {
+            h.observe(10_000);
+        }
+        for _ in 0..100 {
+            h.observe(1_000_000);
+        }
+        let p50 = h.quantile(0.50);
+        assert!((8_000.0..=16_000.0).contains(&p50), "p50 = {p50}");
+        let p99 = h.quantile(0.99);
+        assert!((512_000.0..=1_024_000.0).contains(&p99), "p99 = {p99}");
+        // exact interpolation: rank 100 closes the first bucket exactly
+        assert!((p50 - 16_000.0).abs() < 1e-9, "p50 = {p50}");
+    }
+
+    #[test]
+    fn quantile_handles_overflow_and_empty() {
+        let h = Hist::sizes();
+        assert_eq!(h.quantile(0.5), 0.0);
+        h.observe(5000);
+        h.observe(9000);
+        // everything overflows: quantiles cap at the recorded max
+        assert!(h.quantile(0.5) <= 9000.0);
+        assert_eq!(h.quantile(1.0), 9000.0);
+        assert_eq!(h.mean(), 7000.0);
+    }
+}

@@ -1,0 +1,385 @@
+//! Tracing + metrics substrate (std-only, zero dependencies).
+//!
+//! Everything the paper argues quantitatively — that RACE SymmSpMV tracks
+//! the Roofline model, and that level-grouping/load-balancing removes the
+//! idle-thread cost of classic coloring — needs *measurement* hooks in the
+//! build and execute paths. This module provides them:
+//!
+//! * **Spans** ([`span`], [`Span`], [`Recorder`]): nestable RAII phase
+//!   timers. `Operator::build` phases (RCM, level construction,
+//!   aggregation, load balancing, pack encode, schedule compile) and every
+//!   execute path (`symmspmv`/`powers`/`three_term`/sweeps/solve
+//!   iterations) open spans, so one drained event list yields a full
+//!   phase breakdown and a Chrome-trace timeline ([`trace`]).
+//! * **Histograms** ([`hist::Hist`]): fixed-bucket atomic histograms with
+//!   interpolated quantiles — the serve latency/batch-size metrics.
+//! * **Roofline accounting** ([`roofline`]): attained vs model bandwidth
+//!   rows combining the cachesim traffic model with measured kernel time.
+//!
+//! The per-worker compute/wait instrumentation lives in
+//! [`crate::pool::workers`] (it needs the pool's barrier structure) and
+//! reports through [`crate::pool::ExecReport`]; the pool records a
+//! `pool.execute` span here so executions appear on the timeline too.
+//!
+//! # Cost when disabled
+//!
+//! Observation is **off by default** and enabled by the `RACE_OBS`
+//! environment variable (any value but `0`) or [`set_enabled`]. Every
+//! instrumentation point first performs one relaxed atomic load
+//! ([`enabled`]); on the disabled path no clock is read, no allocation or
+//! lock is taken, and the returned [`Span`] guard is inert — the
+//! overhead-guard test in `tests/obs.rs` pins this down.
+
+pub mod hist;
+pub mod roofline;
+pub mod trace;
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::{Duration, Instant};
+
+/// Hard cap on buffered events; beyond it new events are counted in
+/// [`Recorder::dropped`] instead of stored (a long bench loop with spans
+/// enabled must not grow memory without bound).
+const MAX_EVENTS: usize = 200_000;
+
+/// One finished span: a named interval on one thread, nanoseconds
+/// relative to the owning recorder's origin.
+#[derive(Debug, Clone)]
+pub struct SpanEvent {
+    /// Span name; by convention `"<category>.<phase>"` (`"build.rcm"`,
+    /// `"exec.symmspmv"`, `"race.balance"`, …).
+    pub name: &'static str,
+    /// Optional free-form annotation (method name, imbalance summary, …).
+    pub detail: Option<String>,
+    /// Recorder-assigned thread id (stable per OS thread).
+    pub tid: u64,
+    /// Nesting depth at open time (outermost live span on a thread = 1).
+    pub depth: u32,
+    /// Start, nanoseconds since the recorder's origin.
+    pub start_ns: u64,
+    /// Duration in nanoseconds.
+    pub dur_ns: u64,
+}
+
+/// An append-only span sink. One global instance ([`recorder`]) backs the
+/// module-level helpers; tests construct private instances with
+/// [`Recorder::new`].
+pub struct Recorder {
+    enabled: AtomicBool,
+    origin: Instant,
+    events: Mutex<Vec<SpanEvent>>,
+    dropped: AtomicU64,
+}
+
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+
+thread_local! {
+    /// Recorder-scope thread id (first-use assignment, never reused).
+    static TID: u64 = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+    /// Live span nesting depth on this thread.
+    static DEPTH: Cell<u32> = const { Cell::new(0) };
+}
+
+impl Recorder {
+    /// A fresh, empty recorder.
+    pub fn new(enabled: bool) -> Recorder {
+        Recorder {
+            enabled: AtomicBool::new(enabled),
+            origin: Instant::now(),
+            events: Mutex::new(Vec::new()),
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    /// Is recording on? One relaxed load — this is the disabled-path cost
+    /// of every instrumentation point.
+    #[inline]
+    pub fn is_enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    /// Turn recording on or off.
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::Relaxed);
+    }
+
+    /// Open a span; it records itself when dropped. Inert (no clock read,
+    /// no allocation) while the recorder is disabled.
+    #[inline]
+    pub fn span(&self, name: &'static str) -> Span<'_> {
+        if !self.is_enabled() {
+            return Span { active: None };
+        }
+        self.span_slow(name, None)
+    }
+
+    /// Open a span with a lazily computed annotation; `detail` runs only
+    /// when the recorder is enabled.
+    #[inline]
+    pub fn span_detail<F: FnOnce() -> String>(&self, name: &'static str, detail: F) -> Span<'_> {
+        if !self.is_enabled() {
+            return Span { active: None };
+        }
+        self.span_slow(name, Some(detail()))
+    }
+
+    #[cold]
+    fn span_slow(&self, name: &'static str, detail: Option<String>) -> Span<'_> {
+        let depth = DEPTH.with(|d| {
+            let v = d.get() + 1;
+            d.set(v);
+            v
+        });
+        Span { active: Some(ActiveSpan { rec: self, name, detail, depth, start: Instant::now() }) }
+    }
+
+    /// Record an interval measured externally (start `Instant` + duration)
+    /// as a depth-1 span on the calling thread. Used where the natural
+    /// guard scope doesn't fit, e.g. the pool's post-hoc execution record.
+    pub fn record_manual(
+        &self,
+        name: &'static str,
+        start: Instant,
+        dur: Duration,
+        detail: Option<String>,
+    ) {
+        if !self.is_enabled() {
+            return;
+        }
+        let start_ns = start.checked_duration_since(self.origin).unwrap_or_default().as_nanos();
+        self.push(SpanEvent {
+            name,
+            detail,
+            tid: TID.with(|t| *t),
+            depth: 1,
+            start_ns: start_ns as u64,
+            dur_ns: dur.as_nanos() as u64,
+        });
+    }
+
+    fn push(&self, ev: SpanEvent) {
+        let mut events = self.events.lock().unwrap();
+        if events.len() >= MAX_EVENTS {
+            drop(events);
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        events.push(ev);
+    }
+
+    /// Number of buffered events.
+    pub fn len(&self) -> usize {
+        self.events.lock().unwrap().len()
+    }
+
+    /// True when no events are buffered.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Events discarded because the buffer hit its cap.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Take all buffered events, leaving the recorder empty. Events are
+    /// in *completion* order (a child span completes before its parent).
+    pub fn drain(&self) -> Vec<SpanEvent> {
+        std::mem::take(&mut *self.events.lock().unwrap())
+    }
+}
+
+struct ActiveSpan<'a> {
+    rec: &'a Recorder,
+    name: &'static str,
+    detail: Option<String>,
+    depth: u32,
+    start: Instant,
+}
+
+/// RAII span guard returned by [`span`] / [`Recorder::span`]. Records one
+/// [`SpanEvent`] on drop when live; a guard from a disabled recorder is
+/// inert and its drop is a no-op.
+pub struct Span<'a> {
+    active: Option<ActiveSpan<'a>>,
+}
+
+impl Drop for Span<'_> {
+    fn drop(&mut self) {
+        if let Some(a) = self.active.take() {
+            let dur = a.start.elapsed();
+            DEPTH.with(|d| d.set(d.get().saturating_sub(1)));
+            let start_ns =
+                a.start.checked_duration_since(a.rec.origin).unwrap_or_default().as_nanos();
+            a.rec.push(SpanEvent {
+                name: a.name,
+                detail: a.detail,
+                tid: TID.with(|t| *t),
+                depth: a.depth,
+                start_ns: start_ns as u64,
+                dur_ns: dur.as_nanos() as u64,
+            });
+        }
+    }
+}
+
+/// The process-wide recorder. Created on first use; starts enabled iff
+/// the `RACE_OBS` environment variable is set to anything but `0`.
+pub fn recorder() -> &'static Recorder {
+    static GLOBAL: OnceLock<Recorder> = OnceLock::new();
+    GLOBAL.get_or_init(|| {
+        let on = std::env::var("RACE_OBS").map(|v| v != "0" && !v.is_empty()).unwrap_or(false);
+        Recorder::new(on)
+    })
+}
+
+/// Is the global recorder enabled? (One relaxed atomic load.)
+#[inline]
+pub fn enabled() -> bool {
+    recorder().is_enabled()
+}
+
+/// Enable or disable the global recorder (overrides `RACE_OBS`).
+pub fn set_enabled(on: bool) {
+    recorder().set_enabled(on);
+}
+
+/// Open a span on the global recorder.
+#[inline]
+pub fn span(name: &'static str) -> Span<'static> {
+    recorder().span(name)
+}
+
+/// Open a span with a lazy annotation on the global recorder.
+#[inline]
+pub fn span_detail<F: FnOnce() -> String>(name: &'static str, detail: F) -> Span<'static> {
+    recorder().span_detail(name, detail)
+}
+
+/// Time `f` and return `(result, seconds)`; additionally record the
+/// interval as a span when the global recorder is enabled. This is the
+/// single timing primitive for call sites that need the duration whether
+/// or not tracing is on (e.g. the serve kernel-seconds counter) — it
+/// replaces ad-hoc `Instant::now()` pairs so there is one timing system.
+pub fn time<R, F: FnOnce() -> R>(name: &'static str, f: F) -> (R, f64) {
+    let start = Instant::now();
+    let r = f();
+    let dur = start.elapsed();
+    let rec = recorder();
+    if rec.is_enabled() {
+        rec.record_manual(name, start, dur, None);
+    }
+    (r, dur.as_secs_f64())
+}
+
+/// Aggregate of all spans sharing one name.
+#[derive(Debug, Clone)]
+pub struct PhaseTotal {
+    /// Span name.
+    pub name: &'static str,
+    /// Number of spans.
+    pub count: u64,
+    /// Summed duration, nanoseconds.
+    pub total_ns: u64,
+    /// Longest single span, nanoseconds.
+    pub max_ns: u64,
+}
+
+impl PhaseTotal {
+    /// Summed duration in milliseconds.
+    pub fn total_ms(&self) -> f64 {
+        self.total_ns as f64 / 1e6
+    }
+}
+
+/// Sum spans by name, ordered by each name's first appearance in
+/// `events`. Nested spans are *not* subtracted from their parents — the
+/// table reports inclusive times, like the Chrome trace view.
+pub fn phase_totals(events: &[SpanEvent]) -> Vec<PhaseTotal> {
+    let mut order: Vec<PhaseTotal> = Vec::new();
+    for ev in events {
+        match order.iter_mut().find(|p| p.name == ev.name) {
+            Some(p) => {
+                p.count += 1;
+                p.total_ns += ev.dur_ns;
+                p.max_ns = p.max_ns.max(ev.dur_ns);
+            }
+            None => order.push(PhaseTotal {
+                name: ev.name,
+                count: 1,
+                total_ns: ev.dur_ns,
+                max_ns: ev.dur_ns,
+            }),
+        }
+    }
+    order
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_recorder_records_nothing() {
+        let rec = Recorder::new(false);
+        {
+            let _a = rec.span("a");
+            let _b = rec.span_detail("b", || "never evaluated?".into());
+        }
+        rec.record_manual("c", Instant::now(), Duration::from_millis(1), None);
+        assert!(rec.is_empty());
+        assert_eq!(rec.dropped(), 0);
+    }
+
+    #[test]
+    fn spans_nest_and_complete_in_child_first_order() {
+        let rec = Recorder::new(true);
+        {
+            let _outer = rec.span("build");
+            std::thread::sleep(Duration::from_millis(2));
+            {
+                let _inner = rec.span("build.rcm");
+                std::thread::sleep(Duration::from_millis(1));
+            }
+        }
+        let ev = rec.drain();
+        assert_eq!(ev.len(), 2);
+        assert_eq!(ev[0].name, "build.rcm");
+        assert_eq!(ev[1].name, "build");
+        assert_eq!(ev[0].depth, 2);
+        assert_eq!(ev[1].depth, 1);
+        // containment: child starts after parent and ends before it
+        assert!(ev[0].start_ns >= ev[1].start_ns);
+        assert!(ev[0].start_ns + ev[0].dur_ns <= ev[1].start_ns + ev[1].dur_ns);
+        assert!(ev[1].dur_ns >= ev[0].dur_ns);
+    }
+
+    #[test]
+    fn time_always_returns_the_duration() {
+        // `time` reports the duration whether or not the global recorder
+        // is on (recording-vs-not is covered by the local-recorder test
+        // above; the global switch is not toggled here because parallel
+        // tests in this binary share it).
+        let (v, secs) = time("obs.test", || 41 + 1);
+        assert_eq!(v, 42);
+        assert!(secs >= 0.0);
+    }
+
+    fn mk(name: &'static str, dur_ns: u64) -> SpanEvent {
+        SpanEvent { name, detail: None, tid: 1, depth: 1, start_ns: 0, dur_ns }
+    }
+
+    #[test]
+    fn phase_totals_aggregate_by_first_appearance() {
+        let events = vec![mk("a", 10), mk("b", 5), mk("a", 30)];
+        let totals = phase_totals(&events);
+        assert_eq!(totals.len(), 2);
+        assert_eq!(totals[0].name, "a");
+        assert_eq!(totals[0].count, 2);
+        assert_eq!(totals[0].total_ns, 40);
+        assert_eq!(totals[0].max_ns, 30);
+        assert_eq!(totals[1].name, "b");
+    }
+}

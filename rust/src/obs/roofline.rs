@@ -1,0 +1,106 @@
+//! Attained-vs-model bandwidth accounting: one row per measured kernel.
+//!
+//! The paper validates RACE SymmSpMV by showing attained performance
+//! sits inside the Roofline window spanned by the machine's copy and
+//! load-only bandwidths (Fig. 18–20). This module produces exactly that
+//! comparison for a *measured* run: the cache simulator
+//! ([`crate::cachesim`]) predicts the main-memory traffic of one kernel
+//! invocation, the bench harness measures its median runtime, and the
+//! [`Machine`] model supplies the bandwidth ceilings. Attained bandwidth
+//! is `model bytes / measured seconds` — if the traffic model is right,
+//! this is the memory bandwidth the kernel actually drew, directly
+//! comparable to `bw_load`/`bw_copy`.
+
+use crate::machine::Machine;
+use crate::util::json::Json;
+
+/// One kernel's attained-vs-model comparison.
+#[derive(Debug, Clone)]
+pub struct RooflineRow {
+    /// Kernel label (`"symmspmv"`, `"mpk p=4"`, …).
+    pub kernel: String,
+    /// Measured median seconds per invocation.
+    pub seconds: f64,
+    /// Modelled main-memory traffic per invocation, bytes (cachesim).
+    pub model_bytes: f64,
+    /// Flops per invocation.
+    pub flops: f64,
+    /// Attained bandwidth `model_bytes / seconds`, bytes/s.
+    pub attained_bw: f64,
+    /// Attained performance `flops / seconds`, flops/s.
+    pub attained_flops: f64,
+    /// Computational intensity `flops / model_bytes`, flops/byte.
+    pub intensity: f64,
+    /// Roofline floor: intensity × machine copy bandwidth, flops/s.
+    pub roof_copy: f64,
+    /// Roofline ceiling: intensity × machine load bandwidth, flops/s.
+    pub roof_load: f64,
+    /// `attained_bw / bw_load` — fraction of the machine's load-only
+    /// bandwidth the kernel sustained (> 1 means the traffic model
+    /// under-counted or the working set fit in cache).
+    pub bw_frac: f64,
+}
+
+impl RooflineRow {
+    /// Build a row from a measurement (`seconds` per invocation), the
+    /// cachesim traffic prediction and the machine's bandwidth model.
+    pub fn new(
+        kernel: &str,
+        seconds: f64,
+        model_bytes: f64,
+        flops: f64,
+        machine: &Machine,
+    ) -> RooflineRow {
+        let secs = seconds.max(1e-12);
+        let intensity = flops / model_bytes.max(1.0);
+        RooflineRow {
+            kernel: kernel.to_string(),
+            seconds,
+            model_bytes,
+            flops,
+            attained_bw: model_bytes / secs,
+            attained_flops: flops / secs,
+            intensity,
+            roof_copy: crate::perfmodel::roofline(intensity, machine.bw_copy),
+            roof_load: crate::perfmodel::roofline(intensity, machine.bw_load),
+            bw_frac: model_bytes / secs / machine.bw_load.max(1.0),
+        }
+    }
+
+    /// JSON shape emitted into `BENCH_obs.json`.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("kernel", Json::Str(self.kernel.clone())),
+            ("median_ms", Json::Num(self.seconds * 1e3)),
+            ("model_bytes", Json::Num(self.model_bytes)),
+            ("intensity", Json::Num(self.intensity)),
+            ("attained_gbs", Json::Num(self.attained_bw / 1e9)),
+            ("attained_gfs", Json::Num(self.attained_flops / 1e9)),
+            ("roof_copy_gfs", Json::Num(self.roof_copy / 1e9)),
+            ("roof_load_gfs", Json::Num(self.roof_load / 1e9)),
+            ("bw_frac", Json::Num(self.bw_frac)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn row_arithmetic_is_consistent() {
+        let m = crate::machine::ivb(); // bw_load = 47e9, bw_copy = 40e9
+        // 1 GB of modelled traffic moved in 0.1 s -> 10 GB/s attained
+        let r = RooflineRow::new("symmspmv", 0.1, 1e9, 2e8, &m);
+        assert!((r.attained_bw - 1e10).abs() < 1.0);
+        assert!((r.attained_flops - 2e9).abs() < 1.0);
+        assert!((r.intensity - 0.2).abs() < 1e-12);
+        assert!((r.roof_load - 0.2 * 47e9).abs() < 1.0);
+        assert!((r.roof_copy - 0.2 * 40e9).abs() < 1.0);
+        assert!((r.bw_frac - 1e10 / 47e9).abs() < 1e-9);
+        // attained sits below the roofline ceiling in this construction
+        assert!(r.attained_flops < r.roof_load);
+        let j = r.to_json();
+        assert!(j.get("attained_gbs").is_some() && j.get("roof_load_gfs").is_some());
+    }
+}

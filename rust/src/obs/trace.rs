@@ -1,0 +1,75 @@
+//! Chrome-trace-format export: span events to a `chrome://tracing` /
+//! Perfetto loadable JSON document.
+//!
+//! Each [`SpanEvent`] becomes one complete event (`"ph": "X"`) with
+//! microsecond timestamps; the span's `"<category>.<phase>"` name prefix
+//! becomes the trace category so the UI can filter build vs exec vs race
+//! phases. The writer reuses the crate's own [`Json`] emitter, so output
+//! is deterministic (sorted keys) and correctly escaped.
+
+use super::SpanEvent;
+use crate::util::json::Json;
+
+/// Convert events to a Chrome trace document (`{"traceEvents": [...]}`).
+pub fn chrome_trace(events: &[SpanEvent]) -> Json {
+    let rows = events
+        .iter()
+        .map(|ev| {
+            let cat = ev.name.split('.').next().unwrap_or("span");
+            let mut pairs = vec![
+                ("name", Json::Str(ev.name.to_string())),
+                ("cat", Json::Str(cat.to_string())),
+                ("ph", Json::Str("X".to_string())),
+                ("ts", Json::Num(ev.start_ns as f64 / 1e3)),
+                ("dur", Json::Num(ev.dur_ns as f64 / 1e3)),
+                ("pid", Json::Num(1.0)),
+                ("tid", Json::Num(ev.tid as f64)),
+            ];
+            if let Some(d) = &ev.detail {
+                pairs.push(("args", Json::obj(vec![("detail", Json::Str(d.clone()))])));
+            }
+            Json::obj(pairs)
+        })
+        .collect();
+    Json::obj(vec![("traceEvents", Json::Arr(rows))])
+}
+
+/// Write events to `path` as a Chrome trace JSON file.
+pub fn write_chrome_trace(path: &str, events: &[SpanEvent]) -> std::io::Result<()> {
+    std::fs::write(path, chrome_trace(events).to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn events_round_trip_through_the_trace_format() {
+        let ev = SpanEvent {
+            name: "build.rcm",
+            detail: Some("n=4096".into()),
+            tid: 3,
+            depth: 1,
+            start_ns: 1_500,
+            dur_ns: 2_000,
+        };
+        let doc = chrome_trace(&[ev]);
+        let back = Json::parse(&doc.to_string()).unwrap();
+        let rows = match back.get("traceEvents") {
+            Some(Json::Arr(rows)) => rows,
+            other => panic!("traceEvents missing: {other:?}"),
+        };
+        assert_eq!(rows.len(), 1);
+        let r = &rows[0];
+        assert_eq!(r.get("name"), Some(&Json::Str("build.rcm".into())));
+        assert_eq!(r.get("cat"), Some(&Json::Str("build".into())));
+        assert_eq!(r.get("ph"), Some(&Json::Str("X".into())));
+        assert_eq!(r.get("ts").and_then(Json::as_f64), Some(1.5));
+        assert_eq!(r.get("dur").and_then(Json::as_f64), Some(2.0));
+        assert_eq!(r.get("tid").and_then(Json::as_f64), Some(3.0));
+        assert_eq!(
+            r.get("args").and_then(|a| a.get("detail")),
+            Some(&Json::Str("n=4096".into()))
+        );
+    }
+}

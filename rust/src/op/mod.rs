@@ -74,6 +74,7 @@ use crate::coordinator::{permute_vec, unpermute_vec};
 use crate::graph;
 use crate::kernels::{self, PowerMat};
 use crate::mpk::{MpkConfig, MpkPlan};
+use crate::obs;
 use crate::pool::{self, StepProgram, WorkUnit, WorkerPool};
 use crate::race::{RaceConfig, RaceEngine};
 use crate::sparse::{Csr, CsrPack, ValPrec};
@@ -349,16 +350,32 @@ impl Operator {
             bail!("Operator needs a structurally symmetric matrix");
         }
         let n = a.nrows();
+        let _sp = obs::span_detail("build.operator", || format!("n={n} nnz={}", a.nnz()));
         let (rcm_perm, a_rcm) = if cfg.rcm {
-            let p = graph::rcm(a);
-            let m = a.permute_symmetric(&p);
+            let p = {
+                let _s = obs::span("build.rcm");
+                graph::rcm(a)
+            };
+            let m = {
+                let _s = obs::span("build.rcm_permute");
+                a.permute_symmetric(&p)
+            };
             (p, m)
         } else {
             (graph::identity_perm(n), a.clone())
         };
-        let eng = RaceEngine::build(&a_rcm, &cfg.race)?;
-        let upper = eng.permuted_matrix().upper_triangle();
-        let total_perm = graph::compose_perm(&rcm_perm, &eng.perm);
+        let eng = {
+            let _s = obs::span("build.engine");
+            RaceEngine::build(&a_rcm, &cfg.race)?
+        };
+        let upper = {
+            let _s = obs::span("build.upper");
+            eng.permuted_matrix().upper_triangle()
+        };
+        let total_perm = {
+            let _s = obs::span("build.compose_perm");
+            graph::compose_perm(&rcm_perm, &eng.perm)
+        };
         Ok(Operator {
             cfg,
             rcm_perm,
@@ -418,6 +435,7 @@ impl Operator {
         }
         self.pack
             .get_or_init(|| {
+                let _s = obs::span("build.pack_encode");
                 let p = CsrPack::pack_upper(&self.upper, self.cfg.prec);
                 if p.feasible() { Some(p) } else { None }
             })
@@ -440,6 +458,7 @@ impl Operator {
         }
         self.pack_f32
             .get_or_init(|| {
+                let _s = obs::span("build.pack_encode_f32");
                 let p = CsrPack::pack_upper(&self.upper, ValPrec::F32);
                 if p.feasible() { Some(p) } else { None }
             })
@@ -501,7 +520,10 @@ impl Operator {
 
     /// The compiled main step program (lazily built).
     pub fn program(&self) -> &StepProgram {
-        self.program.get_or_init(|| pool::compile_race(&self.eng))
+        self.program.get_or_init(|| {
+            let _s = obs::span("build.compile");
+            pool::compile_race(&self.eng)
+        })
     }
 
     /// The resident pool (lazily spawned; shared when
@@ -547,9 +569,13 @@ impl Operator {
     pub fn symmspmv(&self, x: &[f64], b: &mut [f64]) {
         assert_eq!(x.len(), self.n());
         assert_eq!(b.len(), self.n());
-        let xp = permute_vec(x, &self.total_perm);
+        let xp = {
+            let _s = obs::span("exec.permute_in");
+            permute_vec(x, &self.total_perm)
+        };
         let mut bp = vec![0.0; self.n()];
         self.symmspmv_permuted(&xp, &mut bp);
+        let _s = obs::span("exec.permute_out");
         for (old, &new) in self.total_perm.iter().enumerate() {
             b[old] = bp[new as usize];
         }
@@ -596,6 +622,7 @@ impl Operator {
         );
         assert_eq!(xp.len(), self.n());
         assert_eq!(bp.len(), self.n());
+        let _sp = obs::span("exec.symmspmv");
         bp.iter_mut().for_each(|v| *v = 0.0);
         match (self.cfg.backend, pk) {
             (Backend::Serial, None) => {
@@ -688,6 +715,7 @@ impl Operator {
         assert!(nrhs > 0);
         assert_eq!(xsf.len(), n * nrhs);
         assert_eq!(bsf.len(), n * nrhs);
+        let _sp = obs::span_detail("exec.symmspmv_multi", || format!("nrhs={nrhs}"));
         bsf.iter_mut().for_each(|v| *v = 0.0);
         match (self.cfg.backend, self.pack()) {
             (Backend::Serial, None) => {
@@ -794,9 +822,16 @@ impl Operator {
     }
 
     fn build_mpk_handle(&self, p: usize, cache_bytes: usize) -> Result<MpkHandle> {
+        let _sp = obs::span_detail("build.mpk", || format!("p={p}"));
         let mcfg = MpkConfig { p, cache_bytes };
-        let plan = MpkPlan::from_engine(&self.a_rcm, &self.eng, &mcfg)?;
-        let prog = pool::compile_mpk(&plan, self.cfg.race.threads);
+        let plan = {
+            let _s = obs::span("build.mpk_plan");
+            MpkPlan::from_engine(&self.a_rcm, &self.eng, &mcfg)?
+        };
+        let prog = {
+            let _s = obs::span("build.mpk_compile");
+            pool::compile_mpk(&plan, self.cfg.race.threads)
+        };
         let total_perm = graph::compose_perm(&self.rcm_perm, &plan.perm);
         Ok(MpkHandle {
             plan,
@@ -827,6 +862,7 @@ impl Operator {
     /// Matrix powers in the plan's numbering (`xp` pre-permuted with
     /// [`MpkHandle::permute`]) — the allocation-light path benches time.
     pub fn powers_permuted(&self, h: &MpkHandle, xp: &[f64]) -> Vec<Vec<f64>> {
+        let _sp = obs::span_detail("exec.powers", || format!("p={}", h.plan.cfg.p));
         let m = h.power_mat();
         match self.cfg.backend {
             Backend::Serial => kernels::mpk_powers_on(&h.plan, m, xp, 1),
@@ -899,6 +935,7 @@ impl Operator {
         let n = self.n();
         assert_eq!(z_prev.len(), n);
         assert_eq!(z0.len(), n);
+        let _sp = obs::span_detail("exec.three_term", || format!("p={p}"));
         let h = self.mpk(p)?;
         let zp = permute_vec(z_prev, &h.total_perm);
         let z0p = permute_vec(z0, &h.total_perm);
@@ -934,6 +971,7 @@ impl Operator {
         if let Some(s) = cache.get(&dist) {
             return s.clone();
         }
+        let _sp = obs::span_detail("build.aux_schedule", || format!("dist={dist}"));
         let cfg = RaceConfig { dist, ..self.cfg.race.clone() };
         let eng = RaceEngine::build(&self.a_rcm, &cfg)
             .expect("auxiliary schedule build cannot fail for dist >= 1");
@@ -950,6 +988,7 @@ impl Operator {
     /// colored update order differs from a natural-order sweep — as with
     /// any colored GS — but is identical across backends.
     pub fn gauss_seidel(&self, b: &[f64], x: &mut [f64]) {
+        let _sp = obs::span("exec.gauss_seidel");
         self.sweep(
             1,
             b,
@@ -975,6 +1014,7 @@ impl Operator {
         let n = self.n();
         assert_eq!(r.len(), n);
         assert_eq!(z.len(), n);
+        let _sp = obs::span("exec.ssor");
         let aux;
         let (eng, prog, prog_rev, perm): (&RaceEngine, &StepProgram, &StepProgram, &[u32]) =
             if self.cfg.race.dist == 1 {
@@ -1019,6 +1059,7 @@ impl Operator {
     /// One Kaczmarz projection sweep on a distance-2 schedule, logical
     /// order (x is updated in place).
     pub fn kaczmarz(&self, b: &[f64], x: &mut [f64]) {
+        let _sp = obs::span("exec.kaczmarz");
         self.sweep(
             2,
             b,

@@ -24,6 +24,11 @@
 //! [`mpk_powers_pool`], …) are bit-compatible with their scoped
 //! counterparts; `benches/pool_latency.rs` measures the latency win and
 //! `rust/tests/pool.rs` property-tests the equivalence.
+//!
+//! While [`crate::obs`] is enabled, [`WorkerPool::execute`] additionally
+//! records per-worker per-step compute vs barrier-wait time and surfaces
+//! a load-imbalance summary per execution ([`ExecReport`]) — the direct
+//! measurement behind the paper's load-balancing claim.
 
 mod exec;
 mod program;
@@ -37,4 +42,4 @@ pub use exec::{
     symmspmv_multi_pool_pack, symmspmv_pool, symmspmv_pool_pack, symmspmv_race_multi,
 };
 pub use program::{compile_mpk, compile_race, StepProgram, WorkUnit};
-pub use workers::WorkerPool;
+pub use workers::{ExecReport, WorkerPool};

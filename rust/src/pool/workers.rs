@@ -20,8 +20,10 @@
 //!   scoped executors ([`crate::kernels::symmspmv_race`] and friends).
 
 use super::program::StepProgram;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Barrier, Condvar, Mutex};
 use std::thread::JoinHandle;
+use std::time::Instant;
 
 /// Type-erased job pointer. Only dereferenced while the publishing `run`
 /// call blocks, so the erased lifetime never actually dangles.
@@ -59,6 +61,81 @@ pub struct WorkerPool {
     /// a time, so it is safe to share behind an `Arc` (the serve path
     /// does exactly that).
     gate: Mutex<()>,
+    /// Preallocated per-step per-worker timing slots for the observed
+    /// execute path (`2 × nsteps × threads` compute/wait counters). Grown
+    /// before a job is published, never on the hot path; the `Arc` lets a
+    /// concurrent caller that needs a bigger buffer swap it without
+    /// invalidating the one an in-flight job writes to.
+    timing: Mutex<Arc<Vec<AtomicU64>>>,
+    /// Per-worker report of the most recent observed execution.
+    last_report: Mutex<Option<ExecReport>>,
+}
+
+/// Per-worker timing breakdown of one [`WorkerPool::execute`] call,
+/// recorded only while [`crate::obs`] is enabled. This is the direct
+/// measurement of the paper's load-balancing claim: a well-balanced RACE
+/// schedule shows `imbalance` near 1 and a small `idle_frac`, where a
+/// classic coloring schedule serializes into barrier waits.
+#[derive(Debug, Clone)]
+pub struct ExecReport {
+    /// Pool participants (resident workers + caller).
+    pub threads: usize,
+    /// Program steps executed (= barriers crossed).
+    pub nsteps: usize,
+    /// Per-worker total compute nanoseconds (unit sweeps, all steps).
+    pub compute_ns: Vec<u64>,
+    /// Per-worker total barrier-wait nanoseconds.
+    pub wait_ns: Vec<u64>,
+    /// Wall nanoseconds of the whole job, measured by the publisher.
+    pub wall_ns: u64,
+    /// Mean-weighted per-step imbalance: `Σ_s max_w(compute) / Σ_s
+    /// mean_w(compute)` — the factor by which barrier waits stretch the
+    /// critical path relative to perfectly balanced steps (`>= 1`).
+    pub step_imbalance: f64,
+    /// Whole-run imbalance: `max_w / mean_w` of per-worker compute totals.
+    pub imbalance: f64,
+    /// Fraction of the `threads × wall` time budget not spent computing.
+    pub idle_frac: f64,
+}
+
+impl ExecReport {
+    fn from_slots(slots: &[AtomicU64], threads: usize, nsteps: usize, wall_ns: u64) -> ExecReport {
+        let mut compute_ns = vec![0u64; threads];
+        let mut wait_ns = vec![0u64; threads];
+        let mut crit_path = 0u64; // Σ over steps of the slowest worker's compute
+        for s in 0..nsteps {
+            let mut step_max = 0u64;
+            for w in 0..threads {
+                let base = (s * threads + w) * 2;
+                let c = slots[base].load(Ordering::Relaxed);
+                compute_ns[w] += c;
+                wait_ns[w] += slots[base + 1].load(Ordering::Relaxed);
+                step_max = step_max.max(c);
+            }
+            crit_path += step_max;
+        }
+        let total: u64 = compute_ns.iter().sum();
+        let mean_total = total as f64 / threads as f64;
+        let max_total = compute_ns.iter().copied().max().unwrap_or(0) as f64;
+        let imbalance = if total > 0 { max_total / mean_total } else { 1.0 };
+        let step_imbalance =
+            if total > 0 { crit_path as f64 * threads as f64 / total as f64 } else { 1.0 };
+        let idle_frac = if wall_ns > 0 {
+            (1.0 - total as f64 / (threads as f64 * wall_ns as f64)).clamp(0.0, 1.0)
+        } else {
+            0.0
+        };
+        ExecReport {
+            threads,
+            nsteps,
+            compute_ns,
+            wait_ns,
+            wall_ns,
+            step_imbalance,
+            imbalance,
+            idle_frac,
+        }
+    }
 }
 
 impl WorkerPool {
@@ -79,7 +156,14 @@ impl WorkerPool {
                 std::thread::spawn(move || worker_loop(sh, id))
             })
             .collect();
-        WorkerPool { shared, handles, threads, gate: Mutex::new(()) }
+        WorkerPool {
+            shared,
+            handles,
+            threads,
+            gate: Mutex::new(()),
+            timing: Mutex::new(Arc::new(Vec::new())),
+            last_report: Mutex::new(None),
+        }
     }
 
     /// Number of participants (resident workers + caller).
@@ -124,7 +208,15 @@ impl WorkerPool {
     /// execute strictly in program order while units within a step run
     /// concurrently — the schedule contract the compilers in
     /// [`super::program`] establish.
+    ///
+    /// While [`crate::obs`] is enabled the execution is timed per worker
+    /// per step (see [`ExecReport`]); the disabled path pays exactly one
+    /// relaxed atomic load over the uninstrumented loop.
     pub fn execute<F: Fn(&super::WorkUnit) + Sync>(&self, prog: &StepProgram, unit_fn: F) {
+        if crate::obs::enabled() && prog.nsteps() > 0 {
+            self.execute_timed(prog, unit_fn);
+            return;
+        }
         let nt = self.threads;
         self.run(|wid| {
             for s in 0..prog.nsteps() {
@@ -137,6 +229,65 @@ impl WorkerPool {
                 self.shared.barrier.wait();
             }
         });
+    }
+
+    /// Timed variant of [`WorkerPool::execute`]: each participant stamps
+    /// its per-step compute and barrier-wait nanoseconds into the
+    /// preallocated slot buffer — two relaxed atomic stores per step per
+    /// worker, no allocation or lock on the hot path — and the publisher
+    /// distills an [`ExecReport`] plus a `pool.execute` span afterwards.
+    fn execute_timed<F: Fn(&super::WorkUnit) + Sync>(&self, prog: &StepProgram, unit_fn: F) {
+        let nt = self.threads;
+        let nsteps = prog.nsteps();
+        let slots = self.timing_slots(nsteps);
+        let t_job = Instant::now();
+        self.run(|wid| {
+            let mut t0 = Instant::now();
+            for s in 0..nsteps {
+                let units = prog.step(s);
+                let mut i = wid;
+                while i < units.len() {
+                    unit_fn(&units[i]);
+                    i += nt;
+                }
+                let t1 = Instant::now();
+                self.shared.barrier.wait();
+                let t2 = Instant::now();
+                let base = (s * nt + wid) * 2;
+                slots[base].store((t1 - t0).as_nanos() as u64, Ordering::Relaxed);
+                slots[base + 1].store((t2 - t1).as_nanos() as u64, Ordering::Relaxed);
+                t0 = t2;
+            }
+        });
+        let wall = t_job.elapsed();
+        let report = ExecReport::from_slots(&slots, nt, nsteps, wall.as_nanos() as u64);
+        crate::obs::recorder().record_manual(
+            "pool.execute",
+            t_job,
+            wall,
+            Some(format!(
+                "steps={} imbalance={:.3} idle_frac={:.3}",
+                nsteps, report.imbalance, report.idle_frac
+            )),
+        );
+        *self.last_report.lock().unwrap() = Some(report);
+    }
+
+    /// Slot buffer with capacity for `2 × nsteps × threads` counters,
+    /// grown (outside the job) when a larger program arrives.
+    fn timing_slots(&self, nsteps: usize) -> Arc<Vec<AtomicU64>> {
+        let need = 2 * nsteps * self.threads;
+        let mut cur = self.timing.lock().unwrap();
+        if cur.len() < need {
+            *cur = Arc::new((0..need).map(|_| AtomicU64::new(0)).collect());
+        }
+        cur.clone()
+    }
+
+    /// Take the [`ExecReport`] of the most recent observed execution, if
+    /// any (populated only while [`crate::obs`] is enabled).
+    pub fn take_exec_report(&self) -> Option<ExecReport> {
+        self.last_report.lock().unwrap().take()
     }
 }
 

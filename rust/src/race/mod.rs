@@ -184,7 +184,10 @@ impl RaceEngine {
         let k = cfg.dist;
         // ---- step 1: level construction on the halo-extended subgraph ----
         let halo = k.div_ceil(2);
-        let lv = subgraph_levels(a, &order[start..end], halo);
+        let lv = {
+            let _s = crate::obs::span("race.levels");
+            subgraph_levels(a, &order[start..end], halo)
+        };
         if stage == 0 {
             *nlevels0 = lv.nlevels;
             // at stage 0 `order` is still the identity, so positional
@@ -207,8 +210,10 @@ impl RaceEngine {
             total_load += load;
         }
         // ---- step 2–3: aggregate levels into pairs of level groups ----
-        let pairs =
-            aggregate_pairs(&level_load, total_load, threads as usize, k, cfg.eps_at(stage));
+        let pairs = {
+            let _s = crate::obs::span("race.aggregate");
+            aggregate_pairs(&level_load, total_load, threads as usize, k, cfg.eps_at(stage))
+        };
         if pairs.len() < 2 {
             return; // a single pair exposes no new parallelism: stop here
         }
@@ -224,6 +229,7 @@ impl RaceEngine {
         }
         t_ptr.push(lv.nlevels as u32);
         if !cfg.no_load_balance {
+            let _s = crate::obs::span("race.balance");
             balance_level_groups(&level_load, &mut t_ptr, &workers, k);
         }
         // ---- permute rows within the range by (level) — level groups are

@@ -1,0 +1,288 @@
+//! The serve metrics registry: structured counters, per-matrix request
+//! accounting, error counts by code, and fixed-bucket latency / batch-size
+//! histograms ([`crate::obs::hist::Hist`]).
+//!
+//! The registry is the single source of truth behind both exposition
+//! surfaces: `{"stats": true}` (JSON, a backward-compatible superset of
+//! the original flat counters) and `{"metrics": true}` (Prometheus-style
+//! text). Every update is a relaxed atomic operation — nothing on the
+//! request path allocates or locks.
+
+use crate::obs::hist::Hist;
+use crate::util::json::Json;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+/// The stable error-code catalogue (`docs/SERVE_PROTOCOL.md`); unknown
+/// codes land in the trailing `"other"` bucket.
+pub(crate) const ERROR_CODES: [&str; 8] = [
+    "bad_json",
+    "bad_request",
+    "nonfinite_input",
+    "unknown_matrix",
+    "bad_power",
+    "internal",
+    "solve_failed",
+    "other",
+];
+
+/// Per-matrix request/error counters (indexed by registry position).
+#[derive(Default)]
+pub(crate) struct MatrixCounters {
+    pub matvecs: AtomicU64,
+    pub mpk_requests: AtomicU64,
+    pub solves: AtomicU64,
+    /// Failed operations on this matrix (validation rejections and
+    /// internal failures), counted whether the call came over the wire
+    /// or through the direct service API.
+    pub errors: AtomicU64,
+}
+
+/// The registry: every counter the service maintains.
+pub(crate) struct Registry {
+    start: Instant,
+    pub requests: AtomicU64,
+    /// Error *responses* answered over the protocol surface.
+    pub errors: AtomicU64,
+    pub matvecs: AtomicU64,
+    pub mpk_requests: AtomicU64,
+    pub solves: AtomicU64,
+    pub solve_iterations: AtomicU64,
+    pub batches: AtomicU64,
+    pub batched_vectors: AtomicU64,
+    pub mpk_batches: AtomicU64,
+    pub mpk_batched_vectors: AtomicU64,
+    pub max_batch: AtomicU64,
+    /// Total kernel nanoseconds (matvec batches + MPK sweeps).
+    pub kernel_nanos: AtomicU64,
+    /// Error responses by code, indexed like [`ERROR_CODES`].
+    codes: Vec<AtomicU64>,
+    /// Request service latency per kind, nanoseconds (successes only —
+    /// rejected requests answer in microseconds and would skew the
+    /// kernel-latency percentiles).
+    pub matvec_lat: Hist,
+    pub mpk_lat: Hist,
+    pub solve_lat: Hist,
+    /// Sizes of executed batches (matvec and MPK alike).
+    pub batch_sizes: Hist,
+    per_matrix: Vec<MatrixCounters>,
+}
+
+impl Registry {
+    pub fn new(nmatrices: usize) -> Registry {
+        Registry {
+            start: Instant::now(),
+            requests: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            matvecs: AtomicU64::new(0),
+            mpk_requests: AtomicU64::new(0),
+            solves: AtomicU64::new(0),
+            solve_iterations: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            batched_vectors: AtomicU64::new(0),
+            mpk_batches: AtomicU64::new(0),
+            mpk_batched_vectors: AtomicU64::new(0),
+            max_batch: AtomicU64::new(0),
+            kernel_nanos: AtomicU64::new(0),
+            codes: (0..ERROR_CODES.len()).map(|_| AtomicU64::new(0)).collect(),
+            matvec_lat: Hist::latency(),
+            mpk_lat: Hist::latency(),
+            solve_lat: Hist::latency(),
+            batch_sizes: Hist::sizes(),
+            per_matrix: (0..nmatrices).map(|_| MatrixCounters::default()).collect(),
+        }
+    }
+
+    /// Seconds since the service was built.
+    pub fn uptime_secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Count one error response by code (protocol surface).
+    pub fn response_error(&self, code: &str) {
+        self.errors.fetch_add(1, Ordering::Relaxed);
+        let idx =
+            ERROR_CODES.iter().position(|c| *c == code).unwrap_or(ERROR_CODES.len() - 1);
+        self.codes[idx].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one failed operation against matrix `idx`.
+    pub fn matrix_error(&self, idx: usize) {
+        self.per_matrix[idx].errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Counters of matrix `idx`.
+    pub fn matrix(&self, idx: usize) -> &MatrixCounters {
+        &self.per_matrix[idx]
+    }
+
+    /// `(code, count)` per catalogue entry, in catalogue order.
+    pub fn errors_by_code(&self) -> Vec<(&'static str, u64)> {
+        ERROR_CODES
+            .iter()
+            .zip(&self.codes)
+            .map(|(c, n)| (*c, n.load(Ordering::Relaxed)))
+            .collect()
+    }
+
+    /// JSON summary of a latency histogram (milliseconds).
+    pub fn latency_json(h: &Hist) -> Json {
+        Json::obj(vec![
+            ("count", Json::Num(h.count() as f64)),
+            ("p50_ms", Json::Num(h.quantile(0.50) / 1e6)),
+            ("p95_ms", Json::Num(h.quantile(0.95) / 1e6)),
+            ("p99_ms", Json::Num(h.quantile(0.99) / 1e6)),
+            ("mean_ms", Json::Num(h.mean() / 1e6)),
+            ("max_ms", Json::Num(h.max() as f64 / 1e6)),
+        ])
+    }
+
+    /// Prometheus-style text exposition. `matrices` supplies, per
+    /// registered matrix (registry order), its name and the storage kind
+    /// it currently reports (`storage_if_built`, `"pending"` until built).
+    pub fn prometheus(&self, matrices: &[(String, String)]) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        let c = |v: &AtomicU64| v.load(Ordering::Relaxed);
+        let _ = writeln!(out, "# TYPE race_uptime_seconds gauge");
+        let _ = writeln!(out, "race_uptime_seconds {}", self.uptime_secs());
+        for (name, v) in [
+            ("race_requests_total", c(&self.requests)),
+            ("race_errors_total", c(&self.errors)),
+            ("race_matvec_requests_total", c(&self.matvecs)),
+            ("race_mpk_requests_total", c(&self.mpk_requests)),
+            ("race_solves_total", c(&self.solves)),
+            ("race_solve_iterations_total", c(&self.solve_iterations)),
+            ("race_batches_total", c(&self.batches)),
+            ("race_batched_vectors_total", c(&self.batched_vectors)),
+            ("race_mpk_batches_total", c(&self.mpk_batches)),
+            ("race_mpk_batched_vectors_total", c(&self.mpk_batched_vectors)),
+        ] {
+            let _ = writeln!(out, "# TYPE {name} counter");
+            let _ = writeln!(out, "{name} {v}");
+        }
+        let _ = writeln!(out, "# TYPE race_max_batch_size gauge");
+        let _ = writeln!(out, "race_max_batch_size {}", c(&self.max_batch));
+        let _ = writeln!(out, "# TYPE race_kernel_seconds_total counter");
+        let _ = writeln!(out, "race_kernel_seconds_total {}", c(&self.kernel_nanos) as f64 / 1e9);
+        let _ = writeln!(out, "# TYPE race_error_responses_total counter");
+        for (code, n) in self.errors_by_code() {
+            let _ = writeln!(out, "race_error_responses_total{{code=\"{code}\"}} {n}");
+        }
+        let _ = writeln!(out, "# TYPE race_request_duration_seconds summary");
+        for (kind, h) in
+            [("matvec", &self.matvec_lat), ("mpk", &self.mpk_lat), ("solve", &self.solve_lat)]
+        {
+            for q in [0.5, 0.95, 0.99] {
+                let _ = writeln!(
+                    out,
+                    "race_request_duration_seconds{{kind=\"{kind}\",quantile=\"{q}\"}} {}",
+                    h.quantile(q) / 1e9
+                );
+            }
+            let _ = writeln!(
+                out,
+                "race_request_duration_seconds_sum{{kind=\"{kind}\"}} {}",
+                h.sum() as f64 / 1e9
+            );
+            let _ = writeln!(
+                out,
+                "race_request_duration_seconds_count{{kind=\"{kind}\"}} {}",
+                h.count()
+            );
+        }
+        let _ = writeln!(out, "# TYPE race_batch_size summary");
+        for q in [0.5, 0.95, 0.99] {
+            let _ = writeln!(
+                out,
+                "race_batch_size{{quantile=\"{q}\"}} {}",
+                self.batch_sizes.quantile(q)
+            );
+        }
+        let _ = writeln!(out, "race_batch_size_sum {}", self.batch_sizes.sum());
+        let _ = writeln!(out, "race_batch_size_count {}", self.batch_sizes.count());
+        let _ = writeln!(out, "# TYPE race_matrix_requests_total counter");
+        for (i, (name, _)) in matrices.iter().enumerate() {
+            let m = self.matrix(i);
+            let label = escape_label(name);
+            for (kind, v) in [
+                ("matvec", c(&m.matvecs)),
+                ("mpk", c(&m.mpk_requests)),
+                ("solve", c(&m.solves)),
+            ] {
+                let _ = writeln!(
+                    out,
+                    "race_matrix_requests_total{{matrix=\"{label}\",kind=\"{kind}\"}} {v}"
+                );
+            }
+        }
+        let _ = writeln!(out, "# TYPE race_matrix_errors_total counter");
+        for (i, (name, _)) in matrices.iter().enumerate() {
+            let _ = writeln!(
+                out,
+                "race_matrix_errors_total{{matrix=\"{}\"}} {}",
+                escape_label(name),
+                c(&self.matrix(i).errors)
+            );
+        }
+        let _ = writeln!(out, "# TYPE race_matrix_storage_info gauge");
+        for (name, storage) in matrices {
+            let _ = writeln!(
+                out,
+                "race_matrix_storage_info{{matrix=\"{}\",storage=\"{}\"}} 1",
+                escape_label(name),
+                escape_label(storage)
+            );
+        }
+        out
+    }
+}
+
+/// Escape a Prometheus label value (backslash, quote, newline).
+fn escape_label(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn error_codes_bucket_and_expose() {
+        let r = Registry::new(2);
+        r.response_error("bad_request");
+        r.response_error("bad_request");
+        r.response_error("no_such_code");
+        r.matrix_error(1);
+        let by = r.errors_by_code();
+        assert_eq!(by.iter().find(|(c, _)| *c == "bad_request").unwrap().1, 2);
+        assert_eq!(by.iter().find(|(c, _)| *c == "other").unwrap().1, 1);
+        assert_eq!(r.errors.load(Ordering::Relaxed), 3);
+        assert_eq!(r.matrix(1).errors.load(Ordering::Relaxed), 1);
+        assert_eq!(r.matrix(0).errors.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn prometheus_text_contains_the_catalogue() {
+        let r = Registry::new(1);
+        r.requests.fetch_add(3, Ordering::Relaxed);
+        r.matvec_lat.observe(10_000);
+        r.batch_sizes.observe(2);
+        r.response_error("bad_json");
+        let text =
+            r.prometheus(&[("stencil2d:8x8".to_string(), "pack".to_string())]);
+        assert!(text.contains("race_requests_total 3"), "{text}");
+        assert!(text.contains("race_error_responses_total{code=\"bad_json\"} 1"), "{text}");
+        assert!(
+            text.contains("race_request_duration_seconds{kind=\"matvec\",quantile=\"0.5\"}"),
+            "{text}"
+        );
+        assert!(
+            text.contains(
+                "race_matrix_storage_info{matrix=\"stencil2d:8x8\",storage=\"pack\"} 1"
+            ),
+            "{text}"
+        );
+        assert!(text.contains("race_batch_size_count 1"), "{text}");
+    }
+}

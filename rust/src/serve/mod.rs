@@ -26,10 +26,16 @@
 //!   full-precision per-iteration SpMVs go through the same batcher, so
 //!   concurrent solves coalesce their sweeps. One request exercises
 //!   long-lived pool residency instead of a single kernel call.
-//! * **Structured errors and stats** — malformed requests, non-finite
-//!   inputs, unknown matrices, out-of-range powers and failed solves
-//!   answer `{"error": {"code", "message"}}`; `{"stats": true}` reports
-//!   request/batch/solve counters.
+//! * **Structured errors and telemetry** — malformed requests,
+//!   non-finite inputs, unknown matrices, out-of-range powers and failed
+//!   solves answer `{"error": {"code", "message"}}`, and every error
+//!   response is counted by code in the [`metrics`] registry.
+//!   `{"stats": true}` reports request/batch/solve counters plus latency
+//!   percentiles and per-matrix breakdowns (a superset of the original
+//!   flat counters); `{"metrics": true}` answers the same registry as
+//!   Prometheus-style text; `{"trace": true}` drains the global
+//!   [`crate::obs`] recorder as Chrome-trace JSON (spans are recorded
+//!   when the service runs with `--trace` or `RACE_OBS=1`).
 //!
 //! Vectors cross the protocol in the matrix's original (logical) row
 //! numbering; permutations live entirely inside the operator handles.
@@ -60,6 +66,7 @@
 //! ```
 
 mod batch;
+mod metrics;
 mod server;
 
 pub use batch::BatchResult;
@@ -71,8 +78,9 @@ use crate::pool::WorkerPool;
 use crate::sparse::ValPrec;
 use crate::util::json::Json;
 use anyhow::{Context, Result};
+use metrics::Registry;
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::Ordering;
 use std::sync::{Arc, Mutex};
 
 /// Service configuration (CLI flags of `race-cli serve`).
@@ -108,6 +116,11 @@ pub struct ServeOptions {
     /// bit-identical responses; `F32` trades ~1e-7 relative error for
     /// less matrix traffic per request).
     pub prec: ValPrec,
+    /// Enable the global [`crate::obs`] span recorder at build time so
+    /// request/kernel spans accumulate and `{"trace": true}` answers a
+    /// Chrome-trace capture (`--trace` on the CLI; `RACE_OBS=1` works
+    /// without this flag).
+    pub trace: bool,
 }
 
 impl Default for ServeOptions {
@@ -124,6 +137,7 @@ impl Default for ServeOptions {
             solve_iter_max: 10_000,
             storage: Storage::Pack,
             prec: ValPrec::F64,
+            trace: false,
         }
     }
 }
@@ -171,6 +185,8 @@ pub struct MatrixEntry {
     pub name: String,
     /// Matrix dimension.
     pub n: usize,
+    /// Registry position (indexes the per-matrix metrics counters).
+    idx: usize,
     op: Operator,
     batcher: batch::Batcher,
     mpk_batchers: Mutex<HashMap<usize, Arc<batch::Batcher>>>,
@@ -193,24 +209,6 @@ impl MatrixEntry {
     }
 }
 
-#[derive(Default)]
-struct ServiceStats {
-    requests: AtomicU64,
-    errors: AtomicU64,
-    matvecs: AtomicU64,
-    mpk_requests: AtomicU64,
-    solves: AtomicU64,
-    /// Total solver iterations served (all solve requests).
-    solve_iterations: AtomicU64,
-    batches: AtomicU64,
-    batched_vectors: AtomicU64,
-    mpk_batches: AtomicU64,
-    mpk_batched_vectors: AtomicU64,
-    max_batch: AtomicU64,
-    /// Total kernel nanoseconds (matvec batches + MPK sweeps).
-    kernel_nanos: AtomicU64,
-}
-
 /// The resident service: operator registry + shared pool, shared across
 /// connections.
 pub struct MatvecService {
@@ -219,7 +217,7 @@ pub struct MatvecService {
     mpk_power_max: usize,
     batch_window_us: u64,
     solve_iter_max: usize,
-    stats: ServiceStats,
+    metrics: Registry,
 }
 
 impl MatvecService {
@@ -227,6 +225,9 @@ impl MatvecService {
     /// sharing one worker pool).
     pub fn build(opts: &ServeOptions) -> Result<MatvecService> {
         anyhow::ensure!(!opts.matrices.is_empty(), "serve needs at least one --matrix spec");
+        if opts.trace {
+            crate::obs::set_enabled(true);
+        }
         let threads = opts.threads.max(1);
         let pool = Arc::new(WorkerPool::new(threads));
         let mut entries = Vec::with_capacity(opts.matrices.len());
@@ -246,18 +247,20 @@ impl MatvecService {
             entries.push(Arc::new(MatrixEntry {
                 name,
                 n: op.n(),
+                idx: entries.len(),
                 op,
                 batcher: batch::Batcher::with_window_us(opts.batch_window_us),
                 mpk_batchers: Mutex::new(HashMap::new()),
             }));
         }
+        let nmatrices = entries.len();
         Ok(MatvecService {
             entries,
             threads,
             mpk_power_max: opts.mpk_power_max.max(1),
             batch_window_us: opts.batch_window_us,
             solve_iter_max: opts.solve_iter_max.max(1),
-            stats: ServiceStats::default(),
+            metrics: Registry::new(nmatrices),
         })
     }
 
@@ -312,9 +315,15 @@ impl MatvecService {
         x: &[f64],
     ) -> Result<(Vec<f64>, f64, usize), ServeError> {
         let entry = self.entry(name)?;
-        Self::check_input(entry, x)?;
-        self.stats.matvecs.fetch_add(1, Ordering::Relaxed);
+        let t0 = std::time::Instant::now();
+        Self::check_input(entry, x).map_err(|e| {
+            self.metrics.matrix_error(entry.idx);
+            e
+        })?;
+        self.metrics.matvecs.fetch_add(1, Ordering::Relaxed);
+        self.metrics.matrix(entry.idx).matvecs.fetch_add(1, Ordering::Relaxed);
         let r = entry.batcher.matvec(x.to_vec(), |xs| self.run_batch(entry, xs));
+        self.metrics.matvec_lat.observe(t0.elapsed().as_nanos() as u64);
         Ok((r.b, r.seconds, r.batch))
     }
 
@@ -331,7 +340,11 @@ impl MatvecService {
         }
         for (j, x) in xs.iter().enumerate() {
             Self::check_input(entry, x)
-                .map_err(|e| ServeError::new(e.code, format!("vector {j}: {}", e.message)))?;
+                .map_err(|e| ServeError::new(e.code, format!("vector {j}: {}", e.message)))
+                .map_err(|e| {
+                    self.metrics.matrix_error(entry.idx);
+                    e
+                })?;
         }
         let (bs, _) = self.run_batch(entry, xs);
         Ok(bs)
@@ -346,15 +359,17 @@ impl MatvecService {
     fn run_batch(&self, entry: &MatrixEntry, xs: &[Vec<f64>]) -> (Vec<Vec<f64>>, f64) {
         let n = entry.n;
         let m = xs.len();
-        let t0 = std::time::Instant::now();
-        let mut bs: Vec<Vec<f64>> = (0..m).map(|_| vec![0.0; n]).collect();
-        entry.op.symmspmv_multi(xs, &mut bs);
-        let dt = t0.elapsed();
-        self.stats.batches.fetch_add(1, Ordering::Relaxed);
-        self.stats.batched_vectors.fetch_add(m as u64, Ordering::Relaxed);
-        self.stats.max_batch.fetch_max(m as u64, Ordering::Relaxed);
-        self.stats.kernel_nanos.fetch_add(dt.as_nanos() as u64, Ordering::Relaxed);
-        (bs, dt.as_secs_f64())
+        let (bs, secs) = crate::obs::time("serve.batch_matvec", || {
+            let mut bs: Vec<Vec<f64>> = (0..m).map(|_| vec![0.0; n]).collect();
+            entry.op.symmspmv_multi(xs, &mut bs);
+            bs
+        });
+        self.metrics.batches.fetch_add(1, Ordering::Relaxed);
+        self.metrics.batched_vectors.fetch_add(m as u64, Ordering::Relaxed);
+        self.metrics.max_batch.fetch_max(m as u64, Ordering::Relaxed);
+        self.metrics.kernel_nanos.fetch_add((secs * 1e9) as u64, Ordering::Relaxed);
+        self.metrics.batch_sizes.observe(m as u64);
+        (bs, secs)
     }
 
     /// Serve one MPK request `y = A^p x` (original indexing). Concurrent
@@ -368,8 +383,13 @@ impl MatvecService {
         p: usize,
     ) -> Result<(Vec<f64>, f64, usize), ServeError> {
         let entry = self.entry(name)?;
-        Self::check_input(entry, x)?;
+        let t0 = std::time::Instant::now();
+        Self::check_input(entry, x).map_err(|e| {
+            self.metrics.matrix_error(entry.idx);
+            e
+        })?;
         if p == 0 || p > self.mpk_power_max {
+            self.metrics.matrix_error(entry.idx);
             return Err(ServeError::new(
                 "bad_power",
                 format!("power must be in 1..={}, got {p}", self.mpk_power_max),
@@ -380,19 +400,26 @@ impl MatvecService {
         entry
             .op
             .prepare_powers(p)
-            .map_err(|e| ServeError::new("internal", format!("MPK plan: {e}")))?;
-        self.stats.mpk_requests.fetch_add(1, Ordering::Relaxed);
+            .map_err(|e| ServeError::new("internal", format!("MPK plan: {e}")))
+            .map_err(|e| {
+                self.metrics.matrix_error(entry.idx);
+                e
+            })?;
+        self.metrics.mpk_requests.fetch_add(1, Ordering::Relaxed);
+        self.metrics.matrix(entry.idx).mpk_requests.fetch_add(1, Ordering::Relaxed);
         let batcher = entry.mpk_batcher(p, self.batch_window_us);
         let r = batcher.matvec(x.to_vec(), |xs| {
-            let t0 = std::time::Instant::now();
-            let ys = entry.op.powers_multi(xs, p).expect("plan prepared before enqueue");
-            let dt = t0.elapsed();
-            self.stats.mpk_batches.fetch_add(1, Ordering::Relaxed);
-            self.stats.mpk_batched_vectors.fetch_add(xs.len() as u64, Ordering::Relaxed);
-            self.stats.max_batch.fetch_max(xs.len() as u64, Ordering::Relaxed);
-            self.stats.kernel_nanos.fetch_add(dt.as_nanos() as u64, Ordering::Relaxed);
-            (ys, dt.as_secs_f64())
+            let (ys, secs) = crate::obs::time("serve.batch_mpk", || {
+                entry.op.powers_multi(xs, p).expect("plan prepared before enqueue")
+            });
+            self.metrics.mpk_batches.fetch_add(1, Ordering::Relaxed);
+            self.metrics.mpk_batched_vectors.fetch_add(xs.len() as u64, Ordering::Relaxed);
+            self.metrics.max_batch.fetch_max(xs.len() as u64, Ordering::Relaxed);
+            self.metrics.kernel_nanos.fetch_add((secs * 1e9) as u64, Ordering::Relaxed);
+            self.metrics.batch_sizes.observe(xs.len() as u64);
+            (ys, secs)
         });
+        self.metrics.mpk_lat.observe(t0.elapsed().as_nanos() as u64);
         Ok((r.b, r.seconds, r.batch))
     }
 
@@ -412,90 +439,129 @@ impl MatvecService {
         cfg: &crate::solver::SolveConfig,
     ) -> Result<crate::solver::SolveResult, ServeError> {
         let entry = self.entry(name)?;
-        Self::check_input(entry, rhs)?;
-        self.stats.solves.fetch_add(1, Ordering::Relaxed);
+        let t0 = std::time::Instant::now();
+        Self::check_input(entry, rhs).map_err(|e| {
+            self.metrics.matrix_error(entry.idx);
+            e
+        })?;
+        self.metrics.solves.fetch_add(1, Ordering::Relaxed);
+        self.metrics.matrix(entry.idx).solves.fetch_add(1, Ordering::Relaxed);
         let mut mv = |v: &[f64], out: &mut [f64]| {
             let r = entry.batcher.matvec(v.to_vec(), |xs| self.run_batch(entry, xs));
             out.copy_from_slice(&r.b);
         };
         let res = crate::solver::solve_with(entry.op(), &mut mv, rhs, cfg)
-            .map_err(|e| ServeError::new("solve_failed", e.to_string()))?;
-        self.stats.solve_iterations.fetch_add(res.iterations as u64, Ordering::Relaxed);
+            .map_err(|e| ServeError::new("solve_failed", e.to_string()))
+            .map_err(|e| {
+                self.metrics.matrix_error(entry.idx);
+                e
+            })?;
+        self.metrics.solve_iterations.fetch_add(res.iterations as u64, Ordering::Relaxed);
+        self.metrics.solve_lat.observe(t0.elapsed().as_nanos() as u64);
         Ok(res)
     }
 
-    /// Stats snapshot as JSON.
+    /// Storage kind a registry entry currently reports — without forcing
+    /// the lazy pack build: `"pending"` until the first kernel call
+    /// decides.
+    fn storage_str(e: &MatrixEntry) -> String {
+        match e.op.storage_if_built() {
+            Some(s) => format!("{s:?}").to_lowercase(),
+            None => "pending".to_string(),
+        }
+    }
+
+    /// `(name, storage)` per registered matrix, in registry order.
+    fn matrix_info(&self) -> Vec<(String, String)> {
+        self.entries.iter().map(|e| (e.name.clone(), Self::storage_str(e))).collect()
+    }
+
+    /// Stats snapshot as JSON — a strict superset of the original flat
+    /// counter report: the historical keys keep their exact semantics,
+    /// and `uptime_seconds`, `errors_by_code`, `latency_ms`, `batch_p50`
+    /// and the per-matrix request/error counters ride along.
     pub fn stats_json(&self) -> Json {
-        let batches = self.stats.batches.load(Ordering::Relaxed);
-        let vectors = self.stats.batched_vectors.load(Ordering::Relaxed);
+        let m = &self.metrics;
+        let batches = m.batches.load(Ordering::Relaxed);
+        let vectors = m.batched_vectors.load(Ordering::Relaxed);
         let avg = if batches > 0 { vectors as f64 / batches as f64 } else { 0.0 };
         let matrices: Vec<Json> = self
             .entries
             .iter()
             .map(|e| {
+                let mc = m.matrix(e.idx);
                 Json::obj(vec![
                     ("name", Json::Str(e.name.clone())),
                     ("rows", Json::Num(e.n as f64)),
                     ("eta", Json::Num(e.eta())),
                     ("steps", Json::Num(e.op.program().nsteps() as f64)),
                     ("units", Json::Num(e.op.program().nunits() as f64)),
-                    (
-                        // reported without forcing the lazy pack build:
-                        // "pending" until the first kernel call decides
-                        "storage",
-                        Json::Str(match e.op.storage_if_built() {
-                            Some(s) => format!("{s:?}").to_lowercase(),
-                            None => "pending".to_string(),
-                        }),
-                    ),
+                    ("storage", Json::Str(Self::storage_str(e))),
+                    ("matvecs", Json::Num(mc.matvecs.load(Ordering::Relaxed) as f64)),
+                    ("mpk_requests", Json::Num(mc.mpk_requests.load(Ordering::Relaxed) as f64)),
+                    ("solves", Json::Num(mc.solves.load(Ordering::Relaxed) as f64)),
+                    ("errors", Json::Num(mc.errors.load(Ordering::Relaxed) as f64)),
                 ])
             })
             .collect();
+        let by_code: Vec<(&str, Json)> =
+            m.errors_by_code().into_iter().map(|(c, n)| (c, Json::Num(n as f64))).collect();
+        let latency = Json::obj(vec![
+            ("matvec", Registry::latency_json(&m.matvec_lat)),
+            ("mpk", Registry::latency_json(&m.mpk_lat)),
+            ("solve", Registry::latency_json(&m.solve_lat)),
+        ]);
         Json::obj(vec![(
             "stats",
             Json::obj(vec![
-                ("requests", Json::Num(self.stats.requests.load(Ordering::Relaxed) as f64)),
-                ("errors", Json::Num(self.stats.errors.load(Ordering::Relaxed) as f64)),
-                ("matvecs", Json::Num(self.stats.matvecs.load(Ordering::Relaxed) as f64)),
-                (
-                    "mpk_requests",
-                    Json::Num(self.stats.mpk_requests.load(Ordering::Relaxed) as f64),
-                ),
-                ("solves", Json::Num(self.stats.solves.load(Ordering::Relaxed) as f64)),
+                ("requests", Json::Num(m.requests.load(Ordering::Relaxed) as f64)),
+                ("errors", Json::Num(m.errors.load(Ordering::Relaxed) as f64)),
+                ("matvecs", Json::Num(m.matvecs.load(Ordering::Relaxed) as f64)),
+                ("mpk_requests", Json::Num(m.mpk_requests.load(Ordering::Relaxed) as f64)),
+                ("solves", Json::Num(m.solves.load(Ordering::Relaxed) as f64)),
                 (
                     "solve_iterations",
-                    Json::Num(self.stats.solve_iterations.load(Ordering::Relaxed) as f64),
+                    Json::Num(m.solve_iterations.load(Ordering::Relaxed) as f64),
                 ),
                 ("batches", Json::Num(batches as f64)),
                 ("batched_vectors", Json::Num(vectors as f64)),
                 ("avg_batch", Json::Num(avg)),
-                (
-                    "mpk_batches",
-                    Json::Num(self.stats.mpk_batches.load(Ordering::Relaxed) as f64),
-                ),
+                ("mpk_batches", Json::Num(m.mpk_batches.load(Ordering::Relaxed) as f64)),
                 (
                     "mpk_batched_vectors",
-                    Json::Num(self.stats.mpk_batched_vectors.load(Ordering::Relaxed) as f64),
+                    Json::Num(m.mpk_batched_vectors.load(Ordering::Relaxed) as f64),
                 ),
-                ("max_batch", Json::Num(self.stats.max_batch.load(Ordering::Relaxed) as f64)),
+                ("max_batch", Json::Num(m.max_batch.load(Ordering::Relaxed) as f64)),
                 (
                     "kernel_seconds",
-                    Json::Num(self.stats.kernel_nanos.load(Ordering::Relaxed) as f64 / 1e9),
+                    Json::Num(m.kernel_nanos.load(Ordering::Relaxed) as f64 / 1e9),
                 ),
                 ("threads", Json::Num(self.threads as f64)),
+                ("uptime_seconds", Json::Num(m.uptime_secs())),
+                ("errors_by_code", Json::obj(by_code)),
+                ("latency_ms", latency),
+                ("batch_p50", Json::Num(m.batch_sizes.quantile(0.5))),
                 ("matrices", Json::Arr(matrices)),
             ]),
         )])
     }
 
+    /// The metrics registry as Prometheus-style text exposition (the
+    /// payload behind `{"metrics": true}`).
+    pub fn metrics_text(&self) -> String {
+        self.metrics.prometheus(&self.matrix_info())
+    }
+
     /// Handle one JSON request line. Returns the response line and
-    /// whether the request asked the server to shut down.
+    /// whether the request asked the server to shut down. Every error
+    /// response is counted (globally and by code) in the registry.
     pub fn handle(&self, line: &str) -> (String, bool) {
-        self.stats.requests.fetch_add(1, Ordering::Relaxed);
+        let _sp = crate::obs::span("serve.request");
+        self.metrics.requests.fetch_add(1, Ordering::Relaxed);
         match self.handle_inner(line) {
             Ok((resp, shutdown)) => (resp, shutdown),
             Err(e) => {
-                self.stats.errors.fetch_add(1, Ordering::Relaxed);
+                self.metrics.response_error(e.code);
                 (e.to_json().to_string(), false)
             }
         }
@@ -506,6 +572,19 @@ impl MatvecService {
             .map_err(|e| ServeError::new("bad_json", format!("request is not valid JSON: {e}")))?;
         if req.get("stats").is_some() {
             return Ok((self.stats_json().to_string(), false));
+        }
+        if req.get("metrics").is_some() {
+            let resp = Json::obj(vec![("metrics", Json::Str(self.metrics_text()))]);
+            return Ok((resp.to_string(), false));
+        }
+        if req.get("trace").is_some() {
+            let events = crate::obs::recorder().drain();
+            let resp = Json::obj(vec![
+                ("trace", crate::obs::trace::chrome_trace(&events)),
+                ("events", Json::Num(events.len() as f64)),
+                ("enabled", Json::Bool(crate::obs::enabled())),
+            ]);
+            return Ok((resp.to_string(), false));
         }
         if req.get("shutdown").is_some() {
             let ack = Json::obj(vec![
@@ -529,7 +608,8 @@ impl MatvecService {
             ServeError::new(
                 "bad_request",
                 "request must be {\"x\": [..]} or {\"solve\": {\"rhs\": [..]}} (optional \
-                 \"matrix\", \"p\", or {\"stats\": true} / {\"shutdown\": true})",
+                 \"matrix\", \"p\", or {\"stats\": true} / {\"metrics\": true} / \
+                 {\"trace\": true} / {\"shutdown\": true})",
             )
         })?;
         if let Some(pj) = req.get("p") {
@@ -1000,5 +1080,90 @@ mod tests {
         let (b, _, m) = svc.matvec(None, &ones).unwrap();
         assert!(m >= 1);
         assert!(b.iter().all(|v| (v - 1.0).abs() < 1e-9));
+    }
+
+    #[test]
+    fn error_responses_are_counted_by_code_and_per_matrix() {
+        let svc = MatvecService::build(&opts(&["stencil2d:6x6"])).unwrap();
+        let n = svc.entries()[0].n;
+        let ones = vec![1.0; n];
+        svc.handle("{nope"); // bad_json
+        svc.handle("{\"x\": [1.0, 2.0]}"); // bad_request (wrong length)
+        svc.handle(&format!("{{\"x\": {ones:?}, \"matrix\": \"ghost\"}}")); // unknown_matrix
+        svc.handle(&format!("{{\"x\": {ones:?}, \"p\": 99}}")); // bad_power
+        svc.handle(&format!("{{\"x\": {ones:?}}}")); // ok
+        let s = svc.stats_json();
+        let stats = s.get("stats").unwrap();
+        assert_eq!(stats.get("errors").and_then(Json::as_f64), Some(4.0));
+        let by = stats.get("errors_by_code").unwrap();
+        assert_eq!(by.get("bad_json").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(by.get("bad_request").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(by.get("unknown_matrix").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(by.get("bad_power").and_then(Json::as_f64), Some(1.0));
+        // per-matrix: the wrong-length and bad-power requests resolved to
+        // the default matrix before failing validation
+        let m0 = match stats.get("matrices") {
+            Some(Json::Arr(v)) => &v[0],
+            other => panic!("expected matrices array, got {other:?}"),
+        };
+        assert_eq!(m0.get("errors").and_then(Json::as_f64), Some(2.0));
+        assert_eq!(m0.get("matvecs").and_then(Json::as_f64), Some(1.0));
+        // latency histograms saw exactly the one successful matvec
+        let lat = stats.get("latency_ms").unwrap().get("matvec").unwrap();
+        assert_eq!(lat.get("count").and_then(Json::as_f64), Some(1.0));
+        assert!(lat.get("p50_ms").and_then(Json::as_f64).unwrap() > 0.0);
+    }
+
+    #[test]
+    fn metrics_endpoint_answers_prometheus_text() {
+        let svc = MatvecService::build(&opts(&["stencil2d:6x6"])).unwrap();
+        let n = svc.entries()[0].n;
+        let ones = vec![1.0; n];
+        svc.handle(&format!("{{\"x\": {ones:?}}}"));
+        svc.handle("{broken"); // one bad_json error
+        let (resp, stop) = svc.handle("{\"metrics\": true}");
+        assert!(!stop);
+        let j = Json::parse(&resp).unwrap();
+        let text = match j.get("metrics") {
+            Some(Json::Str(t)) => t.clone(),
+            other => panic!("expected metrics text, got {other:?}"),
+        };
+        assert!(text.contains("race_requests_total 3"), "{text}");
+        assert!(text.contains("race_matvec_requests_total 1"), "{text}");
+        assert!(text.contains("race_error_responses_total{code=\"bad_json\"} 1"), "{text}");
+        assert!(
+            text.contains("race_request_duration_seconds{kind=\"matvec\",quantile=\"0.5\"}"),
+            "{text}"
+        );
+        // storage is reported per matrix via storage_if_built (the first
+        // matvec forced the build, so it is no longer "pending")
+        assert!(text.contains("race_matrix_storage_info{matrix=\"stencil2d:6x6\""), "{text}");
+        assert!(!text.contains("storage=\"pending\""), "{text}");
+    }
+
+    #[test]
+    fn trace_endpoint_round_trips_chrome_events() {
+        let mut o = opts(&["stencil2d:6x6"]);
+        o.trace = true; // enables the global recorder
+        let svc = MatvecService::build(&o).unwrap();
+        let n = svc.entries()[0].n;
+        svc.handle(&format!("{{\"x\": {:?}}}", vec![1.0; n]));
+        let (resp, _) = svc.handle("{\"trace\": true}");
+        let j = Json::parse(&resp).unwrap();
+        assert_eq!(j.get("enabled"), Some(&Json::Bool(true)));
+        let events = match j.get("trace").and_then(|t| t.get("traceEvents")) {
+            Some(Json::Arr(v)) => v,
+            other => panic!("expected traceEvents array, got {other:?}"),
+        };
+        let names: Vec<String> = events
+            .iter()
+            .map(|e| match e.get("name") {
+                Some(Json::Str(s)) => s.clone(),
+                _ => String::new(),
+            })
+            .collect();
+        assert!(names.iter().any(|s| s == "serve.request"), "{names:?}");
+        assert!(names.iter().any(|s| s == "serve.batch_matvec"), "{names:?}");
+        crate::obs::set_enabled(false); // don't leak into other tests
     }
 }

@@ -305,15 +305,18 @@ fn solve_inner(
     ensure!(rhs.len() == n, "rhs has {} entries, operator needs {}", rhs.len(), n);
     ensure!(cfg.tol.is_finite() && cfg.tol > 0.0, "tol must be a positive finite number");
     ensure!(cfg.max_iter >= 1, "max_iter must be >= 1");
-    let t0 = std::time::Instant::now();
-    let mut out = match cfg.method {
-        Method::Cg => run_cg(op, custom, rhs, cfg, Precond::None)?,
-        Method::JacobiCg => run_cg(op, custom, rhs, cfg, Precond::Jacobi)?,
-        Method::SsorCg => run_cg(op, custom, rhs, cfg, Precond::Ssor)?,
-        Method::Chebyshev => cheb::chebyshev(op, rhs, cfg)?,
-        Method::Mixed => mixed::mixed(op, custom, rhs, cfg)?,
-    };
-    out.seconds = t0.elapsed().as_secs_f64();
+    // one timing system: `obs::time` fills `seconds` and, when tracing is
+    // enabled, records the whole solve as a `solve` span enclosing its
+    // per-iteration `solve.iteration` children
+    let (res, secs) = crate::obs::time("solve", || match cfg.method {
+        Method::Cg => run_cg(op, custom, rhs, cfg, Precond::None),
+        Method::JacobiCg => run_cg(op, custom, rhs, cfg, Precond::Jacobi),
+        Method::SsorCg => run_cg(op, custom, rhs, cfg, Precond::Ssor),
+        Method::Chebyshev => cheb::chebyshev(op, rhs, cfg),
+        Method::Mixed => mixed::mixed(op, custom, rhs, cfg),
+    });
+    let mut out = res?;
+    out.seconds = secs;
     // honest final report: reference SpMV, independent of every backend
     // and recurrence under test
     let ax = op.spmv_ref(&out.x);

@@ -1,0 +1,230 @@
+//! Integration tests for the observability layer (`race::obs` + the
+//! pool's per-worker timing slots): the per-worker compute/wait accounts
+//! must reconcile with wall time on a real 4-thread pool run, the
+//! disabled instrumentation path must cost nothing measurable, span
+//! nesting must survive threads, histogram percentiles must interpolate
+//! deterministically, and the Chrome-trace export must round-trip
+//! through the JSON parser.
+
+use race::obs;
+use race::obs::hist::Hist;
+use race::pool::{StepProgram, WorkUnit, WorkerPool};
+use std::time::{Duration, Instant};
+
+/// Busy-wait for `d` so per-unit compute is real CPU time the timing
+/// slots can see (sleep would park the thread and undercount compute).
+fn spin(d: Duration) {
+    let t0 = Instant::now();
+    while t0.elapsed() < d {
+        std::hint::spin_loop();
+    }
+}
+
+/// A synthetic program: `nsteps` steps of `nunits` one-row units each
+/// (`end > start` keeps [`StepProgram::from_steps`] from dropping them).
+fn synthetic_program(nsteps: u32, nunits: u32) -> StepProgram {
+    let steps = (0..nsteps)
+        .map(|_| {
+            (0..nunits).map(|i| WorkUnit { start: i, end: i + 1, power: 0 }).collect::<Vec<_>>()
+        })
+        .collect();
+    StepProgram::from_steps(steps)
+}
+
+/// Tentpole check: with obs enabled, a 4-thread pool run fills the
+/// per-worker per-step timing slots so that each worker's compute+wait
+/// total reconciles with the job's wall time, and the derived imbalance
+/// of a perfectly uniform schedule is near 1. The same test then pins
+/// the disabled-path overhead (satellite: "within noise of an
+/// uninstrumented baseline") — both halves share the global recorder, so
+/// they live in one `#[test]` and cannot race sibling tests.
+#[test]
+fn pool_timing_slots_reconcile_with_wall_time_and_disabled_path_is_free() {
+    let pool = WorkerPool::new(4);
+    let prog = synthetic_program(3, 4);
+    assert_eq!(prog.nsteps(), 3);
+    let unit_ms = 5u64;
+
+    obs::set_enabled(true);
+    obs::recorder().drain();
+    pool.execute(&prog, |_u| spin(Duration::from_millis(unit_ms)));
+    let report = pool.take_exec_report().expect("enabled execute records a report");
+    let events = obs::recorder().drain();
+    obs::set_enabled(false);
+
+    assert_eq!(report.threads, 4);
+    assert_eq!(report.nsteps, 3);
+    assert_eq!(report.compute_ns.len(), 4);
+    assert_eq!(report.wait_ns.len(), 4);
+    assert!(report.wall_ns > 0);
+
+    // Every worker sweeps exactly one 5 ms unit per step, so total
+    // compute must cover most of the 12-unit budget (scheduler noise and
+    // clock granularity eat the rest).
+    let budget_ns = 3 * 4 * unit_ms * 1_000_000;
+    let total_compute: u64 = report.compute_ns.iter().sum();
+    assert!(
+        total_compute >= budget_ns * 8 / 10,
+        "compute {total_compute} ns < 80% of budget {budget_ns} ns"
+    );
+
+    // Per-worker accounting closes: compute + barrier wait covers the
+    // wall time up to thread start-up latency, and never exceeds it by
+    // more than clock jitter.
+    for w in 0..4 {
+        let accounted = report.compute_ns[w] + report.wait_ns[w];
+        assert!(
+            accounted as f64 >= 0.6 * report.wall_ns as f64,
+            "worker {w} accounted {accounted} ns of wall {} ns",
+            report.wall_ns
+        );
+        assert!(
+            accounted as f64 <= 1.10 * report.wall_ns as f64,
+            "worker {w} over-accounted {accounted} ns of wall {} ns",
+            report.wall_ns
+        );
+    }
+
+    // A uniform schedule is balanced: imbalance = max/mean per-worker
+    // compute stays near 1 (generous ceiling for CI-noise spikes).
+    assert!(report.imbalance >= 1.0, "imbalance {} < 1", report.imbalance);
+    assert!(report.imbalance < 2.0, "uniform schedule imbalanced: {}", report.imbalance);
+    assert!(report.step_imbalance >= 1.0);
+    assert!((0.0..=1.0).contains(&report.idle_frac));
+
+    // The publisher also drops a `pool.execute` span on the timeline.
+    assert!(
+        events.iter().any(|e| e.name == "pool.execute"),
+        "no pool.execute span among {} events",
+        events.len()
+    );
+
+    // Overhead guard: a disabled span is one relaxed load — no clock
+    // read, no allocation, nothing recorded. 200k calls must be
+    // indistinguishable from an empty loop (sub-microsecond per call by
+    // a wide CI margin) and must leave the buffer untouched.
+    let len_before = obs::recorder().len();
+    let t0 = Instant::now();
+    for i in 0..200_000u64 {
+        let _sp = obs::span("guard.noop");
+        std::hint::black_box(i);
+    }
+    let disabled = t0.elapsed();
+    assert_eq!(obs::recorder().len(), len_before, "disabled spans recorded events");
+    assert!(disabled < Duration::from_millis(500), "200k disabled spans took {disabled:?}");
+
+    // And the disabled pool path stays the fast path: re-running the
+    // same job with obs off must not leave a report behind.
+    pool.execute(&prog, |_u| spin(Duration::from_micros(50)));
+    assert!(pool.take_exec_report().is_none(), "disabled execute recorded a report");
+}
+
+/// Span nesting survives threads: each thread gets its own stable tid
+/// and its own depth counter, and children complete before parents.
+#[test]
+fn spans_nest_per_thread_on_a_local_recorder() {
+    let rec = std::sync::Arc::new(obs::Recorder::new(true));
+    {
+        let _outer = rec.span("build");
+        let _inner = rec.span_detail("build.rcm", || "bw=7".to_string());
+        let rec2 = rec.clone();
+        std::thread::spawn(move || {
+            let _other = rec2.span("exec.symmspmv");
+            spin(Duration::from_millis(1));
+        })
+        .join()
+        .unwrap();
+    }
+    let mut events = rec.drain();
+    assert_eq!(events.len(), 3);
+    // completion order: the worker thread's span and the inner span both
+    // finish before the outer guard drops
+    assert_eq!(events.last().unwrap().name, "build");
+    assert_eq!(events.last().unwrap().depth, 1);
+    events.sort_by_key(|e| e.name);
+    let [outer, inner, other] = match events.as_slice() {
+        [a, b, c] => [a, b, c],
+        _ => unreachable!(),
+    };
+    assert_eq!((outer.name, inner.name, other.name), ("build", "build.rcm", "exec.symmspmv"));
+    // the spawned thread nests independently: depth restarts at 1 there
+    assert_eq!(inner.depth, 2);
+    assert_eq!(other.depth, 1);
+    assert_ne!(other.tid, outer.tid, "threads must get distinct tids");
+    assert_eq!(inner.tid, outer.tid);
+    assert_eq!(inner.detail.as_deref(), Some("bw=7"));
+}
+
+/// Histogram percentiles are deterministic: bucket selection follows
+/// Prometheus `le` semantics and quantiles interpolate linearly inside
+/// the chosen bucket.
+#[test]
+fn hist_percentiles_interpolate_deterministically() {
+    let h = Hist::latency();
+    // 90 fast observations (1 µs, first bucket) and 10 slow (1 ms).
+    for _ in 0..90 {
+        h.observe(1_000);
+    }
+    for _ in 0..10 {
+        h.observe(1_000_000);
+    }
+    assert_eq!(h.count(), 100);
+    // p50 lands mid-first-bucket: rank 50 of 90 in (0, 1_000].
+    let p50 = h.quantile(0.50);
+    assert!((p50 - 1_000.0 * 50.0 / 90.0).abs() < 1e-6, "p50 = {p50}");
+    // p95 lands in the slow bucket (512_000, 1_024_000]: rank 95 is the
+    // 5th of its 10 observations -> halfway through the bucket.
+    let p95 = h.quantile(0.95);
+    assert!((p95 - (512_000.0 + 0.5 * 512_000.0)).abs() < 1e-6, "p95 = {p95}");
+    // p99 -> 9th of 10: 90% through the bucket.
+    let p99 = h.quantile(0.99);
+    assert!((p99 - (512_000.0 + 0.9 * 512_000.0)).abs() < 1e-6, "p99 = {p99}");
+    assert_eq!(h.max(), 1_000_000);
+    let mean = h.mean();
+    assert!((mean - (90.0 * 1_000.0 + 10.0 * 1_000_000.0) / 100.0).abs() < 1e-9, "mean = {mean}");
+
+    // Size histogram: batch sizes land in doubling buckets, overflow is
+    // attributed to the recorded max.
+    let s = Hist::sizes();
+    for v in [1u64, 8, 8, 5000] {
+        s.observe(v);
+    }
+    let c = s.bucket_counts();
+    assert_eq!(c[0], 1); // <= 1
+    assert_eq!(c[3], 2); // <= 8
+    assert_eq!(*c.last().unwrap(), 1); // overflow
+    assert_eq!(s.quantile(1.0), 5000.0);
+}
+
+/// The Chrome-trace export writes JSON the crate's own parser accepts,
+/// with one complete event (`ph: "X"`) per span and microsecond stamps.
+#[test]
+fn chrome_trace_round_trips_through_json() {
+    use race::util::json::Json;
+    let rec = obs::Recorder::new(true);
+    {
+        let _outer = rec.span("build");
+        let _inner = rec.span_detail("build.rcm", || "bw=3".to_string());
+        spin(Duration::from_millis(1));
+    }
+    let events = rec.drain();
+    let path = std::env::temp_dir().join("race_obs_trace_roundtrip.json");
+    let path = path.to_str().expect("temp path is utf-8");
+    obs::trace::write_chrome_trace(path, &events).expect("write trace file");
+    let text = std::fs::read_to_string(path).expect("read trace file");
+    std::fs::remove_file(path).ok();
+    let doc = Json::parse(&text).expect("trace file parses");
+    let evs = match doc.get("traceEvents") {
+        Some(Json::Arr(v)) => v,
+        other => panic!("traceEvents missing or not an array: {other:?}"),
+    };
+    assert_eq!(evs.len(), 2);
+    for ev in evs {
+        assert!(matches!(ev.get("ph"), Some(Json::Str(s)) if s == "X"));
+        assert!(ev.get("ts").and_then(|j| j.as_f64()).is_some());
+        assert!(ev.get("dur").and_then(|j| j.as_f64()).is_some());
+        assert!(ev.get("name").is_some() && ev.get("cat").is_some());
+    }
+    // the annotated span carries its detail into args
+    assert!(text.contains("bw=3"), "detail lost: {text}");
+}

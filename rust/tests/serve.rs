@@ -258,3 +258,63 @@ fn tcp_solve_roundtrip() {
     assert!(stats.get("solve_iterations").and_then(Json::as_f64).unwrap() >= 2.0);
     handle.join().unwrap();
 }
+
+/// `{"metrics": true}` over the wire: Prometheus-style text survives the
+/// one-line JSON protocol and reflects the traffic, and the stats
+/// superset carries the latency percentiles and error-by-code counters.
+#[test]
+fn tcp_metrics_exposition_roundtrip() {
+    let mut o = opts(&["stencil2d:8x8"]);
+    o.max_requests = Some(4);
+    let server = Server::bind(&o).unwrap();
+    let addr = server.local_addr();
+    let handle = std::thread::spawn(move || server.run().unwrap());
+
+    let stream = TcpStream::connect(addr).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    let ones = vec![1.0; 64];
+
+    // one success + one error to give the counters something to count
+    writer.write_all(format!("{{\"x\": {ones:?}}}\n").as_bytes()).unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("\"b\""), "{line}");
+    writer.write_all(b"{\"x\": [1, 2]}\n").unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("bad_request"), "{line}");
+
+    // Prometheus text rides inside a JSON string (newlines escaped)
+    writer.write_all(b"{\"metrics\": true}\n").unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    let j = Json::parse(line.trim()).unwrap();
+    let text = match j.get("metrics") {
+        Some(Json::Str(t)) => t.clone(),
+        other => panic!("expected metrics text, got {other:?} in {line}"),
+    };
+    assert!(text.lines().count() > 10, "{text}");
+    assert!(text.contains("race_requests_total 3"), "{text}");
+    assert!(text.contains("race_matvec_requests_total 1"), "{text}");
+    assert!(text.contains("race_error_responses_total{code=\"bad_request\"} 1"), "{text}");
+    assert!(text.contains("race_request_duration_seconds_count{kind=\"matvec\"} 1"), "{text}");
+    assert!(text.contains("race_matrix_storage_info{matrix=\"stencil2d:8x8\""), "{text}");
+
+    // the stats superset: historical keys intact, new telemetry present
+    writer.write_all(b"{\"stats\": true}\n").unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    let j = Json::parse(line.trim()).unwrap();
+    let stats = j.get("stats").expect("stats");
+    assert_eq!(stats.get("requests").and_then(Json::as_f64), Some(4.0));
+    assert_eq!(stats.get("errors").and_then(Json::as_f64), Some(1.0));
+    let by = stats.get("errors_by_code").expect("errors_by_code");
+    assert_eq!(by.get("bad_request").and_then(Json::as_f64), Some(1.0));
+    let lat = stats.get("latency_ms").and_then(|l| l.get("matvec")).expect("latency_ms.matvec");
+    assert_eq!(lat.get("count").and_then(Json::as_f64), Some(1.0));
+    assert!(lat.get("p99_ms").and_then(Json::as_f64).unwrap() > 0.0);
+    assert!(stats.get("uptime_seconds").and_then(Json::as_f64).unwrap() > 0.0);
+    handle.join().unwrap();
+}
