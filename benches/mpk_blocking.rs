@@ -115,7 +115,7 @@ fn main() {
         ("power", Json::Num(p as f64)),
         ("cases", Json::Arr(rows)),
     ]);
-    let path = std::env::var("RACE_BENCH_OUT").unwrap_or_else(|_| "BENCH_mpk.json".to_string());
-    std::fs::write(&path, out.to_string() + "\n").expect("write BENCH_mpk.json");
+    let path = race::obs::baseline::write_bench("BENCH_mpk.json", out, None)
+        .expect("write BENCH_mpk.json");
     println!("wrote {path}");
 }

@@ -158,7 +158,7 @@ fn main() {
         ("cases", Json::Arr(rows)),
         ("phases", Json::Arr(phase_rows)),
     ]);
-    let path = std::env::var("RACE_BENCH_OUT").unwrap_or_else(|_| "BENCH_perf.json".to_string());
-    std::fs::write(&path, out.to_string() + "\n").expect("write BENCH_perf.json");
+    let path = race::obs::baseline::write_bench("BENCH_perf.json", out, Some(&m))
+        .expect("write BENCH_perf.json");
     println!("wrote {path}");
 }

@@ -150,7 +150,7 @@ fn main() {
         ("cases", Json::Arr(rows)),
         ("serve", Json::Arr(serve_rows)),
     ]);
-    let path = std::env::var("RACE_BENCH_OUT").unwrap_or_else(|_| "BENCH_pool.json".to_string());
-    std::fs::write(&path, out.to_string() + "\n").expect("write BENCH_pool.json");
+    let path = race::obs::baseline::write_bench("BENCH_pool.json", out, None)
+        .expect("write BENCH_pool.json");
     println!("wrote {path}");
 }

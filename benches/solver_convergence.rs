@@ -161,7 +161,7 @@ fn main() {
             ]),
         ),
     ]);
-    let path = std::env::var("RACE_BENCH_OUT").unwrap_or_else(|_| "BENCH_solver.json".to_string());
-    std::fs::write(&path, out.to_string() + "\n").expect("write BENCH_solver.json");
+    let path = race::obs::baseline::write_bench("BENCH_solver.json", out, Some(&m))
+        .expect("write BENCH_solver.json");
     println!("wrote {path}");
 }

@@ -139,7 +139,7 @@ fn main() {
             ]),
         ),
     ]);
-    let path = std::env::var("RACE_BENCH_OUT").unwrap_or_else(|_| "BENCH_traffic.json".to_string());
-    std::fs::write(&path, out.to_string() + "\n").expect("write BENCH_traffic.json");
+    let path = race::obs::baseline::write_bench("BENCH_traffic.json", out, Some(&m))
+        .expect("write BENCH_traffic.json");
     println!("wrote {path}");
 }

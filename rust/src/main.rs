@@ -47,7 +47,7 @@ USAGE:
       Matrices whose Gershgorin lower bound is not positive are shifted
       to a certified SPD system first (the applied shift is reported).
   race-cli profile --matrix SPEC [--threads N] [--machine ivb|skx|host] [--small]
-                   [--power P] [--storage pack|csr] [--prec f64|f32]
+                   [--power P] [--storage pack|csr] [--prec f64|f32] [--hwc]
                    [--out BENCH_obs.json] [--trace-out race_trace.json] [--json]
       Roofline-aware profile via the obs recorder: per-build-phase
       timings (RCM, level construction, coloring recursion, load
@@ -55,12 +55,25 @@ USAGE:
       load-imbalance ratio and idle fraction for one recorded SymmSpMV
       execution, and attained-vs-model bandwidth (cachesim traffic over
       the measured median). Writes a chrome://tracing-loadable span trace
-      plus BENCH_obs.json. --power P adds an MPK roofline row. Setting
-      RACE_OBS=1 enables the same recorder under every other subcommand.
+      plus BENCH_obs.json. --power P adds an MPK roofline row. --hwc adds
+      hardware-counter *measured* traffic next to the cachesim model
+      (IMC memory-controller counters when readable, LLC-miss estimate
+      otherwise; where perf is denied the rows report
+      measured: unavailable with a stable reason and the run still
+      succeeds). Setting RACE_OBS=1 enables the same recorder under
+      every other subcommand.
+  race-cli bench-diff OLD.json NEW.json [--json] [--warn-only]
+      Compare two BENCH_*.json artifacts (any family): schema-tolerant
+      walk with per-metric direction/noise policies — timing medians
+      warn at 10% / fail at 25%, deterministic model metrics (bytes,
+      traffic, sweep counts) at 1% / 5%, structural keys (nnz, threads)
+      flag any change. Machine fingerprints are compared first; a
+      cross-machine diff downgrades hard fails to warnings. Exits
+      nonzero on hard regressions unless --warn-only.
   race-cli serve --matrix SPEC[,SPEC..] [--threads N] [--addr HOST:PORT]
                  [--small] [--max-requests N] [--mpk-power P] [--mpk-cache BYTES]
                  [--batch-window-us N] [--storage pack|csr] [--prec f64|f32]
-                 [--solve-iter-max N] [--trace]
+                 [--solve-iter-max N] [--trace] [--hwc] [--slow-ms N]
       SymmSpMV/MPK/solve-as-a-service over TCP (newline-delimited JSON,
       see docs/SERVE_PROTOCOL.md): multi-matrix registry, request
       micro-batching on a persistent worker pool (SymmSpMV and MPK
@@ -76,6 +89,10 @@ USAGE:
       --storage/--prec select the matrix encoding the kernels stream
       (delta-compressed pack by default; f64 packs answer bit-identically
       to CSR, f32 cuts another 4 bytes/nnz at ~1e-7 relative error).
+      --hwc attaches process-level hardware counters and exposes them as
+      race_hwc_* gauges in {\"metrics\": true}; --slow-ms N logs a
+      structured line for requests slower than N ms (id, kind, matrix,
+      batch size, latency).
   race-cli xla [--name model]
       Load + compile an AOT artifact from artifacts/.
 ";
@@ -191,6 +208,7 @@ fn main() -> Result<()> {
         "pack-stats" => cmd_pack_stats(&args),
         "explain" => cmd_explain(&args),
         "profile" => cmd_profile(&args),
+        "bench-diff" => cmd_bench_diff(&args),
         "serve" => {
             let matrices: Vec<String> = args
                 .require("matrix")?
@@ -217,6 +235,8 @@ fn main() -> Result<()> {
                 storage: parse_storage(&args.get("storage", "pack"))?,
                 prec: parse_prec(&args.get("prec", "f64"))?,
                 trace: args.has("trace"),
+                hwc: args.has("hwc"),
+                slow_ms: args.get_usize("slow-ms", 0)? as u64,
             };
             race::serve::serve(&opts)
         }
@@ -598,6 +618,17 @@ fn cmd_profile(args: &Args) -> Result<()> {
     let out = args.get("out", "BENCH_obs.json");
     let trace_out = args.get("trace-out", "race_trace.json");
     let json = args.has("json");
+    let hwc = args.has("hwc");
+
+    // the process-scope counter group must open before Operator::build
+    // spawns the pool's workers — perf inheritance only covers threads
+    // created afterwards. Denied hosts get a stable reason, never an
+    // error: the profile still completes with measured: unavailable.
+    let hwc_group: Result<obs::hwc::HwcGroup, &'static str> = if hwc {
+        obs::hwc::HwcGroup::open(obs::hwc::Scope::Process)
+    } else {
+        Err("off")
+    };
 
     obs::set_enabled(true);
     obs::recorder().drain(); // start from a clean buffer
@@ -622,12 +653,45 @@ fn cmd_profile(args: &Args) -> Result<()> {
         .filter(|p| p.name.starts_with("build") || p.name.starts_with("race"))
         .collect();
 
+    // measured traffic (--hwc): run k kernel repetitions between two
+    // counter reads so the read overhead amortizes. IMC CAS counters
+    // give true DRAM bytes (all cores, system-wide); the LLC-miss ×
+    // line-size estimate from the inherited process group is the
+    // fallback where the uncore PMU is unreadable.
+    let line_bytes = m.line as f64;
+    let measure = |f: &mut dyn FnMut(), secs: f64| -> Result<(f64, &'static str), &'static str> {
+        let k = ((0.05 / secs.max(1e-9)).ceil() as usize).clamp(3, 1000);
+        if let Ok(imc) = obs::hwc::ImcCounters::open() {
+            let (r0, w0) = imc.sample_bytes();
+            for _ in 0..k {
+                f();
+            }
+            let (r1, w1) = imc.sample_bytes();
+            return Ok((((r1 - r0) + (w1 - w0)) / k as f64, "imc"));
+        }
+        let g = hwc_group.as_ref().map_err(|r| *r)?;
+        let s0 = g.sample();
+        for _ in 0..k {
+            f();
+        }
+        let d = g.sample().delta(&s0);
+        match d.dram_bytes_estimate(line_bytes) {
+            Some(b) => Ok((b / k as f64, "llc_miss")),
+            None => Err(obs::hwc::REASON_NO_PMU),
+        }
+    };
+
     // median timings run un-instrumented; then one recorded execution
     // supplies the per-worker slots and the trace spans
     obs::set_enabled(false);
     let s_symm = race::util::bench::bench("symmspmv", 0.1, || {
         op.symmspmv_permuted(&xp, std::hint::black_box(&mut bp));
     });
+    let measured_symm = if hwc {
+        Some(measure(&mut || op.symmspmv_permuted(&xp, &mut bp), s_symm.median))
+    } else {
+        None
+    };
     obs::set_enabled(true);
     op.symmspmv_permuted(&xp, &mut bp);
     let report = op.worker_pool().take_exec_report();
@@ -639,8 +703,19 @@ fn cmd_profile(args: &Args) -> Result<()> {
     };
     let flops = 2.0 * nnz_full as f64;
     let bytes = tr.bytes_total as f64;
-    let mut roofs =
-        vec![obs::roofline::RooflineRow::new("symmspmv", s_symm.median, bytes, flops, &m)];
+    // attach the measurement (or its stable degradation reason) to a row
+    let finish = |row: obs::roofline::RooflineRow,
+                  res: Option<Result<(f64, &'static str), &'static str>>| {
+        match res {
+            None => row,
+            Some(Ok((b, src))) => row.with_measured(b, src),
+            Some(Err(reason)) => row.measured_unavailable(reason),
+        }
+    };
+    let mut roofs = vec![finish(
+        obs::roofline::RooflineRow::new("symmspmv", s_symm.median, bytes, flops, &m),
+        measured_symm,
+    )];
     if args.has("power") {
         let p = args.get_usize("power", 4)?;
         let h = op.mpk(p)?;
@@ -648,15 +723,28 @@ fn cmd_profile(args: &Args) -> Result<()> {
         let s_mpk = race::util::bench::bench("mpk", 0.1, || {
             std::hint::black_box(op.powers_permuted(&h, &xp));
         });
+        let measured_mpk = if hwc {
+            Some(measure(
+                &mut || {
+                    std::hint::black_box(op.powers_permuted(&h, &xp));
+                },
+                s_mpk.median,
+            ))
+        } else {
+            None
+        };
         obs::set_enabled(true);
         op.powers_permuted(&h, &xp);
         let tr_mpk = cachesim::measure_mpk_traffic(h.plan(), &m);
-        roofs.push(obs::roofline::RooflineRow::new(
-            &format!("mpk p={p}"),
-            s_mpk.median,
-            tr_mpk.bytes_total as f64,
-            flops * p as f64,
-            &m,
+        roofs.push(finish(
+            obs::roofline::RooflineRow::new(
+                &format!("mpk p={p}"),
+                s_mpk.median,
+                tr_mpk.bytes_total as f64,
+                flops * p as f64,
+                &m,
+            ),
+            measured_mpk,
         ));
     }
     let mut events = build_events;
@@ -709,7 +797,8 @@ fn cmd_profile(args: &Args) -> Result<()> {
         ("trace_events", Json::Num(events.len() as f64)),
         ("trace_file", Json::Str(trace_out.clone())),
     ]);
-    std::fs::write(&out, doc.to_string())?;
+    let doc = obs::baseline::stamp(doc, Some(&m));
+    std::fs::write(&out, doc.to_string() + "\n")?;
 
     if json {
         println!("{}", doc.to_string());
@@ -738,21 +827,58 @@ fn cmd_profile(args: &Args) -> Result<()> {
     }
     println!("  roofline (median of {} iters, model traffic from cachesim):", s_symm.iters);
     println!(
-        "    {:<10} {:>10} {:>10} {:>10} {:>10} {:>8}",
-        "kernel", "ms", "GB/s", "GF/s", "roof GF/s", "bw frac"
+        "    {:<10} {:>10} {:>10} {:>10} {:>10} {:>8} {:>10} {:>12} {:>7}",
+        "kernel", "ms", "GB/s", "GF/s", "roof GF/s", "bw frac", "model MB", "measured MB", "err%"
     );
     for r in &roofs {
+        // model vs measured side by side; denied hosts show the stable
+        // reason code in the measured column
+        let (meas, errp) = match (r.measured_bytes, r.model_err) {
+            (Some(b), Some(e)) => (format!("{:.2}", b / 1e6), format!("{:+.1}", e * 100.0)),
+            _ => (r.measured_reason.to_string(), "-".to_string()),
+        };
         println!(
-            "    {:<10} {:>10.3} {:>10.2} {:>10.2} {:>10.2} {:>8.2}",
+            "    {:<10} {:>10.3} {:>10.2} {:>10.2} {:>10.2} {:>8.2} {:>10.2} {:>12} {:>7}",
             r.kernel,
             r.seconds * 1e3,
             r.attained_bw / 1e9,
             r.attained_flops / 1e9,
             r.roof_load / 1e9,
-            r.bw_frac
+            r.bw_frac,
+            r.model_bytes / 1e6,
+            meas,
+            errp
         );
     }
     println!("  wrote {out} and {trace_out} ({} span events)", events.len());
+    Ok(())
+}
+
+/// Compare two bench artifacts: classify every metric under the
+/// direction/noise policies in [`race::obs::baseline`] and gate on hard
+/// regressions (the CI perf-history check).
+fn cmd_bench_diff(args: &Args) -> Result<()> {
+    use race::obs::baseline;
+    if args.positional.len() != 2 {
+        bail!("usage: race-cli bench-diff OLD.json NEW.json [--json] [--warn-only]");
+    }
+    let read = |path: &str| -> Result<Json> {
+        let body = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
+        Json::parse(&body).map_err(|e| anyhow::anyhow!("parsing {path}: {e}"))
+    };
+    let old = read(&args.positional[0])?;
+    let new = read(&args.positional[1])?;
+    let report = baseline::diff(&old, &new);
+    if args.has("json") {
+        println!("{}", report.to_json().to_string());
+    } else {
+        print!("{}", report.render_text());
+    }
+    let fails = report.count(baseline::Verdict::Fail);
+    if fails > 0 && !args.has("warn-only") {
+        bail!("bench-diff: {fails} hard regressions (rerun with --warn-only to downgrade)");
+    }
     Ok(())
 }
 

@@ -1,0 +1,897 @@
+//! Perf-baseline regression engine: machine fingerprints stamped into
+//! every `BENCH_*.json`, and a schema-tolerant differ that turns two
+//! bench artifacts into a classified regression report.
+//!
+//! Six PRs of `BENCH_*.json` emitters produced a perf *trajectory* that
+//! nothing ever compared — every asserted speedup was measured once and
+//! then unguarded. This module closes the loop:
+//!
+//! * [`fingerprint`] / [`write_bench`]: every bench document gains a
+//!   `fingerprint` object (host, CPU model, thread count, and the
+//!   [`Machine`] model's bandwidths when one is in play) so a diff
+//!   between runs on different machines *warns instead of lying*.
+//! * [`diff`]: walks any pair of bench documents without a per-family
+//!   schema — objects by key union, `cases`-style arrays matched by row
+//!   identity (`matrix`/`kernel`/`phase`/…), numeric leaves classified
+//!   by a per-metric policy ([`policy_for`]): direction (higher-better
+//!   throughput vs lower-better time/traffic vs structural-exact) and
+//!   noise tier (timing medians get 10 % warn / 25 % fail; deterministic
+//!   model metrics get 1 % / 5 %).
+//! * `race-cli bench-diff old.json new.json` renders the report and
+//!   gates CI (warn-only until a baseline history exists).
+//!
+//! The tolerance tiers assume the bench harness's median-of-N timings
+//! ([`crate::util::bench`]) — medians over a warmed target interval are
+//! stable to well under 10 % on an idle host, while single-shot numbers
+//! are not and should not be diffed.
+
+use crate::machine::Machine;
+use crate::util::json::Json;
+
+/// Which way a metric is allowed to move.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Direction {
+    /// Throughput-like: a drop is a regression (GF/s, vectors/s, cuts).
+    HigherBetter,
+    /// Cost-like: a rise is a regression (ms, seconds, bytes, sweeps).
+    LowerBetter,
+    /// Structural: any change means the runs are not comparable (rows,
+    /// nnz, steps, thread counts) — flagged, never hard-failed.
+    Exact,
+    /// Reported but never gated (ratios that legitimately move both
+    /// ways, e.g. `bw_frac`, `intensity`).
+    Info,
+}
+
+/// Per-metric diff policy: direction plus relative warn/fail tolerances.
+#[derive(Debug, Clone, Copy)]
+pub struct MetricPolicy {
+    /// Allowed direction of movement.
+    pub direction: Direction,
+    /// Relative change that earns a warning.
+    pub warn_rel: f64,
+    /// Relative change that is a hard regression.
+    pub fail_rel: f64,
+}
+
+/// Noise tier for wall-clock-derived metrics (bench medians).
+const NOISY: (f64, f64) = (0.10, 0.25);
+/// Noise tier for deterministic model metrics (cachesim bytes, sweep
+/// counts): these only move when the code meaningfully changes.
+const TIGHT: (f64, f64) = (0.01, 0.05);
+
+/// Classify a metric by its (lower-cased) leaf key. Schema-tolerant by
+/// construction: unknown keys are [`Direction::Info`] — reported, never
+/// gated — so new emitters join the trajectory without a registry edit.
+pub fn policy_for(key: &str) -> MetricPolicy {
+    let k = key.to_ascii_lowercase();
+    let mk = |direction, (warn_rel, fail_rel)| MetricPolicy { direction, warn_rel, fail_rel };
+    // structural identity: a change means different inputs, not a slower
+    // kernel — the diff flags the rows as incomparable
+    const EXACT: [&str; 18] = [
+        "nrows",
+        "nnz",
+        "nnz_upper",
+        "bw_rcm",
+        "nlevels",
+        "nblocks",
+        "nsteps",
+        "threads",
+        "power",
+        "p",
+        "batch",
+        "count",
+        "escapes",
+        "rows_escaped",
+        "total",
+        "index",
+        "tol",
+        "trace_events",
+    ];
+    if EXACT.contains(&k.as_str()) {
+        return mk(Direction::Exact, (0.0, f64::INFINITY));
+    }
+    // deterministic higher-better: traffic cuts and schedule efficiency
+    if k.starts_with("cut_") || k.starts_with("mean_cut") || k == "eta" || k == "feasible" {
+        return mk(Direction::HigherBetter, TIGHT);
+    }
+    // timing-derived higher-better: throughput medians
+    if k.ends_with("gfs")
+        || k.ends_with("gflops")
+        || k.ends_with("vectors_per_s")
+        || k.starts_with("speedup")
+        || k.starts_with("attained")
+    {
+        return mk(Direction::HigherBetter, NOISY);
+    }
+    // deterministic lower-better: modelled bytes, sweep/iteration counts
+    if k.contains("bytes")
+        || k.contains("traffic")
+        || k == "iterations"
+        || k == "inner_iterations"
+        || k.starts_with("matvecs")
+        || k == "precond_applies"
+        || k == "converged"
+        || k == "rel_residual"
+    {
+        return mk(Direction::LowerBetter, TIGHT);
+    }
+    // timing-derived lower-better: latency/runtime medians and the
+    // pool's imbalance/idleness measurements
+    if k.ends_with("ms")
+        || k.ends_with("_ns")
+        || k.contains("seconds")
+        || k.contains("ms_per")
+        || k.contains("latency")
+        || k.contains("imbalance")
+        || k == "idle_frac"
+        || k == "model_err"
+    {
+        return mk(Direction::LowerBetter, NOISY);
+    }
+    mk(Direction::Info, (f64::INFINITY, f64::INFINITY))
+}
+
+/// Outcome of one compared metric.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Verdict {
+    /// Moved in the good direction beyond the noise tolerance.
+    Improved,
+    /// Inside the noise tolerance (or an ungated Info metric).
+    Within,
+    /// Moved the wrong way past the warn threshold (or a structural /
+    /// cross-machine-downgraded change).
+    Warn,
+    /// Moved the wrong way past the fail threshold on comparable runs.
+    Fail,
+    /// Present only in the new document.
+    New,
+    /// Present only in the old document.
+    Removed,
+}
+
+impl Verdict {
+    /// Stable lower-case label (report/JSON rendering).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Verdict::Improved => "improved",
+            Verdict::Within => "within",
+            Verdict::Warn => "warn",
+            Verdict::Fail => "fail",
+            Verdict::New => "new",
+            Verdict::Removed => "removed",
+        }
+    }
+}
+
+/// One compared metric in a [`DiffReport`].
+#[derive(Debug, Clone)]
+pub struct MetricDiff {
+    /// Dotted path, array rows keyed by identity (`cases[hpcg].gfs`).
+    pub path: String,
+    /// Old value (numeric leaves only).
+    pub old: Option<f64>,
+    /// New value.
+    pub new: Option<f64>,
+    /// Signed relative change `(new - old) / |old|`.
+    pub rel: f64,
+    /// Classification.
+    pub verdict: Verdict,
+    /// Short machine-readable annotation (`"structural"`,
+    /// `"cross_machine_downgrade"`, `"boolean"`, `"type_changed"`, …).
+    pub note: &'static str,
+}
+
+/// The classified comparison of two bench documents.
+#[derive(Debug, Clone)]
+pub struct DiffReport {
+    /// Every compared metric, in document (sorted-key) order.
+    pub metrics: Vec<MetricDiff>,
+    /// True when the machine fingerprints differ (or one side has none):
+    /// hard fails are downgraded to warnings because the runs are not
+    /// comparable.
+    pub cross_machine: bool,
+    /// Human-readable fingerprint comparison note, when noteworthy.
+    pub fingerprint_note: Option<String>,
+}
+
+impl DiffReport {
+    /// Count of metrics with the given verdict.
+    pub fn count(&self, v: Verdict) -> usize {
+        self.metrics.iter().filter(|m| m.verdict == v).count()
+    }
+
+    /// True when no metric hard-failed (the CI gate).
+    pub fn gate_ok(&self) -> bool {
+        self.count(Verdict::Fail) == 0
+    }
+
+    /// JSON rendering (machine-readable report).
+    pub fn to_json(&self) -> Json {
+        let metrics: Vec<Json> = self
+            .metrics
+            .iter()
+            .map(|m| {
+                let mut pairs = vec![
+                    ("path", Json::Str(m.path.clone())),
+                    ("verdict", Json::Str(m.verdict.as_str().to_string())),
+                ];
+                if let Some(o) = m.old {
+                    pairs.push(("old", Json::Num(o)));
+                }
+                if let Some(n) = m.new {
+                    pairs.push(("new", Json::Num(n)));
+                }
+                if m.rel.is_finite() && m.rel != 0.0 {
+                    pairs.push(("rel", Json::Num(m.rel)));
+                }
+                if !m.note.is_empty() {
+                    pairs.push(("note", Json::Str(m.note.to_string())));
+                }
+                Json::obj(pairs)
+            })
+            .collect();
+        Json::obj(vec![(
+            "bench_diff",
+            Json::obj(vec![
+                ("improved", Json::Num(self.count(Verdict::Improved) as f64)),
+                ("within", Json::Num(self.count(Verdict::Within) as f64)),
+                ("warns", Json::Num(self.count(Verdict::Warn) as f64)),
+                ("fails", Json::Num(self.count(Verdict::Fail) as f64)),
+                ("added", Json::Num(self.count(Verdict::New) as f64)),
+                ("removed", Json::Num(self.count(Verdict::Removed) as f64)),
+                ("cross_machine", Json::Bool(self.cross_machine)),
+                (
+                    "fingerprint_note",
+                    match &self.fingerprint_note {
+                        Some(s) => Json::Str(s.clone()),
+                        None => Json::Null,
+                    },
+                ),
+                ("metrics", Json::Arr(metrics)),
+            ]),
+        )])
+    }
+
+    /// Plain-text report: changed metrics (worst first), then a summary
+    /// line. Unchanged/within metrics are elided from the listing.
+    pub fn render_text(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        if let Some(note) = &self.fingerprint_note {
+            let _ = writeln!(out, "fingerprint: {note}");
+        }
+        let order = [Verdict::Fail, Verdict::Warn, Verdict::Improved];
+        for v in order {
+            for m in self.metrics.iter().filter(|m| m.verdict == v) {
+                let delta = if m.rel.is_finite() {
+                    format!("{:+.1}%", m.rel * 100.0)
+                } else {
+                    "—".to_string()
+                };
+                let vals = match (m.old, m.new) {
+                    (Some(o), Some(n)) => format!("{o:.6} -> {n:.6}"),
+                    _ => "(non-numeric)".to_string(),
+                };
+                let note =
+                    if m.note.is_empty() { String::new() } else { format!("  [{}]", m.note) };
+                let _ =
+                    writeln!(out, "  {:<9} {}  {} ({}){}", v.as_str(), m.path, vals, delta, note);
+            }
+        }
+        let _ = writeln!(
+            out,
+            "bench-diff: {} improved, {} within noise, {} warnings, {} hard regressions, {} added, {} removed{}",
+            self.count(Verdict::Improved),
+            self.count(Verdict::Within),
+            self.count(Verdict::Warn),
+            self.count(Verdict::Fail),
+            self.count(Verdict::New),
+            self.count(Verdict::Removed),
+            if self.cross_machine { " (cross-machine: fails downgraded to warnings)" } else { "" },
+        );
+        out
+    }
+}
+
+/// Machine fingerprint stamped into every bench document: enough
+/// identity to tell whether two artifacts are comparable. `machine`
+/// contributes the bench's bandwidth model when one is in play.
+pub fn fingerprint(machine: Option<&Machine>) -> Json {
+    let mut pairs = vec![
+        ("host", Json::Str(hostname())),
+        ("cpu_model", Json::Str(cpu_model())),
+        (
+            "threads",
+            Json::Num(
+                std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1) as f64
+            ),
+        ),
+        ("hwc", Json::Str(super::hwc::probe().reason().to_string())),
+    ];
+    if let Some(m) = machine {
+        pairs.push(("machine", Json::Str(m.name.clone())));
+        pairs.push(("bw_load_gbs", Json::Num(m.bw_load / 1e9)));
+        pairs.push(("bw_copy_gbs", Json::Num(m.bw_copy / 1e9)));
+    }
+    Json::obj(pairs)
+}
+
+/// Best-effort hostname (no libc gethostname: procfs, then env).
+fn hostname() -> String {
+    std::fs::read_to_string("/proc/sys/kernel/hostname")
+        .map(|s| s.trim().to_string())
+        .ok()
+        .filter(|s| !s.is_empty())
+        .or_else(|| std::env::var("HOSTNAME").ok().filter(|s| !s.is_empty()))
+        .unwrap_or_else(|| "unknown".to_string())
+}
+
+/// Best-effort CPU model string from `/proc/cpuinfo`.
+fn cpu_model() -> String {
+    if let Ok(info) = std::fs::read_to_string("/proc/cpuinfo") {
+        for line in info.lines() {
+            if line.starts_with("model name") {
+                if let Some((_, v)) = line.split_once(':') {
+                    return v.trim().to_string();
+                }
+            }
+        }
+    }
+    std::env::consts::ARCH.to_string()
+}
+
+/// Add the machine fingerprint to a bench document (no-op if the caller
+/// already stamped one).
+pub fn stamp(doc: Json, machine: Option<&Machine>) -> Json {
+    match doc {
+        Json::Obj(mut m) => {
+            m.entry("fingerprint".to_string()).or_insert_with(|| fingerprint(machine));
+            Json::Obj(m)
+        }
+        other => other,
+    }
+}
+
+/// Stamp `doc` with a fingerprint and write it to `RACE_BENCH_OUT` (or
+/// `default_path`), newline-terminated like every bench emitter. Returns
+/// the path written.
+pub fn write_bench(
+    default_path: &str,
+    doc: Json,
+    machine: Option<&Machine>,
+) -> std::io::Result<String> {
+    let path = std::env::var("RACE_BENCH_OUT").unwrap_or_else(|_| default_path.to_string());
+    let doc = stamp(doc, machine);
+    std::fs::write(&path, doc.to_string() + "\n")?;
+    Ok(path)
+}
+
+/// Keys that identify a row inside a `cases`-style array, in precedence
+/// order. Rows are matched across documents by the joined values of the
+/// identity keys they carry, so reordering or inserting cases does not
+/// misalign the comparison.
+const ID_KEYS: [&str; 8] = ["matrix", "kernel", "phase", "method", "name", "power", "p", "batch"];
+
+/// Identity of an array row (`None` when the row carries no ID keys).
+fn row_identity(row: &Json) -> Option<String> {
+    let mut parts = Vec::new();
+    for k in ID_KEYS {
+        if let Some(v) = row.get(k) {
+            match v {
+                Json::Str(s) => parts.push(s.clone()),
+                Json::Num(n) => parts.push(format!("{k}={n}")),
+                _ => {}
+            }
+        }
+    }
+    if parts.is_empty() {
+        None
+    } else {
+        Some(parts.join("/"))
+    }
+}
+
+/// Compare two bench documents. Fingerprints are compared first (and
+/// excluded from the metric walk): mismatched host/CPU/threads set
+/// `cross_machine`, which downgrades every hard fail to a warning.
+pub fn diff(old: &Json, new: &Json) -> DiffReport {
+    let (cross_machine, fingerprint_note) =
+        compare_fingerprints(old.get("fingerprint"), new.get("fingerprint"));
+    let mut metrics = Vec::new();
+    walk("", old, new, cross_machine, &mut metrics);
+    DiffReport { metrics, cross_machine, fingerprint_note }
+}
+
+/// Fingerprint comparison: `(cross_machine, note)`.
+fn compare_fingerprints(old: Option<&Json>, new: Option<&Json>) -> (bool, Option<String>) {
+    let (o, n) = match (old, new) {
+        (Some(o), Some(n)) => (o, n),
+        (None, None) => {
+            let msg = "both artifacts lack a fingerprint; \
+                       treating as cross-machine (fails downgraded)";
+            return (true, Some(msg.to_string()));
+        }
+        _ => {
+            let msg = "one artifact lacks a fingerprint; \
+                       treating as cross-machine (fails downgraded)";
+            return (true, Some(msg.to_string()));
+        }
+    };
+    let mut mismatches = Vec::new();
+    for key in ["host", "cpu_model", "threads", "machine"] {
+        let (a, b) = (o.get(key), n.get(key));
+        if a != b {
+            mismatches.push(format!(
+                "{key}: {} vs {}",
+                a.map(Json::to_string).unwrap_or_else(|| "absent".to_string()),
+                b.map(Json::to_string).unwrap_or_else(|| "absent".to_string()),
+            ));
+        }
+    }
+    if mismatches.is_empty() {
+        (false, None)
+    } else {
+        let msg = format!(
+            "runs are from different machines ({}); fails downgraded to warnings",
+            mismatches.join(", ")
+        );
+        (true, Some(msg))
+    }
+}
+
+fn join_path(prefix: &str, key: &str) -> String {
+    if prefix.is_empty() {
+        key.to_string()
+    } else {
+        format!("{prefix}.{key}")
+    }
+}
+
+/// Recursive schema-tolerant walk over both documents.
+fn walk(path: &str, old: &Json, new: &Json, cross: bool, out: &mut Vec<MetricDiff>) {
+    match (old, new) {
+        (Json::Obj(om), Json::Obj(nm)) => {
+            let keys: std::collections::BTreeSet<&String> = om.keys().chain(nm.keys()).collect();
+            for key in keys {
+                if path.is_empty() && key == "fingerprint" {
+                    continue;
+                }
+                let p = join_path(path, key);
+                match (om.get(key.as_str()), nm.get(key.as_str())) {
+                    (Some(o), Some(n)) => walk(&p, o, n, cross, out),
+                    (Some(_), None) => out.push(MetricDiff {
+                        path: p,
+                        old: None,
+                        new: None,
+                        rel: 0.0,
+                        verdict: Verdict::Removed,
+                        note: "",
+                    }),
+                    (None, Some(_)) => out.push(MetricDiff {
+                        path: p,
+                        old: None,
+                        new: None,
+                        rel: 0.0,
+                        verdict: Verdict::New,
+                        note: "",
+                    }),
+                    (None, None) => unreachable!(),
+                }
+            }
+        }
+        (Json::Arr(oa), Json::Arr(na)) => walk_arrays(path, oa, na, cross, out),
+        (Json::Num(o), Json::Num(n)) => {
+            let leaf = path.rsplit('.').next().unwrap_or(path);
+            let leaf = leaf.split('[').next().unwrap_or(leaf);
+            out.push(classify(path, leaf, *o, *n, cross));
+        }
+        (Json::Bool(o), Json::Bool(n)) => {
+            if o != n {
+                let leaf = path.rsplit('.').next().unwrap_or(path).to_ascii_lowercase();
+                let guarded = leaf.starts_with("converged") || leaf.starts_with("feasible");
+                let verdict = match (guarded, *o, *n) {
+                    (true, true, false) if !cross => Verdict::Fail,
+                    (true, true, false) => Verdict::Warn,
+                    (true, false, true) => Verdict::Improved,
+                    _ => Verdict::Warn,
+                };
+                let note = if guarded && *o && !*n && cross {
+                    "cross_machine_downgrade"
+                } else {
+                    "boolean"
+                };
+                out.push(MetricDiff {
+                    path: path.to_string(),
+                    old: Some(if *o { 1.0 } else { 0.0 }),
+                    new: Some(if *n { 1.0 } else { 0.0 }),
+                    rel: 0.0,
+                    verdict,
+                    note,
+                });
+            }
+        }
+        (Json::Str(o), Json::Str(n)) => {
+            if o != n {
+                out.push(MetricDiff {
+                    path: path.to_string(),
+                    old: None,
+                    new: None,
+                    rel: 0.0,
+                    verdict: Verdict::Warn,
+                    note: "string_changed",
+                });
+            }
+        }
+        (Json::Null, Json::Null) => {}
+        _ => out.push(MetricDiff {
+            path: path.to_string(),
+            old: old.as_f64(),
+            new: new.as_f64(),
+            rel: 0.0,
+            verdict: Verdict::Warn,
+            note: "type_changed",
+        }),
+    }
+}
+
+/// Array comparison: identity-keyed when rows carry ID keys, positional
+/// otherwise. Rows present on one side only are recorded as New/Removed.
+fn walk_arrays(path: &str, oa: &[Json], na: &[Json], cross: bool, out: &mut Vec<MetricDiff>) {
+    let keyed = oa.first().map(row_identity).unwrap_or(None).is_some()
+        || na.first().map(row_identity).unwrap_or(None).is_some();
+    if keyed {
+        let mut new_rows: Vec<(String, &Json)> = Vec::new();
+        for row in na {
+            if let Some(id) = row_identity(row) {
+                new_rows.push((id, row));
+            }
+        }
+        let mut matched = vec![false; new_rows.len()];
+        for row in oa {
+            let id = match row_identity(row) {
+                Some(id) => id,
+                None => continue,
+            };
+            let p = format!("{path}[{id}]");
+            match new_rows.iter().position(|(nid, _)| *nid == id) {
+                Some(i) => {
+                    matched[i] = true;
+                    walk(&p, row, new_rows[i].1, cross, out);
+                }
+                None => out.push(MetricDiff {
+                    path: p,
+                    old: None,
+                    new: None,
+                    rel: 0.0,
+                    verdict: Verdict::Removed,
+                    note: "",
+                }),
+            }
+        }
+        for (i, (id, _)) in new_rows.iter().enumerate() {
+            if !matched[i] {
+                out.push(MetricDiff {
+                    path: format!("{path}[{id}]"),
+                    old: None,
+                    new: None,
+                    rel: 0.0,
+                    verdict: Verdict::New,
+                    note: "",
+                });
+            }
+        }
+    } else {
+        for (i, (o, n)) in oa.iter().zip(na.iter()).enumerate() {
+            walk(&format!("{path}[{i}]"), o, n, cross, out);
+        }
+        for i in na.len()..oa.len() {
+            out.push(MetricDiff {
+                path: format!("{path}[{i}]"),
+                old: None,
+                new: None,
+                rel: 0.0,
+                verdict: Verdict::Removed,
+                note: "",
+            });
+        }
+        for i in oa.len()..na.len() {
+            out.push(MetricDiff {
+                path: format!("{path}[{i}]"),
+                old: None,
+                new: None,
+                rel: 0.0,
+                verdict: Verdict::New,
+                note: "",
+            });
+        }
+    }
+}
+
+/// Classify one numeric metric under its [`policy_for`] policy.
+fn classify(path: &str, leaf: &str, old: f64, new: f64, cross: bool) -> MetricDiff {
+    let policy = policy_for(leaf);
+    let mut note = "";
+    let rel = if old != 0.0 {
+        (new - old) / old.abs()
+    } else if new == 0.0 {
+        0.0
+    } else {
+        f64::INFINITY
+    };
+    let verdict = match policy.direction {
+        Direction::Exact => {
+            if old == new {
+                Verdict::Within
+            } else {
+                note = "structural";
+                Verdict::Warn
+            }
+        }
+        Direction::Info => Verdict::Within,
+        dir => {
+            // signed regression magnitude in the metric's bad direction
+            let regression = match dir {
+                Direction::HigherBetter => -rel,
+                _ => rel,
+            };
+            if !regression.is_finite() {
+                note = "from_zero";
+                Verdict::Warn
+            } else if regression > policy.fail_rel {
+                if cross {
+                    note = "cross_machine_downgrade";
+                    Verdict::Warn
+                } else {
+                    Verdict::Fail
+                }
+            } else if regression > policy.warn_rel {
+                Verdict::Warn
+            } else if -regression > policy.warn_rel {
+                Verdict::Improved
+            } else {
+                Verdict::Within
+            }
+        }
+    };
+    MetricDiff { path: path.to_string(), old: Some(old), new: Some(new), rel, verdict, note }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn doc(fields: Vec<(&str, Json)>) -> Json {
+        let mut pairs = vec![
+            ("bench", Json::Str("t".into())),
+            (
+                "fingerprint",
+                Json::obj(vec![
+                    ("host", Json::Str("ci".into())),
+                    ("cpu_model", Json::Str("model-x".into())),
+                    ("threads", Json::Num(8.0)),
+                ]),
+            ),
+        ];
+        pairs.extend(fields);
+        Json::obj(pairs)
+    }
+
+    fn case(fields: Vec<(&str, Json)>) -> Json {
+        Json::obj(fields)
+    }
+
+    fn verdict_of<'a>(r: &'a DiffReport, path: &str) -> &'a MetricDiff {
+        r.metrics
+            .iter()
+            .find(|m| m.path == path)
+            .unwrap_or_else(|| panic!("no metric {path} in {:?}", r.metrics))
+    }
+
+    #[test]
+    fn policies_pin_directions_and_tiers() {
+        assert_eq!(policy_for("gfs").direction, Direction::HigherBetter);
+        assert_eq!(policy_for("pack_f64_gfs").warn_rel, 0.10);
+        assert_eq!(policy_for("median_ms").direction, Direction::LowerBetter);
+        assert_eq!(policy_for("model_bytes").direction, Direction::LowerBetter);
+        assert_eq!(policy_for("model_bytes").warn_rel, 0.01);
+        assert_eq!(policy_for("traffic_ratio").fail_rel, 0.05);
+        assert_eq!(policy_for("cut_f32").direction, Direction::HigherBetter);
+        assert_eq!(policy_for("cut_f32").warn_rel, 0.01);
+        assert_eq!(policy_for("nnz").direction, Direction::Exact);
+        assert_eq!(policy_for("threads").direction, Direction::Exact);
+        assert_eq!(policy_for("bw_frac").direction, Direction::Info);
+        assert_eq!(policy_for("iterations").direction, Direction::LowerBetter);
+        assert_eq!(policy_for("speedup_vs_single").direction, Direction::HigherBetter);
+        // unknown keys are reported but never gated
+        assert_eq!(policy_for("some_future_metric").direction, Direction::Info);
+    }
+
+    #[test]
+    fn tiers_classify_improvement_noise_warn_fail() {
+        let old = doc(vec![(
+            "cases",
+            Json::Arr(vec![case(vec![
+                ("matrix", Json::Str("m1".into())),
+                ("gfs", Json::Num(10.0)),
+                ("median_ms", Json::Num(100.0)),
+                ("model_bytes", Json::Num(1000.0)),
+            ])]),
+        )]);
+        let new = doc(vec![(
+            "cases",
+            Json::Arr(vec![case(vec![
+                ("matrix", Json::Str("m1".into())),
+                ("gfs", Json::Num(10.5)),        // +5% -> within timing noise
+                ("median_ms", Json::Num(115.0)), // +15% -> warn tier
+                ("model_bytes", Json::Num(1080.0)), // +8% deterministic -> fail
+            ])]),
+        )]);
+        let r = diff(&old, &new);
+        assert!(!r.cross_machine);
+        assert_eq!(verdict_of(&r, "cases[m1].gfs").verdict, Verdict::Within);
+        assert_eq!(verdict_of(&r, "cases[m1].median_ms").verdict, Verdict::Warn);
+        assert_eq!(verdict_of(&r, "cases[m1].model_bytes").verdict, Verdict::Fail);
+        assert!(!r.gate_ok());
+        // and a clear improvement is labeled as such
+        let better = doc(vec![(
+            "cases",
+            Json::Arr(vec![case(vec![
+                ("matrix", Json::Str("m1".into())),
+                ("gfs", Json::Num(13.0)), // +30%
+                ("median_ms", Json::Num(70.0)),
+                ("model_bytes", Json::Num(1000.0)),
+            ])]),
+        )]);
+        let r = diff(&old, &better);
+        assert_eq!(verdict_of(&r, "cases[m1].gfs").verdict, Verdict::Improved);
+        assert_eq!(verdict_of(&r, "cases[m1].median_ms").verdict, Verdict::Improved);
+        assert_eq!(verdict_of(&r, "cases[m1].model_bytes").verdict, Verdict::Within);
+        assert!(r.gate_ok());
+    }
+
+    #[test]
+    fn cross_machine_fingerprint_downgrades_fails_to_warns() {
+        let old = doc(vec![("gfs", Json::Num(10.0))]);
+        let mut new = doc(vec![("gfs", Json::Num(5.0))]); // -50%: a hard fail
+        // same machine: hard regression
+        let r = diff(&old, &new);
+        assert_eq!(verdict_of(&r, "gfs").verdict, Verdict::Fail);
+        // different host: downgraded with an explanation
+        if let Json::Obj(m) = &mut new {
+            m.insert(
+                "fingerprint".into(),
+                Json::obj(vec![
+                    ("host", Json::Str("laptop".into())),
+                    ("cpu_model", Json::Str("model-y".into())),
+                    ("threads", Json::Num(4.0)),
+                ]),
+            );
+        }
+        let r = diff(&old, &new);
+        assert!(r.cross_machine);
+        assert!(r.fingerprint_note.as_deref().unwrap().contains("different machines"));
+        let m = verdict_of(&r, "gfs");
+        assert_eq!(m.verdict, Verdict::Warn);
+        assert_eq!(m.note, "cross_machine_downgrade");
+        assert!(r.gate_ok());
+    }
+
+    #[test]
+    fn missing_fingerprint_is_treated_as_cross_machine() {
+        let old = Json::obj(vec![("gfs", Json::Num(10.0))]);
+        let new = Json::obj(vec![("gfs", Json::Num(5.0))]);
+        let r = diff(&old, &new);
+        assert!(r.cross_machine);
+        assert!(r.fingerprint_note.is_some());
+        assert_eq!(verdict_of(&r, "gfs").verdict, Verdict::Warn);
+    }
+
+    #[test]
+    fn structural_changes_warn_and_rows_match_by_identity() {
+        let old = doc(vec![(
+            "cases",
+            Json::Arr(vec![
+                case(vec![("matrix", Json::Str("a".into())), ("nnz", Json::Num(100.0))]),
+                case(vec![("matrix", Json::Str("b".into())), ("nnz", Json::Num(200.0))]),
+            ]),
+        )]);
+        // rows reordered + one replaced: identity keying must pair a-with-a
+        let new = doc(vec![(
+            "cases",
+            Json::Arr(vec![
+                case(vec![("matrix", Json::Str("c".into())), ("nnz", Json::Num(300.0))]),
+                case(vec![("matrix", Json::Str("a".into())), ("nnz", Json::Num(101.0))]),
+            ]),
+        )]);
+        let r = diff(&old, &new);
+        let m = verdict_of(&r, "cases[a].nnz");
+        assert_eq!(m.verdict, Verdict::Warn);
+        assert_eq!(m.note, "structural");
+        assert_eq!(verdict_of(&r, "cases[b]").verdict, Verdict::Removed);
+        assert_eq!(verdict_of(&r, "cases[c]").verdict, Verdict::New);
+        assert!(r.gate_ok(), "structural changes warn, never hard-fail");
+    }
+
+    #[test]
+    fn boolean_convergence_must_not_regress() {
+        let old = doc(vec![("converged", Json::Bool(true)), ("extra", Json::Bool(false))]);
+        let new = doc(vec![("converged", Json::Bool(false)), ("extra", Json::Bool(true))]);
+        let r = diff(&old, &new);
+        assert_eq!(verdict_of(&r, "converged").verdict, Verdict::Fail);
+        // un-guarded booleans only warn
+        assert_eq!(verdict_of(&r, "extra").verdict, Verdict::Warn);
+        let back = diff(&new, &old);
+        assert_eq!(verdict_of(&back, "converged").verdict, Verdict::Improved);
+    }
+
+    #[test]
+    fn report_renders_text_and_json() {
+        let old = doc(vec![("gfs", Json::Num(10.0)), ("nrows", Json::Num(5.0))]);
+        let new = doc(vec![("gfs", Json::Num(7.0)), ("nrows", Json::Num(5.0))]);
+        let r = diff(&old, &new);
+        let text = r.render_text();
+        assert!(text.contains("fail"), "{text}");
+        assert!(text.contains("gfs"), "{text}");
+        assert!(text.contains("1 hard regressions"), "{text}");
+        let j = r.to_json();
+        let bd = j.get("bench_diff").unwrap();
+        assert_eq!(bd.get("fails").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(bd.get("cross_machine"), Some(&Json::Bool(false)));
+        // round-trips through the hand-rolled serializer
+        assert!(Json::parse(&j.to_string()).is_ok());
+    }
+
+    #[test]
+    fn fingerprint_has_identity_and_machine_fields() {
+        let fp = fingerprint(None);
+        assert!(fp.get("host").is_some());
+        assert!(fp.get("cpu_model").is_some());
+        assert!(fp.get("threads").and_then(Json::as_f64).unwrap() >= 1.0);
+        assert!(fp.get("hwc").is_some());
+        let m = crate::machine::ivb();
+        let fp = fingerprint(Some(&m));
+        assert_eq!(fp.get("machine"), Some(&Json::Str("ivb".into())));
+        assert_eq!(fp.get("bw_load_gbs").and_then(Json::as_f64), Some(47.0));
+    }
+
+    #[test]
+    fn stamp_is_idempotent_and_self_diff_is_clean() {
+        let d = stamp(
+            Json::obj(vec![("bench", Json::Str("x".into())), ("gfs", Json::Num(1.0))]),
+            None,
+        );
+        assert!(d.get("fingerprint").is_some());
+        // stamping again keeps the existing fingerprint
+        let d2 = stamp(d.clone(), Some(&crate::machine::skx()));
+        assert_eq!(d, d2);
+        // a document diffed against itself: same machine, no changes
+        let r = diff(&d, &d);
+        assert!(!r.cross_machine);
+        assert!(r.gate_ok());
+        assert_eq!(r.count(Verdict::Warn), 0);
+        assert_eq!(r.count(Verdict::Improved), 0);
+    }
+
+    #[test]
+    fn write_bench_stamps_and_writes() {
+        let dir = std::env::temp_dir().join("race_baseline_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_t.json");
+        // only exercise the explicit-path branch when CI isn't overriding
+        if std::env::var("RACE_BENCH_OUT").is_err() {
+            let doc = Json::obj(vec![("bench", Json::Str("t".into())), ("v", Json::Num(1.0))]);
+            let written =
+                write_bench(path.to_str().unwrap(), doc, Some(&crate::machine::ivb())).unwrap();
+            let body = std::fs::read_to_string(&written).unwrap();
+            assert!(body.ends_with('\n'));
+            let parsed = Json::parse(&body).unwrap();
+            assert!(parsed.get("fingerprint").unwrap().get("host").is_some());
+            assert_eq!(
+                parsed.get("fingerprint").unwrap().get("machine"),
+                Some(&Json::Str("ivb".into()))
+            );
+            std::fs::remove_file(&written).ok();
+        }
+    }
+}

@@ -1,0 +1,710 @@
+//! Measured hardware counters via raw `perf_event_open` (std-only).
+//!
+//! The paper validates its traffic model against *measured* data volume
+//! from hardware performance counters (LIKWID `MEM`/`CACHE` groups). This
+//! module is the repo's equivalent instrument: counter groups for cycles,
+//! instructions and last-level-cache references/misses opened through the
+//! raw Linux `perf_event_open` syscall (no libc crate — std already links
+//! libc, so the symbols are declared here directly), plus optional IMC
+//! uncore (DRAM CAS) counters discovered from sysfs. Roofline rows
+//! ([`super::roofline`]) carry the resulting `measured_bytes` next to the
+//! cachesim `model_bytes`, which is exactly the comparison behind the
+//! paper's outlier analysis.
+//!
+//! # Graceful degradation
+//!
+//! Hardware counters are a privileged, host-dependent facility: the
+//! syscall may be absent (seccomp → `ENOSYS`/`EPERM`), restricted
+//! (`/proc/sys/kernel/perf_event_paranoid`), or the PMU unknown
+//! (VMs/containers). Every entry point degrades to
+//! [`Capability::Unavailable`] with a **stable reason code** (one of
+//! [`REASONS`]) — never an error, never a panic — so `--hwc` runs on a
+//! denied host produce the same rows as an ordinary run, just with
+//! `measured: unavailable`. Setting `RACE_HWC=0` forces the degraded path
+//! deterministically (the CI `hwc-degraded` job and the tests use this).
+//!
+//! # Scoping
+//!
+//! [`HwcGroup`] owns the file descriptors; counters are opened
+//! free-running and read as running totals ([`HwcGroup::sample`]), so a
+//! measurement is a delta between two samples — [`HwcGroup::span`]
+//! packages that as an RAII [`CounterSpan`] mirroring the PR-6 recorder's
+//! span guards. Per-thread groups (one per pool worker, lazily opened
+//! through [`thread_sample`]) count only their own thread; a
+//! [`Scope::Process`]-opened group additionally counts threads spawned
+//! *after* it (inherit), which is what the serve process gauges use.
+
+use std::sync::OnceLock;
+
+/// Stable degradation reason: `RACE_HWC=0` in the environment.
+pub const REASON_DISABLED: &str = "disabled_by_env";
+/// Stable degradation reason: not Linux on x86_64/aarch64.
+pub const REASON_UNSUPPORTED: &str = "unsupported_platform";
+/// Stable degradation reason: the syscall is not available (seccomp or a
+/// kernel without perf events).
+pub const REASON_ENOSYS: &str = "enosys";
+/// Stable degradation reason: access denied and `perf_event_paranoid`
+/// restricts unprivileged use (>= 2 without CAP_PERFMON).
+pub const REASON_PARANOID: &str = "perf_event_paranoid";
+/// Stable degradation reason: access denied for another reason (LSM,
+/// container policy).
+pub const REASON_EACCES: &str = "eacces";
+/// Stable degradation reason: the PMU or event is unknown to this kernel
+/// (common in VMs).
+pub const REASON_NO_PMU: &str = "no_pmu";
+/// Stable degradation reason: `perf_event_open` failed with an errno not
+/// covered by a more specific code.
+pub const REASON_OPEN_FAILED: &str = "open_failed";
+
+/// The full reason-code catalogue (docs/OBSERVABILITY.md degradation
+/// matrix); every [`Capability::Unavailable`] carries one of these.
+pub const REASONS: [&str; 7] = [
+    REASON_DISABLED,
+    REASON_UNSUPPORTED,
+    REASON_ENOSYS,
+    REASON_PARANOID,
+    REASON_EACCES,
+    REASON_NO_PMU,
+    REASON_OPEN_FAILED,
+];
+
+/// Can this process open hardware counters?
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Capability {
+    /// `perf_event_open` works; counter groups can be attached.
+    Available,
+    /// Counters cannot be opened; the payload is a stable reason code
+    /// from [`REASONS`].
+    Unavailable(&'static str),
+}
+
+impl Capability {
+    /// True when counters can be opened.
+    pub fn is_available(&self) -> bool {
+        matches!(self, Capability::Available)
+    }
+
+    /// The reason code, or `"ok"` when available.
+    pub fn reason(&self) -> &'static str {
+        match self {
+            Capability::Available => "ok",
+            Capability::Unavailable(r) => r,
+        }
+    }
+}
+
+/// Map a failed `perf_event_open` errno (plus the observed
+/// `perf_event_paranoid` value, when readable) to a stable reason code.
+/// Pure — the degraded-environment tests pin this table directly.
+pub fn reason_for_errno(errno: i32, paranoid: Option<i64>) -> &'static str {
+    const ENOENT: i32 = 2;
+    const EACCES: i32 = 13;
+    const ENODEV: i32 = 19;
+    const EINVAL: i32 = 22;
+    const ENOSYS: i32 = 38;
+    const EOPNOTSUPP: i32 = 95;
+    const EPERM: i32 = 1;
+    match errno {
+        ENOSYS => REASON_ENOSYS,
+        EPERM | EACCES => match paranoid {
+            Some(p) if p >= 2 => REASON_PARANOID,
+            _ => REASON_EACCES,
+        },
+        ENOENT | ENODEV | EINVAL | EOPNOTSUPP => REASON_NO_PMU,
+        _ => REASON_OPEN_FAILED,
+    }
+}
+
+/// `/proc/sys/kernel/perf_event_paranoid`, when readable.
+pub fn paranoid_level() -> Option<i64> {
+    std::fs::read_to_string("/proc/sys/kernel/perf_event_paranoid")
+        .ok()
+        .and_then(|s| s.trim().parse().ok())
+}
+
+/// Is hardware-counter collection force-disabled by `RACE_HWC=0`?
+fn env_disabled() -> bool {
+    matches!(std::env::var("RACE_HWC"), Ok(v) if v == "0")
+}
+
+/// Capability probe: tries to open (and immediately closes) one cycles
+/// counter on the calling thread. The syscall outcome is cached for the
+/// process; the `RACE_HWC=0` override is honored on every call so the
+/// degraded path is deterministically testable.
+pub fn probe() -> Capability {
+    if env_disabled() {
+        return Capability::Unavailable(REASON_DISABLED);
+    }
+    static PROBE: OnceLock<Capability> = OnceLock::new();
+    *PROBE.get_or_init(|| match sys::open_counter(sys::EV_CYCLES, sys::Scope::Thread) {
+        Ok(fd) => {
+            sys::close_fd(fd);
+            Capability::Available
+        }
+        Err(errno) => Capability::Unavailable(reason_for_errno(errno, paranoid_level())),
+    })
+}
+
+/// Attachment scope of a counter group.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scope {
+    /// Count the opening thread only (pool workers).
+    Thread,
+    /// Count the opening thread *and* every thread it spawns afterwards
+    /// (perf inherit) — the serve process gauges open before the worker
+    /// pool so the whole service is covered.
+    Process,
+}
+
+/// One point-in-time reading of a counter group (running totals for
+/// [`HwcGroup::sample`], deltas for [`CounterSpan::stop`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct HwcSample {
+    /// Core cycles (unhalted, user space).
+    pub cycles: u64,
+    /// Retired instructions, when the PMU exposes them.
+    pub instructions: Option<u64>,
+    /// Last-level cache references, when available.
+    pub cache_refs: Option<u64>,
+    /// Last-level cache misses, when available.
+    pub cache_misses: Option<u64>,
+}
+
+impl HwcSample {
+    /// `self - earlier`, per counter (saturating; a counter missing on
+    /// either side is missing in the delta).
+    pub fn delta(&self, earlier: &HwcSample) -> HwcSample {
+        let sub = |a: Option<u64>, b: Option<u64>| match (a, b) {
+            (Some(x), Some(y)) => Some(x.saturating_sub(y)),
+            _ => None,
+        };
+        HwcSample {
+            cycles: self.cycles.saturating_sub(earlier.cycles),
+            instructions: sub(self.instructions, earlier.instructions),
+            cache_refs: sub(self.cache_refs, earlier.cache_refs),
+            cache_misses: sub(self.cache_misses, earlier.cache_misses),
+        }
+    }
+
+    /// Main-memory traffic estimate from LLC misses: one cache line per
+    /// miss. A lower bound — write-allocate/eviction traffic and
+    /// prefetched lines that IMC counters would see are not included —
+    /// but measured, not modelled.
+    pub fn dram_bytes_estimate(&self, line: usize) -> Option<f64> {
+        self.cache_misses.map(|m| m as f64 * line as f64)
+    }
+
+    /// Instructions per cycle, when both counters are live.
+    pub fn ipc(&self) -> Option<f64> {
+        match (self.instructions, self.cycles) {
+            (Some(i), c) if c > 0 => Some(i as f64 / c as f64),
+            _ => None,
+        }
+    }
+}
+
+/// An open group of hardware counters (cycles + best-effort
+/// instructions / LLC refs / LLC misses). Dropping the group closes the
+/// descriptors.
+pub struct HwcGroup {
+    cycles: sys::Counter,
+    instructions: Option<sys::Counter>,
+    cache_refs: Option<sys::Counter>,
+    cache_misses: Option<sys::Counter>,
+}
+
+impl HwcGroup {
+    /// Open a counter group for `scope`. The cycles counter must open
+    /// (its failure is the group's reason code); the companion counters
+    /// are best-effort — a PMU without an LLC event yields a group whose
+    /// samples simply carry `None` there.
+    pub fn open(scope: Scope) -> Result<HwcGroup, &'static str> {
+        if env_disabled() {
+            return Err(REASON_DISABLED);
+        }
+        if let Capability::Unavailable(r) = probe() {
+            return Err(r);
+        }
+        let cycles = sys::open_counter(sys::EV_CYCLES, scope)
+            .map(sys::Counter::new)
+            .map_err(|e| reason_for_errno(e, paranoid_level()))?;
+        let best = |cfg: (u32, u64)| sys::open_counter(cfg, scope).map(sys::Counter::new).ok();
+        Ok(HwcGroup {
+            cycles,
+            instructions: best(sys::EV_INSTRUCTIONS),
+            cache_refs: best(sys::EV_CACHE_REFS),
+            cache_misses: best(sys::EV_CACHE_MISSES),
+        })
+    }
+
+    /// Current running totals since the group was opened.
+    pub fn sample(&self) -> HwcSample {
+        HwcSample {
+            cycles: self.cycles.read().unwrap_or(0),
+            instructions: self.instructions.as_ref().and_then(sys::Counter::read),
+            cache_refs: self.cache_refs.as_ref().and_then(sys::Counter::read),
+            cache_misses: self.cache_misses.as_ref().and_then(sys::Counter::read),
+        }
+    }
+
+    /// Open an RAII measurement span: [`CounterSpan::stop`] returns the
+    /// counter deltas accumulated since this call.
+    pub fn span(&self) -> CounterSpan<'_> {
+        CounterSpan { group: self, start: self.sample() }
+    }
+}
+
+/// RAII scope over a [`HwcGroup`]: captures the counters at construction,
+/// [`CounterSpan::stop`] returns the delta. Dropping without `stop`
+/// simply discards the measurement (counters are free-running) — the
+/// same inert-guard contract as the recorder's [`super::Span`].
+pub struct CounterSpan<'a> {
+    group: &'a HwcGroup,
+    start: HwcSample,
+}
+
+impl CounterSpan<'_> {
+    /// Close the span and return the per-counter deltas.
+    pub fn stop(self) -> HwcSample {
+        self.group.sample().delta(&self.start)
+    }
+}
+
+thread_local! {
+    /// Lazily opened per-thread counter group (pool workers). `Err` is
+    /// remembered so a denied host pays the probe exactly once per
+    /// thread.
+    static THREAD_GROUP: std::cell::OnceCell<Result<HwcGroup, &'static str>> =
+        const { std::cell::OnceCell::new() };
+}
+
+/// Running counter totals of the calling thread's lazily opened group,
+/// or `None` when counters are unavailable. Pool workers call this at
+/// step-program start/end; the delta is the worker's measured cycles.
+pub fn thread_sample() -> Option<HwcSample> {
+    THREAD_GROUP.with(|g| {
+        g.get_or_init(|| HwcGroup::open(Scope::Thread)).as_ref().ok().map(HwcGroup::sample)
+    })
+}
+
+/// Run `f` under the calling thread's counter group and return its result
+/// plus the counter deltas (`None` on a denied host — `f` still runs).
+pub fn measure<R>(f: impl FnOnce() -> R) -> (R, Option<HwcSample>) {
+    let start = thread_sample();
+    let r = f();
+    let end = thread_sample();
+    let d = match (start, end) {
+        (Some(a), Some(b)) => Some(b.delta(&a)),
+        _ => None,
+    };
+    (r, d)
+}
+
+/// Parse a sysfs PMU event spec (`"event=0x04,umask=0x03"`) into a raw
+/// `perf_event_attr.config` value. Pure — unit-tested without a PMU.
+/// Unknown terms are ignored; missing `event=` yields `None`.
+pub fn parse_event_config(spec: &str) -> Option<u64> {
+    let mut event: Option<u64> = None;
+    let mut umask: u64 = 0;
+    for term in spec.trim().split(',') {
+        let (key, val) = term.split_once('=')?;
+        let v = parse_sysfs_u64(val)?;
+        match key.trim() {
+            "event" => event = Some(v),
+            "umask" => umask = v,
+            _ => {}
+        }
+    }
+    event.map(|e| e | (umask << 8))
+}
+
+/// Parse a sysfs numeric literal (`"18"`, `"0x04"`).
+fn parse_sysfs_u64(s: &str) -> Option<u64> {
+    let s = s.trim();
+    match s.strip_prefix("0x") {
+        Some(hex) => u64::from_str_radix(hex, 16).ok(),
+        None => s.parse().ok(),
+    }
+}
+
+/// System-wide IMC (integrated memory controller) uncore counters: DRAM
+/// CAS read/write counts discovered from
+/// `/sys/bus/event_source/devices/uncore_imc*`. Each CAS moves one cache
+/// line, so `counts × 64` is true DRAM traffic — the measurement LIKWID's
+/// `MEM` group reports. Requires system-wide perf permission
+/// (`perf_event_paranoid <= 0` or CAP_PERFMON), so most container runs
+/// degrade to the LLC-miss estimate instead.
+pub struct ImcCounters {
+    reads: Vec<sys::Counter>,
+    writes: Vec<sys::Counter>,
+}
+
+impl ImcCounters {
+    /// Discover IMC PMUs in sysfs and open their CAS read/write counters
+    /// (cpu 0, system-wide). Degrades with a stable reason code.
+    pub fn open() -> Result<ImcCounters, &'static str> {
+        if env_disabled() {
+            return Err(REASON_DISABLED);
+        }
+        let mut reads = Vec::new();
+        let mut writes = Vec::new();
+        let base = std::path::Path::new("/sys/bus/event_source/devices");
+        let entries = std::fs::read_dir(base).map_err(|_| REASON_NO_PMU)?;
+        for entry in entries.flatten() {
+            let name = entry.file_name();
+            if !name.to_string_lossy().starts_with("uncore_imc") {
+                continue;
+            }
+            let dir = entry.path();
+            let pmu_type: u32 = match std::fs::read_to_string(dir.join("type"))
+                .ok()
+                .and_then(|s| s.trim().parse().ok())
+            {
+                Some(t) => t,
+                None => continue,
+            };
+            for (event, out) in
+                [("cas_count_read", &mut reads), ("cas_count_write", &mut writes)]
+            {
+                let spec = match std::fs::read_to_string(dir.join("events").join(event)) {
+                    Ok(s) => s,
+                    Err(_) => continue,
+                };
+                let config = match parse_event_config(&spec) {
+                    Some(c) => c,
+                    None => continue,
+                };
+                match sys::open_system_counter(pmu_type, config) {
+                    Ok(fd) => out.push(sys::Counter::new(fd)),
+                    Err(errno) => {
+                        return Err(reason_for_errno(errno, paranoid_level()));
+                    }
+                }
+            }
+        }
+        if reads.is_empty() && writes.is_empty() {
+            return Err(REASON_NO_PMU);
+        }
+        Ok(ImcCounters { reads, writes })
+    }
+
+    /// Running `(read_bytes, write_bytes)` totals across all IMC channels
+    /// (each CAS count is one 64-byte line).
+    pub fn sample_bytes(&self) -> (f64, f64) {
+        let sum = |cs: &[sys::Counter]| {
+            cs.iter().filter_map(sys::Counter::read).sum::<u64>() as f64 * 64.0
+        };
+        (sum(&self.reads), sum(&self.writes))
+    }
+}
+
+/// Scale a multiplexed counter reading to its full-rate estimate:
+/// `value × enabled / running`. `None` when the counter was never
+/// scheduled (`running == 0` with time enabled). Pure — unit-tested.
+pub fn scaled_value(value: u64, enabled: u64, running: u64) -> Option<u64> {
+    if running == 0 {
+        return if enabled == 0 { Some(value) } else { None };
+    }
+    if running >= enabled {
+        return Some(value);
+    }
+    Some((value as f64 * enabled as f64 / running as f64) as u64)
+}
+
+/// The raw syscall layer. On non-Linux (or non-x86_64/aarch64) targets
+/// every open fails with `ENOSYS`, which the public layer maps to
+/// [`REASON_UNSUPPORTED`]-class degradation through [`reason_for_errno`].
+mod sys {
+    /// `(perf type, config)`: PERF_TYPE_HARDWARE / PERF_COUNT_HW_CPU_CYCLES.
+    pub const EV_CYCLES: (u32, u64) = (0, 0);
+    /// PERF_COUNT_HW_INSTRUCTIONS.
+    pub const EV_INSTRUCTIONS: (u32, u64) = (0, 1);
+    /// PERF_COUNT_HW_CACHE_REFERENCES (last-level cache on most PMUs).
+    pub const EV_CACHE_REFS: (u32, u64) = (0, 2);
+    /// PERF_COUNT_HW_CACHE_MISSES.
+    pub const EV_CACHE_MISSES: (u32, u64) = (0, 3);
+
+    /// Counter attachment scope (see the public [`super::Scope`]).
+    pub type Scope = super::Scope;
+
+    /// An open perf fd; closed on drop.
+    pub struct Counter {
+        fd: i32,
+    }
+
+    impl Counter {
+        pub fn new(fd: i32) -> Counter {
+            Counter { fd }
+        }
+
+        /// Read and multiplex-scale the counter value.
+        pub fn read(&self) -> Option<u64> {
+            read_scaled(self.fd)
+        }
+    }
+
+    impl Drop for Counter {
+        fn drop(&mut self) {
+            close_fd(self.fd);
+        }
+    }
+
+    #[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+    mod imp {
+        use std::os::raw::{c_int, c_long, c_ulong, c_void};
+
+        #[cfg(target_arch = "x86_64")]
+        const SYS_PERF_EVENT_OPEN: c_long = 298;
+        #[cfg(target_arch = "aarch64")]
+        const SYS_PERF_EVENT_OPEN: c_long = 241;
+
+        extern "C" {
+            fn syscall(num: c_long, ...) -> c_long;
+            fn read(fd: c_int, buf: *mut c_void, count: usize) -> isize;
+            fn close(fd: c_int) -> c_int;
+        }
+
+        /// `perf_event_attr`, ABI version 0 (64 bytes) — enough for
+        /// counting events; later fields are sampling-only.
+        #[repr(C)]
+        struct PerfEventAttr {
+            type_: u32,
+            size: u32,
+            config: u64,
+            sample_period: u64,
+            sample_type: u64,
+            read_format: u64,
+            flags: u64,
+            wakeup_events: u32,
+            bp_type: u32,
+            config1: u64,
+        }
+
+        /// `read_format`: TOTAL_TIME_ENABLED | TOTAL_TIME_RUNNING, so
+        /// multiplexed counters can be scaled.
+        const READ_FORMAT: u64 = 1 | 2;
+        /// attr.flags bit 1: inherit to children spawned after open.
+        const FLAG_INHERIT: u64 = 1 << 1;
+        /// attr.flags bit 5: exclude kernel (required at paranoid >= 1).
+        const FLAG_EXCLUDE_KERNEL: u64 = 1 << 5;
+        /// attr.flags bit 6: exclude hypervisor.
+        const FLAG_EXCLUDE_HV: u64 = 1 << 6;
+
+        fn open_raw(
+            type_: u32,
+            config: u64,
+            flags: u64,
+            pid: c_int,
+            cpu: c_int,
+        ) -> Result<i32, i32> {
+            let attr = PerfEventAttr {
+                type_,
+                size: std::mem::size_of::<PerfEventAttr>() as u32,
+                config,
+                sample_period: 0,
+                sample_type: 0,
+                read_format: READ_FORMAT,
+                flags,
+                wakeup_events: 0,
+                bp_type: 0,
+                config1: 0,
+            };
+            let group_fd: c_int = -1;
+            let open_flags: c_ulong = 0;
+            // SAFETY: the attr struct matches the kernel ABI (version-0
+            // size field tells the kernel how much to read); the pointer
+            // is valid for the duration of the call.
+            let fd = unsafe {
+                syscall(
+                    SYS_PERF_EVENT_OPEN,
+                    &attr as *const PerfEventAttr,
+                    pid,
+                    cpu,
+                    group_fd,
+                    open_flags,
+                )
+            };
+            if fd < 0 {
+                Err(std::io::Error::last_os_error().raw_os_error().unwrap_or(0))
+            } else {
+                Ok(fd as i32)
+            }
+        }
+
+        pub fn open_counter(ev: (u32, u64), scope: super::Scope) -> Result<i32, i32> {
+            let mut flags = FLAG_EXCLUDE_KERNEL | FLAG_EXCLUDE_HV;
+            if scope == super::Scope::Process {
+                flags |= FLAG_INHERIT;
+            }
+            // pid 0, cpu -1: this thread (plus inherited children), any cpu
+            open_raw(ev.0, ev.1, flags, 0, -1)
+        }
+
+        pub fn open_system_counter(pmu_type: u32, config: u64) -> Result<i32, i32> {
+            // uncore events are system-wide: pid -1, a specific cpu, and
+            // no exclude bits (the IMC has no user/kernel distinction)
+            open_raw(pmu_type, config, 0, -1, 0)
+        }
+
+        pub fn read_scaled(fd: i32) -> Option<u64> {
+            let mut buf = [0u64; 3];
+            // SAFETY: buf is a valid, writable 24-byte buffer.
+            let n = unsafe { read(fd, buf.as_mut_ptr() as *mut c_void, 24) };
+            if n < 16 {
+                return None;
+            }
+            super::super::scaled_value(buf[0], buf[1], buf[2])
+        }
+
+        pub fn close_fd(fd: i32) {
+            // SAFETY: fd came from perf_event_open and is closed once.
+            unsafe {
+                close(fd);
+            }
+        }
+    }
+
+    #[cfg(not(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64"))))]
+    mod imp {
+        /// ENOSYS — mapped to an unavailable capability by the caller.
+        pub fn open_counter(_ev: (u32, u64), _scope: super::Scope) -> Result<i32, i32> {
+            Err(38)
+        }
+
+        pub fn open_system_counter(_pmu_type: u32, _config: u64) -> Result<i32, i32> {
+            Err(38)
+        }
+
+        pub fn read_scaled(_fd: i32) -> Option<u64> {
+            None
+        }
+
+        pub fn close_fd(_fd: i32) {}
+    }
+
+    pub use imp::{close_fd, open_system_counter, read_scaled};
+
+    pub fn open_counter(ev: (u32, u64), scope: Scope) -> Result<i32, i32> {
+        imp::open_counter(ev, scope)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn errno_mapping_is_stable() {
+        // the satellite contract: paranoid>=2 and ENOSYS map to their
+        // dedicated codes, everything lands somewhere in the catalogue
+        assert_eq!(reason_for_errno(38, None), REASON_ENOSYS);
+        assert_eq!(reason_for_errno(1, Some(2)), REASON_PARANOID);
+        assert_eq!(reason_for_errno(13, Some(3)), REASON_PARANOID);
+        assert_eq!(reason_for_errno(13, Some(1)), REASON_EACCES);
+        assert_eq!(reason_for_errno(1, None), REASON_EACCES);
+        assert_eq!(reason_for_errno(2, None), REASON_NO_PMU);
+        assert_eq!(reason_for_errno(19, Some(2)), REASON_NO_PMU);
+        assert_eq!(reason_for_errno(22, None), REASON_NO_PMU);
+        assert_eq!(reason_for_errno(9999, None), REASON_OPEN_FAILED);
+        for errno in [1, 2, 13, 19, 22, 38, 95, 9999] {
+            for paranoid in [None, Some(-1), Some(2), Some(4)] {
+                assert!(REASONS.contains(&reason_for_errno(errno, paranoid)));
+            }
+        }
+    }
+
+    #[test]
+    fn sysfs_event_spec_parses() {
+        assert_eq!(parse_event_config("event=0x04,umask=0x03"), Some(0x304));
+        assert_eq!(parse_event_config("event=0xff"), Some(0xff));
+        assert_eq!(parse_event_config("event=4,umask=12"), Some(4 | (12 << 8)));
+        // unknown terms are ignored, malformed terms reject the spec
+        assert_eq!(parse_event_config("event=0x04,cmask=0x01"), Some(0x04));
+        assert_eq!(parse_event_config("umask=0x03"), None);
+        assert_eq!(parse_event_config("garbage"), None);
+        assert_eq!(parse_event_config(""), None);
+    }
+
+    #[test]
+    fn multiplex_scaling() {
+        // never scheduled -> no value
+        assert_eq!(scaled_value(100, 1000, 0), None);
+        // fully scheduled -> exact
+        assert_eq!(scaled_value(100, 1000, 1000), Some(100));
+        // degenerate zero-time read (fd just opened) -> exact
+        assert_eq!(scaled_value(0, 0, 0), Some(0));
+        // half scheduled -> doubled estimate
+        assert_eq!(scaled_value(100, 1000, 500), Some(200));
+    }
+
+    #[test]
+    fn sample_delta_and_derived_metrics() {
+        let a = HwcSample {
+            cycles: 1000,
+            instructions: Some(2000),
+            cache_refs: Some(100),
+            cache_misses: Some(10),
+        };
+        let b = HwcSample {
+            cycles: 4000,
+            instructions: Some(8000),
+            cache_refs: Some(250),
+            cache_misses: Some(40),
+        };
+        let d = b.delta(&a);
+        assert_eq!(d.cycles, 3000);
+        assert_eq!(d.instructions, Some(6000));
+        assert_eq!(d.cache_misses, Some(30));
+        assert_eq!(d.ipc(), Some(2.0));
+        assert_eq!(d.dram_bytes_estimate(64), Some(30.0 * 64.0));
+        // a counter missing on one side is missing in the delta
+        let c = HwcSample { cycles: 5000, instructions: None, ..b };
+        assert_eq!(c.delta(&a).instructions, None);
+        assert_eq!(HwcSample::default().ipc(), None);
+        assert_eq!(HwcSample::default().dram_bytes_estimate(64), None);
+    }
+
+    #[test]
+    fn probe_is_stable_and_degrades_with_a_catalogue_reason() {
+        // whatever the host allows, the verdict must be deterministic and
+        // the degraded reason must come from the stable catalogue
+        let p1 = probe();
+        let p2 = probe();
+        assert_eq!(p1, p2);
+        match p1 {
+            Capability::Available => {
+                // counters really work: measure some arithmetic and
+                // expect nonzero cycles
+                let g = HwcGroup::open(Scope::Thread).expect("probe said available");
+                let span = g.span();
+                let mut acc = 0u64;
+                for i in 0..100_000u64 {
+                    acc = acc.wrapping_mul(31).wrapping_add(i);
+                }
+                std::hint::black_box(acc);
+                let d = span.stop();
+                assert!(d.cycles > 0, "available counters must tick");
+            }
+            Capability::Unavailable(r) => {
+                assert!(REASONS.contains(&r), "unknown reason {r}");
+                // the group constructor degrades with the same contract
+                let err = HwcGroup::open(Scope::Thread).err().expect("must degrade");
+                assert!(REASONS.contains(&err));
+                // and the thread-local helpers never panic
+                assert!(thread_sample().is_none());
+                let (v, d) = measure(|| 7);
+                assert_eq!(v, 7);
+                assert!(d.is_none());
+            }
+        }
+    }
+
+    #[test]
+    fn capability_reason_accessor() {
+        assert_eq!(Capability::Available.reason(), "ok");
+        assert!(Capability::Available.is_available());
+        let u = Capability::Unavailable(REASON_PARANOID);
+        assert!(!u.is_available());
+        assert_eq!(u.reason(), REASON_PARANOID);
+    }
+}

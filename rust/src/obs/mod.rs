@@ -15,6 +15,13 @@
 //!   interpolated quantiles — the serve latency/batch-size metrics.
 //! * **Roofline accounting** ([`roofline`]): attained vs model bandwidth
 //!   rows combining the cachesim traffic model with measured kernel time.
+//! * **Hardware counters** ([`hwc`]): a std-only `perf_event_open` layer
+//!   (cycles, instructions, LLC misses, IMC DRAM traffic) with explicit
+//!   capability probing — rows degrade to `measured: unavailable` with a
+//!   stable reason code instead of erroring where perf is denied.
+//! * **Perf baselines** ([`baseline`]): machine fingerprints stamped into
+//!   every `BENCH_*.json` plus the schema-tolerant bench-diff engine
+//!   behind `race-cli bench-diff`.
 //!
 //! The per-worker compute/wait instrumentation lives in
 //! [`crate::pool::workers`] (it needs the pool's barrier structure) and
@@ -30,7 +37,9 @@
 //! lock is taken, and the returned [`Span`] guard is inert — the
 //! overhead-guard test in `tests/obs.rs` pins this down.
 
+pub mod baseline;
 pub mod hist;
+pub mod hwc;
 pub mod roofline;
 pub mod trace;
 

@@ -10,6 +10,14 @@
 //! is `model bytes / measured seconds` — if the traffic model is right,
 //! this is the memory bandwidth the kernel actually drew, directly
 //! comparable to `bw_load`/`bw_copy`.
+//!
+//! When hardware counters are available ([`crate::obs::hwc`]), a row can
+//! additionally carry *measured* traffic ([`RooflineRow::with_measured`])
+//! — the paper's LIKWID methodology — and `model_err` quantifies how far
+//! the cachesim model is from what the memory controllers actually moved
+//! (the paper's outlier analysis). Where perf is denied the row records a
+//! stable reason code instead ([`RooflineRow::measured_unavailable`]);
+//! the JSON shape is identical either way.
 
 use crate::machine::Machine;
 use crate::util::json::Json;
@@ -39,6 +47,19 @@ pub struct RooflineRow {
     /// bandwidth the kernel sustained (> 1 means the traffic model
     /// under-counted or the working set fit in cache).
     pub bw_frac: f64,
+    /// Hardware-counter-measured main-memory traffic per invocation,
+    /// bytes ([`crate::obs::hwc`]); `None` where perf is unavailable.
+    pub measured_bytes: Option<f64>,
+    /// Where the measurement came from (`"imc"` for uncore memory
+    /// controllers, `"llc_miss"` for the cache-miss estimate).
+    pub measured_source: Option<String>,
+    /// Stable status code: `"ok"` when measured, `"off"` when counters
+    /// were not requested, otherwise an [`crate::obs::hwc`] reason code
+    /// (`"perf_event_paranoid"`, `"enosys"`, …).
+    pub measured_reason: &'static str,
+    /// Relative model error `(model_bytes - measured) / measured`;
+    /// positive means the cachesim model over-counts traffic.
+    pub model_err: Option<f64>,
 }
 
 impl RooflineRow {
@@ -51,20 +72,49 @@ impl RooflineRow {
         flops: f64,
         machine: &Machine,
     ) -> RooflineRow {
+        // clamp: CI small-mode matrices can time below the clock
+        // resolution, and seconds == 0.0 must not produce inf/NaN rows
         let secs = seconds.max(1e-12);
         let intensity = flops / model_bytes.max(1.0);
+        let attained_bw = model_bytes / secs;
         RooflineRow {
             kernel: kernel.to_string(),
             seconds,
             model_bytes,
             flops,
-            attained_bw: model_bytes / secs,
+            attained_bw,
             attained_flops: flops / secs,
             intensity,
             roof_copy: crate::perfmodel::roofline(intensity, machine.bw_copy),
             roof_load: crate::perfmodel::roofline(intensity, machine.bw_load),
-            bw_frac: model_bytes / secs / machine.bw_load.max(1.0),
+            bw_frac: attained_bw / machine.bw_load.max(1.0),
+            measured_bytes: None,
+            measured_source: None,
+            measured_reason: "off",
+            model_err: None,
         }
+    }
+
+    /// Attach a hardware-counter traffic measurement (bytes per
+    /// invocation) from `source` (`"imc"` or `"llc_miss"`) and derive
+    /// `model_err`.
+    pub fn with_measured(mut self, bytes: f64, source: &str) -> RooflineRow {
+        self.measured_bytes = Some(bytes);
+        self.measured_source = Some(source.to_string());
+        self.measured_reason = "ok";
+        self.model_err = Some((self.model_bytes - bytes) / bytes.max(1.0));
+        self
+    }
+
+    /// Mark the row's measurement as unavailable with a stable
+    /// [`crate::obs::hwc`] reason code (graceful degradation, never an
+    /// error).
+    pub fn measured_unavailable(mut self, reason: &'static str) -> RooflineRow {
+        self.measured_bytes = None;
+        self.measured_source = None;
+        self.measured_reason = reason;
+        self.model_err = None;
+        self
     }
 
     /// JSON shape emitted into `BENCH_obs.json`.
@@ -79,6 +129,32 @@ impl RooflineRow {
             ("roof_copy_gfs", Json::Num(self.roof_copy / 1e9)),
             ("roof_load_gfs", Json::Num(self.roof_load / 1e9)),
             ("bw_frac", Json::Num(self.bw_frac)),
+            (
+                "measured",
+                Json::Str(if self.measured_bytes.is_some() { "ok" } else { "unavailable" }.into()),
+            ),
+            ("measured_reason", Json::Str(self.measured_reason.to_string())),
+            (
+                "measured_bytes",
+                match self.measured_bytes {
+                    Some(b) => Json::Num(b),
+                    None => Json::Null,
+                },
+            ),
+            (
+                "measured_source",
+                match &self.measured_source {
+                    Some(s) => Json::Str(s.clone()),
+                    None => Json::Null,
+                },
+            ),
+            (
+                "model_err",
+                match self.model_err {
+                    Some(e) => Json::Num(e),
+                    None => Json::Null,
+                },
+            ),
         ])
     }
 }
@@ -102,5 +178,48 @@ mod tests {
         assert!(r.attained_flops < r.roof_load);
         let j = r.to_json();
         assert!(j.get("attained_gbs").is_some() && j.get("roof_load_gfs").is_some());
+    }
+
+    #[test]
+    fn zero_seconds_yields_finite_row() {
+        // CI small-mode matrices can time below clock resolution; the
+        // clamp must keep every derived column finite
+        let m = crate::machine::ivb();
+        let r = RooflineRow::new("symmspmv", 0.0, 1e6, 2e5, &m);
+        assert!(r.attained_bw.is_finite());
+        assert!(r.attained_flops.is_finite());
+        assert!(r.bw_frac.is_finite());
+        assert!(r.intensity.is_finite());
+        // and the deduped expression keeps the two columns consistent
+        assert!((r.bw_frac - r.attained_bw / m.bw_load).abs() < 1e-9);
+    }
+
+    #[test]
+    fn measured_columns_round_trip() {
+        let m = crate::machine::ivb();
+        let base = RooflineRow::new("symmspmv", 0.1, 1.1e9, 2e8, &m);
+        // default: counters not requested
+        assert_eq!(base.measured_reason, "off");
+        let j = base.to_json();
+        assert_eq!(j.get("measured"), Some(&Json::Str("unavailable".into())));
+        assert_eq!(j.get("measured_bytes"), Some(&Json::Null));
+        // measured: model over-counts by 10% -> model_err = +0.10
+        let r = base.clone().with_measured(1e9, "imc");
+        assert_eq!(r.measured_reason, "ok");
+        assert!((r.model_err.unwrap() - 0.1).abs() < 1e-12);
+        let j = r.to_json();
+        assert_eq!(j.get("measured"), Some(&Json::Str("ok".into())));
+        assert_eq!(j.get("measured_bytes").and_then(Json::as_f64), Some(1e9));
+        assert_eq!(j.get("measured_source"), Some(&Json::Str("imc".into())));
+        // degraded: stable reason, same JSON shape, no error
+        let r = base.measured_unavailable(crate::obs::hwc::REASON_PARANOID);
+        assert_eq!(r.measured_reason, "perf_event_paranoid");
+        let j = r.to_json();
+        assert_eq!(j.get("measured"), Some(&Json::Str("unavailable".into())));
+        assert_eq!(
+            j.get("measured_reason"),
+            Some(&Json::Str("perf_event_paranoid".into()))
+        );
+        assert_eq!(j.get("model_err"), Some(&Json::Null));
     }
 }

@@ -20,7 +20,7 @@
 //!   scoped executors ([`crate::kernels::symmspmv_race`] and friends).
 
 use super::program::StepProgram;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Barrier, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
@@ -69,6 +69,14 @@ pub struct WorkerPool {
     timing: Mutex<Arc<Vec<AtomicU64>>>,
     /// Per-worker report of the most recent observed execution.
     last_report: Mutex<Option<ExecReport>>,
+    /// When set (and [`crate::obs`] is enabled), timed executions also
+    /// read each participant's thread-local hardware counters
+    /// ([`crate::obs::hwc`]); degrades silently where perf is denied.
+    hwc: AtomicBool,
+    /// Per-worker hardware-counter slots for the current timed job:
+    /// `[ok, cycles, instr_ok, instructions]` per participant. Fixed size
+    /// (4 × threads), reset by the publisher before each measured job.
+    hwc_slots: Vec<AtomicU64>,
 }
 
 /// Per-worker timing breakdown of one [`WorkerPool::execute`] call,
@@ -96,6 +104,13 @@ pub struct ExecReport {
     pub imbalance: f64,
     /// Fraction of the `threads × wall` time budget not spent computing.
     pub idle_frac: f64,
+    /// Per-worker measured CPU cycles for the job ([`crate::obs::hwc`]),
+    /// present only when counters were requested via
+    /// [`WorkerPool::set_hwc`] and every participant could read them.
+    pub hwc_cycles: Option<Vec<u64>>,
+    /// Per-worker retired instructions, when the instruction counter was
+    /// available alongside cycles.
+    pub hwc_instructions: Option<Vec<u64>>,
 }
 
 impl ExecReport {
@@ -134,7 +149,14 @@ impl ExecReport {
             step_imbalance,
             imbalance,
             idle_frac,
+            hwc_cycles: None,
+            hwc_instructions: None,
         }
+    }
+
+    /// Measured cycles summed over workers, when available.
+    pub fn total_hwc_cycles(&self) -> Option<u64> {
+        self.hwc_cycles.as_ref().map(|v| v.iter().sum())
     }
 }
 
@@ -163,12 +185,21 @@ impl WorkerPool {
             gate: Mutex::new(()),
             timing: Mutex::new(Arc::new(Vec::new())),
             last_report: Mutex::new(None),
+            hwc: AtomicBool::new(false),
+            hwc_slots: (0..4 * threads).map(|_| AtomicU64::new(0)).collect(),
         }
     }
 
     /// Number of participants (resident workers + caller).
     pub fn threads(&self) -> usize {
         self.threads
+    }
+
+    /// Request per-worker hardware counters on timed executions. A no-op
+    /// where perf is unavailable — the [`ExecReport`] simply carries no
+    /// `hwc_*` columns; the run itself never fails.
+    pub fn set_hwc(&self, on: bool) {
+        self.hwc.store(on, Ordering::Relaxed);
     }
 
     /// Run `f(worker_id)` on every participant — resident workers get ids
@@ -240,8 +271,18 @@ impl WorkerPool {
         let nt = self.threads;
         let nsteps = prog.nsteps();
         let slots = self.timing_slots(nsteps);
+        let hwc_on = self.hwc.load(Ordering::Relaxed);
+        if hwc_on {
+            for s in &self.hwc_slots {
+                s.store(0, Ordering::Relaxed);
+            }
+        }
         let t_job = Instant::now();
         self.run(|wid| {
+            // thread-local counter groups open lazily on first use; on a
+            // perf-denied host thread_sample() is None and the job runs
+            // exactly as without counters
+            let h0 = if hwc_on { crate::obs::hwc::thread_sample() } else { None };
             let mut t0 = Instant::now();
             for s in 0..nsteps {
                 let units = prog.step(s);
@@ -258,9 +299,34 @@ impl WorkerPool {
                 slots[base + 1].store((t2 - t1).as_nanos() as u64, Ordering::Relaxed);
                 t0 = t2;
             }
+            if let Some(start) = h0 {
+                if let Some(end) = crate::obs::hwc::thread_sample() {
+                    let d = end.delta(&start);
+                    let base = wid * 4;
+                    self.hwc_slots[base].store(1, Ordering::Relaxed);
+                    self.hwc_slots[base + 1].store(d.cycles, Ordering::Relaxed);
+                    if let Some(instr) = d.instructions {
+                        self.hwc_slots[base + 2].store(1, Ordering::Relaxed);
+                        self.hwc_slots[base + 3].store(instr, Ordering::Relaxed);
+                    }
+                }
+            }
         });
         let wall = t_job.elapsed();
-        let report = ExecReport::from_slots(&slots, nt, nsteps, wall.as_nanos() as u64);
+        let mut report = ExecReport::from_slots(&slots, nt, nsteps, wall.as_nanos() as u64);
+        if hwc_on {
+            let col = |off: usize| -> Vec<u64> {
+                (0..nt).map(|w| self.hwc_slots[w * 4 + off].load(Ordering::Relaxed)).collect()
+            };
+            // only publish when every participant measured — a partial
+            // vector padded with zeros would misreport balance
+            if (0..nt).all(|w| self.hwc_slots[w * 4].load(Ordering::Relaxed) == 1) {
+                report.hwc_cycles = Some(col(1));
+                if (0..nt).all(|w| self.hwc_slots[w * 4 + 2].load(Ordering::Relaxed) == 1) {
+                    report.hwc_instructions = Some(col(3));
+                }
+            }
+        }
         crate::obs::recorder().record_manual(
             "pool.execute",
             t_job,
@@ -378,6 +444,34 @@ mod tests {
             });
         }
         assert_eq!(count.load(Ordering::SeqCst), 150);
+    }
+
+    #[test]
+    fn hwc_request_degrades_gracefully() {
+        // requesting counters must never change execution results or
+        // error, whatever the host's perf capability
+        let pool = WorkerPool::new(2);
+        pool.set_hwc(true);
+        let prog = StepProgram::from_steps(vec![
+            vec![
+                super::super::WorkUnit { start: 0, end: 1, power: 0 },
+                super::super::WorkUnit { start: 1, end: 2, power: 0 },
+            ],
+            vec![super::super::WorkUnit { start: 2, end: 3, power: 0 }],
+        ]);
+        let hits = AtomicUsize::new(0);
+        pool.execute(&prog, |_u| {
+            hits.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 3);
+        // a report exists only when obs was enabled during execute; when
+        // it is, hwc columns are either absent (denied host) or sized
+        // per participant
+        if let Some(r) = pool.take_exec_report() {
+            if let Some(c) = &r.hwc_cycles {
+                assert_eq!(c.len(), r.threads);
+            }
+        }
     }
 
     #[test]

@@ -121,6 +121,15 @@ pub struct ServeOptions {
     /// Chrome-trace capture (`--trace` on the CLI; `RACE_OBS=1` works
     /// without this flag).
     pub trace: bool,
+    /// Attach process-level hardware counters ([`crate::obs::hwc`]) and
+    /// expose them as `race_hwc_*` gauges in the `{"metrics"}` text
+    /// (`--hwc`). Degrades to a `race_hwc_info` status line with a
+    /// stable reason code where perf is unavailable; when `false` the
+    /// exposition is byte-identical to builds predating the flag.
+    pub hwc: bool,
+    /// Log a structured slow-request line to stderr for requests slower
+    /// than this many milliseconds (`--slow-ms`; 0 disables).
+    pub slow_ms: u64,
 }
 
 impl Default for ServeOptions {
@@ -138,6 +147,8 @@ impl Default for ServeOptions {
             storage: Storage::Pack,
             prec: ValPrec::F64,
             trace: false,
+            hwc: false,
+            slow_ms: 0,
         }
     }
 }
@@ -168,6 +179,20 @@ impl ServeError {
             ]),
         )])
     }
+
+    /// Error envelope carrying the per-request trace id, so a client can
+    /// correlate a failure with the `serve.request` span and any
+    /// slow-request log line.
+    pub fn to_json_with_id(&self, id: u64) -> Json {
+        Json::obj(vec![(
+            "error",
+            Json::obj(vec![
+                ("code", Json::Str(self.code.to_string())),
+                ("message", Json::Str(self.message.clone())),
+                ("id", Json::Num(id as f64)),
+            ]),
+        )])
+    }
 }
 
 impl std::fmt::Display for ServeError {
@@ -177,6 +202,23 @@ impl std::fmt::Display for ServeError {
 }
 
 impl std::error::Error for ServeError {}
+
+/// What one request turned out to be — filled in as dispatch proceeds so
+/// the slow-request log can attribute a tail latency to a matrix and
+/// request kind even when the request later fails.
+struct ReqInfo {
+    kind: &'static str,
+    matrix: Option<String>,
+    batch: usize,
+}
+
+/// Render the structured slow-request log line (`--slow-ms`): stable
+/// `key=value` fields so the line is grep- and machine-parseable.
+fn slow_request_line(id: u64, kind: &str, matrix: &str, batch: usize, ms: f64) -> String {
+    format!(
+        "[race-serve] slow_request id={id} kind={kind} matrix={matrix} batch={batch} ms={ms:.3}"
+    )
+}
 
 /// One registered matrix: a resident [`Operator`] plus its aggregation
 /// state (one batcher for SymmSpMV, one per MPK power).
@@ -218,6 +260,18 @@ pub struct MatvecService {
     batch_window_us: u64,
     solve_iter_max: usize,
     metrics: Registry,
+    /// Slow-request threshold in milliseconds (0 = off).
+    slow_ms: u64,
+    /// Was `--hwc` requested? Gates the `race_hwc_*` exposition so a
+    /// no-flag run stays byte-identical to builds predating the flag.
+    hwc_requested: bool,
+    /// Stable status code: `"ok"`, `"off"`, or an hwc reason.
+    hwc_reason: &'static str,
+    /// Process-scope counter group (inherited by the pool's workers —
+    /// opened *before* the pool spawns them).
+    hwc_group: Option<crate::obs::hwc::HwcGroup>,
+    /// Counter values at build time; gauges report deltas from here.
+    hwc_origin: Option<crate::obs::hwc::HwcSample>,
 }
 
 impl MatvecService {
@@ -229,7 +283,22 @@ impl MatvecService {
             crate::obs::set_enabled(true);
         }
         let threads = opts.threads.max(1);
+        // the process-scope counter group must exist before the pool
+        // spawns its resident workers: perf inheritance only covers
+        // threads created after the counters open
+        let (hwc_group, hwc_reason) = if opts.hwc {
+            match crate::obs::hwc::HwcGroup::open(crate::obs::hwc::Scope::Process) {
+                Ok(g) => (Some(g), "ok"),
+                Err(reason) => (None, reason),
+            }
+        } else {
+            (None, "off")
+        };
+        let hwc_origin = hwc_group.as_ref().map(|g| g.sample());
         let pool = Arc::new(WorkerPool::new(threads));
+        if opts.hwc {
+            pool.set_hwc(true);
+        }
         let mut entries = Vec::with_capacity(opts.matrices.len());
         for spec in &opts.matrices {
             let (name, a0) = resolve_matrix(spec, opts.small)
@@ -261,6 +330,11 @@ impl MatvecService {
             batch_window_us: opts.batch_window_us,
             solve_iter_max: opts.solve_iter_max.max(1),
             metrics: Registry::new(nmatrices),
+            slow_ms: opts.slow_ms,
+            hwc_requested: opts.hwc,
+            hwc_reason,
+            hwc_group,
+            hwc_origin,
         })
     }
 
@@ -547,37 +621,103 @@ impl MatvecService {
     }
 
     /// The metrics registry as Prometheus-style text exposition (the
-    /// payload behind `{"metrics": true}`).
+    /// payload behind `{"metrics": true}`). With `--hwc` the registry
+    /// text is followed by process-level `race_hwc_*` counter gauges
+    /// (or a single `race_hwc_info` status line where perf is denied);
+    /// without the flag the text is byte-identical to earlier builds.
     pub fn metrics_text(&self) -> String {
-        self.metrics.prometheus(&self.matrix_info())
+        let mut text = self.metrics.prometheus(&self.matrix_info());
+        if self.hwc_requested {
+            text.push_str(&self.hwc_text());
+        }
+        text
+    }
+
+    /// The `race_hwc_*` exposition block (process-scope counter deltas
+    /// since build, inherited by every pool worker).
+    fn hwc_text(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        let status = if self.hwc_group.is_some() { "ok" } else { "unavailable" };
+        let _ = writeln!(out, "# TYPE race_hwc_info gauge");
+        let _ = writeln!(
+            out,
+            "race_hwc_info{{status=\"{status}\",reason=\"{}\"}} 1",
+            self.hwc_reason
+        );
+        if let (Some(g), Some(origin)) = (&self.hwc_group, &self.hwc_origin) {
+            let d = g.sample().delta(origin);
+            let mut counter = |name: &str, v: u64| {
+                let _ = writeln!(out, "# TYPE race_hwc_{name}_total counter");
+                let _ = writeln!(out, "race_hwc_{name}_total {v}");
+            };
+            counter("cycles", d.cycles);
+            if let Some(v) = d.instructions {
+                counter("instructions", v);
+            }
+            if let Some(v) = d.cache_refs {
+                counter("cache_references", v);
+            }
+            if let Some(v) = d.cache_misses {
+                counter("cache_misses", v);
+            }
+            if let Some(b) = d.dram_bytes_estimate(64.0) {
+                counter("estimated_dram_bytes", b as u64);
+            }
+        }
+        out
     }
 
     /// Handle one JSON request line. Returns the response line and
-    /// whether the request asked the server to shut down. Every error
-    /// response is counted (globally and by code) in the registry.
+    /// whether the request asked the server to shut down. Every request
+    /// gets a monotonically increasing trace id stamped into its
+    /// `serve.request` span (and error envelope), every error response
+    /// is counted (globally and by code) in the registry, and requests
+    /// slower than `--slow-ms` log a structured line to stderr.
     pub fn handle(&self, line: &str) -> (String, bool) {
-        let _sp = crate::obs::span("serve.request");
-        self.metrics.requests.fetch_add(1, Ordering::Relaxed);
-        match self.handle_inner(line) {
+        let id = self.metrics.requests.fetch_add(1, Ordering::Relaxed) + 1;
+        let _sp = crate::obs::span_detail("serve.request", || format!("id={id}"));
+        let t0 = std::time::Instant::now();
+        let mut info = ReqInfo { kind: "unknown", matrix: None, batch: 0 };
+        let out = match self.handle_inner(line, &mut info) {
             Ok((resp, shutdown)) => (resp, shutdown),
             Err(e) => {
                 self.metrics.response_error(e.code);
-                (e.to_json().to_string(), false)
+                (e.to_json_with_id(id).to_string(), false)
+            }
+        };
+        if self.slow_ms > 0 {
+            let ms = t0.elapsed().as_secs_f64() * 1e3;
+            if ms >= self.slow_ms as f64 {
+                eprintln!(
+                    "{}",
+                    slow_request_line(
+                        id,
+                        info.kind,
+                        info.matrix.as_deref().unwrap_or("-"),
+                        info.batch,
+                        ms
+                    )
+                );
             }
         }
+        out
     }
 
-    fn handle_inner(&self, line: &str) -> Result<(String, bool), ServeError> {
+    fn handle_inner(&self, line: &str, info: &mut ReqInfo) -> Result<(String, bool), ServeError> {
         let req = Json::parse(line)
             .map_err(|e| ServeError::new("bad_json", format!("request is not valid JSON: {e}")))?;
         if req.get("stats").is_some() {
+            info.kind = "stats";
             return Ok((self.stats_json().to_string(), false));
         }
         if req.get("metrics").is_some() {
+            info.kind = "metrics";
             let resp = Json::obj(vec![("metrics", Json::Str(self.metrics_text()))]);
             return Ok((resp.to_string(), false));
         }
         if req.get("trace").is_some() {
+            info.kind = "trace";
             let events = crate::obs::recorder().drain();
             let resp = Json::obj(vec![
                 ("trace", crate::obs::trace::chrome_trace(&events)),
@@ -587,6 +727,7 @@ impl MatvecService {
             return Ok((resp.to_string(), false));
         }
         if req.get("shutdown").is_some() {
+            info.kind = "shutdown";
             let ack = Json::obj(vec![
                 ("ok", Json::Bool(true)),
                 ("shutting_down", Json::Bool(true)),
@@ -600,7 +741,10 @@ impl MatvecService {
             }
             None => None,
         };
+        info.matrix =
+            Some(name.map(str::to_string).unwrap_or_else(|| self.entries[0].name.clone()));
         if let Some(sj) = req.get("solve") {
+            info.kind = "solve";
             let resp = self.handle_solve(name, sj)?;
             return Ok((resp, false));
         }
@@ -618,7 +762,9 @@ impl MatvecService {
                 .filter(|p| p.fract() == 0.0 && *p >= 1.0)
                 .ok_or_else(|| ServeError::new("bad_power", "\"p\" must be a positive integer"))?
                 as usize;
+            info.kind = "mpk";
             let (y, secs, m) = self.mpk(name, &x, p)?;
+            info.batch = m;
             let resp = Json::obj(vec![
                 ("y", Json::arr_f64(&y)),
                 ("p", Json::Num(p as f64)),
@@ -627,7 +773,9 @@ impl MatvecService {
             ]);
             return Ok((resp.to_string(), false));
         }
+        info.kind = "matvec";
         let (b, secs, m) = self.matvec(name, &x)?;
+        info.batch = m;
         let resp = Json::obj(vec![
             ("b", Json::arr_f64(&b)),
             ("batch", Json::Num(m as f64)),
@@ -1139,6 +1287,65 @@ mod tests {
         // matvec forced the build, so it is no longer "pending")
         assert!(text.contains("race_matrix_storage_info{matrix=\"stencil2d:6x6\""), "{text}");
         assert!(!text.contains("storage=\"pending\""), "{text}");
+    }
+
+    #[test]
+    fn error_envelopes_carry_increasing_request_ids() {
+        let svc = MatvecService::build(&opts(&["stencil2d:6x6"])).unwrap();
+        let id_of = |resp: &str| {
+            Json::parse(resp)
+                .unwrap()
+                .get("error")
+                .and_then(|e| e.get("id"))
+                .and_then(Json::as_f64)
+                .unwrap()
+        };
+        let (r1, _) = svc.handle("{nope");
+        let (r2, _) = svc.handle("{\"y\": 3}");
+        let (i1, i2) = (id_of(&r1), id_of(&r2));
+        assert!(i1 >= 1.0);
+        assert_eq!(i2, i1 + 1.0);
+        // success responses are unchanged (no id key — wire compat)
+        let n = svc.entries()[0].n;
+        let (ok, _) = svc.handle(&format!("{{\"x\": {:?}}}", vec![1.0; n]));
+        assert!(Json::parse(&ok).unwrap().get("id").is_none());
+    }
+
+    #[test]
+    fn slow_request_line_is_structured() {
+        let line = slow_request_line(42, "matvec", "stencil2d:6x6", 3, 12.3456);
+        assert_eq!(
+            line,
+            "[race-serve] slow_request id=42 kind=matvec matrix=stencil2d:6x6 batch=3 ms=12.346"
+        );
+    }
+
+    #[test]
+    fn hwc_flag_gates_the_metrics_exposition() {
+        // without --hwc: no race_hwc_* lines at all (byte-identical path)
+        let svc = MatvecService::build(&opts(&["stencil2d:6x6"])).unwrap();
+        assert!(!svc.metrics_text().contains("race_hwc"));
+        // with --hwc: a status line always appears; its reason is either
+        // "ok" or a stable catalogue code, never an error
+        let mut o = opts(&["stencil2d:6x6"]);
+        o.hwc = true;
+        let svc = MatvecService::build(&o).unwrap();
+        let text = svc.metrics_text();
+        assert!(text.contains("race_hwc_info{status="), "{text}");
+        let ok_line = text.contains("race_hwc_info{status=\"ok\",reason=\"ok\"}");
+        let denied = crate::obs::hwc::REASONS
+            .iter()
+            .any(|r| text.contains(&format!("status=\"unavailable\",reason=\"{r}\"")));
+        assert!(ok_line || denied, "{text}");
+        if ok_line {
+            assert!(text.contains("race_hwc_cycles_total"), "{text}");
+        }
+        // requests still serve identically with counters attached
+        let n = svc.entries()[0].n;
+        let (resp, _) = svc.handle(&format!("{{\"x\": {:?}}}", vec![1.0; n]));
+        let j = Json::parse(&resp).unwrap();
+        let b = j.get("b").and_then(|v| v.as_f64_arr()).unwrap();
+        assert!(b.iter().all(|v| (v - 1.0).abs() < 1e-9), "{resp}");
     }
 
     #[test]

@@ -196,6 +196,71 @@ fn hist_percentiles_interpolate_deterministically() {
     assert_eq!(s.quantile(1.0), 5000.0);
 }
 
+/// The whole hardware-counter surface degrades deterministically under
+/// `RACE_HWC=0`: probe, group open, IMC open, pool requests, roofline
+/// rows and the baseline fingerprint all report `disabled_by_env` —
+/// never an error. All env manipulation lives in this single `#[test]`
+/// (the other tests in this binary never read `RACE_HWC`, so the
+/// process-global env can't race).
+#[test]
+fn hwc_surface_degrades_under_disabled_env() {
+    use race::obs::hwc;
+
+    std::env::set_var("RACE_HWC", "0");
+
+    // capability and both open paths answer the stable reason code
+    let cap = hwc::probe();
+    assert!(!cap.is_available());
+    assert_eq!(cap.reason(), hwc::REASON_DISABLED);
+    assert_eq!(hwc::HwcGroup::open(hwc::Scope::Thread).err(), Some(hwc::REASON_DISABLED));
+    assert_eq!(hwc::HwcGroup::open(hwc::Scope::Process).err(), Some(hwc::REASON_DISABLED));
+    assert_eq!(hwc::ImcCounters::open().err(), Some(hwc::REASON_DISABLED));
+
+    // a pool asked for counters still executes and simply omits the
+    // measured columns from its report (no set_enabled here: the global
+    // recorder belongs to the reconcile test; a report only appears if
+    // that test happens to have it on, and then it must carry no cycles)
+    let pool = WorkerPool::new(2);
+    pool.set_hwc(true);
+    let prog = synthetic_program(2, 2);
+    let hits = std::sync::atomic::AtomicU32::new(0);
+    pool.execute(&prog, |_u| {
+        hits.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    });
+    assert_eq!(hits.load(std::sync::atomic::Ordering::Relaxed), 4);
+    if let Some(report) = pool.take_exec_report() {
+        assert!(report.hwc_cycles.is_none(), "disabled env must not publish cycles");
+        assert!(report.hwc_instructions.is_none());
+    }
+
+    // a roofline row built from the degraded reason keeps the JSON shape
+    let m = race::machine::ivb();
+    let row = race::obs::roofline::RooflineRow::new("symmspmv", 0.01, 1e8, 2e7, &m)
+        .measured_unavailable(cap.reason());
+    let j = row.to_json();
+    assert_eq!(j.get("measured"), Some(&race::util::json::Json::Str("unavailable".into())));
+    assert_eq!(
+        j.get("measured_reason"),
+        Some(&race::util::json::Json::Str("disabled_by_env".into()))
+    );
+
+    // and the machine fingerprint records the same verdict, so a
+    // bench-diff across hosts can see why measured columns are missing
+    let fp = race::obs::baseline::fingerprint(Some(&m));
+    assert_eq!(
+        fp.get("hwc"),
+        Some(&race::util::json::Json::Str("disabled_by_env".into()))
+    );
+
+    std::env::remove_var("RACE_HWC");
+    // with the override gone the probe answers whatever the host allows,
+    // and any degraded reason still comes from the stable catalogue
+    match hwc::probe() {
+        hwc::Capability::Available => {}
+        hwc::Capability::Unavailable(r) => assert!(hwc::REASONS.contains(&r), "{r}"),
+    }
+}
+
 /// The Chrome-trace export writes JSON the crate's own parser accepts,
 /// with one complete event (`ph: "X"`) per span and microsecond stamps.
 #[test]
