@@ -1,0 +1,44 @@
+//! Shard-scaling: multi-RHS SymmSpMV throughput of `Backend::Sharded`
+//! at 1 / 2 / 4 shards.
+//!
+//! Each shard is a CPU-affinity domain with its own pinned worker pool
+//! and its own replica of the operator's triangle/pack storage; a
+//! multi-RHS batch fans its columns out across the replicas. Before any
+//! timing, every case is anchored bitwise against `Backend::Serial` —
+//! placement is a performance hint, never a correctness input.
+//!
+//! On a single-domain host the headline is graceful degradation: the
+//! logical-shard fallback must keep serving correct results at every
+//! shard count, and the report shows what sharding costs or buys there.
+//! On a real multi-socket machine the same bench reads as the paper's
+//! scaling story (one replica per memory domain).
+//!
+//! Emits `BENCH_shard.json` (override with `RACE_BENCH_OUT`):
+//! `{"bench": "shard_scaling", "matrix", "n", "nrhs",
+//! "threads_per_shard", "cases": [{name, shards, median_s,
+//! vectors_per_sec, speedup}]}`. `RACE_BENCH_FULL=1` runs a larger
+//! matrix and longer timings.
+
+fn main() {
+    let small = std::env::var("RACE_BENCH_FULL").is_err();
+    let (spec, threads, nrhs, secs) =
+        if small { ("stencil2d:48x48", 2, 8, 0.05) } else { ("stencil2d:192x192", 4, 16, 0.2) };
+    let doc = race::shard::bench_scaling(spec, true, &[1, 2, 4], threads, nrhs, secs)
+        .expect("shard scaling bench");
+    if let Some(race::util::json::Json::Arr(cases)) = doc.get("cases") {
+        for c in cases {
+            use race::util::json::Json;
+            let get = |k: &str| c.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+            println!(
+                "shards {:.0}: {:.3} ms/batch = {:.0} vectors/s ({:.2}x vs 1 shard)",
+                get("shards"),
+                get("median_s") * 1e3,
+                get("vectors_per_sec"),
+                get("speedup")
+            );
+        }
+    }
+    let path = race::obs::baseline::write_bench("BENCH_shard.json", doc, None)
+        .expect("write BENCH_shard.json");
+    println!("wrote {path}");
+}

@@ -38,6 +38,11 @@
 //! * [`serve`] — SymmSpMV/MPK as a resident TCP service: multi-matrix
 //!   registry, request micro-batching onto a multi-vector kernel, an MPK
 //!   endpoint, stats, and graceful shutdown.
+//! * [`shard`] — the sharded execution tier: the machine partitioned
+//!   into CPU-affinity domains (NUMA nodes or logical groups), one
+//!   pinned worker pool + storage replica per domain
+//!   (`Backend::Sharded`), and the serve-level sticky router with
+//!   bounded work stealing.
 //! * [`op`] — the **`Operator` facade**: one typed handle running
 //!   build → permute → plan → execute for SymmSpMV, matrix powers and
 //!   distance-k solver sweeps, with a `Backend` selecting the serial /
@@ -108,6 +113,7 @@ pub mod pool;
 pub mod race;
 pub mod runtime;
 pub mod serve;
+pub mod shard;
 pub mod sim;
 pub mod solver;
 pub mod sparse;

@@ -70,7 +70,17 @@ USAGE:
       flag any change. Machine fingerprints are compared first; a
       cross-machine diff downgrades hard fails to warnings. Exits
       nonzero on hard regressions unless --warn-only.
-  race-cli serve --matrix SPEC[,SPEC..] [--threads N] [--addr HOST:PORT]
+  race-cli shard-bench --matrix SPEC [--shards 1,2,4] [--threads N] [--nrhs N]
+                       [--secs S] [--machine ivb|skx|host] [--small] [--json]
+      Shard-scaling measurement: multi-RHS SymmSpMV vectors/s at each
+      shard count (per-domain pinned pools + storage replicas,
+      Backend::Sharded), each case anchored bitwise against
+      Backend::Serial first. --threads is the pool width *per shard*.
+      Writes BENCH_shard.json via the shared baseline writer (honors
+      RACE_BENCH_OUT, stamps the machine fingerprint) so bench-diff can
+      gate regressions against a cached previous run.
+  race-cli serve --matrix SPEC[,SPEC..] [--threads N] [--shards K]
+                 [--addr HOST:PORT]
                  [--small] [--max-requests N] [--mpk-power P] [--mpk-cache BYTES]
                  [--batch-window-us N] [--storage pack|csr] [--prec f64|f32]
                  [--solve-iter-max N] [--trace] [--hwc] [--slow-ms N]
@@ -92,7 +102,13 @@ USAGE:
       --hwc attaches process-level hardware counters and exposes them as
       race_hwc_* gauges in {\"metrics\": true}; --slow-ms N logs a
       structured line for requests slower than N ms (id, kind, matrix,
-      batch size, latency).
+      batch size, latency). --shards K partitions the machine into K
+      CPU-affinity domains (NUMA nodes when /sys exposes them), pins one
+      pool of --threads participants per domain with its own storage
+      replica, and routes batches sticky (matrix -> home domain) with
+      bounded stealing under skew; responses stay bit-identical and
+      {\"stats\"}/{\"metrics\"} grow per-shard rows / race_shard_*
+      gauges. RACE_SHARD_PIN=0 disables the affinity pinning.
   race-cli xla [--name model]
       Load + compile an AOT artifact from artifacts/.
 ";
@@ -208,6 +224,7 @@ fn main() -> Result<()> {
         "pack-stats" => cmd_pack_stats(&args),
         "explain" => cmd_explain(&args),
         "profile" => cmd_profile(&args),
+        "shard-bench" => cmd_shard_bench(&args),
         "bench-diff" => cmd_bench_diff(&args),
         "serve" => {
             let matrices: Vec<String> = args
@@ -225,6 +242,7 @@ fn main() -> Result<()> {
             let opts = race::serve::ServeOptions {
                 matrices,
                 threads: args.get_usize("threads", 4)?,
+                shards: args.get_usize("shards", 1)?,
                 addr: args.get("addr", "127.0.0.1:7777"),
                 small: args.has("small"),
                 max_requests,
@@ -851,6 +869,61 @@ fn cmd_profile(args: &Args) -> Result<()> {
         );
     }
     println!("  wrote {out} and {trace_out} ({} span events)", events.len());
+    Ok(())
+}
+
+/// Shard-scaling bench: multi-RHS SymmSpMV vectors/s at each shard
+/// count, every case anchored bitwise against `Backend::Serial`, written
+/// as `BENCH_shard.json` through the shared baseline writer (same
+/// identity keys and machine fingerprint the CI bench-diff gate expects).
+fn cmd_shard_bench(args: &Args) -> Result<()> {
+    let matrix = args.require("matrix")?;
+    let threads = args.get_usize("threads", 2)?;
+    let nrhs = args.get_usize("nrhs", 8)?;
+    let secs = args.get_f64("secs", 0.05)?;
+    let shards: Vec<usize> = args
+        .get("shards", "1,2,4")
+        .split(',')
+        .map(|s| s.trim().parse::<usize>())
+        .collect::<std::result::Result<_, _>>()?;
+    anyhow::ensure!(!shards.is_empty(), "--shards needs at least one count");
+    let mach = args.get("machine", "host");
+    let m = machine::by_name(&mach).ok_or_else(|| anyhow::anyhow!("unknown machine {mach}"))?;
+    let doc =
+        race::shard::bench_scaling(&matrix, args.has("small"), &shards, threads, nrhs, secs)?;
+    let path = race::obs::baseline::write_bench("BENCH_shard.json", doc.clone(), Some(&m))?;
+    if args.has("json") {
+        println!("{}", doc.to_string());
+        return Ok(());
+    }
+    let name = match doc.get("matrix") {
+        Some(Json::Str(s)) => s.clone(),
+        _ => matrix.clone(),
+    };
+    println!(
+        "{name}: shard scaling, {threads} threads/shard, {nrhs} rhs (bitwise-checked vs serial)"
+    );
+    println!(
+        "  {:<10} {:>7} {:>12} {:>14} {:>9}",
+        "case", "shards", "median ms", "vectors/s", "speedup"
+    );
+    if let Some(Json::Arr(cases)) = doc.get("cases") {
+        for c in cases {
+            let cname = match c.get("name") {
+                Some(Json::Str(s)) => s.as_str(),
+                _ => "?",
+            };
+            println!(
+                "  {:<10} {:>7} {:>12.3} {:>14.1} {:>8.2}x",
+                cname,
+                c.get("shards").and_then(Json::as_f64).unwrap_or(0.0) as usize,
+                c.get("median_s").and_then(Json::as_f64).unwrap_or(0.0) * 1e3,
+                c.get("vectors_per_sec").and_then(Json::as_f64).unwrap_or(0.0),
+                c.get("speedup").and_then(Json::as_f64).unwrap_or(0.0)
+            );
+        }
+    }
+    println!("  wrote {path}");
     Ok(())
 }
 

@@ -94,6 +94,19 @@ pub enum Backend {
     /// one barrier per step. The production path.
     #[default]
     Pool,
+    /// The sharded tier ([`crate::shard`]): the machine partitioned into
+    /// `shards` CPU-affinity domains, one pinned pool plus one replica
+    /// of the triangle/pack storage per domain. Single calls route to
+    /// one domain (round-robin, or router-placed through the `_routed`
+    /// entry points); multi-RHS batches fan out columns across the
+    /// replicas. `threads` ([`OpConfig::threads`]) is the pool width
+    /// *per shard*. Results are bit-identical to [`Backend::Serial`] —
+    /// every domain executes the same compiled program over a bit-wise
+    /// replica of the same storage.
+    Sharded {
+        /// Number of execution domains (clamped to at least 1).
+        shards: usize,
+    },
 }
 
 /// Which matrix encoding the hot kernels stream (see
@@ -130,6 +143,12 @@ pub struct OpConfig {
     /// Share a caller-owned worker pool instead of spawning one per
     /// handle — the serve registry points every matrix at one pool.
     pub shared_pool: Option<Arc<WorkerPool>>,
+    /// Share a caller-owned [`ShardSet`](crate::shard::ShardSet) for
+    /// [`Backend::Sharded`] execution instead of discovering domains and
+    /// pinning pools per handle — the sharded serve registry points
+    /// every matrix at one set (storage replicas stay per handle). When
+    /// set, its domain count wins over the backend's `shards` field.
+    pub shared_shards: Option<Arc<crate::shard::ShardSet>>,
     /// Matrix encoding the kernels stream (default [`Storage::Pack`],
     /// which self-falls-back to CSR when the pack would not be smaller).
     pub storage: Storage,
@@ -148,6 +167,7 @@ impl Default for OpConfig {
             cache_bytes: 2 << 20,
             rcm: true,
             shared_pool: None,
+            shared_shards: None,
             storage: Storage::Pack,
             prec: ValPrec::F64,
         }
@@ -208,6 +228,12 @@ impl OpConfig {
     /// Use a caller-owned pool for [`Backend::Pool`] execution.
     pub fn shared_pool(mut self, pool: Arc<WorkerPool>) -> Self {
         self.shared_pool = Some(pool);
+        self
+    }
+
+    /// Use a caller-owned domain set for [`Backend::Sharded`] execution.
+    pub fn shared_shards(mut self, set: Arc<crate::shard::ShardSet>) -> Self {
+        self.shared_shards = Some(set);
         self
     }
 
@@ -296,6 +322,22 @@ type ScopedFn = fn(&RaceEngine, &Csr, &[f64], &mut [f64]);
 /// Pool-program executor of a solver sweep.
 type PooledFn = fn(&WorkerPool, &StepProgram, &Csr, &[f64], &mut [f64]);
 
+/// Per-domain execution state of a [`Backend::Sharded`] handle: the
+/// domain set (pinned pools) plus one replica of the SymmSpMV storage
+/// per domain. Each replica is cloned *from inside the target domain's
+/// pool* so its pages are first-touched by a pinned thread and land in
+/// that domain's local memory. MPK plans and auxiliary sweep schedules
+/// are not replicated — those paths borrow a shard's pool but stream
+/// the shared structures.
+struct ShardState {
+    set: Arc<crate::shard::ShardSet>,
+    /// Per-domain replicas of [`Operator::upper`].
+    uppers: Vec<Csr>,
+    /// Per-domain replicas of the primary pack (`None` entries when the
+    /// handle streams CSR).
+    packs: Vec<Option<CsrPack>>,
+}
+
 /// Auxiliary distance-`k` schedule for kernels whose dependency distance
 /// differs from the main engine's (Gauss–Seidel needs distance 1,
 /// Kaczmarz distance 2).
@@ -327,6 +369,8 @@ pub struct Operator {
     /// SSOR application when the main schedule is distance-1).
     program_rev: OnceLock<StepProgram>,
     pool: OnceLock<Arc<WorkerPool>>,
+    /// Lazily built sharded-tier state ([`Backend::Sharded`] only).
+    shard: OnceLock<ShardState>,
     /// Lazily built `Upper`-kind pack of `upper` (`None` once built =
     /// infeasible, the SymmSpMV kernels fall back to CSR).
     pack: OnceLock<Option<CsrPack>>,
@@ -386,6 +430,7 @@ impl Operator {
             program: OnceLock::new(),
             program_rev: OnceLock::new(),
             pool: OnceLock::new(),
+            shard: OnceLock::new(),
             pack: OnceLock::new(),
             pack_f32: OnceLock::new(),
             mpk: Mutex::new(HashMap::new()),
@@ -535,6 +580,58 @@ impl Operator {
         })
     }
 
+    /// The sharded-tier state: domain set plus per-domain storage
+    /// replicas, built on first [`Backend::Sharded`] execution.
+    fn shard_state(&self) -> &ShardState {
+        self.shard.get_or_init(|| {
+            let set = match &self.cfg.shared_shards {
+                Some(s) => s.clone(),
+                None => {
+                    let k = match self.cfg.backend {
+                        Backend::Sharded { shards } => shards.max(1),
+                        _ => 1,
+                    };
+                    Arc::new(crate::shard::ShardSet::new(k, self.cfg.race.threads))
+                }
+            };
+            let k = set.shards();
+            let _sp = obs::span_detail("build.shard_replicas", || format!("shards={k}"));
+            let pack = self.pack(); // primary storage decision, once
+            let mut uppers = Vec::with_capacity(k);
+            let mut packs = Vec::with_capacity(k);
+            for s in 0..k {
+                uppers.push(clone_on(set.pool(s), &self.upper));
+                packs.push(pack.map(|p| clone_on(set.pool(s), p)));
+            }
+            ShardState { set, uppers, packs }
+        })
+    }
+
+    /// The domain set behind a [`Backend::Sharded`] handle (`None` for
+    /// flat backends, or before the first sharded execution).
+    pub fn shard_set(&self) -> Option<&Arc<crate::shard::ShardSet>> {
+        if !matches!(self.cfg.backend, Backend::Sharded { .. }) {
+            return None;
+        }
+        Some(&self.shard_state().set)
+    }
+
+    /// The pool a [`Backend::Pool`]/[`Backend::Sharded`] call executes
+    /// on: the flat resident pool, or the chosen (else round-robin
+    /// next) shard's pinned pool. MPK plans and auxiliary sweep
+    /// schedules are shared across domains — only the SymmSpMV
+    /// triangle/pack storage is replicated.
+    fn exec_pool(&self, shard: Option<usize>) -> Arc<WorkerPool> {
+        match self.cfg.backend {
+            Backend::Sharded { .. } => {
+                let st = self.shard_state();
+                let s = shard.unwrap_or_else(|| st.set.next_shard()) % st.set.shards();
+                st.set.pool(s).clone()
+            }
+            _ => self.worker_pool().clone(),
+        }
+    }
+
     /// Map a logical-order vector into executor numbering.
     pub fn permute(&self, v: &[f64]) -> Vec<f64> {
         permute_vec(v, &self.total_perm)
@@ -671,6 +768,37 @@ impl Operator {
             (Backend::Pool, Some(pk)) => {
                 pool::symmspmv_pool_pack(self.worker_pool(), self.program(), pk, xp, bp)
             }
+            (Backend::Sharded { .. }, pk) => self.sharded_symmspmv(pk, xp, bp, None),
+        }
+    }
+
+    /// SymmSpMV on one shard's pool and storage replica. `shard` `None`
+    /// routes round-robin. When `pk` is the handle's primary pack the
+    /// shard's replica substitutes for it; a companion pack (the f32
+    /// mixed-precision pack of a non-f32 handle) is not replicated and
+    /// streams shared memory from whichever domain runs it.
+    fn sharded_symmspmv(
+        &self,
+        pk: Option<&CsrPack>,
+        xp: &[f64],
+        bp: &mut [f64],
+        shard: Option<usize>,
+    ) {
+        let st = self.shard_state();
+        let s = shard.unwrap_or_else(|| st.set.next_shard()) % st.set.shards();
+        let _sp = obs::span_detail("exec.shard", || format!("shard={s}"));
+        let pool = st.set.pool(s);
+        match pk {
+            None => pool::symmspmv_pool(pool, self.program(), &st.uppers[s], xp, bp),
+            Some(p) => {
+                let is_primary = self
+                    .pack
+                    .get()
+                    .and_then(|o| o.as_ref())
+                    .is_some_and(|q| std::ptr::eq(p, q));
+                let rp = if is_primary { st.packs[s].as_ref().unwrap_or(p) } else { p };
+                pool::symmspmv_pool_pack(pool, self.program(), rp, xp, bp)
+            }
         }
     }
 
@@ -792,6 +920,139 @@ impl Operator {
                 bsf,
                 nrhs,
             ),
+            (Backend::Sharded { .. }, _) => self.sharded_symmspmv_multi(xsf, bsf, nrhs, None),
+        }
+    }
+
+    /// Multi-RHS SymmSpMV with an explicit placement: like
+    /// [`Operator::symmspmv_multi`], but under [`Backend::Sharded`] a
+    /// `Some(shard)` runs the whole batch on that domain's pool and
+    /// replica (the serve router's sticky placement), while `None` fans
+    /// the RHS columns out across the replicas. Flat backends ignore
+    /// `shard`. Results are bit-identical either way — each column's
+    /// accumulation never depends on how the batch is grouped.
+    pub fn symmspmv_multi_routed(
+        &self,
+        xs: &[Vec<f64>],
+        bs: &mut [Vec<f64>],
+        shard: Option<usize>,
+    ) {
+        assert_eq!(xs.len(), bs.len());
+        let m = xs.len();
+        if m == 0 {
+            return;
+        }
+        if !matches!(self.cfg.backend, Backend::Sharded { .. }) || shard.is_none() {
+            self.symmspmv_multi(xs, bs);
+            return;
+        }
+        let n = self.n();
+        if m == 1 {
+            assert_eq!(xs[0].len(), n);
+            assert_eq!(bs[0].len(), n);
+            let xp = {
+                let _s = obs::span("exec.permute_in");
+                permute_vec(&xs[0], &self.total_perm)
+            };
+            let mut bp = vec![0.0; n];
+            self.sharded_symmspmv(self.pack(), &xp, &mut bp, shard);
+            let _s = obs::span("exec.permute_out");
+            for (old, &new) in self.total_perm.iter().enumerate() {
+                bs[0][old] = bp[new as usize];
+            }
+            return;
+        }
+        for (x, b) in xs.iter().zip(bs.iter()) {
+            assert_eq!(x.len(), n);
+            assert_eq!(b.len(), n);
+        }
+        let mut xsf = vec![0.0; n * m];
+        for (j, x) in xs.iter().enumerate() {
+            for (old, &new) in self.total_perm.iter().enumerate() {
+                xsf[new as usize * m + j] = x[old];
+            }
+        }
+        let mut bsf = vec![0.0; n * m];
+        self.sharded_symmspmv_multi(&xsf, &mut bsf, m, shard);
+        for (j, b) in bs.iter_mut().enumerate() {
+            for (old, &new) in self.total_perm.iter().enumerate() {
+                b[old] = bsf[new as usize * m + j];
+            }
+        }
+    }
+
+    /// Sharded multi-RHS dispatch. `Some(shard)` keeps the whole batch
+    /// on one domain (sticky); `None` splits the RHS columns into up to
+    /// `shards` chunks executed concurrently, each on its own pool and
+    /// replica (replica fan-out). Per-column results are bit-identical
+    /// under any grouping: a multi-RHS sweep accumulates each column
+    /// independently in the same program order.
+    fn sharded_symmspmv_multi(
+        &self,
+        xsf: &[f64],
+        bsf: &mut [f64],
+        nrhs: usize,
+        shard: Option<usize>,
+    ) {
+        let st = self.shard_state();
+        let k = st.set.shards();
+        if let Some(s) = shard {
+            let s = s % k;
+            let _sp = obs::span_detail("exec.shard", || format!("shard={s} nrhs={nrhs}"));
+            self.sharded_multi_on(st, s, xsf, bsf, nrhs);
+            return;
+        }
+        let chunks = k.min(nrhs);
+        if chunks <= 1 {
+            let s = st.set.next_shard();
+            let _sp = obs::span_detail("exec.shard", || format!("shard={s} nrhs={nrhs}"));
+            self.sharded_multi_on(st, s, xsf, bsf, nrhs);
+            return;
+        }
+        let _sp = obs::span_detail("exec.shard_fanout", || {
+            format!("shards={chunks} nrhs={nrhs}")
+        });
+        let n = self.n();
+        let bounds: Vec<(usize, usize)> =
+            (0..chunks).map(|c| (c * nrhs / chunks, (c + 1) * nrhs / chunks)).collect();
+        let chunk_x: Vec<Vec<f64>> = bounds
+            .iter()
+            .map(|&(j0, j1)| {
+                let w = j1 - j0;
+                let mut cx = vec![0.0; n * w];
+                for r in 0..n {
+                    for j in j0..j1 {
+                        cx[r * w + (j - j0)] = xsf[r * nrhs + j];
+                    }
+                }
+                cx
+            })
+            .collect();
+        let mut chunk_b: Vec<Vec<f64>> =
+            bounds.iter().map(|&(j0, j1)| vec![0.0; n * (j1 - j0)]).collect();
+        std::thread::scope(|sc| {
+            for (c, (cx, cb)) in chunk_x.iter().zip(chunk_b.iter_mut()).enumerate() {
+                let w = bounds[c].1 - bounds[c].0;
+                sc.spawn(move || self.sharded_multi_on(st, c, cx, cb, w));
+            }
+        });
+        for (c, &(j0, j1)) in bounds.iter().enumerate() {
+            let w = j1 - j0;
+            let cb = &chunk_b[c];
+            for r in 0..n {
+                for j in j0..j1 {
+                    bsf[r * nrhs + j] = cb[r * w + (j - j0)];
+                }
+            }
+        }
+    }
+
+    /// One multi-RHS sweep on shard `s`'s pool over its storage replica.
+    fn sharded_multi_on(&self, st: &ShardState, s: usize, xsf: &[f64], bsf: &mut [f64], m: usize) {
+        let pool = st.set.pool(s);
+        match st.packs[s].as_ref() {
+            Some(pk) => pool::symmspmv_multi_pool_pack(pool, self.program(), pk, xsf, bsf, m),
+            None => pool::symmspmv_race_multi(pool, self.program(), &st.uppers[s], xsf, bsf, m),
         }
     }
 
@@ -862,13 +1123,27 @@ impl Operator {
     /// Matrix powers in the plan's numbering (`xp` pre-permuted with
     /// [`MpkHandle::permute`]) — the allocation-light path benches time.
     pub fn powers_permuted(&self, h: &MpkHandle, xp: &[f64]) -> Vec<Vec<f64>> {
+        self.powers_permuted_routed(h, xp, None)
+    }
+
+    /// [`Operator::powers_permuted`] with an explicit shard placement
+    /// under [`Backend::Sharded`] (`None` routes round-robin; flat
+    /// backends ignore it). The level-blocked plan itself is shared —
+    /// only the executing pool changes.
+    fn powers_permuted_routed(
+        &self,
+        h: &MpkHandle,
+        xp: &[f64],
+        shard: Option<usize>,
+    ) -> Vec<Vec<f64>> {
         let _sp = obs::span_detail("exec.powers", || format!("p={}", h.plan.cfg.p));
         let m = h.power_mat();
         match self.cfg.backend {
             Backend::Serial => kernels::mpk_powers_on(&h.plan, m, xp, 1),
             Backend::Scoped => kernels::mpk_powers_on(&h.plan, m, xp, self.cfg.race.threads),
-            Backend::Pool => {
-                pool::mpk_powers_pool_on(self.worker_pool(), &h.prog, &h.plan, m, xp)
+            Backend::Pool | Backend::Sharded { .. } => {
+                let wp = self.exec_pool(shard);
+                pool::mpk_powers_pool_on(&wp, &h.prog, &h.plan, m, xp)
             }
         }
     }
@@ -878,6 +1153,21 @@ impl Operator {
     /// multi-RHS variant the batched MPK serve endpoint rides on.
     /// Bit-identical to per-vector [`Operator::powers`] calls.
     pub fn powers_multi(&self, xs: &[Vec<f64>], p: usize) -> Result<Vec<Vec<f64>>> {
+        self.powers_multi_routed(xs, p, None)
+    }
+
+    /// [`Operator::powers_multi`] with an explicit shard placement under
+    /// [`Backend::Sharded`] (`None` routes round-robin; flat backends
+    /// ignore it). Unlike the SymmSpMV batch path, an MPK batch always
+    /// runs on a single pool: the level-blocked plan's value is cache
+    /// residency *across powers*, which splitting the batch would
+    /// dilute.
+    pub fn powers_multi_routed(
+        &self,
+        xs: &[Vec<f64>],
+        p: usize,
+        shard: Option<usize>,
+    ) -> Result<Vec<Vec<f64>>> {
         let m = xs.len();
         if m == 0 {
             return Ok(Vec::new());
@@ -889,7 +1179,7 @@ impl Operator {
         let h = self.mpk(p)?;
         if m == 1 {
             let xp = permute_vec(&xs[0], &h.total_perm);
-            let ys = self.powers_permuted(&h, &xp);
+            let ys = self.powers_permuted_routed(&h, &xp, shard);
             return Ok(vec![unpermute_vec(&ys[p - 1], &h.total_perm)]);
         }
         let mut xsf = vec![0.0; n * m];
@@ -904,8 +1194,9 @@ impl Operator {
             Backend::Scoped => {
                 kernels::mpk_powers_multi_on(&h.plan, pm, &xsf, m, self.cfg.race.threads)
             }
-            Backend::Pool => {
-                pool::mpk_powers_multi_pool_on(self.worker_pool(), &h.prog, &h.plan, pm, &xsf, m)
+            Backend::Pool | Backend::Sharded { .. } => {
+                let wp = self.exec_pool(shard);
+                pool::mpk_powers_multi_pool_on(&wp, &h.prog, &h.plan, pm, &xsf, m)
             }
         };
         let last = &ys[p - 1];
@@ -948,17 +1239,10 @@ impl Operator {
                 let t = self.cfg.race.threads;
                 kernels::mpk_three_term_on(&h.plan, m, &zp, &z0p, sigma, tau, rho, t)
             }
-            Backend::Pool => pool::mpk_three_term_pool_on(
-                self.worker_pool(),
-                &h.prog,
-                &h.plan,
-                m,
-                &zp,
-                &z0p,
-                sigma,
-                tau,
-                rho,
-            ),
+            Backend::Pool | Backend::Sharded { .. } => {
+                let wp = self.exec_pool(None);
+                pool::mpk_three_term_pool_on(&wp, &h.prog, &h.plan, m, &zp, &z0p, sigma, tau, rho)
+            }
         };
         Ok(zs.iter().map(|z| unpermute_vec(z, &h.total_perm)).collect())
     }
@@ -1045,10 +1329,11 @@ impl Operator {
                 }
             }
             Backend::Scoped => kernels::ssor_precond(eng, a, &rp, &mut zp),
-            Backend::Pool => {
-                let wp: &WorkerPool = self.worker_pool();
-                pool::gauss_seidel_pool(wp, prog, a, &rp, &mut zp);
-                pool::gauss_seidel_pool_rev(wp, prog_rev, a, &rp, &mut zp);
+            Backend::Pool | Backend::Sharded { .. } => {
+                // both sweeps on the same pool — one placement per apply
+                let wp = self.exec_pool(None);
+                pool::gauss_seidel_pool(&wp, prog, a, &rp, &mut zp);
+                pool::gauss_seidel_pool_rev(&wp, prog_rev, a, &rp, &mut zp);
             }
         }
         for (old, &new) in perm.iter().enumerate() {
@@ -1107,15 +1392,31 @@ impl Operator {
                 }
             }
             Backend::Scoped => scoped(eng, a, &bp, &mut xp),
-            Backend::Pool => {
-                let wp: &WorkerPool = self.worker_pool();
-                pooled(wp, prog, a, &bp, &mut xp);
+            Backend::Pool | Backend::Sharded { .. } => {
+                let wp = self.exec_pool(None);
+                pooled(&wp, prog, a, &bp, &mut xp);
             }
         }
         for (old, &new) in perm.iter().enumerate() {
             x[old] = xp[new as usize];
         }
     }
+}
+
+/// Clone `src` from inside one of `pool`'s resident workers, so the new
+/// allocation is first-touched by a pinned thread and its pages land in
+/// that domain's local memory (falls back to the calling thread for a
+/// single-participant pool — there is no resident worker to delegate
+/// to). The clone is bit-wise regardless of which thread runs it.
+fn clone_on<T: Clone + Send + Sync>(pool: &WorkerPool, src: &T) -> T {
+    let target = if pool.threads() > 1 { 1 } else { 0 };
+    let slot = Mutex::new(None);
+    pool.run(|wid| {
+        if wid == target {
+            *slot.lock().unwrap() = Some(src.clone());
+        }
+    });
+    slot.into_inner().unwrap().expect("replica clone ran on the target worker")
 }
 
 /// Scoped-spawn execution of a step program: up to `threads` scoped

@@ -165,6 +165,25 @@ impl WorkerPool {
     /// (`threads - 1` resident workers are spawned; the caller is the
     /// last participant).
     pub fn new(threads: usize) -> WorkerPool {
+        Self::build(threads, None)
+    }
+
+    /// Like [`WorkerPool::new`], but every resident worker pins itself to
+    /// one CPU of `cpus` (worker `id` takes `cpus[(id - 1) % cpus.len()]`)
+    /// before entering its wait loop. The sharded tier uses this to keep
+    /// each domain's pool on its own affinity group ([`crate::shard`]).
+    ///
+    /// Pinning is best effort: on hosts where `sched_setaffinity` is
+    /// unavailable or denied the workers simply float, results are
+    /// unaffected either way. The *caller* (participant 0) is never
+    /// pinned by the pool — it is a different thread on every `run` call;
+    /// callers that want locality pin themselves.
+    pub fn with_affinity(threads: usize, cpus: &[usize]) -> WorkerPool {
+        let cpus = if cpus.is_empty() { None } else { Some(cpus.to_vec()) };
+        Self::build(threads, cpus)
+    }
+
+    fn build(threads: usize, cpus: Option<Vec<usize>>) -> WorkerPool {
         let threads = threads.max(1);
         let shared = Arc::new(Shared {
             state: Mutex::new(State { epoch: 0, job: None, done: 0, shutdown: false }),
@@ -175,7 +194,8 @@ impl WorkerPool {
         let handles = (1..threads)
             .map(|id| {
                 let sh = shared.clone();
-                std::thread::spawn(move || worker_loop(sh, id))
+                let cpu = cpus.as_ref().map(|c| c[(id - 1) % c.len()]);
+                std::thread::spawn(move || worker_loop(sh, id, cpu))
             })
             .collect();
         WorkerPool {
@@ -387,7 +407,11 @@ impl Drop for WorkerPool {
     }
 }
 
-fn worker_loop(shared: Arc<Shared>, id: usize) {
+fn worker_loop(shared: Arc<Shared>, id: usize, cpu: Option<usize>) {
+    if let Some(c) = cpu {
+        // best effort; a denied or absent syscall leaves the worker floating
+        let _ = crate::shard::topo::pin_current_thread(&[c]);
+    }
     let mut seen = 0u64;
     loop {
         let job = {
@@ -421,6 +445,26 @@ mod tests {
     fn run_reaches_every_worker() {
         for threads in [1usize, 2, 5] {
             let pool = WorkerPool::new(threads);
+            let hits = AtomicUsize::new(0);
+            let ids = Mutex::new(Vec::new());
+            pool.run(|wid| {
+                hits.fetch_add(1, Ordering::SeqCst);
+                ids.lock().unwrap().push(wid);
+            });
+            assert_eq!(hits.load(Ordering::SeqCst), threads);
+            let mut got = ids.into_inner().unwrap();
+            got.sort_unstable();
+            assert_eq!(got, (0..threads).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn affinity_pool_runs_like_a_plain_pool() {
+        // pinning is best effort and must never change job semantics,
+        // whatever the host's affinity support — including an empty list
+        for (threads, cpus) in [(1usize, vec![0usize]), (2, vec![0, 1]), (4, vec![0]), (3, vec![])]
+        {
+            let pool = WorkerPool::with_affinity(threads, &cpus);
             let hits = AtomicUsize::new(0);
             let ids = Mutex::new(Vec::new());
             pool.run(|wid| {

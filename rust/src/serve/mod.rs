@@ -26,6 +26,14 @@
 //!   full-precision per-iteration SpMVs go through the same batcher, so
 //!   concurrent solves coalesce their sweeps. One request exercises
 //!   long-lived pool residency instead of a single kernel call.
+//! * **Sharded tier** — with `--shards k` the registry builds one
+//!   shared [`crate::shard::ShardSet`] (`k` CPU-pinned pools, one
+//!   storage replica per domain per operator) and places every batch
+//!   with the sticky [`crate::shard::Router`] (matrix → home domain,
+//!   bounded steal under skew; multi-RHS batches fan out across
+//!   replicas). Responses stay bit-identical to the flat pool, and
+//!   `{"stats"}` / `{"metrics"}` grow per-shard rows / `race_shard_*`
+//!   gauges — at `--shards 1` both keep their exact historical shape.
 //! * **Structured errors and telemetry** — malformed requests,
 //!   non-finite inputs, unknown matrices, out-of-range powers and failed
 //!   solves answer `{"error": {"code", "message"}}`, and every error
@@ -73,7 +81,8 @@ pub use batch::BatchResult;
 pub use server::{serve, Server};
 
 use crate::coordinator::resolve_matrix;
-use crate::op::{OpConfig, Operator, Storage};
+use crate::obs::hist::Hist;
+use crate::op::{Backend, OpConfig, Operator, Storage};
 use crate::pool::WorkerPool;
 use crate::sparse::ValPrec;
 use crate::util::json::Json;
@@ -90,8 +99,15 @@ pub struct ServeOptions {
     /// paths). The first one is the default for requests that don't name
     /// a matrix.
     pub matrices: Vec<String>,
-    /// Pool participants.
+    /// Pool participants (per shard when `shards > 1`).
     pub threads: usize,
+    /// Execution domains (`--shards`). `1` (the default) keeps the
+    /// single flat pool and is byte-identical to builds predating the
+    /// flag; `> 1` builds one [`crate::shard::ShardSet`] shared by every
+    /// registered operator ([`Backend::Sharded`]), routes batches with a
+    /// sticky [`crate::shard::Router`], and adds `race_shard_*` gauges
+    /// to the `{"metrics"}` exposition.
+    pub shards: usize,
     /// Listen address, e.g. `127.0.0.1:7777` (port 0 picks one).
     pub addr: String,
     /// Build small variants of corpus matrices.
@@ -137,6 +153,7 @@ impl Default for ServeOptions {
         ServeOptions {
             matrices: Vec::new(),
             threads: 4,
+            shards: 1,
             addr: "127.0.0.1:7777".to_string(),
             small: false,
             max_requests: None,
@@ -251,6 +268,18 @@ impl MatrixEntry {
     }
 }
 
+/// The sharded-tier runtime, present only when the service was built
+/// with `--shards > 1`: one [`crate::shard::ShardSet`] shared by every
+/// registered operator, the sticky placement [`crate::shard::Router`],
+/// and per-shard batch service-time histograms.
+struct ShardRuntime {
+    set: Arc<crate::shard::ShardSet>,
+    router: crate::shard::Router,
+    /// Batch service nanoseconds per shard (the shard the router placed
+    /// the batch on — multi-RHS fan-outs are attributed to their home).
+    batch_lat: Vec<Hist>,
+}
+
 /// The resident service: operator registry + shared pool, shared across
 /// connections.
 pub struct MatvecService {
@@ -272,6 +301,8 @@ pub struct MatvecService {
     hwc_group: Option<crate::obs::hwc::HwcGroup>,
     /// Counter values at build time; gauges report deltas from here.
     hwc_origin: Option<crate::obs::hwc::HwcSample>,
+    /// Sharded-tier state (`--shards > 1` only).
+    shard: Option<ShardRuntime>,
 }
 
 impl MatvecService {
@@ -295,24 +326,50 @@ impl MatvecService {
             (None, "off")
         };
         let hwc_origin = hwc_group.as_ref().map(|g| g.sample());
-        let pool = Arc::new(WorkerPool::new(threads));
-        if opts.hwc {
-            pool.set_hwc(true);
-        }
+        // one execution tier for the whole registry: a flat shared pool,
+        // or (--shards > 1) a shared shard set with one pinned pool per
+        // domain plus the sticky placement router
+        let shard = if opts.shards > 1 {
+            let set = Arc::new(crate::shard::ShardSet::new(opts.shards, threads));
+            if opts.hwc {
+                set.set_hwc(true);
+            }
+            Some(ShardRuntime {
+                router: crate::shard::Router::new(set.shards(), 0),
+                batch_lat: (0..set.shards()).map(|_| Hist::latency()).collect(),
+                set,
+            })
+        } else {
+            None
+        };
+        let pool = match &shard {
+            Some(_) => None,
+            None => {
+                let pool = Arc::new(WorkerPool::new(threads));
+                if opts.hwc {
+                    pool.set_hwc(true);
+                }
+                Some(pool)
+            }
+        };
         let mut entries = Vec::with_capacity(opts.matrices.len());
         for spec in &opts.matrices {
             let (name, a0) = resolve_matrix(spec, opts.small)
                 .with_context(|| format!("registering matrix {spec:?}"))?;
-            let op = Operator::build(
-                &a0,
-                OpConfig::new()
-                    .threads(threads)
-                    .cache_bytes(opts.mpk_cache_bytes.max(1))
-                    .storage(opts.storage)
-                    .precision(opts.prec)
-                    .shared_pool(pool.clone()),
-            )
-            .with_context(|| format!("compiling operator for {spec:?}"))?;
+            let mut cfg = OpConfig::new()
+                .threads(threads)
+                .cache_bytes(opts.mpk_cache_bytes.max(1))
+                .storage(opts.storage)
+                .precision(opts.prec);
+            cfg = match (&pool, &shard) {
+                (Some(p), _) => cfg.shared_pool(p.clone()),
+                (None, Some(sh)) => cfg
+                    .backend(Backend::Sharded { shards: sh.set.shards() })
+                    .shared_shards(sh.set.clone()),
+                (None, None) => unreachable!("one execution tier always exists"),
+            };
+            let op = Operator::build(&a0, cfg)
+                .with_context(|| format!("compiling operator for {spec:?}"))?;
             entries.push(Arc::new(MatrixEntry {
                 name,
                 n: op.n(),
@@ -335,6 +392,7 @@ impl MatvecService {
             hwc_reason,
             hwc_group,
             hwc_origin,
+            shard,
         })
     }
 
@@ -388,7 +446,17 @@ impl MatvecService {
         name: Option<&str>,
         x: &[f64],
     ) -> Result<(Vec<f64>, f64, usize), ServeError> {
-        let entry = self.entry(name)?;
+        self.matvec_on(self.entry(name)?, x)
+    }
+
+    /// [`Self::matvec`] on an already-resolved registry entry — the
+    /// variant [`Self::handle`] dispatches to, so a request resolves its
+    /// matrix exactly once however it came in.
+    fn matvec_on(
+        &self,
+        entry: &MatrixEntry,
+        x: &[f64],
+    ) -> Result<(Vec<f64>, f64, usize), ServeError> {
         let t0 = std::time::Instant::now();
         Self::check_input(entry, x).map_err(|e| {
             self.metrics.matrix_error(entry.idx);
@@ -433,11 +501,22 @@ impl MatvecService {
     fn run_batch(&self, entry: &MatrixEntry, xs: &[Vec<f64>]) -> (Vec<Vec<f64>>, f64) {
         let n = entry.n;
         let m = xs.len();
+        // sharded tier: take a placement ticket for the batch. Single
+        // vectors run sticky on the placed shard (its replica is warm);
+        // multi-RHS batches fan out across every replica instead, with
+        // the ticket still accounting depth against the home placement.
+        let ticket = self.shard.as_ref().map(|sh| sh.router.place(entry.idx));
         let (bs, secs) = crate::obs::time("serve.batch_matvec", || {
             let mut bs: Vec<Vec<f64>> = (0..m).map(|_| vec![0.0; n]).collect();
-            entry.op.symmspmv_multi(xs, &mut bs);
+            match &ticket {
+                Some(t) if m == 1 => entry.op.symmspmv_multi_routed(xs, &mut bs, Some(t.shard())),
+                _ => entry.op.symmspmv_multi(xs, &mut bs),
+            }
             bs
         });
+        if let (Some(sh), Some(t)) = (&self.shard, &ticket) {
+            sh.batch_lat[t.shard()].observe((secs * 1e9) as u64);
+        }
         self.metrics.batches.fetch_add(1, Ordering::Relaxed);
         self.metrics.batched_vectors.fetch_add(m as u64, Ordering::Relaxed);
         self.metrics.max_batch.fetch_max(m as u64, Ordering::Relaxed);
@@ -456,7 +535,17 @@ impl MatvecService {
         x: &[f64],
         p: usize,
     ) -> Result<(Vec<f64>, f64, usize), ServeError> {
-        let entry = self.entry(name)?;
+        self.mpk_on(self.entry(name)?, x, p)
+    }
+
+    /// [`Self::mpk`] on an already-resolved registry entry (the
+    /// [`Self::handle`] dispatch target).
+    fn mpk_on(
+        &self,
+        entry: &MatrixEntry,
+        x: &[f64],
+        p: usize,
+    ) -> Result<(Vec<f64>, f64, usize), ServeError> {
         let t0 = std::time::Instant::now();
         Self::check_input(entry, x).map_err(|e| {
             self.metrics.matrix_error(entry.idx);
@@ -483,9 +572,19 @@ impl MatvecService {
         self.metrics.matrix(entry.idx).mpk_requests.fetch_add(1, Ordering::Relaxed);
         let batcher = entry.mpk_batcher(p, self.batch_window_us);
         let r = batcher.matvec(x.to_vec(), |xs| {
+            // MPK batches always run whole on one pool (the level-block
+            // plan's value is cache residency across powers), so the
+            // sharded tier routes them sticky via the placement ticket
+            let ticket = self.shard.as_ref().map(|sh| sh.router.place(entry.idx));
             let (ys, secs) = crate::obs::time("serve.batch_mpk", || {
-                entry.op.powers_multi(xs, p).expect("plan prepared before enqueue")
+                entry
+                    .op
+                    .powers_multi_routed(xs, p, ticket.as_ref().map(|t| t.shard()))
+                    .expect("plan prepared before enqueue")
             });
+            if let (Some(sh), Some(t)) = (&self.shard, &ticket) {
+                sh.batch_lat[t.shard()].observe((secs * 1e9) as u64);
+            }
             self.metrics.mpk_batches.fetch_add(1, Ordering::Relaxed);
             self.metrics.mpk_batched_vectors.fetch_add(xs.len() as u64, Ordering::Relaxed);
             self.metrics.max_batch.fetch_max(xs.len() as u64, Ordering::Relaxed);
@@ -512,7 +611,17 @@ impl MatvecService {
         rhs: &[f64],
         cfg: &crate::solver::SolveConfig,
     ) -> Result<crate::solver::SolveResult, ServeError> {
-        let entry = self.entry(name)?;
+        self.solve_on(self.entry(name)?, rhs, cfg)
+    }
+
+    /// [`Self::solve`] on an already-resolved registry entry (the
+    /// [`Self::handle`] dispatch target).
+    fn solve_on(
+        &self,
+        entry: &MatrixEntry,
+        rhs: &[f64],
+        cfg: &crate::solver::SolveConfig,
+    ) -> Result<crate::solver::SolveResult, ServeError> {
         let t0 = std::time::Instant::now();
         Self::check_input(entry, rhs).map_err(|e| {
             self.metrics.matrix_error(entry.idx);
@@ -585,9 +694,7 @@ impl MatvecService {
             ("mpk", Registry::latency_json(&m.mpk_lat)),
             ("solve", Registry::latency_json(&m.solve_lat)),
         ]);
-        Json::obj(vec![(
-            "stats",
-            Json::obj(vec![
+        let mut fields = vec![
                 ("requests", Json::Num(m.requests.load(Ordering::Relaxed) as f64)),
                 ("errors", Json::Num(m.errors.load(Ordering::Relaxed) as f64)),
                 ("matvecs", Json::Num(m.matvecs.load(Ordering::Relaxed) as f64)),
@@ -616,8 +723,30 @@ impl MatvecService {
                 ("latency_ms", latency),
                 ("batch_p50", Json::Num(m.batch_sizes.quantile(0.5))),
                 ("matrices", Json::Arr(matrices)),
-            ]),
-        )])
+        ];
+        // per-shard rows ride along only on sharded builds, so the
+        // `--shards 1` report keeps its exact historical shape
+        if let Some(sh) = &self.shard {
+            let rows: Vec<Json> = (0..sh.set.shards())
+                .map(|s| {
+                    let d = sh.set.domain(s);
+                    let h = &sh.batch_lat[s];
+                    Json::obj(vec![
+                        ("shard", Json::Num(s as f64)),
+                        ("cpus", Json::Num(d.cpus.len() as f64)),
+                        ("numa", Json::Bool(d.numa)),
+                        ("depth", Json::Num(sh.router.depth(s) as f64)),
+                        ("placements", Json::Num(sh.router.placements(s) as f64)),
+                        ("steals", Json::Num(sh.router.steals(s) as f64)),
+                        ("batches", Json::Num(h.count() as f64)),
+                        ("batch_p50_ms", Json::Num(h.quantile(0.5) / 1e6)),
+                        ("batch_p99_ms", Json::Num(h.quantile(0.99) / 1e6)),
+                    ])
+                })
+                .collect();
+            fields.push(("shards", Json::Arr(rows)));
+        }
+        Json::obj(vec![("stats", Json::obj(fields))])
     }
 
     /// The metrics registry as Prometheus-style text exposition (the
@@ -630,7 +759,73 @@ impl MatvecService {
         if self.hwc_requested {
             text.push_str(&self.hwc_text());
         }
+        // `race_shard_*` gauges exist only on sharded builds: at
+        // `--shards 1` the exposition stays byte-identical to builds
+        // predating the flag (same contract as the hwc block above)
+        if let Some(sh) = &self.shard {
+            text.push_str(&Self::shard_text(sh));
+        }
         text
+    }
+
+    /// The `race_shard_*` exposition block: per-shard topology info,
+    /// router queue depths, placement/steal counters, batch service-time
+    /// quantiles, and — when [`crate::obs`] is enabled — the imbalance
+    /// of each shard pool's most recent timed execution.
+    fn shard_text(sh: &ShardRuntime) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        let k = sh.set.shards();
+        let _ = writeln!(out, "# TYPE race_shard_info gauge");
+        for s in 0..k {
+            let d = sh.set.domain(s);
+            let _ = writeln!(
+                out,
+                "race_shard_info{{shard=\"{s}\",cpus=\"{}\",numa=\"{}\"}} 1",
+                d.cpus.len(),
+                d.numa
+            );
+        }
+        let _ = writeln!(out, "# TYPE race_shard_queue_depth gauge");
+        for s in 0..k {
+            let _ = writeln!(out, "race_shard_queue_depth{{shard=\"{s}\"}} {}", sh.router.depth(s));
+        }
+        let _ = writeln!(out, "# TYPE race_shard_placements_total counter");
+        for s in 0..k {
+            let _ = writeln!(
+                out,
+                "race_shard_placements_total{{shard=\"{s}\"}} {}",
+                sh.router.placements(s)
+            );
+        }
+        let _ = writeln!(out, "# TYPE race_shard_steals_total counter");
+        for s in 0..k {
+            let _ =
+                writeln!(out, "race_shard_steals_total{{shard=\"{s}\"}} {}", sh.router.steals(s));
+        }
+        let _ = writeln!(out, "# TYPE race_shard_batch_seconds summary");
+        for s in 0..k {
+            let h = &sh.batch_lat[s];
+            for q in [0.5, 0.99] {
+                let _ = writeln!(
+                    out,
+                    "race_shard_batch_seconds{{shard=\"{s}\",quantile=\"{q}\"}} {:.9}",
+                    h.quantile(q) / 1e9
+                );
+            }
+            let _ = writeln!(out, "race_shard_batch_seconds_count{{shard=\"{s}\"}} {}", h.count());
+        }
+        let reports = sh.set.take_exec_reports();
+        if reports.iter().any(Option::is_some) {
+            let _ = writeln!(out, "# TYPE race_shard_imbalance gauge");
+            for (s, r) in reports.iter().enumerate() {
+                if let Some(r) = r {
+                    let _ =
+                        writeln!(out, "race_shard_imbalance{{shard=\"{s}\"}} {:.6}", r.imbalance);
+                }
+            }
+        }
+        out
     }
 
     /// The `race_hwc_*` exposition block (process-scope counter deltas
@@ -743,9 +938,12 @@ impl MatvecService {
         };
         info.matrix =
             Some(name.map(str::to_string).unwrap_or_else(|| self.entries[0].name.clone()));
+        // resolve the registry entry exactly once — every dispatch below
+        // reuses the handle instead of re-walking the registry per call
+        let entry = self.entry(name)?;
         if let Some(sj) = req.get("solve") {
             info.kind = "solve";
-            let resp = self.handle_solve(name, sj)?;
+            let resp = self.handle_solve(entry, sj)?;
             return Ok((resp, false));
         }
         let x = req.get("x").and_then(|j| j.as_f64_arr()).ok_or_else(|| {
@@ -763,7 +961,7 @@ impl MatvecService {
                 .ok_or_else(|| ServeError::new("bad_power", "\"p\" must be a positive integer"))?
                 as usize;
             info.kind = "mpk";
-            let (y, secs, m) = self.mpk(name, &x, p)?;
+            let (y, secs, m) = self.mpk_on(entry, &x, p)?;
             info.batch = m;
             let resp = Json::obj(vec![
                 ("y", Json::arr_f64(&y)),
@@ -774,7 +972,7 @@ impl MatvecService {
             return Ok((resp.to_string(), false));
         }
         info.kind = "matvec";
-        let (b, secs, m) = self.matvec(name, &x)?;
+        let (b, secs, m) = self.matvec_on(entry, &x)?;
         info.batch = m;
         let resp = Json::obj(vec![
             ("b", Json::arr_f64(&b)),
@@ -786,7 +984,7 @@ impl MatvecService {
 
     /// Parse and serve one `{"solve": {...}}` request (the catalogue and
     /// a worked transcript live in `docs/SERVE_PROTOCOL.md`).
-    fn handle_solve(&self, name: Option<&str>, sj: &Json) -> Result<String, ServeError> {
+    fn handle_solve(&self, entry: &MatrixEntry, sj: &Json) -> Result<String, ServeError> {
         use crate::solver::{Method, SolveConfig};
         let rhs = sj.get("rhs").and_then(|j| j.as_f64_arr()).ok_or_else(|| {
             ServeError::new("bad_request", "\"solve\" must be {\"rhs\": [..], ..}")
@@ -822,7 +1020,7 @@ impl MatvecService {
             })?;
             cfg = cfg.lambda(b[0], b[1]);
         }
-        let res = self.solve(name, &rhs, &cfg)?;
+        let res = self.solve_on(entry, &rhs, &cfg)?;
         let resp = Json::obj(vec![
             ("x", Json::arr_f64(&res.x)),
             ("method", Json::Str(res.method.name().to_string())),
@@ -1372,5 +1570,82 @@ mod tests {
         assert!(names.iter().any(|s| s == "serve.request"), "{names:?}");
         assert!(names.iter().any(|s| s == "serve.batch_matvec"), "{names:?}");
         crate::obs::set_enabled(false); // don't leak into other tests
+    }
+
+    #[test]
+    fn sharded_service_is_bit_identical_to_flat() {
+        let specs = &["stencil2d:8x8", "graphene:6x6"];
+        let flat = MatvecService::build(&opts(specs)).unwrap();
+        let mut o = opts(specs);
+        o.shards = 2;
+        let sharded = MatvecService::build(&o).unwrap();
+        for e in flat.entries() {
+            let x: Vec<f64> =
+                (0..e.n).map(|i| ((i * 3 + 2) % 13) as f64 * 0.25 - 1.5).collect();
+            let (bf, _, _) = flat.matvec(Some(&e.name), &x).unwrap();
+            let (bs, _, _) = sharded.matvec(Some(&e.name), &x).unwrap();
+            assert_eq!(bf, bs, "{} matvec must be bit-identical", e.name);
+            let (yf, _, _) = flat.mpk(Some(&e.name), &x, 2).unwrap();
+            let (ys, _, _) = sharded.mpk(Some(&e.name), &x, 2).unwrap();
+            assert_eq!(yf, ys, "{} mpk must be bit-identical", e.name);
+        }
+        // multi-RHS batches fan out across the replicas and still agree
+        let n = flat.entries()[0].n;
+        let xs: Vec<Vec<f64>> = (0..5)
+            .map(|j| (0..n).map(|i| ((i * (j + 2)) % 7) as f64 * 0.5 - 1.0).collect())
+            .collect();
+        assert_eq!(
+            flat.matvec_batch(None, &xs).unwrap(),
+            sharded.matvec_batch(None, &xs).unwrap()
+        );
+        // and a whole solve reproduces the flat tier's iteration history
+        let rhs = vec![1.0; n];
+        let cfg = crate::solver::SolveConfig::new().tol(1e-9);
+        let rf = flat.solve(None, &rhs, &cfg).unwrap();
+        let rs = sharded.solve(None, &rhs, &cfg).unwrap();
+        assert!(rf.converged && rs.converged);
+        assert_eq!(rf.iterations, rs.iterations);
+        assert_eq!(rf.x, rs.x, "sharded solve must be bit-identical");
+    }
+
+    #[test]
+    fn shard_flag_gates_stats_and_metrics_exposition() {
+        // --shards 1 (default): no race_shard_* lines, no "shards" rows
+        let svc1 = MatvecService::build(&opts(&["stencil2d:6x6"])).unwrap();
+        let n = svc1.entries()[0].n;
+        let ones = vec![1.0; n];
+        svc1.matvec(None, &ones).unwrap();
+        assert!(!svc1.metrics_text().contains("race_shard"));
+        let s = svc1.stats_json();
+        assert!(s.get("stats").unwrap().get("shards").is_none());
+        // --shards 2: gauges and per-shard stats rows appear
+        let mut o = opts(&["stencil2d:6x6"]);
+        o.shards = 2;
+        let svc2 = MatvecService::build(&o).unwrap();
+        svc2.matvec(None, &ones).unwrap();
+        let text = svc2.metrics_text();
+        assert!(text.contains("race_shard_info{shard=\"0\""), "{text}");
+        assert!(text.contains("race_shard_queue_depth{shard=\"1\"} 0"), "{text}");
+        assert!(text.contains("race_shard_placements_total{shard=\"0\"} 1"), "{text}");
+        assert!(text.contains("race_shard_steals_total{shard=\"0\"} 0"), "{text}");
+        assert!(
+            text.contains("race_shard_batch_seconds{shard=\"0\",quantile=\"0.5\"}"),
+            "{text}"
+        );
+        let s = svc2.stats_json();
+        let stats = s.get("stats").unwrap();
+        let rows = match stats.get("shards") {
+            Some(Json::Arr(v)) => v,
+            other => panic!("expected shard rows, got {other:?}"),
+        };
+        assert_eq!(rows.len(), 2);
+        // the single matvec ran sticky on its home shard (entry 0 -> 0)
+        assert_eq!(rows[0].get("placements").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(rows[0].get("batches").and_then(Json::as_f64), Some(1.0));
+        assert!(rows[0].get("batch_p50_ms").and_then(Json::as_f64).unwrap() > 0.0);
+        for r in rows {
+            assert_eq!(r.get("depth").and_then(Json::as_f64), Some(0.0), "drained queues");
+            assert_eq!(r.get("steals").and_then(Json::as_f64), Some(0.0), "no skew, no steal");
+        }
     }
 }

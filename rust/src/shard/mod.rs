@@ -1,0 +1,224 @@
+//! The sharded execution tier: per-domain worker pools, replica
+//! routing, and the machinery behind
+//! [`Backend::Sharded`](crate::op::Backend::Sharded).
+//!
+//! The paper's scaling argument is about deep memory hierarchies: on
+//! large multi-domain machines a single flat pool loses cache residency
+//! and memory-bandwidth locality the moment its threads span domains.
+//! This tier partitions the machine into `k` domains ([`topo`] — NUMA
+//! nodes when `/sys` exposes them, logical CPU groups otherwise), pins
+//! one [`WorkerPool`] per domain, and gives each domain its own replica
+//! of the operator's triangle/pack storage so every pool streams matrix
+//! pages from its local slice of the hierarchy.
+//!
+//! Three layers, bottom up:
+//!
+//! * [`topo`] — domain discovery and best-effort thread pinning
+//!   (`sched_setaffinity` by raw syscall; degrades silently like
+//!   [`crate::obs::hwc`]).
+//! * [`ShardSet`] — `k` domains, one pinned pool each, a round-robin
+//!   cursor for callers with no placement preference, and per-shard
+//!   [`ExecReport`] access for the observability layer.
+//! * [`Router`] — the serve-level placement policy: sticky
+//!   (matrix → domain) placement, least-loaded spill under skew, RAII
+//!   queue-depth tickets.
+//!
+//! Correctness is placement-independent by construction: every shard
+//! executes the same compiled [`StepProgram`](crate::pool::StepProgram)
+//! over a bit-wise replica of the same storage, so results are
+//! bit-identical whichever shard runs a call — `rust/tests/shard.rs`
+//! pins this across generator families, shard counts, and thread
+//! counts.
+
+pub mod router;
+pub mod topo;
+
+pub use router::{Router, Ticket, DEFAULT_DEPTH_CAP};
+pub use topo::Domain;
+
+use crate::pool::{ExecReport, WorkerPool};
+use crate::util::json::Json;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// `k` execution domains with one pinned resident pool each. Cheap to
+/// share (`Arc`) — the serve registry builds one set and points every
+/// matrix at it, exactly like [`OpConfig::shared_pool`] for the flat
+/// tier.
+///
+/// [`OpConfig::shared_pool`]: crate::op::OpConfig::shared_pool
+pub struct ShardSet {
+    domains: Vec<Domain>,
+    pools: Vec<Arc<WorkerPool>>,
+    threads_per_shard: usize,
+    /// Round-robin cursor for placement-free callers.
+    cursor: AtomicUsize,
+}
+
+impl ShardSet {
+    /// Partition the machine into `shards` domains (see
+    /// [`topo::discover`]) and pin one pool of `threads_per_shard`
+    /// participants to each. Both arguments clamp to at least 1.
+    pub fn new(shards: usize, threads_per_shard: usize) -> ShardSet {
+        let domains = topo::discover(shards);
+        let threads_per_shard = threads_per_shard.max(1);
+        let pools = domains
+            .iter()
+            .map(|d| Arc::new(WorkerPool::with_affinity(threads_per_shard, &d.cpus)))
+            .collect();
+        ShardSet { domains, pools, threads_per_shard, cursor: AtomicUsize::new(0) }
+    }
+
+    /// Number of domains.
+    pub fn shards(&self) -> usize {
+        self.domains.len()
+    }
+
+    /// Pool participants per domain.
+    pub fn threads_per_shard(&self) -> usize {
+        self.threads_per_shard
+    }
+
+    /// The discovered domains, shard order.
+    pub fn domains(&self) -> &[Domain] {
+        &self.domains
+    }
+
+    /// Domain `s`.
+    pub fn domain(&self, s: usize) -> &Domain {
+        &self.domains[s]
+    }
+
+    /// The pinned pool of shard `s`.
+    pub fn pool(&self, s: usize) -> &Arc<WorkerPool> {
+        &self.pools[s]
+    }
+
+    /// Next shard by round-robin — the placement used when no router
+    /// preference is in play (direct facade calls).
+    pub fn next_shard(&self) -> usize {
+        self.cursor.fetch_add(1, Ordering::Relaxed) % self.domains.len()
+    }
+
+    /// Request hardware counters on every shard's timed executions
+    /// (degrades per [`WorkerPool::set_hwc`]).
+    pub fn set_hwc(&self, on: bool) {
+        for p in &self.pools {
+            p.set_hwc(on);
+        }
+    }
+
+    /// Take each shard's most recent [`ExecReport`] (shard order;
+    /// populated only while [`crate::obs`] is enabled).
+    pub fn take_exec_reports(&self) -> Vec<Option<ExecReport>> {
+        self.pools.iter().map(|p| p.take_exec_report()).collect()
+    }
+}
+
+/// Shard-scaling measurement shared by `benches/shard_scaling.rs` and
+/// `race-cli shard-bench`, so both emit identically-keyed
+/// `BENCH_shard.json` documents (rows match under
+/// [`crate::obs::baseline`]'s identity keys).
+///
+/// For each entry of `shards_list` this builds a
+/// [`Backend::Sharded`](crate::op::Backend::Sharded) operator with
+/// `threads` participants *per shard*, verifies the batched result is
+/// bit-identical to [`Backend::Serial`](crate::op::Backend::Serial),
+/// then times multi-RHS SymmSpMV batches of `nrhs` vectors and reports
+/// vectors/s. `speedup` is relative to the first case (run
+/// `[1, 2, 4]` to read it as "vs one shard").
+pub fn bench_scaling(
+    spec: &str,
+    small: bool,
+    shards_list: &[usize],
+    threads: usize,
+    nrhs: usize,
+    secs: f64,
+) -> anyhow::Result<Json> {
+    use crate::op::{Backend, OpConfig, Operator};
+    let (name, a) = crate::coordinator::resolve_matrix(spec, small)?;
+    let n = a.nrows();
+    let nrhs = nrhs.max(1);
+    let xs: Vec<Vec<f64>> = (0..nrhs)
+        .map(|j| (0..n).map(|i| ((i * (j + 2) + 1) % 11) as f64 * 0.25 - 1.0).collect())
+        .collect();
+    let mut want = vec![vec![0.0; n]; nrhs];
+    let serial = Operator::build(&a, OpConfig::new().threads(threads).backend(Backend::Serial))?;
+    serial.symmspmv_multi(&xs, &mut want);
+
+    let mut cases = Vec::new();
+    let mut base_vps = None;
+    for &k in shards_list {
+        let op = Operator::build(
+            &a,
+            OpConfig::new().threads(threads).backend(Backend::Sharded { shards: k }),
+        )?;
+        let mut bs = vec![vec![0.0; n]; nrhs];
+        // warm every shard's replica and anchor correctness: the sharded
+        // batch must agree bitwise with the serial reference
+        op.symmspmv_multi(&xs, &mut bs);
+        anyhow::ensure!(bs == want, "sharded batch (shards={k}) diverged from Backend::Serial");
+        let st = crate::util::bench::bench(&format!("shards{k}"), secs, || {
+            op.symmspmv_multi(&xs, &mut bs)
+        });
+        let vps = nrhs as f64 / st.median;
+        let base = *base_vps.get_or_insert(vps);
+        cases.push(Json::obj(vec![
+            ("name", Json::Str(format!("shards{k}"))),
+            ("shards", Json::Num(k as f64)),
+            ("median_s", Json::Num(st.median)),
+            ("vectors_per_sec", Json::Num(vps)),
+            ("speedup", Json::Num(vps / base)),
+        ]));
+    }
+    Ok(Json::obj(vec![
+        ("bench", Json::Str("shard_scaling".into())),
+        ("matrix", Json::Str(name)),
+        ("n", Json::Num(n as f64)),
+        ("nrhs", Json::Num(nrhs as f64)),
+        ("threads_per_shard", Json::Num(threads as f64)),
+        ("cases", Json::Arr(cases)),
+    ]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_set_builds_pinned_pools() {
+        for (k, t) in [(1usize, 1usize), (2, 2), (4, 1)] {
+            let set = ShardSet::new(k, t);
+            assert_eq!(set.shards(), k);
+            assert_eq!(set.threads_per_shard(), t);
+            for s in 0..k {
+                assert_eq!(set.pool(s).threads(), t);
+                assert!(!set.domain(s).cpus.is_empty());
+            }
+            // round-robin cursor cycles through every shard
+            let picks: Vec<usize> = (0..2 * k).map(|_| set.next_shard()).collect();
+            for s in 0..k {
+                assert_eq!(picks.iter().filter(|&&p| p == s).count(), 2);
+            }
+            // report access is per shard and never fails
+            assert_eq!(set.take_exec_reports().len(), k);
+        }
+        // 0 clamps to 1
+        assert_eq!(ShardSet::new(0, 0).shards(), 1);
+    }
+
+    #[test]
+    fn bench_scaling_emits_identity_keyed_cases() {
+        let doc = bench_scaling("stencil2d:6x6", true, &[1, 2], 1, 2, 0.001).unwrap();
+        assert_eq!(doc.get("bench"), Some(&Json::Str("shard_scaling".into())));
+        let Some(Json::Arr(cases)) = doc.get("cases") else { panic!("cases array") };
+        assert_eq!(cases.len(), 2);
+        for (i, c) in cases.iter().enumerate() {
+            assert!(c.get("name").is_some());
+            assert!(c.get("vectors_per_sec").and_then(Json::as_f64).unwrap() > 0.0);
+            if i == 0 {
+                assert_eq!(c.get("speedup").and_then(Json::as_f64), Some(1.0));
+            }
+        }
+    }
+}

@@ -1,0 +1,187 @@
+//! The serve-level placement policy: sticky (matrix → domain) routing
+//! with bounded spill under skew.
+//!
+//! Every matrix has a *home shard* (`key % shards`) so repeated traffic
+//! for one matrix keeps hitting the pool whose caches and local memory
+//! already hold its replica. When the home queue is saturated (depth at
+//! the cap) the router *steals* capacity from the least-loaded other
+//! shard for that batch — bounded work stealing: one hop, only under
+//! skew, and only while the skew lasts. Queue depths are tracked by RAII
+//! tickets so a panicking or early-returning caller can never leak
+//! depth.
+//!
+//! The router is pure bookkeeping over relaxed atomics: it never blocks,
+//! and placement decisions are hints — executing a batch on a non-home
+//! shard changes which pool runs it, never the result.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+/// Default per-shard queue-depth cap (in-flight batches) before the
+/// router spills a matrix's traffic off its home shard.
+pub const DEFAULT_DEPTH_CAP: usize = 4;
+
+/// Sticky router over `k` shards. See the module docs for the policy.
+pub struct Router {
+    shards: usize,
+    depth_cap: usize,
+    /// In-flight batches per shard (ticket-held).
+    depth: Vec<AtomicUsize>,
+    /// Total placements per shard (home + stolen).
+    placed: Vec<AtomicU64>,
+    /// Placements that landed on this shard by stealing (their home was
+    /// saturated).
+    steals: Vec<AtomicU64>,
+}
+
+/// RAII queue-depth ticket: the placement is "in flight" until drop.
+pub struct Ticket<'a> {
+    router: &'a Router,
+    shard: usize,
+    /// Whether this placement was a steal (non-home shard).
+    pub stolen: bool,
+}
+
+impl Ticket<'_> {
+    /// The shard this batch was placed on.
+    pub fn shard(&self) -> usize {
+        self.shard
+    }
+}
+
+impl Drop for Ticket<'_> {
+    fn drop(&mut self) {
+        self.router.depth[self.shard].fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+impl Router {
+    /// A router over `shards` domains with the given queue-depth cap
+    /// (`0` means [`DEFAULT_DEPTH_CAP`]).
+    pub fn new(shards: usize, depth_cap: usize) -> Router {
+        let shards = shards.max(1);
+        let depth_cap = if depth_cap == 0 { DEFAULT_DEPTH_CAP } else { depth_cap };
+        Router {
+            shards,
+            depth_cap,
+            depth: (0..shards).map(|_| AtomicUsize::new(0)).collect(),
+            placed: (0..shards).map(|_| AtomicU64::new(0)).collect(),
+            steals: (0..shards).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+
+    /// Number of shards routed over.
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    /// The home shard of a routing key (a matrix's registry index).
+    pub fn home(&self, key: usize) -> usize {
+        key % self.shards
+    }
+
+    /// Place one batch for `key`: the home shard while its queue is
+    /// under the cap, otherwise the least-loaded other shard (a steal).
+    /// The returned ticket holds a unit of queue depth until dropped.
+    pub fn place(&self, key: usize) -> Ticket<'_> {
+        let home = self.home(key);
+        let mut shard = home;
+        let mut stolen = false;
+        if self.shards > 1 && self.depth[home].load(Ordering::Relaxed) >= self.depth_cap {
+            // one-hop spill to the least-loaded shard; ties keep the
+            // lowest id for determinism. If every queue is saturated the
+            // minimum is still the best available — no second hop, no
+            // wait.
+            let (best, best_depth) = (0..self.shards)
+                .map(|s| (s, self.depth[s].load(Ordering::Relaxed)))
+                .min_by_key(|&(s, d)| (d, s))
+                .unwrap();
+            if best != home && best_depth < self.depth[home].load(Ordering::Relaxed) {
+                shard = best;
+                stolen = true;
+            }
+        }
+        self.depth[shard].fetch_add(1, Ordering::Relaxed);
+        self.placed[shard].fetch_add(1, Ordering::Relaxed);
+        if stolen {
+            self.steals[shard].fetch_add(1, Ordering::Relaxed);
+        }
+        Ticket { router: self, shard, stolen }
+    }
+
+    /// Current in-flight batches on `shard`.
+    pub fn depth(&self, shard: usize) -> usize {
+        self.depth[shard].load(Ordering::Relaxed)
+    }
+
+    /// Total batches placed on `shard` so far.
+    pub fn placements(&self, shard: usize) -> u64 {
+        self.placed[shard].load(Ordering::Relaxed)
+    }
+
+    /// Batches that landed on `shard` by stealing.
+    pub fn steals(&self, shard: usize) -> u64 {
+        self.steals[shard].load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sticky_placement_is_home_by_default() {
+        let r = Router::new(4, 2);
+        for key in 0..8 {
+            let t = r.place(key);
+            assert_eq!(t.shard(), key % 4, "key {key}");
+            assert!(!t.stolen);
+        }
+        // all tickets dropped: depths return to zero
+        for s in 0..4 {
+            assert_eq!(r.depth(s), 0);
+            assert_eq!(r.steals(s), 0);
+        }
+        assert_eq!((0..4).map(|s| r.placements(s)).sum::<u64>(), 8);
+    }
+
+    #[test]
+    fn saturated_home_steals_from_least_loaded() {
+        let r = Router::new(4, 2);
+        // hold the cap on shard 1 (key 5 % 4 == 1)
+        let _a = r.place(5);
+        let _b = r.place(5);
+        assert_eq!(r.depth(1), 2);
+        // next placement spills off-home to the least-loaded shard (0)
+        let t = r.place(5);
+        assert_ne!(t.shard(), 1);
+        assert_eq!(t.shard(), 0);
+        assert!(t.stolen);
+        assert_eq!(r.steals(0), 1);
+        drop(t);
+        assert_eq!(r.depth(0), 0);
+        // home drained below the cap: placement is sticky again
+        drop(_a);
+        let t = r.place(5);
+        assert_eq!(t.shard(), 1);
+        assert!(!t.stolen);
+    }
+
+    #[test]
+    fn single_shard_never_steals() {
+        let r = Router::new(1, 1);
+        let _held: Vec<Ticket> = (0..5).map(|k| r.place(k)).collect();
+        assert_eq!(r.depth(0), 5); // cap exceeded, nowhere to go
+        assert_eq!(r.steals(0), 0);
+    }
+
+    #[test]
+    fn uniformly_saturated_router_stays_home() {
+        let r = Router::new(2, 1);
+        let _a = r.place(0);
+        let _b = r.place(1);
+        // both queues at the cap: stealing would not help, stay home
+        let t = r.place(0);
+        assert_eq!(t.shard(), 0);
+        assert!(!t.stolen);
+    }
+}

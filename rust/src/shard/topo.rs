@@ -1,0 +1,258 @@
+//! Machine topology discovery and thread pinning for the sharded tier.
+//!
+//! Domains are CPU-affinity groups. When the host exposes NUMA topology
+//! (`/sys/devices/system/node/node*/cpulist`) the groups follow the
+//! memory nodes, so a pinned pool keeps its replica's pages behind the
+//! local memory controller — the locality the paper's multi-socket
+//! scaling measurements rely on. When NUMA information is absent (one
+//! node, containers, non-Linux) the same API degrades to *logical*
+//! shards: the available CPUs split into `k` contiguous groups, which
+//! still gives cache-residency benefits on shared LLC slices.
+//!
+//! Everything here follows the [`crate::obs::hwc`] degradation
+//! philosophy: discovery and pinning never fail the caller. A host
+//! without `/sys` gets logical shards; a host that denies
+//! `sched_setaffinity` gets floating workers. Results are bit-identical
+//! either way — placement is a performance hint, never a correctness
+//! input.
+
+/// One execution domain: an id plus the CPUs its pool is pinned to.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Domain {
+    /// Shard index, `0..k`.
+    pub id: usize,
+    /// CPU ids of this domain's affinity group (never empty).
+    pub cpus: Vec<usize>,
+    /// Whether this group came from a `/sys` NUMA node (as opposed to
+    /// the logical fallback split).
+    pub numa: bool,
+}
+
+/// Parse a kernel cpulist string (`"0-3,8,10-11"`) into CPU ids.
+/// Malformed fragments are skipped — the kernel format is stable, but a
+/// partial parse beats a panic in a discovery path.
+pub fn parse_cpulist(s: &str) -> Vec<usize> {
+    let mut cpus = Vec::new();
+    for part in s.trim().split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        match part.split_once('-') {
+            Some((a, b)) => {
+                if let (Ok(lo), Ok(hi)) = (a.trim().parse::<usize>(), b.trim().parse::<usize>()) {
+                    if lo <= hi && hi - lo < 4096 {
+                        cpus.extend(lo..=hi);
+                    }
+                }
+            }
+            None => {
+                if let Ok(c) = part.parse::<usize>() {
+                    cpus.push(c);
+                }
+            }
+        }
+    }
+    cpus.sort_unstable();
+    cpus.dedup();
+    cpus
+}
+
+/// CPU groups of the host's NUMA nodes, in node order. Empty when the
+/// host exposes no usable `/sys` node topology (single node counts as
+/// usable and returns one group).
+pub fn numa_cpu_groups() -> Vec<Vec<usize>> {
+    let mut groups: Vec<(usize, Vec<usize>)> = Vec::new();
+    let Ok(entries) = std::fs::read_dir("/sys/devices/system/node") else {
+        return Vec::new();
+    };
+    for e in entries.flatten() {
+        let name = e.file_name();
+        let name = name.to_string_lossy();
+        let Some(idx) = name.strip_prefix("node").and_then(|s| s.parse::<usize>().ok()) else {
+            continue;
+        };
+        let Ok(list) = std::fs::read_to_string(e.path().join("cpulist")) else {
+            continue;
+        };
+        let cpus = parse_cpulist(&list);
+        if !cpus.is_empty() {
+            groups.push((idx, cpus));
+        }
+    }
+    groups.sort_by_key(|(idx, _)| *idx);
+    groups.into_iter().map(|(_, cpus)| cpus).collect()
+}
+
+/// CPUs available to this process: the union of the NUMA groups, or
+/// `0..available_parallelism()` when `/sys` is silent.
+pub fn available_cpus() -> Vec<usize> {
+    let groups = numa_cpu_groups();
+    if !groups.is_empty() {
+        let mut all: Vec<usize> = groups.into_iter().flatten().collect();
+        all.sort_unstable();
+        all.dedup();
+        return all;
+    }
+    let n = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    (0..n).collect()
+}
+
+/// Partition the machine into exactly `k` domains.
+///
+/// * `k == 0` is treated as 1.
+/// * When the host has exactly `k` NUMA nodes, the domains are the
+///   nodes.
+/// * When it has more nodes than `k`, consecutive nodes merge.
+/// * Otherwise (fewer nodes than `k`, or no `/sys` topology) the
+///   available CPUs split into `k` contiguous groups — logical shards.
+/// * Every domain is non-empty: with fewer CPUs than shards, CPUs are
+///   reused round-robin (correctness never depends on exclusivity).
+pub fn discover(k: usize) -> Vec<Domain> {
+    let k = k.max(1);
+    let groups = numa_cpu_groups();
+    if groups.len() == k {
+        return groups
+            .into_iter()
+            .enumerate()
+            .map(|(id, cpus)| Domain { id, cpus, numa: true })
+            .collect();
+    }
+    if groups.len() > k {
+        // merge consecutive nodes into k groups, as even as possible
+        let mut domains: Vec<Domain> =
+            (0..k).map(|id| Domain { id, cpus: Vec::new(), numa: true }).collect();
+        for (i, g) in groups.iter().enumerate() {
+            domains[i * k / groups.len()].cpus.extend_from_slice(g);
+        }
+        return domains;
+    }
+    // logical fallback: split the flat CPU list into k contiguous groups
+    let cpus = available_cpus();
+    let n = cpus.len();
+    (0..k)
+        .map(|id| {
+            let group: Vec<usize> = if n >= k {
+                let lo = id * n / k;
+                let hi = (id + 1) * n / k;
+                cpus[lo..hi].to_vec()
+            } else {
+                // fewer CPUs than shards: reuse round-robin
+                vec![cpus[id % n]]
+            };
+            Domain { id, cpus: group, numa: false }
+        })
+        .collect()
+}
+
+/// Pin the calling thread to `cpus`. Returns whether the kernel accepted
+/// the mask; `false` (empty list, non-Linux target, denied or absent
+/// syscall) leaves the thread floating and is not an error. Set
+/// `RACE_SHARD_PIN=0` to disable pinning globally — useful when an outer
+/// scheduler (cgroup pinning, MPI launcher) already owns placement.
+pub fn pin_current_thread(cpus: &[usize]) -> bool {
+    if cpus.is_empty() || std::env::var("RACE_SHARD_PIN").as_deref() == Ok("0") {
+        return false;
+    }
+    sys::set_affinity(cpus)
+}
+
+/// The raw `sched_setaffinity` layer, mirroring the
+/// [`crate::obs::hwc`] syscall idiom: std-only `extern "C" syscall`,
+/// compiled to a no-op off Linux x86_64/aarch64.
+mod sys {
+    #[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+    pub fn set_affinity(cpus: &[usize]) -> bool {
+        use std::os::raw::c_long;
+
+        #[cfg(target_arch = "x86_64")]
+        const SYS_SCHED_SETAFFINITY: c_long = 203;
+        #[cfg(target_arch = "aarch64")]
+        const SYS_SCHED_SETAFFINITY: c_long = 122;
+
+        extern "C" {
+            fn syscall(num: c_long, ...) -> c_long;
+        }
+
+        // cpu_set_t is 1024 bits on Linux; 16 × u64 words
+        let mut mask = [0u64; 16];
+        let mut any = false;
+        for &c in cpus {
+            if c < 1024 {
+                mask[c / 64] |= 1u64 << (c % 64);
+                any = true;
+            }
+        }
+        if !any {
+            return false;
+        }
+        // SAFETY: pid 0 = calling thread; the mask pointer is valid for
+        // the stated byte length for the duration of the call.
+        let rc = unsafe {
+            syscall(
+                SYS_SCHED_SETAFFINITY,
+                0usize,
+                std::mem::size_of_val(&mask),
+                mask.as_ptr(),
+            )
+        };
+        rc == 0
+    }
+
+    #[cfg(not(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64"))))]
+    pub fn set_affinity(_cpus: &[usize]) -> bool {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpulist_parses_kernel_formats() {
+        assert_eq!(parse_cpulist("0-3"), vec![0, 1, 2, 3]);
+        assert_eq!(parse_cpulist("0-1,8,10-11\n"), vec![0, 1, 8, 10, 11]);
+        assert_eq!(parse_cpulist("5"), vec![5]);
+        assert_eq!(parse_cpulist(""), Vec::<usize>::new());
+        assert_eq!(parse_cpulist("3-1"), Vec::<usize>::new()); // inverted range
+        assert_eq!(parse_cpulist("junk,2"), vec![2]); // partial parse
+        assert_eq!(parse_cpulist("1,1,0-1"), vec![0, 1]); // dedup
+    }
+
+    #[test]
+    fn discover_always_yields_k_nonempty_domains() {
+        for k in [1usize, 2, 3, 4, 7, 64] {
+            let domains = discover(k);
+            assert_eq!(domains.len(), k, "k={k}");
+            for (i, d) in domains.iter().enumerate() {
+                assert_eq!(d.id, i);
+                assert!(!d.cpus.is_empty(), "k={k} shard {i} has no cpus");
+            }
+        }
+        assert_eq!(discover(0).len(), 1); // 0 clamps to 1
+    }
+
+    #[test]
+    fn logical_split_covers_every_cpu_once_when_possible() {
+        let cpus = available_cpus();
+        assert!(!cpus.is_empty());
+        let k = cpus.len().min(2);
+        let domains = discover(k);
+        let mut seen: Vec<usize> = domains.iter().flat_map(|d| d.cpus.clone()).collect();
+        seen.sort_unstable();
+        // with k <= |cpus| the groups partition the cpu set
+        if domains.iter().all(|d| !d.numa) {
+            assert_eq!(seen, cpus);
+        }
+    }
+
+    #[test]
+    fn pinning_never_panics() {
+        // outcome is host-dependent; the contract is "no crash, bool out"
+        let _ = pin_current_thread(&[]);
+        let _ = pin_current_thread(&[0]);
+        let _ = pin_current_thread(&[100_000]); // out-of-range -> false
+        assert!(!pin_current_thread(&[100_000]));
+    }
+}

@@ -1,0 +1,287 @@
+//! Sharded-tier properties: `Backend::Sharded` must be **bit-identical**
+//! to `Backend::Serial` on every generator family, for shards ∈ {1, 2, 4}
+//! × threads ∈ {1, 2, 4} — whichever domain a call lands on, it executes
+//! the same compiled step program over a bit-wise replica of the same
+//! storage, so placement can never change a result. On top: explicit
+//! routing (`symmspmv_multi_routed`) agrees shard by shard, the sticky
+//! router's placement/steal policy holds, and a `--shards 2` server
+//! answers the full protocol over TCP.
+
+use race::gen;
+use race::op::{Backend, OpConfig, Operator};
+use race::serve::{MatvecService, ServeOptions, Server};
+use race::shard::Router;
+use race::sparse::Csr;
+use race::util::json::Json;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+const SHARDS: [usize; 3] = [1, 2, 4];
+const THREADS: [usize; 3] = [1, 2, 4];
+
+/// One matrix per generator family (the `rust/tests/op.rs` matrix).
+fn families() -> Vec<(&'static str, Csr)> {
+    vec![
+        ("stencil5", gen::stencil2d_5pt(16, 13)),
+        ("stencil9", gen::stencil2d_9pt(12, 11)),
+        ("paperstencil", gen::race_paper_stencil(16, 16)),
+        ("spin", gen::spin_chain_xxz(8, gen::SpinKind::XXZ)),
+        ("graphene", gen::graphene(8, 8)),
+        ("delaunay", gen::delaunay_like(10, 10, 7)),
+        ("band", gen::dense_band(150, 30, 120, 2)),
+    ]
+}
+
+fn build(a: &Csr, backend: Backend, threads: usize) -> Operator {
+    Operator::build(a, OpConfig::new().threads(threads).backend(backend).cache_bytes(8 << 10))
+        .unwrap()
+}
+
+#[test]
+fn symmspmv_bit_identical_to_serial_across_shards_and_threads() {
+    for (name, a) in families() {
+        let n = a.nrows();
+        let x: Vec<f64> = (0..n).map(|i| ((i * 13 + 5) % 23) as f64 * 0.2 - 2.0).collect();
+        for threads in THREADS {
+            let serial = build(&a, Backend::Serial, threads);
+            let mut want = vec![0.0; n];
+            serial.symmspmv(&x, &mut want);
+            for shards in SHARDS {
+                let op = build(&a, Backend::Sharded { shards }, threads);
+                // several calls, so the round-robin cursor visits every
+                // shard's pinned pool and replica
+                for round in 0..shards.max(2) {
+                    let mut b = vec![0.0; n];
+                    op.symmspmv(&x, &mut b);
+                    assert_eq!(
+                        want, b,
+                        "{name}/t{threads}/s{shards} round {round}: not bit-identical"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn powers_bit_identical_to_serial_across_shards() {
+    for (name, a) in families() {
+        let n = a.nrows();
+        let x: Vec<f64> = (0..n).map(|i| ((i * 7 + 3) % 13) as f64 * 0.15 - 0.9).collect();
+        for threads in [1usize, 2] {
+            let serial = build(&a, Backend::Serial, threads);
+            for p in [1usize, 3] {
+                let want = serial.powers(&x, p).unwrap();
+                for shards in [2usize, 4] {
+                    let op = build(&a, Backend::Sharded { shards }, threads);
+                    let ys = op.powers(&x, p).unwrap();
+                    assert_eq!(want, ys, "{name}/t{threads}/s{shards}/p{p}: not bit-identical");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn solve_bit_identical_to_serial_under_sharding() {
+    for (name, a) in [("stencil5", gen::stencil2d_5pt(16, 13)), ("graphene", gen::graphene(8, 8))]
+    {
+        let n = a.nrows();
+        let rhs: Vec<f64> = (0..n).map(|i| ((i * 5 + 1) % 11) as f64 * 0.3 - 1.0).collect();
+        let cfg = race::solver::SolveConfig::new().tol(1e-9);
+        let serial = build(&a, Backend::Serial, 2);
+        let want = serial.solve(&rhs, &cfg).unwrap();
+        assert!(want.converged, "{name}: serial reference must converge");
+        for shards in [2usize, 4] {
+            let op = build(&a, Backend::Sharded { shards }, 2);
+            let got = op.solve(&rhs, &cfg).unwrap();
+            assert!(got.converged, "{name}/s{shards}");
+            assert_eq!(want.iterations, got.iterations, "{name}/s{shards}: iteration history");
+            assert_eq!(want.x, got.x, "{name}/s{shards}: solution not bit-identical");
+        }
+    }
+}
+
+#[test]
+fn multi_rhs_fanout_matches_singles_bitwise() {
+    let m = 5usize;
+    for (name, a) in families() {
+        let n = a.nrows();
+        let xs: Vec<Vec<f64>> = (0..m)
+            .map(|j| (0..n).map(|i| ((i * (j + 3) + 2 * j) % 17) as f64 * 0.3 - 1.4).collect())
+            .collect();
+        let op = build(&a, Backend::Sharded { shards: 2 }, 2);
+        // the batch fans its columns out across both replicas
+        let mut bs: Vec<Vec<f64>> = (0..m).map(|_| vec![0.0; n]).collect();
+        op.symmspmv_multi(&xs, &mut bs);
+        for j in 0..m {
+            let mut b = vec![0.0; n];
+            op.symmspmv(&xs[j], &mut b);
+            assert_eq!(b, bs[j], "{name}: rhs {j} diverges under fan-out");
+        }
+    }
+}
+
+#[test]
+fn explicit_routing_is_placement_independent() {
+    let a = gen::stencil2d_5pt(16, 13);
+    let n = a.nrows();
+    let m = 3usize;
+    let xs: Vec<Vec<f64>> = (0..m)
+        .map(|j| (0..n).map(|i| ((i * (j + 2) + 1) % 19) as f64 * 0.25 - 1.5).collect())
+        .collect();
+    let shards = 3usize;
+    let op = build(&a, Backend::Sharded { shards }, 2);
+    // fan-out result (no placement preference)
+    let mut want: Vec<Vec<f64>> = (0..m).map(|_| vec![0.0; n]).collect();
+    op.symmspmv_multi(&xs, &mut want);
+    // sticky whole-batch placement on each shard in turn: every replica
+    // must produce the same bits
+    for s in 0..shards {
+        let mut bs: Vec<Vec<f64>> = (0..m).map(|_| vec![0.0; n]).collect();
+        op.symmspmv_multi_routed(&xs, &mut bs, Some(s));
+        assert_eq!(want, bs, "shard {s}: routed batch diverges");
+    }
+    // MPK routes the same way
+    let yw = op.powers_multi(&xs, 2).unwrap();
+    for s in 0..shards {
+        let ys = op.powers_multi_routed(&xs, 2, Some(s)).unwrap();
+        assert_eq!(yw, ys, "shard {s}: routed MPK batch diverges");
+    }
+}
+
+#[test]
+fn router_is_sticky_then_steals_under_skew() {
+    let r = Router::new(3, 2);
+    // sticky: key 4 -> home shard 1, repeatedly
+    for _ in 0..5 {
+        let t = r.place(4);
+        assert_eq!(t.shard(), 1);
+        assert!(!t.stolen);
+    }
+    // saturate the home queue, keep the tickets alive
+    let _h1 = r.place(4);
+    let _h2 = r.place(4);
+    assert_eq!(r.depth(1), 2);
+    // skew: the next placement steals from the least-loaded shard
+    let t = r.place(4);
+    assert!(t.stolen);
+    assert_eq!(t.shard(), 0, "ties break to the lowest id");
+    assert_eq!(r.steals(0), 1);
+    drop(t);
+    // skew gone (queue drained below the cap): sticky again
+    drop(_h1);
+    let t = r.place(4);
+    assert_eq!(t.shard(), 1);
+    assert!(!t.stolen);
+}
+
+/// A `--shards 2` server over real TCP: matvec, MPK, solve and the
+/// per-shard telemetry all answer correctly (the CI `shard-smoke` job
+/// runs this file).
+#[test]
+fn tcp_sharded_server_end_to_end() {
+    let o = ServeOptions {
+        matrices: vec!["stencil2d:8x8".to_string()],
+        threads: 2,
+        shards: 2,
+        addr: "127.0.0.1:0".to_string(),
+        small: true,
+        max_requests: Some(5),
+        ..Default::default()
+    };
+    let server = Server::bind(&o).unwrap();
+    let addr = server.local_addr();
+    let handle = std::thread::spawn(move || server.run().unwrap());
+
+    let stream = TcpStream::connect(addr).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    let ones = vec![1.0; 64];
+
+    // matvec: 5-pt stencil rows sum to 1, so A·ones = ones
+    writer.write_all(format!("{{\"x\": {ones:?}}}\n").as_bytes()).unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    let j = Json::parse(line.trim()).unwrap();
+    let b = j.get("b").and_then(|v| v.as_f64_arr()).expect("b array");
+    assert!(b.iter().all(|v| (v - 1.0).abs() < 1e-9), "{line}");
+
+    // MPK: A² ones = ones too
+    writer.write_all(format!("{{\"x\": {ones:?}, \"p\": 2}}\n").as_bytes()).unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    let j = Json::parse(line.trim()).unwrap();
+    let y = j.get("y").and_then(|v| v.as_f64_arr()).expect("y array");
+    assert!(y.iter().all(|v| (v - 1.0).abs() < 1e-9), "{line}");
+
+    // solve: rhs = ones has the solution ones
+    writer
+        .write_all(format!("{{\"solve\": {{\"rhs\": {ones:?}, \"tol\": 1e-9}}}}\n").as_bytes())
+        .unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    let j = Json::parse(line.trim()).unwrap();
+    assert_eq!(j.get("converged"), Some(&Json::Bool(true)), "{line}");
+
+    // metrics: the race_shard_* gauges ride the exposition
+    writer.write_all(b"{\"metrics\": true}\n").unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    let j = Json::parse(line.trim()).unwrap();
+    let text = match j.get("metrics") {
+        Some(Json::Str(t)) => t.clone(),
+        other => panic!("expected metrics text, got {other:?} in {line}"),
+    };
+    assert!(text.contains("race_shard_info{shard=\"0\""), "{text}");
+    assert!(text.contains("race_shard_info{shard=\"1\""), "{text}");
+    assert!(text.contains("race_shard_placements_total"), "{text}");
+    assert!(text.contains("race_shard_batch_seconds"), "{text}");
+
+    // stats: per-shard rows present, all traffic accounted to shard 0
+    // (one matrix -> home shard 0; no concurrency -> no steals)
+    writer.write_all(b"{\"stats\": true}\n").unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    let j = Json::parse(line.trim()).unwrap();
+    let stats = j.get("stats").expect("stats");
+    let rows = match stats.get("shards") {
+        Some(Json::Arr(v)) => v,
+        other => panic!("expected shard rows, got {other:?} in {line}"),
+    };
+    assert_eq!(rows.len(), 2, "{line}");
+    let placed: f64 =
+        rows.iter().map(|r| r.get("placements").and_then(Json::as_f64).unwrap()).sum();
+    assert!(placed >= 3.0, "matvec + mpk + solve iterations all placed: {line}");
+    for r in rows {
+        assert_eq!(r.get("depth").and_then(Json::as_f64), Some(0.0), "drained: {line}");
+    }
+    handle.join().unwrap();
+}
+
+/// The sharded service answers bit-identically to the flat service —
+/// through the public service API (what the serve e2e layer rides on).
+#[test]
+fn sharded_service_batches_match_flat_service() {
+    let base = ServeOptions {
+        matrices: vec!["delaunay:10x10".to_string()],
+        threads: 2,
+        addr: "127.0.0.1:0".to_string(),
+        small: true,
+        ..Default::default()
+    };
+    let flat = MatvecService::build(&base).unwrap();
+    let mut o = base.clone();
+    o.shards = 2;
+    let sharded = MatvecService::build(&o).unwrap();
+    let n = flat.entries()[0].n;
+    let xs: Vec<Vec<f64>> = (0..6)
+        .map(|j| (0..n).map(|i| ((i * (j + 2)) % 11) as f64 * 0.2 - 1.0).collect())
+        .collect();
+    assert_eq!(
+        flat.matvec_batch(None, &xs).unwrap(),
+        sharded.matvec_batch(None, &xs).unwrap(),
+        "sharded batch must be bit-identical to the flat pool"
+    );
+}
