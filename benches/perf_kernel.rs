@@ -129,12 +129,12 @@ fn main() {
     let nf = op.n();
     let xf: Vec<f64> = (0..nf).map(|i| (i as f64 * 0.3).sin()).collect();
     let mut bf = vec![0.0; nf];
-    op.symmspmv(&xf, &mut bf); // warm-up: pack encode + program compile
+    op.symmspmv(&xf, &mut bf).unwrap(); // warm-up: pack encode + program compile
     race::obs::set_enabled(true);
     race::obs::recorder().drain();
     let flops_f = 2.0 * a.nnz() as f64;
     let s = bench("operator symmspmv (facade)", 0.4, || {
-        op.symmspmv(&xf, &mut bf);
+        op.symmspmv(&xf, &mut bf).unwrap();
     });
     race::obs::set_enabled(false);
     report(&s, Some(flops_f));

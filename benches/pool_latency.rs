@@ -63,7 +63,7 @@ fn main() {
             });
             let mut b2 = vec![0.0; n];
             let s_pool = bench::bench(&format!("{name}/t{threads}/pool"), 0.2, || {
-                op.symmspmv_permuted(&xp, &mut b2);
+                op.symmspmv_permuted(&xp, &mut b2).unwrap();
                 std::hint::black_box(&b2);
             });
             bench::report(&s_scoped, None);

@@ -36,7 +36,7 @@ fn main() -> anyhow::Result<()> {
     //    SpMV on the original matrix.
     let x: Vec<f64> = (0..op.n()).map(|i| (i as f64 * 0.01).sin()).collect();
     let mut b = vec![0.0; op.n()];
-    op.symmspmv(&x, &mut b);
+    op.symmspmv(&x, &mut b)?;
     let want = a.spmv_ref(&x);
     let max_err = b
         .iter()

@@ -199,9 +199,9 @@ pub fn run_pipeline(
             // (compilation, worker spawn and permutation outside the timer)
             let xp = op.permute(&x);
             let mut b = vec![0.0; a.nrows()];
-            op.symmspmv_permuted(&xp, &mut b); // warm the lazy program + pool
+            op.symmspmv_permuted(&xp, &mut b).context("warm-up sweep")?;
             let t0 = std::time::Instant::now();
-            op.symmspmv_permuted(&xp, &mut b);
+            op.symmspmv_permuted(&xp, &mut b).context("timed sweep")?;
             let dt = t0.elapsed().as_secs_f64();
             let err = max_rel(&want, &op.unpermute(&b));
             (traffic, sim_res, host_seconds, max_rel_err) = (tr, s, dt, err);

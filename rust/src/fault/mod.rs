@@ -1,0 +1,369 @@
+//! Deterministic fault injection for the chaos test suite
+//! (`docs/RELIABILITY.md` §fault injection).
+//!
+//! Off by default: after the first call, every [`inject`] site costs one
+//! relaxed atomic load. Faults are armed either from the `RACE_FAULT`
+//! environment variable (read once, at the first site hit) or
+//! programmatically via [`install_spec`] (what the chaos tests use, so a
+//! test never leaks injection into its neighbours).
+//!
+//! ## Spec grammar
+//!
+//! ```text
+//! spec  := part (';' part)*
+//! part  := 'seed=' N | rule
+//! rule  := site '=' mode [':' arg] ['@' prob] ['#' count]
+//! mode  := 'panic' | 'delay' | 'error' | 'short' | 'exit'
+//! ```
+//!
+//! * `site` matches by **prefix**: `pool.` arms every pool site,
+//!   `serve.write` only the response writer. The named sites are listed
+//!   in [`SITES`].
+//! * `mode`: `panic` unwinds at the site; `delay` sleeps `arg`
+//!   milliseconds (default 10) inline; `error`, `short` (short write)
+//!   and `exit` (worker retires after its current job) are returned to
+//!   the caller, which must implement the failure.
+//! * `@prob` in `(0, 1]` (default 1): each hit draws from a
+//!   [splitmix64](https://prng.di.unimi.it/splitmix64.c) stream seeded
+//!   by `seed ^ rule-index ^ hit-number`, so a given spec and call
+//!   sequence always injects the same faults — chaos runs are
+//!   reproducible from the seed alone.
+//! * `#count` caps how many times the rule fires (default unlimited).
+//!
+//! Example: `RACE_FAULT='seed=7;pool.step=panic@0.05#2;serve.read=delay:50'`.
+//!
+//! Every firing increments a global counter ([`fired`]) and, when
+//! [`crate::obs`] is enabled, records a `fault.inject` span event naming
+//! the site, so injected faults are visible in `{"trace"}` output.
+
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// The named injection sites threaded through the stack (prefix-matched
+/// by rules; see the [module docs](self) for the grammar).
+pub const SITES: [&str; 7] = [
+    "pool.step",        // inside a worker's step execution (panic/delay)
+    "pool.worker.exit", // worker retires after its current job (exit)
+    "shard.clone",      // per-domain replica cloning (panic/delay)
+    "shard.dispatch",   // sharded kernel dispatch (panic/delay/error)
+    "serve.read",       // request-line read path (delay/error)
+    "serve.write",      // response write path (delay/error/short)
+    "serve.handle",     // request handler entry (panic/delay)
+];
+
+/// A fault the caller must act on ([`inject`] executes `panic`/`delay`
+/// itself and never returns them).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Fault {
+    /// Return a synthetic I/O or execution error from the site.
+    Error,
+    /// Write only the first half of the payload, then fail.
+    ShortWrite,
+    /// The pool worker should retire after finishing its current job.
+    Exit,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Mode {
+    Panic,
+    Delay,
+    Error,
+    Short,
+    Exit,
+}
+
+struct Rule {
+    site: String,
+    mode: Mode,
+    /// Mode argument (delay milliseconds).
+    arg: u64,
+    /// Firing probability in (0, 1].
+    prob: f64,
+    /// Cap on firings (`u64::MAX` = unlimited).
+    count: u64,
+    hits: AtomicU64,
+    fired: AtomicU64,
+    /// Stream salt (rule index), folded into the seed.
+    salt: u64,
+}
+
+struct Injector {
+    seed: u64,
+    rules: Vec<Rule>,
+}
+
+/// 0 = uninitialized, 1 = off, 2 = armed. The off fast path is a single
+/// relaxed load of this flag.
+static STATE: AtomicU8 = AtomicU8::new(0);
+static FIRED: AtomicU64 = AtomicU64::new(0);
+
+fn injector() -> &'static Mutex<Option<Injector>> {
+    static GLOBAL: std::sync::OnceLock<Mutex<Option<Injector>>> = std::sync::OnceLock::new();
+    GLOBAL.get_or_init(|| Mutex::new(None))
+}
+
+fn lock_rules() -> std::sync::MutexGuard<'static, Option<Injector>> {
+    // a panic mode unwinding through a previous caller may have poisoned
+    // the lock; the data is append/counter-only, so recover the guard
+    injector().lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Parse and arm a fault spec (see the [module docs](self) for the
+/// grammar). Replaces any previously armed spec. Returns an error string
+/// on a malformed spec, leaving injection disarmed.
+pub fn install_spec(spec: &str) -> Result<(), String> {
+    let parsed = parse_spec(spec)?;
+    let armed = !parsed.rules.is_empty();
+    *lock_rules() = Some(parsed);
+    STATE.store(if armed { 2 } else { 1 }, Ordering::SeqCst);
+    Ok(())
+}
+
+/// Disarm injection entirely (tests call this in a drop guard so a
+/// failing chaos test cannot leak faults into its neighbours).
+pub fn clear() {
+    *lock_rules() = None;
+    STATE.store(1, Ordering::SeqCst);
+}
+
+/// Total faults fired since process start (all rules, all sites).
+pub fn fired() -> u64 {
+    FIRED.load(Ordering::Relaxed)
+}
+
+/// Faults fired at sites matching `prefix`.
+pub fn fired_at(prefix: &str) -> u64 {
+    match &*lock_rules() {
+        Some(inj) => inj
+            .rules
+            .iter()
+            .filter(|r| r.site.starts_with(prefix) || prefix.starts_with(r.site.as_str()))
+            .map(|r| r.fired.load(Ordering::Relaxed))
+            .sum(),
+        None => 0,
+    }
+}
+
+/// Hit a named injection site. With no armed spec this is one relaxed
+/// atomic load. `panic` rules unwind from here (message
+/// `"injected fault at <site>"`), `delay` rules sleep inline; `error`,
+/// `short` and `exit` are returned for the caller to realize.
+pub fn inject(site: &str) -> Option<Fault> {
+    match STATE.load(Ordering::Relaxed) {
+        1 => None,
+        0 => {
+            init_from_env();
+            inject(site)
+        }
+        _ => inject_slow(site),
+    }
+}
+
+fn init_from_env() {
+    let spec = std::env::var("RACE_FAULT").unwrap_or_default();
+    if spec.is_empty() {
+        // only transition if nobody armed a spec concurrently
+        let _ = STATE.compare_exchange(0, 1, Ordering::SeqCst, Ordering::SeqCst);
+        return;
+    }
+    match install_spec(&spec) {
+        Ok(()) => {}
+        Err(e) => {
+            eprintln!("[race-fault] ignoring malformed RACE_FAULT: {e}");
+            let _ = STATE.compare_exchange(0, 1, Ordering::SeqCst, Ordering::SeqCst);
+        }
+    }
+}
+
+fn inject_slow(site: &str) -> Option<Fault> {
+    let decision = {
+        let guard = lock_rules();
+        let inj = guard.as_ref()?;
+        let mut hit: Option<(Mode, u64)> = None;
+        for r in &inj.rules {
+            if !site.starts_with(r.site.as_str()) {
+                continue;
+            }
+            if r.fired.load(Ordering::Relaxed) >= r.count {
+                continue;
+            }
+            let n = r.hits.fetch_add(1, Ordering::Relaxed);
+            let draw = splitmix64(inj.seed ^ r.salt.wrapping_mul(0x9e3779b97f4a7c15) ^ n);
+            if (draw >> 11) as f64 / (1u64 << 53) as f64 >= r.prob {
+                continue;
+            }
+            // re-check the cap under the race: allow a benign overshoot
+            // of at most the number of concurrent hitters
+            if r.fired.fetch_add(1, Ordering::Relaxed) >= r.count {
+                continue;
+            }
+            hit = Some((r.mode, r.arg));
+            break;
+        }
+        hit
+    };
+    let (mode, arg) = decision?;
+    FIRED.fetch_add(1, Ordering::Relaxed);
+    let rec = crate::obs::recorder();
+    if rec.is_enabled() {
+        rec.record_manual(
+            "fault.inject",
+            Instant::now(),
+            Duration::ZERO,
+            Some(format!("site={site}")),
+        );
+    }
+    match mode {
+        Mode::Panic => panic!("injected fault at {site}"),
+        Mode::Delay => {
+            std::thread::sleep(Duration::from_millis(arg));
+            None
+        }
+        Mode::Error => Some(Fault::Error),
+        Mode::Short => Some(Fault::ShortWrite),
+        Mode::Exit => Some(Fault::Exit),
+    }
+}
+
+fn parse_spec(spec: &str) -> Result<Injector, String> {
+    let mut seed = 0u64;
+    let mut rules = Vec::new();
+    for part in spec.split(';').map(str::trim).filter(|p| !p.is_empty()) {
+        let (lhs, rhs) =
+            part.split_once('=').ok_or_else(|| format!("{part:?}: expected key=value"))?;
+        if lhs == "seed" {
+            seed = rhs.parse().map_err(|_| format!("seed {rhs:?} is not a u64"))?;
+            continue;
+        }
+        let mut rest = rhs;
+        let mut count = u64::MAX;
+        if let Some((head, c)) = rest.split_once('#') {
+            count = c.parse().map_err(|_| format!("{part:?}: count {c:?} is not a u64"))?;
+            rest = head;
+        }
+        let mut prob = 1.0f64;
+        if let Some((head, p)) = rest.split_once('@') {
+            prob = p.parse().map_err(|_| format!("{part:?}: prob {p:?} is not a float"))?;
+            if !(prob > 0.0 && prob <= 1.0) {
+                return Err(format!("{part:?}: prob must be in (0, 1]"));
+            }
+            rest = head;
+        }
+        let mut arg = 10u64;
+        if let Some((head, a)) = rest.split_once(':') {
+            arg = a.parse().map_err(|_| format!("{part:?}: arg {a:?} is not a u64"))?;
+            rest = head;
+        }
+        let mode = match rest {
+            "panic" => Mode::Panic,
+            "delay" => Mode::Delay,
+            "error" => Mode::Error,
+            "short" => Mode::Short,
+            "exit" => Mode::Exit,
+            other => return Err(format!("{part:?}: unknown mode {other:?}")),
+        };
+        rules.push(Rule {
+            site: lhs.to_string(),
+            mode,
+            arg,
+            prob,
+            count,
+            hits: AtomicU64::new(0),
+            fired: AtomicU64::new(0),
+            salt: rules.len() as u64 + 1,
+        });
+    }
+    Ok(Injector { seed, rules })
+}
+
+/// splitmix64: the standard 64-bit finalizing mix, used as a stateless
+/// counter-mode PRNG (`seed ^ salt ^ n` → uniform u64).
+fn splitmix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9e3779b97f4a7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+    z ^ (z >> 31)
+}
+
+/// Unit-test helpers shared by every in-crate chaos test (pool, shard,
+/// serve): the injector is process-global, so tests that arm it must be
+/// serialized and must disarm on exit even when they fail.
+#[cfg(test)]
+pub(crate) mod testutil {
+    use std::sync::Mutex;
+
+    /// Holds the injection lock for the test's lifetime; arms `spec` on
+    /// construction and disarms (and releases) on drop.
+    pub(crate) struct Armed(#[allow(dead_code)] std::sync::MutexGuard<'static, ()>);
+
+    impl Armed {
+        pub(crate) fn install(spec: &str) -> Armed {
+            static SERIAL: Mutex<()> = Mutex::new(());
+            let g = SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+            super::install_spec(spec).unwrap();
+            Armed(g)
+        }
+    }
+
+    impl Drop for Armed {
+        fn drop(&mut self) {
+            super::clear();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::testutil::Armed;
+    use super::*;
+
+    #[test]
+    fn disarmed_site_is_a_noop() {
+        let _g = Armed::install("");
+        assert_eq!(inject("pool.step"), None);
+        assert_eq!(inject("serve.write"), None);
+    }
+
+    #[test]
+    fn prefix_rules_match_and_count_caps_hold() {
+        let _g = Armed::install("seed=1;pool.=error#2");
+        assert_eq!(inject("pool.step"), Some(Fault::Error));
+        assert_eq!(inject("pool.worker.exit"), Some(Fault::Error));
+        assert_eq!(inject("pool.step"), None, "count cap reached");
+        assert_eq!(inject("serve.read"), None, "prefix must not match");
+        assert_eq!(fired_at("pool."), 2);
+    }
+
+    #[test]
+    fn panic_mode_unwinds_with_site_name() {
+        let _g = Armed::install("serve.handle=panic#1");
+        let err = std::panic::catch_unwind(|| inject("serve.handle")).unwrap_err();
+        let msg = err.downcast_ref::<String>().cloned().unwrap_or_default();
+        assert!(msg.contains("injected fault at serve.handle"), "{msg}");
+        assert_eq!(inject("serve.handle"), None, "single-shot rule");
+    }
+
+    #[test]
+    fn probability_stream_is_deterministic() {
+        let sample = |seed: u64| -> Vec<bool> {
+            let _g = Armed::install(&format!("seed={seed};shard.dispatch=error@0.3"));
+            (0..64).map(|_| inject("shard.dispatch").is_some()).collect()
+        };
+        let a = sample(42);
+        let b = sample(42);
+        let c = sample(43);
+        assert_eq!(a, b, "same seed, same stream");
+        assert_ne!(a, c, "different seed, different stream");
+        let hits = a.iter().filter(|&&h| h).count();
+        assert!(hits > 5 && hits < 40, "p=0.3 over 64 draws, got {hits}");
+    }
+
+    #[test]
+    fn malformed_specs_are_rejected() {
+        for bad in ["pool.step", "x=vanish", "seed=puppy", "a=panic@2.0", "b=error#x"] {
+            assert!(parse_spec(bad).is_err(), "{bad:?} must be rejected");
+        }
+        assert!(parse_spec("seed=3; pool.step=panic:5@0.5#9").is_ok());
+    }
+}

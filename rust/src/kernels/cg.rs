@@ -43,8 +43,11 @@ pub fn cg_solve(
         }
         matvec(&p, &mut scratch);
         let p_ap: f64 = p.iter().zip(&scratch).map(|(a, b)| a * b).sum();
-        if p_ap.abs() < 1e-300 {
-            break; // breakdown (matrix not SPD enough)
+        if p_ap.abs() < 1e-300 || !p_ap.is_finite() {
+            // breakdown (matrix not SPD enough), or a failed backend
+            // NaN-poisoned the matvec output — stop rather than iterate
+            // on garbage
+            break;
         }
         let alpha = rs_old / p_ap;
         for i in 0..n {
@@ -101,7 +104,7 @@ pub fn pcg_solve(
         scratch.iter_mut().for_each(|s| *s = 0.0);
         matvec(&p, &mut scratch);
         let p_ap: f64 = p.iter().zip(&scratch).map(|(a, b)| a * b).sum();
-        if p_ap.abs() < 1e-300 {
+        if p_ap.abs() < 1e-300 || !p_ap.is_finite() {
             break;
         }
         let alpha = rz_old / p_ap;

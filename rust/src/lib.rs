@@ -60,6 +60,10 @@
 //!   a Chrome-trace exporter (`race-cli profile`, serve `{"metrics"}`).
 //! * [`coordinator`] — the pipeline driver used by the CLI, benches and
 //!   examples.
+//! * [`fault`] — deterministic fault injection (`RACE_FAULT`): seeded,
+//!   std-only, one relaxed atomic load when disarmed; drives the chaos
+//!   suite that proves panic isolation, shard degradation and serve
+//!   admission control actually recover.
 //!
 //! ## Quickstart
 //!
@@ -77,7 +81,8 @@
 //! let op = Operator::build(&a, OpConfig::new().threads(4).backend(Backend::Pool)).unwrap();
 //! let x = vec![1.0; op.n()];
 //! let mut b = vec![0.0; op.n()];
-//! op.symmspmv(&x, &mut b); // logical order in, logical order out
+//! op.symmspmv(&x, &mut b).unwrap(); // logical order in, logical order out
+//! // (a worker panic surfaces as a typed `ExecError`, never an unwind)
 //! let b_ref = a.spmv_ref(&x);
 //! for (u, v) in b.iter().zip(&b_ref) { assert!((u - v).abs() < 1e-9); }
 //! // matrix powers y_k = A^k x through the same handle (level-blocked MPK)
@@ -100,6 +105,7 @@
 pub mod cachesim;
 pub mod color;
 pub mod coordinator;
+pub mod fault;
 pub mod gen;
 pub mod graph;
 pub mod kernels;

@@ -84,6 +84,7 @@ USAGE:
                  [--small] [--max-requests N] [--mpk-power P] [--mpk-cache BYTES]
                  [--batch-window-us N] [--storage pack|csr] [--prec f64|f32]
                  [--solve-iter-max N] [--trace] [--hwc] [--slow-ms N]
+                 [--deadline-ms N] [--queue-cap N] [--io-timeout-ms N]
       SymmSpMV/MPK/solve-as-a-service over TCP (newline-delimited JSON,
       see docs/SERVE_PROTOCOL.md): multi-matrix registry, request
       micro-batching on a persistent worker pool (SymmSpMV and MPK
@@ -102,7 +103,14 @@ USAGE:
       --hwc attaches process-level hardware counters and exposes them as
       race_hwc_* gauges in {\"metrics\": true}; --slow-ms N logs a
       structured line for requests slower than N ms (id, kind, matrix,
-      batch size, latency). --shards K partitions the machine into K
+      batch size, latency). Resilience knobs (docs/RELIABILITY.md):
+      --deadline-ms N bounds every request's end-to-end time (answering
+      deadline_exceeded past it; per-request {\"deadline_ms\": N}
+      overrides), --queue-cap N bounds each matrix's batch queue
+      (excess requests shed with overloaded + retry_after_ms), and
+      --io-timeout-ms N disconnects clients that stall mid-read or
+      mid-write. {\"health\": true} reports per-shard liveness and
+      worker-restart counts. --shards K partitions the machine into K
       CPU-affinity domains (NUMA nodes when /sys exposes them), pins one
       pool of --threads participants per domain with its own storage
       replica, and routes batches sticky (matrix -> home domain) with
@@ -255,6 +263,9 @@ fn main() -> Result<()> {
                 trace: args.has("trace"),
                 hwc: args.has("hwc"),
                 slow_ms: args.get_usize("slow-ms", 0)? as u64,
+                deadline_ms: args.get_usize("deadline-ms", 0)? as u64,
+                queue_cap: args.get_usize("queue-cap", 0)?,
+                io_timeout_ms: args.get_usize("io-timeout-ms", 0)? as u64,
             };
             race::serve::serve(&opts)
         }
@@ -664,7 +675,7 @@ fn cmd_profile(args: &Args) -> Result<()> {
     let x: Vec<f64> = (0..op.n()).map(|i| ((i % 97) as f64) * 0.02 - 0.9).collect();
     let xp = op.permute(&x);
     let mut bp = vec![0.0; op.n()];
-    op.symmspmv_permuted(&xp, &mut bp);
+    op.symmspmv_permuted(&xp, &mut bp)?;
     let build_events = obs::recorder().drain();
     let phases: Vec<obs::PhaseTotal> = obs::phase_totals(&build_events)
         .into_iter()
@@ -703,15 +714,15 @@ fn cmd_profile(args: &Args) -> Result<()> {
     // supplies the per-worker slots and the trace spans
     obs::set_enabled(false);
     let s_symm = race::util::bench::bench("symmspmv", 0.1, || {
-        op.symmspmv_permuted(&xp, std::hint::black_box(&mut bp));
+        op.symmspmv_permuted(&xp, std::hint::black_box(&mut bp)).unwrap();
     });
     let measured_symm = if hwc {
-        Some(measure(&mut || op.symmspmv_permuted(&xp, &mut bp), s_symm.median))
+        Some(measure(&mut || op.symmspmv_permuted(&xp, &mut bp).unwrap(), s_symm.median))
     } else {
         None
     };
     obs::set_enabled(true);
-    op.symmspmv_permuted(&xp, &mut bp);
+    op.symmspmv_permuted(&xp, &mut bp)?;
     let report = op.worker_pool().take_exec_report();
 
     let nnz_full = op.permuted_matrix().nnz();

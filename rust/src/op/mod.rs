@@ -65,17 +65,26 @@
 //! let op = Operator::build(&a, OpConfig::new().threads(2).backend(Backend::Pool)).unwrap();
 //! let x = vec![1.0; op.n()];
 //! let mut b = vec![0.0; op.n()];
-//! op.symmspmv(&x, &mut b); // logical order in and out
+//! op.symmspmv(&x, &mut b).unwrap(); // logical order in and out
 //! // the 5-point stencil's rows sum to 1, so b == x
 //! assert!(b.iter().all(|v| (v - 1.0).abs() < 1e-12));
 //! ```
+//!
+//! Every kernel entry point is fallible: a panic inside a worker (or an
+//! injected fault, see [`crate::fault`]) surfaces as a typed
+//! [`ExecError`] instead of unwinding the caller or deadlocking the
+//! pool. Under [`Backend::Sharded`] a failing domain is marked failed
+//! and the call degrades along the documented ladder — surviving
+//! shards → flat pool → serial inline — preserving bit-identical
+//! results (`docs/RELIABILITY.md`).
 
 use crate::coordinator::{permute_vec, unpermute_vec};
 use crate::graph;
 use crate::kernels::{self, PowerMat};
 use crate::mpk::{MpkConfig, MpkPlan};
 use crate::obs;
-use crate::pool::{self, StepProgram, WorkUnit, WorkerPool};
+use crate::fault;
+use crate::pool::{self, ExecError, StepProgram, WorkUnit, WorkerPool};
 use crate::race::{RaceConfig, RaceEngine};
 use crate::sparse::{Csr, CsrPack, ValPrec};
 use anyhow::{bail, Result};
@@ -319,8 +328,9 @@ impl MpkHandle {
 type RowFn = fn(&Csr, &[f64], &mut [f64], usize);
 /// Scoped tree executor of a solver sweep.
 type ScopedFn = fn(&RaceEngine, &Csr, &[f64], &mut [f64]);
-/// Pool-program executor of a solver sweep.
-type PooledFn = fn(&WorkerPool, &StepProgram, &Csr, &[f64], &mut [f64]);
+/// Pool-program executor of a solver sweep (fallible: worker panics
+/// surface as [`ExecError`]).
+type PooledFn = fn(&WorkerPool, &StepProgram, &Csr, &[f64], &mut [f64]) -> Result<(), ExecError>;
 
 /// Per-domain execution state of a [`Backend::Sharded`] handle: the
 /// domain set (pinned pools) plus one replica of the SymmSpMV storage
@@ -663,7 +673,8 @@ impl Operator {
     // ---- SymmSpMV ----
 
     /// SymmSpMV `b = A x`, logical order in and out. `b` is overwritten.
-    pub fn symmspmv(&self, x: &[f64], b: &mut [f64]) {
+    /// On `Err` (worker panic, [`ExecError`]) `b` is untouched.
+    pub fn symmspmv(&self, x: &[f64], b: &mut [f64]) -> Result<(), ExecError> {
         assert_eq!(x.len(), self.n());
         assert_eq!(b.len(), self.n());
         let xp = {
@@ -671,18 +682,20 @@ impl Operator {
             permute_vec(x, &self.total_perm)
         };
         let mut bp = vec![0.0; self.n()];
-        self.symmspmv_permuted(&xp, &mut bp);
+        self.symmspmv_permuted(&xp, &mut bp)?;
         let _s = obs::span("exec.permute_out");
         for (old, &new) in self.total_perm.iter().enumerate() {
             b[old] = bp[new as usize];
         }
+        Ok(())
     }
 
     /// SymmSpMV in executor numbering (`x` pre-permuted with
     /// [`Operator::permute`]) — the zero-copy hot path for benches and
-    /// iterative solvers. `b` is overwritten (zeroed internally).
-    pub fn symmspmv_permuted(&self, xp: &[f64], bp: &mut [f64]) {
-        self.symmspmv_permuted_on(self.pack(), xp, bp);
+    /// iterative solvers. `b` is overwritten (zeroed internally); on
+    /// `Err` it is partially written and must be discarded.
+    pub fn symmspmv_permuted(&self, xp: &[f64], bp: &mut [f64]) -> Result<(), ExecError> {
+        self.symmspmv_permuted_on(self.pack(), xp, bp)
     }
 
     /// SymmSpMV in executor numbering over the **single-precision
@@ -692,18 +705,18 @@ impl Operator {
     /// infeasible and the call fell back to the full-precision path
     /// (bitwise identical to [`Operator::symmspmv_permuted`] then).
     /// `b` is overwritten (zeroed internally).
-    pub fn symmspmv_permuted_f32(&self, xp: &[f64], bp: &mut [f64]) -> bool {
+    pub fn symmspmv_permuted_f32(&self, xp: &[f64], bp: &mut [f64]) -> Result<bool, ExecError> {
         match self.f32_pack() {
             Some(_) => {
                 // re-borrow inside the arm: `f32_pack` may alias the
                 // primary pack, and `symmspmv_permuted_on` wants one
                 // coherent Option
-                self.symmspmv_permuted_on(self.f32_pack(), xp, bp);
-                true
+                self.symmspmv_permuted_on(self.f32_pack(), xp, bp)?;
+                Ok(true)
             }
             None => {
-                self.symmspmv_permuted_on(self.pack(), xp, bp);
-                false
+                self.symmspmv_permuted_on(self.pack(), xp, bp)?;
+                Ok(false)
             }
         }
     }
@@ -711,7 +724,12 @@ impl Operator {
     /// Backend dispatch shared by the full- and low-precision SymmSpMV
     /// entry points: zero `bp`, then run the configured executor over
     /// `pk` (packed) or [`Operator::upper`] (CSR).
-    fn symmspmv_permuted_on(&self, pk: Option<&CsrPack>, xp: &[f64], bp: &mut [f64]) {
+    fn symmspmv_permuted_on(
+        &self,
+        pk: Option<&CsrPack>,
+        xp: &[f64],
+        bp: &mut [f64],
+    ) -> Result<(), ExecError> {
         assert!(
             self.cfg.race.dist >= 2,
             "SymmSpMV needs a distance-2 schedule (configured dist = {})",
@@ -722,29 +740,11 @@ impl Operator {
         let _sp = obs::span("exec.symmspmv");
         bp.iter_mut().for_each(|v| *v = 0.0);
         match (self.cfg.backend, pk) {
-            (Backend::Serial, None) => {
-                // range/length invariants established by the asserts
-                // above; program units are schedule invariants — per-unit
-                // checks hoisted (see kernels::symmspmv_range docs)
-                let prog = self.program();
-                for s in 0..prog.nsteps() {
-                    for u in prog.step(s) {
-                        let (lo, hi) = (u.start as usize, u.end as usize);
-                        kernels::symmspmv_range_unchecked(&self.upper, xp, bp, lo, hi);
-                    }
-                }
+            (Backend::Serial, pk) => catch_exec(|| self.symmspmv_serial_inline(pk, xp, bp)),
+            (Backend::Scoped, None) => {
+                catch_exec(|| kernels::symmspmv_race(&self.eng, &self.upper, xp, bp))
             }
-            (Backend::Serial, Some(pk)) => {
-                let prog = self.program();
-                for s in 0..prog.nsteps() {
-                    for u in prog.step(s) {
-                        let (lo, hi) = (u.start as usize, u.end as usize);
-                        kernels::symmspmv_range_pack_unchecked(pk, xp, bp, lo, hi);
-                    }
-                }
-            }
-            (Backend::Scoped, None) => kernels::symmspmv_race(&self.eng, &self.upper, xp, bp),
-            (Backend::Scoped, Some(pk)) => {
+            (Backend::Scoped, Some(pk)) => catch_exec(|| {
                 // program-order scoped sweep: bit-identical to the tree
                 // execution (order-preserving flatten, crate::pool docs)
                 let len = bp.len();
@@ -761,7 +761,7 @@ impl Operator {
                         u.end as usize,
                     );
                 });
-            }
+            }),
             (Backend::Pool, None) => {
                 pool::symmspmv_pool(self.worker_pool(), self.program(), &self.upper, xp, bp)
             }
@@ -772,48 +772,109 @@ impl Operator {
         }
     }
 
-    /// SymmSpMV on one shard's pool and storage replica. `shard` `None`
-    /// routes round-robin. When `pk` is the handle's primary pack the
-    /// shard's replica substitutes for it; a companion pack (the f32
-    /// mixed-precision pack of a non-f32 handle) is not replicated and
-    /// streams shared memory from whichever domain runs it.
+    /// The compiled program executed inline in program order — the serial
+    /// backend, and the last rung of the sharded degradation ladder
+    /// (bit-identical to every other backend by the step-program
+    /// contract). `bp` must be zeroed by the caller.
+    fn symmspmv_serial_inline(&self, pk: Option<&CsrPack>, xp: &[f64], bp: &mut [f64]) {
+        // range/length invariants established by the callers' asserts;
+        // program units are schedule invariants — per-unit checks hoisted
+        // (see kernels::symmspmv_range docs)
+        let prog = self.program();
+        for s in 0..prog.nsteps() {
+            for u in prog.step(s) {
+                let (lo, hi) = (u.start as usize, u.end as usize);
+                match pk {
+                    Some(pk) => kernels::symmspmv_range_pack_unchecked(pk, xp, bp, lo, hi),
+                    None => kernels::symmspmv_range_unchecked(&self.upper, xp, bp, lo, hi),
+                }
+            }
+        }
+    }
+
+    /// SymmSpMV under [`Backend::Sharded`] with the degradation ladder:
+    /// try the placed (else round-robin) domain, walk to the next healthy
+    /// domain on failure (marking the failed one, see
+    /// [`crate::shard::ShardSet::mark_failed`]), and when every domain is
+    /// down fall back to the flat pool, then to the serial inline sweep.
+    /// Results are bit-identical at every rung. When `pk` is the handle's
+    /// primary pack the shard's replica substitutes for it; a companion
+    /// pack (the f32 mixed-precision pack of a non-f32 handle) is not
+    /// replicated and streams shared memory from whichever domain runs
+    /// it.
     fn sharded_symmspmv(
         &self,
         pk: Option<&CsrPack>,
         xp: &[f64],
         bp: &mut [f64],
         shard: Option<usize>,
-    ) {
+    ) -> Result<(), ExecError> {
         let st = self.shard_state();
-        let s = shard.unwrap_or_else(|| st.set.next_shard()) % st.set.shards();
-        let _sp = obs::span_detail("exec.shard", || format!("shard={s}"));
-        let pool = st.set.pool(s);
-        match pk {
-            None => pool::symmspmv_pool(pool, self.program(), &st.uppers[s], xp, bp),
-            Some(p) => {
-                let is_primary = self
-                    .pack
-                    .get()
-                    .and_then(|o| o.as_ref())
-                    .is_some_and(|q| std::ptr::eq(p, q));
-                let rp = if is_primary { st.packs[s].as_ref().unwrap_or(p) } else { p };
-                pool::symmspmv_pool_pack(pool, self.program(), rp, xp, bp)
+        let k = st.set.shards();
+        let start = shard.unwrap_or_else(|| st.set.next_shard()) % k;
+        for off in 0..k {
+            let s = (start + off) % k;
+            if st.set.is_failed(s) {
+                continue;
+            }
+            let _sp = obs::span_detail("exec.shard", || format!("shard={s}"));
+            // a prior failed attempt left partial sums behind
+            bp.iter_mut().for_each(|v| *v = 0.0);
+            let res = catch_exec(|| -> Result<(), ExecError> {
+                if fault::inject("shard.dispatch") == Some(fault::Fault::Error) {
+                    return Err(ExecError {
+                        worker: 0,
+                        step: None,
+                        message: format!("injected fault at shard.dispatch (shard {s})"),
+                    });
+                }
+                let pool = st.set.pool(s);
+                match pk {
+                    None => pool::symmspmv_pool(pool, self.program(), &st.uppers[s], xp, bp),
+                    Some(p) => {
+                        let is_primary = self
+                            .pack
+                            .get()
+                            .and_then(|o| o.as_ref())
+                            .is_some_and(|q| std::ptr::eq(p, q));
+                        let rp = if is_primary { st.packs[s].as_ref().unwrap_or(p) } else { p };
+                        pool::symmspmv_pool_pack(pool, self.program(), rp, xp, bp)
+                    }
+                }
+            })
+            .and_then(|r| r);
+            match res {
+                Ok(()) => return Ok(()),
+                Err(_) => st.set.mark_failed(s),
             }
         }
+        // every domain failed (or was already marked): flat pool rung
+        let _sp = obs::span("exec.shard_degraded");
+        bp.iter_mut().for_each(|v| *v = 0.0);
+        let flat = match pk {
+            None => pool::symmspmv_pool(self.worker_pool(), self.program(), &self.upper, xp, bp),
+            Some(p) => pool::symmspmv_pool_pack(self.worker_pool(), self.program(), p, xp, bp),
+        };
+        if flat.is_ok() {
+            return Ok(());
+        }
+        // serial rung: no pool, no threads
+        bp.iter_mut().for_each(|v| *v = 0.0);
+        catch_exec(|| self.symmspmv_serial_inline(pk, xp, bp))
     }
 
     /// Multi-RHS SymmSpMV `B = A X`, logical order: one matrix sweep
     /// serves the whole batch. Outputs are bit-identical to per-vector
-    /// [`Operator::symmspmv`] calls. Each `bs[j]` is overwritten.
-    pub fn symmspmv_multi(&self, xs: &[Vec<f64>], bs: &mut [Vec<f64>]) {
+    /// [`Operator::symmspmv`] calls. Each `bs[j]` is overwritten; on
+    /// `Err` none of them is touched.
+    pub fn symmspmv_multi(&self, xs: &[Vec<f64>], bs: &mut [Vec<f64>]) -> Result<(), ExecError> {
         assert_eq!(xs.len(), bs.len());
         let m = xs.len();
         if m == 0 {
-            return;
+            return Ok(());
         }
         if m == 1 {
-            self.symmspmv(&xs[0], &mut bs[0]);
-            return;
+            return self.symmspmv(&xs[0], &mut bs[0]);
         }
         let n = self.n();
         for (x, b) in xs.iter().zip(bs.iter()) {
@@ -827,17 +888,24 @@ impl Operator {
             }
         }
         let mut bsf = vec![0.0; n * m];
-        self.symmspmv_multi_permuted(&xsf, &mut bsf, m);
+        self.symmspmv_multi_permuted(&xsf, &mut bsf, m)?;
         for (j, b) in bs.iter_mut().enumerate() {
             for (old, &new) in self.total_perm.iter().enumerate() {
                 b[old] = bsf[new as usize * m + j];
             }
         }
+        Ok(())
     }
 
     /// Multi-RHS SymmSpMV in executor numbering, vectors row-major
-    /// (`xs[row * nrhs + j]`). `bs` is overwritten (zeroed internally).
-    pub fn symmspmv_multi_permuted(&self, xsf: &[f64], bsf: &mut [f64], nrhs: usize) {
+    /// (`xs[row * nrhs + j]`). `bs` is overwritten (zeroed internally);
+    /// on `Err` it is partially written and must be discarded.
+    pub fn symmspmv_multi_permuted(
+        &self,
+        xsf: &[f64],
+        bsf: &mut [f64],
+        nrhs: usize,
+    ) -> Result<(), ExecError> {
         assert!(self.cfg.race.dist >= 2, "SymmSpMV needs a distance-2 schedule");
         let n = self.n();
         assert!(nrhs > 0);
@@ -846,37 +914,8 @@ impl Operator {
         let _sp = obs::span_detail("exec.symmspmv_multi", || format!("nrhs={nrhs}"));
         bsf.iter_mut().for_each(|v| *v = 0.0);
         match (self.cfg.backend, self.pack()) {
-            (Backend::Serial, None) => {
-                let prog = self.program();
-                for s in 0..prog.nsteps() {
-                    for u in prog.step(s) {
-                        kernels::symmspmv_range_multi(
-                            &self.upper,
-                            xsf,
-                            bsf,
-                            nrhs,
-                            u.start as usize,
-                            u.end as usize,
-                        );
-                    }
-                }
-            }
-            (Backend::Serial, Some(pk)) => {
-                let prog = self.program();
-                for s in 0..prog.nsteps() {
-                    for u in prog.step(s) {
-                        kernels::symmspmv_range_multi_pack(
-                            pk,
-                            xsf,
-                            bsf,
-                            nrhs,
-                            u.start as usize,
-                            u.end as usize,
-                        );
-                    }
-                }
-            }
-            (Backend::Scoped, pk) => {
+            (Backend::Serial, pk) => catch_exec(|| self.multi_serial_inline(pk, xsf, bsf, nrhs)),
+            (Backend::Scoped, pk) => catch_exec(|| {
                 let len = bsf.len();
                 let bp = kernels::SendPtr(bsf.as_mut_ptr());
                 run_program_scoped(self.program(), self.cfg.race.threads, |u| {
@@ -903,7 +942,7 @@ impl Operator {
                         ),
                     }
                 });
-            }
+            }),
             (Backend::Pool, None) => pool::symmspmv_race_multi(
                 self.worker_pool(),
                 self.program(),
@@ -924,6 +963,21 @@ impl Operator {
         }
     }
 
+    /// Serial inline multi-RHS sweep (serial backend and the last rung of
+    /// the sharded multi-RHS ladder). `bsf` must be zeroed by the caller.
+    fn multi_serial_inline(&self, pk: Option<&CsrPack>, xsf: &[f64], bsf: &mut [f64], nrhs: usize) {
+        let prog = self.program();
+        for s in 0..prog.nsteps() {
+            for u in prog.step(s) {
+                let (lo, hi) = (u.start as usize, u.end as usize);
+                match pk {
+                    Some(pk) => kernels::symmspmv_range_multi_pack(pk, xsf, bsf, nrhs, lo, hi),
+                    None => kernels::symmspmv_range_multi(&self.upper, xsf, bsf, nrhs, lo, hi),
+                }
+            }
+        }
+    }
+
     /// Multi-RHS SymmSpMV with an explicit placement: like
     /// [`Operator::symmspmv_multi`], but under [`Backend::Sharded`] a
     /// `Some(shard)` runs the whole batch on that domain's pool and
@@ -936,15 +990,14 @@ impl Operator {
         xs: &[Vec<f64>],
         bs: &mut [Vec<f64>],
         shard: Option<usize>,
-    ) {
+    ) -> Result<(), ExecError> {
         assert_eq!(xs.len(), bs.len());
         let m = xs.len();
         if m == 0 {
-            return;
+            return Ok(());
         }
         if !matches!(self.cfg.backend, Backend::Sharded { .. }) || shard.is_none() {
-            self.symmspmv_multi(xs, bs);
-            return;
+            return self.symmspmv_multi(xs, bs);
         }
         let n = self.n();
         if m == 1 {
@@ -955,12 +1008,12 @@ impl Operator {
                 permute_vec(&xs[0], &self.total_perm)
             };
             let mut bp = vec![0.0; n];
-            self.sharded_symmspmv(self.pack(), &xp, &mut bp, shard);
+            self.sharded_symmspmv(self.pack(), &xp, &mut bp, shard)?;
             let _s = obs::span("exec.permute_out");
             for (old, &new) in self.total_perm.iter().enumerate() {
                 bs[0][old] = bp[new as usize];
             }
-            return;
+            return Ok(());
         }
         for (x, b) in xs.iter().zip(bs.iter()) {
             assert_eq!(x.len(), n);
@@ -973,41 +1026,61 @@ impl Operator {
             }
         }
         let mut bsf = vec![0.0; n * m];
-        self.sharded_symmspmv_multi(&xsf, &mut bsf, m, shard);
+        self.sharded_symmspmv_multi(&xsf, &mut bsf, m, shard)?;
         for (j, b) in bs.iter_mut().enumerate() {
             for (old, &new) in self.total_perm.iter().enumerate() {
                 b[old] = bsf[new as usize * m + j];
             }
         }
+        Ok(())
     }
 
     /// Sharded multi-RHS dispatch. `Some(shard)` keeps the whole batch
     /// on one domain (sticky); `None` splits the RHS columns into up to
-    /// `shards` chunks executed concurrently, each on its own pool and
-    /// replica (replica fan-out). Per-column results are bit-identical
-    /// under any grouping: a multi-RHS sweep accumulates each column
-    /// independently in the same program order.
+    /// `healthy-shards` chunks executed concurrently, each on its own
+    /// pool and replica (replica fan-out). Per-column results are
+    /// bit-identical under any grouping: a multi-RHS sweep accumulates
+    /// each column independently in the same program order. A domain
+    /// that fails mid-batch is marked failed and the batch re-runs on
+    /// the survivors; with no survivors it degrades to the flat pool,
+    /// then serial ([`crate::shard::ShardSet`] docs).
     fn sharded_symmspmv_multi(
         &self,
         xsf: &[f64],
         bsf: &mut [f64],
         nrhs: usize,
         shard: Option<usize>,
-    ) {
+    ) -> Result<(), ExecError> {
         let st = self.shard_state();
         let k = st.set.shards();
         if let Some(s) = shard {
             let s = s % k;
-            let _sp = obs::span_detail("exec.shard", || format!("shard={s} nrhs={nrhs}"));
-            self.sharded_multi_on(st, s, xsf, bsf, nrhs);
-            return;
+            if !st.set.is_failed(s) {
+                let _sp = obs::span_detail("exec.shard", || format!("shard={s} nrhs={nrhs}"));
+                if self.try_sharded_multi_on(st, s, xsf, bsf, nrhs).is_ok() {
+                    return Ok(());
+                }
+                st.set.mark_failed(s);
+            }
+            // sticky target is down: re-route across the survivors
+            return self.sharded_symmspmv_multi(xsf, bsf, nrhs, None);
         }
-        let chunks = k.min(nrhs);
+        let healthy: Vec<usize> = (0..k).filter(|&s| !st.set.is_failed(s)).collect();
+        if healthy.is_empty() {
+            return self.flat_multi_fallback(xsf, bsf, nrhs);
+        }
+        let chunks = healthy.len().min(nrhs);
         if chunks <= 1 {
-            let s = st.set.next_shard();
+            let s = healthy[st.set.next_shard() % healthy.len()];
             let _sp = obs::span_detail("exec.shard", || format!("shard={s} nrhs={nrhs}"));
-            self.sharded_multi_on(st, s, xsf, bsf, nrhs);
-            return;
+            match self.try_sharded_multi_on(st, s, xsf, bsf, nrhs) {
+                Ok(()) => return Ok(()),
+                Err(_) => {
+                    st.set.mark_failed(s);
+                    // healthy set shrank; recursion terminates at empty
+                    return self.sharded_symmspmv_multi(xsf, bsf, nrhs, None);
+                }
+            }
         }
         let _sp = obs::span_detail("exec.shard_fanout", || {
             format!("shards={chunks} nrhs={nrhs}")
@@ -1030,12 +1103,42 @@ impl Operator {
             .collect();
         let mut chunk_b: Vec<Vec<f64>> =
             bounds.iter().map(|&(j0, j1)| vec![0.0; n * (j1 - j0)]).collect();
-        std::thread::scope(|sc| {
-            for (c, (cx, cb)) in chunk_x.iter().zip(chunk_b.iter_mut()).enumerate() {
-                let w = bounds[c].1 - bounds[c].0;
-                sc.spawn(move || self.sharded_multi_on(st, c, cx, cb, w));
-            }
+        let results: Vec<Result<(), ExecError>> = std::thread::scope(|sc| {
+            let handles: Vec<_> = chunk_x
+                .iter()
+                .zip(chunk_b.iter_mut())
+                .enumerate()
+                .map(|(c, (cx, cb))| {
+                    let w = bounds[c].1 - bounds[c].0;
+                    let s = healthy[c];
+                    sc.spawn(move || self.try_sharded_multi_on(st, s, cx, cb, w))
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| {
+                    h.join().unwrap_or_else(|_| {
+                        Err(ExecError {
+                            worker: 0,
+                            step: None,
+                            message: "sharded fan-out thread panicked".to_string(),
+                        })
+                    })
+                })
+                .collect()
         });
+        let mut any_failed = false;
+        for (c, r) in results.iter().enumerate() {
+            if r.is_err() {
+                st.set.mark_failed(healthy[c]);
+                any_failed = true;
+            }
+        }
+        if any_failed {
+            // re-run the whole batch on whatever survived — per-column
+            // results do not depend on the grouping, so this is safe
+            return self.sharded_symmspmv_multi(xsf, bsf, nrhs, None);
+        }
         for (c, &(j0, j1)) in bounds.iter().enumerate() {
             let w = j1 - j0;
             let cb = &chunk_b[c];
@@ -1045,15 +1148,72 @@ impl Operator {
                 }
             }
         }
+        Ok(())
     }
 
-    /// One multi-RHS sweep on shard `s`'s pool over its storage replica.
-    fn sharded_multi_on(&self, st: &ShardState, s: usize, xsf: &[f64], bsf: &mut [f64], m: usize) {
-        let pool = st.set.pool(s);
-        match st.packs[s].as_ref() {
-            Some(pk) => pool::symmspmv_multi_pool_pack(pool, self.program(), pk, xsf, bsf, m),
-            None => pool::symmspmv_race_multi(pool, self.program(), &st.uppers[s], xsf, bsf, m),
+    /// One multi-RHS sweep on shard `s`'s pool over its storage replica,
+    /// with the `shard.dispatch` fault site and panic containment. `bsf`
+    /// is re-zeroed here so a retry after a failed attempt starts clean.
+    fn try_sharded_multi_on(
+        &self,
+        st: &ShardState,
+        s: usize,
+        xsf: &[f64],
+        bsf: &mut [f64],
+        m: usize,
+    ) -> Result<(), ExecError> {
+        bsf.iter_mut().for_each(|v| *v = 0.0);
+        catch_exec(|| -> Result<(), ExecError> {
+            if fault::inject("shard.dispatch") == Some(fault::Fault::Error) {
+                return Err(ExecError {
+                    worker: 0,
+                    step: None,
+                    message: format!("injected fault at shard.dispatch (shard {s})"),
+                });
+            }
+            let pool = st.set.pool(s);
+            match st.packs[s].as_ref() {
+                Some(pk) => pool::symmspmv_multi_pool_pack(pool, self.program(), pk, xsf, bsf, m),
+                None => pool::symmspmv_race_multi(pool, self.program(), &st.uppers[s], xsf, bsf, m),
+            }
+        })
+        .and_then(|r| r)
+    }
+
+    /// Final rungs of the sharded multi-RHS ladder: the flat resident
+    /// pool, then the serial inline sweep. Bit-identical to the sharded
+    /// execution at both rungs.
+    fn flat_multi_fallback(
+        &self,
+        xsf: &[f64],
+        bsf: &mut [f64],
+        nrhs: usize,
+    ) -> Result<(), ExecError> {
+        let _sp = obs::span("exec.shard_degraded");
+        bsf.iter_mut().for_each(|v| *v = 0.0);
+        let flat = match self.pack() {
+            Some(pk) => pool::symmspmv_multi_pool_pack(
+                self.worker_pool(),
+                self.program(),
+                pk,
+                xsf,
+                bsf,
+                nrhs,
+            ),
+            None => pool::symmspmv_race_multi(
+                self.worker_pool(),
+                self.program(),
+                &self.upper,
+                xsf,
+                bsf,
+                nrhs,
+            ),
+        };
+        if flat.is_ok() {
+            return Ok(());
         }
+        bsf.iter_mut().for_each(|v| *v = 0.0);
+        catch_exec(|| self.multi_serial_inline(self.pack(), xsf, bsf, nrhs))
     }
 
     // ---- matrix powers (MPK) ----
@@ -1064,7 +1224,7 @@ impl Operator {
         if p == 0 {
             bail!("power p must be >= 1");
         }
-        let mut cache = self.mpk.lock().unwrap();
+        let mut cache = self.mpk.lock().unwrap_or_else(|e| e.into_inner());
         if let Some(h) = cache.get(&p) {
             return Ok(h.clone());
         }
@@ -1116,34 +1276,44 @@ impl Operator {
         assert_eq!(x.len(), self.n());
         let h = self.mpk(p)?;
         let xp = permute_vec(x, &h.total_perm);
-        let ys = self.powers_permuted(&h, &xp);
+        let ys = self.powers_permuted(&h, &xp)?;
         Ok(ys.iter().map(|y| unpermute_vec(y, &h.total_perm)).collect())
     }
 
     /// Matrix powers in the plan's numbering (`xp` pre-permuted with
     /// [`MpkHandle::permute`]) — the allocation-light path benches time.
-    pub fn powers_permuted(&self, h: &MpkHandle, xp: &[f64]) -> Vec<Vec<f64>> {
+    pub fn powers_permuted(&self, h: &MpkHandle, xp: &[f64]) -> Result<Vec<Vec<f64>>, ExecError> {
         self.powers_permuted_routed(h, xp, None)
     }
 
     /// [`Operator::powers_permuted`] with an explicit shard placement
     /// under [`Backend::Sharded`] (`None` routes round-robin; flat
     /// backends ignore it). The level-blocked plan itself is shared —
-    /// only the executing pool changes.
+    /// only the executing pool changes. A failing shard pool degrades to
+    /// the serial sweep (bit-identical; MPK plans are not replicated, so
+    /// there is no per-domain state to fail over).
     fn powers_permuted_routed(
         &self,
         h: &MpkHandle,
         xp: &[f64],
         shard: Option<usize>,
-    ) -> Vec<Vec<f64>> {
+    ) -> Result<Vec<Vec<f64>>, ExecError> {
         let _sp = obs::span_detail("exec.powers", || format!("p={}", h.plan.cfg.p));
         let m = h.power_mat();
         match self.cfg.backend {
-            Backend::Serial => kernels::mpk_powers_on(&h.plan, m, xp, 1),
-            Backend::Scoped => kernels::mpk_powers_on(&h.plan, m, xp, self.cfg.race.threads),
-            Backend::Pool | Backend::Sharded { .. } => {
+            Backend::Serial => catch_exec(|| kernels::mpk_powers_on(&h.plan, m, xp, 1)),
+            Backend::Scoped => {
+                catch_exec(|| kernels::mpk_powers_on(&h.plan, m, xp, self.cfg.race.threads))
+            }
+            Backend::Pool => {
+                pool::mpk_powers_pool_on(self.worker_pool(), &h.prog, &h.plan, m, xp)
+            }
+            Backend::Sharded { .. } => {
                 let wp = self.exec_pool(shard);
-                pool::mpk_powers_pool_on(&wp, &h.prog, &h.plan, m, xp)
+                pool::mpk_powers_pool_on(&wp, &h.prog, &h.plan, m, xp).or_else(|_| {
+                    let _sp = obs::span("exec.shard_degraded");
+                    catch_exec(|| kernels::mpk_powers_on(&h.plan, m, xp, 1))
+                })
             }
         }
     }
@@ -1179,7 +1349,7 @@ impl Operator {
         let h = self.mpk(p)?;
         if m == 1 {
             let xp = permute_vec(&xs[0], &h.total_perm);
-            let ys = self.powers_permuted_routed(&h, &xp, shard);
+            let ys = self.powers_permuted_routed(&h, &xp, shard)?;
             return Ok(vec![unpermute_vec(&ys[p - 1], &h.total_perm)]);
         }
         let mut xsf = vec![0.0; n * m];
@@ -1190,13 +1360,21 @@ impl Operator {
         }
         let pm = h.power_mat();
         let ys = match self.cfg.backend {
-            Backend::Serial => kernels::mpk_powers_multi_on(&h.plan, pm, &xsf, m, 1),
-            Backend::Scoped => {
+            Backend::Serial => catch_exec(|| kernels::mpk_powers_multi_on(&h.plan, pm, &xsf, m, 1))?,
+            Backend::Scoped => catch_exec(|| {
                 kernels::mpk_powers_multi_on(&h.plan, pm, &xsf, m, self.cfg.race.threads)
+            })?,
+            Backend::Pool => {
+                pool::mpk_powers_multi_pool_on(self.worker_pool(), &h.prog, &h.plan, pm, &xsf, m)?
             }
-            Backend::Pool | Backend::Sharded { .. } => {
+            Backend::Sharded { .. } => {
                 let wp = self.exec_pool(shard);
-                pool::mpk_powers_multi_pool_on(&wp, &h.prog, &h.plan, pm, &xsf, m)
+                pool::mpk_powers_multi_pool_on(&wp, &h.prog, &h.plan, pm, &xsf, m).or_else(
+                    |_| {
+                        let _sp = obs::span("exec.shard_degraded");
+                        catch_exec(|| kernels::mpk_powers_multi_on(&h.plan, pm, &xsf, m, 1))
+                    },
+                )?
             }
         };
         let last = &ys[p - 1];
@@ -1233,15 +1411,25 @@ impl Operator {
         let m = h.power_mat();
         let zs = match self.cfg.backend {
             Backend::Serial => {
-                kernels::mpk_three_term_on(&h.plan, m, &zp, &z0p, sigma, tau, rho, 1)
+                catch_exec(|| kernels::mpk_three_term_on(&h.plan, m, &zp, &z0p, sigma, tau, rho, 1))?
             }
             Backend::Scoped => {
                 let t = self.cfg.race.threads;
-                kernels::mpk_three_term_on(&h.plan, m, &zp, &z0p, sigma, tau, rho, t)
+                catch_exec(|| kernels::mpk_three_term_on(&h.plan, m, &zp, &z0p, sigma, tau, rho, t))?
             }
-            Backend::Pool | Backend::Sharded { .. } => {
+            Backend::Pool => {
+                let wp = self.worker_pool().clone();
+                pool::mpk_three_term_pool_on(&wp, &h.prog, &h.plan, m, &zp, &z0p, sigma, tau, rho)?
+            }
+            Backend::Sharded { .. } => {
                 let wp = self.exec_pool(None);
                 pool::mpk_three_term_pool_on(&wp, &h.prog, &h.plan, m, &zp, &z0p, sigma, tau, rho)
+                    .or_else(|_| {
+                        let _sp = obs::span("exec.shard_degraded");
+                        catch_exec(|| {
+                            kernels::mpk_three_term_on(&h.plan, m, &zp, &z0p, sigma, tau, rho, 1)
+                        })
+                    })?
             }
         };
         Ok(zs.iter().map(|z| unpermute_vec(z, &h.total_perm)).collect())
@@ -1251,7 +1439,7 @@ impl Operator {
 
     /// Auxiliary schedule for dependency distance `dist` (cached).
     fn aux_schedule(&self, dist: usize) -> Arc<AuxSchedule> {
-        let mut cache = self.aux.lock().unwrap();
+        let mut cache = self.aux.lock().unwrap_or_else(|e| e.into_inner());
         if let Some(s) = cache.get(&dist) {
             return s.clone();
         }
@@ -1270,8 +1458,9 @@ impl Operator {
     /// One forward Gauss–Seidel sweep `x ← x + D⁻¹(b − A x)` on a
     /// distance-1 schedule, logical order (x is updated in place). The
     /// colored update order differs from a natural-order sweep — as with
-    /// any colored GS — but is identical across backends.
-    pub fn gauss_seidel(&self, b: &[f64], x: &mut [f64]) {
+    /// any colored GS — but is identical across backends. On `Err` the
+    /// sweep is abandoned and `x` is left untouched.
+    pub fn gauss_seidel(&self, b: &[f64], x: &mut [f64]) -> Result<(), ExecError> {
         let _sp = obs::span("exec.gauss_seidel");
         self.sweep(
             1,
@@ -1280,7 +1469,7 @@ impl Operator {
             kernels::solvers::gs_row,
             kernels::gauss_seidel_race,
             pool::gauss_seidel_pool,
-        );
+        )
     }
 
     /// SSOR preconditioner application `z = M⁻¹ r` with
@@ -1293,8 +1482,9 @@ impl Operator {
     /// compiled distance-1 program forward then exactly mirrored
     /// ([`StepProgram::reversed`]), which reproduces the scoped
     /// executor's tree recursion order ([`crate::kernels::ssor_precond`])
-    /// in both directions.
-    pub fn ssor_precond(&self, r: &[f64], z: &mut [f64]) {
+    /// in both directions. On `Err` the apply is abandoned and `z` is
+    /// left untouched.
+    pub fn ssor_precond(&self, r: &[f64], z: &mut [f64]) -> Result<(), ExecError> {
         let n = self.n();
         assert_eq!(r.len(), n);
         assert_eq!(z.len(), n);
@@ -1312,7 +1502,7 @@ impl Operator {
         let rp = permute_vec(r, perm);
         let mut zp = vec![0.0; n];
         match self.cfg.backend {
-            Backend::Serial => {
+            Backend::Serial => catch_exec(|| {
                 for s in 0..prog.nsteps() {
                     for u in prog.step(s) {
                         for row in u.start as usize..u.end as usize {
@@ -1327,23 +1517,25 @@ impl Operator {
                         }
                     }
                 }
-            }
-            Backend::Scoped => kernels::ssor_precond(eng, a, &rp, &mut zp),
+            })?,
+            Backend::Scoped => catch_exec(|| kernels::ssor_precond(eng, a, &rp, &mut zp))?,
             Backend::Pool | Backend::Sharded { .. } => {
                 // both sweeps on the same pool — one placement per apply
                 let wp = self.exec_pool(None);
-                pool::gauss_seidel_pool(&wp, prog, a, &rp, &mut zp);
-                pool::gauss_seidel_pool_rev(&wp, prog_rev, a, &rp, &mut zp);
+                pool::gauss_seidel_pool(&wp, prog, a, &rp, &mut zp)?;
+                pool::gauss_seidel_pool_rev(&wp, prog_rev, a, &rp, &mut zp)?;
             }
         }
         for (old, &new) in perm.iter().enumerate() {
             z[old] = zp[new as usize];
         }
+        Ok(())
     }
 
     /// One Kaczmarz projection sweep on a distance-2 schedule, logical
-    /// order (x is updated in place).
-    pub fn kaczmarz(&self, b: &[f64], x: &mut [f64]) {
+    /// order (x is updated in place). On `Err` the sweep is abandoned
+    /// and `x` is left untouched.
+    pub fn kaczmarz(&self, b: &[f64], x: &mut [f64]) -> Result<(), ExecError> {
         let _sp = obs::span("exec.kaczmarz");
         self.sweep(
             2,
@@ -1352,7 +1544,7 @@ impl Operator {
             kernels::solvers::kaczmarz_row,
             kernels::kaczmarz_race,
             pool::kaczmarz_pool,
-        );
+        )
     }
 
     /// Shared plumbing of the distance-k solver sweeps: pick the main or
@@ -1366,7 +1558,7 @@ impl Operator {
         row_kernel: RowFn,
         scoped: ScopedFn,
         pooled: PooledFn,
-    ) {
+    ) -> Result<(), ExecError> {
         let n = self.n();
         assert_eq!(b.len(), n);
         assert_eq!(x.len(), n);
@@ -1382,7 +1574,7 @@ impl Operator {
         let bp = permute_vec(b, perm);
         let mut xp = permute_vec(x, perm);
         match self.cfg.backend {
-            Backend::Serial => {
+            Backend::Serial => catch_exec(|| {
                 for s in 0..prog.nsteps() {
                     for u in prog.step(s) {
                         for row in u.start as usize..u.end as usize {
@@ -1390,16 +1582,17 @@ impl Operator {
                         }
                     }
                 }
-            }
-            Backend::Scoped => scoped(eng, a, &bp, &mut xp),
+            })?,
+            Backend::Scoped => catch_exec(|| scoped(eng, a, &bp, &mut xp))?,
             Backend::Pool | Backend::Sharded { .. } => {
                 let wp = self.exec_pool(None);
-                pooled(&wp, prog, a, &bp, &mut xp);
+                pooled(&wp, prog, a, &bp, &mut xp)?;
             }
         }
         for (old, &new) in perm.iter().enumerate() {
             x[old] = xp[new as usize];
         }
+        Ok(())
     }
 }
 
@@ -1407,16 +1600,46 @@ impl Operator {
 /// allocation is first-touched by a pinned thread and its pages land in
 /// that domain's local memory (falls back to the calling thread for a
 /// single-participant pool — there is no resident worker to delegate
-/// to). The clone is bit-wise regardless of which thread runs it.
+/// to). The clone is bit-wise regardless of which thread runs it, so if
+/// the delegated clone fails (worker panic, injected `shard.clone`
+/// fault) we retry on the calling thread — locality is lost, bits are
+/// not.
 fn clone_on<T: Clone + Send + Sync>(pool: &WorkerPool, src: &T) -> T {
     let target = if pool.threads() > 1 { 1 } else { 0 };
     let slot = Mutex::new(None);
-    pool.run(|wid| {
+    let ran = pool.try_run(|wid| {
         if wid == target {
-            *slot.lock().unwrap() = Some(src.clone());
+            if fault::inject("shard.clone").is_some() {
+                panic!("injected fault at shard.clone");
+            }
+            *slot.lock().unwrap_or_else(|e| e.into_inner()) = Some(src.clone());
         }
     });
-    slot.into_inner().unwrap().expect("replica clone ran on the target worker")
+    let cloned = slot.into_inner().unwrap_or_else(|e| e.into_inner());
+    match (ran, cloned) {
+        (Ok(()), Some(v)) => v,
+        _ => {
+            let _sp = obs::span("exec.clone_fallback");
+            src.clone()
+        }
+    }
+}
+
+/// Run `f`, converting any panic into a typed [`ExecError`] attributed
+/// to the calling thread (worker 0). This is the uniform no-unwind
+/// wrapper for the serial and scoped backend arms, so every
+/// [`Operator`] entry point keeps the same "returns `Err`, never
+/// unwinds into the caller" contract regardless of backend.
+fn catch_exec<R>(f: impl FnOnce() -> R) -> Result<R, ExecError> {
+    std::panic::catch_unwind(std::panic::AssertUnwindSafe(f)).map_err(|p| ExecError {
+        worker: 0,
+        step: None,
+        message: p
+            .downcast_ref::<&str>()
+            .map(|s| s.to_string())
+            .or_else(|| p.downcast_ref::<String>().cloned())
+            .unwrap_or_else(|| "non-string panic payload".to_string()),
+    })
 }
 
 /// Scoped-spawn execution of a step program: up to `threads` scoped
@@ -1507,7 +1730,7 @@ mod tests {
         assert_eq!(op.unpermute(&op.permute(&x)), x);
         let want = a.spmv_ref(&x);
         let mut b = vec![0.0; n];
-        op.symmspmv(&x, &mut b);
+        op.symmspmv(&x, &mut b).unwrap();
         assert!(rel_err(&want, &b) < 1e-9, "err {:.2e}", rel_err(&want, &b));
         // spmv_ref agrees with the original-ordering reference
         assert!(rel_err(&want, &op.spmv_ref(&x)) < 1e-12);

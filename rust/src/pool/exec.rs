@@ -15,9 +15,14 @@
 //! sets overlap are separated by a barrier in the same relative order as
 //! the scoped execution (see `program` module docs), so floating-point
 //! accumulation orders are unchanged.
+//!
+//! Every executor is fallible: a panic inside a work unit (or an injected
+//! `pool.step` fault) surfaces as `Err(ExecError)` after the pool has
+//! drained — see the panic-isolation notes on [`super::workers`]. On
+//! `Err` the output buffers are partially written and must be discarded.
 
 use super::program::StepProgram;
-use super::workers::WorkerPool;
+use super::workers::{ExecError, WorkerPool};
 use crate::kernels::{self, PowerMat, SendPtr};
 use crate::mpk::MpkPlan;
 use crate::sparse::{Csr, CsrPack};
@@ -31,21 +36,21 @@ pub fn symmspmv_pool(
     upper: &Csr,
     x: &[f64],
     b: &mut [f64],
-) {
+) -> Result<(), ExecError> {
     assert_eq!(upper.nrows(), x.len());
     assert_eq!(upper.nrows(), b.len());
     assert!(prog.max_row() <= upper.nrows(), "program was compiled for a larger matrix");
     debug_assert!(upper.validate().is_ok());
     let n = b.len();
     let bp = SendPtr(b.as_mut_ptr());
-    pool.execute(prog, |u| {
+    pool.try_execute(prog, |u| {
         // SAFETY: units of one step are distance-2 independent — their
         // written index sets (own rows + upper partners) are disjoint.
         let b = unsafe { std::slice::from_raw_parts_mut(bp.0, n) };
         // range/length invariants validated once above; per-unit entry is
         // the hoisted-assert hot path (see kernels::symmspmv_range docs)
         kernels::symmspmv_range_unchecked(upper, x, b, u.start as usize, u.end as usize);
-    });
+    })
 }
 
 /// SymmSpMV on a tree program over [`CsrPack`] storage (`Upper` kind) —
@@ -57,19 +62,19 @@ pub fn symmspmv_pool_pack(
     pack: &CsrPack,
     x: &[f64],
     b: &mut [f64],
-) {
+) -> Result<(), ExecError> {
     assert_eq!(pack.nrows(), x.len());
     assert_eq!(pack.nrows(), b.len());
     assert!(prog.max_row() <= pack.nrows(), "program was compiled for a larger matrix");
     debug_assert!(pack.validate().is_ok());
     let n = b.len();
     let bp = SendPtr(b.as_mut_ptr());
-    pool.execute(prog, |u| {
+    pool.try_execute(prog, |u| {
         // SAFETY: identical write-disjointness argument as symmspmv_pool
         // (the pack encodes the same sparsity pattern).
         let b = unsafe { std::slice::from_raw_parts_mut(bp.0, n) };
         kernels::symmspmv_range_pack_unchecked(pack, x, b, u.start as usize, u.end as usize);
-    });
+    })
 }
 
 /// Multi-vector SymmSpMV on a tree program over [`CsrPack`] storage —
@@ -82,7 +87,7 @@ pub fn symmspmv_multi_pool_pack(
     xs: &[f64],
     bs: &mut [f64],
     nrhs: usize,
-) {
+) -> Result<(), ExecError> {
     let n = pack.nrows();
     assert!(nrhs > 0);
     assert_eq!(xs.len(), n * nrhs);
@@ -90,12 +95,12 @@ pub fn symmspmv_multi_pool_pack(
     assert!(prog.max_row() <= n, "program was compiled for a larger matrix");
     let len = bs.len();
     let bp = SendPtr(bs.as_mut_ptr());
-    pool.execute(prog, |u| {
+    pool.try_execute(prog, |u| {
         // SAFETY: disjoint row/col index sets scale to disjoint flat
         // ranges `idx * nrhs + j` — the distance-2 argument is unchanged.
         let bs = unsafe { std::slice::from_raw_parts_mut(bp.0, len) };
         kernels::symmspmv_range_multi_pack(pack, xs, bs, nrhs, u.start as usize, u.end as usize);
-    });
+    })
 }
 
 /// Multi-vector SymmSpMV `B = A X` on a tree program: `nrhs` right-hand
@@ -108,19 +113,19 @@ pub fn symmspmv_race_multi(
     xs: &[f64],
     bs: &mut [f64],
     nrhs: usize,
-) {
+) -> Result<(), ExecError> {
     let n = upper.nrows();
     assert!(nrhs > 0);
     assert_eq!(xs.len(), n * nrhs);
     assert_eq!(bs.len(), n * nrhs);
     let len = bs.len();
     let bp = SendPtr(bs.as_mut_ptr());
-    pool.execute(prog, |u| {
+    pool.try_execute(prog, |u| {
         // SAFETY: disjoint row/col index sets scale to disjoint flat
         // ranges `idx * nrhs + j` — the distance-2 argument is unchanged.
         let bs = unsafe { std::slice::from_raw_parts_mut(bp.0, len) };
         kernels::symmspmv_range_multi(upper, xs, bs, nrhs, u.start as usize, u.end as usize);
-    });
+    })
 }
 
 /// Forward Gauss–Seidel sweep on a **distance-1** tree program (full
@@ -131,18 +136,18 @@ pub fn gauss_seidel_pool(
     a: &Csr,
     b: &[f64],
     x: &mut [f64],
-) {
+) -> Result<(), ExecError> {
     assert_eq!(a.nrows(), x.len());
     let n = x.len();
     let xp = SendPtr(x.as_mut_ptr());
-    pool.execute(prog, |u| {
+    pool.try_execute(prog, |u| {
         // SAFETY: distance-1 independence — no concurrent unit reads or
         // writes these rows' neighbourhoods.
         let x = unsafe { std::slice::from_raw_parts_mut(xp.0, n) };
         for row in u.start as usize..u.end as usize {
             kernels::solvers::gs_row(a, b, x, row);
         }
-    });
+    })
 }
 
 /// Backward Gauss–Seidel sweep: runs a [`StepProgram::reversed`] mirror
@@ -157,33 +162,39 @@ pub fn gauss_seidel_pool_rev(
     a: &Csr,
     b: &[f64],
     x: &mut [f64],
-) {
+) -> Result<(), ExecError> {
     assert_eq!(a.nrows(), x.len());
     let n = x.len();
     let xp = SendPtr(x.as_mut_ptr());
-    pool.execute(prog_rev, |u| {
+    pool.try_execute(prog_rev, |u| {
         // SAFETY: distance-1 independence — no concurrent unit reads or
         // writes these rows' neighbourhoods (symmetric under reversal).
         let x = unsafe { std::slice::from_raw_parts_mut(xp.0, n) };
         for row in (u.start as usize..u.end as usize).rev() {
             kernels::solvers::gs_row(a, b, x, row);
         }
-    });
+    })
 }
 
 /// Kaczmarz sweep on a **distance-2** tree program: concurrently executed
 /// rows share no column, so the scattered projections are race-free.
-pub fn kaczmarz_pool(pool: &WorkerPool, prog: &StepProgram, a: &Csr, b: &[f64], x: &mut [f64]) {
+pub fn kaczmarz_pool(
+    pool: &WorkerPool,
+    prog: &StepProgram,
+    a: &Csr,
+    b: &[f64],
+    x: &mut [f64],
+) -> Result<(), ExecError> {
     assert_eq!(a.nrows(), x.len());
     let n = x.len();
     let xp = SendPtr(x.as_mut_ptr());
-    pool.execute(prog, |u| {
+    pool.try_execute(prog, |u| {
         // SAFETY: distance-2 independence of units within a step.
         let x = unsafe { std::slice::from_raw_parts_mut(xp.0, n) };
         for row in u.start as usize..u.end as usize {
             kernels::solvers::kaczmarz_row(a, b, x, row);
         }
-    });
+    })
 }
 
 /// Execute an MPK program over a window of vectors — the pool counterpart
@@ -199,7 +210,7 @@ pub fn mpk_execute_pool(
     sigma: f64,
     tau: f64,
     rho: f64,
-) {
+) -> Result<(), ExecError> {
     let m = PowerMat::Csr(plan.permuted_matrix());
     mpk_execute_pool_on(pool, prog, plan, m, bufs, base, sigma, tau, rho)
 }
@@ -218,7 +229,7 @@ pub fn mpk_execute_pool_on(
     sigma: f64,
     tau: f64,
     rho: f64,
-) {
+) -> Result<(), ExecError> {
     let n = m.nrows();
     assert_eq!(n, plan.permuted_matrix().nrows(), "storage does not match the plan");
     assert_eq!(bufs.len(), base + plan.cfg.p + 1, "need base + p + 1 vectors");
@@ -227,7 +238,7 @@ pub fn mpk_execute_pool_on(
         assert_eq!(b.len(), n);
     }
     let ptrs: Vec<SendPtr> = bufs.iter_mut().map(|b| SendPtr(b.as_mut_ptr())).collect();
-    pool.execute(prog, |u| {
+    pool.try_execute(prog, |u| {
         let k = u.power as usize;
         debug_assert!(k >= 1 && base + k < ptrs.len());
         // SAFETY: all units of one step carry the same power (compile_mpk
@@ -244,7 +255,7 @@ pub fn mpk_execute_pool_on(
         };
         let (lo, hi) = (u.start as usize, u.end as usize);
         m.affine(src, acc, dst, sigma, tau, rho, lo, hi);
-    });
+    })
 }
 
 /// Multi-RHS counterpart of [`mpk_execute_pool`]: every buffer holds
@@ -262,7 +273,7 @@ pub fn mpk_execute_multi_pool(
     sigma: f64,
     tau: f64,
     rho: f64,
-) {
+) -> Result<(), ExecError> {
     let m = PowerMat::Csr(plan.permuted_matrix());
     mpk_execute_multi_pool_on(pool, prog, plan, m, bufs, nrhs, base, sigma, tau, rho)
 }
@@ -281,7 +292,7 @@ pub fn mpk_execute_multi_pool_on(
     sigma: f64,
     tau: f64,
     rho: f64,
-) {
+) -> Result<(), ExecError> {
     let n = m.nrows();
     assert_eq!(n, plan.permuted_matrix().nrows(), "storage does not match the plan");
     assert!(nrhs > 0);
@@ -292,7 +303,7 @@ pub fn mpk_execute_multi_pool_on(
     }
     let len = n * nrhs;
     let ptrs: Vec<SendPtr> = bufs.iter_mut().map(|b| SendPtr(b.as_mut_ptr())).collect();
-    pool.execute(prog, |u| {
+    pool.try_execute(prog, |u| {
         let k = u.power as usize;
         debug_assert!(k >= 1 && base + k < ptrs.len());
         // SAFETY: same argument as `mpk_execute_pool_on`, scaled to flat
@@ -306,7 +317,7 @@ pub fn mpk_execute_multi_pool_on(
         };
         let (lo, hi) = (u.start as usize, u.end as usize);
         m.affine_multi(src, acc, dst, nrhs, sigma, tau, rho, lo, hi);
-    });
+    })
 }
 
 /// Multi-RHS level-blocked matrix powers on the pool: returns one flat
@@ -318,7 +329,7 @@ pub fn mpk_powers_multi_pool(
     plan: &MpkPlan,
     xs: &[f64],
     nrhs: usize,
-) -> Vec<Vec<f64>> {
+) -> Result<Vec<Vec<f64>>, ExecError> {
     let m = PowerMat::Csr(plan.permuted_matrix());
     mpk_powers_multi_pool_on(pool, prog, plan, m, xs, nrhs)
 }
@@ -331,7 +342,7 @@ pub fn mpk_powers_multi_pool_on(
     m: PowerMat<'_>,
     xs: &[f64],
     nrhs: usize,
-) -> Vec<Vec<f64>> {
+) -> Result<Vec<Vec<f64>>, ExecError> {
     let p = plan.cfg.p;
     let n = plan.permuted_matrix().nrows();
     assert_eq!(xs.len(), n * nrhs);
@@ -340,9 +351,9 @@ pub fn mpk_powers_multi_pool_on(
     for _ in 0..p {
         bufs.push(vec![0.0; n * nrhs]);
     }
-    mpk_execute_multi_pool_on(pool, prog, plan, m, &mut bufs, nrhs, 0, 1.0, 0.0, 0.0);
+    mpk_execute_multi_pool_on(pool, prog, plan, m, &mut bufs, nrhs, 0, 1.0, 0.0, 0.0)?;
     bufs.remove(0);
-    bufs
+    Ok(bufs)
 }
 
 /// Level-blocked matrix powers on the pool: returns `[A x, .., A^p x]` in
@@ -353,7 +364,7 @@ pub fn mpk_powers_pool(
     prog: &StepProgram,
     plan: &MpkPlan,
     x: &[f64],
-) -> Vec<Vec<f64>> {
+) -> Result<Vec<Vec<f64>>, ExecError> {
     let m = PowerMat::Csr(plan.permuted_matrix());
     mpk_powers_pool_on(pool, prog, plan, m, x)
 }
@@ -365,7 +376,7 @@ pub fn mpk_powers_pool_on(
     plan: &MpkPlan,
     m: PowerMat<'_>,
     x: &[f64],
-) -> Vec<Vec<f64>> {
+) -> Result<Vec<Vec<f64>>, ExecError> {
     let p = plan.cfg.p;
     let n = x.len();
     let mut bufs = Vec::with_capacity(p + 1);
@@ -373,9 +384,9 @@ pub fn mpk_powers_pool_on(
     for _ in 0..p {
         bufs.push(vec![0.0; n]);
     }
-    mpk_execute_pool_on(pool, prog, plan, m, &mut bufs, 0, 1.0, 0.0, 0.0);
+    mpk_execute_pool_on(pool, prog, plan, m, &mut bufs, 0, 1.0, 0.0, 0.0)?;
     bufs.remove(0);
-    bufs
+    Ok(bufs)
 }
 
 /// Level-blocked three-term recurrence on the pool (pool counterpart of
@@ -389,7 +400,7 @@ pub fn mpk_three_term_pool(
     sigma: f64,
     tau: f64,
     rho: f64,
-) -> Vec<Vec<f64>> {
+) -> Result<Vec<Vec<f64>>, ExecError> {
     let m = PowerMat::Csr(plan.permuted_matrix());
     mpk_three_term_pool_on(pool, prog, plan, m, z_prev, z0, sigma, tau, rho)
 }
@@ -406,7 +417,7 @@ pub fn mpk_three_term_pool_on(
     sigma: f64,
     tau: f64,
     rho: f64,
-) -> Vec<Vec<f64>> {
+) -> Result<Vec<Vec<f64>>, ExecError> {
     let p = plan.cfg.p;
     let n = z0.len();
     assert_eq!(z_prev.len(), n);
@@ -416,9 +427,9 @@ pub fn mpk_three_term_pool_on(
     for _ in 0..p {
         bufs.push(vec![0.0; n]);
     }
-    mpk_execute_pool_on(pool, prog, plan, m, &mut bufs, 1, sigma, tau, rho);
+    mpk_execute_pool_on(pool, prog, plan, m, &mut bufs, 1, sigma, tau, rho)?;
     bufs.drain(0..2);
-    bufs
+    Ok(bufs)
 }
 
 #[cfg(test)]
@@ -446,7 +457,7 @@ mod tests {
                 let pool = WorkerPool::new(threads);
                 let prog = compile_race(&eng);
                 let mut pooled = vec![0.0; n];
-                symmspmv_pool(&pool, &prog, &upper, &x, &mut pooled);
+                symmspmv_pool(&pool, &prog, &upper, &x, &mut pooled).unwrap();
                 assert_eq!(scoped, pooled, "{name}/{threads}: pool diverges from scoped");
             }
         }
@@ -469,11 +480,11 @@ mod tests {
             }
         }
         let mut bs = vec![0f64; n * nrhs];
-        symmspmv_race_multi(&pool, &prog, &upper, &xs, &mut bs, nrhs);
+        symmspmv_race_multi(&pool, &prog, &upper, &xs, &mut bs, nrhs).unwrap();
         for j in 0..nrhs {
             let x: Vec<f64> = (0..n).map(|row| xs[row * nrhs + j]).collect();
             let mut b = vec![0.0; n];
-            symmspmv_pool(&pool, &prog, &upper, &x, &mut b);
+            symmspmv_pool(&pool, &prog, &upper, &x, &mut b).unwrap();
             for row in 0..n {
                 assert_eq!(b[row], bs[row * nrhs + j], "rhs {j} row {row}");
             }
@@ -491,7 +502,7 @@ mod tests {
         for threads in [1usize, 3] {
             let pool = WorkerPool::new(threads);
             let prog = compile_mpk(&plan, threads);
-            let ys = mpk_powers_pool(&pool, &prog, &plan, &xp);
+            let ys = mpk_powers_pool(&pool, &prog, &plan, &xp).unwrap();
             let scoped = kernels::mpk_powers(&plan, &xp, threads);
             for k in 0..3 {
                 assert_eq!(ys[k], scoped[k], "k={k} t={threads}: pool vs scoped");
@@ -515,10 +526,10 @@ mod tests {
         }
         let pool = WorkerPool::new(3);
         let prog = compile_mpk(&plan, 3);
-        let ys = mpk_powers_multi_pool(&pool, &prog, &plan, &xs, nrhs);
+        let ys = mpk_powers_multi_pool(&pool, &prog, &plan, &xs, nrhs).unwrap();
         for j in 0..nrhs {
             let x: Vec<f64> = (0..n).map(|row| xs[row * nrhs + j]).collect();
-            let single = mpk_powers_pool(&pool, &prog, &plan, &x);
+            let single = mpk_powers_pool(&pool, &prog, &plan, &x).unwrap();
             for k in 0..3 {
                 let got: Vec<f64> = (0..n).map(|row| ys[k][row * nrhs + j]).collect();
                 assert_eq!(single[k], got, "rhs {j} power {}", k + 1);
@@ -539,7 +550,7 @@ mod tests {
         let scoped = kernels::mpk_three_term(&plan, &zp_p, &z0_p, sigma, tau, rho, 2);
         let pool = WorkerPool::new(2);
         let prog = compile_mpk(&plan, 2);
-        let pooled = mpk_three_term_pool(&pool, &prog, &plan, &zp_p, &z0_p, sigma, tau, rho);
+        let pooled = mpk_three_term_pool(&pool, &prog, &plan, &zp_p, &z0_p, sigma, tau, rho).unwrap();
         assert_eq!(scoped.len(), pooled.len());
         for k in 0..scoped.len() {
             assert_eq!(scoped[k], pooled[k], "k={k}");

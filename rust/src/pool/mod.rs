@@ -29,6 +29,11 @@
 //! records per-worker per-step compute vs barrier-wait time and surfaces
 //! a load-imbalance summary per execution ([`ExecReport`]) — the direct
 //! measurement behind the paper's load-balancing claim.
+//!
+//! A panic inside a work unit no longer deadlocks the pool: the barrier
+//! protocol drains, the first panic comes back as a typed [`ExecError`],
+//! and a worker thread that dies is respawned at the next job boundary
+//! (see the panic-isolation notes on `workers`).
 
 mod exec;
 mod program;
@@ -42,4 +47,4 @@ pub use exec::{
     symmspmv_multi_pool_pack, symmspmv_pool, symmspmv_pool_pack, symmspmv_race_multi,
 };
 pub use program::{compile_mpk, compile_race, StepProgram, WorkUnit};
-pub use workers::{ExecReport, WorkerPool};
+pub use workers::{ExecError, ExecReport, WorkerPool};

@@ -20,10 +20,27 @@
 //! does not wait at all — so the added latency can never exceed one
 //! kernel invocation: throughput-per-vector only improves while
 //! worst-case latency at most doubles.
+//!
+//! The resilience tier adds three failure-aware behaviours, all off by
+//! default (`docs/RELIABILITY.md`):
+//!
+//! * **Admission control** — a bounded queue (`queue_cap > 0`): a
+//!   request arriving at a full queue is *shed* immediately with
+//!   [`BatchFail::Overloaded`] instead of piling latency onto everyone
+//!   behind the same execution lock.
+//! * **Deadlines** — a request may carry an absolute deadline. It is
+//!   checked at enqueue and again at batch formation (immediately before
+//!   the kernel runs): expired entries are answered with
+//!   [`BatchFail::DeadlineExceeded`] and dropped from the batch, so one
+//!   stale request never widens the kernel sweep.
+//! * **Fallible batches** — the leader's `run` closure returns a
+//!   `Result`; on error every request in the drained batch is answered
+//!   with [`BatchFail::Exec`] instead of a poisoned unwind taking the
+//!   batcher lock down with it.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Result of one served request.
 #[derive(Debug, Clone)]
@@ -36,13 +53,33 @@ pub struct BatchResult {
     pub batch: usize,
 }
 
+/// Why a batched request was *not* served (`docs/RELIABILITY.md`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum BatchFail {
+    /// Shed at admission: the bounded queue was full. Carries the queue
+    /// depth observed at rejection time.
+    Overloaded(usize),
+    /// The request's deadline expired before its batch ran.
+    DeadlineExceeded,
+    /// The leader's kernel execution failed; the message is the
+    /// underlying error rendered for the wire.
+    Exec(String),
+}
+
+/// Lock that recovers from poisoning: a panicking batch leader must not
+/// wedge every later request on the same matrix.
+fn lock_ok<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
 struct Slot {
-    result: Mutex<Option<BatchResult>>,
+    result: Mutex<Option<Result<BatchResult, BatchFail>>>,
 }
 
 struct Pending {
     x: Vec<f64>,
     slot: Arc<Slot>,
+    deadline: Option<Instant>,
 }
 
 /// Per-matrix request aggregator.
@@ -53,6 +90,8 @@ pub struct Batcher {
     exec: Mutex<()>,
     /// Configured batching window (zero = natural batching only).
     window: Duration,
+    /// Bounded-queue admission cap (zero = unbounded).
+    queue_cap: usize,
     /// Last measured kernel latency in nanoseconds — the cap on the
     /// window wait (0 until the first batch has run).
     last_kernel_nanos: AtomicU64,
@@ -65,20 +104,56 @@ impl Batcher {
         Batcher { window: Duration::from_micros(window_us), ..Default::default() }
     }
 
-    /// Submit one vector and block until it is served. `run` computes a
-    /// whole micro-batch — it is invoked only by the leader, with the
-    /// batch inputs in submission order, and must return one output per
-    /// input plus the kernel seconds.
-    pub fn matvec<F>(&self, x: Vec<f64>, run: F) -> BatchResult
+    /// [`Batcher::with_window_us`] plus a bounded admission queue:
+    /// requests arriving while `queue_cap` others are already waiting
+    /// are shed with [`BatchFail::Overloaded`] (`0` = unbounded).
+    pub fn with_opts(window_us: u64, queue_cap: usize) -> Batcher {
+        Batcher {
+            window: Duration::from_micros(window_us),
+            queue_cap,
+            ..Default::default()
+        }
+    }
+
+    /// Requests currently queued (waiting for a leader to drain them).
+    pub fn depth(&self) -> usize {
+        lock_ok(&self.queue).len()
+    }
+
+    /// Submit one vector and block until it is served or rejected. `run`
+    /// computes a whole micro-batch — it is invoked only by the leader,
+    /// with the batch inputs in submission order, and must return one
+    /// output per input plus the kernel seconds (or an error, which is
+    /// fanned out to every request of the batch).
+    ///
+    /// `deadline` is this request's absolute deadline (`None` = no
+    /// deadline). It is enforced at enqueue and at batch formation.
+    pub fn matvec<F>(
+        &self,
+        x: Vec<f64>,
+        deadline: Option<Instant>,
+        run: F,
+    ) -> Result<BatchResult, BatchFail>
     where
-        F: FnOnce(&[Vec<f64>]) -> (Vec<Vec<f64>>, f64),
+        F: FnOnce(&[Vec<f64>]) -> Result<(Vec<Vec<f64>>, f64), String>,
     {
         let slot = Arc::new(Slot { result: Mutex::new(None) });
-        self.queue.lock().unwrap().push(Pending { x, slot: slot.clone() });
-        let _exec = self.exec.lock().unwrap();
+        {
+            // admission: bounded queue first (cheapest rejection), then
+            // the enqueue-time deadline check
+            let mut q = lock_ok(&self.queue);
+            if self.queue_cap > 0 && q.len() >= self.queue_cap {
+                return Err(BatchFail::Overloaded(q.len()));
+            }
+            if deadline.is_some_and(|d| Instant::now() >= d) {
+                return Err(BatchFail::DeadlineExceeded);
+            }
+            q.push(Pending { x, slot: slot.clone(), deadline });
+        }
+        let _exec = lock_ok(&self.exec);
         // A previous leader may have drained us while we waited for the
         // lock — in that case our slot is already filled.
-        if let Some(r) = slot.result.lock().unwrap().take() {
+        if let Some(r) = lock_ok(&slot.result).take() {
             return r;
         }
         // Dynamic batching window: the new leader holds the execution
@@ -86,26 +161,51 @@ impl Batcher {
         // bounded chance to queue up before draining. The wait is capped
         // at the last measured kernel latency; with no measurement yet
         // (last == 0) the leader does not wait — the bound "added latency
-        // never exceeds one kernel invocation" holds unconditionally.
+        // never exceeds one kernel invocation" holds unconditionally. A
+        // leader with a deadline additionally never sleeps past it.
         if !self.window.is_zero() {
             let last = self.last_kernel_nanos.load(Ordering::Relaxed);
-            let wait = self.window.min(Duration::from_nanos(last));
+            let mut wait = self.window.min(Duration::from_nanos(last));
+            if let Some(d) = deadline {
+                wait = wait.min(d.saturating_duration_since(Instant::now()));
+            }
             if !wait.is_zero() {
                 std::thread::sleep(wait);
             }
         }
-        let pend: Vec<Pending> = std::mem::take(&mut *self.queue.lock().unwrap());
+        let pend: Vec<Pending> = std::mem::take(&mut *lock_ok(&self.queue));
         debug_assert!(!pend.is_empty(), "own request must still be queued");
-        let (xs, slots): (Vec<Vec<f64>>, Vec<Arc<Slot>>) =
-            pend.into_iter().map(|p| (p.x, p.slot)).unzip();
-        let m = xs.len();
-        let (bs, seconds) = run(&xs);
-        debug_assert_eq!(bs.len(), m, "leader must return one output per input");
-        self.last_kernel_nanos.store((seconds * 1e9) as u64, Ordering::Relaxed);
-        for (s, b) in slots.iter().zip(bs) {
-            *s.result.lock().unwrap() = Some(BatchResult { b, seconds, batch: m });
+        // batch formation / pre-kernel deadline check: answer expired
+        // entries now and keep them out of the kernel sweep
+        let now = Instant::now();
+        let mut xs = Vec::with_capacity(pend.len());
+        let mut slots = Vec::with_capacity(pend.len());
+        for p in pend {
+            if p.deadline.is_some_and(|d| now >= d) {
+                *lock_ok(&p.slot.result) = Some(Err(BatchFail::DeadlineExceeded));
+            } else {
+                xs.push(p.x);
+                slots.push(p.slot);
+            }
         }
-        let own = slot.result.lock().unwrap().take();
+        if !xs.is_empty() {
+            let m = xs.len();
+            match run(&xs) {
+                Ok((bs, seconds)) => {
+                    debug_assert_eq!(bs.len(), m, "leader must return one output per input");
+                    self.last_kernel_nanos.store((seconds * 1e9) as u64, Ordering::Relaxed);
+                    for (s, b) in slots.iter().zip(bs) {
+                        *lock_ok(&s.result) = Some(Ok(BatchResult { b, seconds, batch: m }));
+                    }
+                }
+                Err(msg) => {
+                    for s in &slots {
+                        *lock_ok(&s.result) = Some(Err(BatchFail::Exec(msg.clone())));
+                    }
+                }
+            }
+        }
+        let own = lock_ok(&slot.result).take();
         own.expect("leader serves its own request in the drained batch")
     }
 }
@@ -118,10 +218,12 @@ mod tests {
     #[test]
     fn single_request_is_batch_of_one() {
         let b = Batcher::with_window_us(0);
-        let r = b.matvec(vec![1.0, 2.0], |xs| {
-            assert_eq!(xs.len(), 1);
-            (vec![xs[0].iter().map(|v| v * 2.0).collect()], 0.5)
-        });
+        let r = b
+            .matvec(vec![1.0, 2.0], None, |xs| {
+                assert_eq!(xs.len(), 1);
+                Ok((vec![xs[0].iter().map(|v| v * 2.0).collect()], 0.5))
+            })
+            .unwrap();
         assert_eq!(r.b, vec![2.0, 4.0]);
         assert_eq!(r.batch, 1);
         assert_eq!(r.seconds, 0.5);
@@ -138,12 +240,17 @@ mod tests {
             let batches = batches.clone();
             handles.push(std::thread::spawn(move || {
                 let x = vec![i as f64; 4];
-                let r = b.matvec(x, |xs| {
-                    batches.fetch_add(1, Ordering::SeqCst);
-                    // slow "kernel" so followers pile up behind the leader
-                    std::thread::sleep(std::time::Duration::from_millis(5));
-                    (xs.iter().map(|x| x.iter().map(|v| v + 1.0).collect()).collect(), 0.0)
-                });
+                let r = b
+                    .matvec(x, None, |xs| {
+                        batches.fetch_add(1, Ordering::SeqCst);
+                        // slow "kernel" so followers pile up behind the leader
+                        std::thread::sleep(std::time::Duration::from_millis(5));
+                        Ok((
+                            xs.iter().map(|x| x.iter().map(|v| v + 1.0).collect()).collect(),
+                            0.0,
+                        ))
+                    })
+                    .unwrap();
                 // each request gets *its own* answer back
                 assert_eq!(r.b, vec![i as f64 + 1.0; 4]);
                 assert!(r.batch >= 1 && r.batch <= nreq);
@@ -164,16 +271,21 @@ mod tests {
         let b = Arc::new(Batcher::with_window_us(300_000));
         // the window is inactive until a kernel latency exists: prime the
         // estimate with a batch reporting 250 ms
-        let r0 = b.matvec(vec![0.0], |xs| (xs.iter().map(|x| x.to_vec()).collect(), 0.25));
+        let r0 = b
+            .matvec(vec![0.0], None, |xs| Ok((xs.iter().map(|x| x.to_vec()).collect(), 0.25)))
+            .unwrap();
         assert_eq!(r0.batch, 1, "no measurement yet: leader must not wait");
         let b2 = b.clone();
         let late = std::thread::spawn(move || {
             std::thread::sleep(std::time::Duration::from_millis(30));
-            b2.matvec(vec![2.0], |xs| {
-                (xs.iter().map(|x| x.to_vec()).collect(), 0.0)
+            b2.matvec(vec![2.0], None, |xs| {
+                Ok((xs.iter().map(|x| x.to_vec()).collect(), 0.0))
             })
+            .unwrap()
         });
-        let r1 = b.matvec(vec![1.0], |xs| (xs.iter().map(|x| x.to_vec()).collect(), 0.0));
+        let r1 = b
+            .matvec(vec![1.0], None, |xs| Ok((xs.iter().map(|x| x.to_vec()).collect(), 0.0)))
+            .unwrap();
         let r2 = late.join().unwrap();
         assert_eq!(r1.b, vec![1.0]);
         assert_eq!(r2.b, vec![2.0]);
@@ -188,15 +300,106 @@ mod tests {
         // batcher finish far faster than one window would take.
         let b = Batcher::with_window_us(300_000);
         // prime the latency estimate
-        b.matvec(vec![0.0], |xs| (xs.iter().map(|x| x.to_vec()).collect(), 1e-9));
+        b.matvec(vec![0.0], None, |xs| Ok((xs.iter().map(|x| x.to_vec()).collect(), 1e-9)))
+            .unwrap();
         let t0 = std::time::Instant::now();
         for _ in 0..30 {
-            b.matvec(vec![0.0], |xs| (xs.iter().map(|x| x.to_vec()).collect(), 1e-9));
+            b.matvec(vec![0.0], None, |xs| {
+                Ok((xs.iter().map(|x| x.to_vec()).collect(), 1e-9))
+            })
+            .unwrap();
         }
         assert!(
             t0.elapsed() < std::time::Duration::from_millis(300),
             "capped window must not serialize at the configured 300 ms: {:?}",
             t0.elapsed()
         );
+    }
+
+    #[test]
+    fn full_queue_sheds_with_overloaded() {
+        let b = Batcher::with_opts(0, 2);
+        // stuff the queue directly (no leader is draining it)
+        {
+            let mut q = lock_ok(&b.queue);
+            for _ in 0..2 {
+                q.push(Pending {
+                    x: vec![0.0],
+                    slot: Arc::new(Slot { result: Mutex::new(None) }),
+                    deadline: None,
+                });
+            }
+        }
+        assert_eq!(b.depth(), 2);
+        let r = b.matvec(vec![1.0], None, |_| unreachable!("shed before execution"));
+        assert_eq!(r.unwrap_err(), BatchFail::Overloaded(2));
+        // drain the stuffed queue so nothing dangles
+        lock_ok(&b.queue).clear();
+        // below the cap the request is admitted again
+        let r = b
+            .matvec(vec![1.0], None, |xs| Ok((xs.iter().map(|x| x.to_vec()).collect(), 0.0)))
+            .unwrap();
+        assert_eq!(r.b, vec![1.0]);
+    }
+
+    #[test]
+    fn expired_deadline_is_rejected_at_enqueue() {
+        let b = Batcher::with_window_us(0);
+        let past = Instant::now() - Duration::from_millis(1);
+        let r = b.matvec(vec![1.0], Some(past), |_| unreachable!("expired before enqueue"));
+        assert_eq!(r.unwrap_err(), BatchFail::DeadlineExceeded);
+        // a live deadline sails through
+        let future = Instant::now() + Duration::from_secs(60);
+        let r = b
+            .matvec(vec![1.0], Some(future), |xs| {
+                Ok((xs.iter().map(|x| x.to_vec()).collect(), 0.0))
+            })
+            .unwrap();
+        assert_eq!(r.b, vec![1.0]);
+    }
+
+    #[test]
+    fn expired_follower_is_dropped_at_batch_formation() {
+        // A request whose deadline expires while it waits in the queue
+        // is answered DeadlineExceeded at batch formation and kept out
+        // of the kernel sweep. Hold the execution lock so the request
+        // stays queued past its deadline.
+        let b = Arc::new(Batcher::with_window_us(0));
+        let guard = lock_ok(&b.exec);
+        let b2 = b.clone();
+        let doomed = std::thread::spawn(move || {
+            b2.matvec(vec![7.0], Some(Instant::now() + Duration::from_millis(10)), |_| {
+                unreachable!("every batch entry expired: the kernel must not run")
+            })
+        });
+        while b.depth() == 0 {
+            std::thread::yield_now();
+        }
+        std::thread::sleep(Duration::from_millis(30));
+        drop(guard);
+        assert_eq!(doomed.join().unwrap().unwrap_err(), BatchFail::DeadlineExceeded);
+    }
+
+    #[test]
+    fn kernel_error_fans_out_to_every_request() {
+        let b = Arc::new(Batcher::with_window_us(0));
+        let b2 = b.clone();
+        let follower = std::thread::spawn(move || {
+            b2.matvec(vec![2.0], None, |_| Err("injected".to_string()))
+        });
+        while b.depth() == 0 {
+            std::thread::yield_now();
+        }
+        let r = b.matvec(vec![1.0], None, |_| Err("injected".to_string()));
+        assert_eq!(r.unwrap_err(), BatchFail::Exec("injected".to_string()));
+        assert_eq!(
+            follower.join().unwrap().unwrap_err(),
+            BatchFail::Exec("injected".to_string())
+        );
+        // the batcher survives the failed batch
+        let r = b
+            .matvec(vec![3.0], None, |xs| Ok((xs.iter().map(|x| x.to_vec()).collect(), 0.0)))
+            .unwrap();
+        assert_eq!(r.b, vec![3.0]);
     }
 }

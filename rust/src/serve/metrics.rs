@@ -26,6 +26,12 @@ pub(crate) const ERROR_CODES: [&str; 8] = [
     "other",
 ];
 
+/// Resilience-tier extension codes (`docs/RELIABILITY.md`). Tracked
+/// separately from [`ERROR_CODES`] and exposed **only once observed**,
+/// so expositions on a server that never sheds or misses a deadline stay
+/// byte-identical to the pre-resilience catalogue.
+pub(crate) const EXT_CODES: [&str; 2] = ["overloaded", "deadline_exceeded"];
+
 /// Per-matrix request/error counters (indexed by registry position).
 #[derive(Default)]
 pub(crate) struct MatrixCounters {
@@ -57,6 +63,15 @@ pub(crate) struct Registry {
     pub kernel_nanos: AtomicU64,
     /// Error responses by code, indexed like [`ERROR_CODES`].
     codes: Vec<AtomicU64>,
+    /// Error responses by extension code, indexed like [`EXT_CODES`].
+    ext_codes: Vec<AtomicU64>,
+    /// Requests shed by admission control (bounded queue full).
+    pub shed: AtomicU64,
+    /// Requests rejected or dropped because their deadline expired.
+    pub deadline_hits: AtomicU64,
+    /// Kernel latency per executed matvec batch, nanoseconds — the
+    /// source of the `retry_after_ms` hint on `overloaded` rejections.
+    pub batch_lat: Hist,
     /// Request service latency per kind, nanoseconds (successes only —
     /// rejected requests answer in microseconds and would skew the
     /// kernel-latency percentiles).
@@ -85,6 +100,10 @@ impl Registry {
             max_batch: AtomicU64::new(0),
             kernel_nanos: AtomicU64::new(0),
             codes: (0..ERROR_CODES.len()).map(|_| AtomicU64::new(0)).collect(),
+            ext_codes: (0..EXT_CODES.len()).map(|_| AtomicU64::new(0)).collect(),
+            shed: AtomicU64::new(0),
+            deadline_hits: AtomicU64::new(0),
+            batch_lat: Hist::latency(),
             matvec_lat: Hist::latency(),
             mpk_lat: Hist::latency(),
             solve_lat: Hist::latency(),
@@ -98,9 +117,15 @@ impl Registry {
         self.start.elapsed().as_secs_f64()
     }
 
-    /// Count one error response by code (protocol surface).
+    /// Count one error response by code (protocol surface). Extension
+    /// codes ([`EXT_CODES`]) get their own buckets; other unknown codes
+    /// land in `"other"`.
     pub fn response_error(&self, code: &str) {
         self.errors.fetch_add(1, Ordering::Relaxed);
+        if let Some(idx) = EXT_CODES.iter().position(|c| *c == code) {
+            self.ext_codes[idx].fetch_add(1, Ordering::Relaxed);
+            return;
+        }
         let idx =
             ERROR_CODES.iter().position(|c| *c == code).unwrap_or(ERROR_CODES.len() - 1);
         self.codes[idx].fetch_add(1, Ordering::Relaxed);
@@ -117,12 +142,21 @@ impl Registry {
     }
 
     /// `(code, count)` per catalogue entry, in catalogue order.
+    /// Extension codes are appended *only when observed*, keeping the
+    /// no-fault exposition byte-identical to the stable catalogue.
     pub fn errors_by_code(&self) -> Vec<(&'static str, u64)> {
-        ERROR_CODES
+        let mut by: Vec<(&'static str, u64)> = ERROR_CODES
             .iter()
             .zip(&self.codes)
             .map(|(c, n)| (*c, n.load(Ordering::Relaxed)))
-            .collect()
+            .collect();
+        for (c, n) in EXT_CODES.iter().zip(&self.ext_codes) {
+            let n = n.load(Ordering::Relaxed);
+            if n > 0 {
+                by.push((*c, n));
+            }
+        }
+        by
     }
 
     /// JSON summary of a latency histogram (milliseconds).
@@ -168,6 +202,18 @@ impl Registry {
         let _ = writeln!(out, "# TYPE race_error_responses_total counter");
         for (code, n) in self.errors_by_code() {
             let _ = writeln!(out, "race_error_responses_total{{code=\"{code}\"}} {n}");
+        }
+        // resilience counters appear only once they fire, so a server
+        // that never sheds / never misses a deadline exposes a text
+        // stream byte-identical to the pre-resilience catalogue
+        for (name, v) in [
+            ("race_shed_total", c(&self.shed)),
+            ("race_deadline_exceeded_total", c(&self.deadline_hits)),
+        ] {
+            if v > 0 {
+                let _ = writeln!(out, "# TYPE {name} counter");
+                let _ = writeln!(out, "{name} {v}");
+            }
         }
         let _ = writeln!(out, "# TYPE race_request_duration_seconds summary");
         for (kind, h) in
@@ -284,5 +330,31 @@ mod tests {
             "{text}"
         );
         assert!(text.contains("race_batch_size_count 1"), "{text}");
+    }
+
+    #[test]
+    fn extension_codes_are_gated_until_observed() {
+        let r = Registry::new(1);
+        let matrices = [("m".to_string(), "pack".to_string())];
+        // untouched: neither the extension codes nor the resilience
+        // counters may appear — expositions stay byte-compatible
+        let text = r.prometheus(&matrices);
+        assert!(!text.contains("overloaded"), "{text}");
+        assert!(!text.contains("deadline_exceeded"), "{text}");
+        assert!(!text.contains("race_shed_total"), "{text}");
+        assert_eq!(r.errors_by_code().len(), ERROR_CODES.len());
+        // observed: they surface with their own buckets, not "other"
+        r.response_error("overloaded");
+        r.response_error("deadline_exceeded");
+        r.shed.fetch_add(1, Ordering::Relaxed);
+        r.deadline_hits.fetch_add(2, Ordering::Relaxed);
+        let by = r.errors_by_code();
+        assert_eq!(by.iter().find(|(c, _)| *c == "overloaded").unwrap().1, 1);
+        assert_eq!(by.iter().find(|(c, _)| *c == "deadline_exceeded").unwrap().1, 1);
+        assert_eq!(by.iter().find(|(c, _)| *c == "other").unwrap().1, 0);
+        let text = r.prometheus(&matrices);
+        assert!(text.contains("race_error_responses_total{code=\"overloaded\"} 1"), "{text}");
+        assert!(text.contains("race_shed_total 1"), "{text}");
+        assert!(text.contains("race_deadline_exceeded_total 2"), "{text}");
     }
 }

@@ -34,6 +34,15 @@
 //!   replicas). Responses stay bit-identical to the flat pool, and
 //!   `{"stats"}` / `{"metrics"}` grow per-shard rows / `race_shard_*`
 //!   gauges — at `--shards 1` both keep their exact historical shape.
+//! * **Resilience** — the request path never unwinds into a caller: a
+//!   worker panic surfaces as a structured `internal` error while the
+//!   pool respawns the dead thread, failed shards drain to survivors
+//!   (bit-identical answers through the degradation ladder), bounded
+//!   admission queues (`--queue-cap`) shed with `overloaded` +
+//!   `retry_after_ms`, per-request deadlines (`--deadline-ms`,
+//!   `{"deadline_ms"}`) answer `deadline_exceeded`, and
+//!   `{"health": true}` probes every pool. All off by default; see
+//!   `docs/RELIABILITY.md`.
 //! * **Structured errors and telemetry** — malformed requests,
 //!   non-finite inputs, unknown matrices, out-of-range powers and failed
 //!   solves answer `{"error": {"code", "message"}}`, and every error
@@ -87,10 +96,12 @@ use crate::pool::WorkerPool;
 use crate::sparse::ValPrec;
 use crate::util::json::Json;
 use anyhow::{Context, Result};
+use batch::BatchFail;
 use metrics::Registry;
 use std::collections::HashMap;
 use std::sync::atomic::Ordering;
 use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 /// Service configuration (CLI flags of `race-cli serve`).
 #[derive(Debug, Clone)]
@@ -146,6 +157,18 @@ pub struct ServeOptions {
     /// Log a structured slow-request line to stderr for requests slower
     /// than this many milliseconds (`--slow-ms`; 0 disables).
     pub slow_ms: u64,
+    /// Default per-request deadline in milliseconds (`--deadline-ms`;
+    /// 0 = none). Requests may override with `{"deadline_ms": N}`.
+    /// Expired requests answer `deadline_exceeded`
+    /// (`docs/RELIABILITY.md`).
+    pub deadline_ms: u64,
+    /// Bounded per-matrix admission queue (`--queue-cap`; 0 =
+    /// unbounded): requests arriving at a full queue are shed with an
+    /// `overloaded` error carrying a `retry_after_ms` hint.
+    pub queue_cap: usize,
+    /// Socket read/write timeout for slow clients in milliseconds
+    /// (`--io-timeout-ms`; 0 = block forever).
+    pub io_timeout_ms: u64,
 }
 
 impl Default for ServeOptions {
@@ -166,6 +189,9 @@ impl Default for ServeOptions {
             trace: false,
             hwc: false,
             slow_ms: 0,
+            deadline_ms: 0,
+            queue_cap: 0,
+            io_timeout_ms: 0,
         }
     }
 }
@@ -179,36 +205,48 @@ pub struct ServeError {
     pub code: &'static str,
     /// Human-readable description of this occurrence.
     pub message: String,
+    /// Back-off hint on `overloaded` rejections: how long (derived from
+    /// the batch-latency histogram) the client should wait before
+    /// retrying. Absent on every other code — envelopes without it are
+    /// byte-identical to the pre-resilience shape.
+    pub retry_after_ms: Option<u64>,
 }
 
 impl ServeError {
     fn new(code: &'static str, message: impl Into<String>) -> ServeError {
-        ServeError { code, message: message.into() }
+        ServeError { code, message: message.into(), retry_after_ms: None }
+    }
+
+    fn with_retry(mut self, ms: u64) -> ServeError {
+        self.retry_after_ms = Some(ms);
+        self
+    }
+
+    /// The inner `{"code", "message"[, "retry_after_ms"][, "id"]}` body.
+    fn body(&self, id: Option<u64>) -> Json {
+        let mut fields = vec![
+            ("code", Json::Str(self.code.to_string())),
+            ("message", Json::Str(self.message.clone())),
+        ];
+        if let Some(ms) = self.retry_after_ms {
+            fields.push(("retry_after_ms", Json::Num(ms as f64)));
+        }
+        if let Some(id) = id {
+            fields.push(("id", Json::Num(id as f64)));
+        }
+        Json::obj(fields)
     }
 
     /// JSON rendering of the error envelope.
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![(
-            "error",
-            Json::obj(vec![
-                ("code", Json::Str(self.code.to_string())),
-                ("message", Json::Str(self.message.clone())),
-            ]),
-        )])
+        Json::obj(vec![("error", self.body(None))])
     }
 
     /// Error envelope carrying the per-request trace id, so a client can
     /// correlate a failure with the `serve.request` span and any
     /// slow-request log line.
     pub fn to_json_with_id(&self, id: u64) -> Json {
-        Json::obj(vec![(
-            "error",
-            Json::obj(vec![
-                ("code", Json::Str(self.code.to_string())),
-                ("message", Json::Str(self.message.clone())),
-                ("id", Json::Num(id as f64)),
-            ]),
-        )])
+        Json::obj(vec![("error", self.body(Some(id)))])
     }
 }
 
@@ -262,9 +300,11 @@ impl MatrixEntry {
         &self.op
     }
 
-    fn mpk_batcher(&self, p: usize, window_us: u64) -> Arc<batch::Batcher> {
-        let mut map = self.mpk_batchers.lock().unwrap();
-        map.entry(p).or_insert_with(|| Arc::new(batch::Batcher::with_window_us(window_us))).clone()
+    fn mpk_batcher(&self, p: usize, window_us: u64, queue_cap: usize) -> Arc<batch::Batcher> {
+        let mut map = self.mpk_batchers.lock().unwrap_or_else(|e| e.into_inner());
+        map.entry(p)
+            .or_insert_with(|| Arc::new(batch::Batcher::with_opts(window_us, queue_cap)))
+            .clone()
     }
 }
 
@@ -303,6 +343,13 @@ pub struct MatvecService {
     hwc_origin: Option<crate::obs::hwc::HwcSample>,
     /// Sharded-tier state (`--shards > 1` only).
     shard: Option<ShardRuntime>,
+    /// The flat shared pool (`--shards 1`), kept for liveness probes and
+    /// the worker-restart counter.
+    pool: Option<Arc<WorkerPool>>,
+    /// Default per-request deadline in milliseconds (0 = none).
+    deadline_ms: u64,
+    /// Bounded per-matrix admission queue (0 = unbounded).
+    queue_cap: usize,
 }
 
 impl MatvecService {
@@ -375,7 +422,7 @@ impl MatvecService {
                 n: op.n(),
                 idx: entries.len(),
                 op,
-                batcher: batch::Batcher::with_window_us(opts.batch_window_us),
+                batcher: batch::Batcher::with_opts(opts.batch_window_us, opts.queue_cap),
                 mpk_batchers: Mutex::new(HashMap::new()),
             }));
         }
@@ -393,6 +440,9 @@ impl MatvecService {
             hwc_group,
             hwc_origin,
             shard,
+            pool,
+            deadline_ms: opts.deadline_ms,
+            queue_cap: opts.queue_cap,
         })
     }
 
@@ -438,6 +488,64 @@ impl MatvecService {
         Ok(())
     }
 
+    /// The absolute deadline of a request: the per-request override when
+    /// present, the service default (`--deadline-ms`) otherwise, `None`
+    /// when neither is set.
+    fn deadline_after(&self, override_ms: Option<u64>) -> Option<Instant> {
+        let ms = override_ms.or((self.deadline_ms > 0).then_some(self.deadline_ms))?;
+        Some(Instant::now() + Duration::from_millis(ms))
+    }
+
+    /// Back-off hint for shed requests: the median batch service time
+    /// (at least 1 ms), so clients retry roughly one batch later instead
+    /// of hammering a saturated queue.
+    fn retry_after_ms(&self) -> u64 {
+        let p50 = self.metrics.batch_lat.quantile(0.5) / 1e6;
+        (p50.ceil() as u64).max(1)
+    }
+
+    /// Map a batcher rejection to the wire error, counting it in the
+    /// resilience metrics.
+    fn batch_fail_to_error(&self, entry: &MatrixEntry, fail: BatchFail) -> ServeError {
+        self.metrics.matrix_error(entry.idx);
+        match fail {
+            BatchFail::Overloaded(depth) => {
+                self.metrics.shed.fetch_add(1, Ordering::Relaxed);
+                let _sp = crate::obs::span_detail("serve.shed", || {
+                    format!("matrix={} depth={depth}", entry.name)
+                });
+                ServeError::new(
+                    "overloaded",
+                    format!(
+                        "matrix {} queue is full ({depth} waiting) — retry later",
+                        entry.name
+                    ),
+                )
+                .with_retry(self.retry_after_ms())
+            }
+            BatchFail::DeadlineExceeded => {
+                self.metrics.deadline_hits.fetch_add(1, Ordering::Relaxed);
+                ServeError::new(
+                    "deadline_exceeded",
+                    format!("deadline expired before the {} batch ran", entry.name),
+                )
+            }
+            BatchFail::Exec(msg) => {
+                ServeError::new("internal", format!("batch execution failed: {msg}"))
+            }
+        }
+    }
+
+    /// Total worker-thread respawns across the execution tier (flat pool
+    /// or every shard pool) — `race_worker_restarts_total`.
+    fn worker_restarts(&self) -> u64 {
+        match (&self.shard, &self.pool) {
+            (Some(sh), _) => sh.set.restarts(),
+            (None, Some(p)) => p.restarts(),
+            (None, None) => 0,
+        }
+    }
+
     /// Serve one SymmSpMV request `b = A x` (original indexing). Blocks
     /// until a micro-batch containing this request has run; returns the
     /// result plus kernel seconds and the batch size it rode in.
@@ -446,16 +554,19 @@ impl MatvecService {
         name: Option<&str>,
         x: &[f64],
     ) -> Result<(Vec<f64>, f64, usize), ServeError> {
-        self.matvec_on(self.entry(name)?, x)
+        self.matvec_on(self.entry(name)?, x, self.deadline_after(None))
     }
 
     /// [`Self::matvec`] on an already-resolved registry entry — the
     /// variant [`Self::handle`] dispatches to, so a request resolves its
-    /// matrix exactly once however it came in.
+    /// matrix exactly once however it came in. `deadline` is this
+    /// request's absolute deadline (already resolved from the service
+    /// default and any per-request override).
     fn matvec_on(
         &self,
         entry: &MatrixEntry,
         x: &[f64],
+        deadline: Option<Instant>,
     ) -> Result<(Vec<f64>, f64, usize), ServeError> {
         let t0 = std::time::Instant::now();
         Self::check_input(entry, x).map_err(|e| {
@@ -464,7 +575,10 @@ impl MatvecService {
         })?;
         self.metrics.matvecs.fetch_add(1, Ordering::Relaxed);
         self.metrics.matrix(entry.idx).matvecs.fetch_add(1, Ordering::Relaxed);
-        let r = entry.batcher.matvec(x.to_vec(), |xs| self.run_batch(entry, xs));
+        let r = entry
+            .batcher
+            .matvec(x.to_vec(), deadline, |xs| self.run_batch(entry, xs))
+            .map_err(|f| self.batch_fail_to_error(entry, f))?;
         self.metrics.matvec_lat.observe(t0.elapsed().as_nanos() as u64);
         Ok((r.b, r.seconds, r.batch))
     }
@@ -488,7 +602,9 @@ impl MatvecService {
                     e
                 })?;
         }
-        let (bs, _) = self.run_batch(entry, xs);
+        let (bs, _) = self
+            .run_batch(entry, xs)
+            .map_err(|m| self.batch_fail_to_error(entry, BatchFail::Exec(m)))?;
         Ok(bs)
     }
 
@@ -498,31 +614,51 @@ impl MatvecService {
     /// pack, kernel, unpack — which is deliberately also the quantity
     /// the dynamic batching window caps at: a leader may wait at most
     /// one full batch-service time, not just one raw kernel sweep.
-    fn run_batch(&self, entry: &MatrixEntry, xs: &[Vec<f64>]) -> (Vec<Vec<f64>>, f64) {
+    /// On `Err` the batch produced no usable output (the execution
+    /// ladder exhausted every rung — see `docs/RELIABILITY.md`); the
+    /// message is the underlying [`crate::pool::ExecError`] rendered for
+    /// the wire, and the batcher fans it out to every rider.
+    fn run_batch(
+        &self,
+        entry: &MatrixEntry,
+        xs: &[Vec<f64>],
+    ) -> std::result::Result<(Vec<Vec<f64>>, f64), String> {
         let n = entry.n;
         let m = xs.len();
-        // sharded tier: take a placement ticket for the batch. Single
-        // vectors run sticky on the placed shard (its replica is warm);
-        // multi-RHS batches fan out across every replica instead, with
-        // the ticket still accounting depth against the home placement.
-        let ticket = self.shard.as_ref().map(|sh| sh.router.place(entry.idx));
-        let (bs, secs) = crate::obs::time("serve.batch_matvec", || {
+        // sharded tier: take a placement ticket for the batch, skipping
+        // shards marked failed. Single vectors run sticky on the placed
+        // shard (its replica is warm); multi-RHS batches fan out across
+        // every replica instead, with the ticket still accounting depth
+        // against the home placement.
+        let ticket = self
+            .shard
+            .as_ref()
+            .map(|sh| sh.router.place_healthy(entry.idx, |s| !sh.set.is_failed(s)));
+        let (res, secs) = crate::obs::time("serve.batch_matvec", || {
             let mut bs: Vec<Vec<f64>> = (0..m).map(|_| vec![0.0; n]).collect();
-            match &ticket {
+            let r = match &ticket {
                 Some(t) if m == 1 => entry.op.symmspmv_multi_routed(xs, &mut bs, Some(t.shard())),
                 _ => entry.op.symmspmv_multi(xs, &mut bs),
-            }
-            bs
+            };
+            r.map(|_| bs)
         });
+        let bs = match res {
+            Ok(bs) => bs,
+            Err(e) => {
+                self.metrics.matrix_error(entry.idx);
+                return Err(e.to_string());
+            }
+        };
         if let (Some(sh), Some(t)) = (&self.shard, &ticket) {
             sh.batch_lat[t.shard()].observe((secs * 1e9) as u64);
         }
+        self.metrics.batch_lat.observe((secs * 1e9) as u64);
         self.metrics.batches.fetch_add(1, Ordering::Relaxed);
         self.metrics.batched_vectors.fetch_add(m as u64, Ordering::Relaxed);
         self.metrics.max_batch.fetch_max(m as u64, Ordering::Relaxed);
         self.metrics.kernel_nanos.fetch_add((secs * 1e9) as u64, Ordering::Relaxed);
         self.metrics.batch_sizes.observe(m as u64);
-        (bs, secs)
+        Ok((bs, secs))
     }
 
     /// Serve one MPK request `y = A^p x` (original indexing). Concurrent
@@ -535,7 +671,7 @@ impl MatvecService {
         x: &[f64],
         p: usize,
     ) -> Result<(Vec<f64>, f64, usize), ServeError> {
-        self.mpk_on(self.entry(name)?, x, p)
+        self.mpk_on(self.entry(name)?, x, p, self.deadline_after(None))
     }
 
     /// [`Self::mpk`] on an already-resolved registry entry (the
@@ -545,6 +681,7 @@ impl MatvecService {
         entry: &MatrixEntry,
         x: &[f64],
         p: usize,
+        deadline: Option<Instant>,
     ) -> Result<(Vec<f64>, f64, usize), ServeError> {
         let t0 = std::time::Instant::now();
         Self::check_input(entry, x).map_err(|e| {
@@ -570,28 +707,39 @@ impl MatvecService {
             })?;
         self.metrics.mpk_requests.fetch_add(1, Ordering::Relaxed);
         self.metrics.matrix(entry.idx).mpk_requests.fetch_add(1, Ordering::Relaxed);
-        let batcher = entry.mpk_batcher(p, self.batch_window_us);
-        let r = batcher.matvec(x.to_vec(), |xs| {
-            // MPK batches always run whole on one pool (the level-block
-            // plan's value is cache residency across powers), so the
-            // sharded tier routes them sticky via the placement ticket
-            let ticket = self.shard.as_ref().map(|sh| sh.router.place(entry.idx));
-            let (ys, secs) = crate::obs::time("serve.batch_mpk", || {
-                entry
-                    .op
-                    .powers_multi_routed(xs, p, ticket.as_ref().map(|t| t.shard()))
-                    .expect("plan prepared before enqueue")
-            });
-            if let (Some(sh), Some(t)) = (&self.shard, &ticket) {
-                sh.batch_lat[t.shard()].observe((secs * 1e9) as u64);
-            }
-            self.metrics.mpk_batches.fetch_add(1, Ordering::Relaxed);
-            self.metrics.mpk_batched_vectors.fetch_add(xs.len() as u64, Ordering::Relaxed);
-            self.metrics.max_batch.fetch_max(xs.len() as u64, Ordering::Relaxed);
-            self.metrics.kernel_nanos.fetch_add((secs * 1e9) as u64, Ordering::Relaxed);
-            self.metrics.batch_sizes.observe(xs.len() as u64);
-            (ys, secs)
-        });
+        let batcher = entry.mpk_batcher(p, self.batch_window_us, self.queue_cap);
+        let r = batcher
+            .matvec(x.to_vec(), deadline, |xs| {
+                // MPK batches always run whole on one pool (the level-block
+                // plan's value is cache residency across powers), so the
+                // sharded tier routes them sticky via the placement ticket
+                // (skipping shards marked failed)
+                let ticket = self
+                    .shard
+                    .as_ref()
+                    .map(|sh| sh.router.place_healthy(entry.idx, |s| !sh.set.is_failed(s)));
+                let (res, secs) = crate::obs::time("serve.batch_mpk", || {
+                    entry.op.powers_multi_routed(xs, p, ticket.as_ref().map(|t| t.shard()))
+                });
+                let ys = match res {
+                    Ok(ys) => ys,
+                    Err(e) => {
+                        self.metrics.matrix_error(entry.idx);
+                        return Err(e.to_string());
+                    }
+                };
+                if let (Some(sh), Some(t)) = (&self.shard, &ticket) {
+                    sh.batch_lat[t.shard()].observe((secs * 1e9) as u64);
+                }
+                self.metrics.batch_lat.observe((secs * 1e9) as u64);
+                self.metrics.mpk_batches.fetch_add(1, Ordering::Relaxed);
+                self.metrics.mpk_batched_vectors.fetch_add(xs.len() as u64, Ordering::Relaxed);
+                self.metrics.max_batch.fetch_max(xs.len() as u64, Ordering::Relaxed);
+                self.metrics.kernel_nanos.fetch_add((secs * 1e9) as u64, Ordering::Relaxed);
+                self.metrics.batch_sizes.observe(xs.len() as u64);
+                Ok((ys, secs))
+            })
+            .map_err(|f| self.batch_fail_to_error(entry, f))?;
         self.metrics.mpk_lat.observe(t0.elapsed().as_nanos() as u64);
         Ok((r.b, r.seconds, r.batch))
     }
@@ -611,16 +759,20 @@ impl MatvecService {
         rhs: &[f64],
         cfg: &crate::solver::SolveConfig,
     ) -> Result<crate::solver::SolveResult, ServeError> {
-        self.solve_on(self.entry(name)?, rhs, cfg)
+        self.solve_on(self.entry(name)?, rhs, cfg, self.deadline_after(None))
     }
 
     /// [`Self::solve`] on an already-resolved registry entry (the
-    /// [`Self::handle`] dispatch target).
+    /// [`Self::handle`] dispatch target). The deadline rides into every
+    /// per-iteration batched SpMV, so a solve that outlives it aborts at
+    /// its next sweep with `deadline_exceeded` instead of running to
+    /// `max_iter`.
     fn solve_on(
         &self,
         entry: &MatrixEntry,
         rhs: &[f64],
         cfg: &crate::solver::SolveConfig,
+        deadline: Option<Instant>,
     ) -> Result<crate::solver::SolveResult, ServeError> {
         let t0 = std::time::Instant::now();
         Self::check_input(entry, rhs).map_err(|e| {
@@ -629,11 +781,27 @@ impl MatvecService {
         })?;
         self.metrics.solves.fetch_add(1, Ordering::Relaxed);
         self.metrics.matrix(entry.idx).solves.fetch_add(1, Ordering::Relaxed);
+        // a batcher rejection mid-solve cannot surface through the mv
+        // closure (it returns unit): NaN-poison the sweep output — the
+        // solver's non-finite breakdown checks abort the iteration — and
+        // carry the first rejection out through this cell
+        let fail: std::cell::Cell<Option<BatchFail>> = std::cell::Cell::new(None);
         let mut mv = |v: &[f64], out: &mut [f64]| {
-            let r = entry.batcher.matvec(v.to_vec(), |xs| self.run_batch(entry, xs));
-            out.copy_from_slice(&r.b);
+            match entry.batcher.matvec(v.to_vec(), deadline, |xs| self.run_batch(entry, xs)) {
+                Ok(r) => out.copy_from_slice(&r.b),
+                Err(f) => {
+                    out.fill(f64::NAN);
+                    // first rejection wins — it names the root cause
+                    let prev = fail.take();
+                    fail.set(Some(prev.unwrap_or(f)));
+                }
+            }
         };
-        let res = crate::solver::solve_with(entry.op(), &mut mv, rhs, cfg)
+        let res = crate::solver::solve_with(entry.op(), &mut mv, rhs, cfg);
+        if let Some(f) = fail.take() {
+            return Err(self.batch_fail_to_error(entry, f));
+        }
+        let res = res
             .map_err(|e| ServeError::new("solve_failed", e.to_string()))
             .map_err(|e| {
                 self.metrics.matrix_error(entry.idx);
@@ -749,13 +917,56 @@ impl MatvecService {
         Json::obj(vec![("stats", Json::obj(fields))])
     }
 
+    /// Liveness report behind `{"health": true}`: probes every pool of
+    /// the execution tier (which also respawns any dead workers — see
+    /// `WorkerPool::try_run`), reports per-shard liveness, router queue
+    /// depth, and the cumulative worker-restart count. `ok` is true
+    /// while at least one pool answers — the degradation ladder can
+    /// still serve bit-correct answers through the serial rung even
+    /// below that, but a false `ok` means the resident tier needs
+    /// attention (`docs/RELIABILITY.md` has the runbook).
+    pub fn health_json(&self) -> Json {
+        let mut fields: Vec<(&str, Json)> = Vec::new();
+        let ok = match &self.shard {
+            Some(sh) => {
+                let live = sh.set.probe();
+                let rows: Vec<Json> = live
+                    .iter()
+                    .enumerate()
+                    .map(|(s, &l)| {
+                        Json::obj(vec![
+                            ("shard", Json::Num(s as f64)),
+                            ("live", Json::Bool(l)),
+                            ("depth", Json::Num(sh.router.depth(s) as f64)),
+                        ])
+                    })
+                    .collect();
+                fields.push(("shards", Json::Arr(rows)));
+                fields.push(("healthy_shards", Json::Num(sh.set.healthy() as f64)));
+                live.iter().any(|&l| l)
+            }
+            None => self.pool.as_ref().map_or(true, |p| p.try_run(|_| {}).is_ok()),
+        };
+        fields.insert(0, ("ok", Json::Bool(ok)));
+        fields.push(("worker_restarts", Json::Num(self.worker_restarts() as f64)));
+        Json::obj(vec![("health", Json::obj(fields))])
+    }
+
     /// The metrics registry as Prometheus-style text exposition (the
     /// payload behind `{"metrics": true}`). With `--hwc` the registry
     /// text is followed by process-level `race_hwc_*` counter gauges
     /// (or a single `race_hwc_info` status line where perf is denied);
     /// without the flag the text is byte-identical to earlier builds.
+    /// `race_worker_restarts_total` appears only after a worker has
+    /// actually been respawned — a fault-free exposition stays
+    /// byte-identical to earlier builds.
     pub fn metrics_text(&self) -> String {
         let mut text = self.metrics.prometheus(&self.matrix_info());
+        let restarts = self.worker_restarts();
+        if restarts > 0 {
+            text.push_str("# TYPE race_worker_restarts_total counter\n");
+            text.push_str(&format!("race_worker_restarts_total {restarts}\n"));
+        }
         if self.hwc_requested {
             text.push_str(&self.hwc_text());
         }
@@ -874,7 +1085,21 @@ impl MatvecService {
         let _sp = crate::obs::span_detail("serve.request", || format!("id={id}"));
         let t0 = std::time::Instant::now();
         let mut info = ReqInfo { kind: "unknown", matrix: None, batch: 0 };
-        let out = match self.handle_inner(line, &mut info) {
+        // panic isolation at the protocol boundary: a handler panic
+        // (chaos-injected or real) answers a structured `internal` error
+        // instead of killing the connection thread mid-response
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            self.handle_inner(line, &mut info)
+        }))
+        .unwrap_or_else(|p| {
+            let msg = p
+                .downcast_ref::<&str>()
+                .map(|s| s.to_string())
+                .or_else(|| p.downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "non-string panic payload".to_string());
+            Err(ServeError::new("internal", format!("request handler panicked: {msg}")))
+        });
+        let out = match caught {
             Ok((resp, shutdown)) => (resp, shutdown),
             Err(e) => {
                 self.metrics.response_error(e.code);
@@ -900,8 +1125,17 @@ impl MatvecService {
     }
 
     fn handle_inner(&self, line: &str, info: &mut ReqInfo) -> Result<(String, bool), ServeError> {
+        // chaos site: error mode answers a structured internal error,
+        // panic mode exercises the catch_unwind in `handle`
+        if crate::fault::inject("serve.handle").is_some() {
+            return Err(ServeError::new("internal", "injected fault at serve.handle"));
+        }
         let req = Json::parse(line)
             .map_err(|e| ServeError::new("bad_json", format!("request is not valid JSON: {e}")))?;
+        if req.get("health").is_some() {
+            info.kind = "health";
+            return Ok((self.health_json().to_string(), false));
+        }
         if req.get("stats").is_some() {
             info.kind = "stats";
             return Ok((self.stats_json().to_string(), false));
@@ -941,17 +1175,32 @@ impl MatvecService {
         // resolve the registry entry exactly once — every dispatch below
         // reuses the handle instead of re-walking the registry per call
         let entry = self.entry(name)?;
+        // per-request deadline override (milliseconds); the service
+        // default (`--deadline-ms`) applies when absent
+        let override_ms = match req.get("deadline_ms") {
+            None => None,
+            Some(j) => Some(
+                j.as_f64().filter(|d| d.fract() == 0.0 && *d >= 1.0).ok_or_else(|| {
+                    ServeError::new(
+                        "bad_request",
+                        "\"deadline_ms\" must be a positive integer",
+                    )
+                })? as u64,
+            ),
+        };
+        let deadline = self.deadline_after(override_ms);
         if let Some(sj) = req.get("solve") {
             info.kind = "solve";
-            let resp = self.handle_solve(entry, sj)?;
+            let resp = self.handle_solve(entry, sj, deadline)?;
             return Ok((resp, false));
         }
         let x = req.get("x").and_then(|j| j.as_f64_arr()).ok_or_else(|| {
             ServeError::new(
                 "bad_request",
                 "request must be {\"x\": [..]} or {\"solve\": {\"rhs\": [..]}} (optional \
-                 \"matrix\", \"p\", or {\"stats\": true} / {\"metrics\": true} / \
-                 {\"trace\": true} / {\"shutdown\": true})",
+                 \"matrix\", \"p\", \"deadline_ms\", or {\"stats\": true} / \
+                 {\"metrics\": true} / {\"trace\": true} / {\"health\": true} / \
+                 {\"shutdown\": true})",
             )
         })?;
         if let Some(pj) = req.get("p") {
@@ -961,7 +1210,7 @@ impl MatvecService {
                 .ok_or_else(|| ServeError::new("bad_power", "\"p\" must be a positive integer"))?
                 as usize;
             info.kind = "mpk";
-            let (y, secs, m) = self.mpk_on(entry, &x, p)?;
+            let (y, secs, m) = self.mpk_on(entry, &x, p, deadline)?;
             info.batch = m;
             let resp = Json::obj(vec![
                 ("y", Json::arr_f64(&y)),
@@ -972,7 +1221,7 @@ impl MatvecService {
             return Ok((resp.to_string(), false));
         }
         info.kind = "matvec";
-        let (b, secs, m) = self.matvec_on(entry, &x)?;
+        let (b, secs, m) = self.matvec_on(entry, &x, deadline)?;
         info.batch = m;
         let resp = Json::obj(vec![
             ("b", Json::arr_f64(&b)),
@@ -984,7 +1233,12 @@ impl MatvecService {
 
     /// Parse and serve one `{"solve": {...}}` request (the catalogue and
     /// a worked transcript live in `docs/SERVE_PROTOCOL.md`).
-    fn handle_solve(&self, entry: &MatrixEntry, sj: &Json) -> Result<String, ServeError> {
+    fn handle_solve(
+        &self,
+        entry: &MatrixEntry,
+        sj: &Json,
+        deadline: Option<Instant>,
+    ) -> Result<String, ServeError> {
         use crate::solver::{Method, SolveConfig};
         let rhs = sj.get("rhs").and_then(|j| j.as_f64_arr()).ok_or_else(|| {
             ServeError::new("bad_request", "\"solve\" must be {\"rhs\": [..], ..}")
@@ -1020,7 +1274,7 @@ impl MatvecService {
             })?;
             cfg = cfg.lambda(b[0], b[1]);
         }
-        let res = self.solve_on(entry, &rhs, &cfg)?;
+        let res = self.solve_on(entry, &rhs, &cfg, deadline)?;
         let resp = Json::obj(vec![
             ("x", Json::arr_f64(&res.x)),
             ("method", Json::Str(res.method.name().to_string())),
@@ -1647,5 +1901,157 @@ mod tests {
             assert_eq!(r.get("depth").and_then(Json::as_f64), Some(0.0), "drained queues");
             assert_eq!(r.get("steals").and_then(Json::as_f64), Some(0.0), "no skew, no steal");
         }
+    }
+
+    #[test]
+    fn expired_deadline_answers_deadline_exceeded() {
+        let svc = MatvecService::build(&opts(&["stencil2d:6x6"])).unwrap();
+        let e = svc.entries()[0].clone();
+        let n = e.n;
+        let ones = vec![1.0; n];
+        let past = Instant::now() - Duration::from_millis(5);
+        let err = svc.matvec_on(&e, &ones, Some(past)).unwrap_err();
+        assert_eq!(err.code, "deadline_exceeded");
+        assert!(err.retry_after_ms.is_none());
+        let err = svc.mpk_on(&e, &ones, 2, Some(past)).unwrap_err();
+        assert_eq!(err.code, "deadline_exceeded");
+        let cfg = crate::solver::SolveConfig::new();
+        let err = svc.solve_on(&e, &ones, &cfg, Some(past)).unwrap_err();
+        assert_eq!(err.code, "deadline_exceeded");
+        assert_eq!(svc.metrics.deadline_hits.load(Ordering::Relaxed), 3);
+        // a generous deadline serves normally
+        let future = Instant::now() + Duration::from_secs(60);
+        let (b, _, _) = svc.matvec_on(&e, &ones, Some(future)).unwrap();
+        assert!(b.iter().all(|v| (v - 1.0).abs() < 1e-9));
+        // protocol surface: the override is validated…
+        let (resp, _) = svc.handle(&format!("{{\"x\": {ones:?}, \"deadline_ms\": -3}}"));
+        assert!(resp.contains("bad_request"), "{resp}");
+        // …and a liberal per-request deadline still answers correctly
+        let (resp, _) = svc.handle(&format!("{{\"x\": {ones:?}, \"deadline_ms\": 60000}}"));
+        assert!(resp.contains("\"b\""), "{resp}");
+    }
+
+    #[test]
+    fn full_queue_sheds_with_overloaded_and_retry_hint() {
+        let mut o = opts(&["stencil2d:6x6"]);
+        o.queue_cap = 1;
+        let svc = Arc::new(MatvecService::build(&o).unwrap());
+        let e = svc.entries()[0].clone();
+        let n = e.n;
+        // a leader whose "kernel" blocks until released, so followers
+        // pile up behind it deterministically
+        let entered = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let release = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let leader = {
+            let (e, entered, release) = (e.clone(), entered.clone(), release.clone());
+            std::thread::spawn(move || {
+                e.batcher
+                    .matvec(vec![1.0; n], None, |xs| {
+                        entered.store(true, Ordering::SeqCst);
+                        while !release.load(Ordering::SeqCst) {
+                            std::thread::sleep(Duration::from_millis(1));
+                        }
+                        Ok((xs.iter().map(|x| x.to_vec()).collect(), 0.0))
+                    })
+                    .unwrap()
+            })
+        };
+        // the leader is provably mid-batch (queue drained, exec lock
+        // held) before anyone else arrives…
+        while !entered.load(Ordering::SeqCst) {
+            std::thread::yield_now();
+        }
+        // …then one follower fills the bounded queue…
+        let follower = {
+            let svc = svc.clone();
+            std::thread::spawn(move || svc.matvec(None, &vec![2.0; n]).unwrap())
+        };
+        while e.batcher.depth() < 1 {
+            std::thread::yield_now();
+        }
+        // …so the next arrival is shed with a structured retry hint
+        let (resp, _) = svc.handle(&format!("{{\"x\": {:?}}}", vec![3.0; n]));
+        assert!(resp.contains("\"overloaded\""), "{resp}");
+        let j = Json::parse(&resp).unwrap();
+        let retry = j
+            .get("error")
+            .and_then(|e| e.get("retry_after_ms"))
+            .and_then(Json::as_f64)
+            .unwrap();
+        assert!(retry >= 1.0, "{resp}");
+        release.store(true, Ordering::SeqCst);
+        leader.join().unwrap();
+        let r = follower.join().unwrap();
+        assert!(r.0.iter().all(|v| (v - 2.0).abs() < 1e-9), "follower still served");
+        // the shed shows up in the gated resilience metrics
+        assert_eq!(svc.metrics.shed.load(Ordering::Relaxed), 1);
+        let text = svc.metrics_text();
+        assert!(text.contains("race_shed_total 1"), "{text}");
+        assert!(text.contains("race_error_responses_total{code=\"overloaded\"} 1"), "{text}");
+    }
+
+    #[test]
+    fn health_endpoint_reports_liveness() {
+        // flat tier: one pool, probed directly
+        let svc = MatvecService::build(&opts(&["stencil2d:6x6"])).unwrap();
+        let (resp, stop) = svc.handle("{\"health\": true}");
+        assert!(!stop);
+        let j = Json::parse(&resp).unwrap();
+        let h = j.get("health").unwrap();
+        assert_eq!(h.get("ok"), Some(&Json::Bool(true)), "{resp}");
+        assert_eq!(h.get("worker_restarts").and_then(Json::as_f64), Some(0.0));
+        assert!(h.get("shards").is_none(), "flat tier has no shard rows");
+        // sharded tier: per-shard liveness rows
+        let mut o = opts(&["stencil2d:6x6"]);
+        o.shards = 2;
+        let svc = MatvecService::build(&o).unwrap();
+        let (resp, _) = svc.handle("{\"health\": true}");
+        let j = Json::parse(&resp).unwrap();
+        let h = j.get("health").unwrap();
+        assert_eq!(h.get("ok"), Some(&Json::Bool(true)), "{resp}");
+        assert_eq!(h.get("healthy_shards").and_then(Json::as_f64), Some(2.0));
+        let rows = match h.get("shards") {
+            Some(Json::Arr(v)) => v,
+            other => panic!("expected shard rows, got {other:?}"),
+        };
+        assert_eq!(rows.len(), 2);
+        for r in rows {
+            assert_eq!(r.get("live"), Some(&Json::Bool(true)), "{resp}");
+        }
+        // a probe also revives a shard somebody marked failed
+        svc.shard.as_ref().unwrap().set.mark_failed(1);
+        let (resp, _) = svc.handle("{\"health\": true}");
+        let j = Json::parse(&resp).unwrap();
+        let h = j.get("health").unwrap();
+        assert_eq!(h.get("healthy_shards").and_then(Json::as_f64), Some(2.0), "{resp}");
+    }
+
+    #[test]
+    fn injected_handler_fault_answers_structured_internal() {
+        let svc = MatvecService::build(&opts(&["stencil2d:6x6"])).unwrap();
+        let n = svc.entries()[0].n;
+        let ones = vec![1.0; n];
+        {
+            // error mode: structured internal error, no panic
+            let _g = crate::fault::testutil::Armed::install("serve.handle=error#1");
+            let (resp, stop) = svc.handle(&format!("{{\"x\": {ones:?}}}"));
+            assert!(!stop);
+            assert!(resp.contains("\"internal\""), "{resp}");
+            assert!(resp.contains("injected fault at serve.handle"), "{resp}");
+        }
+        {
+            // panic mode: the catch_unwind boundary answers instead of
+            // unwinding into the connection thread
+            let _g = crate::fault::testutil::Armed::install("serve.handle=panic#1");
+            let (resp, stop) = svc.handle(&format!("{{\"x\": {ones:?}}}"));
+            assert!(!stop);
+            assert!(resp.contains("request handler panicked"), "{resp}");
+        }
+        // the service recovers: the next request serves normally
+        let (resp, _) = svc.handle(&format!("{{\"x\": {ones:?}}}"));
+        assert!(resp.contains("\"b\""), "{resp}");
+        let s = svc.stats_json();
+        let by = s.get("stats").unwrap().get("errors_by_code").unwrap();
+        assert_eq!(by.get("internal").and_then(Json::as_f64), Some(2.0));
     }
 }

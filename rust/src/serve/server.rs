@@ -10,18 +10,28 @@
 //!   request lines the server stops accepting and drains.
 //!
 //! Both set a stop flag and poke the listener with a loopback connection
-//! so the blocking `accept` wakes up; open connections are shut down
-//! after their in-flight request completes (handlers re-check the flag
-//! between requests) and every connection thread is joined before
-//! [`Server::run`] returns — so the e2e tests can drive a real server
-//! deterministically.
+//! so the blocking `accept` wakes up. Shutdown *drains*: live
+//! connections get their read side shut (no new requests can arrive)
+//! while the write side stays open, so a handler mid-batch still
+//! delivers its in-flight answer; every connection thread is joined
+//! before [`Server::run`] returns — so the e2e tests can drive a real
+//! server deterministically.
+//!
+//! Slow-client protection (`--io-timeout-ms`, off by default) arms
+//! socket read/write timeouts on every accepted connection: a peer that
+//! stalls mid-line is disconnected instead of pinning a handler thread
+//! forever. The `serve.read` / `serve.write` fault sites
+//! ([`crate::fault`]) simulate exactly those I/O failures in the chaos
+//! suite.
 
 use super::{MatvecService, ServeOptions};
+use crate::fault::{self, Fault};
 use anyhow::Result;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicI64, Ordering};
 use std::sync::Arc;
+use std::time::Duration;
 
 /// A bound, not-yet-running server. Splitting bind from run lets callers
 /// learn the actual address (port 0 binds an ephemeral port) before
@@ -33,6 +43,9 @@ pub struct Server {
     stop: Arc<AtomicBool>,
     /// Remaining request budget (`i64::MAX` when unlimited).
     budget: Arc<AtomicI64>,
+    /// Socket read/write timeout armed on every connection (`None` =
+    /// block forever, the pre-resilience behaviour).
+    io_timeout: Option<Duration>,
 }
 
 impl Server {
@@ -46,12 +59,15 @@ impl Server {
             Some(n) => i64::try_from(n).unwrap_or(i64::MAX),
             None => i64::MAX,
         };
+        let io_timeout =
+            (opts.io_timeout_ms > 0).then(|| Duration::from_millis(opts.io_timeout_ms));
         Ok(Server {
             svc,
             listener,
             local,
             stop: Arc::new(AtomicBool::new(false)),
             budget: Arc::new(AtomicI64::new(budget)),
+            io_timeout,
         })
     }
 
@@ -93,6 +109,12 @@ impl Server {
                     continue;
                 }
             };
+            if let Some(t) = self.io_timeout {
+                // timeouts are socket-level, so they cover the reader
+                // and the cloned writer alike
+                let _ = stream.set_read_timeout(Some(t));
+                let _ = stream.set_write_timeout(Some(t));
+            }
             let clone = stream.try_clone().ok();
             let svc = self.svc.clone();
             let stop = self.stop.clone();
@@ -106,12 +128,14 @@ impl Server {
             // accumulate dead threads and cloned fds
             conns.retain(|(h, _)| !h.is_finished());
         }
-        // stop was requested: close every live connection (in-flight
-        // requests have been answered; handlers exit on the next read)
-        // and join.
+        // stop was requested: drain, don't cut. Shutting only the READ
+        // side stops new requests from arriving while the write side
+        // stays open, so a handler that is mid-batch can still deliver
+        // its in-flight answer before its next read sees EOF. The join
+        // below is the drain barrier; sockets close on drop after it.
         for (h, c) in conns {
             if let Some(c) = c {
-                let _ = c.shutdown(std::net::Shutdown::Both);
+                let _ = c.shutdown(std::net::Shutdown::Read);
             }
             let _ = h.join();
         }
@@ -141,6 +165,11 @@ fn handle_conn(
             Ok(l) => l,
             Err(_) => break,
         };
+        // chaos site: a failed or truncated read drops the connection,
+        // exactly like a peer vanishing mid-line
+        if fault::inject("serve.read").is_some() {
+            break;
+        }
         if line.trim().is_empty() {
             continue;
         }
@@ -150,6 +179,17 @@ fn handle_conn(
             break; // budget already spent by other connections
         }
         let (resp, shutdown) = svc.handle(&line);
+        // chaos site: simulate a write failure or a short write to a
+        // client that disappeared while its batch ran
+        match fault::inject("serve.write") {
+            Some(Fault::ShortWrite) => {
+                let half = resp.len() / 2;
+                let _ = writer.write_all(resp[..half].as_bytes());
+                break;
+            }
+            Some(_) => break,
+            None => {}
+        }
         if writer.write_all(resp.as_bytes()).is_err() || writer.write_all(b"\n").is_err() {
             break;
         }

@@ -38,7 +38,7 @@ pub use topo::Domain;
 
 use crate::pool::{ExecReport, WorkerPool};
 use crate::util::json::Json;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
 
 /// `k` execution domains with one pinned resident pool each. Cheap to
@@ -53,6 +53,10 @@ pub struct ShardSet {
     threads_per_shard: usize,
     /// Round-robin cursor for placement-free callers.
     cursor: AtomicUsize,
+    /// Per-shard liveness flag: `true` after a dispatch on this domain
+    /// failed (worker panic, injected fault). Failed shards are skipped
+    /// by the degradation ladder until [`ShardSet::probe`] revives them.
+    failed: Vec<AtomicBool>,
 }
 
 impl ShardSet {
@@ -62,11 +66,12 @@ impl ShardSet {
     pub fn new(shards: usize, threads_per_shard: usize) -> ShardSet {
         let domains = topo::discover(shards);
         let threads_per_shard = threads_per_shard.max(1);
-        let pools = domains
+        let pools: Vec<Arc<WorkerPool>> = domains
             .iter()
             .map(|d| Arc::new(WorkerPool::with_affinity(threads_per_shard, &d.cpus)))
             .collect();
-        ShardSet { domains, pools, threads_per_shard, cursor: AtomicUsize::new(0) }
+        let failed = (0..pools.len()).map(|_| AtomicBool::new(false)).collect();
+        ShardSet { domains, pools, threads_per_shard, cursor: AtomicUsize::new(0), failed }
     }
 
     /// Number of domains.
@@ -113,6 +118,51 @@ impl ShardSet {
     pub fn take_exec_reports(&self) -> Vec<Option<ExecReport>> {
         self.pools.iter().map(|p| p.take_exec_report()).collect()
     }
+
+    /// Whether shard `s` is currently marked failed (dispatches skip it).
+    pub fn is_failed(&self, s: usize) -> bool {
+        self.failed[s].load(Ordering::Relaxed)
+    }
+
+    /// Mark shard `s` failed: the degradation ladder routes around it
+    /// until [`ShardSet::probe`] (or [`ShardSet::revive`]) clears the
+    /// flag.
+    pub fn mark_failed(&self, s: usize) {
+        self.failed[s].store(true, Ordering::Relaxed);
+    }
+
+    /// Clear shard `s`'s failed flag.
+    pub fn revive(&self, s: usize) {
+        self.failed[s].store(false, Ordering::Relaxed);
+    }
+
+    /// Number of shards currently considered healthy.
+    pub fn healthy(&self) -> usize {
+        (0..self.failed.len()).filter(|&s| !self.is_failed(s)).count()
+    }
+
+    /// Health-probe every shard: run a trivial job on each pool (which
+    /// also heals any dead worker threads, see
+    /// [`WorkerPool::try_run`]) and set the failed flag from the
+    /// outcome. Returns per-shard liveness, shard order — the payload
+    /// behind the serve `{"health"}` endpoint.
+    pub fn probe(&self) -> Vec<bool> {
+        self.pools
+            .iter()
+            .enumerate()
+            .map(|(s, p)| {
+                let ok = p.try_run(|_| {}).is_ok();
+                self.failed[s].store(!ok, Ordering::Relaxed);
+                ok
+            })
+            .collect()
+    }
+
+    /// Total worker-thread respawns across every shard's pool (see
+    /// [`WorkerPool::restarts`]).
+    pub fn restarts(&self) -> u64 {
+        self.pools.iter().map(|p| p.restarts()).sum()
+    }
 }
 
 /// Shard-scaling measurement shared by `benches/shard_scaling.rs` and
@@ -144,7 +194,7 @@ pub fn bench_scaling(
         .collect();
     let mut want = vec![vec![0.0; n]; nrhs];
     let serial = Operator::build(&a, OpConfig::new().threads(threads).backend(Backend::Serial))?;
-    serial.symmspmv_multi(&xs, &mut want);
+    serial.symmspmv_multi(&xs, &mut want)?;
 
     let mut cases = Vec::new();
     let mut base_vps = None;
@@ -156,10 +206,10 @@ pub fn bench_scaling(
         let mut bs = vec![vec![0.0; n]; nrhs];
         // warm every shard's replica and anchor correctness: the sharded
         // batch must agree bitwise with the serial reference
-        op.symmspmv_multi(&xs, &mut bs);
+        op.symmspmv_multi(&xs, &mut bs)?;
         anyhow::ensure!(bs == want, "sharded batch (shards={k}) diverged from Backend::Serial");
         let st = crate::util::bench::bench(&format!("shards{k}"), secs, || {
-            op.symmspmv_multi(&xs, &mut bs)
+            op.symmspmv_multi(&xs, &mut bs).unwrap()
         });
         let vps = nrhs as f64 / st.median;
         let base = *base_vps.get_or_insert(vps);
@@ -205,6 +255,23 @@ mod tests {
         }
         // 0 clamps to 1
         assert_eq!(ShardSet::new(0, 0).shards(), 1);
+    }
+
+    #[test]
+    fn failed_flags_round_trip_and_probe_revives() {
+        let set = ShardSet::new(2, 1);
+        assert_eq!(set.healthy(), 2);
+        set.mark_failed(1);
+        assert!(set.is_failed(1));
+        assert!(!set.is_failed(0));
+        assert_eq!(set.healthy(), 1);
+        set.revive(1);
+        assert_eq!(set.healthy(), 2);
+        // a probe on healthy pools reports all-live and clears nothing
+        set.mark_failed(0);
+        assert_eq!(set.probe(), vec![true, true]);
+        assert_eq!(set.healthy(), 2);
+        assert_eq!(set.restarts(), 0);
     }
 
     #[test]

@@ -83,21 +83,38 @@ impl Router {
     /// under the cap, otherwise the least-loaded other shard (a steal).
     /// The returned ticket holds a unit of queue depth until dropped.
     pub fn place(&self, key: usize) -> Ticket<'_> {
+        self.place_healthy(key, |_| true)
+    }
+
+    /// [`Router::place`] restricted to shards `is_healthy` approves: a
+    /// failed home drains to the least-loaded healthy shard (counted as
+    /// a steal), and if *every* shard is reported unhealthy the home
+    /// placement stands — the execution ladder below the router falls
+    /// back to the flat pool / serial rungs in that case, so routing
+    /// never blocks on liveness.
+    pub fn place_healthy(&self, key: usize, is_healthy: impl Fn(usize) -> bool) -> Ticket<'_> {
         let home = self.home(key);
         let mut shard = home;
         let mut stolen = false;
-        if self.shards > 1 && self.depth[home].load(Ordering::Relaxed) >= self.depth_cap {
-            // one-hop spill to the least-loaded shard; ties keep the
-            // lowest id for determinism. If every queue is saturated the
-            // minimum is still the best available — no second hop, no
-            // wait.
-            let (best, best_depth) = (0..self.shards)
+        let home_bad = !is_healthy(home);
+        if self.shards > 1
+            && (home_bad || self.depth[home].load(Ordering::Relaxed) >= self.depth_cap)
+        {
+            // one-hop spill to the least-loaded healthy shard; ties keep
+            // the lowest id for determinism. If every queue is saturated
+            // the minimum is still the best available — no second hop,
+            // no wait.
+            if let Some((best, best_depth)) = (0..self.shards)
+                .filter(|&s| is_healthy(s))
                 .map(|s| (s, self.depth[s].load(Ordering::Relaxed)))
                 .min_by_key(|&(s, d)| (d, s))
-                .unwrap();
-            if best != home && best_depth < self.depth[home].load(Ordering::Relaxed) {
-                shard = best;
-                stolen = true;
+            {
+                if best != home
+                    && (home_bad || best_depth < self.depth[home].load(Ordering::Relaxed))
+                {
+                    shard = best;
+                    stolen = true;
+                }
             }
         }
         self.depth[shard].fetch_add(1, Ordering::Relaxed);
@@ -172,6 +189,23 @@ mod tests {
         let _held: Vec<Ticket> = (0..5).map(|k| r.place(k)).collect();
         assert_eq!(r.depth(0), 5); // cap exceeded, nowhere to go
         assert_eq!(r.steals(0), 0);
+    }
+
+    #[test]
+    fn failed_home_drains_to_healthy_survivor() {
+        let r = Router::new(3, 4);
+        // shard 1 is down: key 1's traffic drains to the least-loaded
+        // healthy shard and is accounted as a steal
+        let t = r.place_healthy(1, |s| s != 1);
+        assert_eq!(t.shard(), 0);
+        assert!(t.stolen);
+        assert_eq!(r.steals(0), 1);
+        drop(t);
+        // all shards down: home placement stands (the ladder below the
+        // router degrades instead)
+        let t = r.place_healthy(1, |_| false);
+        assert_eq!(t.shard(), 1);
+        assert!(!t.stolen);
     }
 
     #[test]

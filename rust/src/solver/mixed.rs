@@ -19,9 +19,10 @@
 //! ill-conditioned system degrades to the plain-CG cost instead of
 //! failing ([`SolveResult::fell_back`] reports it).
 
-use super::{l2, Method, SolveConfig, SolveResult};
+use super::{l2, poison_on_err, Method, SolveConfig, SolveResult};
 use crate::kernels;
 use crate::op::Operator;
+use crate::pool::ExecError;
 use anyhow::Result;
 use std::cell::Cell;
 
@@ -36,13 +37,19 @@ pub(super) fn mixed(
     let bnorm = l2(rhs);
     let target = cfg.tol * bnorm.max(1e-300);
     let calls = Cell::new(0usize);
+    let exec_err: Cell<Option<ExecError>> = Cell::new(None);
     // outer corrections are one matvec per refinement step, so the
     // logical-order facade sweep is fine here (the hot loop is the
     // inner CG, which stays in executor numbering below)
     let mut facade_mv;
     let base_mv: &mut dyn FnMut(&[f64], &mut [f64]) = match custom {
         None => {
-            facade_mv = |v: &[f64], out: &mut [f64]| op.symmspmv(v, out);
+            let exec_err = &exec_err;
+            facade_mv = move |v: &[f64], out: &mut [f64]| {
+                if let Err(e) = op.symmspmv(v, out) {
+                    poison_on_err(exec_err, e, out);
+                }
+            };
             &mut facade_mv
         }
         Some(f) => f,
@@ -94,7 +101,9 @@ pub(super) fn mixed(
         let inner_calls = Cell::new(0usize);
         let mut inner_mv = |v: &[f64], out: &mut [f64]| {
             inner_calls.set(inner_calls.get() + 1);
-            op.symmspmv_permuted_f32(v, out);
+            if let Err(e) = op.symmspmv_permuted_f32(v, out) {
+                poison_on_err(&exec_err, e, out);
+            }
         };
         let inner = kernels::cg_solve(&mut inner_mv, &rp, &mut dp, cfg.inner_tol, cfg.inner_iter);
         if used_f32 {
@@ -126,6 +135,9 @@ pub(super) fn mixed(
         // only if the outer history is empty
         let skip = usize::from(!residuals.is_empty());
         residuals.extend(res.residuals.into_iter().skip(skip));
+    }
+    if let Some(e) = exec_err.take() {
+        return Err(anyhow::Error::new(e).context("iterative solve aborted: backend execution failed"));
     }
     Ok(SolveResult {
         x,

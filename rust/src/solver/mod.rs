@@ -47,6 +47,7 @@ mod mixed;
 
 use crate::kernels;
 use crate::op::Operator;
+use crate::pool::ExecError;
 use crate::sparse::{Coo, Csr};
 use anyhow::{bail, ensure, Result};
 use std::cell::Cell;
@@ -332,11 +333,24 @@ enum Precond {
     Ssor,
 }
 
+/// Record `e` in `slot` (first error wins) and NaN-poison `out` so the
+/// enclosing CG recurrence breaks down on its next `p·Ap` check instead
+/// of iterating on a partially-written sweep. The kernel-level CG loops
+/// take infallible closures; this cell is how a typed backend failure
+/// crosses them without unwinding.
+fn poison_on_err(slot: &Cell<Option<ExecError>>, e: ExecError, out: &mut [f64]) {
+    out.fill(f64::NAN);
+    let prev = slot.take();
+    slot.set(prev.or(Some(e)));
+}
+
 /// CG / PCG in **executor numbering**: rhs is permuted once, every
 /// iteration runs on the zero-copy permuted surface, and the solution is
 /// unpermuted once at the end. A custom (logical-order) matvec hook is
 /// bridged per call — its permute cost is inherent to logical-order
-/// batching, not to this loop.
+/// batching, not to this loop. A backend execution failure (worker
+/// panic, failed shard with no fallback) aborts the solve with the
+/// typed error instead of returning a garbage solution.
 fn run_cg(
     op: &Operator,
     custom: CustomMv<'_>,
@@ -347,6 +361,7 @@ fn run_cg(
     let n = op.n();
     let calls = Cell::new(0usize);
     let papp = Cell::new(0usize);
+    let exec_err: Cell<Option<ExecError>> = Cell::new(None);
     let rhs_p = op.permute(rhs);
     // the two closure shapes have distinct types; materialize whichever
     // applies and erase to `&mut dyn` for the kernel-level CG loops
@@ -356,7 +371,9 @@ fn run_cg(
         None => {
             facade_mv = |vp: &[f64], outp: &mut [f64]| {
                 calls.set(calls.get() + 1);
-                op.symmspmv_permuted(vp, outp);
+                if let Err(e) = op.symmspmv_permuted(vp, outp) {
+                    poison_on_err(&exec_err, e, outp);
+                }
             };
             &mut facade_mv
         }
@@ -388,18 +405,25 @@ fn run_cg(
         }
         Precond::Ssor => {
             jacobi_inv_diag_permuted(op)?; // same explicit-diagonal requirement
+            let exec_err = &exec_err;
             let mut pc = |rp: &[f64], zp: &mut [f64]| {
                 papp.set(papp.get() + 1);
                 // the distance-1 aux schedule has its own permutation, so
                 // the sweep crosses the facade in logical order
                 let r = op.unpermute(rp);
                 let mut z = vec![0.0; zp.len()];
-                op.ssor_precond(&r, &mut z);
+                if let Err(e) = op.ssor_precond(&r, &mut z) {
+                    poison_on_err(exec_err, e, zp);
+                    return;
+                }
                 zp.copy_from_slice(&op.permute(&z));
             };
             kernels::pcg_solve(mv, &mut pc, &rhs_p, &mut xp, cfg.tol, cfg.max_iter)
         }
     };
+    if let Some(e) = exec_err.take() {
+        return Err(anyhow::Error::new(e).context("iterative solve aborted: backend execution failed"));
+    }
     Ok(SolveResult {
         x: op.unpermute(&xp),
         method: cfg.method,

@@ -49,7 +49,7 @@ fn symmspmv_bit_identical_across_backends_and_matches_reference() {
             for (bk, op) in ops(&a, threads) {
                 assert_eq!(op.n(), n);
                 let mut b = vec![0.0; n];
-                op.symmspmv(&x, &mut b);
+                op.symmspmv(&x, &mut b).unwrap();
                 for i in 0..n {
                     assert!(
                         (want[i] - b[i]).abs() <= 1e-9 * (1.0 + want[i].abs()),
@@ -78,10 +78,10 @@ fn symmspmv_multi_matches_singles_bitwise() {
             .collect();
         for (bk, op) in ops(&a, 4) {
             let mut bs: Vec<Vec<f64>> = (0..m).map(|_| vec![0.0; n]).collect();
-            op.symmspmv_multi(&xs, &mut bs);
+            op.symmspmv_multi(&xs, &mut bs).unwrap();
             for j in 0..m {
                 let mut b = vec![0.0; n];
-                op.symmspmv(&xs[j], &mut b);
+                op.symmspmv(&xs[j], &mut b).unwrap();
                 assert_eq!(b, bs[j], "{name}/{bk:?}: rhs {j}");
             }
         }
@@ -161,12 +161,12 @@ fn gauss_seidel_and_kaczmarz_identical_across_backends() {
             for (bk, op) in &backends {
                 let mut x = vec![0.0; n];
                 for _ in 0..20 {
-                    op.gauss_seidel(&b, &mut x);
+                    op.gauss_seidel(&b, &mut x).unwrap();
                 }
                 gs.push((*bk, x));
                 let mut x = vec![0.0; n];
                 for _ in 0..20 {
-                    op.kaczmarz(&b, &mut x);
+                    op.kaczmarz(&b, &mut x).unwrap();
                 }
                 kz.push((*bk, x));
             }
@@ -231,7 +231,7 @@ fn logical_order_is_invariant_to_internal_permutations() {
     for rcm in [true, false] {
         let op = Operator::build(&a, OpConfig::new().threads(3).rcm(rcm)).unwrap();
         let mut b = vec![0.0; n];
-        op.symmspmv(&x, &mut b);
+        op.symmspmv(&x, &mut b).unwrap();
         assert!(op::rel_err(&want, &b) < 1e-9, "rcm={rcm}");
         // round trip through executor numbering is lossless
         assert_eq!(op.unpermute(&op.permute(&x)), x);
@@ -256,7 +256,7 @@ fn shared_pool_serves_multiple_operators() {
         let n = a.nrows();
         let x: Vec<f64> = (0..n).map(|i| ((i % 5) as f64) * 0.5 - 1.0).collect();
         let mut b = vec![0.0; n];
-        op.symmspmv(&x, &mut b);
+        op.symmspmv(&x, &mut b).unwrap();
         let want = a.spmv_ref(&x);
         assert!(op::rel_err(&want, &b) < 1e-9);
         let ys = op.powers(&x, 2).unwrap();

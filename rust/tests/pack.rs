@@ -76,9 +76,9 @@ fn symmspmv_pack_bit_identical_to_csr_across_backends() {
                 let pack = Operator::build(&a, cfg(Storage::Pack)).unwrap();
                 assert_eq!(csr.effective_storage(), Storage::Csr);
                 let mut bc = vec![0.0; n];
-                csr.symmspmv(&x, &mut bc);
+                csr.symmspmv(&x, &mut bc).unwrap();
                 let mut bp = vec![0.0; n];
-                pack.symmspmv(&x, &mut bp);
+                pack.symmspmv(&x, &mut bp).unwrap();
                 assert_eq!(bc, bp, "{name}: t={threads} {backend:?} symmspmv pack != csr");
                 // multi-RHS rides the same packs
                 let xs: Vec<Vec<f64>> = (0..3)
@@ -86,8 +86,8 @@ fn symmspmv_pack_bit_identical_to_csr_across_backends() {
                     .collect();
                 let mut bsc: Vec<Vec<f64>> = vec![vec![0.0; n]; 3];
                 let mut bsp: Vec<Vec<f64>> = vec![vec![0.0; n]; 3];
-                csr.symmspmv_multi(&xs, &mut bsc);
-                pack.symmspmv_multi(&xs, &mut bsp);
+                csr.symmspmv_multi(&xs, &mut bsc).unwrap();
+                pack.symmspmv_multi(&xs, &mut bsp).unwrap();
                 assert_eq!(bsc, bsp, "{name}: t={threads} {backend:?} multi pack != csr");
             }
         }
@@ -151,9 +151,9 @@ fn f32_pack_stays_within_tolerance() {
         )
         .unwrap();
         let mut want = vec![0.0; n];
-        f64_op.symmspmv(&x, &mut want);
+        f64_op.symmspmv(&x, &mut want).unwrap();
         let mut got = vec![0.0; n];
-        f32_op.symmspmv(&x, &mut got);
+        f32_op.symmspmv(&x, &mut got).unwrap();
         let err = op::rel_err(&want, &got);
         assert!(err < 1e-5, "{name}: f32 symmspmv rel_err {err:.2e}");
         // power sweeps compound the matrix-entry rounding ~linearly in p
@@ -194,7 +194,7 @@ fn infeasible_pack_falls_back_to_csr() {
     assert!(op.pack().is_none());
     let x = test_vector(n);
     let mut b = vec![0.0; n];
-    op.symmspmv(&x, &mut b);
+    op.symmspmv(&x, &mut b).unwrap();
     let want = op.spmv_ref(&x);
     assert!(op::rel_err(&want, &b) < 1e-9);
     // with RCM the same matrix re-bands and the pack becomes feasible
@@ -205,7 +205,7 @@ fn infeasible_pack_falls_back_to_csr() {
     .unwrap();
     assert_eq!(op_rcm.effective_storage(), Storage::Pack, "RCM makes deltas narrow");
     let mut b2 = vec![0.0; n];
-    op_rcm.symmspmv(&x, &mut b2);
+    op_rcm.symmspmv(&x, &mut b2).unwrap();
     assert!(op::rel_err(&want, &b2) < 1e-9);
 }
 
@@ -235,7 +235,7 @@ fn escaped_entries_survive_the_operator_path() {
     let csr_op = Operator::build(&a, cfg(Storage::Csr)).unwrap();
     let x = test_vector(n);
     let (mut bp, mut bc) = (vec![0.0; n], vec![0.0; n]);
-    pack_op.symmspmv(&x, &mut bp);
-    csr_op.symmspmv(&x, &mut bc);
+    pack_op.symmspmv(&x, &mut bp).unwrap();
+    csr_op.symmspmv(&x, &mut bc).unwrap();
     assert_eq!(bp, bc, "escape path must stay bit-identical");
 }

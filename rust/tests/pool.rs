@@ -52,7 +52,7 @@ fn pool_symmspmv_matches_serial_all_families() {
             let wp = WorkerPool::new(threads);
             let prog = pool::compile_race(&eng);
             let mut got = vec![0.0; n];
-            pool::symmspmv_pool(&wp, &prog, &upper, &xp, &mut got);
+            pool::symmspmv_pool(&wp, &prog, &upper, &xp, &mut got).unwrap();
             close(&format!("{name}/t{threads} vs serial"), &want, &got, 1e-9);
             // vs the scoped-spawn executor: bit-identical-tolerance
             let mut scoped = vec![0.0; n];
@@ -110,7 +110,7 @@ fn pool_gauss_seidel_matches_scoped_sweeps() {
             let mut x_pool = vec![0.0; n];
             for sweep in 0..25 {
                 kernels::gauss_seidel_race(&eng, &ap, &b, &mut x_scoped);
-                pool::gauss_seidel_pool(&wp, &prog, &ap, &b, &mut x_pool);
+                pool::gauss_seidel_pool(&wp, &prog, &ap, &b, &mut x_pool).unwrap();
                 close(
                     &format!("{name}/t{threads} sweep {sweep}"),
                     &x_scoped,
@@ -147,7 +147,7 @@ fn pool_kaczmarz_matches_scoped_sweeps() {
             let mut x_pool = vec![0.0; n];
             for sweep in 0..20 {
                 kernels::kaczmarz_race(&eng, &ap, &b, &mut x_scoped);
-                pool::kaczmarz_pool(&wp, &prog, &ap, &b, &mut x_pool);
+                pool::kaczmarz_pool(&wp, &prog, &ap, &b, &mut x_pool).unwrap();
                 close(
                     &format!("{name}/t{threads} sweep {sweep}"),
                     &x_scoped,
@@ -173,7 +173,7 @@ fn pool_mpk_matches_reference_all_families() {
             for threads in THREADS {
                 let wp = WorkerPool::new(threads);
                 let prog = pool::compile_mpk(&plan, threads);
-                let ys = pool::mpk_powers_pool(&wp, &prog, &plan, &xp);
+                let ys = pool::mpk_powers_pool(&wp, &prog, &plan, &xp).unwrap();
                 assert_eq!(ys.len(), p);
                 for k in 0..p {
                     let err = race::mpk::rel_err_vs_ref(&want[k], &ys[k], &plan.perm);

@@ -98,6 +98,74 @@ fn tcp_shutdown_request_stops_server() {
     handle.join().unwrap();
 }
 
+/// Shutdown *drains*: a request still being handled when `{"shutdown"}`
+/// lands on another connection is answered in full. The server shuts
+/// only the read side of live connections — the write path stays open
+/// until every handler thread is joined (`docs/RELIABILITY.md`) — so
+/// the first client must read one complete, correct response line and
+/// then a clean EOF, never a truncated line or a wedged socket.
+#[test]
+fn tcp_shutdown_drains_in_flight_request() {
+    let server = Server::bind(&opts(&["stencil2d:24x24"])).unwrap();
+    let addr = server.local_addr();
+    let handle = std::thread::spawn(move || server.run().unwrap());
+
+    let stream = TcpStream::connect(addr).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+
+    // warm round trip: proves this connection's handler loop is live
+    // before racing it against the shutdown
+    let ones = vec![1.0; 576];
+    writer.write_all(format!("{{\"x\": {ones:?}}}\n").as_bytes()).unwrap();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("\"b\""), "{line}");
+
+    // a solve long enough that the shutdown usually lands mid-batch
+    let (_, a) = race::coordinator::resolve_matrix("stencil2d:24x24", true).unwrap();
+    let n = a.nrows();
+    let x_true: Vec<f64> = (0..n).map(|i| ((i * 7 + 3) % 11) as f64 * 0.25 - 1.0).collect();
+    let rhs = a.spmv_ref(&x_true);
+    let req = format!("{{\"solve\": {{\"rhs\": {rhs:?}, \"method\": \"cg\", \"tol\": 1e-11}}}}\n");
+    writer.write_all(req.as_bytes()).unwrap();
+
+    // second client: give the solve a moment to be picked up, then stop
+    // the server while it is (most likely) still iterating
+    let killer = std::thread::spawn(move || {
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        let s = TcpStream::connect(addr).unwrap();
+        let mut w = s.try_clone().unwrap();
+        let mut r = BufReader::new(s);
+        w.write_all(b"{\"shutdown\": true}\n").unwrap();
+        let mut ack = String::new();
+        r.read_line(&mut ack).unwrap();
+        assert!(ack.contains("shutting_down"), "{ack}");
+    });
+
+    // the in-flight solve is drained, not cut: a full answer arrives
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    let j = Json::parse(line.trim()).unwrap();
+    assert_eq!(j.get("converged"), Some(&Json::Bool(true)), "{line}");
+    let x = j.get("x").and_then(|v| v.as_f64_arr()).expect("x array");
+    for i in 0..n {
+        assert!(
+            (x[i] - x_true[i]).abs() < 1e-6 * (1.0 + x_true[i].abs()),
+            "drained solve must still be correct at row {i}: {} vs {}",
+            x[i],
+            x_true[i]
+        );
+    }
+
+    killer.join().unwrap();
+    handle.join().unwrap();
+    // after the drain barrier the connection closes cleanly
+    line.clear();
+    let nread = reader.read_line(&mut line).unwrap_or(0);
+    assert_eq!(nread, 0, "connection must close after drain: {line:?}");
+}
+
 /// Two matrices registered on one server; requests route by name and the
 /// non-finite guard answers a structured error.
 #[test]

@@ -45,14 +45,14 @@ fn symmspmv_bit_identical_to_serial_across_shards_and_threads() {
         for threads in THREADS {
             let serial = build(&a, Backend::Serial, threads);
             let mut want = vec![0.0; n];
-            serial.symmspmv(&x, &mut want);
+            serial.symmspmv(&x, &mut want).unwrap();
             for shards in SHARDS {
                 let op = build(&a, Backend::Sharded { shards }, threads);
                 // several calls, so the round-robin cursor visits every
                 // shard's pinned pool and replica
                 for round in 0..shards.max(2) {
                     let mut b = vec![0.0; n];
-                    op.symmspmv(&x, &mut b);
+                    op.symmspmv(&x, &mut b).unwrap();
                     assert_eq!(
                         want, b,
                         "{name}/t{threads}/s{shards} round {round}: not bit-identical"
@@ -113,10 +113,10 @@ fn multi_rhs_fanout_matches_singles_bitwise() {
         let op = build(&a, Backend::Sharded { shards: 2 }, 2);
         // the batch fans its columns out across both replicas
         let mut bs: Vec<Vec<f64>> = (0..m).map(|_| vec![0.0; n]).collect();
-        op.symmspmv_multi(&xs, &mut bs);
+        op.symmspmv_multi(&xs, &mut bs).unwrap();
         for j in 0..m {
             let mut b = vec![0.0; n];
-            op.symmspmv(&xs[j], &mut b);
+            op.symmspmv(&xs[j], &mut b).unwrap();
             assert_eq!(b, bs[j], "{name}: rhs {j} diverges under fan-out");
         }
     }
@@ -134,12 +134,12 @@ fn explicit_routing_is_placement_independent() {
     let op = build(&a, Backend::Sharded { shards }, 2);
     // fan-out result (no placement preference)
     let mut want: Vec<Vec<f64>> = (0..m).map(|_| vec![0.0; n]).collect();
-    op.symmspmv_multi(&xs, &mut want);
+    op.symmspmv_multi(&xs, &mut want).unwrap();
     // sticky whole-batch placement on each shard in turn: every replica
     // must produce the same bits
     for s in 0..shards {
         let mut bs: Vec<Vec<f64>> = (0..m).map(|_| vec![0.0; n]).collect();
-        op.symmspmv_multi_routed(&xs, &mut bs, Some(s));
+        op.symmspmv_multi_routed(&xs, &mut bs, Some(s)).unwrap();
         assert_eq!(want, bs, "shard {s}: routed batch diverges");
     }
     // MPK routes the same way
@@ -174,6 +174,84 @@ fn router_is_sticky_then_steals_under_skew() {
     let t = r.place(4);
     assert_eq!(t.shard(), 1);
     assert!(!t.stolen);
+}
+
+/// RAII property: router queue depth can never leak — a panic that
+/// unwinds past held tickets must release exactly their slots and no
+/// others. Without this, one panicking batch leader would permanently
+/// inflate a shard's depth and the router would steal away from a
+/// perfectly healthy shard forever (`docs/RELIABILITY.md`).
+#[test]
+fn router_tickets_release_depth_on_panic_unwind() {
+    for shards in [1usize, 2, 3, 5] {
+        let r = Router::new(shards, 2);
+        let mut total_placed = 0u64;
+        for key in 0..23usize {
+            // survivors held across the panic: their depth must not be
+            // touched by the unwinding placements
+            let survivor = r.place(key);
+            let before: Vec<usize> = (0..shards).map(|s| r.depth(s)).collect();
+            let unwound = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                let mut held = Vec::new();
+                for i in 0..4usize {
+                    // mix the sticky path and the health-filtered path
+                    held.push(if i % 2 == 0 {
+                        r.place(key + i)
+                    } else {
+                        r.place_healthy(key + i, |s| s != key % shards.max(1))
+                    });
+                }
+                panic!("unwinding with {} tickets held", held.len());
+            }));
+            assert!(unwound.is_err(), "closure must panic");
+            total_placed += 4;
+            // every panicked ticket released its slot; the survivor kept its
+            let after: Vec<usize> = (0..shards).map(|s| r.depth(s)).collect();
+            assert_eq!(before, after, "shards {shards} key {key}: depth leaked across unwind");
+            drop(survivor);
+        }
+        assert!((0..shards).all(|s| r.depth(s) == 0), "all tickets dropped: depth must be 0");
+        // the unwound placements still counted as placements
+        let placed: u64 = (0..shards).map(|s| r.placements(s)).sum();
+        assert_eq!(placed, total_placed + 23, "23 survivors + 4 per key unwound");
+    }
+}
+
+/// The same property under concurrency: threads race placements and
+/// panics against each other; once every thread has unwound, depth is
+/// zero on every shard.
+#[test]
+fn router_depth_drains_after_concurrent_panics() {
+    let shards = 4usize;
+    let r = std::sync::Arc::new(Router::new(shards, 2));
+    let mut handles = Vec::new();
+    for t in 0..8usize {
+        let r = r.clone();
+        handles.push(std::thread::spawn(move || {
+            let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                let mut held = Vec::new();
+                for i in 0..50usize {
+                    held.push(r.place(t * 31 + i * 7));
+                    if held.len() > 3 {
+                        held.remove(0); // steady churn: drop the oldest
+                    }
+                    if t % 2 == 0 && i == 29 {
+                        panic!("chaos unwind with {} tickets held", held.len());
+                    }
+                }
+            }));
+            out.is_err()
+        }));
+    }
+    let panicked =
+        handles.into_iter().map(|h| h.join().unwrap()).filter(|&p| p).count();
+    assert_eq!(panicked, 4, "every even-numbered thread unwinds");
+    for s in 0..shards {
+        assert_eq!(r.depth(s), 0, "shard {s}: depth must drain to zero after unwinds");
+    }
+    // placements counted: 4 panicking threads place 30 each, 4 run to 50
+    let placed: u64 = (0..shards).map(|s| r.placements(s)).sum();
+    assert_eq!(placed, 4 * 30 + 4 * 50);
 }
 
 /// A `--shards 2` server over real TCP: matvec, MPK, solve and the

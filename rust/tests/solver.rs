@@ -190,7 +190,7 @@ fn ssor_precond_is_bit_identical_across_backends() {
             let op =
                 Operator::build(&a, OpConfig::new().threads(threads).backend(backend)).unwrap();
             let mut z = vec![0.0; n];
-            op.ssor_precond(&r, &mut z);
+            op.ssor_precond(&r, &mut z).unwrap();
             assert!(z.iter().any(|&v| v != 0.0), "{backend:?}: sweep produced nothing");
             outs.push(z);
         }
