@@ -84,6 +84,45 @@ fn main() {
         });
         report(&s, Some(flops));
         rows.push(case_row(name, "scalar", &s, flops));
+        // scalar-vs-simd differential series. Emitted only on `simd`
+        // builds so the default build's BENCH_perf.json keeps its kernel
+        // keys byte-identical; the `speedup_simd` leaf lands in the
+        // baseline differ's noisy higher-better tier (`speedup*`), so CI
+        // diffs warn rather than gate. RACE_PERF_ASSERT=1 (perf hardware
+        // only) hard-asserts the vector tier is not slower on the
+        // regular high-N_nzr stencil.
+        if cfg!(feature = "simd") {
+            let s_sc = bench("simd-tier scalar twin", 0.4, || {
+                b.iter_mut().for_each(|v| *v = 0.0);
+                kernels::symmspmv_range_unchecked_scalar(&upper, &x, &mut b, 0, n);
+            });
+            report(&s_sc, Some(flops));
+            let s_v = bench("simd + software prefetch", 0.4, || {
+                b.iter_mut().for_each(|v| *v = 0.0);
+                race::kernels::simd::symmspmv_range_simd(&upper, &x, &mut b, 0, n);
+            });
+            report(&s_v, Some(flops));
+            let speedup = s_sc.median / s_v.median;
+            println!(
+                "  simd tier {}: {speedup:.2}x vs scalar twin",
+                kernels::detected_tier().as_str()
+            );
+            let mut row = vec![
+                ("matrix", Json::Str(name.to_string())),
+                ("kernel", Json::Str("simd".to_string())),
+                ("gfs", Json::Num(s_v.gflops(flops))),
+                ("median_ms", Json::Num(s_v.median * 1e3)),
+            ];
+            row.push(("speedup_simd", Json::Num(speedup)));
+            rows.push(Json::obj(row));
+            if speedup < 1.0 {
+                let msg = format!("simd slower than scalar on {name}: {speedup:.2}x");
+                if std::env::var("RACE_PERF_ASSERT").is_ok() && *name == "stencil27" {
+                    panic!("{msg}");
+                }
+                println!("  warning: {msg} (noisy-timing tier; not gated)");
+            }
+        }
         let s = bench("pack f64 (u16 deltas)", 0.4, || {
             b.iter_mut().for_each(|v| *v = 0.0);
             kernels::symmspmv_range_pack(&pack64, &x, &mut b, 0, n);

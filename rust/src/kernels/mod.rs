@@ -8,6 +8,7 @@ mod cg;
 mod executors;
 mod mpk;
 mod pack;
+pub mod simd;
 pub(crate) mod solvers;
 
 pub use cg::{cg_solve, pcg_solve, CgResult};
@@ -19,15 +20,18 @@ pub use mpk::{
     mpk_powers_multi, mpk_powers_multi_on, mpk_powers_on, mpk_powers_serial, mpk_three_term,
     mpk_three_term_on, spmv_powers, spmv_range_affine, spmv_range_affine_multi, PowerMat,
 };
+pub use mpk::{spmv_range_affine_multi_scalar, spmv_range_affine_scalar};
 pub use pack::{
-    spmv_range_affine_multi_pack, spmv_range_affine_pack, symmspmv_range_multi_pack,
-    symmspmv_range_pack, symmspmv_range_pack_unchecked,
+    spmv_range_affine_multi_pack, spmv_range_affine_multi_pack_scalar, spmv_range_affine_pack,
+    spmv_range_affine_pack_scalar, symmspmv_range_multi_pack, symmspmv_range_multi_pack_scalar,
+    symmspmv_range_pack, symmspmv_range_pack_unchecked, symmspmv_range_pack_unchecked_scalar,
 };
+pub use simd::{active_tier, detected_tier, KernelTier};
 // `symmspmv_range_multi` (below) is the multi-RHS work unit scheduled by
 // the pool executor `crate::pool::symmspmv_race_multi`.
 pub use solvers::{
-    chebyshev_step, gauss_seidel_race, gauss_seidel_serial, kaczmarz_race, kaczmarz_serial,
-    ssor_precond,
+    chebyshev_step, gauss_seidel_race, gauss_seidel_serial, gs_row_scalar, kaczmarz_race,
+    kaczmarz_serial, ssor_precond,
 };
 
 use crate::sparse::Csr;
@@ -104,14 +108,38 @@ pub fn symmspmv_range_checked(upper: &Csr, x: &[f64], b: &mut [f64], start: usiz
     }
 }
 
-/// Bounds-check-free SymmSpMV range (perf pass, EXPERIMENTS.md §Perf).
+/// Hot-path SymmSpMV range the executors dispatch per work unit. With the
+/// `simd` feature this runs the vectorized + prefetching tier
+/// ([`simd::symmspmv_range_simd`]); otherwise the bounds-check-free scalar
+/// body ([`symmspmv_range_unchecked_scalar`]). Both produce bit-identical
+/// f64 results (pinned by `rust/tests/kernels.rs`).
+#[inline]
+pub fn symmspmv_range_unchecked(upper: &Csr, x: &[f64], b: &mut [f64], start: usize, end: usize) {
+    #[cfg(feature = "simd")]
+    {
+        simd::symmspmv_range_simd(upper, x, b, start, end)
+    }
+    #[cfg(not(feature = "simd"))]
+    {
+        symmspmv_range_unchecked_scalar(upper, x, b, start, end)
+    }
+}
+
+/// Bounds-check-free SymmSpMV range (perf pass, EXPERIMENTS.md §Perf) —
+/// the scalar reference tier every SIMD twin must match bitwise.
 ///
 /// # Safety-by-construction
 /// All indices come from a validated CSR ([`Csr::validate`] invariants:
 /// monotone `row_ptr`, in-range sorted columns), so the unchecked accesses
 /// are in bounds for any matrix built through this crate's constructors.
 #[inline]
-pub fn symmspmv_range_unchecked(upper: &Csr, x: &[f64], b: &mut [f64], start: usize, end: usize) {
+pub fn symmspmv_range_unchecked_scalar(
+    upper: &Csr,
+    x: &[f64],
+    b: &mut [f64],
+    start: usize,
+    end: usize,
+) {
     let rp = &upper.row_ptr;
     let col = &upper.col;
     let val = &upper.val;
@@ -147,6 +175,26 @@ pub fn symmspmv_range_unchecked(upper: &Csr, x: &[f64], b: &mut [f64], start: us
 /// sets written (`row * nrhs + j`, `col * nrhs + j`) stay disjoint when
 /// the row/col sets are. **`bs` must be zeroed by the caller.**
 pub fn symmspmv_range_multi(
+    upper: &Csr,
+    xs: &[f64],
+    bs: &mut [f64],
+    nrhs: usize,
+    start: usize,
+    end: usize,
+) {
+    #[cfg(feature = "simd")]
+    {
+        simd::symmspmv_range_multi_simd(upper, xs, bs, nrhs, start, end)
+    }
+    #[cfg(not(feature = "simd"))]
+    {
+        symmspmv_range_multi_scalar(upper, xs, bs, nrhs, start, end)
+    }
+}
+
+/// Scalar reference body of [`symmspmv_range_multi`] (the tier the SIMD
+/// twin is pinned against bitwise).
+pub fn symmspmv_range_multi_scalar(
     upper: &Csr,
     xs: &[f64],
     bs: &mut [f64],

@@ -113,6 +113,30 @@ pub fn spmv_range_affine(
     start: usize,
     end: usize,
 ) {
+    #[cfg(feature = "simd")]
+    {
+        super::simd::spmv_range_affine_simd(a, src, acc, dst, sigma, tau, rho, start, end)
+    }
+    #[cfg(not(feature = "simd"))]
+    {
+        spmv_range_affine_scalar(a, src, acc, dst, sigma, tau, rho, start, end)
+    }
+}
+
+/// Scalar reference body of [`spmv_range_affine`] (the tier the SIMD twin
+/// is pinned against bitwise).
+#[allow(clippy::too_many_arguments)]
+pub fn spmv_range_affine_scalar(
+    a: &Csr,
+    src: &[f64],
+    acc: Option<&[f64]>,
+    dst: &mut [f64],
+    sigma: f64,
+    tau: f64,
+    rho: f64,
+    start: usize,
+    end: usize,
+) {
     assert!(end <= a.nrows());
     assert!(src.len() >= a.nrows() && dst.len() >= a.nrows());
     let rp = &a.row_ptr;
@@ -156,6 +180,33 @@ pub fn spmv_range_affine(
 /// bit-identical to `nrhs` separate sweeps.
 #[allow(clippy::too_many_arguments)]
 pub fn spmv_range_affine_multi(
+    a: &Csr,
+    srcs: &[f64],
+    acc: Option<&[f64]>,
+    dsts: &mut [f64],
+    nrhs: usize,
+    sigma: f64,
+    tau: f64,
+    rho: f64,
+    start: usize,
+    end: usize,
+) {
+    #[cfg(feature = "simd")]
+    {
+        super::simd::spmv_range_affine_multi_simd(
+            a, srcs, acc, dsts, nrhs, sigma, tau, rho, start, end,
+        )
+    }
+    #[cfg(not(feature = "simd"))]
+    {
+        spmv_range_affine_multi_scalar(a, srcs, acc, dsts, nrhs, sigma, tau, rho, start, end)
+    }
+}
+
+/// Scalar reference body of [`spmv_range_affine_multi`] (the tier the
+/// SIMD twin is pinned against bitwise).
+#[allow(clippy::too_many_arguments)]
+pub fn spmv_range_affine_multi_scalar(
     a: &Csr,
     srcs: &[f64],
     acc: Option<&[f64]>,

@@ -20,8 +20,9 @@
 
 use crate::sparse::{CsrPack, PackKind, PackVals, ESCAPE, FULL_BIAS};
 
-/// Value widening shared by the f64/f32 monomorphizations.
-trait PackScalar: Copy + Send + Sync {
+/// Value widening shared by the f64/f32 monomorphizations (also used by
+/// the SIMD tier in [`super::simd`]).
+pub(crate) trait PackScalar: Copy + Send + Sync {
     fn wide(self) -> f64;
 }
 
@@ -63,6 +64,26 @@ pub fn symmspmv_range_pack(p: &CsrPack, x: &[f64], b: &mut [f64], start: usize, 
 /// any pack built through [`CsrPack::pack_upper`].
 #[inline]
 pub fn symmspmv_range_pack_unchecked(
+    p: &CsrPack,
+    x: &[f64],
+    b: &mut [f64],
+    start: usize,
+    end: usize,
+) {
+    #[cfg(feature = "simd")]
+    {
+        super::simd::symmspmv_range_pack_simd(p, x, b, start, end)
+    }
+    #[cfg(not(feature = "simd"))]
+    {
+        symmspmv_range_pack_unchecked_scalar(p, x, b, start, end)
+    }
+}
+
+/// Scalar reference body of [`symmspmv_range_pack_unchecked`] (the tier
+/// the SIMD twin is pinned against bitwise).
+#[inline]
+pub fn symmspmv_range_pack_unchecked_scalar(
     p: &CsrPack,
     x: &[f64],
     b: &mut [f64],
@@ -120,6 +141,26 @@ fn symm_body<T: PackScalar>(
 /// [`super::symmspmv_range_multi`], identical contract and per-RHS
 /// accumulation order (row-major vectors, `bs` zeroed by the caller).
 pub fn symmspmv_range_multi_pack(
+    p: &CsrPack,
+    xs: &[f64],
+    bs: &mut [f64],
+    nrhs: usize,
+    start: usize,
+    end: usize,
+) {
+    #[cfg(feature = "simd")]
+    {
+        super::simd::symmspmv_range_multi_pack_simd(p, xs, bs, nrhs, start, end)
+    }
+    #[cfg(not(feature = "simd"))]
+    {
+        symmspmv_range_multi_pack_scalar(p, xs, bs, nrhs, start, end)
+    }
+}
+
+/// Scalar reference body of [`symmspmv_range_multi_pack`] (the tier the
+/// SIMD twin is pinned against bitwise).
+pub fn symmspmv_range_multi_pack_scalar(
     p: &CsrPack,
     xs: &[f64],
     bs: &mut [f64],
@@ -206,6 +247,30 @@ pub fn spmv_range_affine_pack(
     start: usize,
     end: usize,
 ) {
+    #[cfg(feature = "simd")]
+    {
+        super::simd::spmv_range_affine_pack_simd(p, src, acc, dst, sigma, tau, rho, start, end)
+    }
+    #[cfg(not(feature = "simd"))]
+    {
+        spmv_range_affine_pack_scalar(p, src, acc, dst, sigma, tau, rho, start, end)
+    }
+}
+
+/// Scalar reference body of [`spmv_range_affine_pack`] (the tier the SIMD
+/// twin is pinned against bitwise).
+#[allow(clippy::too_many_arguments)]
+pub fn spmv_range_affine_pack_scalar(
+    p: &CsrPack,
+    src: &[f64],
+    acc: Option<&[f64]>,
+    dst: &mut [f64],
+    sigma: f64,
+    tau: f64,
+    rho: f64,
+    start: usize,
+    end: usize,
+) {
     assert_eq!(p.kind, PackKind::Full, "affine SpMV needs a Full pack");
     assert!(end <= p.n);
     assert!(src.len() >= p.n && dst.len() >= p.n);
@@ -267,6 +332,33 @@ fn affine_body<T: PackScalar>(
 /// [`super::spmv_range_affine_multi`] (row-major vectors).
 #[allow(clippy::too_many_arguments)]
 pub fn spmv_range_affine_multi_pack(
+    p: &CsrPack,
+    srcs: &[f64],
+    acc: Option<&[f64]>,
+    dsts: &mut [f64],
+    nrhs: usize,
+    sigma: f64,
+    tau: f64,
+    rho: f64,
+    start: usize,
+    end: usize,
+) {
+    #[cfg(feature = "simd")]
+    {
+        super::simd::spmv_range_affine_multi_pack_simd(
+            p, srcs, acc, dsts, nrhs, sigma, tau, rho, start, end,
+        )
+    }
+    #[cfg(not(feature = "simd"))]
+    {
+        spmv_range_affine_multi_pack_scalar(p, srcs, acc, dsts, nrhs, sigma, tau, rho, start, end)
+    }
+}
+
+/// Scalar reference body of [`spmv_range_affine_multi_pack`] (the tier
+/// the SIMD twin is pinned against bitwise).
+#[allow(clippy::too_many_arguments)]
+pub fn spmv_range_affine_multi_pack_scalar(
     p: &CsrPack,
     srcs: &[f64],
     acc: Option<&[f64]>,

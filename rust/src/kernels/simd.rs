@@ -1,0 +1,1255 @@
+//! SIMD + software-prefetch kernel tier (§7's instruction-level half of
+//! the Roofline story).
+//!
+//! Every kernel in this module is a drop-in twin of a scalar kernel in
+//! [`super`] (the CSR, pack, and MPK families) with the **same f64 bit
+//! pattern in every output** — the load-bearing contract of this crate
+//! ("bit-identical across backends/storage") extends to the instruction
+//! tier. The module is always compiled; the `simd` cargo feature only
+//! flips the *dispatch* inside the public entry points
+//! ([`super::symmspmv_range_unchecked`] and friends), so the differential
+//! harness (`rust/tests/kernels.rs`) can compare both tiers in either
+//! build.
+//!
+//! # Why f64 stays bitwise
+//!
+//! IEEE-754 multiplication and addition are deterministic per operation;
+//! only *reassociation* changes bits. The scalar kernels accumulate each
+//! row's partial products strictly in nonzero index order, so the SIMD
+//! tier keeps exactly three transformations, none of which reassociates:
+//!
+//! 1. **Vector products, ordered adds** (gather kernels): the products
+//!    `val[i]·x[col[i]]` for an unrolled chunk of [`UNROLL`] nonzeros are
+//!    computed in vector lanes ([`mul4`] — per-lane IEEE multiply, bitwise
+//!    equal to the scalar multiply), then folded into the row accumulator
+//!    **in lane order 0,1,2,3** — the same sequence of additions, in the
+//!    same order, as the scalar loop. No horizontal-add instructions, no
+//!    lane shuffles, no FMA (a fused multiply-add rounds once where the
+//!    scalar code rounds twice, so FMA is never used).
+//! 2. **Per-destination order preservation** (scatter): the symmetric
+//!    scatter `b[col] += val·x[row]` stays in nonzero order per
+//!    destination; the unrolled body groups the accumulator adds before
+//!    the scatter adds of one chunk, which reorders only across *distinct*
+//!    memory locations (the accumulator vs. `b[c]`, and `c` values inside
+//!    a CSR row are strictly increasing, hence distinct).
+//! 3. **RHS-axis vectorization** (multi kernels): `nrhs` right-hand sides
+//!    are contiguous in the minor axis, and each RHS owns an independent
+//!    accumulation chain — vectorizing across `j` performs the identical
+//!    op sequence per chain ([`mul_add_span`]), so no reassociation at
+//!    all.
+//!
+//! Software prefetch ([`prefetch_slice`]) targets the two streams the
+//! hardware prefetcher cannot follow: the indirectly-addressed `x[col]`
+//! gather (the scl-core exemplar's trick) and the `col`/`delta` index
+//! stream [`PF_DIST`] nonzeros ahead. Prefetch distances are always
+//! bounds-guarded — a prefetch is a hint, but forming an out-of-range
+//! reference is not.
+//!
+//! # Tiers
+//!
+//! [`detected_tier`] picks the best instruction tier for the host at
+//! first use: `Avx2` (x86_64 with runtime-detected AVX2: kernels run in
+//! `#[target_feature(enable = "avx2")]` monomorphs and the lane helpers
+//! use 128-bit `std::arch` intrinsics), `Neon` (aarch64: NEON is baseline,
+//! `vmulq_f64` lane helpers), or `Portable` (any other target: the same
+//! fixed-order unrolled bodies, auto-vectorizable, prefetch a no-op).
+//! [`active_tier`] additionally reports `Scalar` when the `simd` feature
+//! is off, i.e. what the *public entry points* actually run.
+
+use super::pack::PackScalar;
+use crate::sparse::{Csr, CsrPack, PackKind, PackVals, ESCAPE, FULL_BIAS};
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// How many nonzeros ahead of the current index the index and gather
+/// streams are prefetched. 16 nonzeros ≈ one or two cache lines of the
+/// value stream — far enough to cover DRAM latency at SymmSpMV's
+/// bytes/nnz, near enough that the line is still resident when reached.
+pub const PF_DIST: usize = 16;
+
+/// Unroll width of the gather kernels (4 f64 lanes = one AVX2 register,
+/// two NEON registers).
+pub const UNROLL: usize = 4;
+
+/// Which instruction tier the kernel entry points execute.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelTier {
+    /// Plain scalar loops — the `simd` feature is off (the reference
+    /// tier every other tier must match bitwise).
+    Scalar,
+    /// Fixed-order unrolled bodies without arch intrinsics (any target,
+    /// or x86_64 without AVX2).
+    Portable,
+    /// x86_64 with runtime-detected AVX2: `target_feature` monomorphs +
+    /// `std::arch` lane helpers.
+    Avx2,
+    /// aarch64 NEON (baseline on that target).
+    Neon,
+}
+
+impl KernelTier {
+    /// Stable lowercase name used in reports (`race-cli profile`, serve
+    /// `{"stats"}`, `BENCH_perf.json`).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            KernelTier::Scalar => "scalar",
+            KernelTier::Portable => "portable",
+            KernelTier::Avx2 => "avx2",
+            KernelTier::Neon => "neon",
+        }
+    }
+}
+
+// cached detection: 0 = unknown, else KernelTier discriminant + 1
+static TIER: AtomicU8 = AtomicU8::new(0);
+
+/// The instruction tier the `*_simd` kernels in this module use on this
+/// host, independent of the `simd` cargo feature (the differential
+/// harness calls them in both builds). Detection runs once and is cached.
+pub fn detected_tier() -> KernelTier {
+    match TIER.load(Ordering::Relaxed) {
+        1 => return KernelTier::Portable,
+        2 => return KernelTier::Avx2,
+        3 => return KernelTier::Neon,
+        _ => {}
+    }
+    let t = detect();
+    TIER.store(
+        match t {
+            KernelTier::Portable => 1,
+            KernelTier::Avx2 => 2,
+            KernelTier::Neon => 3,
+            KernelTier::Scalar => 1,
+        },
+        Ordering::Relaxed,
+    );
+    t
+}
+
+fn detect() -> KernelTier {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            return KernelTier::Avx2;
+        }
+        KernelTier::Portable
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        KernelTier::Neon
+    }
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    {
+        KernelTier::Portable
+    }
+}
+
+/// The tier the *public entry points* run: [`detected_tier`] when the
+/// `simd` feature is on, [`KernelTier::Scalar`] otherwise.
+pub fn active_tier() -> KernelTier {
+    if cfg!(feature = "simd") {
+        detected_tier()
+    } else {
+        KernelTier::Scalar
+    }
+}
+
+/// Bounds-guarded software prefetch of `s[i]` into L1. A no-op when `i`
+/// is out of range or the target has no prefetch primitive. Never forms
+/// an out-of-bounds reference: the pointer is derived only after the
+/// bounds check.
+#[inline(always)]
+pub fn prefetch_slice<T>(s: &[T], i: usize) {
+    if i < s.len() {
+        let p = unsafe { s.as_ptr().add(i) };
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `p` points into `s` (checked above); _mm_prefetch is a
+        // hint and never faults on mapped addresses.
+        unsafe {
+            core::arch::x86_64::_mm_prefetch(p as *const i8, core::arch::x86_64::_MM_HINT_T0)
+        };
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: register-operand prefetch hint; no memory access, no
+        // flags, no stack.
+        unsafe {
+            core::arch::asm!("prfm pldl1keep, [{0}]", in(reg) p, options(nostack, preserves_flags))
+        };
+        #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+        let _ = p;
+    }
+}
+
+/// Per-lane IEEE product of two 4-lane chunks — bitwise equal to
+/// `[a[0]*b[0], a[1]*b[1], a[2]*b[2], a[3]*b[3]]` on every tier (vector
+/// multiply rounds each lane exactly like the scalar multiply; no FMA).
+#[inline(always)]
+fn mul4(a: [f64; 4], b: [f64; 4]) -> [f64; 4] {
+    #[cfg(target_arch = "x86_64")]
+    // SAFETY: SSE2 is baseline on x86_64; loads/stores are unaligned ops
+    // on in-bounds stack arrays.
+    unsafe {
+        use core::arch::x86_64::*;
+        let mut out = [0f64; 4];
+        let lo = _mm_mul_pd(_mm_loadu_pd(a.as_ptr()), _mm_loadu_pd(b.as_ptr()));
+        let hi = _mm_mul_pd(_mm_loadu_pd(a.as_ptr().add(2)), _mm_loadu_pd(b.as_ptr().add(2)));
+        _mm_storeu_pd(out.as_mut_ptr(), lo);
+        _mm_storeu_pd(out.as_mut_ptr().add(2), hi);
+        out
+    }
+    #[cfg(target_arch = "aarch64")]
+    // SAFETY: NEON is baseline on aarch64; same in-bounds stack arrays.
+    unsafe {
+        use core::arch::aarch64::*;
+        let mut out = [0f64; 4];
+        let lo = vmulq_f64(vld1q_f64(a.as_ptr()), vld1q_f64(b.as_ptr()));
+        let hi = vmulq_f64(vld1q_f64(a.as_ptr().add(2)), vld1q_f64(b.as_ptr().add(2)));
+        vst1q_f64(out.as_mut_ptr(), lo);
+        vst1q_f64(out.as_mut_ptr().add(2), hi);
+        out
+    }
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    {
+        [a[0] * b[0], a[1] * b[1], a[2] * b[2], a[3] * b[3]]
+    }
+}
+
+/// `dst[j] = s * src[j]` over the RHS axis. Per-element op identical to
+/// the scalar kernels; vectorizes under the caller's target features.
+#[inline(always)]
+fn scale_span(dst: &mut [f64], src: &[f64], s: f64) {
+    for (d, v) in dst.iter_mut().zip(src) {
+        *d = s * *v;
+    }
+}
+
+/// `dst[j] += s * src[j]` with separate multiply and add roundings (the
+/// scalar kernels round twice, so this never fuses — see module docs).
+#[inline(always)]
+fn mul_add_span(dst: &mut [f64], src: &[f64], s: f64) {
+    for (d, v) in dst.iter_mut().zip(src) {
+        *d += s * *v;
+    }
+}
+
+/// `dst[j] += src[j]` over the RHS axis.
+#[inline(always)]
+fn add_span(dst: &mut [f64], src: &[f64]) {
+    for (d, v) in dst.iter_mut().zip(src) {
+        *d += *v;
+    }
+}
+
+/// Stack/heap accumulator scratch shared by the multi-RHS bodies
+/// (mirrors the scalar kernels' `STACK_RHS` idiom exactly).
+const STACK_RHS: usize = 32;
+
+macro_rules! rhs_scratch {
+    ($nrhs:expr, $stack:ident, $heap:ident) => {{
+        let tmp: &mut [f64] = if $nrhs <= STACK_RHS {
+            &mut $stack[..$nrhs]
+        } else {
+            $heap = vec![0f64; $nrhs];
+            &mut $heap
+        };
+        tmp
+    }};
+}
+
+// ---------------------------------------------------------------------
+// arch dispatch: on x86_64 each public kernel has an AVX2 monomorph that
+// simply re-enters the shared inline(always) body inside a
+// target_feature region — one source of truth, two codegen contexts.
+// ---------------------------------------------------------------------
+
+macro_rules! dispatch {
+    ($avx2:ident, $body:ident ( $($arg:expr),* )) => {{
+        #[cfg(target_arch = "x86_64")]
+        {
+            if detected_tier() == KernelTier::Avx2 {
+                // SAFETY: AVX2 presence runtime-checked by detected_tier.
+                return unsafe { $avx2($($arg),*) };
+            }
+        }
+        $body($($arg),*)
+    }};
+}
+
+// =====================================================================
+// SymmSpMV, CSR storage
+// =====================================================================
+
+/// SIMD twin of [`super::symmspmv_range_unchecked`]: bit-identical f64
+/// results, vector products + fixed-order lane reduction, prefetch of the
+/// `col` and `x[col]` streams. Validates the range like the external
+/// scalar entry.
+pub fn symmspmv_range_simd(upper: &Csr, x: &[f64], b: &mut [f64], start: usize, end: usize) {
+    assert!(end <= upper.nrows());
+    assert!(x.len() >= upper.nrows() && b.len() >= upper.nrows());
+    dispatch!(symmspmv_range_avx2, symmspmv_range_body(upper, x, b, start, end))
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn symmspmv_range_avx2(upper: &Csr, x: &[f64], b: &mut [f64], start: usize, end: usize) {
+    symmspmv_range_body(upper, x, b, start, end)
+}
+
+#[inline(always)]
+fn symmspmv_range_body(upper: &Csr, x: &[f64], b: &mut [f64], start: usize, end: usize) {
+    let rp = &upper.row_ptr;
+    let col = &upper.col;
+    let val = &upper.val;
+    for row in start..end {
+        let lo = rp[row] as usize;
+        let hi = rp[row + 1] as usize;
+        debug_assert_eq!(col[lo] as usize, row);
+        let xr = x[row];
+        // split-diagonal head: the diagonal leads the row, no gather
+        let mut tmp = val[lo] * xr;
+        let mut idx = lo + 1;
+        while idx + UNROLL <= hi {
+            // index stream + indirect gather stream, PF_DIST nnz ahead
+            prefetch_slice(col, idx + PF_DIST);
+            if idx + PF_DIST < hi {
+                prefetch_slice(x, col[idx + PF_DIST] as usize);
+            }
+            let c = [
+                col[idx] as usize,
+                col[idx + 1] as usize,
+                col[idx + 2] as usize,
+                col[idx + 3] as usize,
+            ];
+            let v = [val[idx], val[idx + 1], val[idx + 2], val[idx + 3]];
+            let g = mul4(v, [x[c[0]], x[c[1]], x[c[2]], x[c[3]]]);
+            let s = mul4(v, [xr; 4]);
+            // fixed lane order 0..4 == scalar nonzero order
+            tmp += g[0];
+            tmp += g[1];
+            tmp += g[2];
+            tmp += g[3];
+            b[c[0]] += s[0];
+            b[c[1]] += s[1];
+            b[c[2]] += s[2];
+            b[c[3]] += s[3];
+            idx += UNROLL;
+        }
+        while idx < hi {
+            let c = col[idx] as usize;
+            let v = val[idx];
+            tmp += v * x[c];
+            b[c] += v * xr;
+            idx += 1;
+        }
+        b[row] += tmp;
+    }
+}
+
+/// SIMD twin of [`super::symmspmv_range_multi`] — the RHS axis is the
+/// vector axis, so every per-RHS accumulation chain is untouched.
+pub fn symmspmv_range_multi_simd(
+    upper: &Csr,
+    xs: &[f64],
+    bs: &mut [f64],
+    nrhs: usize,
+    start: usize,
+    end: usize,
+) {
+    assert!(end <= upper.nrows());
+    assert!(nrhs > 0);
+    assert!(xs.len() >= upper.nrows() * nrhs && bs.len() >= upper.nrows() * nrhs);
+    dispatch!(symmspmv_range_multi_avx2, symmspmv_range_multi_body(upper, xs, bs, nrhs, start, end))
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn symmspmv_range_multi_avx2(
+    upper: &Csr,
+    xs: &[f64],
+    bs: &mut [f64],
+    nrhs: usize,
+    start: usize,
+    end: usize,
+) {
+    symmspmv_range_multi_body(upper, xs, bs, nrhs, start, end)
+}
+
+#[inline(always)]
+fn symmspmv_range_multi_body(
+    upper: &Csr,
+    xs: &[f64],
+    bs: &mut [f64],
+    nrhs: usize,
+    start: usize,
+    end: usize,
+) {
+    let rp = &upper.row_ptr;
+    let col = &upper.col;
+    let val = &upper.val;
+    let mut stack_buf = [0f64; STACK_RHS];
+    let mut heap_buf: Vec<f64>;
+    let tmp = rhs_scratch!(nrhs, stack_buf, heap_buf);
+    for row in start..end {
+        let lo = rp[row] as usize;
+        let hi = rp[row + 1] as usize;
+        debug_assert_eq!(col[lo] as usize, row);
+        let rb = row * nrhs;
+        scale_span(tmp, &xs[rb..rb + nrhs], val[lo]);
+        for idx in lo + 1..hi {
+            prefetch_slice(col, idx + PF_DIST);
+            if idx + PF_DIST < hi {
+                prefetch_slice(xs, col[idx + PF_DIST] as usize * nrhs);
+            }
+            let c = col[idx] as usize;
+            let v = val[idx];
+            let cb = c * nrhs;
+            mul_add_span(tmp, &xs[cb..cb + nrhs], v);
+            mul_add_span(&mut bs[cb..cb + nrhs], &xs[rb..rb + nrhs], v);
+        }
+        add_span(&mut bs[rb..rb + nrhs], tmp);
+    }
+}
+
+// =====================================================================
+// SymmSpMV, CsrPack storage
+// =====================================================================
+
+/// SIMD twin of [`super::symmspmv_range_pack_unchecked`]. Escape-free
+/// packs (`p.escapes() == 0`, the common case after RCM) run a branchless
+/// unrolled fast path; packs with a side table keep the scalar cursor
+/// walk and still gain the prefetch of the `delta`/`x` streams.
+pub fn symmspmv_range_pack_simd(p: &CsrPack, x: &[f64], b: &mut [f64], start: usize, end: usize) {
+    assert_eq!(p.kind, PackKind::Upper, "SymmSpMV needs an Upper pack");
+    assert!(end <= p.n);
+    assert!(x.len() >= p.n && b.len() >= p.n);
+    match &p.vals {
+        PackVals::F64 { diag, body } => {
+            dispatch!(symm_pack_avx2_f64, symm_pack_body(p, diag, body, x, b, start, end))
+        }
+        PackVals::F32 { diag, body } => {
+            dispatch!(symm_pack_avx2_f32, symm_pack_body(p, diag, body, x, b, start, end))
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn symm_pack_avx2_f64(
+    p: &CsrPack,
+    diag: &[f64],
+    body: &[f64],
+    x: &[f64],
+    b: &mut [f64],
+    start: usize,
+    end: usize,
+) {
+    symm_pack_body(p, diag, body, x, b, start, end)
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn symm_pack_avx2_f32(
+    p: &CsrPack,
+    diag: &[f32],
+    body: &[f32],
+    x: &[f64],
+    b: &mut [f64],
+    start: usize,
+    end: usize,
+) {
+    symm_pack_body(p, diag, body, x, b, start, end)
+}
+
+#[inline(always)]
+fn symm_pack_body<T: PackScalar>(
+    p: &CsrPack,
+    diag: &[T],
+    body: &[T],
+    x: &[f64],
+    b: &mut [f64],
+    start: usize,
+    end: usize,
+) {
+    let rp = &p.row_ptr;
+    let delta = &p.delta;
+    if p.escapes() == 0 {
+        // fast path: every delta decodes in-band, no cursor, no branch
+        for row in start..end {
+            let lo = rp[row] as usize;
+            let hi = rp[row + 1] as usize;
+            let xr = x[row];
+            let mut tmp = diag[row].wide() * xr;
+            let mut idx = lo;
+            while idx + UNROLL <= hi {
+                prefetch_slice(delta, idx + PF_DIST);
+                if idx + PF_DIST < hi {
+                    prefetch_slice(x, row + delta[idx + PF_DIST] as usize);
+                }
+                let c = [
+                    row + delta[idx] as usize,
+                    row + delta[idx + 1] as usize,
+                    row + delta[idx + 2] as usize,
+                    row + delta[idx + 3] as usize,
+                ];
+                let v = [
+                    body[idx].wide(),
+                    body[idx + 1].wide(),
+                    body[idx + 2].wide(),
+                    body[idx + 3].wide(),
+                ];
+                let g = mul4(v, [x[c[0]], x[c[1]], x[c[2]], x[c[3]]]);
+                let s = mul4(v, [xr; 4]);
+                tmp += g[0];
+                tmp += g[1];
+                tmp += g[2];
+                tmp += g[3];
+                b[c[0]] += s[0];
+                b[c[1]] += s[1];
+                b[c[2]] += s[2];
+                b[c[3]] += s[3];
+                idx += UNROLL;
+            }
+            while idx < hi {
+                let c = row + delta[idx] as usize;
+                let v = body[idx].wide();
+                tmp += v * x[c];
+                b[c] += v * xr;
+                idx += 1;
+            }
+            b[row] += tmp;
+        }
+        return;
+    }
+    // side-table path: scalar cursor walk + stream prefetch
+    let mut esc = p.esc_start(start);
+    for row in start..end {
+        let lo = rp[row] as usize;
+        let hi = rp[row + 1] as usize;
+        let xr = x[row];
+        let mut tmp = diag[row].wide() * xr;
+        for idx in lo..hi {
+            prefetch_slice(delta, idx + PF_DIST);
+            if idx + PF_DIST < hi {
+                let d = delta[idx + PF_DIST];
+                if d != ESCAPE {
+                    prefetch_slice(x, row + d as usize);
+                }
+            }
+            let d = delta[idx];
+            let c = if d != ESCAPE {
+                row + d as usize
+            } else {
+                let c = p.esc_col[esc] as usize;
+                esc += 1;
+                c
+            };
+            let v = body[idx].wide();
+            tmp += v * x[c];
+            b[c] += v * xr;
+        }
+        b[row] += tmp;
+    }
+}
+
+/// SIMD twin of [`super::symmspmv_range_multi_pack`] (RHS axis
+/// vectorized; escape decode is per-nonzero and independent of the RHS
+/// axis, so the side-table path vectorizes too).
+pub fn symmspmv_range_multi_pack_simd(
+    p: &CsrPack,
+    xs: &[f64],
+    bs: &mut [f64],
+    nrhs: usize,
+    start: usize,
+    end: usize,
+) {
+    assert_eq!(p.kind, PackKind::Upper, "SymmSpMV needs an Upper pack");
+    assert!(end <= p.n);
+    assert!(nrhs > 0);
+    assert!(xs.len() >= p.n * nrhs && bs.len() >= p.n * nrhs);
+    match &p.vals {
+        PackVals::F64 { diag, body } => dispatch!(
+            symm_multi_pack_avx2_f64,
+            symm_multi_pack_body(p, diag, body, xs, bs, nrhs, start, end)
+        ),
+        PackVals::F32 { diag, body } => dispatch!(
+            symm_multi_pack_avx2_f32,
+            symm_multi_pack_body(p, diag, body, xs, bs, nrhs, start, end)
+        ),
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn symm_multi_pack_avx2_f64(
+    p: &CsrPack,
+    diag: &[f64],
+    body: &[f64],
+    xs: &[f64],
+    bs: &mut [f64],
+    nrhs: usize,
+    start: usize,
+    end: usize,
+) {
+    symm_multi_pack_body(p, diag, body, xs, bs, nrhs, start, end)
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn symm_multi_pack_avx2_f32(
+    p: &CsrPack,
+    diag: &[f32],
+    body: &[f32],
+    xs: &[f64],
+    bs: &mut [f64],
+    nrhs: usize,
+    start: usize,
+    end: usize,
+) {
+    symm_multi_pack_body(p, diag, body, xs, bs, nrhs, start, end)
+}
+
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+fn symm_multi_pack_body<T: PackScalar>(
+    p: &CsrPack,
+    diag: &[T],
+    body: &[T],
+    xs: &[f64],
+    bs: &mut [f64],
+    nrhs: usize,
+    start: usize,
+    end: usize,
+) {
+    let rp = &p.row_ptr;
+    let delta = &p.delta;
+    let mut esc = p.esc_start(start);
+    let mut stack_buf = [0f64; STACK_RHS];
+    let mut heap_buf: Vec<f64>;
+    let tmp = rhs_scratch!(nrhs, stack_buf, heap_buf);
+    for row in start..end {
+        let lo = rp[row] as usize;
+        let hi = rp[row + 1] as usize;
+        let rb = row * nrhs;
+        scale_span(tmp, &xs[rb..rb + nrhs], diag[row].wide());
+        for idx in lo..hi {
+            prefetch_slice(delta, idx + PF_DIST);
+            if idx + PF_DIST < hi {
+                let d = delta[idx + PF_DIST];
+                if d != ESCAPE {
+                    prefetch_slice(xs, (row + d as usize) * nrhs);
+                }
+            }
+            let d = delta[idx];
+            let c = if d != ESCAPE {
+                row + d as usize
+            } else {
+                let c = p.esc_col[esc] as usize;
+                esc += 1;
+                c
+            };
+            let v = body[idx].wide();
+            let cb = c * nrhs;
+            mul_add_span(tmp, &xs[cb..cb + nrhs], v);
+            mul_add_span(&mut bs[cb..cb + nrhs], &xs[rb..rb + nrhs], v);
+        }
+        add_span(&mut bs[rb..rb + nrhs], tmp);
+    }
+}
+
+// =====================================================================
+// Affine SpMV (MPK work unit), CSR storage
+// =====================================================================
+
+/// SIMD twin of [`super::spmv_range_affine`] — pure gather, so only
+/// transformation 1 (vector products, ordered adds) applies.
+#[allow(clippy::too_many_arguments)]
+pub fn spmv_range_affine_simd(
+    a: &Csr,
+    src: &[f64],
+    acc: Option<&[f64]>,
+    dst: &mut [f64],
+    sigma: f64,
+    tau: f64,
+    rho: f64,
+    start: usize,
+    end: usize,
+) {
+    assert!(end <= a.nrows());
+    assert!(src.len() >= a.nrows() && dst.len() >= a.nrows());
+    if let Some(acc) = acc {
+        assert!(acc.len() >= a.nrows());
+    } else {
+        debug_assert_eq!(rho, 0.0);
+    }
+    dispatch!(spmv_affine_avx2, spmv_affine_body(a, src, acc, dst, sigma, tau, rho, start, end))
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn spmv_affine_avx2(
+    a: &Csr,
+    src: &[f64],
+    acc: Option<&[f64]>,
+    dst: &mut [f64],
+    sigma: f64,
+    tau: f64,
+    rho: f64,
+    start: usize,
+    end: usize,
+) {
+    spmv_affine_body(a, src, acc, dst, sigma, tau, rho, start, end)
+}
+
+/// Row-dot gather in fixed order: products in lanes, adds in index order.
+#[inline(always)]
+fn gather_dot(col: &[u32], val: &[f64], src: &[f64], lo: usize, hi: usize) -> f64 {
+    let mut tmp = 0f64;
+    let mut idx = lo;
+    while idx + UNROLL <= hi {
+        prefetch_slice(col, idx + PF_DIST);
+        if idx + PF_DIST < hi {
+            prefetch_slice(src, col[idx + PF_DIST] as usize);
+        }
+        let g = mul4(
+            [val[idx], val[idx + 1], val[idx + 2], val[idx + 3]],
+            [
+                src[col[idx] as usize],
+                src[col[idx + 1] as usize],
+                src[col[idx + 2] as usize],
+                src[col[idx + 3] as usize],
+            ],
+        );
+        tmp += g[0];
+        tmp += g[1];
+        tmp += g[2];
+        tmp += g[3];
+        idx += UNROLL;
+    }
+    while idx < hi {
+        tmp += val[idx] * src[col[idx] as usize];
+        idx += 1;
+    }
+    tmp
+}
+
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+fn spmv_affine_body(
+    a: &Csr,
+    src: &[f64],
+    acc: Option<&[f64]>,
+    dst: &mut [f64],
+    sigma: f64,
+    tau: f64,
+    rho: f64,
+    start: usize,
+    end: usize,
+) {
+    let rp = &a.row_ptr;
+    let col = &a.col;
+    let val = &a.val;
+    match acc {
+        None => {
+            for row in start..end {
+                let tmp =
+                    gather_dot(col, val, src, rp[row] as usize, rp[row + 1] as usize);
+                dst[row] = sigma * tmp + tau * src[row];
+            }
+        }
+        Some(acc) => {
+            for row in start..end {
+                let tmp =
+                    gather_dot(col, val, src, rp[row] as usize, rp[row + 1] as usize);
+                dst[row] = sigma * tmp + tau * src[row] + rho * acc[row];
+            }
+        }
+    }
+}
+
+/// SIMD twin of [`super::spmv_range_affine_multi`] (RHS axis vectorized).
+#[allow(clippy::too_many_arguments)]
+pub fn spmv_range_affine_multi_simd(
+    a: &Csr,
+    srcs: &[f64],
+    acc: Option<&[f64]>,
+    dsts: &mut [f64],
+    nrhs: usize,
+    sigma: f64,
+    tau: f64,
+    rho: f64,
+    start: usize,
+    end: usize,
+) {
+    assert!(end <= a.nrows());
+    assert!(nrhs > 0);
+    assert!(srcs.len() >= a.nrows() * nrhs && dsts.len() >= a.nrows() * nrhs);
+    if let Some(acc) = acc {
+        assert!(acc.len() >= a.nrows() * nrhs);
+    } else {
+        debug_assert_eq!(rho, 0.0);
+    }
+    dispatch!(
+        spmv_affine_multi_avx2,
+        spmv_affine_multi_body(a, srcs, acc, dsts, nrhs, sigma, tau, rho, start, end)
+    )
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn spmv_affine_multi_avx2(
+    a: &Csr,
+    srcs: &[f64],
+    acc: Option<&[f64]>,
+    dsts: &mut [f64],
+    nrhs: usize,
+    sigma: f64,
+    tau: f64,
+    rho: f64,
+    start: usize,
+    end: usize,
+) {
+    spmv_affine_multi_body(a, srcs, acc, dsts, nrhs, sigma, tau, rho, start, end)
+}
+
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+fn spmv_affine_multi_body(
+    a: &Csr,
+    srcs: &[f64],
+    acc: Option<&[f64]>,
+    dsts: &mut [f64],
+    nrhs: usize,
+    sigma: f64,
+    tau: f64,
+    rho: f64,
+    start: usize,
+    end: usize,
+) {
+    let rp = &a.row_ptr;
+    let col = &a.col;
+    let val = &a.val;
+    let mut stack_buf = [0f64; STACK_RHS];
+    let mut heap_buf: Vec<f64>;
+    let tmp = rhs_scratch!(nrhs, stack_buf, heap_buf);
+    for row in start..end {
+        let lo = rp[row] as usize;
+        let hi = rp[row + 1] as usize;
+        tmp.fill(0.0);
+        for idx in lo..hi {
+            prefetch_slice(col, idx + PF_DIST);
+            if idx + PF_DIST < hi {
+                prefetch_slice(srcs, col[idx + PF_DIST] as usize * nrhs);
+            }
+            let cb = col[idx] as usize * nrhs;
+            mul_add_span(tmp, &srcs[cb..cb + nrhs], val[idx]);
+        }
+        let rb = row * nrhs;
+        match acc {
+            None => {
+                for j in 0..nrhs {
+                    dsts[rb + j] = sigma * tmp[j] + tau * srcs[rb + j];
+                }
+            }
+            Some(acc) => {
+                for j in 0..nrhs {
+                    dsts[rb + j] = sigma * tmp[j] + tau * srcs[rb + j] + rho * acc[rb + j];
+                }
+            }
+        }
+    }
+}
+
+// =====================================================================
+// Affine SpMV, CsrPack storage
+// =====================================================================
+
+/// SIMD twin of [`super::spmv_range_affine_pack`] (`Full`-kind pack,
+/// biased deltas). Escape-free packs run the unrolled fast path.
+#[allow(clippy::too_many_arguments)]
+pub fn spmv_range_affine_pack_simd(
+    p: &CsrPack,
+    src: &[f64],
+    acc: Option<&[f64]>,
+    dst: &mut [f64],
+    sigma: f64,
+    tau: f64,
+    rho: f64,
+    start: usize,
+    end: usize,
+) {
+    assert_eq!(p.kind, PackKind::Full, "affine SpMV needs a Full pack");
+    assert!(end <= p.n);
+    assert!(src.len() >= p.n && dst.len() >= p.n);
+    if let Some(acc) = acc {
+        assert!(acc.len() >= p.n);
+    } else {
+        debug_assert_eq!(rho, 0.0);
+    }
+    match &p.vals {
+        PackVals::F64 { body, .. } => dispatch!(
+            affine_pack_avx2_f64,
+            affine_pack_body(p, body, src, acc, dst, sigma, tau, rho, start, end)
+        ),
+        PackVals::F32 { body, .. } => dispatch!(
+            affine_pack_avx2_f32,
+            affine_pack_body(p, body, src, acc, dst, sigma, tau, rho, start, end)
+        ),
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn affine_pack_avx2_f64(
+    p: &CsrPack,
+    body: &[f64],
+    src: &[f64],
+    acc: Option<&[f64]>,
+    dst: &mut [f64],
+    sigma: f64,
+    tau: f64,
+    rho: f64,
+    start: usize,
+    end: usize,
+) {
+    affine_pack_body(p, body, src, acc, dst, sigma, tau, rho, start, end)
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn affine_pack_avx2_f32(
+    p: &CsrPack,
+    body: &[f32],
+    src: &[f64],
+    acc: Option<&[f64]>,
+    dst: &mut [f64],
+    sigma: f64,
+    tau: f64,
+    rho: f64,
+    start: usize,
+    end: usize,
+) {
+    affine_pack_body(p, body, src, acc, dst, sigma, tau, rho, start, end)
+}
+
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+fn affine_pack_body<T: PackScalar>(
+    p: &CsrPack,
+    body: &[T],
+    src: &[f64],
+    acc: Option<&[f64]>,
+    dst: &mut [f64],
+    sigma: f64,
+    tau: f64,
+    rho: f64,
+    start: usize,
+    end: usize,
+) {
+    let rp = &p.row_ptr;
+    let delta = &p.delta;
+    let bias = FULL_BIAS as usize;
+    let mut esc = p.esc_start(start);
+    let no_esc = p.escapes() == 0;
+    for row in start..end {
+        let lo = rp[row] as usize;
+        let hi = rp[row + 1] as usize;
+        let mut tmp = 0f64;
+        let mut idx = lo;
+        if no_esc {
+            while idx + UNROLL <= hi {
+                prefetch_slice(delta, idx + PF_DIST);
+                if idx + PF_DIST < hi {
+                    prefetch_slice(
+                        src,
+                        (row + delta[idx + PF_DIST] as usize).wrapping_sub(bias),
+                    );
+                }
+                let c = [
+                    (row + delta[idx] as usize).wrapping_sub(bias),
+                    (row + delta[idx + 1] as usize).wrapping_sub(bias),
+                    (row + delta[idx + 2] as usize).wrapping_sub(bias),
+                    (row + delta[idx + 3] as usize).wrapping_sub(bias),
+                ];
+                let g = mul4(
+                    [
+                        body[idx].wide(),
+                        body[idx + 1].wide(),
+                        body[idx + 2].wide(),
+                        body[idx + 3].wide(),
+                    ],
+                    [src[c[0]], src[c[1]], src[c[2]], src[c[3]]],
+                );
+                tmp += g[0];
+                tmp += g[1];
+                tmp += g[2];
+                tmp += g[3];
+                idx += UNROLL;
+            }
+        }
+        while idx < hi {
+            prefetch_slice(delta, idx + PF_DIST);
+            let d = delta[idx];
+            let c = if d != ESCAPE {
+                (row + d as usize).wrapping_sub(bias)
+            } else {
+                let c = p.esc_col[esc] as usize;
+                esc += 1;
+                c
+            };
+            tmp += body[idx].wide() * src[c];
+            idx += 1;
+        }
+        dst[row] = match acc {
+            None => sigma * tmp + tau * src[row],
+            Some(acc) => sigma * tmp + tau * src[row] + rho * acc[row],
+        };
+    }
+}
+
+/// SIMD twin of [`super::spmv_range_affine_multi_pack`] (RHS axis
+/// vectorized, escape decode per nonzero).
+#[allow(clippy::too_many_arguments)]
+pub fn spmv_range_affine_multi_pack_simd(
+    p: &CsrPack,
+    srcs: &[f64],
+    acc: Option<&[f64]>,
+    dsts: &mut [f64],
+    nrhs: usize,
+    sigma: f64,
+    tau: f64,
+    rho: f64,
+    start: usize,
+    end: usize,
+) {
+    assert_eq!(p.kind, PackKind::Full, "affine SpMV needs a Full pack");
+    assert!(end <= p.n);
+    assert!(nrhs > 0);
+    assert!(srcs.len() >= p.n * nrhs && dsts.len() >= p.n * nrhs);
+    if let Some(acc) = acc {
+        assert!(acc.len() >= p.n * nrhs);
+    } else {
+        debug_assert_eq!(rho, 0.0);
+    }
+    match &p.vals {
+        PackVals::F64 { body, .. } => dispatch!(
+            affine_multi_pack_avx2_f64,
+            affine_multi_pack_body(p, body, srcs, acc, dsts, nrhs, sigma, tau, rho, start, end)
+        ),
+        PackVals::F32 { body, .. } => dispatch!(
+            affine_multi_pack_avx2_f32,
+            affine_multi_pack_body(p, body, srcs, acc, dsts, nrhs, sigma, tau, rho, start, end)
+        ),
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn affine_multi_pack_avx2_f64(
+    p: &CsrPack,
+    body: &[f64],
+    srcs: &[f64],
+    acc: Option<&[f64]>,
+    dsts: &mut [f64],
+    nrhs: usize,
+    sigma: f64,
+    tau: f64,
+    rho: f64,
+    start: usize,
+    end: usize,
+) {
+    affine_multi_pack_body(p, body, srcs, acc, dsts, nrhs, sigma, tau, rho, start, end)
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn affine_multi_pack_avx2_f32(
+    p: &CsrPack,
+    body: &[f32],
+    srcs: &[f64],
+    acc: Option<&[f64]>,
+    dsts: &mut [f64],
+    nrhs: usize,
+    sigma: f64,
+    tau: f64,
+    rho: f64,
+    start: usize,
+    end: usize,
+) {
+    affine_multi_pack_body(p, body, srcs, acc, dsts, nrhs, sigma, tau, rho, start, end)
+}
+
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+fn affine_multi_pack_body<T: PackScalar>(
+    p: &CsrPack,
+    body: &[T],
+    srcs: &[f64],
+    acc: Option<&[f64]>,
+    dsts: &mut [f64],
+    nrhs: usize,
+    sigma: f64,
+    tau: f64,
+    rho: f64,
+    start: usize,
+    end: usize,
+) {
+    let rp = &p.row_ptr;
+    let delta = &p.delta;
+    let bias = FULL_BIAS as usize;
+    let mut esc = p.esc_start(start);
+    let mut stack_buf = [0f64; STACK_RHS];
+    let mut heap_buf: Vec<f64>;
+    let tmp = rhs_scratch!(nrhs, stack_buf, heap_buf);
+    for row in start..end {
+        let lo = rp[row] as usize;
+        let hi = rp[row + 1] as usize;
+        tmp.fill(0.0);
+        for idx in lo..hi {
+            prefetch_slice(delta, idx + PF_DIST);
+            if idx + PF_DIST < hi {
+                let d = delta[idx + PF_DIST];
+                if d != ESCAPE {
+                    prefetch_slice(srcs, (row + d as usize).wrapping_sub(bias) * nrhs);
+                }
+            }
+            let d = delta[idx];
+            let c = if d != ESCAPE {
+                (row + d as usize).wrapping_sub(bias)
+            } else {
+                let c = p.esc_col[esc] as usize;
+                esc += 1;
+                c
+            };
+            let cb = c * nrhs;
+            mul_add_span(tmp, &srcs[cb..cb + nrhs], body[idx].wide());
+        }
+        let rb = row * nrhs;
+        match acc {
+            None => {
+                for j in 0..nrhs {
+                    dsts[rb + j] = sigma * tmp[j] + tau * srcs[rb + j];
+                }
+            }
+            Some(acc) => {
+                for j in 0..nrhs {
+                    dsts[rb + j] = sigma * tmp[j] + tau * srcs[rb + j] + rho * acc[rb + j];
+                }
+            }
+        }
+    }
+}
+
+// =====================================================================
+// Distance-1 Gauss–Seidel row update
+// =====================================================================
+
+/// SIMD twin of the scalar GS row update ([`crate::kernels::gs_row_scalar`]):
+/// the off-diagonal products are computed in vector lanes, then folded
+/// into `sigma` in lane order with the diagonal branch kept scalar — the
+/// identical add sequence, so sweeps stay bit-identical.
+pub fn gs_row_simd(a: &Csr, b: &[f64], x: &mut [f64], row: usize) {
+    let (cols, vals) = a.row(row);
+    let mut sigma = 0.0;
+    let mut diag = 0.0;
+    let len = cols.len();
+    let mut i = 0;
+    while i + UNROLL <= len {
+        prefetch_slice(cols, i + PF_DIST);
+        if i + PF_DIST < len {
+            prefetch_slice(x, cols[i + PF_DIST] as usize);
+        }
+        let g = mul4(
+            [vals[i], vals[i + 1], vals[i + 2], vals[i + 3]],
+            [
+                x[cols[i] as usize],
+                x[cols[i + 1] as usize],
+                x[cols[i + 2] as usize],
+                x[cols[i + 3] as usize],
+            ],
+        );
+        for l in 0..UNROLL {
+            if cols[i + l] as usize == row {
+                diag = vals[i + l];
+            } else {
+                sigma += g[l];
+            }
+        }
+        i += UNROLL;
+    }
+    while i < len {
+        let c = cols[i] as usize;
+        if c == row {
+            diag = vals[i];
+        } else {
+            sigma += vals[i] * x[c];
+        }
+        i += 1;
+    }
+    debug_assert!(diag != 0.0, "GS needs nonzero diagonal");
+    x[row] = (b[row] - sigma) / diag;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen;
+    use crate::kernels;
+    use crate::sparse::ValPrec;
+
+    #[test]
+    fn tier_detection_is_stable_and_consistent() {
+        let t1 = detected_tier();
+        let t2 = detected_tier();
+        assert_eq!(t1, t2);
+        assert_ne!(t1, KernelTier::Scalar, "detected tier is never Scalar");
+        if cfg!(feature = "simd") {
+            assert_eq!(active_tier(), t1);
+        } else {
+            assert_eq!(active_tier(), KernelTier::Scalar);
+        }
+        assert!(!t1.as_str().is_empty());
+    }
+
+    #[test]
+    fn prefetch_is_bounds_safe_everywhere() {
+        let v = vec![1.0f64; 3];
+        for i in 0..64 {
+            prefetch_slice(&v, i); // out-of-range indices must be no-ops
+        }
+        let empty: [f64; 0] = [];
+        prefetch_slice(&empty, 0);
+    }
+
+    #[test]
+    fn mul4_is_per_lane_exact() {
+        let a = [1.1, -2.3, 0.0, f64::MIN_POSITIVE];
+        let b = [3.7, 0.5, -0.0, 2.0];
+        let got = mul4(a, b);
+        for l in 0..4 {
+            assert_eq!(got[l].to_bits(), (a[l] * b[l]).to_bits(), "lane {l}");
+        }
+    }
+
+    #[test]
+    fn simd_symmspmv_bitwise_matches_scalar_on_a_family() {
+        let a = gen::stencil2d_9pt(13, 11);
+        let n = a.nrows();
+        let upper = a.upper_triangle();
+        let x: Vec<f64> = (0..n).map(|i| ((i * 7 + 3) % 11) as f64 - 5.0).collect();
+        let mut want = vec![0.0; n];
+        kernels::symmspmv_range_checked(&upper, &x, &mut want, 0, n);
+        let mut got = vec![0.0; n];
+        symmspmv_range_simd(&upper, &x, &mut got, 0, n);
+        assert_eq!(want, got);
+        let p = crate::sparse::CsrPack::pack_upper(&upper, ValPrec::F64);
+        let mut gp = vec![0.0; n];
+        symmspmv_range_pack_simd(&p, &x, &mut gp, 0, n);
+        assert_eq!(want, gp);
+    }
+}

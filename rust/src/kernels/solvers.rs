@@ -16,9 +16,26 @@ use crate::race::RaceEngine;
 use crate::sparse::Csr;
 
 /// One Gauss–Seidel row update `x[row] = (b[row] - sigma) / diag` — the
-/// work unit shared by the serial, scoped and pool-program sweeps.
+/// work unit shared by the serial, scoped and pool-program sweeps. With
+/// the `simd` feature this dispatches to the vectorized tier
+/// ([`crate::kernels::simd::gs_row_simd`]), bit-identical to the scalar
+/// body below.
 #[inline]
 pub(crate) fn gs_row(a: &Csr, b: &[f64], x: &mut [f64], row: usize) {
+    #[cfg(feature = "simd")]
+    {
+        super::simd::gs_row_simd(a, b, x, row)
+    }
+    #[cfg(not(feature = "simd"))]
+    {
+        gs_row_scalar(a, b, x, row)
+    }
+}
+
+/// Scalar reference body of the GS row update (the tier the SIMD twin
+/// `gs_row_simd` is pinned against bitwise by `rust/tests/kernels.rs`).
+#[inline]
+pub fn gs_row_scalar(a: &Csr, b: &[f64], x: &mut [f64], row: usize) {
     let (cols, vals) = a.row(row);
     let mut sigma = 0.0;
     let mut diag = 0.0;

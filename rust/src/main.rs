@@ -801,11 +801,19 @@ fn cmd_profile(args: &Args) -> Result<()> {
         }
         None => Json::obj(vec![("median_ms", Json::Num(s_symm.median * 1e3))]),
     };
-    let doc = Json::obj(vec![
+    let mut doc_fields = vec![
         ("bench", Json::Str("profile".to_string())),
         ("matrix", Json::Str(name.clone())),
         ("threads", Json::Num(threads as f64)),
         ("machine", Json::Str(m.name.to_string())),
+    ];
+    // present only on `simd` builds so the default build's profile JSON
+    // keeps its exact historical shape (byte-identical keys)
+    if cfg!(feature = "simd") {
+        doc_fields
+            .push(("kernel_tier", Json::Str(op.kernel_tier().as_str().to_string())));
+    }
+    doc_fields.extend([
         (
             "build_phases",
             Json::Arr(
@@ -826,6 +834,7 @@ fn cmd_profile(args: &Args) -> Result<()> {
         ("trace_events", Json::Num(events.len() as f64)),
         ("trace_file", Json::Str(trace_out.clone())),
     ]);
+    let doc = Json::obj(doc_fields);
     let doc = obs::baseline::stamp(doc, Some(&m));
     std::fs::write(&out, doc.to_string() + "\n")?;
 
@@ -834,6 +843,9 @@ fn cmd_profile(args: &Args) -> Result<()> {
         return Ok(());
     }
     println!("{name}: profile on {} with {threads} threads", m.name);
+    if cfg!(feature = "simd") {
+        println!("  kernel tier: {}", op.kernel_tier().as_str());
+    }
     println!("  build phases (span totals):");
     for p in &phases {
         println!("    {:<22} {:>10.3} ms  x{}", p.name, p.total_ms(), p.count);

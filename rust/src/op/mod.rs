@@ -547,6 +547,14 @@ impl Operator {
         Some(if built.is_some() { Storage::Pack } else { Storage::Csr })
     }
 
+    /// Which kernel instruction tier this operator's sweeps execute
+    /// ([`crate::kernels::active_tier`]): `Scalar` unless the crate was
+    /// built with the `simd` feature, then the runtime-detected tier.
+    /// Constant for the process lifetime, so safe to sample per report.
+    pub fn kernel_tier(&self) -> crate::kernels::KernelTier {
+        crate::kernels::active_tier()
+    }
+
     /// The (RCM-preordered) matrix the schedules were built on.
     pub fn matrix(&self) -> &Csr {
         &self.a_rcm

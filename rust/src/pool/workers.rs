@@ -205,6 +205,11 @@ pub struct ExecReport {
     /// Per-worker retired instructions, when the instruction counter was
     /// available alongside cycles.
     pub hwc_instructions: Option<Vec<u64>>,
+    /// Which kernel instruction tier executed the job's unit sweeps
+    /// ([`crate::kernels::active_tier`]): `"scalar"` unless the crate was
+    /// built with the `simd` feature, then the detected tier
+    /// (`"avx2"`/`"neon"`/`"portable"`).
+    pub kernel_tier: &'static str,
 }
 
 impl ExecReport {
@@ -245,6 +250,7 @@ impl ExecReport {
             idle_frac,
             hwc_cycles: None,
             hwc_instructions: None,
+            kernel_tier: crate::kernels::active_tier().as_str(),
         }
     }
 

@@ -892,6 +892,14 @@ impl MatvecService {
                 ("batch_p50", Json::Num(m.batch_sizes.quantile(0.5))),
                 ("matrices", Json::Arr(matrices)),
         ];
+        // the kernel tier rides along only on `simd` builds, so the
+        // default build's report keeps its exact historical shape
+        if cfg!(feature = "simd") {
+            fields.push((
+                "kernel_tier",
+                Json::Str(crate::kernels::active_tier().as_str().to_string()),
+            ));
+        }
         // per-shard rows ride along only on sharded builds, so the
         // `--shards 1` report keeps its exact historical shape
         if let Some(sh) = &self.shard {

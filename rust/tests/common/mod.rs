@@ -1,0 +1,120 @@
+//! Shared test corpus and assertion helpers for the integration tests
+//! (`op.rs`, `pack.rs`, `shard.rs`, `solver.rs`, `kernels.rs`). Each test
+//! binary pulls this in with `mod common;` and uses the subset it needs —
+//! hence the blanket `dead_code` allow.
+#![allow(dead_code)]
+
+use race::gen;
+use race::op::Backend;
+use race::solver;
+use race::sparse::Csr;
+
+/// Thread counts every backend sweep covers.
+pub const THREADS: [usize; 3] = [1, 2, 4];
+
+/// The in-process backends (the sharded tier composes these and is
+/// swept separately where a test needs it).
+pub const BACKENDS: [Backend; 3] = [Backend::Serial, Backend::Scoped, Backend::Pool];
+
+/// One matrix per generator family — the corpus the facade/shard property
+/// tests sweep (small enough for a backends × threads × families product).
+pub fn families() -> Vec<(&'static str, Csr)> {
+    vec![
+        ("stencil5", gen::stencil2d_5pt(16, 13)),
+        ("stencil9", gen::stencil2d_9pt(12, 11)),
+        ("paperstencil", gen::race_paper_stencil(16, 16)),
+        ("spin", gen::spin_chain_xxz(8, gen::SpinKind::XXZ)),
+        ("graphene", gen::graphene(8, 8)),
+        ("delaunay", gen::delaunay_like(10, 10, 7)),
+        ("band", gen::dense_band(150, 30, 120, 2)),
+    ]
+}
+
+/// The full generator corpus (stencils, quantum chains, lattices,
+/// irregular meshes, dense bands, random graphs) the storage-pack tests
+/// round-trip — a strict superset of [`families`].
+pub fn pack_families() -> Vec<(&'static str, Csr)> {
+    vec![
+        ("stencil5", gen::stencil2d_5pt(16, 13)),
+        ("stencil9", gen::stencil2d_9pt(12, 11)),
+        ("stencil3d7", gen::stencil3d_7pt(6, 6, 6)),
+        ("stencil3d27", gen::stencil3d_27pt(5, 5, 5)),
+        ("paperstencil", gen::race_paper_stencil(16, 16)),
+        ("spin", gen::spin_chain_xxz(8, gen::SpinKind::XXZ)),
+        ("hubbard", gen::hubbard_chain(4, 4.0)),
+        ("boson", gen::free_boson_chain(4, 3)),
+        ("anderson", gen::anderson3d(4, 2.0, 7)),
+        ("graphene", gen::graphene(8, 8)),
+        ("delaunay", gen::delaunay_like(10, 10, 7)),
+        ("band", gen::dense_band(150, 30, 120, 2)),
+        ("random", gen::random_symmetric(120, 8, 11)),
+    ]
+}
+
+/// SPD test corpus: diagonally dominant generators as-is, the rest
+/// certified SPD via a Gershgorin shift (`solver::make_spd`).
+pub fn spd_families() -> Vec<(&'static str, Csr)> {
+    let shifted = |a: &Csr| solver::make_spd(a, 0.02).0;
+    vec![
+        ("stencil2d_5pt", gen::stencil2d_5pt(16, 16)),
+        ("stencil2d_9pt", gen::stencil2d_9pt(12, 10)),
+        ("stencil3d_27pt", gen::stencil3d_27pt(5, 5, 4)),
+        ("graphene", gen::graphene(8, 8)),
+        ("delaunay", shifted(&gen::delaunay_like(12, 12, 3))),
+        ("dense_band", shifted(&gen::dense_band(220, 18, 50, 7))),
+        ("spin_chain", shifted(&gen::spin_chain_xxz(7, gen::SpinKind::XXZ))),
+    ]
+}
+
+/// Deterministic non-trivial input vector (the pack tests' convention).
+pub fn test_vector(n: usize) -> Vec<f64> {
+    (0..n).map(|i| ((i * 7 + 3) % 23) as f64 * 0.21 - 2.0).collect()
+}
+
+/// `rhs = A x_true` for a known deterministic `x_true`, so solver checks
+/// can verify against the true residual directly.
+pub fn rhs_for(a: &Csr) -> Vec<f64> {
+    let n = a.nrows();
+    let xs: Vec<f64> = (0..n).map(|i| ((i * 7 + 3) % 13) as f64 * 0.25 - 1.5).collect();
+    a.spmv_ref(&xs)
+}
+
+/// Backend-independent relative residual `‖Ax − rhs‖₂ / ‖rhs‖₂` computed
+/// with the reference SpMV.
+pub fn true_rel_residual(a: &Csr, rhs: &[f64], x: &[f64]) -> f64 {
+    let ax = a.spmv_ref(x);
+    let num: f64 = ax.iter().zip(rhs).map(|(p, q)| (p - q) * (p - q)).sum::<f64>().sqrt();
+    let den: f64 = rhs.iter().map(|v| v * v).sum::<f64>().sqrt();
+    num / den.max(1e-300)
+}
+
+/// Assert two f64 slices are **bitwise** identical, reporting the first
+/// differing row with both bit patterns — the crate's load-bearing
+/// equality, used everywhere "bit-identical" is claimed.
+pub fn assert_bitwise(want: &[f64], got: &[f64], ctx: &str) {
+    assert_eq!(want.len(), got.len(), "{ctx}: length {} vs {}", want.len(), got.len());
+    for i in 0..want.len() {
+        assert!(
+            want[i].to_bits() == got[i].to_bits(),
+            "{ctx}: row {i}: {} ({:#018x}) vs {} ({:#018x})",
+            want[i],
+            want[i].to_bits(),
+            got[i],
+            got[i].to_bits()
+        );
+    }
+}
+
+/// Assert `got` is within a relative tolerance of `want` row by row
+/// (the op-test convention: `|want − got| ≤ tol · (1 + |want|)`).
+pub fn assert_close(want: &[f64], got: &[f64], tol: f64, ctx: &str) {
+    assert_eq!(want.len(), got.len(), "{ctx}: length mismatch");
+    for i in 0..want.len() {
+        assert!(
+            (want[i] - got[i]).abs() <= tol * (1.0 + want[i].abs()),
+            "{ctx}: row {i}: {} vs {}",
+            want[i],
+            got[i]
+        );
+    }
+}

@@ -1,0 +1,513 @@
+//! Differential kernel conformance harness: the SIMD + prefetch tier
+//! (`race::kernels::simd`, `simd` cargo feature) must produce **f64
+//! bit-identical** results to the scalar reference tier at every kernel
+//! entry point, across storage (CSR / `CsrPack` f64+f32) × range splits ×
+//! multi-RHS widths (stack and heap scratch, lane remainders) × generator
+//! families — plus targeted remainder-lane, empty-row, all-escape-row and
+//! n∈{0,1} constructions, and end-to-end through the `Operator` facade
+//! for backends × threads (whatever tier the build dispatches must match
+//! the scalar kernel bitwise).
+//!
+//! The `simd` module is always compiled — the feature only flips the
+//! dispatch inside the public entry points — so this harness pins the
+//! scalar ≡ simd equivalence in *both* builds; CI runs it both ways.
+
+mod common;
+
+use common::{assert_bitwise, assert_close, pack_families, spd_families, test_vector};
+use race::gen;
+use race::kernels::{self, simd};
+use race::op::{Backend, OpConfig, Operator, Storage};
+use race::serve::{MatvecService, ServeOptions};
+use race::sparse::{Coo, Csr, CsrPack, ValPrec};
+
+/// RHS widths covering the SIMD span remainders (1..3), an odd middle, and
+/// both sides of the kernels' 32-slot stack/heap scratch boundary.
+const NRHS: [usize; 7] = [1, 2, 3, 5, 31, 32, 33];
+
+/// Row-major multi-RHS input distinct per (row, rhs).
+fn multi_vector(n: usize, nrhs: usize) -> Vec<f64> {
+    let mut xs = vec![0f64; n * nrhs];
+    for row in 0..n {
+        for j in 0..nrhs {
+            xs[row * nrhs + j] = ((row * (j + 2) + 3 * j + 7) % 13) as f64 * 0.3 - 1.6;
+        }
+    }
+    xs
+}
+
+/// The escape-heavy corpus: u16 deltas cannot reach the far couplings, so
+/// the packs route them through the side table. Row 0 of the upper
+/// triangle is **all-escape** (its only off-diagonal partners are far),
+/// and rows 5/9 add mid-matrix escapes so ranges starting past row 0 must
+/// seed the escape cursor.
+fn escape_matrix() -> Csr {
+    let n = 70_000usize;
+    let mut coo = Coo::new(n);
+    for i in 0..n {
+        coo.push(i, i, 2.0 + (i % 7) as f64 * 0.25);
+    }
+    for (r, c, v) in [
+        (0usize, 66_000usize, -1.0),
+        (0, 67_500, 0.75),
+        (0, 69_000, -0.5),
+        (5, 67_000, 0.5),
+        (9, 68_000, -0.25),
+    ] {
+        coo.push_sym(r, c, v);
+    }
+    coo.to_csr()
+}
+
+/// Rows with nnz ∈ 1..=10 in the upper triangle: covers nnz < lane width
+/// (4), every `nnz % UNROLL` residue, and the prefetch-distance guard on
+/// short rows.
+fn remainder_matrix() -> Csr {
+    let n = 64usize;
+    let mut coo = Coo::new(n);
+    for i in 0..n {
+        coo.push(i, i, 3.0 + (i % 5) as f64 * 0.5);
+    }
+    for i in 0..n {
+        let extra = i % 10; // upper-row nnz = 1 + extra (diag + neighbors)
+        for k in 1..=extra {
+            if i + k < n {
+                coo.push_sym(i, i + k, ((i * 3 + k) % 7) as f64 * 0.3 - 0.9);
+            }
+        }
+    }
+    coo.to_csr()
+}
+
+/// Range splits exercised for every range kernel: the full sweep, an
+/// uneven split sharing one output (scatter accumulation across the cut),
+/// and a tail-only range (escape-cursor seeding on packs).
+fn splits(n: usize) -> Vec<(usize, usize)> {
+    if n < 8 {
+        return vec![(0, n)];
+    }
+    vec![(0, n), (0, n / 3), (n / 3, n), (5, n)]
+}
+
+// =====================================================================
+// CSR SymmSpMV: single and multi
+// =====================================================================
+
+#[test]
+fn csr_symmspmv_simd_bitwise_equals_scalar_on_all_families() {
+    for (name, a) in pack_families() {
+        let n = a.nrows();
+        let upper = a.upper_triangle();
+        let x = test_vector(n);
+        // tolerance anchor: the reference SpMV on the full matrix
+        let want_ref = a.spmv_ref(&x);
+        let mut full = vec![0.0; n];
+        kernels::symmspmv_range_unchecked_scalar(&upper, &x, &mut full, 0, n);
+        assert_close(&want_ref, &full, 1e-9, name);
+        for (s, e) in splits(n) {
+            let mut bs = vec![0.0; n];
+            kernels::symmspmv_range_unchecked_scalar(&upper, &x, &mut bs, s, e);
+            let mut bv = vec![0.0; n];
+            simd::symmspmv_range_simd(&upper, &x, &mut bv, s, e);
+            assert_bitwise(&bs, &bv, &format!("{name}: symmspmv [{s},{e})"));
+        }
+        // split ranges accumulating into one shared output
+        let mut shared_s = vec![0.0; n];
+        kernels::symmspmv_range_unchecked_scalar(&upper, &x, &mut shared_s, 0, n / 2);
+        kernels::symmspmv_range_unchecked_scalar(&upper, &x, &mut shared_s, n / 2, n);
+        let mut shared_v = vec![0.0; n];
+        simd::symmspmv_range_simd(&upper, &x, &mut shared_v, 0, n / 2);
+        simd::symmspmv_range_simd(&upper, &x, &mut shared_v, n / 2, n);
+        assert_bitwise(&shared_s, &shared_v, &format!("{name}: shared-b split"));
+    }
+}
+
+#[test]
+fn csr_symmspmv_multi_simd_bitwise_across_rhs_widths() {
+    for (name, a) in
+        [("stencil9", gen::stencil2d_9pt(12, 11)), ("graphene", gen::graphene(8, 8))]
+    {
+        let n = a.nrows();
+        let upper = a.upper_triangle();
+        for nrhs in NRHS {
+            let xs = multi_vector(n, nrhs);
+            for (s, e) in splits(n) {
+                let mut bs = vec![0f64; n * nrhs];
+                kernels::symmspmv_range_multi_scalar(&upper, &xs, &mut bs, nrhs, s, e);
+                let mut bv = vec![0f64; n * nrhs];
+                simd::symmspmv_range_multi_simd(&upper, &xs, &mut bv, nrhs, s, e);
+                assert_bitwise(&bs, &bv, &format!("{name}: multi nrhs={nrhs} [{s},{e})"));
+            }
+        }
+    }
+}
+
+// =====================================================================
+// Packed SymmSpMV: single and multi, f64 and f32, escapes
+// =====================================================================
+
+#[test]
+fn pack_symmspmv_simd_bitwise_equals_scalar_on_all_families() {
+    for (name, a) in pack_families() {
+        let n = a.nrows();
+        let upper = a.upper_triangle();
+        let x = test_vector(n);
+        for prec in [ValPrec::F64, ValPrec::F32] {
+            // both tiers widen f32 identically, so even the f32 pack must
+            // agree bitwise between scalar and simd
+            let p = CsrPack::pack_upper(&upper, prec);
+            for (s, e) in splits(n) {
+                let mut bs = vec![0.0; n];
+                kernels::symmspmv_range_pack_unchecked_scalar(&p, &x, &mut bs, s, e);
+                let mut bv = vec![0.0; n];
+                simd::symmspmv_range_pack_simd(&p, &x, &mut bv, s, e);
+                assert_bitwise(&bs, &bv, &format!("{name}/{prec:?}: pack [{s},{e})"));
+            }
+        }
+    }
+}
+
+#[test]
+fn pack_symmspmv_simd_handles_escapes_and_all_escape_rows() {
+    let a = escape_matrix();
+    let n = a.nrows();
+    let upper = a.upper_triangle();
+    let p = CsrPack::pack_upper(&upper, ValPrec::F64);
+    assert!(p.escapes() >= 5, "construction must force the side table");
+    let x: Vec<f64> = (0..n).map(|i| ((i % 23) as f64) * 0.1 - 1.0).collect();
+    for (s, e) in [(0, n), (4, n), (10, n), (0, 7)] {
+        let mut bs = vec![0.0; n];
+        kernels::symmspmv_range_pack_unchecked_scalar(&p, &x, &mut bs, s, e);
+        let mut bv = vec![0.0; n];
+        simd::symmspmv_range_pack_simd(&p, &x, &mut bv, s, e);
+        assert_bitwise(&bs, &bv, &format!("escape pack [{s},{e})"));
+    }
+    // multi-RHS over the same escapes (span path + cursor)
+    for nrhs in [1usize, 3, 33] {
+        let xs = multi_vector(n, nrhs);
+        let mut bs = vec![0f64; n * nrhs];
+        kernels::symmspmv_range_multi_pack_scalar(&p, &xs, &mut bs, nrhs, 0, n);
+        let mut bv = vec![0f64; n * nrhs];
+        simd::symmspmv_range_multi_pack_simd(&p, &xs, &mut bv, nrhs, 0, n);
+        assert_bitwise(&bs, &bv, &format!("escape pack multi nrhs={nrhs}"));
+    }
+}
+
+#[test]
+fn pack_symmspmv_multi_simd_bitwise_across_rhs_widths() {
+    let a = gen::stencil2d_9pt(12, 11);
+    let n = a.nrows();
+    let upper = a.upper_triangle();
+    let p = CsrPack::pack_upper(&upper, ValPrec::F64);
+    for nrhs in NRHS {
+        let xs = multi_vector(n, nrhs);
+        let mut bs = vec![0f64; n * nrhs];
+        kernels::symmspmv_range_multi_pack_scalar(&p, &xs, &mut bs, nrhs, 0, n);
+        let mut bv = vec![0f64; n * nrhs];
+        simd::symmspmv_range_multi_pack_simd(&p, &xs, &mut bv, nrhs, 0, n);
+        assert_bitwise(&bs, &bv, &format!("pack multi nrhs={nrhs}"));
+    }
+}
+
+// =====================================================================
+// Affine SpMV (MPK work unit): CSR and pack, single and multi
+// =====================================================================
+
+#[test]
+fn affine_simd_bitwise_equals_scalar_on_all_families() {
+    for (name, a) in pack_families() {
+        let n = a.nrows();
+        let src: Vec<f64> = (0..n).map(|i| (i as f64 * 0.37).sin()).collect();
+        let accv: Vec<f64> = (0..n).map(|i| (i as f64 * 0.19).cos()).collect();
+        for (sigma, tau, rho, acc) in
+            [(1.0, 0.0, 0.0, None), (0.4, -0.2, -1.0, Some(accv.as_slice()))]
+        {
+            for (s, e) in splits(n) {
+                let mut ds = vec![0.0; n];
+                kernels::spmv_range_affine_scalar(&a, &src, acc, &mut ds, sigma, tau, rho, s, e);
+                let mut dv = vec![0.0; n];
+                simd::spmv_range_affine_simd(&a, &src, acc, &mut dv, sigma, tau, rho, s, e);
+                assert_bitwise(&ds, &dv, &format!("{name}: affine σ={sigma} [{s},{e})"));
+            }
+            // Full-kind packs, both precisions
+            for prec in [ValPrec::F64, ValPrec::F32] {
+                let p = CsrPack::pack_full(&a, prec);
+                let mut ds = vec![0.0; n];
+                kernels::spmv_range_affine_pack_scalar(&p, &src, acc, &mut ds, sigma, tau, rho, 0, n);
+                let mut dv = vec![0.0; n];
+                simd::spmv_range_affine_pack_simd(&p, &src, acc, &mut dv, sigma, tau, rho, 0, n);
+                assert_bitwise(&ds, &dv, &format!("{name}/{prec:?}: affine pack σ={sigma}"));
+            }
+        }
+    }
+}
+
+#[test]
+fn affine_multi_simd_bitwise_across_rhs_widths() {
+    let a = gen::graphene(7, 7);
+    let n = a.nrows();
+    let p = CsrPack::pack_full(&a, ValPrec::F64);
+    for nrhs in NRHS {
+        let srcs = multi_vector(n, nrhs);
+        let accv = multi_vector(n, nrhs).iter().map(|v| v * 0.5 - 0.1).collect::<Vec<_>>();
+        for (sigma, tau, rho, acc) in
+            [(1.0, 0.0, 0.0, None), (0.4, -0.2, -1.0, Some(accv.as_slice()))]
+        {
+            let mut ds = vec![0f64; n * nrhs];
+            kernels::spmv_range_affine_multi_scalar(
+                &a, &srcs, acc, &mut ds, nrhs, sigma, tau, rho, 0, n,
+            );
+            let mut dv = vec![0f64; n * nrhs];
+            simd::spmv_range_affine_multi_simd(
+                &a, &srcs, acc, &mut dv, nrhs, sigma, tau, rho, 0, n,
+            );
+            assert_bitwise(&ds, &dv, &format!("affine multi nrhs={nrhs} σ={sigma}"));
+            let mut dps = vec![0f64; n * nrhs];
+            kernels::spmv_range_affine_multi_pack_scalar(
+                &p, &srcs, acc, &mut dps, nrhs, sigma, tau, rho, 0, n,
+            );
+            let mut dpv = vec![0f64; n * nrhs];
+            simd::spmv_range_affine_multi_pack_simd(
+                &p, &srcs, acc, &mut dpv, nrhs, sigma, tau, rho, 0, n,
+            );
+            assert_bitwise(&dps, &dpv, &format!("affine multi pack nrhs={nrhs} σ={sigma}"));
+        }
+    }
+}
+
+#[test]
+fn affine_simd_handles_full_pack_escapes() {
+    let a = escape_matrix();
+    let n = a.nrows();
+    let p = CsrPack::pack_full(&a, ValPrec::F64);
+    assert!(p.escapes() >= 10, "symmetric far couplings escape in both triangles");
+    let src: Vec<f64> = (0..n).map(|i| ((i % 17) as f64) * 0.2 - 1.3).collect();
+    for (s, e) in [(0, n), (4, n), (0, 12)] {
+        let mut ds = vec![0.0; n];
+        kernels::spmv_range_affine_pack_scalar(&p, &src, None, &mut ds, 1.0, 0.0, 0.0, s, e);
+        let mut dv = vec![0.0; n];
+        simd::spmv_range_affine_pack_simd(&p, &src, None, &mut dv, 1.0, 0.0, 0.0, s, e);
+        assert_bitwise(&ds, &dv, &format!("escape affine pack [{s},{e})"));
+    }
+}
+
+// =====================================================================
+// Distance-1 Gauss–Seidel row update
+// =====================================================================
+
+#[test]
+fn gs_sweeps_simd_bitwise_equal_scalar() {
+    for (name, a) in spd_families() {
+        let n = a.nrows();
+        let b = common::rhs_for(&a);
+        let x0 = test_vector(n);
+        let mut xs = x0.clone();
+        let mut xv = x0;
+        // three forward sweeps magnify any divergence in the row update
+        for _ in 0..3 {
+            for row in 0..n {
+                kernels::gs_row_scalar(&a, &b, &mut xs, row);
+            }
+            for row in 0..n {
+                simd::gs_row_simd(&a, &b, &mut xv, row);
+            }
+        }
+        assert_bitwise(&xs, &xv, &format!("{name}: GS sweeps"));
+    }
+}
+
+// =====================================================================
+// Edge cases: remainder lanes, empty rows, n = 0 / n = 1
+// =====================================================================
+
+#[test]
+fn remainder_lane_rows_bitwise_equal() {
+    let a = remainder_matrix();
+    let n = a.nrows();
+    let upper = a.upper_triangle();
+    let x = test_vector(n);
+    let want_ref = a.spmv_ref(&x);
+    let mut bs = vec![0.0; n];
+    kernels::symmspmv_range_unchecked_scalar(&upper, &x, &mut bs, 0, n);
+    assert_close(&want_ref, &bs, 1e-9, "remainder: scalar vs ref");
+    let mut bv = vec![0.0; n];
+    simd::symmspmv_range_simd(&upper, &x, &mut bv, 0, n);
+    assert_bitwise(&bs, &bv, "remainder: symmspmv");
+    let p = CsrPack::pack_upper(&upper, ValPrec::F64);
+    let mut bp = vec![0.0; n];
+    simd::symmspmv_range_pack_simd(&p, &x, &mut bp, 0, n);
+    assert_bitwise(&bs, &bp, "remainder: pack symmspmv");
+    // the affine kernel sees every row length too (full matrix)
+    let mut ds = vec![0.0; n];
+    kernels::spmv_range_affine_scalar(&a, &x, None, &mut ds, 1.0, 0.0, 0.0, 0, n);
+    let mut dv = vec![0.0; n];
+    simd::spmv_range_affine_simd(&a, &x, None, &mut dv, 1.0, 0.0, 0.0, 0, n);
+    assert_bitwise(&ds, &dv, "remainder: affine");
+}
+
+#[test]
+fn empty_rows_and_tiny_matrices() {
+    // empty rows are legal for the pure-gather affine kernel
+    let mut coo = Coo::new(8);
+    for (r, c, v) in [(1usize, 1usize, 2.0), (3, 4, -1.0), (4, 3, -1.0), (6, 6, 1.5)] {
+        coo.push(r, c, v);
+    }
+    let a = coo.to_csr();
+    let src = test_vector(8);
+    for (sigma, tau) in [(1.0, 0.0), (0.7, -0.3)] {
+        let mut ds = vec![0.0; 8];
+        kernels::spmv_range_affine_scalar(&a, &src, None, &mut ds, sigma, tau, 0.0, 0, 8);
+        let mut dv = vec![0.0; 8];
+        simd::spmv_range_affine_simd(&a, &src, None, &mut dv, sigma, tau, 0.0, 0, 8);
+        assert_bitwise(&ds, &dv, "empty rows: affine");
+    }
+
+    // n = 0: every CSR kernel must be a no-op, not a panic
+    let e = Coo::new(0).to_csr();
+    let eu = e.upper_triangle();
+    let (mut b0, x0): (Vec<f64>, Vec<f64>) = (vec![], vec![]);
+    simd::symmspmv_range_simd(&eu, &x0, &mut b0, 0, 0);
+    kernels::symmspmv_range_unchecked_scalar(&eu, &x0, &mut b0, 0, 0);
+    let mut d0: Vec<f64> = vec![];
+    simd::spmv_range_affine_simd(&e, &x0, None, &mut d0, 1.0, 0.0, 0.0, 0, 0);
+    simd::symmspmv_range_multi_simd(&eu, &x0, &mut b0, 1, 0, 0);
+
+    // n = 1: the split-diagonal head is the whole row
+    let mut one = Coo::new(1);
+    one.push(0, 0, 2.5);
+    let a1 = one.to_csr();
+    let u1 = a1.upper_triangle();
+    let x1 = vec![1.25];
+    let mut bs1 = vec![0.0];
+    kernels::symmspmv_range_unchecked_scalar(&u1, &x1, &mut bs1, 0, 1);
+    let mut bv1 = vec![0.0];
+    simd::symmspmv_range_simd(&u1, &x1, &mut bv1, 0, 1);
+    assert_bitwise(&bs1, &bv1, "n=1 symmspmv");
+    let p1 = CsrPack::pack_upper(&u1, ValPrec::F64);
+    let mut bp1 = vec![0.0];
+    simd::symmspmv_range_pack_simd(&p1, &x1, &mut bp1, 0, 1);
+    assert_bitwise(&bs1, &bp1, "n=1 pack symmspmv");
+}
+
+// =====================================================================
+// End-to-end: whatever tier the build dispatches, the Operator facade
+// must match the scalar kernel bitwise — backends × threads × storage.
+// =====================================================================
+
+#[test]
+fn facade_backends_match_scalar_reference_bitwise() {
+    for (name, a) in common::families() {
+        for threads in common::THREADS {
+            for &backend in &common::BACKENDS {
+                for storage in [Storage::Csr, Storage::Pack] {
+                    let cfg = OpConfig::new()
+                        .threads(threads)
+                        .backend(backend)
+                        .storage(storage)
+                        .cache_bytes(8 << 10);
+                    let op = Operator::build(&a, cfg).unwrap();
+                    let n = op.n();
+                    let xp = test_vector(n);
+                    // scalar reference on the operator's own permuted
+                    // matrix — tier-independent by construction
+                    let upper = op.permuted_matrix().upper_triangle();
+                    let mut want = vec![0.0; n];
+                    kernels::symmspmv_range_unchecked_scalar(&upper, &xp, &mut want, 0, n);
+                    let mut got = vec![0.0; n];
+                    op.symmspmv_permuted(&xp, &mut got).unwrap();
+                    assert_bitwise(
+                        &want,
+                        &got,
+                        &format!("{name}/t{threads}/{backend:?}/{storage:?}"),
+                    );
+                }
+            }
+        }
+    }
+    // the sharded tier composes the same kernels — one family suffices
+    let a = gen::stencil2d_5pt(16, 13);
+    let op = Operator::build(
+        &a,
+        OpConfig::new().threads(2).backend(Backend::Sharded { shards: 2 }).cache_bytes(8 << 10),
+    )
+    .unwrap();
+    let n = op.n();
+    let xp = test_vector(n);
+    let upper = op.permuted_matrix().upper_triangle();
+    let mut want = vec![0.0; n];
+    kernels::symmspmv_range_unchecked_scalar(&upper, &xp, &mut want, 0, n);
+    let mut got = vec![0.0; n];
+    op.symmspmv_permuted(&xp, &mut got).unwrap();
+    assert_bitwise(&want, &got, "sharded facade");
+}
+
+// =====================================================================
+// Tier reporting surfaces
+// =====================================================================
+
+#[test]
+fn tier_reporting_is_consistent_and_feature_gated() {
+    let tier = kernels::active_tier();
+    if cfg!(feature = "simd") {
+        assert_ne!(tier, kernels::KernelTier::Scalar, "simd builds never report scalar");
+        assert_eq!(tier, kernels::detected_tier());
+    } else {
+        assert_eq!(tier, kernels::KernelTier::Scalar);
+    }
+    let a = gen::stencil2d_5pt(10, 10);
+    let op = Operator::build(&a, OpConfig::new().threads(2)).unwrap();
+    assert_eq!(op.kernel_tier(), tier);
+}
+
+#[test]
+fn exec_report_carries_kernel_tier() {
+    let a = gen::stencil2d_5pt(16, 13);
+    let op =
+        Operator::build(&a, OpConfig::new().threads(2).backend(Backend::Pool)).unwrap();
+    race::obs::set_enabled(true);
+    let x = test_vector(op.n());
+    let mut b = vec![0.0; op.n()];
+    op.symmspmv(&x, &mut b).unwrap();
+    let report = op.worker_pool().take_exec_report();
+    race::obs::set_enabled(false);
+    let r = report.expect("obs-enabled pool run records a report");
+    assert_eq!(r.kernel_tier, kernels::active_tier().as_str());
+}
+
+#[test]
+fn serve_stats_kernel_tier_gated_by_feature() {
+    let svc = MatvecService::build(&ServeOptions {
+        matrices: vec!["spin:6".to_string()],
+        threads: 2,
+        addr: "127.0.0.1:0".to_string(),
+        small: true,
+        ..Default::default()
+    })
+    .unwrap();
+    let s = svc.stats_json().to_string();
+    if cfg!(feature = "simd") {
+        assert!(s.contains("\"kernel_tier\""), "simd build stats must report the tier: {s}");
+        assert!(s.contains(kernels::active_tier().as_str()));
+    } else {
+        assert!(
+            !s.contains("kernel_tier"),
+            "default build stats must keep their historical shape byte-identical: {s}"
+        );
+    }
+}
+
+/// Pins the satellite regression: the default build's `BENCH_perf.json`
+/// must keep byte-identical kernel keys, so the bench's simd series has
+/// to be emitted behind a `cfg!(feature = "simd")` gate in the source.
+#[test]
+fn bench_perf_simd_series_is_feature_gated_in_source() {
+    let src =
+        std::fs::read_to_string(concat!(env!("CARGO_MANIFEST_DIR"), "/benches/perf_kernel.rs"))
+            .unwrap();
+    assert!(
+        src.contains("cfg!(feature = \"simd\")"),
+        "perf_kernel must gate its simd series on the feature"
+    );
+    assert!(src.contains("\"simd\""), "perf_kernel must emit a `simd` kernel series");
+    assert!(src.contains("speedup_simd"), "perf_kernel must emit the simd speedup key");
+}

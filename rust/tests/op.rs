@@ -5,25 +5,12 @@
 //! logical (pre-permutation) order, proving the facade's internal
 //! permutation plumbing is transparent.
 
+mod common;
+
+use common::{families, BACKENDS, THREADS};
 use race::gen;
 use race::op::{self, Backend, OpConfig, Operator};
 use race::sparse::Csr;
-
-const THREADS: [usize; 3] = [1, 2, 4];
-const BACKENDS: [Backend; 3] = [Backend::Serial, Backend::Scoped, Backend::Pool];
-
-/// One matrix per generator family.
-fn families() -> Vec<(&'static str, Csr)> {
-    vec![
-        ("stencil5", gen::stencil2d_5pt(16, 13)),
-        ("stencil9", gen::stencil2d_9pt(12, 11)),
-        ("paperstencil", gen::race_paper_stencil(16, 16)),
-        ("spin", gen::spin_chain_xxz(8, gen::SpinKind::XXZ)),
-        ("graphene", gen::graphene(8, 8)),
-        ("delaunay", gen::delaunay_like(10, 10, 7)),
-        ("band", gen::dense_band(150, 30, 120, 2)),
-    ]
-}
 
 /// One operator per backend, identically configured otherwise.
 fn ops(a: &Csr, threads: usize) -> Vec<(Backend, Operator)> {

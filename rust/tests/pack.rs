@@ -4,36 +4,12 @@
 //! {1, 2, 4} × powers 1..4, single-precision (`ValPrec::F32`) tolerance
 //! bounds, and the automatic CSR fallback when a pack would not pay.
 
+mod common;
+
+use common::{pack_families as families, test_vector, BACKENDS, THREADS};
 use race::gen;
 use race::op::{self, Backend, OpConfig, Operator, Storage};
-use race::sparse::{Coo, Csr, CsrPack, PackKind, ValPrec};
-
-const THREADS: [usize; 3] = [1, 2, 4];
-const BACKENDS: [Backend; 3] = [Backend::Serial, Backend::Scoped, Backend::Pool];
-
-/// One matrix per generator family (stencils, quantum chains, lattices,
-/// irregular meshes, dense bands, random graphs).
-fn families() -> Vec<(&'static str, Csr)> {
-    vec![
-        ("stencil5", gen::stencil2d_5pt(16, 13)),
-        ("stencil9", gen::stencil2d_9pt(12, 11)),
-        ("stencil3d7", gen::stencil3d_7pt(6, 6, 6)),
-        ("stencil3d27", gen::stencil3d_27pt(5, 5, 5)),
-        ("paperstencil", gen::race_paper_stencil(16, 16)),
-        ("spin", gen::spin_chain_xxz(8, gen::SpinKind::XXZ)),
-        ("hubbard", gen::hubbard_chain(4, 4.0)),
-        ("boson", gen::free_boson_chain(4, 3)),
-        ("anderson", gen::anderson3d(4, 2.0, 7)),
-        ("graphene", gen::graphene(8, 8)),
-        ("delaunay", gen::delaunay_like(10, 10, 7)),
-        ("band", gen::dense_band(150, 30, 120, 2)),
-        ("random", gen::random_symmetric(120, 8, 11)),
-    ]
-}
-
-fn test_vector(n: usize) -> Vec<f64> {
-    (0..n).map(|i| ((i * 7 + 3) % 23) as f64 * 0.21 - 2.0).collect()
-}
+use race::sparse::{Coo, CsrPack, PackKind, ValPrec};
 
 #[test]
 fn pack_round_trips_every_family() {

@@ -7,6 +7,9 @@
 //! router's placement/steal policy holds, and a `--shards 2` server
 //! answers the full protocol over TCP.
 
+mod common;
+
+use common::{families, THREADS};
 use race::gen;
 use race::op::{Backend, OpConfig, Operator};
 use race::serve::{MatvecService, ServeOptions, Server};
@@ -17,20 +20,6 @@ use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 
 const SHARDS: [usize; 3] = [1, 2, 4];
-const THREADS: [usize; 3] = [1, 2, 4];
-
-/// One matrix per generator family (the `rust/tests/op.rs` matrix).
-fn families() -> Vec<(&'static str, Csr)> {
-    vec![
-        ("stencil5", gen::stencil2d_5pt(16, 13)),
-        ("stencil9", gen::stencil2d_9pt(12, 11)),
-        ("paperstencil", gen::race_paper_stencil(16, 16)),
-        ("spin", gen::spin_chain_xxz(8, gen::SpinKind::XXZ)),
-        ("graphene", gen::graphene(8, 8)),
-        ("delaunay", gen::delaunay_like(10, 10, 7)),
-        ("band", gen::dense_band(150, 30, 120, 2)),
-    ]
-}
 
 fn build(a: &Csr, backend: Backend, threads: usize) -> Operator {
     Operator::build(a, OpConfig::new().threads(threads).backend(backend).cache_bytes(8 << 10))

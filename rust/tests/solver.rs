@@ -4,39 +4,12 @@
 //! mixed-precision solution must match the f64-only one, and the
 //! preconditioned variants must not take more iterations than plain CG.
 
+mod common;
+
+use common::{rhs_for, spd_families, true_rel_residual};
 use race::gen;
 use race::op::{Backend, OpConfig, Operator};
-use race::solver::{self, Method, SolveConfig};
-use race::sparse::Csr;
-
-/// SPD test corpus: diagonally dominant generators as-is, the rest
-/// certified SPD via a Gershgorin shift (`solver::make_spd`).
-fn spd_families() -> Vec<(&'static str, Csr)> {
-    let shifted = |a: &Csr| solver::make_spd(a, 0.02).0;
-    vec![
-        ("stencil2d_5pt", gen::stencil2d_5pt(16, 16)),
-        ("stencil2d_9pt", gen::stencil2d_9pt(12, 10)),
-        ("stencil3d_27pt", gen::stencil3d_27pt(5, 5, 4)),
-        ("graphene", gen::graphene(8, 8)),
-        ("delaunay", shifted(&gen::delaunay_like(12, 12, 3))),
-        ("dense_band", shifted(&gen::dense_band(220, 18, 50, 7))),
-        ("spin_chain", shifted(&gen::spin_chain_xxz(7, gen::SpinKind::XXZ))),
-    ]
-}
-
-fn rhs_for(a: &Csr) -> Vec<f64> {
-    // a known solution keeps the check direct: rhs = A * x_true
-    let n = a.nrows();
-    let xs: Vec<f64> = (0..n).map(|i| ((i * 7 + 3) % 13) as f64 * 0.25 - 1.5).collect();
-    a.spmv_ref(&xs)
-}
-
-fn true_rel_residual(a: &Csr, rhs: &[f64], x: &[f64]) -> f64 {
-    let ax = a.spmv_ref(x);
-    let num: f64 = ax.iter().zip(rhs).map(|(p, q)| (p - q) * (p - q)).sum::<f64>().sqrt();
-    let den: f64 = rhs.iter().map(|v| v * v).sum::<f64>().sqrt();
-    num / den.max(1e-300)
-}
+use race::solver::{Method, SolveConfig};
 
 #[test]
 fn cg_converges_on_every_family_backend_and_thread_count() {
